@@ -1,0 +1,53 @@
+//! PTQ sweep: quantize a full synthetic LM with every QER method and
+//! evaluate perplexity through the AOT-compiled forward (PJRT) — a
+//! miniature of the paper's Table 1 protocol on one model.
+//!
+//!   cargo run --release --example ptq_sweep -- [--model tiny] [--rank 8]
+
+use srr::coordinator::{run_ptq, Metrics, QuantizerSpec};
+use srr::eval::perplexity;
+use srr::exp::ExpCtx;
+use srr::qer::{Method, QerConfig};
+use srr::runtime::Executor;
+use srr::scaling::ScalingKind;
+use srr::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.get_or("model", "tiny").to_string();
+    let rank = args.get_usize("rank", 8);
+
+    let mut ctx = ExpCtx::new(false)?;
+    let fx = ctx.lm(&model)?;
+    let b = ctx.engine.manifest().lm_batch;
+    let t = fx.cfg.seq_len;
+    let batches = ctx.ppl_batches(&model)?;
+    let artifact = format!("lm_nll_{model}");
+
+    let bf16 = perplexity(&ctx.engine, &artifact, &fx.params.clone(), &batches, b, t)?;
+    println!("model={model} rank={rank}  BF16 PPL = {bf16:.3}\n");
+    println!("{:<28} {:>10} {:>8}", "method", "PPL", "mean k*");
+
+    let quant = QuantizerSpec::Mxint { bits: 3, block: 32 };
+    let grid: Vec<(&str, Method, ScalingKind)> = vec![
+        ("w-only", Method::WOnly, ScalingKind::Identity),
+        ("ZeroQuant-V2 (S=I)", Method::Qer, ScalingKind::Identity),
+        ("LQER", Method::Qer, ScalingKind::DiagRms),
+        ("LQER + SRR", Method::QerSrr, ScalingKind::DiagRms),
+        ("QERA-approx", Method::Qer, ScalingKind::DiagAbsMean),
+        ("QERA-approx + SRR", Method::QerSrr, ScalingKind::DiagAbsMean),
+        ("QERA-exact", Method::Qer, ScalingKind::Exact),
+        ("QERA-exact + SRR", Method::QerSrr, ScalingKind::Exact),
+        ("preserve-only (k=r)", Method::PreserveOnly, ScalingKind::Exact),
+        ("fixed split k=r/2", Method::FixedSplitHalf, ScalingKind::Exact),
+        ("SRR eq.(6) variant", Method::SrrSingleSvd, ScalingKind::Exact),
+    ];
+    for (label, method, scaling) in grid {
+        let metrics = Metrics::new();
+        let cfg = QerConfig::new(method, rank, scaling);
+        let out = run_ptq(&fx.params, &fx.cfg, &fx.calib, quant, &cfg, &metrics);
+        let ppl = perplexity(&ctx.engine, &artifact, &out.params, &batches, b, t)?;
+        println!("{label:<28} {ppl:>10.3} {:>8.1}", out.mean_k_star());
+    }
+    Ok(())
+}

@@ -1,0 +1,261 @@
+"""AOT compiler: lower every L2 entry point to HLO *text* + manifest.json.
+
+Run once at build time (``make artifacts``); python never touches the
+request path. HLO text — not ``.serialize()`` — is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6 rust
+crate) rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, for every artifact, the exact positional argument
+list (name/shape/dtype) and output list, plus the model configs — the rust
+side (rust/src/runtime/manifest.rs) is entirely manifest-driven.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (
+    CLS_BATCH,
+    CLS_CLASSES,
+    CLS_SEQ,
+    LM_BATCH,
+    MODELS,
+    QPEFT_RANKS,
+)
+from .kernels import attention, mxint_qdq, qlr_matmul
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# argument-spec builders (mirror model.py's parameter orders)
+# ---------------------------------------------------------------------------
+
+
+def lm_param_args(cfg, head="lm", n_classes=CLS_CLASSES):
+    return [
+        (n, M.param_shape(n, cfg, head, n_classes), "f32")
+        for n in M.param_names(cfg, head)
+    ]
+
+
+def qpeft_args(cfg, rank, head="lm", n_classes=CLS_CLASSES):
+    frozen = [
+        (n, M.param_shape(n, cfg, head, n_classes), "f32")
+        for n in M.param_names(cfg, head)[:-1]
+    ]
+    adapters = []
+    for name in M.linear_names(cfg):
+        din, dout = M.param_shape(name, cfg)
+        adapters.append((f"{name}.L", (din, rank), "f32"))
+        adapters.append((f"{name}.R", (rank, dout), "f32"))
+    adapters.append(("head", M.param_shape("head", cfg, head, n_classes), "f32"))
+    return frozen + adapters
+
+
+def qlr_args(cfg, rank):
+    args = []
+    for n in M.param_names(cfg)[:-1]:
+        if M.is_linear(n):
+            din, dout = M.param_shape(n, cfg)
+            args.append((f"{n}.q", (din, dout), "f32"))
+            args.append((f"{n}.L", (din, rank), "f32"))
+            args.append((f"{n}.R", (rank, dout), "f32"))
+        else:
+            args.append((n, M.param_shape(n, cfg), "f32"))
+    args.append(("head", M.param_shape("head", cfg), "f32"))
+    return args
+
+
+def build_catalog():
+    """(name, fn, args) for every artifact. Kept in one place on purpose —
+    this list is the compile-time contract with the rust side."""
+    cat = []
+    T = MODELS["tiny"]
+    S = MODELS["small"]
+    B = MODELS["base"]
+
+    for cfg in (T, S, B):
+        tok = [("tokens", (LM_BATCH, cfg.seq_len), "i32")]
+        mask = [("mask", (LM_BATCH, cfg.seq_len), "f32")]
+        cat.append((f"lm_fwd_{cfg.name}", M.lm_fwd(cfg), lm_param_args(cfg) + tok, cfg.name))
+        cat.append((f"lm_nll_{cfg.name}", M.lm_nll(cfg), lm_param_args(cfg) + tok + mask, cfg.name))
+
+    for cfg in (T, S):
+        tok = [("tokens", (LM_BATCH, cfg.seq_len), "i32")]
+        cat.append((f"lm_train_{cfg.name}", M.lm_train(cfg), lm_param_args(cfg) + tok, cfg.name))
+
+    for rank in QPEFT_RANKS:
+        tok = [("tokens", (LM_BATCH, T.seq_len), "i32")]
+        mask = [("mask", (LM_BATCH, T.seq_len), "f32")]
+        cat.append(
+            (f"qpeft_lm_train_tiny_r{rank}", M.qpeft_lm_train(T, rank), qpeft_args(T, rank) + tok, "tiny")
+        )
+        cat.append(
+            (f"qpeft_lm_nll_tiny_r{rank}", M.qpeft_lm_nll(T, rank), qpeft_args(T, rank) + tok + mask, "tiny")
+        )
+
+    # classifier (GLUE-sim) artifacts on a tiny trunk with CLS_SEQ inputs
+    C = T  # same trunk; token inputs just use CLS_SEQ
+    ctok = [("tokens", (CLS_BATCH, CLS_SEQ), "i32")]
+    clab_i = [("labels", (CLS_BATCH,), "i32")]
+    clab_f = [("labels", (CLS_BATCH,), "f32")]
+    cat.append(("cls_fwd_tiny", M.cls_fwd(C, "cls", CLS_CLASSES), lm_param_args(C, "cls") + ctok, "tiny"))
+    cat.append(("cls_train_tiny", M.cls_train(C, "cls", CLS_CLASSES), lm_param_args(C, "cls") + ctok + clab_i, "tiny"))
+    cat.append(("cls_train_reg_tiny", M.cls_train(C, "reg", 1), lm_param_args(C, "reg") + ctok + clab_f, "tiny"))
+    for rank in QPEFT_RANKS:
+        cat.append(
+            (f"qpeft_cls_train_tiny_r{rank}", M.qpeft_cls_train(C, rank, "cls", CLS_CLASSES),
+             qpeft_args(C, rank, "cls") + ctok + clab_i, "tiny")
+        )
+        cat.append(
+            (f"qpeft_cls_fwd_tiny_r{rank}", M.qpeft_cls_fwd(C, rank, "cls", CLS_CLASSES),
+             qpeft_args(C, rank, "cls") + ctok, "tiny")
+        )
+        cat.append(
+            (f"qpeft_cls_train_reg_tiny_r{rank}", M.qpeft_cls_train(C, rank, "reg", 1),
+             qpeft_args(C, rank, "reg") + ctok + clab_f, "tiny")
+        )
+        cat.append(
+            (f"qpeft_cls_fwd_reg_tiny_r{rank}", M.qpeft_cls_fwd(C, rank, "reg", 1),
+             qpeft_args(C, rank, "reg") + ctok, "tiny")
+        )
+
+    # fused-Pallas serving path (perf benches)
+    stok = [("tokens", (LM_BATCH, S.seq_len), "i32")]
+    cat.append(("qlr_lm_fwd_small_r64", M.qlr_lm_fwd(S, 64), qlr_args(S, 64) + stok, "small"))
+
+    # standalone kernel artifacts: rust-side parity tests + kernel benches
+    for bits in (2, 3, 4):
+        cat.append(
+            (f"kernel_mxint{bits}", lambda w, b=bits: (mxint_qdq(w, b),),
+             [("w", (128, 256), "f32")], None)
+        )
+    cat.append(
+        ("kernel_qlr", lambda x, q, l, r: (qlr_matmul(x, q, l, r),),
+         [("x", (64, 256), "f32"), ("q", (256, 256), "f32"),
+          ("l", (256, 64), "f32"), ("r", (64, 256), "f32")], None)
+    )
+    cat.append(
+        ("kernel_attn", lambda q, k, v: (attention(q, k, v, causal=True),),
+         [("q", (2, 4, 64, 32), "f32"), ("k", (2, 4, 64, 32), "f32"),
+          ("v", (2, 4, 64, 32), "f32")], None)
+    )
+    return cat
+
+
+DTYPES = {"f32": F32, "i32": I32}
+
+
+def lower_one(name, fn, args, outdir):
+    specs = [spec(sh, DTYPES[dt]) for (_, sh, dt) in args]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *specs)
+    out_meta = [
+        {"shape": list(o.shape), "dtype": "f32" if o.dtype == jnp.float32 else "i32"}
+        for o in outs
+    ]
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "args": [{"name": n, "shape": list(sh), "dtype": dt} for (n, sh, dt) in args],
+        "outputs": out_meta,
+    }
+
+
+def source_fingerprint():
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts are written beside it")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+    manifest_path = os.path.abspath(args.out)
+
+    fp = source_fingerprint()
+    if not args.force and not args.only and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and all(
+                os.path.exists(os.path.join(outdir, a["file"])) for a in old["artifacts"]
+            ):
+                print(f"artifacts up to date ({len(old['artifacts'])} modules), skipping")
+                return
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    catalog = build_catalog()
+    if args.only:
+        names = set(args.only.split(","))
+        catalog = [c for c in catalog if c[0] in names]
+
+    entries = []
+    for i, (name, fn, aspecs, _model) in enumerate(catalog):
+        print(f"[{i + 1}/{len(catalog)}] lowering {name} ...", flush=True)
+        entries.append(lower_one(name, fn, aspecs, outdir))
+
+    manifest = {
+        "version": 1,
+        "fingerprint": fp,
+        "models": {n: c.to_dict() for n, c in MODELS.items()},
+        "constants": {
+            "lm_batch": LM_BATCH,
+            "cls_batch": CLS_BATCH,
+            "cls_seq": CLS_SEQ,
+            "cls_classes": CLS_CLASSES,
+            "qpeft_ranks": list(QPEFT_RANKS),
+        },
+        "param_order": {
+            n: M.param_names(c) for n, c in MODELS.items()
+        },
+        "linear_names": {n: M.linear_names(c) for n, c in MODELS.items()},
+        "artifacts": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

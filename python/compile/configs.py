@@ -1,0 +1,51 @@
+"""Model / artifact configurations shared by model.py and aot.py.
+
+These are the single source of truth for shapes; aot.py serializes them
+into artifacts/manifest.json, which the rust side parses at runtime
+(rust/src/model/config.rs) — nothing is hard-coded twice.
+
+The three LM sizes stand in for the paper's six checkpoints (TinyLlama ->
+LLaMA-3.1 70B): what SRR depends on is the spectral structure of SW, which
+the rust-side synthetic weight generator reproduces per projection type.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        return asdict(self)
+
+
+TINY = ModelCfg("tiny", vocab=256, d_model=128, n_heads=4, n_layers=2, d_ff=512, seq_len=64)
+SMALL = ModelCfg("small", vocab=1024, d_model=256, n_heads=8, n_layers=4, d_ff=1024, seq_len=128)
+BASE = ModelCfg("base", vocab=2048, d_model=384, n_heads=8, n_layers=6, d_ff=1536, seq_len=128)
+
+MODELS = {c.name: c for c in (TINY, SMALL, BASE)}
+
+# Batch sizes baked into the AOT artifacts (PJRT executables have static shapes).
+LM_BATCH = 8
+CLS_BATCH = 16
+CLS_SEQ = 32
+CLS_CLASSES = 4  # synthetic GLUE-sim tasks use <= 4 classes; extras are unused logits
+
+# Adapter ranks for which QPEFT train-step artifacts are generated:
+# r=8 for the 4/3-bit GLUE + CLM settings, r=64 for the 2-bit + GSM settings (paper A.3).
+QPEFT_RANKS = (8, 64)
+
+# The seven projection types of a LLaMA-style block, in canonical order.
+# Matches the paper's Fig. 5 taxonomy (Query/Key/Value/Output/Gate/Up/Down).
+LINEAR_KINDS = ("wq", "wk", "wv", "wo", "gate", "up", "down")

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so that the resulting
+HLO contains plain XLA ops runnable by the CPU PJRT client (xla_extension
+0.5.1). Real-TPU lowering would emit Mosaic custom-calls which the CPU
+plugin cannot execute; TPU performance is therefore estimated analytically
+(see DESIGN.md section 8) while numerics are validated here against the
+pure-jnp oracles in :mod:`ref`.
+"""
+
+from . import ref  # noqa: F401
+from .mxint import mxint_qdq  # noqa: F401
+from .qlr_matmul import qlr_matmul  # noqa: F401
+from .attention import attention  # noqa: F401

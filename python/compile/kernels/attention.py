@@ -1,0 +1,82 @@
+"""Pallas kernel: tiled causal attention with online softmax.
+
+Flash-attention restructured for TPU: the (block_q) query tile and the
+running (max, sum, acc) statistics live in VMEM across an inner fori_loop
+over key/value tiles, so the (T, T) score matrix never materializes. The
+grid is (B*H, T/block_q); BlockSpec streams the per-head K/V panels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, causal, scale):
+    qi = pl.program_id(1)
+    q = q_ref[0]  # (block_q, dh)
+    k = k_ref[0]  # (T, dh)
+    v = v_ref[0]  # (T, dh)
+    t = k.shape[0]
+    dh = q.shape[-1]
+    nkb = t // block_k
+    row = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(kb, carry):
+        m_i, l_i, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, kb * block_k, block_k, axis=0)
+        vs = jax.lax.dynamic_slice_in_dim(v, kb * block_k, block_k, axis=0)
+        s = jnp.dot(q, ks.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            col = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(row[:, None] >= col[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, vs, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, dh), jnp.float32)
+    # With a causal mask, key tiles strictly above the diagonal contribute
+    # nothing; bound the loop at the query tile's last row.
+    upper = (qi + 1) * block_q // block_k if causal else nkb
+    m_i, l_i, acc = jax.lax.fori_loop(0, upper if causal else nkb, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, causal: bool = True, block_q: int = 32, block_k: int = 32):
+    """Causal attention over (B, H, T, Dh) tensors via a tiled Pallas kernel."""
+    b, h, t, dh = q.shape
+    bq = min(block_q, t)
+    while t % bq != 0:
+        bq -= 1
+    bk = min(block_k, t)
+    while t % bk != 0:
+        bk -= 1
+    if causal and bq % bk != 0:
+        bk = bq  # keep the causal loop bound exact
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+    kernel = functools.partial(
+        _attn_kernel, block_q=bq, block_k=bk, causal=causal, scale=1.0 / (dh**0.5)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, t // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, t, dh), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, dh)

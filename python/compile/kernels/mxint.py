@@ -1,0 +1,53 @@
+"""Pallas kernel: block-wise MXINT quantize -> dequantize.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"): the MX block of
+32 elements aligns with a quarter VPU lane row; each grid step owns an
+(bm, n) row-tile held in VMEM, computes per-block shared exponents with a
+single max-reduce, and applies the power-of-two scaling entirely on the
+VPU — no gathers, no data-dependent control flow. The HBM<->VMEM schedule
+is expressed with a 1-D grid over row tiles (BlockSpec), which on a real
+TPU double-buffers row tiles against the elementwise work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32
+
+
+def _mxint_kernel(w_ref, o_ref, *, bits: int, block: int):
+    w = w_ref[...]
+    bm, n = w.shape
+    wb = w.reshape(bm, n // block, block)
+    maxabs = jnp.max(jnp.abs(wb), axis=-1, keepdims=True)
+    qmax = float(2 ** (bits - 1) - 1)
+    e = jnp.floor(jnp.log2(jnp.where(maxabs > 0, maxabs, 1.0)))
+    scale = jnp.exp2(e - (bits - 2))
+    q = jnp.clip(jnp.round(wb / scale), -qmax, qmax)
+    deq = jnp.where(maxabs > 0, q * scale, 0.0)
+    o_ref[...] = deq.reshape(bm, n).astype(o_ref.dtype)
+
+
+def mxint_qdq(w, bits: int, block: int = BLOCK, block_m: int = 8):
+    """Quantize ``w`` (m, n) to MXINT-``bits`` and dequantize back to f32.
+
+    ``block`` is the MX shared-exponent block along the last axis;
+    ``block_m`` is the row-tile height of the Pallas grid.
+    """
+    m, n = w.shape
+    assert n % block == 0, f"n={n} % block={block} != 0"
+    bm = min(block_m, m)
+    while m % bm != 0:  # shrink to a divisor so the grid tiles exactly
+        bm -= 1
+    kernel = functools.partial(_mxint_kernel, bits=bits, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(w)

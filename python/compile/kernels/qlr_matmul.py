@@ -1,0 +1,61 @@
+"""Pallas kernel: fused quantized + low-rank matmul y = x @ Q + (x @ L) @ R.
+
+This is the serving hot path of every QER-reconstructed layer
+(W_hat = Q + LR). The GPU formulation runs two GEMMs plus an epilogue; on
+TPU we restructure it as a single kernel over a (M/bm, N/bn, K/bk) grid:
+
+  o[i,j] += x[i,k] @ Q[k,j] + (x[i,k] @ L[k,:]) @ R[:,j]
+
+Both terms feed the MXU; the rank-r factors are tiny (r <= 64), so the
+L k-tile (bk, r) and R j-tile (r, bn) stay VMEM-resident while Q tiles
+stream HBM->VMEM. The identity (xL)R = sum_k (x[:,k] L[k,:]) R makes the
+correction accumulate in the same k-loop as the dense term — no second
+pass over x and no (M, r) intermediate in HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qlr_kernel(x_ref, q_ref, l_ref, r_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    acc = jnp.dot(x, q_ref[...], preferred_element_type=jnp.float32)
+    xl = jnp.dot(x, l_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(xl, r_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+def _tile(dim: int, want: int) -> int:
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def qlr_matmul(x, qdeq, l, r, block_m: int = 64, block_n: int = 128, block_k: int = 128):
+    """y = x @ qdeq + (x @ l) @ r, fused. x: (M, K), qdeq: (K, N), l: (K, r), r: (r, N)."""
+    m, k = x.shape
+    k2, n = qdeq.shape
+    assert k == k2 and l.shape[0] == k and l.shape[1] == r.shape[0] and r.shape[1] == n
+    bm, bn, bk = _tile(m, block_m), _tile(n, block_n), _tile(k, block_k)
+    rr = l.shape[1]
+    return pl.pallas_call(
+        _qlr_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, rr), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((rr, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, qdeq, l, r)

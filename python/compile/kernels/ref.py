@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: each Pallas kernel must match its
+oracle to float32 tolerance under pytest + hypothesis sweeps
+(python/tests/test_kernel.py). They are also the reference semantics the
+rust-side implementations (rust/src/quant/mxint.rs etc.) mirror.
+"""
+
+import jax.numpy as jnp
+
+
+def mxint_qdq_ref(w, bits: int, block: int = 32):
+    """MXINT quantize->dequantize (reference).
+
+    Block-wise shared power-of-two exponent along the last axis with a
+    signed ``bits``-bit mantissa, following Darvish Rouhani et al. (2023):
+
+      E      = floor(log2(max|w_block|))
+      scale  = 2^(E - bits + 2)
+      q      = clip(round(w / scale), -(2^(bits-1) - 1), 2^(bits-1) - 1)
+      deq    = q * scale
+
+    The shared exponent costs 8 bits per ``block`` elements, so the
+    effective bitwidth is ``bits + 8/block`` (3.25 for 3-bit, block 32).
+    All-zero blocks dequantize to exactly zero. Round-half-to-even is used
+    (jnp.round), matching the rust implementation.
+    """
+    m, n = w.shape
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    wb = w.reshape(m, n // block, block)
+    maxabs = jnp.max(jnp.abs(wb), axis=-1, keepdims=True)
+    qmax = float(2 ** (bits - 1) - 1)
+    e = jnp.floor(jnp.log2(jnp.where(maxabs > 0, maxabs, 1.0)))
+    scale = jnp.exp2(e - (bits - 2))
+    q = jnp.clip(jnp.round(wb / scale), -qmax, qmax)
+    deq = jnp.where(maxabs > 0, q * scale, 0.0)
+    return deq.reshape(m, n).astype(w.dtype)
+
+
+def qlr_matmul_ref(x, qdeq, l, r):
+    """Fused quantized + low-rank layer output: y = x @ Qdeq + (x @ L) @ R."""
+    return x @ qdeq + (x @ l) @ r
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Multi-head scaled dot-product attention (reference).
+
+    q, k, v: (B, H, T, Dh). Returns (B, H, T, Dh).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    if causal:
+        tq, tk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((tq, tk), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

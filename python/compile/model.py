@@ -1,0 +1,412 @@
+"""Layer-2 JAX model: LLaMA-style transformer LM + encoder classifier.
+
+Pure-jax forward/backward graphs that call the Layer-1 Pallas kernels.
+aot.py lowers each entry point once to HLO text; the rust coordinator
+executes the artifacts via PJRT and owns everything else (quantization,
+SRR decomposition, optimizers, gradient scaling, batching).
+
+Parameter convention: every linear is stored as W with shape (in, out) and
+applied as ``y = x @ W`` — the same orientation the paper's m x n weight
+uses (x in R^m). Params travel as a flat list ordered by
+:func:`param_names`; the manifest records that order for the rust side.
+
+Two forward families:
+  * ``lm_*`` / ``cls_*``      — full-precision weights (also used with
+    reconstructed W_hat = Qdeq + L@R materialized on the rust side);
+  * ``qpeft_*``               — frozen Qdeq plus trainable (L, R) adapters,
+    computing y = x @ Qdeq + (x @ L) @ R (differentiated wrt adapters only);
+  * ``qlr_lm_fwd``            — serving path where each linear runs the
+    fused Pallas qlr_matmul kernel (inference artifact; not differentiated,
+    as interpret-mode pallas_call is treated as a primal-only hot path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LINEAR_KINDS, ModelCfg
+from .kernels import attention as attention_pallas, qlr_matmul
+from .kernels.ref import attention_ref
+
+EPS = 1e-5
+
+# ---------------------------------------------------------------------------
+# parameter book-keeping
+# ---------------------------------------------------------------------------
+
+
+def layer_param_names(i: int):
+    """Names of the i-th block's params, canonical order."""
+    return [
+        f"l{i}.ln1",
+        f"l{i}.wq",
+        f"l{i}.wk",
+        f"l{i}.wv",
+        f"l{i}.wo",
+        f"l{i}.ln2",
+        f"l{i}.gate",
+        f"l{i}.up",
+        f"l{i}.down",
+    ]
+
+
+def param_names(cfg: ModelCfg, head: str = "lm"):
+    """Flat parameter order for the whole model. ``head``: 'lm'|'cls'|'reg'."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += layer_param_names(i)
+    names += ["norm_f", "head"]
+    return names
+
+
+def param_shape(name: str, cfg: ModelCfg, head: str = "lm", n_classes: int = 4):
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    if name == "embed":
+        return (v, d)
+    if name in ("norm_f",) or name.endswith(".ln1") or name.endswith(".ln2"):
+        return (d,)
+    if name == "head":
+        return {"lm": (d, v), "cls": (d, n_classes), "reg": (d, 1)}[head]
+    kind = name.split(".")[-1]
+    return {
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "gate": (d, ff),
+        "up": (d, ff),
+        "down": (ff, d),
+    }[kind]
+
+
+def linear_names(cfg: ModelCfg):
+    """All quantizable linear-layer names (the 7 projections per block)."""
+    return [f"l{i}.{k}" for i in range(cfg.n_layers) for k in LINEAR_KINDS]
+
+
+def is_linear(name: str) -> bool:
+    return name.split(".")[-1] in LINEAR_KINDS
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def _heads(x, cfg: ModelCfg):
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def block_fwd(p, x, cfg: ModelCfg, causal: bool, apply, attn=attention_pallas):
+    """One transformer block. ``apply(name, x2d) -> y2d`` runs a linear."""
+    b, t, d = x.shape
+    h = rmsnorm(x, p["ln1"])
+    h2 = h.reshape(b * t, d)
+    q = _heads(apply("wq", h2).reshape(b, t, d), cfg)
+    k = _heads(apply("wk", h2).reshape(b, t, d), cfg)
+    v = _heads(apply("wv", h2).reshape(b, t, d), cfg)
+    a = attn(q, k, v, causal=causal)
+    a2 = _unheads(a).reshape(b * t, d)
+    x = x + apply("wo", a2).reshape(b, t, d)
+    h = rmsnorm(x, p["ln2"])
+    h2 = h.reshape(b * t, d)
+    g = apply("gate", h2)
+    u = apply("up", h2)
+    m = (jax.nn.silu(g) * u)
+    x = x + apply("down", m).reshape(b, t, d)
+    return x
+
+
+def _dense_apply(layer_params):
+    def apply(name, x2d):
+        return x2d @ layer_params[name]
+
+    return apply
+
+
+def trunk_fwd(params: dict, tokens, cfg: ModelCfg, causal: bool, apply_for_layer=None, attn=attention_pallas):
+    """Embed + n_layers blocks + final norm. Returns (B, T, d)."""
+    x = params["embed"][tokens]
+    for i in range(cfg.n_layers):
+        lp = {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith(f"l{i}.")}
+        apply = apply_for_layer(i) if apply_for_layer is not None else _dense_apply(lp)
+        x = block_fwd(lp, x, cfg, causal, apply, attn=attn)
+    return rmsnorm(x, params["norm_f"])
+
+
+def to_dict(cfg: ModelCfg, flat, head: str = "lm"):
+    return dict(zip(param_names(cfg, head), flat))
+
+
+# ---------------------------------------------------------------------------
+# LM entry points
+# ---------------------------------------------------------------------------
+
+
+def lm_logits(params: dict, tokens, cfg: ModelCfg, attn=attention_pallas):
+    h = trunk_fwd(params, tokens, cfg, causal=True, attn=attn)
+    return h @ params["head"]
+
+
+def lm_fwd(cfg: ModelCfg):
+    """(params..., tokens[B,T] i32) -> logits (B, T, vocab)."""
+
+    def fn(*args):
+        params = to_dict(cfg, args[:-1])
+        return (lm_logits(params, args[-1], cfg),)
+
+    return fn
+
+
+def _nll_terms(logits, targets, mask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -(tok_ll * mask)
+
+
+def lm_nll(cfg: ModelCfg):
+    """(params..., tokens[B,T], mask[B,T]) -> (per_seq_nll (B,), per_seq_tokens (B,)).
+
+    Next-token NLL over positions where mask[t+1] == 1. Perplexity and
+    zero-shot option scoring both aggregate these on the rust side.
+    """
+
+    def fn(*args):
+        params = to_dict(cfg, args[:-2])
+        tokens, mask = args[-2], args[-1]
+        logits = lm_logits(params, tokens[:, :-1], cfg)
+        nll = _nll_terms(logits, tokens[:, 1:], mask[:, 1:])
+        return (jnp.sum(nll, axis=-1), jnp.sum(mask[:, 1:], axis=-1))
+
+    return fn
+
+
+def lm_loss_value(params: dict, tokens, cfg: ModelCfg):
+    # attention_ref: this graph is differentiated (see module docstring)
+    logits = lm_logits(params, tokens[:, :-1], cfg, attn=attention_ref)
+    nll = _nll_terms(logits, tokens[:, 1:], jnp.ones_like(tokens[:, 1:], jnp.float32))
+    return jnp.mean(nll)
+
+
+def lm_train(cfg: ModelCfg):
+    """(params..., tokens[B,T]) -> (loss, grad_0, ..., grad_{P-1})."""
+    n = len(param_names(cfg))
+
+    def fn(*args):
+        tokens = args[-1]
+
+        def loss_fn(*params):
+            return lm_loss_value(to_dict(cfg, params), tokens, cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(n)))(*args[:-1])
+        return (loss, *grads)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# QPEFT: frozen Qdeq + trainable (L, R) adapters
+# ---------------------------------------------------------------------------
+
+
+def _qpeft_param_split(cfg: ModelCfg, head: str):
+    """Frozen args then trainable args; returns (frozen_names, adapter_names)."""
+    frozen = param_names(cfg, head)[:-1]  # all but head; linears carry Qdeq
+    adapters = []
+    for name in linear_names(cfg):
+        adapters += [f"{name}.L", f"{name}.R"]
+    adapters += ["head"]  # the head trains in full precision (QPEFT convention)
+    return frozen, adapters
+
+
+def qpeft_trunk(frozen: dict, adapters: dict, tokens, cfg: ModelCfg, causal: bool, attn=attention_ref):
+    def apply_for_layer(i):
+        def apply(name, x2d):
+            full = f"l{i}.{name}"
+            q = frozen[full]
+            l, r = adapters[f"{full}.L"], adapters[f"{full}.R"]
+            return x2d @ q + (x2d @ l) @ r
+
+        return apply
+
+    return trunk_fwd(frozen, tokens, cfg, causal, apply_for_layer, attn=attn)
+
+
+def qpeft_lm_train(cfg: ModelCfg, rank: int):
+    """(frozen..., adapters..., head, tokens) -> (loss, adapter_grads..., head_grad).
+
+    Frozen args: embed, per-layer {ln1, Qdeq x4, ln2, Qdeq x3}, norm_f.
+    Trainable: (L, R) per linear (rank ``rank``) + lm head.
+    """
+    frozen_names, adapter_names = _qpeft_param_split(cfg, "lm")
+    nf, na = len(frozen_names), len(adapter_names)
+
+    def fn(*args):
+        frozen = dict(zip(frozen_names, args[:nf]))
+        tokens = args[-1]
+
+        def loss_fn(*train):
+            ad = dict(zip(adapter_names, train))
+            h = qpeft_trunk(frozen, ad, tokens[:, :-1], cfg, causal=True)
+            logits = h @ ad["head"]
+            nll = _nll_terms(
+                logits, tokens[:, 1:], jnp.ones_like(tokens[:, 1:], jnp.float32)
+            )
+            return jnp.mean(nll)
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(na)))(
+            *args[nf : nf + na]
+        )
+        return (loss, *grads)
+
+    return fn
+
+
+def qpeft_lm_nll(cfg: ModelCfg, rank: int):
+    """(frozen..., adapters..., head, tokens, mask) -> per-seq (nll, tokens) for eval."""
+    frozen_names, adapter_names = _qpeft_param_split(cfg, "lm")
+    nf, na = len(frozen_names), len(adapter_names)
+
+    def fn(*args):
+        frozen = dict(zip(frozen_names, args[:nf]))
+        ad = dict(zip(adapter_names, args[nf : nf + na]))
+        tokens, mask = args[-2], args[-1]
+        h = qpeft_trunk(frozen, ad, tokens[:, :-1], cfg, causal=True)
+        logits = h @ ad["head"]
+        nll = _nll_terms(logits, tokens[:, 1:], mask[:, 1:])
+        return (jnp.sum(nll, axis=-1), jnp.sum(mask[:, 1:], axis=-1))
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# classifier (GLUE-sim) entry points — bidirectional trunk + mean pool
+# ---------------------------------------------------------------------------
+
+
+def cls_logits(params: dict, tokens, cfg: ModelCfg, attn=attention_pallas):
+    h = trunk_fwd(params, tokens, cfg, causal=False, attn=attn)
+    return jnp.mean(h, axis=1) @ params["head"]
+
+
+def _ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def _mse_loss(pred, targets):
+    return jnp.mean((pred[:, 0] - targets) ** 2)
+
+
+def cls_fwd(cfg: ModelCfg, head: str, n_classes: int):
+    def fn(*args):
+        params = to_dict(cfg, args[:-1], head)
+        return (cls_logits(params, args[-1], cfg),)
+
+    return fn
+
+
+def cls_train(cfg: ModelCfg, head: str, n_classes: int):
+    """Full fine-tuning train step (the paper's Full FT / LoRA-16 baseline path)."""
+    n = len(param_names(cfg, head))
+
+    def fn(*args):
+        tokens, labels = args[-2], args[-1]
+
+        def loss_fn(*params):
+            logits = cls_logits(to_dict(cfg, params, head), tokens, cfg, attn=attention_ref)
+            if head == "reg":
+                return _mse_loss(logits, labels)
+            return _ce_loss(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(n)))(*args[:-2])
+        return (loss, *grads)
+
+    return fn
+
+
+def qpeft_cls_train(cfg: ModelCfg, rank: int, head: str, n_classes: int):
+    """(frozen..., adapters..., head, tokens, labels) -> (loss, grads...)."""
+    frozen_names, adapter_names = _qpeft_param_split(cfg, head)
+    nf, na = len(frozen_names), len(adapter_names)
+
+    def fn(*args):
+        frozen = dict(zip(frozen_names, args[:nf]))
+        tokens, labels = args[-2], args[-1]
+
+        def loss_fn(*train):
+            ad = dict(zip(adapter_names, train))
+            h = qpeft_trunk(frozen, ad, tokens, cfg, causal=False)
+            logits = jnp.mean(h, axis=1) @ ad["head"]
+            if head == "reg":
+                return _mse_loss(logits, labels)
+            return _ce_loss(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=tuple(range(na)))(
+            *args[nf : nf + na]
+        )
+        return (loss, *grads)
+
+    return fn
+
+
+def qpeft_cls_fwd(cfg: ModelCfg, rank: int, head: str, n_classes: int):
+    frozen_names, adapter_names = _qpeft_param_split(cfg, head)
+    nf, na = len(frozen_names), len(adapter_names)
+
+    def fn(*args):
+        frozen = dict(zip(frozen_names, args[:nf]))
+        ad = dict(zip(adapter_names, args[nf : nf + na]))
+        tokens = args[-1]
+        h = qpeft_trunk(frozen, ad, tokens, cfg, causal=False)
+        return (jnp.mean(h, axis=1) @ ad["head"],)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# serving path: fused Pallas QLR forward
+# ---------------------------------------------------------------------------
+
+
+def qlr_lm_fwd(cfg: ModelCfg, rank: int):
+    """LM forward where every linear runs the fused Pallas qlr_matmul kernel.
+
+    Args: embed, per-layer {ln1, (Qdeq, L, R) x4, ln2, (Qdeq, L, R) x3},
+    norm_f, head, tokens. Inference-only artifact for the serving benches.
+    """
+    frozen_names = param_names(cfg)[:-1]
+
+    def fn(*args):
+        # args: frozen non-linear params interleaved with (q, l, r) triplets.
+        it = iter(args[:-1])
+        params = {}
+        triplets = {}
+        for name in frozen_names:
+            if is_linear(name):
+                triplets[name] = (next(it), next(it), next(it))
+            else:
+                params[name] = next(it)
+        params["head"] = next(it)
+        tokens = args[-1]
+
+        def apply_for_layer(i):
+            def apply(name, x2d):
+                q, l, r = triplets[f"l{i}.{name}"]
+                return qlr_matmul(x2d, q, l, r)
+
+            return apply
+
+        h = trunk_fwd(params, tokens, cfg, causal=True, apply_for_layer=apply_for_layer)
+        return (h @ params["head"],)
+
+    return fn

@@ -1,0 +1,70 @@
+"""AOT catalog sanity: every entry's declared arg specs trace cleanly."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return aot.build_catalog()
+
+
+def test_catalog_names_unique(catalog):
+    names = [c[0] for c in catalog]
+    assert len(names) == len(set(names))
+
+
+def test_catalog_covers_required_entry_points(catalog):
+    names = {c[0] for c in catalog}
+    required = {
+        "lm_fwd_tiny", "lm_fwd_small", "lm_fwd_base",
+        "lm_nll_tiny", "lm_nll_small", "lm_nll_base",
+        "lm_train_tiny", "lm_train_small",
+        "qpeft_lm_train_tiny_r8", "qpeft_lm_train_tiny_r64",
+        "cls_train_tiny", "qpeft_cls_train_tiny_r8", "qpeft_cls_train_tiny_r64",
+        "qpeft_cls_train_reg_tiny_r8", "qlr_lm_fwd_small_r64",
+        "kernel_mxint2", "kernel_mxint3", "kernel_mxint4",
+        "kernel_qlr", "kernel_attn",
+    }
+    missing = required - names
+    assert not missing, f"missing artifacts: {missing}"
+
+
+@pytest.mark.parametrize(
+    "name",
+    [
+        "lm_nll_tiny",
+        "lm_train_tiny",
+        "qpeft_cls_train_tiny_r8",
+        "qpeft_cls_fwd_reg_tiny_r8",
+        "kernel_qlr",
+    ],
+)
+def test_entry_traces_with_declared_specs(catalog, name):
+    """eval_shape succeeds with exactly the declared positional args
+    (catches arg-order drift between model.py and aot.py)."""
+    entry = next(c for c in catalog if c[0] == name)
+    _, fn, args, _ = entry
+    specs = [jax.ShapeDtypeStruct(tuple(sh), aot.DTYPES[dt]) for (_, sh, dt) in args]
+    outs = jax.eval_shape(fn, *specs)
+    assert len(outs) >= 1
+    for o in outs:
+        assert all(isinstance(d, int) for d in o.shape)
+
+
+def test_train_entry_grad_count(catalog):
+    """A train artifact returns loss + one grad per trainable arg."""
+    entry = next(c for c in catalog if c[0] == "qpeft_cls_train_tiny_r8")
+    _, fn, args, _ = entry
+    specs = [jax.ShapeDtypeStruct(tuple(sh), aot.DTYPES[dt]) for (_, sh, dt) in args]
+    outs = jax.eval_shape(fn, *specs)
+    n_adapters = sum(1 for (n, _, _) in args if n.endswith(".L") or n.endswith(".R"))
+    assert len(outs) == 1 + n_adapters + 1  # loss + adapter grads + head grad
+
+
+def test_fingerprint_changes_with_source(tmp_path, monkeypatch):
+    fp1 = aot.source_fingerprint()
+    assert isinstance(fp1, str) and len(fp1) == 64

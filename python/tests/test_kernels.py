@@ -1,0 +1,172 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Each Pallas kernel (interpret=True) must match its pure-jnp oracle in
+ref.py. Hypothesis sweeps shapes/bit-widths/block sizes; dedicated cases
+cover the known edge behaviours (all-zero blocks, huge dynamic range,
+clipping at the mantissa boundary, odd sequence lengths).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, mxint_qdq, qlr_matmul
+from compile.kernels.ref import attention_ref, mxint_qdq_ref, qlr_matmul_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype("float32") * scale)
+
+
+# ---------------------------------------------------------------------------
+# MXINT
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("shape", [(8, 32), (24, 96), (128, 256), (5, 64)])
+def test_mxint_matches_ref(bits, shape):
+    w = randf(*shape)
+    got = mxint_qdq(w, bits)
+    want = mxint_qdq_ref(w, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxint_zero_block_dequantizes_to_zero():
+    w = jnp.zeros((4, 64), jnp.float32)
+    assert float(jnp.max(jnp.abs(mxint_qdq(w, 3)))) == 0.0
+
+
+def test_mxint_mixed_zero_and_nonzero_blocks():
+    w = np.zeros((2, 64), dtype="float32")
+    w[0, 32:] = RNG.normal(size=32)
+    got = np.asarray(mxint_qdq(jnp.asarray(w), 3))
+    assert np.all(got[:, :32] == 0.0) and np.all(got[1] == 0.0)
+    assert np.any(got[0, 32:] != 0.0)
+
+
+def test_mxint_huge_dynamic_range():
+    w = randf(8, 64) * jnp.asarray(RNG.choice([1e-6, 1.0, 1e6], size=(8, 64)).astype("f4"))
+    np.testing.assert_array_equal(
+        np.asarray(mxint_qdq(w, 4)), np.asarray(mxint_qdq_ref(w, 4))
+    )
+
+
+def test_mxint_error_bound():
+    """Per-element error <= one scale step.
+
+    Non-clipped elements round to within scale/2; the block max can clip at
+    the mantissa boundary (qmax*scale = 2^(E+1) - scale), adding at most one
+    further step — so |w - deq| < scale everywhere (MXINT's known behaviour).
+    """
+    w = randf(16, 128)
+    for bits in (3, 4, 6):
+        deq = np.asarray(mxint_qdq_ref(w, bits))
+        wb = np.asarray(w).reshape(16, -1, 32)
+        maxabs = np.abs(wb).max(-1, keepdims=True)
+        e = np.floor(np.log2(np.where(maxabs > 0, maxabs, 1.0)))
+        scale = np.exp2(e - (bits - 2))
+        err = np.abs(np.asarray(w).reshape(16, -1, 32) - deq.reshape(16, -1, 32))
+        assert np.all(err <= scale + 1e-7)
+        # and the non-clipped interior obeys the half-step bound
+        interior = np.abs(wb) <= (2 ** (bits - 1) - 1) * scale
+        assert np.all(np.where(interior, err, 0.0) <= scale / 2 + 1e-7)
+
+
+def test_mxint_is_idempotent():
+    w = randf(8, 64)
+    once = mxint_qdq(w, 3)
+    twice = mxint_qdq(once, 3)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    nb=st.integers(1, 6),
+    bits=st.integers(2, 8),
+    scale=st.sampled_from([1e-3, 1.0, 1e4]),
+)
+def test_mxint_hypothesis(m, nb, bits, scale):
+    w = randf(m, nb * 32, scale=scale)
+    np.testing.assert_array_equal(
+        np.asarray(mxint_qdq(w, bits)), np.asarray(mxint_qdq_ref(w, bits))
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused QLR matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,r", [(16, 96, 64, 8), (64, 256, 256, 64), (8, 32, 32, 4)])
+def test_qlr_matches_ref(m, k, n, r):
+    x, q, l, rr = randf(m, k), randf(k, n), randf(k, r), randf(r, n)
+    got = qlr_matmul(x, q, l, rr)
+    want = qlr_matmul_ref(x, q, l, rr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+
+def test_qlr_zero_adapter_equals_plain_matmul():
+    x, q = randf(16, 64), randf(64, 48)
+    l, r = jnp.zeros((64, 8)), jnp.zeros((8, 48))
+    got = qlr_matmul(x, q, l, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ q), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([4, 16, 33, 64]),
+    k=st.sampled_from([32, 96, 256]),
+    n=st.sampled_from([32, 128]),
+    r=st.sampled_from([1, 8, 64]),
+)
+def test_qlr_hypothesis(m, k, n, r):
+    x, q, l, rr = randf(m, k), randf(k, n), randf(k, r), randf(r, n)
+    np.testing.assert_allclose(
+        np.asarray(qlr_matmul(x, q, l, rr)),
+        np.asarray(qlr_matmul_ref(x, q, l, rr)),
+        rtol=2e-5,
+        atol=5e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,t,dh", [(2, 4, 64, 32), (1, 2, 63, 16), (3, 1, 32, 8)])
+def test_attention_matches_ref(causal, b, h, t, dh):
+    q, k, v = randf(b, h, t, dh), randf(b, h, t, dh), randf(b, h, t, dh)
+    got = attention(q, k, v, causal=causal)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_first_token_is_value_when_causal():
+    q, k, v = randf(1, 1, 16, 8), randf(1, 1, 16, 8), randf(1, 1, 16, 8)
+    got = np.asarray(attention(q, k, v, causal=True))
+    np.testing.assert_allclose(got[0, 0, 0], np.asarray(v)[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([8, 24, 63, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_attention_hypothesis(b, h, t, dh, causal):
+    q, k, v = randf(b, h, t, dh), randf(b, h, t, dh), randf(b, h, t, dh)
+    np.testing.assert_allclose(
+        np.asarray(attention(q, k, v, causal=causal)),
+        np.asarray(attention_ref(q, k, v, causal=causal)),
+        rtol=3e-5,
+        atol=3e-5,
+    )

@@ -1,0 +1,168 @@
+"""L2 model correctness: shapes, gradients, QPEFT/dense equivalences."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import ModelCfg
+
+MICRO = ModelCfg("micro", vocab=32, d_model=16, n_heads=2, n_layers=1, d_ff=32, seq_len=8)
+RNG = np.random.default_rng(7)
+
+
+def init_params(cfg, head="lm", n_classes=4, scale=0.05):
+    out = []
+    for n in M.param_names(cfg, head):
+        sh = M.param_shape(n, cfg, head, n_classes)
+        if len(sh) == 1:
+            out.append(jnp.ones(sh, jnp.float32))
+        else:
+            out.append(jnp.asarray(RNG.normal(size=sh).astype("f4") * scale))
+    return out
+
+
+def tokens(cfg, b=2):
+    return jnp.asarray(RNG.integers(0, cfg.vocab, size=(b, cfg.seq_len)).astype("i4"))
+
+
+def test_param_names_order_and_shapes():
+    names = M.param_names(MICRO)
+    assert names[0] == "embed" and names[-1] == "head" and names[-2] == "norm_f"
+    assert len(names) == 1 + 9 * MICRO.n_layers + 2
+    assert M.param_shape("l0.down", MICRO) == (MICRO.d_ff, MICRO.d_model)
+    assert M.param_shape("head", MICRO, "reg") == (MICRO.d_model, 1)
+    assert len(M.linear_names(MICRO)) == 7 * MICRO.n_layers
+
+
+def test_lm_fwd_shape_and_finite():
+    ps = init_params(MICRO)
+    (logits,) = M.lm_fwd(MICRO)(*ps, tokens(MICRO))
+    assert logits.shape == (2, MICRO.seq_len, MICRO.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lm_nll_mask_semantics():
+    """Masked positions contribute nothing; count equals mask sum."""
+    ps = init_params(MICRO)
+    t = tokens(MICRO)
+    full = jnp.ones_like(t, jnp.float32)
+    half = full.at[:, 4:].set(0.0)
+    nll_f, cnt_f = M.lm_nll(MICRO)(*ps, t, full)
+    nll_h, cnt_h = M.lm_nll(MICRO)(*ps, t, half)
+    assert cnt_f.shape == (2,)
+    assert float(cnt_f[0]) == MICRO.seq_len - 1
+    assert float(cnt_h[0]) == 3  # positions 1..3 of the shifted targets
+    assert float(nll_h[0]) < float(nll_f[0])
+
+
+def test_lm_train_matches_finite_difference():
+    ps = init_params(MICRO)
+    t = tokens(MICRO)
+    out = M.lm_train(MICRO)(*ps, t)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss))
+    # FD check on a handful of coordinates of the head matrix
+    gi = M.param_names(MICRO).index("head")
+    eps = 1e-3
+    for idx in [(0, 0), (3, 7)]:
+        bumped = list(ps)
+        bumped[gi] = ps[gi].at[idx].add(eps)
+        lp = M.lm_train(MICRO)(*bumped, t)[0]
+        bumped[gi] = ps[gi].at[idx].add(-eps)
+        lm = M.lm_train(MICRO)(*bumped, t)[0]
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        np.testing.assert_allclose(float(grads[gi][idx]), fd, rtol=2e-2, atol=2e-4)
+
+
+def test_sgd_step_decreases_loss():
+    ps = init_params(MICRO)
+    t = tokens(MICRO)
+    step = jax.jit(M.lm_train(MICRO))
+    out = step(*ps, t)
+    loss0, grads = out[0], out[1:]
+    ps2 = [p - 0.5 * g for p, g in zip(ps, grads)]
+    loss1 = step(*ps2, t)[0]
+    assert float(loss1) < float(loss0)
+
+
+def qpeft_inputs(cfg, rank, head="cls", n_classes=4, zero_adapters=True):
+    frozen = []
+    for n in M.param_names(cfg, head)[:-1]:
+        sh = M.param_shape(n, cfg, head, n_classes)
+        frozen.append(
+            jnp.ones(sh, jnp.float32)
+            if len(sh) == 1
+            else jnp.asarray(RNG.normal(size=sh).astype("f4") * 0.05)
+        )
+    adapters = []
+    for n in M.linear_names(cfg):
+        din, dout = M.param_shape(n, cfg)
+        if zero_adapters:
+            adapters += [jnp.zeros((din, rank)), jnp.zeros((rank, dout))]
+        else:
+            adapters += [
+                jnp.asarray(RNG.normal(size=(din, rank)).astype("f4") * 0.05),
+                jnp.asarray(RNG.normal(size=(rank, dout)).astype("f4") * 0.05),
+            ]
+    headw = jnp.asarray(
+        RNG.normal(size=M.param_shape("head", cfg, head, n_classes)).astype("f4") * 0.05
+    )
+    return frozen, adapters, headw
+
+
+def test_qpeft_zero_adapter_equals_dense_forward():
+    """With Qdeq = W and L = R = 0, the QPEFT trunk must equal the dense trunk."""
+    cfg, rank = MICRO, 4
+    frozen, adapters, headw = qpeft_inputs(cfg, rank, zero_adapters=True)
+    t = tokens(cfg)
+    (logits_q,) = M.qpeft_cls_fwd(cfg, rank, "cls", 4)(*frozen, *adapters, headw, t)
+    dense = frozen + [headw]
+    (logits_d,) = M.cls_fwd(cfg, "cls", 4)(*dense, t)
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_d), rtol=1e-5, atol=1e-5)
+
+
+def test_qpeft_cls_train_outputs_and_grad_flow():
+    cfg, rank = MICRO, 4
+    frozen, adapters, headw = qpeft_inputs(cfg, rank, zero_adapters=False)
+    t = tokens(cfg, b=3)
+    labels = jnp.asarray(RNG.integers(0, 4, size=(3,)).astype("i4"))
+    out = M.qpeft_cls_train(cfg, rank, "cls", 4)(*frozen, *adapters, headw, t, labels)
+    loss, grads = out[0], out[1:]
+    assert len(grads) == len(adapters) + 1
+    assert np.isfinite(float(loss))
+    # every adapter gradient must be non-trivially shaped and finite
+    for g, a in zip(grads, adapters + [headw]):
+        assert g.shape == a.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+    # L gradients are nonzero when R != 0 (grad flows through the product)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in grads[:-1])
+
+
+def test_qpeft_reg_head_mse():
+    cfg, rank = MICRO, 4
+    frozen, adapters, headw = qpeft_inputs(cfg, rank, head="reg", n_classes=1)
+    t = tokens(cfg, b=3)
+    y = jnp.asarray(RNG.normal(size=(3,)).astype("f4"))
+    out = M.qpeft_cls_train(cfg, rank, "reg", 1)(*frozen, *adapters, headw, t, y)
+    assert np.isfinite(float(out[0]))
+
+
+def test_qlr_lm_fwd_equals_dense_when_exact():
+    """qlr serving path with Q = W, L/R = 0 reproduces the dense LM logits."""
+    cfg, rank = MICRO, 4
+    ps = init_params(cfg)
+    names = M.param_names(cfg)
+    args = []
+    for n, p in zip(names[:-1], ps[:-1]):
+        if M.is_linear(n):
+            din, dout = M.param_shape(n, cfg)
+            args += [p, jnp.zeros((din, rank)), jnp.zeros((rank, dout))]
+        else:
+            args.append(p)
+    args.append(ps[-1])
+    t = tokens(cfg)
+    (logits_q,) = M.qlr_lm_fwd(cfg, rank)(*args, t)
+    (logits_d,) = M.lm_fwd(cfg)(*ps, t)
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_d), rtol=1e-4, atol=1e-4)

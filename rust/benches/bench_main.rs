@@ -1,0 +1,58 @@
+//! `cargo bench` entry point: regenerates every paper table and figure.
+//!
+//! Custom harness (criterion is unavailable offline); experiment ids and
+//! their paper mapping live in `srr::exp::registry` / DESIGN.md §5.
+//!
+//!   cargo bench                   # full suite (records EXPERIMENTS.md)
+//!   cargo bench -- --exp table1   # one experiment
+//!   cargo bench -- --quick        # smoke sizes
+
+use srr::exp::{registry, run, ExpCtx};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let quick = raw.iter().any(|a| a == "--quick");
+    let exps: Vec<String> = {
+        let mut out = vec![];
+        let mut it = raw.iter();
+        while let Some(a) = it.next() {
+            if a == "--exp" {
+                if let Some(v) = it.next() {
+                    out.push(v.clone());
+                }
+            }
+        }
+        out
+    };
+    // `cargo bench` passes --bench and test-harness flags; ignore unknowns.
+    let ids: Vec<&str> = if exps.is_empty() {
+        registry().iter().map(|(id, _, _)| *id).collect()
+    } else {
+        exps.iter().map(|s| s.as_str()).collect()
+    };
+
+    let mut ctx = match ExpCtx::new(quick) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench setup failed: {e:#} (run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    };
+
+    let suite_start = std::time::Instant::now();
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match run(id, &mut ctx) {
+            Ok(tables) => {
+                for t in tables {
+                    t.print();
+                }
+                println!("[{id} done in {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("[{id} FAILED: {e:#}]");
+            }
+        }
+    }
+    println!("[suite done in {:.1}s]", suite_start.elapsed().as_secs_f64());
+}

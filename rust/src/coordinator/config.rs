@@ -1,0 +1,206 @@
+//! Run configuration: CLI args + optional JSON config file, merged.
+//!
+//! Precedence: CLI > JSON file > defaults. The same structure drives the
+//! `srr` binary's subcommands and the examples.
+
+use anyhow::{anyhow, Result};
+
+use crate::qer::Method;
+use crate::scaling::ScalingKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::pipeline::QuantizerSpec;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub method: Method,
+    pub rank: usize,
+    pub scaling: ScalingKind,
+    pub quantizer: QuantizerSpec,
+    pub seed: u64,
+    pub calib_rows: usize,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "small".into(),
+            method: Method::QerSrr,
+            rank: 32,
+            scaling: ScalingKind::Exact,
+            quantizer: QuantizerSpec::Mxint { bits: 3, block: 32 },
+            seed: 0,
+            calib_rows: 256,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+pub fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "w-only" | "wonly" => Method::WOnly,
+        "qer" => Method::Qer,
+        "srr" | "qer+srr" => Method::QerSrr,
+        "srr-eq6" => Method::SrrSingleSvd,
+        "loftq" | "iterative" => Method::IterativeLowRank { iters: 5 },
+        "preserve-only" | "svdquant" => Method::PreserveOnly,
+        "odlri" | "fixed-half" => Method::FixedSplitHalf,
+        other => return Err(anyhow!("unknown method '{other}'")),
+    })
+}
+
+pub fn parse_scaling(s: &str) -> Result<ScalingKind> {
+    Ok(match s {
+        "identity" | "zeroquant" => ScalingKind::Identity,
+        "rms" | "lqer" => ScalingKind::DiagRms,
+        "absmean" | "qera-approx" => ScalingKind::DiagAbsMean,
+        "exact" | "qera-exact" | "qera" => ScalingKind::Exact,
+        other => return Err(anyhow!("unknown scaling '{other}'")),
+    })
+}
+
+pub fn parse_quantizer(s: &str) -> Result<QuantizerSpec> {
+    // forms: mxint3, mxint4:16, uniform4g64, gptq3, quip2
+    if let Some(rest) = s.strip_prefix("mxint") {
+        let (bits, block) = match rest.split_once(':') {
+            Some((b, blk)) => (b.parse()?, blk.parse()?),
+            None => (rest.parse()?, 32),
+        };
+        return Ok(QuantizerSpec::Mxint { bits, block });
+    }
+    if let Some(rest) = s.strip_prefix("gptq") {
+        return Ok(QuantizerSpec::Gptq { bits: rest.parse()?, group: 128 });
+    }
+    if let Some(rest) = s.strip_prefix("quip") {
+        return Ok(QuantizerSpec::QuipSharp { bits: rest.parse()? });
+    }
+    if let Some(rest) = s.strip_prefix("uniform") {
+        let (bits, group) = rest.split_once('g').ok_or_else(|| anyhow!("uniform<bits>g<group>"))?;
+        return Ok(QuantizerSpec::Uniform {
+            bits: bits.parse()?,
+            group: group.parse()?,
+            symmetric: true,
+        });
+    }
+    Err(anyhow!("unknown quantizer '{s}'"))
+}
+
+impl RunConfig {
+    /// Merge: defaults ← JSON file (`--config path`) ← CLI options.
+    pub fn from_args(args: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("config parse: {e}"))?;
+            if let Some(v) = j.get("model").and_then(|x| x.as_str()) {
+                cfg.model = v.to_string();
+            }
+            if let Some(v) = j.get("method").and_then(|x| x.as_str()) {
+                cfg.method = parse_method(v)?;
+            }
+            if let Some(v) = j.get("scaling").and_then(|x| x.as_str()) {
+                cfg.scaling = parse_scaling(v)?;
+            }
+            if let Some(v) = j.get("quantizer").and_then(|x| x.as_str()) {
+                cfg.quantizer = parse_quantizer(v)?;
+            }
+            if let Some(v) = j.get("rank").and_then(|x| x.as_usize()) {
+                cfg.rank = v;
+            }
+            if let Some(v) = j.get("seed").and_then(|x| x.as_f64()) {
+                cfg.seed = v as u64;
+            }
+            if let Some(v) = j.get("calib_rows").and_then(|x| x.as_usize()) {
+                cfg.calib_rows = v;
+            }
+        }
+        if let Some(v) = args.get("model") {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = args.get("method") {
+            cfg.method = parse_method(v)?;
+        }
+        if let Some(v) = args.get("scaling") {
+            cfg.scaling = parse_scaling(v)?;
+        }
+        if let Some(v) = args.get("quantizer") {
+            cfg.quantizer = parse_quantizer(v)?;
+        }
+        cfg.rank = args.get_usize("rank", cfg.rank);
+        cfg.seed = args.get_u64("seed", cfg.seed);
+        cfg.calib_rows = args.get_usize("calib-rows", cfg.calib_rows);
+        if let Some(v) = args.get("out") {
+            cfg.out_dir = v.to_string();
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_all_method_aliases() {
+        assert_eq!(parse_method("srr").unwrap(), Method::QerSrr);
+        assert_eq!(parse_method("qer").unwrap(), Method::Qer);
+        assert_eq!(parse_method("w-only").unwrap(), Method::WOnly);
+        assert!(matches!(parse_method("loftq").unwrap(), Method::IterativeLowRank { iters: 5 }));
+        assert!(parse_method("bogus").is_err());
+    }
+
+    #[test]
+    fn parses_quantizer_grammar() {
+        assert!(matches!(
+            parse_quantizer("mxint3").unwrap(),
+            QuantizerSpec::Mxint { bits: 3, block: 32 }
+        ));
+        assert!(matches!(
+            parse_quantizer("mxint4:16").unwrap(),
+            QuantizerSpec::Mxint { bits: 4, block: 16 }
+        ));
+        assert!(matches!(parse_quantizer("gptq3").unwrap(), QuantizerSpec::Gptq { bits: 3, .. }));
+        assert!(matches!(parse_quantizer("quip2").unwrap(), QuantizerSpec::QuipSharp { bits: 2 }));
+        assert!(matches!(
+            parse_quantizer("uniform4g64").unwrap(),
+            QuantizerSpec::Uniform { bits: 4, group: 64, .. }
+        ));
+        assert!(parse_quantizer("float8").is_err());
+    }
+
+    #[test]
+    fn cli_overrides_defaults() {
+        let cfg = RunConfig::from_args(&args(
+            "ptq --model tiny --method qer --rank 64 --scaling lqer --quantizer mxint2 --seed 9",
+        ))
+        .unwrap();
+        assert_eq!(cfg.model, "tiny");
+        assert_eq!(cfg.method, Method::Qer);
+        assert_eq!(cfg.rank, 64);
+        assert_eq!(cfg.scaling, ScalingKind::DiagRms);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn json_file_then_cli_precedence() {
+        let dir = std::env::temp_dir().join("srr_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"model": "base", "rank": 16, "method": "qer"}"#).unwrap();
+        let cfg = RunConfig::from_args(&args(&format!(
+            "ptq --config {} --rank 64",
+            path.display()
+        )))
+        .unwrap();
+        assert_eq!(cfg.model, "base"); // from file
+        assert_eq!(cfg.rank, 64); // CLI wins
+        assert_eq!(cfg.method, Method::Qer); // from file
+    }
+}

@@ -1,0 +1,186 @@
+//! Bounded MPMC job queue with backpressure.
+//!
+//! Built on Mutex + Condvar (no crossbeam available offline). Producers
+//! block when the queue is at capacity — the backpressure that keeps the
+//! streaming calibration path from ballooning memory — and consumers
+//! block until an item or shutdown arrives.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return true;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(3), "push after close must fail");
+    }
+
+    #[test]
+    fn every_item_consumed_exactly_once() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let n_items = 1000usize;
+        let consumed = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let q = q.clone();
+            let consumed = consumed.clone();
+            let sum = sum.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(x) = q.pop() {
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                    sum.fetch_add(x, Ordering::Relaxed);
+                }
+            }));
+        }
+        for i in 0..n_items {
+            assert!(q.push(i));
+        }
+        q.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::Relaxed), n_items);
+        assert_eq!(sum.load(Ordering::Relaxed), n_items * (n_items - 1) / 2);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer_until_pop() {
+        let q = Arc::new(BoundedQueue::new(2));
+        assert!(q.push(0));
+        assert!(q.push(1));
+        assert_eq!(q.len(), 2);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            // this push must block until the consumer below pops
+            let t0 = std::time::Instant::now();
+            assert!(q2.push(2));
+            t0.elapsed()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.pop(), Some(0));
+        let blocked_for = t.join().unwrap();
+        assert!(
+            blocked_for >= std::time::Duration::from_millis(20),
+            "producer should have been blocked, was {blocked_for:?}"
+        );
+        // queue never exceeded capacity
+        assert!(q.len() <= 2);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(BoundedQueue::<usize>::new(2));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn prop_queue_conserves_items() {
+        crate::util::prop::check(0xD4, 10, |g| {
+            let cap = g.dim(6);
+            let n = g.dim(200);
+            let q = Arc::new(BoundedQueue::new(cap));
+            let total = Arc::new(AtomicUsize::new(0));
+            let q2 = q.clone();
+            let t2 = total.clone();
+            let consumer = std::thread::spawn(move || {
+                while let Some(x) = q2.pop() {
+                    t2.fetch_add(x, Ordering::Relaxed);
+                }
+            });
+            let mut want = 0usize;
+            for i in 0..n {
+                q.push(i);
+                want += i;
+            }
+            q.close();
+            consumer.join().unwrap();
+            assert_eq!(total.load(Ordering::Relaxed), want);
+        });
+    }
+}

@@ -1,0 +1,93 @@
+//! Counters and stage timers (Table 11's scale/QER/SRR accounting).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, key: &str, v: f64) {
+        *self.counters.lock().unwrap().entry(key.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn incr(&self, key: &str) {
+        self.add(key, 1.0);
+    }
+
+    pub fn get(&self, key: &str) -> f64 {
+        self.counters.lock().unwrap().get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Time a closure into `key` (seconds, accumulated).
+    pub fn time<T>(&self, key: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(key, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        self.counters.lock().unwrap().clone()
+    }
+
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        for (k, v) in snap {
+            out.push_str(&format!("{k:<32} {v:.6}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("jobs");
+        m.incr("jobs");
+        m.add("bytes", 10.0);
+        assert_eq!(m.get("jobs"), 2.0);
+        assert_eq!(m.get("bytes"), 10.0);
+        assert_eq!(m.get("missing"), 0.0);
+    }
+
+    #[test]
+    fn timers_accumulate_positive() {
+        let m = Metrics::new();
+        let v = m.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.get("work") > 0.0);
+        m.time("work", || ());
+        assert!(m.snapshot().contains_key("work"));
+    }
+
+    #[test]
+    fn concurrent_updates_are_safe() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        m.incr("n");
+                    }
+                });
+            }
+        });
+        assert_eq!(m.get("n"), 800.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The Layer-3 coordinator: orchestrates the PTQ pipeline over a model's
+//! layers and owns run configuration and metrics.
+//!
+//! The paper's contribution is algorithmic (L1/L2-adjacent), so per the
+//! architecture the coordinator is the *pipeline driver*: it streams
+//! calibration activations, schedules per-layer reconstruction jobs
+//! (scale → select-k → preserve → quantize → reconstruct → pack) across a
+//! worker pool, tracks per-stage timings (Table 11's overhead accounting)
+//! and materializes the reconstructed model for the PJRT eval engines.
+//!
+//! * [`pipeline`] — the PTQ orchestrator.
+//! * [`jobs`] — bounded work queue with backpressure (used by the
+//!   streaming calibration path; invariants property-tested).
+//! * [`metrics`] — counters/timers registry.
+//! * [`config`] — run configuration (CLI/JSON).
+
+pub mod pipeline;
+pub mod jobs;
+pub mod metrics;
+pub mod config;
+
+pub use config::RunConfig;
+pub use metrics::Metrics;
+pub use pipeline::{run_ptq, LayerReport, PtqOutcome, QuantizerSpec};

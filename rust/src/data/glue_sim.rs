@@ -1,0 +1,243 @@
+//! GLUE-sim: eight synthetic sentence-classification tasks of graded
+//! difficulty, mirroring the paper's GLUE table structure (Table 3):
+//! accuracy tasks, a Matthews-scored acceptability task (CoLA analog),
+//! and a regression task scored by Pearson/Spearman (STSB analog).
+//!
+//! Each task plants a learnable pattern in token sequences plus label
+//! noise; difficulty (pattern strength, noise) varies so fine-tuning
+//! quality spreads across tasks like the real benchmark.
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    Matthews,
+    PearsonSpearman,
+}
+
+#[derive(Clone, Debug)]
+pub struct GlueExample {
+    pub tokens: Vec<i32>,
+    pub label: usize,
+    /// regression target for the STSB analog
+    pub target: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct GlueTask {
+    pub name: &'static str,
+    pub metric: Metric,
+    pub n_classes: usize,
+    pub train: Vec<GlueExample>,
+    pub dev: Vec<GlueExample>,
+}
+
+/// The eight tasks: (name, metric, classes, pattern strength, label noise).
+pub const TASK_SPECS: [(&str, Metric, usize, f32, f32); 8] = [
+    ("MNLI-sim", Metric::Accuracy, 3, 0.80, 0.08),
+    ("QNLI-sim", Metric::Accuracy, 2, 0.85, 0.06),
+    ("RTE-sim", Metric::Accuracy, 2, 0.55, 0.18),
+    ("SST-sim", Metric::Accuracy, 2, 0.90, 0.04),
+    ("MRPC-sim", Metric::Accuracy, 2, 0.70, 0.10),
+    ("CoLA-sim", Metric::Matthews, 2, 0.60, 0.15),
+    ("QQP-sim", Metric::Accuracy, 2, 0.85, 0.05),
+    ("STSB-sim", Metric::PearsonSpearman, 1, 0.85, 0.08),
+];
+
+impl GlueTask {
+    /// Generate all eight tasks for a given vocab / sequence length.
+    pub fn all(vocab: usize, seq: usize, n_train: usize, n_dev: usize, seed: u64) -> Vec<GlueTask> {
+        TASK_SPECS
+            .iter()
+            .enumerate()
+            .map(|(i, &(name, metric, classes, strength, noise))| {
+                let mut rng = Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+                let gen = |n: usize, rng: &mut Rng| {
+                    (0..n)
+                        .map(|_| gen_example(vocab, seq, classes, strength, noise, metric, rng))
+                        .collect()
+                };
+                GlueTask {
+                    name,
+                    metric,
+                    n_classes: classes,
+                    train: gen(n_train, &mut rng),
+                    dev: gen(n_dev, &mut rng),
+                }
+            })
+            .collect()
+    }
+
+    /// Pack examples [i0, i1) into (tokens, int labels, float targets),
+    /// cycling if the range exceeds the set.
+    pub fn batch(
+        examples: &[GlueExample],
+        i0: usize,
+        batch: usize,
+        seq: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut labels = Vec::with_capacity(batch);
+        let mut targets = Vec::with_capacity(batch);
+        for k in 0..batch {
+            let ex = &examples[(i0 + k) % examples.len()];
+            toks.extend_from_slice(&ex.tokens);
+            labels.push(ex.label as i32);
+            targets.push(ex.target);
+        }
+        (toks, labels, targets)
+    }
+}
+
+/// Plant class-dependent token statistics:
+/// * class c biases tokens toward the band [c·vocab/C, (c+1)·vocab/C)
+///   with probability `strength`, else uniform;
+/// * the STSB analog's target is the (noisy) fraction of in-band tokens.
+fn gen_example(
+    vocab: usize,
+    seq: usize,
+    n_classes: usize,
+    strength: f32,
+    noise: f32,
+    metric: Metric,
+    rng: &mut Rng,
+) -> GlueExample {
+    if metric == Metric::PearsonSpearman {
+        // regression: similarity = overlap between two halves
+        let half = seq / 2;
+        let base: Vec<i32> = (0..half).map(|_| rng.below(vocab) as i32).collect();
+        let sim = rng.uniform() as f32; // target in [0,1]
+        let mut second = Vec::with_capacity(seq - half);
+        for i in 0..(seq - half) {
+            if (rng.uniform() as f32) < sim {
+                second.push(base[i % half]);
+            } else {
+                second.push(rng.below(vocab) as i32);
+            }
+        }
+        let mut tokens = base;
+        tokens.extend(second);
+        let target = (sim + (rng.normal() as f32) * noise).clamp(0.0, 1.0);
+        return GlueExample { tokens, label: 0, target };
+    }
+
+    let label = rng.below(n_classes);
+    let band = vocab / n_classes;
+    let lo = label * band;
+    let tokens: Vec<i32> = (0..seq)
+        .map(|_| {
+            if (rng.uniform() as f32) < strength {
+                (lo + rng.below(band)) as i32
+            } else {
+                rng.below(vocab) as i32
+            }
+        })
+        .collect();
+    // label noise: flip with probability `noise`
+    let observed = if (rng.uniform() as f32) < noise {
+        rng.below(n_classes)
+    } else {
+        label
+    };
+    GlueExample { tokens, label: observed, target: observed as f32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_eight_tasks_with_expected_metrics() {
+        let tasks = GlueTask::all(256, 32, 64, 32, 1);
+        assert_eq!(tasks.len(), 8);
+        assert_eq!(tasks.iter().filter(|t| t.metric == Metric::Matthews).count(), 1);
+        assert_eq!(
+            tasks.iter().filter(|t| t.metric == Metric::PearsonSpearman).count(),
+            1
+        );
+        for t in &tasks {
+            assert_eq!(t.train.len(), 64);
+            assert_eq!(t.dev.len(), 32);
+            for ex in t.train.iter().chain(&t.dev) {
+                assert_eq!(ex.tokens.len(), 32);
+                assert!(ex.label < t.n_classes.max(2));
+            }
+        }
+    }
+
+    #[test]
+    fn classification_pattern_is_learnable_by_band_statistic() {
+        // a trivial band-count classifier must beat chance on a strong task
+        let tasks = GlueTask::all(256, 32, 0, 400, 2);
+        let sst = tasks.iter().find(|t| t.name == "SST-sim").unwrap();
+        let mut correct = 0;
+        for ex in &sst.dev {
+            let band = 256 / 2;
+            let votes0 = ex.tokens.iter().filter(|&&t| (t as usize) < band).count();
+            let pred = if votes0 * 2 > ex.tokens.len() { 0 } else { 1 };
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / sst.dev.len() as f64;
+        assert!(acc > 0.85, "band statistic should solve SST-sim, acc={acc}");
+    }
+
+    #[test]
+    fn stsb_targets_correlate_with_overlap() {
+        let tasks = GlueTask::all(256, 32, 0, 300, 3);
+        let stsb = tasks.iter().find(|t| t.name == "STSB-sim").unwrap();
+        let mut overlaps = vec![];
+        let mut targets = vec![];
+        for ex in &stsb.dev {
+            let half = 16;
+            let shared = ex.tokens[half..]
+                .iter()
+                .enumerate()
+                .filter(|(i, &t)| ex.tokens[i % half] == t)
+                .count();
+            overlaps.push(shared as f64 / half as f64);
+            targets.push(ex.target as f64);
+        }
+        let r = crate::util::stats::pearson(&overlaps, &targets);
+        assert!(r > 0.6, "overlap/target correlation too weak: {r}");
+    }
+
+    #[test]
+    fn batch_cycles_and_shapes() {
+        let tasks = GlueTask::all(64, 16, 10, 5, 4);
+        let (t, l, tg) = GlueTask::batch(&tasks[0].train, 8, 4, 16);
+        assert_eq!(t.len(), 64);
+        assert_eq!(l.len(), 4);
+        assert_eq!(tg.len(), 4);
+    }
+
+    #[test]
+    fn difficulty_ordering_sst_easier_than_rte() {
+        // noisier task ⇒ weaker band statistic
+        let tasks = GlueTask::all(256, 32, 0, 400, 5);
+        let acc_of = |name: &str| {
+            let t = tasks.iter().find(|t| t.name == name).unwrap();
+            let band = 256 / t.n_classes;
+            let mut ok = 0;
+            for ex in &t.dev {
+                let mut counts = vec![0usize; t.n_classes];
+                for &tok in &ex.tokens {
+                    counts[(tok as usize / band).min(t.n_classes - 1)] += 1;
+                }
+                let pred = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .unwrap()
+                    .0;
+                if pred == ex.label {
+                    ok += 1;
+                }
+            }
+            ok as f64 / t.dev.len() as f64
+        };
+        assert!(acc_of("SST-sim") > acc_of("RTE-sim") + 0.05);
+    }
+}

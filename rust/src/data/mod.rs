@@ -1,0 +1,21 @@
+//! Synthetic data standing in for the paper's gated assets (DESIGN.md §2):
+//!
+//! * [`corpus`] — Zipf-weighted Markov token corpus (WikiText2 /
+//!   SlimPajama substitute) with train/eval splits and batching.
+//! * [`glue_sim`] — eight GLUE-like classification/regression tasks of
+//!   graded difficulty (incl. a CoLA analog scored by Matthews corr. and
+//!   an STSB analog scored by Pearson/Spearman).
+//! * [`gsm_sim`] — modular-arithmetic reasoning sequences (GSM8K
+//!   substitute) scored by exact match on the answer digits.
+//! * [`zeroshot`] — five option-ranking probe tasks (HellaSwag…BBH
+//!   substitute) scored by per-option sequence log-likelihood.
+
+pub mod corpus;
+pub mod glue_sim;
+pub mod gsm_sim;
+pub mod zeroshot;
+
+pub use corpus::Corpus;
+pub use glue_sim::{GlueTask, GlueExample, Metric};
+pub use gsm_sim::GsmSim;
+pub use zeroshot::ZeroShotTask;

@@ -1,0 +1,142 @@
+//! Zero-shot probe tasks (the five downstream benchmarks' substitute).
+//!
+//! Protocol mirrors lm-eval: each example is a context plus N candidate
+//! continuations; the model scores each continuation's token
+//! log-likelihood given the context, and the argmin-NLL option is the
+//! prediction. The correct continuation is drawn from the same Markov
+//! corpus process that trained the model; distractors break the Markov
+//! statistics with increasing subtlety per task (graded difficulty, like
+//! HellaSwag → BBH).
+
+use crate::data::corpus::Corpus;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ZeroShotExample {
+    /// full sequences (context ++ option), one per option, padded to seq
+    pub options: Vec<Vec<i32>>,
+    /// mask: 1.0 on continuation positions (these are scored)
+    pub masks: Vec<Vec<f32>>,
+    pub correct: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ZeroShotTask {
+    pub name: &'static str,
+    pub examples: Vec<ZeroShotExample>,
+}
+
+pub const TASK_NAMES: [&str; 5] =
+    ["hellaswag-sim", "winogrande-sim", "boolq-sim", "mmlu-sim", "bbh-sim"];
+
+impl ZeroShotTask {
+    /// Build all five probe tasks from a corpus. `seq` must match the LM
+    /// artifact's sequence length; contexts take the first 3/4.
+    pub fn all(corpus: &Corpus, seq: usize, n_examples: usize, seed: u64) -> Vec<ZeroShotTask> {
+        TASK_NAMES
+            .iter()
+            .enumerate()
+            .map(|(ti, name)| {
+                let mut rng = Rng::new(seed ^ ((ti as u64 + 1) * 0x5851F42D4C957F2D));
+                // task difficulty: how much distractors resemble the corpus
+                let corruption = [0.35, 0.25, 0.18, 0.12, 0.08][ti];
+                let examples = (0..n_examples)
+                    .map(|_| gen_example(corpus, seq, corruption, &mut rng))
+                    .collect();
+                ZeroShotTask { name, examples }
+            })
+            .collect()
+    }
+}
+
+fn gen_example(corpus: &Corpus, seq: usize, corruption: f64, rng: &mut Rng) -> ZeroShotExample {
+    let ctx_len = seq * 3 / 4;
+    let cont_len = seq - ctx_len;
+    let n_options = 4;
+    // pick a real span: context + true continuation
+    let max_start = corpus.tokens.len() - seq - 1;
+    let start = rng.below(max_start);
+    let span = &corpus.tokens[start..start + seq];
+    let correct = rng.below(n_options);
+
+    let mut options = Vec::with_capacity(n_options);
+    let mut masks = Vec::with_capacity(n_options);
+    for opt in 0..n_options {
+        let mut tokens = span[..ctx_len].to_vec();
+        if opt == correct {
+            tokens.extend_from_slice(&span[ctx_len..]);
+        } else {
+            // distractor: corrupt a fraction of the true continuation
+            for (i, &t) in span[ctx_len..].iter().enumerate() {
+                let _ = i;
+                if rng.uniform() < corruption {
+                    tokens.push(rng.below(corpus.vocab) as i32);
+                } else {
+                    tokens.push(t);
+                }
+            }
+        }
+        let mut mask = vec![0.0f32; seq];
+        for m in mask.iter_mut().skip(ctx_len) {
+            *m = 1.0;
+        }
+        options.push(tokens);
+        masks.push(mask);
+        let _ = cont_len;
+    }
+    ZeroShotExample { options, masks, correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_five_tasks_with_valid_examples() {
+        let corpus = Corpus::generate(64, 20_000, 7);
+        let tasks = ZeroShotTask::all(&corpus, 32, 10, 1);
+        assert_eq!(tasks.len(), 5);
+        for t in &tasks {
+            assert_eq!(t.examples.len(), 10);
+            for ex in &t.examples {
+                assert_eq!(ex.options.len(), 4);
+                assert!(ex.correct < 4);
+                for (o, m) in ex.options.iter().zip(&ex.masks) {
+                    assert_eq!(o.len(), 32);
+                    assert_eq!(m.len(), 32);
+                    // context unmasked, continuation masked
+                    assert_eq!(m[..24].iter().sum::<f32>(), 0.0);
+                    assert_eq!(m[24..].iter().sum::<f32>(), 8.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn context_is_shared_across_options() {
+        let corpus = Corpus::generate(64, 20_000, 8);
+        let tasks = ZeroShotTask::all(&corpus, 32, 5, 2);
+        for ex in &tasks[0].examples {
+            let ctx = &ex.options[0][..24];
+            for o in &ex.options[1..] {
+                assert_eq!(&o[..24], ctx);
+            }
+        }
+    }
+
+    #[test]
+    fn correct_option_preserves_corpus_statistics() {
+        // the true continuation equals the original span; distractors differ
+        let corpus = Corpus::generate(64, 20_000, 9);
+        let tasks = ZeroShotTask::all(&corpus, 32, 30, 3);
+        let mut differs = 0;
+        for ex in &tasks[0].examples {
+            for (i, o) in ex.options.iter().enumerate() {
+                if i != ex.correct && o[24..] != ex.options[ex.correct][24..] {
+                    differs += 1;
+                }
+            }
+        }
+        assert!(differs > 60, "distractors should usually differ, got {differs}/90");
+    }
+}

@@ -1,0 +1,82 @@
+//! GLUE-sim scoring from classifier logits: per-task metric selection
+//! (accuracy / Matthews / Pearson+Spearman averaged, as the paper
+//! reports "P/S Corr" for STSB).
+
+use crate::data::glue_sim::{GlueExample, Metric};
+use crate::util::stats;
+
+/// Score predictions against examples for the task's metric.
+/// `logits` is row-major (n_examples, n_classes); regression tasks use
+/// column 0 as the prediction.
+pub fn glue_score(metric: Metric, logits: &[f32], n_classes: usize, examples: &[GlueExample]) -> f64 {
+    let n = examples.len();
+    assert!(logits.len() >= n * n_classes.max(1));
+    match metric {
+        Metric::Accuracy | Metric::Matthews => {
+            let pred: Vec<usize> = (0..n)
+                .map(|i| {
+                    let row = &logits[i * n_classes..(i + 1) * n_classes];
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap_or(0)
+                })
+                .collect();
+            let truth: Vec<usize> = examples.iter().map(|e| e.label).collect();
+            match metric {
+                Metric::Accuracy => stats::accuracy(&pred, &truth) * 100.0,
+                Metric::Matthews => {
+                    // clamp predictions to binary for MCC
+                    let predb: Vec<usize> = pred.iter().map(|&p| p.min(1)).collect();
+                    let truthb: Vec<usize> = truth.iter().map(|&t| t.min(1)).collect();
+                    stats::matthews(&predb, &truthb) * 100.0
+                }
+                _ => unreachable!(),
+            }
+        }
+        Metric::PearsonSpearman => {
+            let pred: Vec<f64> = (0..n).map(|i| logits[i * n_classes] as f64).collect();
+            let truth: Vec<f64> = examples.iter().map(|e| e.target as f64).collect();
+            let p = stats::pearson(&pred, &truth);
+            let s = stats::spearman(&pred, &truth);
+            (p + s) / 2.0 * 100.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(label: usize, target: f32) -> GlueExample {
+        GlueExample { tokens: vec![], label, target }
+    }
+
+    #[test]
+    fn accuracy_from_argmax() {
+        let examples = vec![ex(0, 0.0), ex(1, 0.0), ex(1, 0.0)];
+        let logits = vec![
+            2.0, 1.0, // -> 0 correct
+            0.0, 3.0, // -> 1 correct
+            5.0, 1.0, // -> 0 wrong
+        ];
+        let acc = glue_score(Metric::Accuracy, &logits, 2, &examples);
+        assert!((acc - 200.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_perfect_binary() {
+        let examples = vec![ex(0, 0.0), ex(1, 0.0), ex(0, 0.0), ex(1, 0.0)];
+        let logits = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0];
+        assert!((glue_score(Metric::Matthews, &logits, 2, &examples) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_spearman_average() {
+        let examples = vec![ex(0, 0.1), ex(0, 0.5), ex(0, 0.9)];
+        let logits = vec![0.2, 0.6, 1.0]; // n_classes = 1, perfectly monotone/linear
+        let score = glue_score(Metric::PearsonSpearman, &logits, 1, &examples);
+        assert!((score - 100.0).abs() < 1e-6);
+    }
+}

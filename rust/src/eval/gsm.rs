@@ -1,0 +1,109 @@
+//! GSM-sim exact-match: teacher-forced argmax at the answer positions
+//! through the `lm_fwd_*` artifact. The answer at position p is predicted
+//! by the logits at p−1 (next-token head).
+
+use anyhow::Result;
+
+use crate::data::gsm_sim::{GsmExample, GsmSim};
+use crate::model::Params;
+use crate::runtime::{Executor, TensorValue};
+
+/// Fraction of test examples whose answer digits are all predicted
+/// correctly. Works with either full-precision or QPEFT-adapted params —
+/// the caller picks the artifact + params pairing.
+pub fn gsm_exact_match(
+    exec: &dyn Executor,
+    artifact: &str,
+    params: &Params,
+    gsm: &GsmSim,
+    examples: &[GsmExample],
+    b: usize,
+) -> Result<f64> {
+    let base_inputs = params.flat()?;
+    let t = gsm.seq;
+    let vocab = gsm.vocab;
+    let mut correct = 0usize;
+    for chunk in examples.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * t);
+        for e in chunk {
+            tokens.extend_from_slice(&e.tokens);
+        }
+        while tokens.len() < b * t {
+            tokens.extend(std::iter::repeat_n(0i32, t));
+        }
+        let mut inputs = base_inputs.clone();
+        inputs.push(TensorValue::i32(vec![b, t], tokens));
+        let outs = exec.run(artifact, &inputs)?;
+        let logits = outs[0].as_f32(); // (b, t, vocab)
+        for (row, ex) in chunk.iter().enumerate() {
+            let all_right = ex.answer_positions.iter().all(|&p| {
+                assert!(p > 0);
+                let base = row * t * vocab + (p - 1) * vocab;
+                let slice = &logits[base..base + vocab];
+                let pred = slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(-1);
+                pred == ex.tokens[p]
+            });
+            if all_right {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / examples.len().max(1) as f64 * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockExecutor;
+
+    #[test]
+    fn scores_argmax_at_answer_positions() {
+        let gsm = GsmSim::generate(32, 12, 0, 6, 1);
+        // oracle mock: put all logit mass on the true next token
+        let examples = gsm.test.clone();
+        let ex_copy = examples.clone();
+        let mock = MockExecutor::empty().on("fwd", move |ins| {
+            let tokens = ins[ins.len() - 1].as_i32();
+            let b = ins[ins.len() - 1].shape()[0];
+            let t = ins[ins.len() - 1].shape()[1];
+            let vocab = 32;
+            let mut logits = vec![0.0f32; b * t * vocab];
+            for r in 0..b {
+                for p in 0..t - 1 {
+                    let next = tokens[r * t + p + 1] as usize;
+                    logits[r * t * vocab + p * vocab + next] = 10.0;
+                }
+            }
+            vec![TensorValue::f32(vec![b, t, vocab], logits)]
+        });
+        let params = Params::new(vec![]);
+        let acc = gsm_exact_match(&mock, "fwd", &params, &gsm, &ex_copy, 4).unwrap();
+        assert_eq!(acc, 100.0);
+    }
+
+    #[test]
+    fn wrong_model_scores_low() {
+        let gsm = GsmSim::generate(32, 12, 0, 10, 2);
+        // mock always predicts token 0
+        let mock = MockExecutor::empty().on("fwd", |ins| {
+            let b = ins[ins.len() - 1].shape()[0];
+            let t = ins[ins.len() - 1].shape()[1];
+            let vocab = 32;
+            let mut logits = vec![0.0f32; b * t * vocab];
+            for r in 0..b {
+                for p in 0..t {
+                    logits[r * t * vocab + p * vocab] = 10.0;
+                }
+            }
+            vec![TensorValue::f32(vec![b, t, vocab], logits)]
+        });
+        let params = Params::new(vec![]);
+        let acc = gsm_exact_match(&mock, "fwd", &params, &gsm, &gsm.test, 4).unwrap();
+        assert!(acc < 30.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Evaluation engines over the PJRT artifacts.
+//!
+//! * [`ppl`] — perplexity on a held-out corpus via the `lm_nll_*`
+//!   artifact (WikiText2 / SlimPajama analog).
+//! * [`zeroshot`] — option-ranking accuracy over the five probe tasks
+//!   (lm-eval protocol: argmin per-option NLL).
+//! * [`glue`] — GLUE-sim metric computation from classifier logits
+//!   (accuracy / Matthews / Pearson+Spearman per task).
+//! * [`gsm`] — teacher-forced exact-match on the arithmetic task.
+
+pub mod ppl;
+pub mod zeroshot;
+pub mod glue;
+pub mod gsm;
+
+pub use glue::glue_score;
+pub use gsm::gsm_exact_match;
+pub use ppl::perplexity;
+pub use zeroshot::zero_shot_accuracy;

@@ -1,0 +1,55 @@
+//! Perplexity engine: exp(Σ nll / Σ tokens) over eval batches, computed
+//! through the `lm_nll_<model>` artifact (all masking on-device).
+
+use anyhow::Result;
+
+use crate::model::Params;
+use crate::runtime::{Executor, TensorValue};
+
+/// Perplexity of `params` on `batches` (each row-major (b, t) tokens).
+pub fn perplexity(
+    exec: &dyn Executor,
+    artifact: &str,
+    params: &Params,
+    batches: &[Vec<i32>],
+    b: usize,
+    t: usize,
+) -> Result<f64> {
+    let base_inputs = params.flat()?;
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0.0f64;
+    for batch in batches {
+        let mut inputs = base_inputs.clone();
+        inputs.push(TensorValue::i32(vec![b, t], batch.clone()));
+        inputs.push(TensorValue::f32(vec![b, t], vec![1.0; b * t]));
+        let outs = exec.run(artifact, &inputs)?;
+        total_nll += outs[0].as_f32().iter().map(|&x| x as f64).sum::<f64>();
+        total_tok += outs[1].as_f32().iter().map(|&x| x as f64).sum::<f64>();
+    }
+    Ok((total_nll / total_tok.max(1.0)).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockExecutor;
+
+    #[test]
+    fn aggregates_across_batches() {
+        // mock: per-seq nll = 2.0 per token over t-1 tokens
+        let mock = MockExecutor::empty().on("nll", |ins| {
+            let tokens = &ins[ins.len() - 2];
+            let b = tokens.shape()[0];
+            let t = tokens.shape()[1];
+            vec![
+                TensorValue::f32(vec![b], vec![2.0 * (t as f32 - 1.0); b]),
+                TensorValue::f32(vec![b], vec![t as f32 - 1.0; b]),
+            ]
+        });
+        let params = Params::new(vec![]);
+        let batches = vec![vec![0i32; 8]; 3];
+        let ppl = perplexity(&mock, "nll", &params, &batches, 2, 4).unwrap();
+        assert!((ppl - (2.0f64).exp()).abs() < 1e-9);
+        assert_eq!(mock.call_count("nll"), 3);
+    }
+}

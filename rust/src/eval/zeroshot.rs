@@ -1,0 +1,122 @@
+//! Zero-shot option ranking (lm-eval protocol): score each candidate
+//! continuation's masked NLL through `lm_nll_*`, predict the argmin.
+//! Options are packed densely into the artifact's fixed batch size.
+
+use anyhow::Result;
+
+use crate::data::zeroshot::ZeroShotTask;
+use crate::model::Params;
+use crate::runtime::{Executor, TensorValue};
+
+/// Accuracy of `params` on one probe task.
+pub fn zero_shot_accuracy(
+    exec: &dyn Executor,
+    artifact: &str,
+    params: &Params,
+    task: &ZeroShotTask,
+    b: usize,
+    t: usize,
+) -> Result<f64> {
+    let base_inputs = params.flat()?;
+    // flatten all (example, option) pairs into a scoring queue
+    let mut queue: Vec<(usize, usize, &Vec<i32>, &Vec<f32>)> = Vec::new();
+    for (ei, ex) in task.examples.iter().enumerate() {
+        for (oi, (o, m)) in ex.options.iter().zip(&ex.masks).enumerate() {
+            queue.push((ei, oi, o, m));
+        }
+    }
+    let n_options = task.examples.first().map(|e| e.options.len()).unwrap_or(0);
+    let mut scores = vec![vec![f64::INFINITY; n_options]; task.examples.len()];
+
+    for chunk in queue.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut mask = Vec::with_capacity(b * t);
+        for (_, _, o, m) in chunk {
+            tokens.extend_from_slice(o);
+            mask.extend_from_slice(m);
+        }
+        // pad the tail of the last batch
+        while tokens.len() < b * t {
+            tokens.extend(std::iter::repeat_n(0i32, t));
+            mask.extend(std::iter::repeat_n(0.0f32, t));
+        }
+        let mut inputs = base_inputs.clone();
+        inputs.push(TensorValue::i32(vec![b, t], tokens));
+        inputs.push(TensorValue::f32(vec![b, t], mask));
+        let outs = exec.run(artifact, &inputs)?;
+        let nll = outs[0].as_f32();
+        let cnt = outs[1].as_f32();
+        for (row, &(ei, oi, _, _)) in chunk.iter().enumerate() {
+            scores[ei][oi] = nll[row] as f64 / cnt[row].max(1.0) as f64;
+        }
+    }
+
+    let mut correct = 0usize;
+    for (ei, ex) in task.examples.iter().enumerate() {
+        let pred = scores[ei]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if pred == ex.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / task.examples.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zeroshot::ZeroShotExample;
+    use crate::runtime::MockExecutor;
+
+    fn toy_task() -> ZeroShotTask {
+        // 3 examples, 2 options each; "correct" options are all-sevens,
+        // which the mock scores low.
+        let mk = |correct: usize| {
+            let options: Vec<Vec<i32>> = (0..2)
+                .map(|o| vec![if o == correct { 7 } else { 1 }; 8])
+                .collect();
+            let masks = vec![vec![1.0f32; 8]; 2];
+            ZeroShotExample { options, masks, correct }
+        };
+        ZeroShotTask { name: "toy", examples: vec![mk(0), mk(1), mk(0)] }
+    }
+
+    #[test]
+    fn picks_lowest_nll_option() {
+        let mock = MockExecutor::empty().on("nll", |ins| {
+            let tokens = ins[ins.len() - 2].as_i32();
+            let b = ins[ins.len() - 2].shape()[0];
+            let t = ins[ins.len() - 2].shape()[1];
+            let nll: Vec<f32> = (0..b)
+                .map(|r| if tokens[r * t] == 7 { 1.0 } else { 5.0 })
+                .collect();
+            vec![
+                TensorValue::f32(vec![b], nll),
+                TensorValue::f32(vec![b], vec![t as f32; b]),
+            ]
+        });
+        let params = Params::new(vec![]);
+        let acc = zero_shot_accuracy(&mock, "nll", &params, &toy_task(), 4, 8).unwrap();
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn handles_batch_padding() {
+        // batch 4 with 6 scoring rows -> 2 batches, last padded
+        let mock = MockExecutor::empty().on("nll", |ins| {
+            let b = ins[ins.len() - 2].shape()[0];
+            vec![
+                TensorValue::f32(vec![b], vec![1.0; b]),
+                TensorValue::f32(vec![b], vec![8.0; b]),
+            ]
+        });
+        let params = Params::new(vec![]);
+        let acc = zero_shot_accuracy(&mock, "nll", &params, &toy_task(), 4, 8).unwrap();
+        assert_eq!(mock.call_count("nll"), 2);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

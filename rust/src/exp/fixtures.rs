@@ -1,0 +1,183 @@
+//! Shared experiment fixtures: engine + per-model (params, corpus,
+//! calibration) caches, plus the size knobs that distinguish `quick`
+//! smoke runs from the full recorded runs.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::{collect_calibration, synth_lm_params, CalibrationSet, Params};
+use crate::qpeft::AdamW;
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::{Engine, Executor, TensorValue};
+use crate::tensor::Mat;
+
+pub struct LmFixture {
+    pub cfg: ModelCfg,
+    pub params: Params,
+    pub corpus: Corpus,
+    pub calib: CalibrationSet,
+}
+
+pub struct ExpCtx {
+    pub engine: Engine,
+    pub quick: bool,
+    /// base seed for the whole suite (paper: mean±std over 3 seeds)
+    pub seed: u64,
+    fixtures: HashMap<String, Rc<LmFixture>>,
+}
+
+impl ExpCtx {
+    pub fn new(quick: bool) -> Result<Self> {
+        Ok(ExpCtx { engine: Engine::discover()?, quick, seed: 0, fixtures: HashMap::new() })
+    }
+
+    /// Paper setting: three random seeds for SRR's probe (§5.1).
+    pub fn srr_seeds(&self) -> Vec<u64> {
+        if self.quick {
+            vec![self.seed]
+        } else {
+            vec![self.seed, self.seed + 1, self.seed + 2]
+        }
+    }
+
+    /// Number of held-out eval batches for PPL.
+    pub fn eval_batches(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            6
+        }
+    }
+
+    pub fn calib_rows(&self, cfg: &ModelCfg) -> usize {
+        // at least 2x the widest Gram (d_ff) so exact scaling is full rank
+        let base = 2 * cfg.d_ff;
+        if self.quick {
+            base
+        } else {
+            (2 * cfg.d_ff).max(256)
+        }
+    }
+
+    /// Training steps for the fixture model (0 = keep synthetic weights,
+    /// used for the structure-only analyses on `base`, which has no
+    /// train artifact by design — see DESIGN.md §2).
+    fn train_steps(&self, model: &str) -> usize {
+        let full = match model {
+            "tiny" => 400,
+            "small" => 220,
+            _ => 0,
+        };
+        if self.quick {
+            full.min(60)
+        } else {
+            full
+        }
+    }
+
+    /// Build (or fetch) the fixture for a model in the manifest.
+    ///
+    /// The spiky synthetic init only shapes the starting spectra; models
+    /// with a `lm_train_*` artifact are then actually *trained* on the
+    /// corpus (rust AdamW over the AOT value-and-grad graph) so that the
+    /// PPL experiments measure a fitted model — quantization must damage
+    /// it and QER/SRR must recover it, the paper's Table 1 dynamic.
+    pub fn lm(&mut self, model: &str) -> Result<Rc<LmFixture>> {
+        if let Some(f) = self.fixtures.get(model) {
+            return Ok(f.clone());
+        }
+        let cfg = self.engine.manifest().model(model)?.clone();
+        let mut params = synth_lm_params(&cfg, 1000 + self.seed, cfg.vocab);
+        let corpus = Corpus::generate(cfg.vocab, 60_000.max(cfg.seq_len * 400), 2000 + self.seed);
+        let b = self.engine.manifest().lm_batch;
+
+        let steps = self.train_steps(model);
+        let train_artifact = format!("lm_train_{model}");
+        if steps > 0 && self.engine.manifest().artifacts.contains_key(&train_artifact) {
+            train_lm(&self.engine, &cfg, &mut params, &corpus, &train_artifact, b, steps, 3e-3)?;
+        }
+
+        let rows = self.calib_rows(&cfg);
+        let n_batches = rows.div_ceil(b * cfg.seq_len) + 1;
+        let batches: Vec<Vec<i32>> =
+            (0..n_batches).map(|i| corpus.train_batch(b, cfg.seq_len, 90_000 + i)).collect();
+        let calib = collect_calibration(&params, &cfg, &batches, b, cfg.seq_len, rows);
+        let fixture = Rc::new(LmFixture { cfg, params, corpus, calib });
+        self.fixtures.insert(model.to_string(), fixture.clone());
+        Ok(fixture)
+    }
+
+    /// Held-out eval token batches for a model.
+    pub fn ppl_batches(&mut self, model: &str) -> Result<Vec<Vec<i32>>> {
+        let f = self.lm(model)?;
+        let b = self.engine.manifest().lm_batch;
+        let mut batches = f.corpus.eval_batches(b, f.cfg.seq_len);
+        batches.truncate(self.eval_batches());
+        Ok(batches)
+    }
+}
+
+/// Train `params` in place through the AOT `lm_train_*` artifact
+/// (full-parameter AdamW in rust). Shared by the fixtures and the
+/// end-to-end example.
+#[allow(clippy::too_many_arguments)]
+pub fn train_lm(
+    engine: &Engine,
+    cfg: &ModelCfg,
+    params: &mut Params,
+    corpus: &Corpus,
+    train_artifact: &str,
+    b: usize,
+    steps: usize,
+    lr: f32,
+) -> Result<(f32, f32)> {
+    let order = Params::param_order(cfg);
+    let mut mats: Vec<Mat> = order
+        .iter()
+        .map(|n| {
+            let v = params.get(n).unwrap();
+            let sh = v.shape();
+            if sh.len() == 1 {
+                Mat::from_vec(1, sh[0], v.as_f32().to_vec())
+            } else {
+                v.to_mat()
+            }
+        })
+        .collect();
+    let mut opt = AdamW::for_mats(lr, &mats.iter().collect::<Vec<_>>());
+    opt.weight_decay = 0.0;
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..steps {
+        let mut inputs: Vec<TensorValue> = order
+            .iter()
+            .zip(&mats)
+            .map(|(n, m)| {
+                TensorValue::f32(Params::param_shape(n, cfg, cfg.vocab), m.data.clone())
+            })
+            .collect();
+        inputs.push(TensorValue::i32(vec![b, cfg.seq_len], corpus.train_batch(b, cfg.seq_len, step)));
+        let outs = engine.run(train_artifact, &inputs)?;
+        let loss = outs[0].scalar();
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        let grads: Vec<Mat> = outs[1..]
+            .iter()
+            .zip(&mats)
+            .map(|(g, m)| Mat::from_vec(m.rows, m.cols, g.as_f32().to_vec()))
+            .collect();
+        let grad_refs: Vec<&Mat> = grads.iter().collect();
+        let mut mat_refs: Vec<&mut Mat> = mats.iter_mut().collect();
+        opt.update(&mut mat_refs, &grad_refs);
+    }
+    for (n, m) in order.iter().zip(&mats) {
+        params.set(n, TensorValue::f32(Params::param_shape(n, cfg, cfg.vocab), m.data.clone()));
+    }
+    eprintln!("  [fixture {}: trained {steps} steps, loss {first:.3} -> {last:.3}]", cfg.name);
+    Ok((first, last))
+}

@@ -1,0 +1,81 @@
+//! Experiment registry: regenerates every table and figure of the paper
+//! (DESIGN.md §5 maps exp ids → paper artifacts).
+//!
+//! Every experiment returns printable [`Table`]s shaped like the paper's
+//! rows/series. `cargo bench` runs the full suite; individual experiments
+//! run via `cargo bench -- --exp table1` or `srr bench table1`.
+//!
+//! `quick` mode shrinks workloads (fewer seeds/steps/batches) so the
+//! suite smoke-runs in CI; the recorded EXPERIMENTS.md numbers come from
+//! full mode.
+
+pub mod fixtures;
+pub mod ptq;
+pub mod rank;
+pub mod qpeft_exp;
+pub mod perf;
+
+use anyhow::Result;
+
+pub use fixtures::ExpCtx;
+
+use crate::util::bench::Table;
+
+pub type ExpFn = fn(&mut ExpCtx) -> Result<Vec<Table>>;
+
+/// (id, paper artifact, runner)
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("table1", "Tab.1 WikiText2-PPL 3-bit MXINT, QER methods ± SRR", ptq::table1 as ExpFn),
+        ("table2", "Tab.2/13 zero-shot accuracy, QERA-exact ± SRR", ptq::table2),
+        ("table5", "Tab.5 GPTQ-3bit / QuIP#-2bit ± SRR", ptq::table5),
+        ("table15", "Tab.15 normalized eRank across scales", ptq::table15),
+        ("table16", "Tab.16 ODLRI-like fixed split vs SRR", ptq::table16),
+        ("fig7", "Fig.7 layer-wise |W-Q-LR| under S=I (ZeroQuant-V2)", ptq::fig7),
+        ("fig2", "Fig.2/6 reconstruction error vs surrogate over k", rank::fig2),
+        ("fig3", "Fig.3a singular spectrum of the packed adapter", rank::fig3),
+        ("fig5", "Fig.5 k* distribution by projection", rank::fig5),
+        ("table12", "Tab.12 k* stability across probe seeds", rank::table12),
+        ("table20", "Tab.20/21 Assumption 4.1/4.2 validation", rank::table20),
+        ("table3", "Tab.3 GLUE-sim QPEFT 4/3/2-bit", qpeft_exp::table3),
+        ("table4", "Tab.4 CLM-PPL + GSM-sim accuracy QPEFT", qpeft_exp::table4),
+        ("table6", "Tab.6/17 gamma / SGP gradient-scaling ablation", qpeft_exp::table6),
+        ("table18", "Tab.18 SGP alpha sensitivity", qpeft_exp::table18),
+        ("table19", "Tab.19 QERA ± SGP", qpeft_exp::table19),
+        ("fig4", "Fig.4/8/9 QPEFT training-loss curves", qpeft_exp::fig4),
+        ("table11", "Tab.11 computational overhead QER vs SRR", perf::table11),
+        ("perf", "§Perf kernel / pipeline / engine hot-path benches", perf::perf_suite),
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    for (name, _, f) in registry() {
+        if name == id {
+            return f(ctx);
+        }
+    }
+    anyhow::bail!("unknown experiment '{id}' (see `srr bench --list`)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_complete() {
+        let reg = registry();
+        let mut ids: Vec<&str> = reg.iter().map(|(n, _, _)| *n).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+        for required in [
+            "table1", "table2", "table3", "table4", "table5", "table6",
+            "table11", "table12", "table15", "table16", "table18", "table19",
+            "fig2", "fig3", "fig4", "fig5", "fig7", "perf",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! PTQ experiments: Tables 1, 2, 5, 15, 16 and Figure 7.
+
+use anyhow::Result;
+
+use crate::coordinator::{run_ptq, Metrics, QuantizerSpec};
+use crate::data::zeroshot::ZeroShotTask;
+use crate::eval::{perplexity, zero_shot_accuracy};
+use crate::linalg::effective_rank;
+use crate::model::Params;
+use crate::qer::{Method, QerConfig};
+use crate::runtime::Executor;
+use crate::scaling::ScalingKind;
+use crate::util::bench::{f, pm, Table};
+use crate::util::stats;
+
+use super::fixtures::ExpCtx;
+
+/// The ranks we sweep. The paper uses r ∈ {32, 64} on 4096-dim models
+/// (r/d ≈ 0.8–1.6%); at our model widths the equivalent budgets are
+/// r ∈ {4, 8} — recorded in EXPERIMENTS.md as the scaled setting.
+pub const RANKS: [usize; 2] = [4, 8];
+
+/// PPL-bearing experiments run on the *trained* models (tiny, small);
+/// `base` has no train artifact by design and is used only for the
+/// structure/selection analyses (fig5, table15) where training is not
+/// required. See DESIGN.md §2.
+pub fn models_for(_ctx: &ExpCtx) -> Vec<&'static str> {
+    // PPL experiments run on the trained `tiny` model; `small` PPL runs
+    // are provided by the e2e example, and `base` serves the
+    // structure-only analyses (fig5/table15). Budget note in EXPERIMENTS.md.
+    vec!["tiny"]
+}
+
+fn ppl_of(
+    ctx: &mut ExpCtx,
+    model: &str,
+    params: &Params,
+) -> Result<f64> {
+    let batches = ctx.ppl_batches(model)?;
+    let b = ctx.engine.manifest().lm_batch;
+    let t = ctx.engine.manifest().model(model)?.seq_len;
+    perplexity(&ctx.engine, &format!("lm_nll_{model}"), params, &batches, b, t)
+}
+
+/// Run one (method, scaling, rank, seed) PTQ cell, returning PPL.
+#[allow(clippy::too_many_arguments)]
+fn ptq_ppl(
+    ctx: &mut ExpCtx,
+    model: &str,
+    quantizer: QuantizerSpec,
+    method: Method,
+    scaling: ScalingKind,
+    rank: usize,
+    seed: u64,
+) -> Result<f64> {
+    let fx = ctx.lm(model)?;
+    let mut cfg = QerConfig::new(method, rank, scaling);
+    cfg.seed = seed;
+    let metrics = Metrics::new();
+    let out = run_ptq(&fx.params, &fx.cfg, &fx.calib, quantizer, &cfg, &metrics);
+    ppl_of(ctx, model, &out.params)
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    (stats::mean(xs), stats::std_dev(xs))
+}
+
+/// Table 1: PPL under 3-bit MXINT for {LQER, QERA-approx, QERA-exact}
+/// with and without SRR, across models and ranks.
+pub fn table1(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    // Bit-width substitution (DESIGN.md §2): our models are 100–1000×
+    // smaller than the paper's 7B+ checkpoints and far more robust to a
+    // given relative weight error, so the damage-equivalent of the
+    // paper's 3-bit setting is 2-bit MXINT here (3-bit leaves the PPL
+    // delta within noise at this scale; measured in EXPERIMENTS.md).
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let scalings = [
+        ("LQER", ScalingKind::DiagRms),
+        ("QERA-approx", ScalingKind::DiagAbsMean),
+        ("QERA-exact", ScalingKind::Exact),
+    ];
+    let mut tables = vec![];
+    for model in models_for(ctx) {
+        let mut t = Table::new(
+            &format!("Table 1 analog — PPL, 2-bit MXINT (2.25b eff; damage-equiv of paper 3-bit), model={model}"),
+            &["method", "r=4", "r=8"],
+        );
+        // reference rows
+        let fx = ctx.lm(model)?;
+        let bf16 = ppl_of(ctx, model, &fx.params.clone())?;
+        t.row(vec!["BF16".into(), f(bf16, 2), f(bf16, 2)]);
+        let wonly = ptq_ppl(ctx, model, quant, Method::WOnly, ScalingKind::Identity, 0, 0)?;
+        t.row(vec!["w-only".into(), f(wonly, 2), f(wonly, 2)]);
+
+        for (label, kind) in scalings {
+            let mut base_cells = vec![];
+            let mut srr_cells = vec![];
+            for rank in RANKS {
+                let base = ptq_ppl(ctx, model, quant, Method::Qer, kind, rank, 0)?;
+                base_cells.push(f(base, 2));
+                let ppls: Vec<f64> = ctx
+                    .srr_seeds()
+                    .iter()
+                    .map(|&s| ptq_ppl(ctx, model, quant, Method::QerSrr, kind, rank, s))
+                    .collect::<Result<_>>()?;
+                let (m, s) = mean_std(&ppls);
+                srr_cells.push(pm(m, s, 2));
+            }
+            t.row(vec![label.into(), base_cells[0].clone(), base_cells[1].clone()]);
+            t.row(vec![format!("{label} w/ SRR"), srr_cells[0].clone(), srr_cells[1].clone()]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Table 2 / 13: zero-shot accuracy over the five probe tasks.
+pub fn table2(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let n_examples = if ctx.quick { 10 } else { 24 };
+    let mut tables = vec![];
+    let models: Vec<&str> = vec!["tiny"];
+    for model in models {
+        let fx = ctx.lm(model)?;
+        let tasks = ZeroShotTask::all(&fx.corpus, fx.cfg.seq_len, n_examples, 77);
+        let b = ctx.engine.manifest().lm_batch;
+        let t_len = fx.cfg.seq_len;
+        let artifact = format!("lm_nll_{model}");
+
+        let mut t = Table::new(
+            &format!("Table 2 analog — zero-shot accuracy (%), 2-bit MXINT r=8, model={model}"),
+            &["method", "hellaswag-sim", "winogrande-sim", "boolq-sim", "mmlu-sim", "bbh-sim", "avg"],
+        );
+        let eval_model = |ctx: &ExpCtx, params: &Params| -> Result<Vec<f64>> {
+            tasks
+                .iter()
+                .map(|task| {
+                    zero_shot_accuracy(&ctx.engine, &artifact, params, task, b, t_len)
+                        .map(|a| a * 100.0)
+                })
+                .collect()
+        };
+        let push = |name: &str, accs: Vec<f64>, t: &mut Table| {
+            let avg = stats::mean(&accs);
+            let mut cells = vec![name.to_string()];
+            cells.extend(accs.iter().map(|&a| f(a, 1)));
+            cells.push(f(avg, 1));
+            t.row(cells);
+        };
+
+        push("BF16", eval_model(ctx, &fx.params.clone())?, &mut t);
+        let metrics = Metrics::new();
+        let wonly = run_ptq(
+            &fx.params, &fx.cfg, &fx.calib, quant,
+            &QerConfig::new(Method::WOnly, 0, ScalingKind::Identity), &metrics,
+        );
+        push("w-only", eval_model(ctx, &wonly.params)?, &mut t);
+        let qera = run_ptq(
+            &fx.params, &fx.cfg, &fx.calib, quant,
+            &QerConfig::new(Method::Qer, 8, ScalingKind::Exact), &metrics,
+        );
+        push("QERA-exact", eval_model(ctx, &qera.params)?, &mut t);
+        let srr = run_ptq(
+            &fx.params, &fx.cfg, &fx.calib, quant,
+            &QerConfig::new(Method::QerSrr, 8, ScalingKind::Exact), &metrics,
+        );
+        push("w/ SRR", eval_model(ctx, &srr.params)?, &mut t);
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Table 5: alternative quantizers (GPTQ 3-bit, QuIP#-sim 2-bit).
+pub fn table5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let quants = [
+        ("GPTQ(2-bit)", QuantizerSpec::Gptq { bits: 2, group: 128 }),
+        ("QuIP#-sim(2-bit)", QuantizerSpec::QuipSharp { bits: 2 }),
+    ];
+    let scalings = [
+        ("LQER", ScalingKind::DiagRms),
+        ("QERA-approx", ScalingKind::DiagAbsMean),
+        ("QERA-exact", ScalingKind::Exact),
+    ];
+    let mut t = Table::new(
+        &format!("Table 5 analog — PPL under GPTQ / QuIP#-sim, r=8, model={model}"),
+        &["method", "GPTQ(2-bit)", "QuIP#-sim(2-bit)"],
+    );
+    let fx = ctx.lm(model)?;
+    let bf16 = ppl_of(ctx, model, &fx.params.clone())?;
+    t.row(vec!["BF16".into(), f(bf16, 2), f(bf16, 2)]);
+    let mut wrow = vec!["w-only".into()];
+    for (_, q) in quants {
+        wrow.push(f(ptq_ppl(ctx, model, q, Method::WOnly, ScalingKind::Identity, 0, 0)?, 2));
+    }
+    t.row(wrow);
+    for (label, kind) in scalings {
+        let mut base_row = vec![label.to_string()];
+        let mut srr_row = vec![format!("{label} w/ SRR")];
+        for (_, q) in quants {
+            base_row.push(f(ptq_ppl(ctx, model, q, Method::Qer, kind, 8, 0)?, 2));
+            let ppls: Vec<f64> = ctx
+                .srr_seeds()
+                .iter()
+                .map(|&s| ptq_ppl(ctx, model, q, Method::QerSrr, kind, 8, s))
+                .collect::<Result<_>>()?;
+            let (m, s) = mean_std(&ppls);
+            srr_row.push(pm(m, s, 2));
+        }
+        t.row(base_row);
+        t.row(srr_row);
+    }
+    Ok(vec![t])
+}
+
+/// Table 15: dimension-normalized effective rank of SW across scales.
+pub fn table15(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let models: Vec<&str> = if ctx.quick { vec!["tiny"] } else { vec!["tiny", "base"] };
+    let projections = [("Key", "wk"), ("Output", "wo"), ("Down", "down")];
+    let mut t = Table::new(
+        "Table 15 analog — eRank(SW)/d by projection",
+        &{
+            let mut h = vec!["projection"];
+            h.extend(models.iter().copied());
+            h
+        },
+    );
+    let mut rows: Vec<Vec<String>> =
+        projections.iter().map(|(p, _)| vec![p.to_string()]).collect();
+    for model in &models {
+        let fx = ctx.lm(model)?;
+        for (ri, (_, kind)) in projections.iter().enumerate() {
+            // average over layers (layer 0 and mid) for stability
+            let mut vals = vec![];
+            for layer in [0, fx.cfg.n_layers / 2] {
+                let name = format!("l{layer}.{kind}");
+                let w = fx.params.get_mat(&name)?;
+                let s = fx.calib.scaling_for(&name, ScalingKind::Exact);
+                let sw = s.apply(&w);
+                // full spectrum via the small-side Gram: σ_i = sqrt(λ_i(G))
+                let gram = if sw.rows <= sw.cols {
+                    crate::tensor::matmul_nt(&sw, &sw)
+                } else {
+                    crate::tensor::matmul_tn(&sw, &sw)
+                };
+                let (_, lam) = crate::linalg::eigh(&gram);
+                let sv: Vec<f32> = lam.iter().map(|&l| l.max(0.0).sqrt()).collect();
+                vals.push(effective_rank(&sv) / w.rows.min(w.cols) as f64);
+            }
+            rows[ri].push(f(stats::mean(&vals), 3));
+        }
+    }
+    for r in rows {
+        t.row(r);
+    }
+    Ok(vec![t])
+}
+
+/// Table 16: ODLRI-like fixed k=r/2 split vs adaptive SRR (same QERA-exact setting).
+pub fn table16(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let mut t = Table::new(
+        &format!("Table 16 analog — fixed-split (ODLRI-like) vs SRR, PPL, r=4, model={model}"),
+        &["method", "PPL"],
+    );
+    let odlri = ptq_ppl(ctx, model, quant, Method::FixedSplitHalf, ScalingKind::Exact, 4, 0)?;
+    let srr = ptq_ppl(ctx, model, quant, Method::QerSrr, ScalingKind::Exact, 4, 0)?;
+    t.row(vec!["ODLRI-like (k=r/2)".into(), f(odlri, 2)]);
+    t.row(vec!["SRR (k=k*)".into(), f(srr, 2)]);
+    Ok(vec![t])
+}
+
+/// Figure 7: layer-wise full reconstruction error under S = I.
+pub fn fig7(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let fx = ctx.lm(model)?;
+    let metrics = Metrics::new();
+    let qer = run_ptq(
+        &fx.params, &fx.cfg, &fx.calib, quant,
+        &QerConfig::new(Method::Qer, 8, ScalingKind::Identity), &metrics,
+    );
+    let srr = run_ptq(
+        &fx.params, &fx.cfg, &fx.calib, quant,
+        &QerConfig::new(Method::QerSrr, 8, ScalingKind::Identity), &metrics,
+    );
+    let mut t = Table::new(
+        &format!("Fig. 7 analog — layer-wise |W-Q-LR|_F under ZeroQuant-V2 (S=I), r=8, model={model}"),
+        &["layer", "QER", "SRR", "winner"],
+    );
+    let mut srr_wins = 0usize;
+    for (a, b) in qer.reports.iter().zip(&srr.reports) {
+        let win = if b.weight_err <= a.weight_err { "SRR" } else { "QER" };
+        if win == "SRR" {
+            srr_wins += 1;
+        }
+        t.row(vec![a.name.clone(), f(a.weight_err, 4), f(b.weight_err, 4), win.into()]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        f(qer.total_weight_err(), 4),
+        f(srr.total_weight_err(), 4),
+        format!("SRR wins {srr_wins}/{}", qer.reports.len()),
+    ]);
+    Ok(vec![t])
+}

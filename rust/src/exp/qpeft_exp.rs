@@ -1,0 +1,471 @@
+//! QPEFT experiments: Tables 3, 4, 6, 18, 19 and Figure 4.
+
+use anyhow::Result;
+
+use crate::coordinator::QuantizerSpec;
+use crate::data::glue_sim::{GlueTask, Metric};
+use crate::data::gsm_sim::GsmSim;
+use crate::eval::{glue_score, gsm_exact_match, perplexity};
+use crate::model::Params;
+use crate::qpeft::{init_qpeft, GradScale, QpeftInit, QpeftState, QpeftTrainer};
+use crate::runtime::{Executor, TensorValue};
+use crate::tensor::{matmul, Mat};
+use crate::util::bench::{f, Table};
+use crate::util::stats;
+use crate::util::Rng;
+
+use super::fixtures::ExpCtx;
+
+/// The paper's bit → rank pairing (§A.3): 4/3-bit GLUE use r=8, the
+/// 2-bit GLUE + GSM settings use r=64. (Artifacts exist for both.)
+fn rank_for_bits(bits: u32) -> usize {
+    if bits == 2 {
+        64
+    } else {
+        8
+    }
+}
+
+fn steps(ctx: &ExpCtx, full: usize) -> usize {
+    if ctx.quick {
+        full.min(12)
+    } else {
+        full
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GLUE-sim machinery
+// ---------------------------------------------------------------------------
+
+struct GlueEnv {
+    tasks: Vec<GlueTask>,
+    batch: usize,
+    seq: usize,
+}
+
+fn glue_env(ctx: &mut ExpCtx) -> Result<GlueEnv> {
+    let m = ctx.engine.manifest();
+    let (batch, seq) = (m.cls_batch, m.cls_seq);
+    let vocab = m.model("tiny")?.vocab;
+    let (n_train, n_dev) = if ctx.quick { (48, 32) } else { (256, 64) };
+    Ok(GlueEnv { tasks: GlueTask::all(vocab, seq, n_train, n_dev, 9090), batch, seq })
+}
+
+fn head_init(cfg: &crate::runtime::manifest::ModelCfg, n_out: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::randn(cfg.d_model, n_out, 0.02, &mut rng)
+}
+
+/// Train one (task, init, bits, scale) configuration; returns
+/// (metric score, loss curve).
+#[allow(clippy::too_many_arguments)]
+fn run_glue(
+    ctx: &mut ExpCtx,
+    env: &GlueEnv,
+    task: &GlueTask,
+    init: QpeftInit,
+    bits: u32,
+    scale: GradScale,
+    lr: f32,
+    n_steps: usize,
+) -> Result<(f64, Vec<f32>)> {
+    let fx = ctx.lm("tiny")?;
+    let rank = rank_for_bits(bits);
+    let reg = task.metric == Metric::PearsonSpearman;
+    let (train_art, fwd_art) = if reg {
+        (format!("qpeft_cls_train_reg_tiny_r{rank}"), format!("qpeft_cls_fwd_reg_tiny_r{rank}"))
+    } else {
+        (format!("qpeft_cls_train_tiny_r{rank}"), format!("qpeft_cls_fwd_tiny_r{rank}"))
+    };
+    let n_out = if reg { 1 } else { ctx.engine.manifest().cls_classes };
+    let quant = QuantizerSpec::Mxint { bits, block: 32 };
+    let state = init_qpeft(
+        &fx.params, &fx.cfg, &fx.calib, quant, init, rank,
+        head_init(&fx.cfg, n_out, 777), ctx.seed,
+    );
+    let mut trainer = QpeftTrainer::new(&ctx.engine, &train_art, state, lr, scale);
+
+    for step in 0..n_steps {
+        let (toks, labels_i, labels_f) =
+            GlueTask::batch(&task.train, step * env.batch, env.batch, env.seq);
+        let tokens = TensorValue::i32(vec![env.batch, env.seq], toks);
+        let labels = if reg {
+            TensorValue::f32(vec![env.batch], labels_f)
+        } else {
+            TensorValue::i32(vec![env.batch], labels_i)
+        };
+        trainer.step(&[tokens, labels])?;
+    }
+
+    // dev evaluation
+    let mut logits = vec![0.0f32; task.dev.len() * n_out];
+    let mut i = 0;
+    while i < task.dev.len() {
+        let (toks, _, _) = GlueTask::batch(&task.dev, i, env.batch, env.seq);
+        let tokens = TensorValue::i32(vec![env.batch, env.seq], toks);
+        let out = trainer.eval(&fwd_art, &[tokens])?;
+        let data = out.as_f32();
+        for row in 0..env.batch {
+            if i + row < task.dev.len() {
+                logits[(i + row) * n_out..(i + row + 1) * n_out]
+                    .copy_from_slice(&data[row * n_out..(row + 1) * n_out]);
+            }
+        }
+        i += env.batch;
+    }
+    let score = glue_score(task.metric, &logits, n_out, &task.dev);
+    Ok((score, trainer.losses))
+}
+
+const GLUE_METHODS: [(QpeftInit, GradScale); 5] = [
+    (QpeftInit::QLoRA, GradScale::None),
+    (QpeftInit::LoftQ { iters: 5 }, GradScale::None),
+    (QpeftInit::Qera, GradScale::None),
+    (QpeftInit::LqLora { iters: 5 }, GradScale::None),
+    (QpeftInit::Srr, GradScale::Fixed { gamma: 0.1 }),
+];
+
+fn glue_tasks_subset<'a>(ctx: &ExpCtx, env: &'a GlueEnv, all: bool) -> Vec<&'a GlueTask> {
+    if ctx.quick {
+        env.tasks.iter().take(2).collect()
+    } else if all {
+        env.tasks.iter().collect()
+    } else {
+        // metric-diverse subset for the ablations (budget)
+        env.tasks
+            .iter()
+            .filter(|t| matches!(t.name, "MNLI-sim" | "RTE-sim" | "CoLA-sim" | "STSB-sim"))
+            .collect()
+    }
+}
+
+/// Table 3: GLUE-sim under 4/3/2-bit MXINT across QPEFT methods.
+pub fn table3(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let env = glue_env(ctx)?;
+    let n_steps = steps(ctx, 40);
+    let mut tables = vec![];
+    let bit_settings: Vec<u32> = if ctx.quick { vec![2] } else { vec![4, 3, 2] };
+
+    // 16-bit references (LoRA via identity backbone)
+    {
+        let tasks = glue_tasks_subset(ctx, &env, true);
+        let mut t = Table::new(
+            "Table 3 analog — 16-bit reference (LoRA, rank 8)",
+            &{
+                let mut h = vec!["method"];
+                h.extend(tasks.iter().map(|t| t.name));
+                h.push("avg");
+                h
+            },
+        );
+        let mut cells = vec!["LoRA(16b)".to_string()];
+        let mut scores = vec![];
+        for task in &tasks {
+            let (s, _) = run_glue(ctx, &env, task, QpeftInit::LoRA, 4, GradScale::None, 1e-3, n_steps)?;
+            scores.push(s);
+            cells.push(f(s, 1));
+        }
+        cells.push(f(stats::mean(&scores), 1));
+        t.row(cells);
+        tables.push(t);
+    }
+
+    for bits in bit_settings {
+        let rank = rank_for_bits(bits);
+        let tasks = glue_tasks_subset(ctx, &env, true);
+        let mut t = Table::new(
+            &format!("Table 3 analog — GLUE-sim, {bits}-bit MXINT ({}.25b eff), rank {rank}", bits),
+            &{
+                let mut h = vec!["method"];
+                h.extend(tasks.iter().map(|t| t.name));
+                h.push("avg");
+                h
+            },
+        );
+        for (init, scale) in GLUE_METHODS {
+            let mut cells = vec![init.label()];
+            if init == QpeftInit::Srr {
+                cells[0] = "SRR".into();
+            }
+            let mut scores = vec![];
+            for task in &tasks {
+                let (s, _) = run_glue(ctx, &env, task, init, bits, scale, 1e-3, n_steps)?;
+                scores.push(s);
+                cells.push(f(s, 1));
+            }
+            cells.push(f(stats::mean(&scores), 1));
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Table 6/17: γ ∈ {0, 0.1, 0.5, 1} vs SGP(α=5) on SRR-based QPEFT.
+pub fn table6(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    gradient_scaling_grid(
+        ctx,
+        "Table 6/17 analog — SRR gradient scaling ablation",
+        &[
+            ("gamma=0", GradScale::Fixed { gamma: 0.0 }),
+            ("gamma=1", GradScale::None),
+            ("gamma=0.5", GradScale::Fixed { gamma: 0.5 }),
+            ("gamma=0.1", GradScale::Fixed { gamma: 0.1 }),
+            ("SGP(a=5)", GradScale::Sgp { alpha: 5.0 }),
+        ],
+        QpeftInit::Srr,
+    )
+}
+
+/// Table 18: SGP α sensitivity.
+pub fn table18(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    gradient_scaling_grid(
+        ctx,
+        "Table 18 analog — SGP alpha sensitivity (SRR-based)",
+        &[
+            ("SGP(a=0)", GradScale::Sgp { alpha: 0.0 }),
+            ("SGP(a=5)", GradScale::Sgp { alpha: 5.0 }),
+            ("SGP(a=10)", GradScale::Sgp { alpha: 10.0 }),
+        ],
+        QpeftInit::Srr,
+    )
+}
+
+/// Table 19: SGP is not a generic add-on — QERA ± SGP.
+pub fn table19(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    gradient_scaling_grid(
+        ctx,
+        "Table 19 analog — QERA with and without SGP",
+        &[
+            ("QERA", GradScale::None),
+            // For QERA (k*=0) SGP has no preserved block to scale; the
+            // paper applies it to the leading adapter directions instead —
+            // we emulate by treating the top half of the rank as "preserved".
+            ("QERA+SGP", GradScale::Sgp { alpha: 5.0 }),
+        ],
+        QpeftInit::Qera,
+    )
+}
+
+fn gradient_scaling_grid(
+    ctx: &mut ExpCtx,
+    title: &str,
+    variants: &[(&str, GradScale)],
+    init: QpeftInit,
+) -> Result<Vec<Table>> {
+    let env = glue_env(ctx)?;
+    let n_steps = steps(ctx, 40);
+    let bit_settings: Vec<u32> = if ctx.quick { vec![2] } else { vec![4, 2] };
+    let mut tables = vec![];
+    for bits in bit_settings {
+        let tasks = glue_tasks_subset(ctx, &env, false);
+        let mut t = Table::new(
+            &format!("{title} — {bits}-bit, rank {}", rank_for_bits(bits)),
+            &{
+                let mut h = vec!["scaling"];
+                h.extend(tasks.iter().map(|t| t.name));
+                h.push("avg");
+                h
+            },
+        );
+        for (label, scale) in variants {
+            let mut cells = vec![label.to_string()];
+            let mut scores = vec![];
+            for task in &tasks {
+                let patched_init = init;
+                let (s, _) = run_glue_with_k_override(
+                    ctx, &env, task, patched_init, bits, *scale, 1e-3, n_steps,
+                )?;
+                scores.push(s);
+                cells.push(f(s, 1));
+            }
+            cells.push(f(stats::mean(&scores), 1));
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Like run_glue, but when the init has no preserved block (QERA) and SGP
+/// is requested, mark the top half of the rank as preserved (Table 19's
+/// "apply the same SGP procedure to QERA" protocol).
+#[allow(clippy::too_many_arguments)]
+fn run_glue_with_k_override(
+    ctx: &mut ExpCtx,
+    env: &GlueEnv,
+    task: &GlueTask,
+    init: QpeftInit,
+    bits: u32,
+    scale: GradScale,
+    lr: f32,
+    n_steps: usize,
+) -> Result<(f64, Vec<f32>)> {
+    if init == QpeftInit::Qera && matches!(scale, GradScale::Sgp { .. }) {
+        // custom path: init then override k_star
+        let fx = ctx.lm("tiny")?;
+        let rank = rank_for_bits(bits);
+        let reg = task.metric == Metric::PearsonSpearman;
+        let (train_art, fwd_art) = if reg {
+            (format!("qpeft_cls_train_reg_tiny_r{rank}"), format!("qpeft_cls_fwd_reg_tiny_r{rank}"))
+        } else {
+            (format!("qpeft_cls_train_tiny_r{rank}"), format!("qpeft_cls_fwd_tiny_r{rank}"))
+        };
+        let n_out = if reg { 1 } else { ctx.engine.manifest().cls_classes };
+        let quant = QuantizerSpec::Mxint { bits, block: 32 };
+        let mut state = init_qpeft(
+            &fx.params, &fx.cfg, &fx.calib, quant, init, rank,
+            head_init(&fx.cfg, n_out, 777), ctx.seed,
+        );
+        for a in &mut state.adapters {
+            a.k_star = rank / 2;
+        }
+        let mut trainer = QpeftTrainer::new(&ctx.engine, &train_art, state, lr, scale);
+        for step in 0..n_steps {
+            let (toks, li, lf) = GlueTask::batch(&task.train, step * env.batch, env.batch, env.seq);
+            let tokens = TensorValue::i32(vec![env.batch, env.seq], toks);
+            let labels = if reg {
+                TensorValue::f32(vec![env.batch], lf)
+            } else {
+                TensorValue::i32(vec![env.batch], li)
+            };
+            trainer.step(&[tokens, labels])?;
+        }
+        let mut logits = vec![0.0f32; task.dev.len() * n_out];
+        let mut i = 0;
+        while i < task.dev.len() {
+            let (toks, _, _) = GlueTask::batch(&task.dev, i, env.batch, env.seq);
+            let out = trainer.eval(&fwd_art, &[TensorValue::i32(vec![env.batch, env.seq], toks)])?;
+            let data = out.as_f32();
+            for row in 0..env.batch {
+                if i + row < task.dev.len() {
+                    logits[(i + row) * n_out..(i + row + 1) * n_out]
+                        .copy_from_slice(&data[row * n_out..(row + 1) * n_out]);
+                }
+            }
+            i += env.batch;
+        }
+        return Ok((glue_score(task.metric, &logits, n_out, &task.dev), trainer.losses));
+    }
+    run_glue(ctx, env, task, init, bits, scale, lr, n_steps)
+}
+
+/// Fig. 4/8: training-loss curves for three methods on the STSB and CoLA
+/// analogs.
+pub fn fig4(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let env = glue_env(ctx)?;
+    let n_steps = steps(ctx, 40);
+    let methods = [
+        ("QLoRA", QpeftInit::QLoRA, GradScale::None),
+        ("QERA", QpeftInit::Qera, GradScale::None),
+        ("SRR", QpeftInit::Srr, GradScale::Fixed { gamma: 0.1 }),
+    ];
+    let mut tables = vec![];
+    for task_name in ["STSB-sim", "CoLA-sim"] {
+        let task = env.tasks.iter().find(|t| t.name == task_name).unwrap().clone();
+        let mut curves = vec![];
+        for (label, init, scale) in methods {
+            let (_, losses) = run_glue(ctx, &env, &task, init, 2, scale, 1e-3, n_steps)?;
+            curves.push((label, losses));
+        }
+        let mut t = Table::new(
+            &format!("Fig. 4 analog — training loss, {task_name} (2-bit, r=64)"),
+            &["step", "QLoRA", "QERA", "SRR"],
+        );
+        let stride = (n_steps / 12).max(1);
+        for s in (0..n_steps).step_by(stride) {
+            t.row(vec![
+                s.to_string(),
+                f(curves[0].1[s] as f64, 4),
+                f(curves[1].1[s] as f64, 4),
+                f(curves[2].1[s] as f64, 4),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: CLM perplexity + GSM-sim accuracy on the LM trunk
+// ---------------------------------------------------------------------------
+
+/// Materialize a trained QPEFT state into dense LM params (W_hat = Qdeq +
+/// L·R per linear; trained head) for evaluation via the standard
+/// `lm_nll_*` / `lm_fwd_*` artifacts.
+fn materialize_lm(state: &QpeftState, base: &Params, cfg: &crate::runtime::manifest::ModelCfg) -> Params {
+    let mut out = base.clone();
+    let order: Vec<String> = Params::param_order(cfg)
+        .into_iter()
+        .filter(|n| n != "head")
+        .collect();
+    for a in &state.adapters {
+        let idx = order.iter().position(|n| n == &a.name).unwrap();
+        let qdeq = state.frozen[idx].to_mat();
+        out.set_mat(&a.name, &qdeq.add(&matmul(&a.l, &a.r)));
+    }
+    out.set_mat("head", &state.head);
+    out
+}
+
+/// Table 4: CLM fine-tune PPL (r=8) + GSM-sim exact match (r=64).
+pub fn table4(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let fx = ctx.lm("tiny")?;
+    let b = ctx.engine.manifest().lm_batch;
+    let t_len = fx.cfg.seq_len;
+    let gsm = GsmSim::generate(fx.cfg.vocab, t_len, 512, if ctx.quick { 32 } else { 96 }, 4242);
+    let methods = [
+        ("QLoRA", QpeftInit::QLoRA, GradScale::None),
+        ("LoftQ", QpeftInit::LoftQ { iters: 5 }, GradScale::None),
+        ("QERA", QpeftInit::Qera, GradScale::None),
+        ("LQ-LoRA", QpeftInit::LqLora { iters: 5 }, GradScale::None),
+        ("SRR", QpeftInit::Srr, GradScale::Fixed { gamma: 0.1 }),
+    ];
+    let bit_settings: Vec<u32> = if ctx.quick { vec![2] } else { vec![4, 2] };
+    let mut tables = vec![];
+    for bits in bit_settings {
+        let mut t = Table::new(
+            &format!("Table 4 analog — CLM PPL (r=8) + GSM-sim acc (r=64), {bits}-bit MXINT"),
+            &["method", "CLM PPL", "GSM-sim acc (%)"],
+        );
+        for (label, init, scale) in methods {
+            // --- CLM: rank 8 ---
+            let clm_steps = steps(ctx, 60);
+            let quant = QuantizerSpec::Mxint { bits, block: 32 };
+            let lm_head = fx.params.get_mat("head")?;
+            let state = init_qpeft(
+                &fx.params, &fx.cfg, &fx.calib, quant, init, 8, lm_head.clone(), ctx.seed,
+            );
+            let mut trainer = QpeftTrainer::new(
+                &ctx.engine, "qpeft_lm_train_tiny_r8", state, 5e-4, scale,
+            );
+            for step in 0..clm_steps {
+                let batch = fx.corpus.train_batch(b, t_len, 10_000 + step);
+                trainer.step(&[TensorValue::i32(vec![b, t_len], batch)])?;
+            }
+            let mat = materialize_lm(&trainer.state, &fx.params, &fx.cfg);
+            let batches = ctx.ppl_batches("tiny")?;
+            let ppl =
+                perplexity(&ctx.engine, "lm_nll_tiny", &mat, &batches, b, t_len)?;
+
+            // --- GSM: rank 64 ---
+            let gsm_steps = steps(ctx, 90);
+            let state = init_qpeft(
+                &fx.params, &fx.cfg, &fx.calib, quant, init, 64, lm_head.clone(), ctx.seed,
+            );
+            let mut trainer = QpeftTrainer::new(
+                &ctx.engine, "qpeft_lm_train_tiny_r64", state, 5e-4, scale,
+            );
+            for step in 0..gsm_steps {
+                let batch = GsmSim::batch(&gsm.train, step * b, b);
+                trainer.step(&[TensorValue::i32(vec![b, t_len], batch)])?;
+            }
+            let mat = materialize_lm(&trainer.state, &fx.params, &fx.cfg);
+            let acc = gsm_exact_match(&ctx.engine, "lm_fwd_tiny", &mat, &gsm, &gsm.test, b)?;
+            t.row(vec![label.into(), f(ppl, 2), f(acc, 1)]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

@@ -1,0 +1,209 @@
+//! Rank-selection analyses: Figures 2, 3, 5 and Tables 12, 20/21.
+
+use anyhow::Result;
+
+use crate::coordinator::QuantizerSpec;
+use crate::model::Params;
+use crate::qer::assumptions::{eta_q, proxy_alignment};
+use crate::qer::rank_select::select_k;
+use crate::qer::srr::srr_with_k;
+use crate::scaling::ScalingKind;
+use crate::tensor::matmul;
+use crate::util::bench::{f, Table};
+use crate::util::stats;
+use crate::util::Rng;
+
+use super::fixtures::ExpCtx;
+
+const PROJ: [(&str, &str); 7] = [
+    ("Query", "wq"),
+    ("Key", "wk"),
+    ("Value", "wv"),
+    ("Output", "wo"),
+    ("Gate", "gate"),
+    ("Up", "up"),
+    ("Down", "down"),
+];
+
+/// Fig. 2 / 6: actual reconstruction error L(k) vs the surrogate
+/// objective over k, for the Query and Output projections.
+pub fn fig2(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let layer = fx.cfg.n_layers / 2;
+    let rank = 8;
+    let quant = QuantizerSpec::Mxint { bits: 3, block: 32 };
+    let mut tables = vec![];
+    for (label, kind) in [("Query", "wq"), ("Output", "wo")] {
+        let name = format!("l{layer}.{kind}");
+        let w = fx.params.get_mat(&name)?;
+        let scaling = fx.calib.scaling_for(&name, ScalingKind::Exact);
+        let mut rng = Rng::new(42);
+        let sel = select_k(&w, &scaling, rank, 4, &mut rng);
+        let mut t = Table::new(
+            &format!("Fig. 2 analog — L(k) vs surrogate, {label} (layer {layer}, r={rank}, model={model})"),
+            &["k", "actual L(k)", "surrogate", "selected"],
+        );
+        let q = quant.build();
+        let ctxq = Default::default();
+        for k in 0..=rank {
+            let mut rng2 = Rng::new(43);
+            let out = srr_with_k(
+                &w, q.as_ref(), &scaling, &ctxq, rank, k, 4, &mut rng2, sel.clone(),
+            );
+            let actual = scaling.apply(&w.sub(&out.reconstruct())).frob();
+            t.row(vec![
+                k.to_string(),
+                f(actual, 4),
+                f(sel.objective[k], 5),
+                if k == sel.k_star { "<- k*".into() } else { String::new() },
+            ]);
+        }
+        // alignment check: the two curves should rank k's similarly
+        let actuals: Vec<f64> = (0..=rank)
+            .map(|k| {
+                let mut rng2 = Rng::new(43);
+                let out = srr_with_k(
+                    &w, q.as_ref(), &scaling, &ctxq, rank, k, 4, &mut rng2, sel.clone(),
+                );
+                scaling.apply(&w.sub(&out.reconstruct())).frob()
+            })
+            .collect();
+        let rho = stats::spearman(&actuals, &sel.objective);
+        t.row(vec!["spearman(actual,surrogate)".into(), f(rho, 3), String::new(), String::new()]);
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig. 3a: singular spectrum of the packed adapter L·R with the k* split.
+pub fn fig3(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let name = format!("l{}.wq", fx.cfg.n_layers / 2);
+    let w = fx.params.get_mat(&name)?;
+    let scaling = fx.calib.scaling_for(&name, ScalingKind::Exact);
+    let quant = QuantizerSpec::Mxint { bits: 3, block: 32 };
+    let q = quant.build();
+    let mut rng = Rng::new(7);
+    let out = crate::qer::srr::srr_decompose(
+        &w, q.as_ref(), &scaling, &Default::default(), 8, 4, &mut rng,
+    );
+    let lr = matmul(&out.l, &out.r);
+    let svd = crate::linalg::jacobi_svd(&lr);
+    let mut t = Table::new(
+        &format!("Fig. 3a analog — singular spectrum of L·R, k*={} ({name}, model={model})", out.k_star),
+        &["i", "sigma_i", "component"],
+    );
+    for i in 0..8 {
+        t.row(vec![
+            i.to_string(),
+            f(svd.s[i] as f64, 5),
+            if i < out.k_star { "preserved".into() } else { "residual".into() },
+        ]);
+    }
+    // the preserved block must dominate (paper Fig. 3a)
+    let e1: f64 = svd.s[..out.k_star].iter().map(|&s| (s as f64).powi(2)).sum();
+    let e2: f64 = svd.s[out.k_star..8.min(svd.s.len())].iter().map(|&s| (s as f64).powi(2)).sum();
+    t.row(vec!["energy".into(), f(e1, 4), format!("preserved vs residual {}", f(e2, 4))]);
+    Ok(vec![t])
+}
+
+/// Fig. 5: distribution of selected k* per projection type across layers.
+pub fn fig5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let models: Vec<&str> = if ctx.quick { vec!["tiny"] } else { vec!["tiny", "base"] };
+    let rank = 8;
+    let mut tables = vec![];
+    for model in models {
+        let fx = ctx.lm(model)?;
+        let mut t = Table::new(
+            &format!("Fig. 5 analog — k* distribution by projection (r={rank}, model={model})"),
+            &["projection", "min", "q1", "median", "q3", "max"],
+        );
+        for (label, kind) in PROJ {
+            let mut ks = vec![];
+            for layer in 0..fx.cfg.n_layers {
+                let name = format!("l{layer}.{kind}");
+                let w = fx.params.get_mat(&name)?;
+                let scaling = fx.calib.scaling_for(&name, ScalingKind::Exact);
+                let mut rng = Rng::new(11 + layer as u64);
+                ks.push(select_k(&w, &scaling, rank, 4, &mut rng).k_star as f64);
+            }
+            let (mn, q1, md, q3, mx) = stats::box_stats(&ks);
+            t.row(vec![label.into(), f(mn, 0), f(q1, 1), f(md, 1), f(q3, 1), f(mx, 0)]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Table 12: stability of k* across probe seeds.
+pub fn table12(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let rank = 8;
+    let mut t = Table::new(
+        &format!("Table 12 analog — k* stability across probe seeds (r={rank}, model={model})"),
+        &["projection", "mean |dk*|", "max |dk*|"],
+    );
+    for (label, kind) in PROJ {
+        let mut diffs = vec![];
+        for layer in 0..fx.cfg.n_layers {
+            let name = format!("l{layer}.{kind}");
+            let w = fx.params.get_mat(&name)?;
+            let scaling = fx.calib.scaling_for(&name, ScalingKind::Exact);
+            let mut k_by_seed = vec![];
+            for seed in [100u64, 200] {
+                let mut rng = Rng::new(seed + layer as u64);
+                k_by_seed.push(select_k(&w, &scaling, rank, 4, &mut rng).k_star as i64);
+            }
+            diffs.push((k_by_seed[0] - k_by_seed[1]).unsigned_abs() as f64);
+        }
+        t.row(vec![
+            label.into(),
+            f(stats::mean(&diffs), 1),
+            f(diffs.iter().cloned().fold(0.0, f64::max), 0),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Tables 20/21: Assumption 4.1 (CV of η_Q) and 4.2 (proxy MRE) validation.
+pub fn table20(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let rank = 8;
+    let quants: Vec<(&str, QuantizerSpec)> = vec![
+        ("MXINT-3", QuantizerSpec::Mxint { bits: 3, block: 32 }),
+        ("MXINT-4", QuantizerSpec::Mxint { bits: 4, block: 32 }),
+        ("GPTQ-3", QuantizerSpec::Gptq { bits: 3, group: 128 }),
+    ];
+    let mut t = Table::new(
+        &format!("Table 20/21 analog — assumption validation (model={model})"),
+        &["quantizer", "CV(eta_Q) (Asm 4.1)", "MRE (Asm 4.2)"],
+    );
+    let names = Params::linear_names(&fx.cfg);
+    for (label, spec) in quants {
+        let q = spec.build();
+        let mut etas = vec![];
+        let mut mres = vec![];
+        for name in names.iter().take(if ctx.quick { 4 } else { names.len() }) {
+            let w = fx.params.get_mat(name)?;
+            let scaling = fx.calib.scaling_for(name, ScalingKind::Exact);
+            let qctx = fx.calib.quant_ctx(name, spec.needs_hessian(), 3);
+            etas.push(eta_q(&w, q.as_ref(), &scaling, &qctx));
+            if name.ends_with("wq") || name.ends_with("wo") {
+                let mut rng = Rng::new(5);
+                let (_, _, mre) =
+                    proxy_alignment(&w, q.as_ref(), &scaling, &qctx, rank, 4, 2, &mut rng);
+                mres.push(mre);
+            }
+        }
+        t.row(vec![
+            label.into(),
+            f(stats::coeff_of_variation(&etas), 4),
+            f(stats::mean(&mres), 4),
+        ]);
+    }
+    Ok(vec![t])
+}

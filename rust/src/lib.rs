@@ -1,0 +1,43 @@
+//! # SRR — Structured Residual Reconstruction
+//!
+//! Production reproduction of *"Preserve-Then-Quantize: Balancing Rank
+//! Budgets for Quantization Error Reconstruction in LLMs"* (ICML 2026).
+//!
+//! Layer-3 of the three-layer architecture: this crate owns the request
+//! path — quantization pipeline coordination, the SRR algorithm and every
+//! QER baseline, evaluation engines, and QPEFT training — and executes the
+//! AOT-compiled JAX/Pallas compute graphs (`artifacts/*.hlo.txt`) through
+//! the PJRT C API (`xla` crate). Python never runs at request time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — substrates built in-repo (PRNG, JSON, CLI, stats, thread
+//!   pool, property-test helper): no crates.io access beyond `xla`/`anyhow`.
+//! * [`tensor`] / [`linalg`] — dense f32 matrices and the factorization
+//!   stack (QR, randomized SVD, Jacobi SVD/eigh, Cholesky, Hadamard).
+//! * [`quant`] — MXINT, uniform, GPTQ, QuIP#-sim quantizers.
+//! * [`scaling`] — activation-aware scaling matrices S.
+//! * [`qer`] — QER baselines + SRR rank allocation (the paper's core).
+//! * [`model`] / [`data`] — synthetic model zoo, calibration streams,
+//!   corpora and tasks standing in for the paper's gated assets.
+//! * [`runtime`] — PJRT client + manifest-driven artifact executor.
+//! * [`coordinator`] — the multi-threaded layer-pipeline orchestrator.
+//! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines.
+//! * [`qpeft`] — adapter fine-tuning: AdamW, γ gradient scaling, SGP.
+//! * [`exp`] — the benchmark harness regenerating every paper table/figure.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod quant;
+pub mod scaling;
+pub mod qer;
+pub mod model;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;
+pub mod qpeft;
+pub mod exp;
+
+pub use tensor::Mat;

@@ -1,0 +1,98 @@
+//! Cholesky factorization + solver (GPTQ's damped Hessian inverse path).
+
+use crate::tensor::Mat;
+
+/// Lower-triangular L with A = L·Lᵀ. Returns None if A is not PD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(Mat::from_vec(n, n, l.iter().map(|&x| x as f32).collect()))
+}
+
+/// Solve A x = b for symmetric PD A via Cholesky. b may have many columns.
+pub fn cholesky_solve(a: &Mat, b: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let mut x = b.clone();
+    // forward solve L y = b
+    for col in 0..b.cols {
+        for i in 0..n {
+            let mut s = x.at(i, col) as f64;
+            for k in 0..i {
+                s -= l.at(i, k) as f64 * x.at(k, col) as f64;
+            }
+            *x.at_mut(i, col) = (s / l.at(i, i) as f64) as f32;
+        }
+        // back solve Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x.at(i, col) as f64;
+            for k in i + 1..n {
+                s -= l.at(k, i) as f64 * x.at(k, col) as f64;
+            }
+            *x.at_mut(i, col) = (s / l.at(i, i) as f64) as f32;
+        }
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_nt};
+    use crate::util::Rng;
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(40);
+        let b = Mat::randn(8, 12, 1.0, &mut rng);
+        let mut a = matmul_nt(&b, &b);
+        for i in 0..8 {
+            *a.at_mut(i, i) += 0.5;
+        }
+        let l = cholesky(&a).expect("PD");
+        let rec = matmul_nt(&l, &l);
+        assert!(rec.allclose(&a, 1e-3));
+        for i in 0..8 {
+            for j in i + 1..8 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn non_pd_returns_none() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        let mut rng = Rng::new(41);
+        let b = Mat::randn(6, 9, 1.0, &mut rng);
+        let mut a = matmul_nt(&b, &b);
+        for i in 0..6 {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let x_true = Mat::randn(6, 3, 1.0, &mut rng);
+        let rhs = matmul(&a, &x_true);
+        let x = cholesky_solve(&a, &rhs).unwrap();
+        assert!(x.allclose(&x_true, 1e-2));
+    }
+}

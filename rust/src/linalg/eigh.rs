@@ -1,0 +1,368 @@
+//! Symmetric eigendecomposition, plus the matrix square root / inverse
+//! square root used to build the QERA-exact scaling S = (E[xxᵀ])^{1/2}.
+//!
+//! Two implementations:
+//! * [`eigh`] — Householder tridiagonalization + implicit-shift QL
+//!   (tred2/tqli): O(n³) once, the production path (the exact scaling
+//!   needs 1536-dim Grams; Jacobi's O(n³·sweeps) was the top §Perf
+//!   bottleneck before this).
+//! * [`eigh_jacobi`] — classic two-sided Jacobi, kept as the simple,
+//!   independently-derived oracle the tests cross-validate against.
+
+use crate::tensor::Mat;
+
+/// Eigendecomposition of a symmetric matrix: A = Q · diag(λ) · Qᵀ.
+/// Returns (Q with eigenvectors as columns, λ descending).
+pub fn eigh(a: &Mat) -> (Mat, Vec<f32>) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "eigh needs square input");
+    if n == 0 {
+        return (Mat::zeros(0, 0), vec![]);
+    }
+    // working copy in f64; z accumulates the orthogonal transform
+    let mut z: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    tred2(&mut z, &mut d, &mut e, n);
+    // transpose so tqli's plane rotations act on contiguous rows
+    // (the rotation loop is the O(n³) hot spot; see EXPERIMENTS.md §Perf)
+    let mut zt = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            zt[j * n + i] = z[i * n + j];
+        }
+    }
+    tqli(&mut d, &mut e, &mut zt, n);
+
+    // sort descending (zt rows are eigenvectors)
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let mut q = Mat::zeros(n, n);
+    let mut vals = Vec::with_capacity(n);
+    for (rank, &j) in idx.iter().enumerate() {
+        vals.push(d[j] as f32);
+        for i in 0..n {
+            *q.at_mut(i, rank) = zt[j * n + i] as f32;
+        }
+    }
+    (q, vals)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form
+/// (Numerical Recipes `tred2`). On exit `z` holds the accumulated
+/// orthogonal transform, `d` the diagonal, `e` the sub-diagonal.
+fn tred2(z: &mut [f64], d: &mut [f64], e: &mut [f64], n: usize) {
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[i * n + l];
+            } else {
+                for k in 0..=l {
+                    z[i * n + k] /= scale;
+                    h += z[i * n + k] * z[i * n + k];
+                }
+                let mut f = z[i * n + l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[i * n + l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[j * n + i] = z[i * n + j] / h;
+                    let mut g2 = 0.0;
+                    for k in 0..=j {
+                        g2 += z[j * n + k] * z[i * n + k];
+                    }
+                    for k in j + 1..=l {
+                        g2 += z[k * n + j] * z[i * n + k];
+                    }
+                    e[j] = g2 / h;
+                    f += e[j] * z[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let fj = z[i * n + j];
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        z[j * n + k] -= fj * e[k] + gj * z[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[i * n + l];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[i * n + k] * z[k * n + j];
+                }
+                for k in 0..i {
+                    z[k * n + j] -= g * z[k * n + i];
+                }
+            }
+        }
+        d[i] = z[i * n + i];
+        z[i * n + i] = 1.0;
+        for j in 0..i {
+            z[j * n + i] = 0.0;
+            z[i * n + j] = 0.0;
+        }
+    }
+}
+
+fn pythag(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+/// Implicit-shift QL on a tridiagonal matrix, accumulating eigenvectors
+/// into the *rows* of `z` (transposed layout: row i = eigenvector i, so
+/// each plane rotation touches two contiguous rows).
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut [f64], n: usize) {
+    if n <= 1 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find the split point
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli failed to converge");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = pythag(g, 1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let f0 = s * e[i];
+                let b = c * e[i];
+                r = pythag(f0, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f0 / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // rotate rows i and i+1 (contiguous in the transposed layout)
+                let (lo, hi) = z.split_at_mut((i + 1) * n);
+                let row_i = &mut lo[i * n..];
+                let row_i1 = &mut hi[..n];
+                for (a1, b1) in row_i.iter_mut().zip(row_i1.iter_mut()) {
+                    let fv = *b1;
+                    *b1 = s * *a1 + c * fv;
+                    *a1 = c * *a1 - s * fv;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+/// Two-sided Jacobi eigendecomposition (test oracle; O(n³·sweeps)).
+pub fn eigh_jacobi(a: &Mat) -> (Mat, Vec<f32>) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "eigh needs square input");
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut q = vec![0.0f64; n * n];
+    for i in 0..n {
+        q[i * n + i] = 1.0;
+    }
+
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for r in (p + 1)..n {
+                off += (m[p * n + r]).abs();
+            }
+        }
+        if off < 1e-11 {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apr = m[p * n + r];
+                if apr.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let arr = m[r * n + r];
+                let tau = (arr - app) / (2.0 * apr);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // A <- Jᵀ A J on rows/cols p, r
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akr = m[k * n + r];
+                    m[k * n + p] = c * akp - s * akr;
+                    m[k * n + r] = s * akp + c * akr;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let ark = m[r * n + k];
+                    m[p * n + k] = c * apk - s * ark;
+                    m[r * n + k] = s * apk + c * ark;
+                }
+                for k in 0..n {
+                    let qkp = q[k * n + p];
+                    let qkr = q[k * n + r];
+                    q[k * n + p] = c * qkp - s * qkr;
+                    q[k * n + r] = s * qkp + c * qkr;
+                }
+            }
+        }
+    }
+
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut qm = Mat::zeros(n, n);
+    let mut vals = Vec::with_capacity(n);
+    for (rank, &(lam, idx)) in pairs.iter().enumerate() {
+        vals.push(lam as f32);
+        for i in 0..n {
+            *qm.at_mut(i, rank) = q[i * n + idx] as f32;
+        }
+    }
+    (qm, vals)
+}
+
+fn sym_pow(a: &Mat, pow: f64, floor: f64) -> Mat {
+    let (q, lam) = eigh(a);
+    let n = a.rows;
+    // Q · diag(f(λ)) · Qᵀ
+    let mut qf = Mat::zeros(n, n);
+    for j in 0..n {
+        let l = (lam[j] as f64).max(floor);
+        let f = l.powf(pow) as f32;
+        for i in 0..n {
+            *qf.at_mut(i, j) = q.at(i, j) * f;
+        }
+    }
+    crate::tensor::matmul_nt(&qf, &q)
+}
+
+/// Symmetric PSD square root A^{1/2} (eigenvalues floored at `floor`).
+pub fn sym_sqrt(a: &Mat, floor: f64) -> Mat {
+    sym_pow(a, 0.5, floor)
+}
+
+/// Symmetric PSD inverse square root A^{-1/2}.
+pub fn sym_inv_sqrt(a: &Mat, floor: f64) -> Mat {
+    sym_pow(a, -0.5, floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_nt, matmul_tn};
+    use crate::util::Rng;
+
+    fn random_psd(n: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::randn(n, n + 4, 1.0, rng);
+        matmul_nt(&b, &b).scale(1.0 / (n + 4) as f32)
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Rng::new(30);
+        for n in [1usize, 4, 16, 33] {
+            let a = random_psd(n, &mut rng);
+            let (q, lam) = eigh(&a);
+            let mut ql = Mat::zeros(n, n);
+            for j in 0..n {
+                for i in 0..n {
+                    *ql.at_mut(i, j) = q.at(i, j) * lam[j];
+                }
+            }
+            let rec = matmul_nt(&ql, &q);
+            assert!(rec.allclose(&a, 1e-3), "n={n}");
+            let qtq = matmul_tn(&q, &q);
+            assert!(qtq.allclose(&Mat::eye(n), 1e-3));
+            for w in lam.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = Rng::new(31);
+        let a = random_psd(12, &mut rng);
+        let s = sym_sqrt(&a, 1e-12);
+        assert!(matmul(&s, &s).allclose(&a, 1e-3));
+    }
+
+    #[test]
+    fn inv_sqrt_inverts_sqrt() {
+        let mut rng = Rng::new(32);
+        let mut a = random_psd(10, &mut rng);
+        // make well-conditioned
+        for i in 0..10 {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let s = sym_sqrt(&a, 1e-12);
+        let si = sym_inv_sqrt(&a, 1e-12);
+        assert!(matmul(&s, &si).allclose(&Mat::eye(10), 1e-3));
+    }
+
+    #[test]
+    fn ql_matches_jacobi_oracle() {
+        let mut rng = Rng::new(33);
+        for n in [2usize, 5, 17, 40] {
+            let a = random_psd(n, &mut rng);
+            let (_, lam_ql) = eigh(&a);
+            let (_, lam_j) = eigh_jacobi(&a);
+            for (x, y) in lam_ql.iter().zip(&lam_j) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y} (n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_of_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (_, lam) = eigh(&a);
+        assert!((lam[0] - 3.0).abs() < 1e-5);
+        assert!((lam[1] - 1.0).abs() < 1e-5);
+    }
+}

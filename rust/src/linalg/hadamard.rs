@@ -1,0 +1,197 @@
+//! Fast Walsh–Hadamard transform and the randomized block-Hadamard
+//! rotation used by the QuIP#-sim quantizer (incoherence processing).
+//!
+//! QuIP# rotates W on both sides with random orthogonal matrices built
+//! from H·diag(±1); we implement the same structure with the normalized
+//! FWHT applied in power-of-two blocks (dimensions that are not powers of
+//! two are handled block-wise, e.g. 384 = 3 × 128).
+
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// In-place normalized FWHT of a length-2^k slice: x ← H x / sqrt(n).
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+fn largest_pow2_divisor(n: usize) -> usize {
+    let mut b = 1;
+    while n % (b * 2) == 0 {
+        b *= 2;
+    }
+    b
+}
+
+/// Apply block FWHT along each row (i.e. right-multiply by block-diag H).
+pub fn hadamard_rows(a: &mut Mat, block: usize) {
+    assert!(a.cols % block == 0 && block.is_power_of_two());
+    for i in 0..a.rows {
+        let row = a.row_mut(i);
+        for chunk in row.chunks_mut(block) {
+            fwht_inplace(chunk);
+        }
+    }
+}
+
+/// Apply block FWHT along each column (left-multiply by block-diag H).
+pub fn hadamard_cols(a: &mut Mat, block: usize) {
+    assert!(a.rows % block == 0 && block.is_power_of_two());
+    let mut buf = vec![0.0f32; block];
+    for j in 0..a.cols {
+        let mut i0 = 0;
+        while i0 < a.rows {
+            for i in 0..block {
+                buf[i] = a.at(i0 + i, j);
+            }
+            fwht_inplace(&mut buf);
+            for i in 0..block {
+                *a.at_mut(i0 + i, j) = buf[i];
+            }
+            i0 += block;
+        }
+    }
+}
+
+/// Randomized two-sided Hadamard rotation  W ↦ (H_L D_L) W (D_R H_R),
+/// with D diagonal ±1. Orthogonal, self-inverse up to the sign diagonals,
+/// so `inverse()` undoes `forward()` exactly (up to f32 rounding).
+pub struct RandomizedHadamard {
+    pub row_block: usize,
+    pub col_block: usize,
+    pub sign_left: Vec<f32>,  // length = rows
+    pub sign_right: Vec<f32>, // length = cols
+}
+
+impl RandomizedHadamard {
+    pub fn new(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let rb = largest_pow2_divisor(rows);
+        let cb = largest_pow2_divisor(cols);
+        let sign = |n: usize, rng: &mut Rng| {
+            (0..n).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect()
+        };
+        RandomizedHadamard {
+            row_block: rb,
+            col_block: cb,
+            sign_left: sign(rows, rng),
+            sign_right: sign(cols, rng),
+        }
+    }
+
+    /// W' = (H D_L) W (D_R H)  — the incoherent representation.
+    pub fn forward(&self, w: &Mat) -> Mat {
+        let mut out = w.scale_rows(&self.sign_left);
+        hadamard_cols(&mut out, self.row_block);
+        // right side: scale columns by sign_right then FWHT rows
+        for i in 0..out.rows {
+            for (j, v) in out.row_mut(i).iter_mut().enumerate() {
+                *v *= self.sign_right[j];
+            }
+        }
+        hadamard_rows(&mut out, self.col_block);
+        out
+    }
+
+    /// Undo `forward`: W = D_L Hᵀ W' Hᵀ D_R (H is symmetric orthogonal).
+    pub fn inverse(&self, w: &Mat) -> Mat {
+        let mut out = w.clone();
+        hadamard_rows(&mut out, self.col_block);
+        for i in 0..out.rows {
+            for (j, v) in out.row_mut(i).iter_mut().enumerate() {
+                *v *= self.sign_right[j];
+            }
+        }
+        hadamard_cols(&mut out, self.row_block);
+        out.scale_rows(&self.sign_left)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_is_involution() {
+        let mut x: Vec<f32> = (0..16).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        let orig = x.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_energy() {
+        let mut rng = Rng::new(50);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_normal(&mut x, 1.0);
+        let e0: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        fwht_inplace(&mut x);
+        let e1: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-5);
+    }
+
+    #[test]
+    fn fwht_matches_explicit_h2() {
+        let mut x = vec![1.0f32, 2.0];
+        fwht_inplace(&mut x);
+        let s = 1.0 / 2.0f32.sqrt();
+        assert!((x[0] - 3.0 * s).abs() < 1e-6);
+        assert!((x[1] - (-1.0) * s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randomized_hadamard_roundtrip_pow2() {
+        let mut rng = Rng::new(51);
+        let w = Mat::randn(64, 128, 1.0, &mut rng);
+        let rh = RandomizedHadamard::new(64, 128, &mut rng);
+        let rot = rh.forward(&w);
+        assert!(rh.inverse(&rot).allclose(&w, 1e-4));
+        // energy preserved
+        assert!((rot.frob2() - w.frob2()).abs() / w.frob2() < 1e-5);
+    }
+
+    #[test]
+    fn randomized_hadamard_roundtrip_non_pow2() {
+        // 384 = 3·128, 96 = 3·32 — the base model's shapes
+        let mut rng = Rng::new(52);
+        let w = Mat::randn(96, 384, 1.0, &mut rng);
+        let rh = RandomizedHadamard::new(96, 384, &mut rng);
+        assert_eq!(rh.row_block, 32);
+        assert_eq!(rh.col_block, 128);
+        let rot = rh.forward(&w);
+        assert!(rh.inverse(&rot).allclose(&w, 1e-4));
+    }
+
+    #[test]
+    fn rotation_reduces_max_abs_of_spiky_matrix() {
+        // incoherence processing should spread an outlier column
+        let mut w = Mat::zeros(64, 64);
+        for i in 0..64 {
+            *w.at_mut(i, 3) = 10.0;
+        }
+        let mut rng = Rng::new(53);
+        let rh = RandomizedHadamard::new(64, 64, &mut rng);
+        let rot = rh.forward(&w);
+        assert!(rot.max_abs() < w.max_abs());
+    }
+}

@@ -1,0 +1,84 @@
+//! Dense factorizations built from scratch (no BLAS/LAPACK):
+//!
+//! * [`qr`] — Householder thin QR (range finder backbone)
+//! * [`svd`] — one-sided Jacobi SVD (exact, small) + randomized truncated
+//!   SVD (Halko et al. 2011; n_iter = 4, oversample = 2r, matching the
+//!   paper's §A.4 configuration)
+//! * [`eigh`] — two-sided Jacobi symmetric eigendecomposition (for
+//!   `S = (E[xxᵀ])^{1/2}` in QERA-exact)
+//! * [`chol`] — Cholesky (GPTQ's damped Hessian inverse)
+//! * [`hadamard`] — fast Walsh–Hadamard transform (QuIP#-sim incoherence)
+
+mod qr;
+mod svd;
+mod eigh;
+mod chol;
+mod hadamard;
+
+pub use chol::{cholesky, cholesky_solve};
+pub use eigh::{eigh, eigh_jacobi, sym_inv_sqrt, sym_sqrt};
+pub use hadamard::{fwht_inplace, hadamard_rows, hadamard_cols, RandomizedHadamard};
+pub use qr::qr_thin;
+pub use svd::{jacobi_svd, randomized_svd, truncated_from, Svd};
+
+use crate::tensor::Mat;
+
+/// Unrecoverable energy ratio ρ_p(A) = 1 − Σ_{j≤p} σ_j² / ‖A‖_F²   (paper §4.2).
+///
+/// `sv` are the leading singular values (descending) of A, `frob2` = ‖A‖_F².
+/// `p` may exceed `sv.len()` only if the tail is already ~zero.
+pub fn rho(sv: &[f32], frob2: f64, p: usize) -> f64 {
+    let head: f64 = sv.iter().take(p).map(|&s| (s as f64) * (s as f64)).sum();
+    if frob2 <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - head / frob2).max(0.0)
+}
+
+/// Dimension-normalized effective rank  eRank(A) = exp(−Σ p_i log p_i),
+/// p_i = σ_i / Σσ  (paper §C.3). Needs the *full* spectrum.
+pub fn effective_rank(sv: &[f32]) -> f64 {
+    let total: f64 = sv.iter().map(|&s| s as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &s in sv {
+        let p = s as f64 / total;
+        if p > 1e-300 {
+            h -= p * p.ln();
+        }
+    }
+    h.exp()
+}
+
+/// Build the rank-k truncation L·R from an SVD, with the paper's
+/// factorization convention (§A.3): L = U_k (orthonormal), R = Σ_k V_kᵀ.
+pub fn lr_from_svd(svd: &Svd, k: usize) -> (Mat, Mat) {
+    truncated_from(svd, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_monotone_nonincreasing_in_p() {
+        let sv = [5.0f32, 3.0, 2.0, 1.0, 0.5];
+        let frob2: f64 = sv.iter().map(|&s| (s as f64).powi(2)).sum();
+        let rs: Vec<f64> = (0..=5).map(|p| rho(&sv, frob2, p)).collect();
+        for w in rs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+        assert!((rs[0] - 1.0).abs() < 1e-12);
+        assert!(rs[5].abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_rank_extremes() {
+        // rank-1 spectrum -> eRank 1; flat spectrum of n -> eRank n
+        assert!((effective_rank(&[7.0, 0.0, 0.0]) - 1.0).abs() < 1e-9);
+        let flat = [2.0f32; 16];
+        assert!((effective_rank(&flat) - 16.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,115 @@
+//! Thin QR via Householder reflections.
+
+use crate::tensor::Mat;
+
+/// Thin QR of A (m×n, m ≥ n): returns (Q m×n with orthonormal columns,
+/// R n×n upper triangular) with A = Q·R.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr_thin expects tall matrix, got {m}x{n}");
+    // Work in f64 for stability of reflectors.
+    let mut r: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // Householder vectors
+
+    for k in 0..n {
+        // norm of column k below the diagonal
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let x = r[i * n + k];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm > 0.0 {
+            let x0 = r[k * n + k];
+            let alpha = if x0 >= 0.0 { -norm } else { norm };
+            v[0] = x0 - alpha;
+            for i in k + 1..m {
+                v[i - k] = r[i * n + k];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > 1e-300 {
+                // apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..]
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for i in k..m {
+                        dot += v[i - k] * r[i * n + j];
+                    }
+                    let f = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        r[i * n + j] -= f * v[i - k];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q = H_0 · … · H_{n-1} · [I_n; 0]
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= f * v[i - k];
+            }
+        }
+    }
+
+    let qm = Mat::from_vec(m, n, q.iter().map(|&x| x as f32).collect());
+    let mut rm = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *rm.at_mut(i, j) = r[i * n + j] as f32;
+        }
+    }
+    (qm, rm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_tn};
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_and_orthonormal() {
+        let mut rng = Rng::new(10);
+        for &(m, n) in &[(8, 8), (20, 5), (64, 32), (7, 1)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert!(matmul(&q, &r).allclose(&a, 1e-4), "A=QR failed {m}x{n}");
+            let qtq = matmul_tn(&q, &q);
+            assert!(qtq.allclose(&Mat::eye(n), 1e-4), "QtQ!=I {m}x{n}");
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(r.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_is_stable() {
+        let mut rng = Rng::new(11);
+        let b = Mat::randn(16, 2, 1.0, &mut rng);
+        let c = Mat::randn(2, 6, 1.0, &mut rng);
+        let a = matmul(&b, &c); // rank 2, 16x6
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).allclose(&a, 1e-4));
+        assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+}

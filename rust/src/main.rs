@@ -1,0 +1,229 @@
+//! `srr` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                       — artifact/model inventory
+//!   ptq    [--model --method --scaling --quantizer --rank --seed]
+//!                              — quantize a model, report per-layer stats + PPL
+//!   qpeft  [--task --init --bits --steps --gamma]
+//!                              — fine-tune adapters on a GLUE-sim task
+//!   bench  [ids… | --list] [--quick]
+//!                              — regenerate paper tables/figures
+//!
+//! Examples live in `examples/` (quickstart, ptq_sweep, qpeft_finetune,
+//! e2e_train_quantize).
+
+use anyhow::Result;
+
+use srr::coordinator::{run_ptq, Metrics, RunConfig};
+use srr::data::glue_sim::GlueTask;
+use srr::eval::{glue_score, perplexity};
+use srr::exp::{registry, ExpCtx};
+use srr::qpeft::{init_qpeft, GradScale, QpeftInit, QpeftTrainer};
+use srr::runtime::{Engine, Executor, TensorValue};
+use srr::tensor::Mat;
+use srr::util::bench::f;
+use srr::util::cli::Args;
+use srr::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("ptq") => cmd_ptq(&args),
+        Some("qpeft") => cmd_qpeft(&args),
+        Some("bench") => cmd_bench(&args),
+        _ => {
+            eprintln!(
+                "usage: srr <info|ptq|qpeft|bench> [options]\n\
+                 \n  srr info\
+                 \n  srr ptq --model small --method srr --scaling qera-exact --quantizer mxint3 --rank 8\
+                 \n  srr qpeft --task SST-sim --init srr --bits 2 --steps 60\
+                 \n  srr bench table1 fig5 [--quick]   |   srr bench --list"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::discover()?;
+    let m = engine.manifest();
+    println!("artifacts dir: {}", m.dir.display());
+    println!("\nmodels:");
+    for (name, cfg) in &m.models {
+        let params: usize = srr::model::Params::param_order(cfg)
+            .iter()
+            .map(|n| {
+                srr::model::Params::param_shape(n, cfg, cfg.vocab).iter().product::<usize>()
+            })
+            .sum();
+        println!(
+            "  {name:6} vocab={:5} d={:4} heads={} layers={} ff={:5} seq={:4}  ~{:.1}M params",
+            cfg.vocab, cfg.d_model, cfg.n_heads, cfg.n_layers, cfg.d_ff, cfg.seq_len,
+            params as f64 / 1e6
+        );
+    }
+    println!("\nartifacts ({}):", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!("  {name:32} args={:3} outputs={}", a.args.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_ptq(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args)?;
+    let mut ctx = ExpCtx::new(args.has_flag("quick"))?;
+    ctx.seed = cfg.seed;
+    println!(
+        "PTQ: model={} method={} scaling={:?} quantizer={} rank={}",
+        cfg.model,
+        cfg.method.label(),
+        cfg.scaling,
+        cfg.quantizer.label(),
+        cfg.rank
+    );
+    let fx = ctx.lm(&cfg.model)?;
+    let metrics = Metrics::new();
+    let mut qcfg = srr::qer::QerConfig::new(cfg.method, cfg.rank, cfg.scaling);
+    qcfg.seed = cfg.seed;
+    let out = run_ptq(&fx.params, &fx.cfg, &fx.calib, cfg.quantizer, &qcfg, &metrics);
+    println!("\nper-layer:");
+    for r in &out.reports {
+        println!(
+            "  {:10} k*={:3} weight_err={:8.4} scaled_err={:8.4} ({:.0} ms)",
+            r.name,
+            r.k_star,
+            r.weight_err,
+            r.scaled_err,
+            (r.scale_secs + r.qer_secs) * 1e3
+        );
+    }
+    let b = ctx.engine.manifest().lm_batch;
+    let t = fx.cfg.seq_len;
+    let batches = ctx.ppl_batches(&cfg.model)?;
+    let artifact = format!("lm_nll_{}", cfg.model);
+    let bf16 = perplexity(&ctx.engine, &artifact, &fx.params.clone(), &batches, b, t)?;
+    let ppl = perplexity(&ctx.engine, &artifact, &out.params, &batches, b, t)?;
+    println!(
+        "\nBF16 PPL = {bf16:.3}   quantized PPL = {ppl:.3}   mean k* = {:.1}",
+        out.mean_k_star()
+    );
+    println!("\n{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_qpeft(args: &Args) -> Result<()> {
+    let mut ctx = ExpCtx::new(args.has_flag("quick"))?;
+    let task_name = args.get_or("task", "SST-sim").to_string();
+    let bits: u32 = args.get_usize("bits", 2) as u32;
+    let steps = args.get_usize("steps", 60);
+    let gamma = args.get_f64("gamma", 0.1) as f32;
+    let init = match args.get_or("init", "srr") {
+        "qlora" => QpeftInit::QLoRA,
+        "loftq" => QpeftInit::LoftQ { iters: 5 },
+        "lqlora" => QpeftInit::LqLora { iters: 5 },
+        "qera" => QpeftInit::Qera,
+        "lora" => QpeftInit::LoRA,
+        _ => QpeftInit::Srr,
+    };
+    let rank = if bits == 2 { 64 } else { 8 };
+    let scale = if init == QpeftInit::Srr {
+        GradScale::Fixed { gamma }
+    } else {
+        GradScale::None
+    };
+
+    let m = ctx.engine.manifest();
+    let (batch, seq, classes) = (m.cls_batch, m.cls_seq, m.cls_classes);
+    let vocab = m.model("tiny")?.vocab;
+    let tasks = GlueTask::all(vocab, seq, 256, 64, 9090);
+    let task = tasks
+        .iter()
+        .find(|t| t.name == task_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?
+        .clone();
+    let fx = ctx.lm("tiny")?;
+    let quant = srr::coordinator::QuantizerSpec::Mxint { bits, block: 32 };
+    let mut rng = Rng::new(777);
+    let head = Mat::randn(fx.cfg.d_model, classes, 0.02, &mut rng);
+    let state = init_qpeft(&fx.params, &fx.cfg, &fx.calib, quant, init, rank, head, 0);
+    println!(
+        "QPEFT: task={} init={} bits={bits} rank={rank} scale={} trainable={}",
+        task.name,
+        init.label(),
+        scale.label(),
+        state.trainable_count()
+    );
+    let mut trainer = QpeftTrainer::new(
+        &ctx.engine,
+        &format!("qpeft_cls_train_tiny_r{rank}"),
+        state,
+        1e-3,
+        scale,
+    );
+    for step in 0..steps {
+        let (toks, labels, _) = GlueTask::batch(&task.train, step * batch, batch, seq);
+        let loss = trainer.step(&[
+            TensorValue::i32(vec![batch, seq], toks),
+            TensorValue::i32(vec![batch], labels),
+        ])?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("  step {step:4}  loss {loss:.4}");
+        }
+    }
+    // dev eval
+    let n_out = classes;
+    let mut logits = vec![0.0f32; task.dev.len() * n_out];
+    let mut i = 0;
+    while i < task.dev.len() {
+        let (toks, _, _) = GlueTask::batch(&task.dev, i, batch, seq);
+        let out = trainer.eval(
+            &format!("qpeft_cls_fwd_tiny_r{rank}"),
+            &[TensorValue::i32(vec![batch, seq], toks)],
+        )?;
+        let data = out.as_f32();
+        for row in 0..batch {
+            if i + row < task.dev.len() {
+                logits[(i + row) * n_out..(i + row + 1) * n_out]
+                    .copy_from_slice(&data[row * n_out..(row + 1) * n_out]);
+            }
+        }
+        i += batch;
+    }
+    let score = glue_score(task.metric, &logits, n_out, &task.dev);
+    println!("dev score: {}", f(score, 2));
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.has_flag("list") {
+        for (id, desc, _) in registry() {
+            println!("{id:10} {desc}");
+        }
+        return Ok(());
+    }
+    let mut ctx = ExpCtx::new(args.has_flag("quick"))?;
+    ctx.seed = args.get_u64("seed", 0);
+    let ids: Vec<String> = if args.positional.is_empty() {
+        registry().iter().map(|(id, _, _)| id.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match srr::exp::run(&id, &mut ctx) {
+            Ok(tables) => {
+                for t in tables {
+                    t.print();
+                }
+                println!("[{id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => eprintln!("[{id} FAILED: {e:#}]"),
+        }
+    }
+    Ok(())
+}

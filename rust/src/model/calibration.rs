@@ -1,0 +1,147 @@
+//! Calibration: run the rust-native forward over calibration batches and
+//! collect per-linear activation matrices (the paper uses 256 SlimPajama
+//! samples; we stream batches of a synthetic corpus — see data::corpus).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::quant::QuantCtx;
+use crate::runtime::manifest::ModelCfg;
+use crate::scaling::{Scaling, ScalingKind};
+use crate::tensor::{matmul_tn, Mat};
+
+use super::forward::{forward, Capture};
+use super::params::Params;
+
+/// Activation matrices per linear layer.
+pub struct CalibrationSet {
+    pub activations: BTreeMap<String, Mat>,
+    /// memoized scalings — the exact kind costs an O(d³) eigendecomposition
+    /// and the experiment grid reuses each (layer, kind) many times
+    cache: Mutex<BTreeMap<(String, u8), Scaling>>,
+}
+
+fn kind_tag(kind: ScalingKind) -> u8 {
+    match kind {
+        ScalingKind::Identity => 0,
+        ScalingKind::DiagRms => 1,
+        ScalingKind::DiagAbsMean => 2,
+        ScalingKind::Exact => 3,
+    }
+}
+
+impl CalibrationSet {
+    pub fn new(activations: BTreeMap<String, Mat>) -> Self {
+        CalibrationSet { activations, cache: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Build (or fetch the memoized) Scaling of the requested kind.
+    pub fn scaling_for(&self, name: &str, kind: ScalingKind) -> Scaling {
+        let key = (name.to_string(), kind_tag(kind));
+        if let Some(s) = self.cache.lock().unwrap().get(&key) {
+            return s.clone();
+        }
+        let s = match self.activations.get(name) {
+            Some(x) => Scaling::from_activations(kind, x),
+            None => Scaling::Identity,
+        };
+        self.cache.lock().unwrap().insert(key, s.clone());
+        s
+    }
+
+    /// GPTQ's Hessian H = XᵀX/n for one linear.
+    pub fn quant_ctx(&self, name: &str, with_hessian: bool, seed: u64) -> QuantCtx {
+        let hessian = if with_hessian {
+            self.activations
+                .get(name)
+                .map(|x| matmul_tn(x, x).scale(1.0 / x.rows as f32))
+        } else {
+            None
+        };
+        QuantCtx { hessian, seed }
+    }
+}
+
+/// Run `batches` (each row-major (b, t) token blocks) through the model,
+/// capturing up to `max_rows` activation rows per linear.
+pub fn collect_calibration(
+    params: &Params,
+    cfg: &ModelCfg,
+    batches: &[Vec<i32>],
+    b: usize,
+    t: usize,
+    max_rows: usize,
+) -> CalibrationSet {
+    let mut cap = Capture::new(max_rows);
+    for batch in batches {
+        forward(params, cfg, batch, b, t, true, Some(&mut cap));
+        let have = cap
+            .inputs
+            .values()
+            .map(|v| v.iter().map(|m| m.rows).sum::<usize>())
+            .min()
+            .unwrap_or(0);
+        if have >= max_rows {
+            break;
+        }
+    }
+    let activations = Params::linear_names(cfg)
+        .into_iter()
+        .filter_map(|name| cap.activation_matrix(&name).map(|m| (name, m)))
+        .collect();
+    CalibrationSet::new(activations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::synth_lm_params;
+    use crate::util::Rng;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 32,
+            seq_len: 8,
+        }
+    }
+
+    #[test]
+    fn collects_for_all_linears_and_builds_scalings() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 1, c.vocab);
+        let mut rng = Rng::new(2);
+        let batches: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..2 * c.seq_len).map(|_| rng.below(c.vocab) as i32).collect())
+            .collect();
+        let cal = collect_calibration(&p, &c, &batches, 2, c.seq_len, 24);
+        assert_eq!(cal.activations.len(), 7);
+        for kind in [ScalingKind::DiagRms, ScalingKind::DiagAbsMean, ScalingKind::Exact] {
+            let s = cal.scaling_for("l0.wq", kind);
+            assert!(s.dim_hint().unwrap_or(16) == 16);
+        }
+        let ctx = cal.quant_ctx("l0.wq", true, 0);
+        let h = ctx.hessian.expect("hessian");
+        assert_eq!((h.rows, h.cols), (16, 16));
+        // hessian is symmetric PSD-ish
+        for i in 0..16 {
+            assert!(h.at(i, i) >= 0.0);
+            for j in 0..16 {
+                assert!((h.at(i, j) - h.at(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_layer_falls_back_to_identity() {
+        let cal = CalibrationSet::new(BTreeMap::new());
+        match cal.scaling_for("nope", ScalingKind::Exact) {
+            Scaling::Identity => {}
+            other => panic!("expected identity fallback, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Rust-native transformer forward, numerically mirroring
+//! python/compile/model.py (rmsnorm → attention → swiglu blocks).
+//!
+//! Two jobs:
+//! 1. **Calibration capture** — the activation-aware scalings (LQER,
+//!    QERA) need the *inputs of every linear layer* under real data; the
+//!    [`Capture`] hook records them as the forward runs. (The PJRT
+//!    artifacts are sealed graphs — they cannot expose internals.)
+//! 2. **Cross-validation** — the integration tests assert this forward
+//!    matches the AOT `lm_fwd_*` artifact логits, pinning the rust and
+//!    JAX stacks to the same semantics.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::ModelCfg;
+use crate::tensor::{matmul, Mat};
+
+use super::params::Params;
+
+const EPS: f32 = 1e-5;
+
+/// Records linear-layer inputs (rows = samples) during forward passes.
+#[derive(Default, Debug)]
+pub struct Capture {
+    pub inputs: BTreeMap<String, Vec<Mat>>,
+    /// stop capturing for a layer once this many rows were kept
+    pub max_rows: usize,
+}
+
+impl Capture {
+    pub fn new(max_rows: usize) -> Self {
+        Capture { inputs: BTreeMap::new(), max_rows }
+    }
+
+    fn record(&mut self, name: &str, x: &Mat) {
+        let kept: usize = self
+            .inputs
+            .get(name)
+            .map(|v| v.iter().map(|m| m.rows).sum())
+            .unwrap_or(0);
+        if kept >= self.max_rows {
+            return;
+        }
+        let take = (self.max_rows - kept).min(x.rows);
+        self.inputs
+            .entry(name.to_string())
+            .or_default()
+            .push(x.rows_slice(0, take));
+    }
+
+    /// Concatenate the captured rows for one linear.
+    pub fn activation_matrix(&self, name: &str) -> Option<Mat> {
+        let parts = self.inputs.get(name)?;
+        let mut it = parts.iter();
+        let first = it.next()?.clone();
+        Some(it.fold(first, |acc, m| acc.vcat(m)))
+    }
+}
+
+fn rmsnorm(x: &Mat, w: &[f32]) -> Mat {
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let ms: f32 =
+            row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for (v, &wv) in row.iter_mut().zip(w) {
+            *v *= inv * wv;
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Multi-head attention over flattened activations (B*T, d).
+fn attention(q: &Mat, k: &Mat, v: &Mat, cfg: &ModelCfg, b: usize, t: usize, causal: bool) -> Mat {
+    let d = cfg.d_model;
+    let dh = d / cfg.n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Mat::zeros(b * t, d);
+    for bi in 0..b {
+        for h in 0..cfg.n_heads {
+            let c0 = h * dh;
+            // scores (t x t)
+            let mut scores = vec![0.0f32; t * t];
+            for i in 0..t {
+                let qrow = &q.row(bi * t + i)[c0..c0 + dh];
+                let jmax = if causal { i + 1 } else { t };
+                for j in 0..jmax {
+                    let krow = &k.row(bi * t + j)[c0..c0 + dh];
+                    let mut s = 0.0f32;
+                    for (a, b2) in qrow.iter().zip(krow) {
+                        s += a * b2;
+                    }
+                    scores[i * t + j] = s * scale;
+                }
+            }
+            // softmax rows (respecting causal mask) then P·V
+            for i in 0..t {
+                let jmax = if causal { i + 1 } else { t };
+                let row = &mut scores[i * t..i * t + jmax];
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let mut z = 0.0f32;
+                for s in row.iter_mut() {
+                    *s = (*s - m).exp();
+                    z += *s;
+                }
+                let orow = &mut out.row_mut(bi * t + i)[c0..c0 + dh];
+                for j in 0..jmax {
+                    let p = scores[i * t + j] / z;
+                    let vrow = &v.row(bi * t + j)[c0..c0 + dh];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Full trunk + head forward. `tokens` is row-major (b, t). Returns
+/// logits (b*t, head_dim). `capture` optionally records linear inputs.
+pub fn forward(
+    params: &Params,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    causal: bool,
+    mut capture: Option<&mut Capture>,
+) -> Mat {
+    assert_eq!(tokens.len(), b * t);
+    let embed = params.get_mat("embed").expect("embed");
+    let d = cfg.d_model;
+    let mut x = Mat::zeros(b * t, d);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(embed.row(tok as usize));
+    }
+
+    for layer in 0..cfg.n_layers {
+        let name = |k: &str| format!("l{layer}.{k}");
+        let ln1 = params.get_vec(&name("ln1")).unwrap();
+        let h = rmsnorm(&x, ln1);
+        if let Some(c) = capture.as_deref_mut() {
+            for k in ["wq", "wk", "wv"] {
+                c.record(&name(k), &h);
+            }
+        }
+        let q = matmul(&h, &params.get_mat(&name("wq")).unwrap());
+        let k = matmul(&h, &params.get_mat(&name("wk")).unwrap());
+        let v = matmul(&h, &params.get_mat(&name("wv")).unwrap());
+        let a = attention(&q, &k, &v, cfg, b, t, causal);
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(&name("wo"), &a);
+        }
+        let o = matmul(&a, &params.get_mat(&name("wo")).unwrap());
+        x = x.add(&o);
+
+        let ln2 = params.get_vec(&name("ln2")).unwrap();
+        let h2 = rmsnorm(&x, ln2);
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(&name("gate"), &h2);
+            c.record(&name("up"), &h2);
+        }
+        let g = matmul(&h2, &params.get_mat(&name("gate")).unwrap());
+        let u = matmul(&h2, &params.get_mat(&name("up")).unwrap());
+        let mut m = Mat::zeros(g.rows, g.cols);
+        for i in 0..g.data.len() {
+            m.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(&name("down"), &m);
+        }
+        let dn = matmul(&m, &params.get_mat(&name("down")).unwrap());
+        x = x.add(&dn);
+    }
+
+    let xf = rmsnorm(&x, params.get_vec("norm_f").unwrap());
+    matmul(&xf, &params.get_mat("head").unwrap())
+}
+
+/// Per-sequence next-token NLL + token counts (mirrors the lm_nll artifact).
+pub fn lm_nll(
+    params: &Params,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    mask: &[f32],
+    b: usize,
+    t: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    // logits over the first t-1 positions predict tokens 1..t
+    let inputs: Vec<i32> = (0..b)
+        .flat_map(|bi| tokens[bi * t..bi * t + t - 1].to_vec())
+        .collect();
+    let logits = forward(params, cfg, &inputs, b, t - 1, true, None);
+    let mut nll = vec![0.0f64; b];
+    let mut cnt = vec![0.0f64; b];
+    for bi in 0..b {
+        for pos in 0..t - 1 {
+            let mk = mask[bi * t + pos + 1];
+            if mk == 0.0 {
+                continue;
+            }
+            let row = logits.row(bi * (t - 1) + pos);
+            let target = tokens[bi * t + pos + 1] as usize;
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let z: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+            let logp = (row[target] - m) - z.ln();
+            nll[bi] -= (logp as f64) * mk as f64;
+            cnt[bi] += mk as f64;
+        }
+    }
+    (nll, cnt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::synth_lm_params;
+    use crate::util::Rng;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            seq_len: 8,
+        }
+    }
+
+    fn toks(c: &ModelCfg, b: usize, rng: &mut Rng) -> Vec<i32> {
+        (0..b * c.seq_len).map(|_| rng.below(c.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 1, c.vocab);
+        let mut rng = Rng::new(2);
+        let tk = toks(&c, 2, &mut rng);
+        let logits = forward(&p, &c, &tk, 2, c.seq_len, true, None);
+        assert_eq!((logits.rows, logits.cols), (2 * 8, 32));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causal_prefix_invariance() {
+        // causal LM: logits at position i must not depend on tokens > i
+        let c = cfg();
+        let p = synth_lm_params(&c, 3, c.vocab);
+        let mut rng = Rng::new(4);
+        let mut tk = toks(&c, 1, &mut rng);
+        let l1 = forward(&p, &c, &tk, 1, c.seq_len, true, None);
+        tk[c.seq_len - 1] = (tk[c.seq_len - 1] + 1) % c.vocab as i32; // mutate last token
+        let l2 = forward(&p, &c, &tk, 1, c.seq_len, true, None);
+        for pos in 0..c.seq_len - 1 {
+            for j in 0..c.vocab {
+                assert!(
+                    (l1.at(pos, j) - l2.at(pos, j)).abs() < 1e-5,
+                    "position {pos} leaked future tokens"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_causal_differs_from_causal() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 5, c.vocab);
+        let mut rng = Rng::new(6);
+        let tk = toks(&c, 1, &mut rng);
+        let lc = forward(&p, &c, &tk, 1, c.seq_len, true, None);
+        let lb = forward(&p, &c, &tk, 1, c.seq_len, false, None);
+        assert!(!lc.allclose(&lb, 1e-4));
+    }
+
+    #[test]
+    fn capture_collects_every_linear() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 7, c.vocab);
+        let mut rng = Rng::new(8);
+        let tk = toks(&c, 2, &mut rng);
+        let mut cap = Capture::new(12);
+        forward(&p, &c, &tk, 2, c.seq_len, true, Some(&mut cap));
+        for name in Params::linear_names(&c) {
+            let x = cap.activation_matrix(&name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(x.rows, 12, "{name} row cap");
+            let want_cols = if name.ends_with("down") { c.d_ff } else { c.d_model };
+            assert_eq!(x.cols, want_cols, "{name} width");
+        }
+    }
+
+    #[test]
+    fn nll_mask_zeroes_contributions() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 9, c.vocab);
+        let mut rng = Rng::new(10);
+        let tk = toks(&c, 2, &mut rng);
+        let full = vec![1.0f32; 2 * c.seq_len];
+        let mut half = full.clone();
+        for v in half.iter_mut().skip(c.seq_len + 4) {
+            *v = 0.0; // mask tail of sequence 1
+        }
+        let (nll_f, cnt_f) = lm_nll(&p, &c, &tk, &full, 2, c.seq_len);
+        let (nll_h, cnt_h) = lm_nll(&p, &c, &tk, &half, 2, c.seq_len);
+        assert_eq!(cnt_f[1], (c.seq_len - 1) as f64);
+        assert!(cnt_h[1] < cnt_f[1]);
+        assert!(nll_h[1] < nll_f[1]);
+        assert_eq!(nll_f[0], nll_h[0]); // sequence 0 untouched
+    }
+}

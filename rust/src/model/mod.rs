@@ -1,0 +1,24 @@
+//! Model zoo: parameter containers, synthetic weight generation, and a
+//! rust-native forward pass used for calibration capture.
+//!
+//! * [`params`] — named-tensor container following the manifest's
+//!   canonical parameter order.
+//! * [`synth`] — synthetic transformer weights with per-projection
+//!   anisotropy (Q/K concentrated, V/Down flat — §B.2), standing in for
+//!   the paper's gated checkpoints.
+//! * [`forward`] — the transformer forward in pure rust, numerically
+//!   mirroring python/compile/model.py; its linear-input hooks produce
+//!   *real* calibration activations for the scaling matrices (LQER /
+//!   QERA need per-layer input statistics). Cross-validated against the
+//!   PJRT `lm_fwd_*` artifacts by the integration tests.
+//! * [`calibration`] — runs the forward over a calibration stream and
+//!   collects per-linear activation matrices.
+
+pub mod params;
+pub mod synth;
+pub mod forward;
+pub mod calibration;
+
+pub use calibration::{collect_calibration, CalibrationSet};
+pub use params::{NamedTensor, Params};
+pub use synth::{spectral_matrix, spectral_matrix_spiked, synth_lm_params, ProjectionKind};

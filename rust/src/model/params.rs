@@ -1,0 +1,173 @@
+//! Named-tensor parameter container in manifest order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::TensorValue;
+use crate::tensor::Mat;
+
+/// One named parameter.
+#[derive(Clone, Debug)]
+pub struct NamedTensor {
+    pub name: String,
+    pub value: TensorValue,
+}
+
+/// A model's parameters, ordered exactly like the manifest's
+/// `param_order` (the positional contract with the artifacts).
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub order: Vec<String>,
+    pub by_name: BTreeMap<String, TensorValue>,
+}
+
+impl Params {
+    pub fn new(order: Vec<String>) -> Self {
+        Params { order, by_name: BTreeMap::new() }
+    }
+
+    pub fn set(&mut self, name: &str, value: TensorValue) {
+        assert!(self.order.iter().any(|n| n == name), "unknown param {name}");
+        self.by_name.insert(name.to_string(), value);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorValue> {
+        self.by_name.get(name).ok_or_else(|| anyhow!("param {name} unset"))
+    }
+
+    pub fn get_mat(&self, name: &str) -> Result<Mat> {
+        Ok(self.get(name)?.to_mat())
+    }
+
+    pub fn set_mat(&mut self, name: &str, m: &Mat) {
+        self.set(name, TensorValue::from_mat(m));
+    }
+
+    pub fn get_vec(&self, name: &str) -> Result<&[f32]> {
+        Ok(self.get(name)?.as_f32())
+    }
+
+    /// Positional argument list for an artifact call.
+    pub fn flat(&self) -> Result<Vec<TensorValue>> {
+        self.order
+            .iter()
+            .map(|n| self.get(n).cloned())
+            .collect()
+    }
+
+    /// Names of the quantizable linears (the 7 projections per block).
+    pub fn linear_names(cfg: &ModelCfg) -> Vec<String> {
+        let kinds = ["wq", "wk", "wv", "wo", "gate", "up", "down"];
+        (0..cfg.n_layers)
+            .flat_map(|i| kinds.iter().map(move |k| format!("l{i}.{k}")))
+            .collect()
+    }
+
+    /// The canonical parameter order (mirrors python model.param_names).
+    pub fn param_order(cfg: &ModelCfg) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for i in 0..cfg.n_layers {
+            for k in ["ln1", "wq", "wk", "wv", "wo", "ln2", "gate", "up", "down"] {
+                names.push(format!("l{i}.{k}"));
+            }
+        }
+        names.push("norm_f".into());
+        names.push("head".into());
+        names
+    }
+
+    /// Shape of a parameter (mirrors python model.param_shape; `head_dim`
+    /// is vocab for LM, n_classes for classifiers, 1 for regression).
+    pub fn param_shape(name: &str, cfg: &ModelCfg, head_dim: usize) -> Vec<usize> {
+        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        if name == "embed" {
+            return vec![v, d];
+        }
+        if name == "norm_f" || name.ends_with(".ln1") || name.ends_with(".ln2") {
+            return vec![d];
+        }
+        if name == "head" {
+            return vec![d, head_dim];
+        }
+        match name.rsplit('.').next().unwrap() {
+            "wq" | "wk" | "wv" | "wo" => vec![d, d],
+            "gate" | "up" => vec![d, ff],
+            "down" => vec![ff, d],
+            other => panic!("unknown param kind {other}"),
+        }
+    }
+
+    /// Total parameter count.
+    pub fn count(&self) -> usize {
+        self.order
+            .iter()
+            .filter_map(|n| self.by_name.get(n))
+            .map(|t| t.len())
+            .sum()
+    }
+
+    /// Replace a linear weight with its reconstruction, leaving the rest.
+    pub fn with_replaced(&self, replacements: &BTreeMap<String, Mat>) -> Params {
+        let mut out = self.clone();
+        for (name, m) in replacements {
+            out.set_mat(name, m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            seq_len: 8,
+        }
+    }
+
+    #[test]
+    fn order_and_shapes_mirror_python() {
+        let c = cfg();
+        let order = Params::param_order(&c);
+        assert_eq!(order.len(), 1 + 9 * 2 + 2);
+        assert_eq!(order[0], "embed");
+        assert_eq!(order[1], "l0.ln1");
+        assert_eq!(order.last().unwrap(), "head");
+        assert_eq!(Params::param_shape("l1.down", &c, c.vocab), vec![24, 16]);
+        assert_eq!(Params::param_shape("head", &c, 4), vec![16, 4]);
+        assert_eq!(Params::linear_names(&c).len(), 14);
+    }
+
+    #[test]
+    fn flat_respects_order_and_detects_missing() {
+        let c = cfg();
+        let mut p = Params::new(vec!["embed".into(), "head".into()]);
+        p.set("embed", TensorValue::zeros(vec![32, 16]));
+        assert!(p.flat().is_err(), "missing head must error");
+        p.set("head", TensorValue::zeros(vec![16, 32]));
+        let flat = p.flat().unwrap();
+        assert_eq!(flat.len(), 2);
+        assert_eq!(flat[0].shape(), &[32, 16]);
+        let _ = c;
+    }
+
+    #[test]
+    fn replace_roundtrip() {
+        let mut p = Params::new(vec!["l0.wq".into()]);
+        p.set_mat("l0.wq", &Mat::eye(4));
+        let mut reps = BTreeMap::new();
+        reps.insert("l0.wq".to_string(), Mat::zeros(4, 4));
+        let p2 = p.with_replaced(&reps);
+        assert_eq!(p2.get_mat("l0.wq").unwrap(), Mat::zeros(4, 4));
+        assert_eq!(p.get_mat("l0.wq").unwrap(), Mat::eye(4));
+    }
+}

@@ -1,0 +1,276 @@
+//! The unified QER method dispatcher: every baseline + SRR behind one
+//! call, so the coordinator and the experiment benches treat methods
+//! uniformly (paper Tables 1, 5, 16; Figure 7).
+
+use crate::linalg::{randomized_svd, truncated_from};
+use crate::quant::{QuantCtx, Quantizer};
+use crate::scaling::{Scaling, ScalingKind};
+use crate::tensor::{matmul, Mat};
+use crate::util::Rng;
+
+use super::rank_select::RankSelection;
+use super::srr::{srr_decompose, srr_with_k, SrrOutput};
+
+/// Which reconstruction pipeline to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Quantization only, no low-rank correction.
+    WOnly,
+    /// Residual-only QER in the space chosen by `scaling` (k = 0).
+    /// Covers ZeroQuant-V2 (identity), LQER (diag-rms), QERA-approx
+    /// (diag-absmean) and QERA-exact (exact) depending on the scaling.
+    Qer,
+    /// `Qer` wrapped with SRR's rank allocation (k = k*).
+    QerSrr,
+    /// LoftQ / LQ-LoRA style iterative refinement: alternate
+    /// LR ← SVD_r(S(W−Q)), Q ← quant(W − LR) for `iters` rounds (k ≈ r).
+    IterativeLowRank { iters: usize },
+    /// SVDQuant-style one-shot preserve-only: k = r, no reconstruction.
+    PreserveOnly,
+    /// ODLRI-like fixed split k = r/2 (extraction-first heuristic).
+    FixedSplitHalf,
+    /// SRR with the Eq. (6) single-SVD packing.
+    SrrSingleSvd,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::WOnly => "w-only".into(),
+            Method::Qer => "QER".into(),
+            Method::QerSrr => "QER+SRR".into(),
+            Method::IterativeLowRank { iters } => format!("iterLR({iters})"),
+            Method::PreserveOnly => "preserve-only".into(),
+            Method::FixedSplitHalf => "fixed-k/2".into(),
+            Method::SrrSingleSvd => "SRR(eq6)".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct QerConfig {
+    pub method: Method,
+    pub rank: usize,
+    pub scaling_kind: ScalingKind,
+    /// randomized-SVD power iterations (paper §A.4: 4)
+    pub n_iter: usize,
+    pub seed: u64,
+}
+
+impl QerConfig {
+    pub fn new(method: Method, rank: usize, scaling_kind: ScalingKind) -> Self {
+        QerConfig { method, rank, scaling_kind, n_iter: 4, seed: 0 }
+    }
+}
+
+/// Result of reconstructing one weight matrix.
+#[derive(Clone, Debug)]
+pub struct QerResult {
+    pub qdeq: Mat,
+    pub l: Mat,
+    pub r: Mat,
+    pub k_star: usize,
+    pub selection: Option<RankSelection>,
+}
+
+impl QerResult {
+    pub fn reconstruct(&self) -> Mat {
+        if self.l.cols == 0 {
+            self.qdeq.clone()
+        } else {
+            self.qdeq.add(&matmul(&self.l, &self.r))
+        }
+    }
+
+    pub fn weight_error(&self, w: &Mat) -> f64 {
+        w.sub(&self.reconstruct()).frob()
+    }
+
+    pub fn scaled_error(&self, w: &Mat, scaling: &Scaling) -> f64 {
+        scaling.apply(&w.sub(&self.reconstruct())).frob()
+    }
+
+    fn from_srr(out: SrrOutput) -> QerResult {
+        QerResult {
+            qdeq: out.qdeq,
+            l: out.l,
+            r: out.r,
+            k_star: out.k_star,
+            selection: Some(out.selection),
+        }
+    }
+}
+
+/// Residual-only correction: LR = S⁻¹ SVD_r(S(W − Q)).
+fn residual_correction(
+    w: &Mat,
+    qdeq: &Mat,
+    scaling: &Scaling,
+    rank: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+) -> (Mat, Mat) {
+    let resid = scaling.apply(&w.sub(qdeq));
+    let svd = randomized_svd(&resid, rank, n_iter, rng);
+    let (lu, rv) = truncated_from(&svd, rank);
+    (scaling.unapply(&lu), rv)
+}
+
+/// Run `cfg.method` on one weight matrix.
+///
+/// `scaling` must already be built for this layer's calibration
+/// activations (the coordinator owns that); `ctx` carries the Hessian /
+/// seed for GPTQ / QuIP#.
+pub fn reconstruct(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    ctx: &QuantCtx,
+    cfg: &QerConfig,
+) -> QerResult {
+    let mut rng = Rng::new(cfg.seed ^ 0xD1CE_BA5E);
+    let (m, n) = (w.rows, w.cols);
+    match cfg.method {
+        Method::WOnly => QerResult {
+            qdeq: quantizer.quantize(w, ctx),
+            l: Mat::zeros(m, 0),
+            r: Mat::zeros(0, n),
+            k_star: 0,
+            selection: None,
+        },
+        Method::Qer => {
+            let qdeq = quantizer.quantize(w, ctx);
+            let (l, r) = residual_correction(w, &qdeq, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            QerResult { qdeq, l, r, k_star: 0, selection: None }
+        }
+        Method::QerSrr => QerResult::from_srr(srr_decompose(
+            w, quantizer, scaling, ctx, cfg.rank, cfg.n_iter, &mut rng,
+        )),
+        Method::SrrSingleSvd => QerResult::from_srr(super::srr::srr_single_svd(
+            w, quantizer, scaling, ctx, cfg.rank, cfg.n_iter, &mut rng,
+        )),
+        Method::IterativeLowRank { iters } => {
+            // LoftQ/LQ-LoRA: Q0 = quant(W); then alternate.
+            let mut qdeq = quantizer.quantize(w, ctx);
+            let mut lr_pair =
+                residual_correction(w, &qdeq, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            for _ in 1..iters.max(1) {
+                let lr = matmul(&lr_pair.0, &lr_pair.1);
+                qdeq = quantizer.quantize(&w.sub(&lr), ctx);
+                lr_pair =
+                    residual_correction(w, &qdeq, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            }
+            QerResult { qdeq, l: lr_pair.0, r: lr_pair.1, k_star: cfg.rank, selection: None }
+        }
+        Method::PreserveOnly => {
+            let sel = super::rank_select::select_k(w, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            let out = srr_with_k(
+                w, quantizer, scaling, ctx, cfg.rank, cfg.rank, cfg.n_iter, &mut rng, sel,
+            );
+            QerResult::from_srr(out)
+        }
+        Method::FixedSplitHalf => {
+            let sel = super::rank_select::select_k(w, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            let out = srr_with_k(
+                w, quantizer, scaling, ctx, cfg.rank, cfg.rank / 2, cfg.n_iter, &mut rng, sel,
+            );
+            QerResult::from_srr(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::MxintQuantizer;
+    use crate::scaling::Scaling;
+    use crate::util::Rng;
+
+    fn aniso(m: usize, n: usize, decay: f32, rng: &mut Rng) -> Mat {
+        let (qu, _) = crate::linalg::qr_thin(&Mat::randn(m, m.min(n), 1.0, rng));
+        let (qv, _) = crate::linalg::qr_thin(&Mat::randn(n, m.min(n), 1.0, rng));
+        let mut core = Mat::zeros(m.min(n), m.min(n));
+        for i in 0..m.min(n) {
+            *core.at_mut(i, i) = 8.0 / (1.0 + i as f32).powf(decay);
+        }
+        matmul(&matmul(&qu, &core), &qv.transpose())
+    }
+
+    fn run(method: Method, w: &Mat, rank: usize) -> QerResult {
+        let q = MxintQuantizer::new(3, 32);
+        let cfg = QerConfig::new(method, rank, ScalingKind::Identity);
+        reconstruct(w, &q, &Scaling::Identity, &QuantCtx::default(), &cfg)
+    }
+
+    #[test]
+    fn every_method_beats_or_matches_wonly() {
+        let mut rng = Rng::new(400);
+        let w = aniso(64, 96, 1.0, &mut rng);
+        let base = run(Method::WOnly, &w, 16).weight_error(&w);
+        for method in [
+            Method::Qer,
+            Method::QerSrr,
+            Method::SrrSingleSvd,
+            Method::IterativeLowRank { iters: 5 },
+            Method::PreserveOnly,
+            Method::FixedSplitHalf,
+        ] {
+            let err = run(method, &w, 16).weight_error(&w);
+            assert!(err <= base * 1.001, "{}: {err} > w-only {base}", method.label());
+        }
+    }
+
+    #[test]
+    fn rank_budget_is_respected_by_all_methods() {
+        let mut rng = Rng::new(401);
+        let w = aniso(48, 64, 0.9, &mut rng);
+        for method in [
+            Method::Qer,
+            Method::QerSrr,
+            Method::SrrSingleSvd,
+            Method::IterativeLowRank { iters: 3 },
+            Method::PreserveOnly,
+            Method::FixedSplitHalf,
+        ] {
+            let res = run(method, &w, 12);
+            assert!(res.l.cols <= 12, "{} rank overflow", method.label());
+            assert_eq!(res.l.cols, res.r.rows);
+        }
+    }
+
+    #[test]
+    fn srr_no_worse_than_qer_same_budget() {
+        let mut rng = Rng::new(402);
+        let w = aniso(96, 96, 1.3, &mut rng);
+        let qer = run(Method::Qer, &w, 24).weight_error(&w);
+        let srr = run(Method::QerSrr, &w, 24).weight_error(&w);
+        assert!(srr <= qer * 1.02, "srr {srr} vs qer {qer}");
+    }
+
+    #[test]
+    fn iterative_improves_over_single_shot_qer_at_low_bits() {
+        let mut rng = Rng::new(403);
+        let w = aniso(64, 64, 1.2, &mut rng);
+        let q = MxintQuantizer::new(2, 32);
+        let ctx = QuantCtx::default();
+        let one = reconstruct(
+            &w, &q, &Scaling::Identity, &ctx,
+            &QerConfig::new(Method::Qer, 16, ScalingKind::Identity),
+        );
+        let it = reconstruct(
+            &w, &q, &Scaling::Identity, &ctx,
+            &QerConfig::new(Method::IterativeLowRank { iters: 5 }, 16, ScalingKind::Identity),
+        );
+        assert!(it.weight_error(&w) <= one.weight_error(&w) * 1.05);
+    }
+
+    #[test]
+    fn selection_metadata_present_only_for_srr_family() {
+        let mut rng = Rng::new(404);
+        let w = aniso(32, 64, 1.0, &mut rng);
+        assert!(run(Method::Qer, &w, 8).selection.is_none());
+        let srr = run(Method::QerSrr, &w, 8);
+        assert!(srr.selection.is_some());
+        assert_eq!(srr.selection.as_ref().unwrap().k_star, srr.k_star);
+    }
+}

@@ -1,0 +1,81 @@
+//! Quantization Error Reconstruction: the paper's algorithm (SRR) and
+//! every baseline it compares against.
+//!
+//! All methods produce `W_hat = Qdeq + L·R` with rank(L·R) ≤ r:
+//!
+//! | method        | scaling S      | rank allocation                     |
+//! |---------------|----------------|-------------------------------------|
+//! | w-only        | —              | no correction                       |
+//! | ZeroQuant-V2  | I              | k = 0 (all rank on residual)        |
+//! | LQER          | diag rms       | k = 0                               |
+//! | QERA-approx   | diag abs-mean  | k = 0                               |
+//! | QERA-exact    | (E[xxᵀ])^{1/2} | k = 0                               |
+//! | LQ-LoRA init  | any            | k = r via iterative Q/LR refinement |
+//! | SVDQuant-like | any            | k = r one-shot (preserve only)      |
+//! | ODLRI-like    | any            | fixed k = r/2 split                 |
+//! | **SRR**       | any            | k = k\* from Eq. (5)                |
+//!
+//! SRR composes with any scaling/quantizer pair ("plug-and-play"): the
+//! experiment grid therefore crosses {LQER, QERA-approx, QERA-exact} ×
+//! {±SRR}, exactly like the paper's Table 1.
+
+pub mod rank_select;
+pub mod srr;
+pub mod methods;
+pub mod assumptions;
+
+pub use methods::{reconstruct, Method, QerConfig, QerResult};
+pub use rank_select::{rho_profile, select_k, RankSelection};
+pub use srr::{srr_decompose, SrrOutput};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{MxintQuantizer, QuantCtx, Quantizer};
+    use crate::scaling::Scaling;
+    use crate::tensor::{matmul, Mat};
+    use crate::util::Rng;
+
+    /// End-to-end sanity on the module's headline claim: under the same
+    /// rank budget, SRR's scaled reconstruction error is no worse than
+    /// plain QER on a weight with strong low-rank structure.
+    #[test]
+    fn srr_beats_qer_on_anisotropic_weight() {
+        let mut rng = Rng::new(200);
+        // strongly anisotropic W: power-law spectrum
+        let u = Mat::randn(96, 96, 1.0, &mut rng);
+        let v = Mat::randn(96, 96, 1.0, &mut rng);
+        let (qu, _) = crate::linalg::qr_thin(&u);
+        let (qv, _) = crate::linalg::qr_thin(&v);
+        let mut core = Mat::zeros(96, 96);
+        for i in 0..96 {
+            *core.at_mut(i, i) = 10.0 / (1.0 + i as f32).powf(1.2);
+        }
+        let w = matmul(&matmul(&qu, &core), &qv.transpose());
+
+        let quantizer = MxintQuantizer::new(2, 32);
+        let scaling = Scaling::Identity;
+        let ctx = QuantCtx::default();
+        let r = 32;
+
+        // plain QER (k = 0)
+        let q = quantizer.quantize(&w, &ctx);
+        let resid = w.sub(&q);
+        let svd = crate::linalg::jacobi_svd(&resid);
+        let qer_err = {
+            let rec = q.add(&svd.reconstruct(r));
+            w.sub(&rec).frob()
+        };
+
+        // SRR
+        let out = srr_decompose(&w, &quantizer, &scaling, &ctx, r, 4, &mut rng);
+        let lr = matmul(&out.l, &out.r);
+        let srr_err = w.sub(&out.qdeq.add(&lr)).frob();
+
+        assert!(out.k_star > 0, "expected preservation on anisotropic W");
+        assert!(
+            srr_err < qer_err * 1.02,
+            "srr {srr_err} should be <= qer {qer_err}"
+        );
+    }
+}

@@ -1,0 +1,271 @@
+//! Structured Residual Reconstruction — Algorithm 1 of the paper.
+//!
+//! Given (W, S, Q, r):
+//!   1. probe E ~ U[-1,1]^{m×n}; k* ← argmin ρ_k(SW)·ρ_{r−k}(SE)   (Eq. 5)
+//!   2. L⁽¹⁾R⁽¹⁾ ← S⁻¹ SVD_{k*}(SW)                     (preserve)
+//!   3. Q ← quantize(W − L⁽¹⁾R⁽¹⁾)                      (quantize)
+//!   4. E_k ← W − L⁽¹⁾R⁽¹⁾ − Q                          (quantization error)
+//!   5. L⁽²⁾R⁽²⁾ ← S⁻¹ SVD_{r−k*}(S·E_k)                (reconstruct)
+//!   6. L ← [L⁽¹⁾ L⁽²⁾],  R ← [R⁽¹⁾; R⁽²⁾]
+//!
+//! The Eq. (6) variant replaces step 5 with a single rank-r SVD of the
+//! total residual W − Q (optimal for fixed Q by Eckart–Young); both are
+//! exposed and compared by the ablation bench.
+
+use crate::linalg::{randomized_svd, truncated_from};
+use crate::quant::{QuantCtx, Quantizer};
+use crate::scaling::Scaling;
+use crate::tensor::{matmul, Mat};
+use crate::util::Rng;
+
+use super::rank_select::{select_k, RankSelection};
+
+/// SRR decomposition output. `l`/`r` hold the concatenated factors;
+/// columns `0..k_star` of `l` (rows of `r`) are the preserved component.
+#[derive(Clone, Debug)]
+pub struct SrrOutput {
+    pub qdeq: Mat,
+    pub l: Mat,
+    pub r: Mat,
+    pub k_star: usize,
+    pub selection: RankSelection,
+}
+
+impl SrrOutput {
+    /// W_hat = Qdeq + L·R.
+    pub fn reconstruct(&self) -> Mat {
+        self.qdeq.add(&matmul(&self.l, &self.r))
+    }
+
+    /// (L⁽¹⁾, R⁽¹⁾): the preserved-subspace factors.
+    pub fn preserved(&self) -> (Mat, Mat) {
+        (self.l.cols_slice(0, self.k_star), self.r.rows_slice(0, self.k_star))
+    }
+
+    /// (L⁽²⁾, R⁽²⁾): the error-reconstruction factors.
+    pub fn residual(&self) -> (Mat, Mat) {
+        (
+            self.l.cols_slice(self.k_star, self.l.cols),
+            self.r.rows_slice(self.k_star, self.r.rows),
+        )
+    }
+}
+
+/// Algorithm 1. `n_iter` = randomized-SVD power iterations (paper: 4).
+pub fn srr_decompose(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    ctx: &QuantCtx,
+    rank: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+) -> SrrOutput {
+    let selection = select_k(w, scaling, rank, n_iter, rng);
+    srr_with_k(w, quantizer, scaling, ctx, rank, selection.k_star, n_iter, rng, selection)
+}
+
+/// SRR with a fixed split k (used by the Fig. 2 sweep and the ODLRI-like
+/// fixed-split baseline). Rank-0 / rank-r extremes degrade gracefully.
+#[allow(clippy::too_many_arguments)]
+pub fn srr_with_k(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    ctx: &QuantCtx,
+    rank: usize,
+    k: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+    selection: RankSelection,
+) -> SrrOutput {
+    assert!(k <= rank);
+    let (m, n) = (w.rows, w.cols);
+
+    // (2) preserve: L1·R1 = S⁻¹ SVD_k(SW)
+    let (l1, r1) = if k > 0 {
+        let sw = scaling.apply(w);
+        let svd = randomized_svd(&sw, k, n_iter, rng);
+        let (lu, rv) = truncated_from(&svd, k);
+        (scaling.unapply(&lu), rv)
+    } else {
+        (Mat::zeros(m, 0), Mat::zeros(0, n))
+    };
+    let preserved = if k > 0 { matmul(&l1, &r1) } else { Mat::zeros(m, n) };
+
+    // (3) quantize the residual
+    let qdeq = quantizer.quantize(&w.sub(&preserved), ctx);
+
+    // (4)+(5) reconstruct the induced quantization error with rank r−k
+    let ek = w.sub(&preserved).sub(&qdeq);
+    let rk = rank - k;
+    let (l2, r2) = if rk > 0 {
+        let sek = scaling.apply(&ek);
+        let svd = randomized_svd(&sek, rk, n_iter, rng);
+        let (lu, rv) = truncated_from(&svd, rk);
+        (scaling.unapply(&lu), rv)
+    } else {
+        (Mat::zeros(m, 0), Mat::zeros(0, n))
+    };
+
+    // (6) pack
+    let l = l1.hcat(&l2);
+    let r = r1.vcat(&r2);
+    SrrOutput { qdeq, l, r, k_star: k, selection }
+}
+
+/// Eq. (6) variant: same preserve-then-quantize Q, but one rank-r SVD of
+/// the *total* residual W − Q replaces the two-part packing.
+pub fn srr_single_svd(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    ctx: &QuantCtx,
+    rank: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+) -> SrrOutput {
+    let selection = select_k(w, scaling, rank, n_iter, rng);
+    let k = selection.k_star;
+    let (m, n) = (w.rows, w.cols);
+
+    let preserved = if k > 0 {
+        let sw = scaling.apply(w);
+        let svd = randomized_svd(&sw, k, n_iter, rng);
+        scaling.unapply(&svd.reconstruct(k))
+    } else {
+        Mat::zeros(m, n)
+    };
+    let qdeq = quantizer.quantize(&w.sub(&preserved), ctx);
+
+    let resid = w.sub(&qdeq);
+    let sresid = scaling.apply(&resid);
+    let svd = randomized_svd(&sresid, rank, n_iter, rng);
+    let (lu, rv) = truncated_from(&svd, rank);
+    let l = scaling.unapply(&lu);
+    SrrOutput { qdeq, l, r: rv, k_star: k, selection }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::MxintQuantizer;
+    use crate::util::prop;
+
+    fn aniso(m: usize, n: usize, decay: f32, rng: &mut Rng) -> Mat {
+        let (qu, _) = crate::linalg::qr_thin(&Mat::randn(m, m.min(n), 1.0, rng));
+        let (qv, _) = crate::linalg::qr_thin(&Mat::randn(n, m.min(n), 1.0, rng));
+        let mut core = Mat::zeros(m.min(n), m.min(n));
+        for i in 0..m.min(n) {
+            *core.at_mut(i, i) = 8.0 / (1.0 + i as f32).powf(decay);
+        }
+        matmul(&matmul(&qu, &core), &qv.transpose())
+    }
+
+    /// Dominant low-rank structure + dense noise floor: the regime where
+    /// the paper's interior split k* ∈ (0, r) appears.
+    fn structured(m: usize, n: usize, dom: usize, rng: &mut Rng) -> Mat {
+        let sig = aniso(m, n, 2.5, rng);
+        let svd = crate::linalg::jacobi_svd(&sig);
+        svd.reconstruct(dom).add(&Mat::randn(m, n, 0.15, rng))
+    }
+
+    #[test]
+    fn output_shapes_and_rank_bound() {
+        let mut rng = Rng::new(310);
+        let w = aniso(64, 96, 1.0, &mut rng);
+        let q = MxintQuantizer::new(3, 32);
+        let out = srr_decompose(&w, &q, &Scaling::Identity, &QuantCtx::default(), 16, 2, &mut rng);
+        assert_eq!((out.l.rows, out.l.cols), (64, 16));
+        assert_eq!((out.r.rows, out.r.cols), (16, 96));
+        assert_eq!((out.qdeq.rows, out.qdeq.cols), (64, 96));
+        let (l1, r1) = out.preserved();
+        let (l2, r2) = out.residual();
+        assert_eq!(l1.cols, out.k_star);
+        assert_eq!(l2.cols, 16 - out.k_star);
+        assert_eq!(r1.rows + r2.rows, 16);
+    }
+
+    #[test]
+    fn k_zero_equals_plain_qer() {
+        let mut rng = Rng::new(311);
+        let w = Mat::randn(48, 64, 1.0, &mut rng);
+        let q = MxintQuantizer::new(3, 32);
+        let ctx = QuantCtx::default();
+        let sel = select_k(&w, &Scaling::Identity, 8, 2, &mut rng);
+        let mut rng2 = Rng::new(999);
+        let out = srr_with_k(&w, &q, &Scaling::Identity, &ctx, 8, 0, 2, &mut rng2, sel);
+        // Q must be the straight quantization of W
+        assert_eq!(out.qdeq, q.quantize(&w, &ctx));
+        // LR is the best rank-8 fit of the residual (allow randomized slack)
+        let resid = w.sub(&out.qdeq);
+        let exact = crate::linalg::jacobi_svd(&resid).reconstruct(8);
+        let lr = matmul(&out.l, &out.r);
+        let got = resid.sub(&lr).frob();
+        let best = resid.sub(&exact).frob();
+        assert!(got <= best * 1.05, "got {got} vs optimal {best}");
+    }
+
+    #[test]
+    fn k_full_preserve_only() {
+        let mut rng = Rng::new(312);
+        let w = aniso(48, 64, 1.3, &mut rng);
+        let q = MxintQuantizer::new(3, 32);
+        let sel = select_k(&w, &Scaling::Identity, 8, 2, &mut rng);
+        let out = srr_with_k(&w, &q, &Scaling::Identity, &QuantCtx::default(), 8, 8, 2, &mut rng, sel);
+        let (l2, _) = out.residual();
+        assert_eq!(l2.cols, 0);
+    }
+
+    #[test]
+    fn preserved_factor_carries_more_energy_than_residual() {
+        // Fig. 3a: singular values of L1R1 dominate L2R2
+        let mut rng = Rng::new(313);
+        let w = structured(96, 96, 10, &mut rng);
+        let q = MxintQuantizer::new(3, 32);
+        let out = srr_decompose(&w, &q, &Scaling::Identity, &QuantCtx::default(), 24, 4, &mut rng);
+        assert!(out.k_star > 0 && out.k_star < 24, "need a genuine split, k*={}", out.k_star);
+        let (l1, r1) = out.preserved();
+        let (l2, r2) = out.residual();
+        let e1 = matmul(&l1, &r1).frob() / out.k_star as f64;
+        let e2 = matmul(&l2, &r2).frob() / (24 - out.k_star) as f64;
+        assert!(e1 > e2, "preserved per-rank energy {e1} !> residual {e2}");
+    }
+
+    #[test]
+    fn single_svd_variant_never_worse_than_two_part() {
+        // For the same preserve-then-quantize Q, Eq. (6)'s rank-r SVD of
+        // the total residual is the Eckart–Young optimum, so it can only
+        // match or beat the two-part packing (up to randomized-SVD slack).
+        let mut rng = Rng::new(314);
+        for seed in [314u64, 315, 316] {
+            let mut wrng = Rng::new(seed);
+            let w = structured(64, 64, 6, &mut wrng);
+            let q = MxintQuantizer::new(3, 32);
+            let ctx = QuantCtx::default();
+            let two = srr_decompose(&w, &q, &Scaling::Identity, &ctx, 16, 4, &mut rng);
+            let one = srr_single_svd(&w, &q, &Scaling::Identity, &ctx, 16, 4, &mut rng);
+            let e_two = w.sub(&two.reconstruct()).frob();
+            let e_one = w.sub(&one.reconstruct()).frob();
+            assert!(e_one <= e_two * 1.05, "e1={e_one} e2={e_two}");
+        }
+    }
+
+    #[test]
+    fn prop_reconstruction_never_worse_than_wonly() {
+        prop::check(0xC3, 10, |g| {
+            let m = 32 + g.rng.below(32);
+            let nb = 1 + g.rng.below(2);
+            let n = nb * 32;
+            let decay = g.f32_in(0.3, 1.5);
+            let w = aniso(m, n, decay, &mut g.rng);
+            let q = MxintQuantizer::new(3, 32);
+            let ctx = QuantCtx::default();
+            let rank = 8;
+            let out = srr_decompose(&w, &q, &Scaling::Identity, &ctx, rank, 2, &mut g.rng);
+            let srr_err = w.sub(&out.reconstruct()).frob();
+            let wonly_err = w.sub(&q.quantize(&w, &ctx)).frob();
+            assert!(srr_err <= wonly_err * 1.001, "srr {srr_err} > w-only {wonly_err}");
+        });
+    }
+}

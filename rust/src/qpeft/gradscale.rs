@@ -1,0 +1,146 @@
+//! Gradient scaling on the preserved top-k\* directions (paper §4.4).
+//!
+//! * Fixed γ (Eq. 7): attenuate the gradients of the preserved block —
+//!   columns `0..k*` of ∇L and rows `0..k*` of ∇R — by γ ∈ (0, 1); the
+//!   residual directions are untouched.
+//! * SGP (Eq. 8–9, Saha & Roy 2023): rank-wise scaling
+//!   λ_i = (α+1)σ_i / (ασ_i + σ_1), factor (1 − λ_i), with σ_i the
+//!   current magnitude of preserved direction i (‖R row i‖ — L's columns
+//!   stay ~orthonormal from the SVD init).
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GradScale {
+    None,
+    Fixed { gamma: f32 },
+    Sgp { alpha: f32 },
+}
+
+impl GradScale {
+    pub fn label(&self) -> String {
+        match self {
+            GradScale::None => "γ=1".into(),
+            GradScale::Fixed { gamma } => format!("γ={gamma}"),
+            GradScale::Sgp { alpha } => format!("SGP(α={alpha})"),
+        }
+    }
+
+    /// Scale ∇L / ∇R in place for one adapter with preserved rank `k`.
+    /// `r_current` supplies σ_i for SGP (the adapter's current R factor).
+    pub fn apply(&self, k: usize, grad_l: &mut Mat, grad_r: &mut Mat, r_current: &Mat) {
+        if k == 0 {
+            return;
+        }
+        match *self {
+            GradScale::None => {}
+            GradScale::Fixed { gamma } => {
+                scale_block(grad_l, grad_r, k, |_| gamma);
+            }
+            GradScale::Sgp { alpha } => {
+                let sigma: Vec<f32> = (0..k)
+                    .map(|i| {
+                        r_current.row(i).iter().map(|&x| (x * x) as f64).sum::<f64>().sqrt() as f32
+                    })
+                    .collect();
+                let s1 = sigma.iter().cloned().fold(0.0f32, f32::max).max(1e-12);
+                scale_block(grad_l, grad_r, k, |i| {
+                    let si = sigma[i];
+                    let lambda = (alpha + 1.0) * si / (alpha * si + s1);
+                    (1.0 - lambda).max(0.0)
+                });
+            }
+        }
+    }
+}
+
+fn scale_block(grad_l: &mut Mat, grad_r: &mut Mat, k: usize, factor: impl Fn(usize) -> f32) {
+    let k = k.min(grad_l.cols).min(grad_r.rows);
+    for i in 0..grad_l.rows {
+        let row = grad_l.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate().take(k) {
+            *v *= factor(j);
+        }
+    }
+    for i in 0..k {
+        let f = factor(i);
+        for v in grad_r.row_mut(i) {
+            *v *= f;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn grads(rng: &mut Rng) -> (Mat, Mat) {
+        (Mat::randn(8, 6, 1.0, rng), Mat::randn(6, 10, 1.0, rng))
+    }
+
+    #[test]
+    fn fixed_gamma_scales_only_preserved_block() {
+        let mut rng = Rng::new(1);
+        let (gl0, gr0) = grads(&mut rng);
+        let (mut gl, mut gr) = (gl0.clone(), gr0.clone());
+        let rcur = Mat::zeros(6, 10);
+        GradScale::Fixed { gamma: 0.1 }.apply(2, &mut gl, &mut gr, &rcur);
+        for i in 0..8 {
+            for j in 0..6 {
+                let want = if j < 2 { gl0.at(i, j) * 0.1 } else { gl0.at(i, j) };
+                assert!((gl.at(i, j) - want).abs() < 1e-6);
+            }
+        }
+        for i in 0..6 {
+            for j in 0..10 {
+                let want = if i < 2 { gr0.at(i, j) * 0.1 } else { gr0.at(i, j) };
+                assert!((gr.at(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_one_equals_none() {
+        let mut rng = Rng::new(2);
+        let (gl0, gr0) = grads(&mut rng);
+        let (mut gl, mut gr) = (gl0.clone(), gr0.clone());
+        let rcur = Mat::zeros(6, 10);
+        GradScale::Fixed { gamma: 1.0 }.apply(3, &mut gl, &mut gr, &rcur);
+        assert_eq!(gl, gl0);
+        assert_eq!(gr, gr0);
+    }
+
+    #[test]
+    fn k_zero_is_noop_for_all_modes() {
+        let mut rng = Rng::new(3);
+        for scale in [GradScale::Fixed { gamma: 0.0 }, GradScale::Sgp { alpha: 5.0 }] {
+            let (gl0, gr0) = grads(&mut rng);
+            let (mut gl, mut gr) = (gl0.clone(), gr0.clone());
+            scale.apply(0, &mut gl, &mut gr, &gr0);
+            assert_eq!(gl, gl0);
+            assert_eq!(gr, gr0);
+        }
+    }
+
+    #[test]
+    fn sgp_attenuates_dominant_direction_most() {
+        let mut rng = Rng::new(4);
+        let (gl0, gr0) = grads(&mut rng);
+        let (mut gl, mut gr) = (gl0.clone(), gr0.clone());
+        // R with row 0 large (σ1), row 1 small
+        let mut rcur = Mat::zeros(6, 10);
+        for v in rcur.row_mut(0) {
+            *v = 5.0;
+        }
+        for v in rcur.row_mut(1) {
+            *v = 0.5;
+        }
+        GradScale::Sgp { alpha: 5.0 }.apply(2, &mut gl, &mut gr, &rcur);
+        // σ_1 = σ_max: λ = 1 → factor 0; σ small: λ < 1 → factor > 0
+        let f0 = gr.at(0, 0) / gr0.at(0, 0);
+        let f1 = gr.at(1, 0) / gr0.at(1, 0);
+        assert!(f0.abs() < 1e-6, "dominant direction should be fully attenuated, f0={f0}");
+        assert!(f1 > 0.05 && f1 < 1.0, "weak direction partially attenuated, f1={f1}");
+    }
+}

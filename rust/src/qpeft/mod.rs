@@ -1,0 +1,27 @@
+//! QPEFT: Quantized Parameter-Efficient Fine-Tuning (paper §4.4).
+//!
+//! The quantized backbone (Qdeq per linear + embeddings/norms) is frozen;
+//! the (L, R) adapters plus the task head train through the AOT
+//! `qpeft_*_train_*` artifacts (jax.value_and_grad lowered once), with
+//! the optimizer, gradient scaling on the preserved directions (Eq. 7 /
+//! SGP Eq. 8–9) and the training loop all owned by rust.
+//!
+//! * [`state`] — frozen + trainable tensors in artifact arg order.
+//! * [`init`] — the initialization strategies under comparison:
+//!   QLoRA / LoftQ / QERA / LQ-LoRA / **SRR** (Table 3's rows).
+//! * [`optim`] — AdamW.
+//! * [`gradscale`] — γ attenuation + SGP rank-wise scaling of the
+//!   preserved top-k\* directions.
+//! * [`trainer`] — the step/eval loop.
+
+pub mod state;
+pub mod init;
+pub mod optim;
+pub mod gradscale;
+pub mod trainer;
+
+pub use gradscale::GradScale;
+pub use init::{init_qpeft, QpeftInit};
+pub use optim::AdamW;
+pub use state::{AdapterEntry, QpeftState};
+pub use trainer::QpeftTrainer;

@@ -1,0 +1,155 @@
+//! QPEFT parameter state: frozen backbone + trainable adapters/head, laid
+//! out exactly like the `qpeft_*` artifacts' positional signature:
+//!
+//!   frozen:    embed, per-layer {ln1, Qdeq(wq,wk,wv,wo), ln2,
+//!              Qdeq(gate,up,down)}, norm_f
+//!   trainable: (L, R) per linear (linear_names order), head
+//!   data:      tokens [, labels]
+
+use crate::model::Params;
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::TensorValue;
+use crate::tensor::Mat;
+
+/// One linear's adapter pair with its preserved-rank annotation.
+#[derive(Clone, Debug)]
+pub struct AdapterEntry {
+    pub name: String,
+    pub l: Mat,
+    pub r: Mat,
+    /// leading columns of `l` / rows of `r` spanning the preserved
+    /// subspace (0 for non-SRR inits)
+    pub k_star: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QpeftState {
+    /// frozen args in artifact order (embed, ln/Qdeq interleaved, norm_f)
+    pub frozen: Vec<TensorValue>,
+    pub adapters: Vec<AdapterEntry>,
+    pub head: Mat,
+}
+
+impl QpeftState {
+    /// Frozen arg ordering for `cfg`: all params except `head`, with the
+    /// linears holding their dequantized Qdeq.
+    pub fn frozen_from_params(params: &Params, cfg: &ModelCfg) -> Vec<TensorValue> {
+        Params::param_order(cfg)
+            .iter()
+            .filter(|n| n.as_str() != "head")
+            .map(|n| params.get(n).expect("param").clone())
+            .collect()
+    }
+
+    /// Trainable tensors in artifact order: L0, R0, L1, R1, …, head.
+    pub fn trainable_mats(&self) -> Vec<&Mat> {
+        let mut out = Vec::with_capacity(self.adapters.len() * 2 + 1);
+        for a in &self.adapters {
+            out.push(&a.l);
+            out.push(&a.r);
+        }
+        out.push(&self.head);
+        out
+    }
+
+    pub fn trainable_mats_mut(&mut self) -> Vec<&mut Mat> {
+        let mut out = Vec::with_capacity(self.adapters.len() * 2 + 1);
+        for a in &mut self.adapters {
+            out.push(&mut a.l);
+            out.push(&mut a.r);
+        }
+        out.push(&mut self.head);
+        out
+    }
+
+    /// Full positional argument list for a train/fwd artifact call.
+    pub fn artifact_inputs(&self, data: &[TensorValue]) -> Vec<TensorValue> {
+        let mut inputs = self.frozen.clone();
+        for a in &self.adapters {
+            inputs.push(TensorValue::from_mat(&a.l));
+            inputs.push(TensorValue::from_mat(&a.r));
+        }
+        inputs.push(TensorValue::from_mat(&self.head));
+        inputs.extend_from_slice(data);
+        inputs
+    }
+
+    pub fn rank(&self) -> usize {
+        self.adapters.first().map(|a| a.l.cols).unwrap_or(0)
+    }
+
+    /// Trainable parameter count (the "adapter budget" reported in logs).
+    pub fn trainable_count(&self) -> usize {
+        self.trainable_mats().iter().map(|m| m.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::synth_lm_params;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 24,
+            seq_len: 8,
+        }
+    }
+
+    fn toy_state(c: &ModelCfg, rank: usize) -> QpeftState {
+        let params = synth_lm_params(c, 1, c.vocab);
+        let frozen = QpeftState::frozen_from_params(&params, c);
+        let adapters = Params::linear_names(c)
+            .into_iter()
+            .map(|name| {
+                let shape = Params::param_shape(&name, c, c.vocab);
+                AdapterEntry {
+                    name,
+                    l: Mat::zeros(shape[0], rank),
+                    r: Mat::zeros(rank, shape[1]),
+                    k_star: 2,
+                }
+            })
+            .collect();
+        QpeftState { frozen, adapters, head: Mat::zeros(c.d_model, 4) }
+    }
+
+    #[test]
+    fn frozen_order_excludes_head() {
+        let c = cfg();
+        let st = toy_state(&c, 4);
+        // 1 embed + 9 per layer + norm_f
+        assert_eq!(st.frozen.len(), 1 + 9 + 1);
+    }
+
+    #[test]
+    fn artifact_inputs_layout() {
+        let c = cfg();
+        let st = toy_state(&c, 4);
+        let tokens = TensorValue::i32(vec![2, 8], vec![0; 16]);
+        let labels = TensorValue::i32(vec![2], vec![0, 1]);
+        let inputs = st.artifact_inputs(&[tokens, labels]);
+        // frozen(11) + adapters(7*2) + head + tokens + labels
+        assert_eq!(inputs.len(), 11 + 14 + 1 + 2);
+        assert_eq!(st.rank(), 4);
+        assert_eq!(st.trainable_mats().len(), 15);
+    }
+
+    #[test]
+    fn trainable_count_explicit() {
+        let c = cfg();
+        let st = toy_state(&c, 4);
+        let mut want = 0;
+        for name in Params::linear_names(&c) {
+            let s = Params::param_shape(&name, &c, c.vocab);
+            want += s[0] * 4 + 4 * s[1];
+        }
+        want += 16 * 4; // head
+        assert_eq!(st.trainable_count(), want);
+    }
+}

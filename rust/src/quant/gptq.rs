@@ -1,0 +1,159 @@
+//! GPTQ (Frantar et al. 2023): Hessian-guided sequential quantization
+//! with error feedback.
+//!
+//! Orientation note: our weights are stored as W (m_in × n_out) applied as
+//! y = x·W, so GPTQ's per-column loop over *input* dimensions becomes a
+//! loop over *rows* here. For each input dim i (in order):
+//!
+//!   q_i   = round(w_i)                     (per-group scalar grid)
+//!   err_i = (w_i − q_i) / [H⁻¹]_{ii}
+//!   w_j  ← w_j − [H⁻¹]_{ji} · err_i        for all j > i
+//!
+//! with H = XᵀX/n + λ·mean(diag)·I (damping λ = 0.01, matching §A.2).
+//! Without a Hessian in the ctx, H = I and GPTQ degrades gracefully to
+//! plain nearest rounding (the error-feedback term vanishes).
+
+use super::{QuantCtx, Quantizer, UniformQuantizer};
+use crate::linalg::cholesky_solve;
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct GptqQuantizer {
+    pub bits: u32,
+    pub group: usize,
+    pub damp: f32,
+}
+
+impl GptqQuantizer {
+    pub fn new(bits: u32, group: usize) -> Self {
+        GptqQuantizer { bits, group, damp: 0.01 }
+    }
+
+    fn hinv(&self, m: usize, ctx: &QuantCtx) -> Mat {
+        match &ctx.hessian {
+            None => Mat::eye(m),
+            Some(h) => {
+                assert_eq!(h.rows, m, "hessian dim mismatch");
+                let mut hd = h.clone();
+                let mean_diag: f64 =
+                    (0..m).map(|i| h.at(i, i) as f64).sum::<f64>() / m as f64;
+                let mut damp = self.damp as f64 * mean_diag.max(1e-12);
+                // auto-increment damping until PD (paper: +0.0025 steps)
+                loop {
+                    let mut try_h = hd.clone();
+                    for i in 0..m {
+                        *try_h.at_mut(i, i) = h.at(i, i) + damp as f32;
+                    }
+                    if let Some(inv) = cholesky_solve(&try_h, &Mat::eye(m)) {
+                        return inv;
+                    }
+                    damp += 0.0025 * mean_diag.max(1e-12);
+                    hd = h.clone();
+                }
+            }
+        }
+    }
+}
+
+impl Quantizer for GptqQuantizer {
+    fn name(&self) -> String {
+        format!("gptq{}g{}", self.bits, self.group)
+    }
+
+    fn effective_bits(&self) -> f64 {
+        self.bits as f64 + 32.0 / self.group as f64
+    }
+
+    fn quantize(&self, w: &Mat, ctx: &QuantCtx) -> Mat {
+        let (m, n) = (w.rows, w.cols);
+        let hinv = self.hinv(m, ctx);
+        let inner = UniformQuantizer::new(self.bits, self.group.min(n), false);
+        let mut work = w.clone();
+        let mut out = Mat::zeros(m, n);
+
+        for i in 0..m {
+            // quantize row i with the scalar grid
+            let mut qrow = work.row(i).to_vec();
+            for chunk in qrow.chunks_mut(self.group.min(n)) {
+                inner.qdq_slice(chunk);
+            }
+            let dii = hinv.at(i, i).max(1e-12);
+            // propagate the compensated error into the not-yet-quantized rows
+            let err: Vec<f32> = work
+                .row(i)
+                .iter()
+                .zip(&qrow)
+                .map(|(wv, qv)| (wv - qv) / dii)
+                .collect();
+            for j in (i + 1)..m {
+                let hji = hinv.at(j, i);
+                if hji != 0.0 {
+                    let row_j = work.row_mut(j);
+                    for (rv, &ev) in row_j.iter_mut().zip(&err) {
+                        *rv -= hji * ev;
+                    }
+                }
+            }
+            out.row_mut(i).copy_from_slice(&qrow);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::Rng;
+
+    fn calib_gram(m: usize, n_samples: usize, rng: &mut Rng) -> (Mat, Mat) {
+        let x = Mat::randn(n_samples, m, 1.0, rng);
+        let gram = crate::tensor::matmul_tn(&x, &x).scale(1.0 / n_samples as f32);
+        (x, gram)
+    }
+
+    #[test]
+    fn without_hessian_equals_plain_rounding() {
+        let mut rng = Rng::new(90);
+        let w = Mat::randn(16, 64, 1.0, &mut rng);
+        let g = GptqQuantizer::new(3, 64);
+        let got = g.quantize(&w, &QuantCtx::default());
+        let want = UniformQuantizer::new(3, 64, false).quantize(&w, &QuantCtx::default());
+        assert!(got.allclose(&want, 1e-6));
+    }
+
+    #[test]
+    fn hessian_feedback_reduces_activation_error() {
+        // GPTQ's whole point: ‖X(W − Q)‖ is smaller than nearest rounding's.
+        let mut rng = Rng::new(91);
+        let (x, gram) = calib_gram(32, 256, &mut rng);
+        // correlated weight rows make error feedback matter
+        let base = Mat::randn(32, 48, 1.0, &mut rng);
+        let mix = Mat::randn(32, 32, 0.2, &mut rng).add(&Mat::eye(32));
+        let w = matmul(&mix, &base);
+
+        let ctx_h = QuantCtx { hessian: Some(gram), seed: 0 };
+        let gptq = GptqQuantizer::new(2, 48).quantize(&w, &ctx_h);
+        let near = UniformQuantizer::new(2, 48, false).quantize(&w, &QuantCtx::default());
+
+        let err_gptq = matmul(&x, &w.sub(&gptq)).frob();
+        let err_near = matmul(&x, &w.sub(&near)).frob();
+        assert!(
+            err_gptq < err_near,
+            "gptq {err_gptq} should beat nearest {err_near}"
+        );
+    }
+
+    #[test]
+    fn output_is_on_the_quantization_grid_rowwise() {
+        // each output row must be exactly representable by the scalar grid
+        // fitted to the *adjusted* row — verify idempotence per row
+        let mut rng = Rng::new(92);
+        let (_, gram) = calib_gram(8, 64, &mut rng);
+        let w = Mat::randn(8, 32, 1.0, &mut rng);
+        let ctx = QuantCtx { hessian: Some(gram), seed: 0 };
+        let q = GptqQuantizer::new(3, 32).quantize(&w, &ctx);
+        let q2 = UniformQuantizer::new(3, 32, false).quantize(&q, &QuantCtx::default());
+        assert!(q.allclose(&q2, 1e-5));
+    }
+}

@@ -1,0 +1,88 @@
+//! Weight quantizers.
+//!
+//! All quantizers implement [`Quantizer`] and return the *dequantized*
+//! matrix (f32) — the packed low-bit encoding is modeled, not stored,
+//! since every downstream consumer (QER, eval, QPEFT) needs Qdeq.
+//!
+//! * [`mxint`] — MXINT-b, block-32 shared power-of-two exponent
+//!   (Darvish Rouhani et al. 2023); byte-exact vs the Pallas kernel /
+//!   ref.py oracle (checked by the `kernel_parity` integration test).
+//! * [`uniform`] — per-group affine (symmetric/asymmetric) scalar grid.
+//! * [`gptq`] — Hessian-guided sequential rounding with error feedback
+//!   (Frantar et al. 2023): group 128, damping 0.01.
+//! * [`quipsharp`] — QuIP#-sim: randomized two-sided Hadamard incoherence
+//!   + 2-bit grid in the rotated space (lattice codebook substituted by a
+//!   scalar grid; see DESIGN.md §2 substitution table).
+
+mod mxint;
+mod uniform;
+mod gptq;
+mod quipsharp;
+
+pub use gptq::GptqQuantizer;
+pub use mxint::MxintQuantizer;
+pub use quipsharp::QuipSharpQuantizer;
+pub use uniform::UniformQuantizer;
+
+use crate::tensor::Mat;
+
+/// Side information some quantizers need.
+#[derive(Default)]
+pub struct QuantCtx {
+    /// Gram matrix of calibration activations, H = XᵀX / n  (m×m), for GPTQ.
+    pub hessian: Option<Mat>,
+    /// Seed for randomized components (QuIP# sign diagonals).
+    pub seed: u64,
+}
+
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> String;
+    /// Effective bits per weight including shared-exponent/scale overhead.
+    fn effective_bits(&self) -> f64;
+    /// Quantize and immediately dequantize `w`.
+    fn quantize(&self, w: &Mat, ctx: &QuantCtx) -> Mat;
+}
+
+/// The paper's default PTQ quantizer: 3-bit MXINT, block 32 (→ 3.25 bits).
+pub fn default_mxint3() -> MxintQuantizer {
+    MxintQuantizer::new(3, 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Shared sanity: quantization error energy shrinks as bits grow.
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(60);
+        let w = Mat::randn(32, 128, 1.0, &mut rng);
+        let ctx = QuantCtx::default();
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 3, 4, 6, 8] {
+            let q = MxintQuantizer::new(bits, 32).quantize(&w, &ctx);
+            let err = w.sub(&q).frob();
+            assert!(err < prev, "bits={bits}: {err} !< {prev}");
+            prev = err;
+        }
+    }
+
+    /// Relative error scale η_Q is roughly constant across inputs with the
+    /// same quantizer — the empirical backbone of Assumption 4.1.
+    #[test]
+    fn eta_q_is_stable_across_matrices() {
+        let mut rng = Rng::new(61);
+        let ctx = QuantCtx::default();
+        let q3 = MxintQuantizer::new(3, 32);
+        let etas: Vec<f64> = (0..8)
+            .map(|i| {
+                let w = Mat::randn(64, 128, 0.5 + 0.2 * i as f32, &mut rng);
+                let qd = q3.quantize(&w, &ctx);
+                w.sub(&qd).frob() / w.frob()
+            })
+            .collect();
+        let cv = crate::util::stats::coeff_of_variation(&etas);
+        assert!(cv < 0.25, "cv={cv} etas={etas:?}");
+    }
+}

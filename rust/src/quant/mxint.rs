@@ -1,0 +1,151 @@
+//! MXINT-b: block-wise shared power-of-two exponent + signed mantissa.
+//!
+//! Exactly mirrors python/compile/kernels/ref.py::mxint_qdq_ref (and thus
+//! the Pallas kernel): E = floor(log2(max|block|)), scale = 2^(E-b+2),
+//! q = clip(round(w/scale), ±(2^(b-1)−1)), round-half-to-even.
+
+use super::{QuantCtx, Quantizer};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct MxintQuantizer {
+    pub bits: u32,
+    pub block: usize,
+}
+
+impl MxintQuantizer {
+    pub fn new(bits: u32, block: usize) -> Self {
+        assert!((2..=16).contains(&bits));
+        assert!(block > 0);
+        MxintQuantizer { bits, block }
+    }
+
+    /// Quantize one block in place (row-contiguous slice).
+    fn qdq_block(&self, block: &mut [f32]) {
+        let maxabs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            return;
+        }
+        let e = maxabs.log2().floor();
+        let scale = (e - (self.bits as f32 - 2.0)).exp2();
+        let qmax = (1i64 << (self.bits - 1)) as f32 - 1.0;
+        for v in block.iter_mut() {
+            let q = (*v / scale).round_ties_even().clamp(-qmax, qmax);
+            *v = q * scale;
+        }
+    }
+}
+
+impl Quantizer for MxintQuantizer {
+    fn name(&self) -> String {
+        format!("mxint{}b{}", self.bits, self.block)
+    }
+
+    fn effective_bits(&self) -> f64 {
+        self.bits as f64 + 8.0 / self.block as f64
+    }
+
+    fn quantize(&self, w: &Mat, _ctx: &QuantCtx) -> Mat {
+        assert!(
+            w.cols % self.block == 0,
+            "cols {} not divisible by MX block {}",
+            w.cols,
+            self.block
+        );
+        let mut out = w.clone();
+        for i in 0..out.rows {
+            for chunk in out.row_mut(i).chunks_mut(self.block) {
+                self.qdq_block(chunk);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn ref_qdq(w: &Mat, bits: u32, block: usize) -> Mat {
+        // direct transliteration of ref.py
+        let mut out = w.clone();
+        for i in 0..w.rows {
+            let row = out.row_mut(i);
+            for chunk in row.chunks_mut(block) {
+                let maxabs = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                if maxabs == 0.0 {
+                    for v in chunk.iter_mut() {
+                        *v = 0.0;
+                    }
+                    continue;
+                }
+                let e = maxabs.log2().floor();
+                let scale = (e - (bits as f32 - 2.0)).exp2();
+                let qmax = (1i64 << (bits - 1)) as f32 - 1.0;
+                for v in chunk.iter_mut() {
+                    *v = (*v / scale).round_ties_even().clamp(-qmax, qmax) * scale;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference_impl() {
+        let mut rng = Rng::new(70);
+        let w = Mat::randn(16, 96, 1.0, &mut rng);
+        for bits in [2u32, 3, 4, 8] {
+            let q = MxintQuantizer::new(bits, 32).quantize(&w, &QuantCtx::default());
+            assert_eq!(q, ref_qdq(&w, bits, 32));
+        }
+    }
+
+    #[test]
+    fn effective_bits_accounts_for_exponent() {
+        assert!((MxintQuantizer::new(3, 32).effective_bits() - 3.25).abs() < 1e-12);
+        assert!((MxintQuantizer::new(4, 32).effective_bits() - 4.25).abs() < 1e-12);
+        assert!((MxintQuantizer::new(2, 32).effective_bits() - 2.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_blocks_stay_zero_and_idempotent() {
+        let mut rng = Rng::new(71);
+        let mut w = Mat::randn(4, 64, 1.0, &mut rng);
+        for v in w.row_mut(2) {
+            *v = 0.0;
+        }
+        let q = MxintQuantizer::new(3, 32);
+        let ctx = QuantCtx::default();
+        let once = q.quantize(&w, &ctx);
+        assert!(once.row(2).iter().all(|&v| v == 0.0));
+        let twice = q.quantize(&once, &ctx);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn prop_error_bounded_by_one_step() {
+        prop::check(0xA1, 30, |g| {
+            let m = g.dim(12);
+            let nb = g.dim(4);
+            let bits = g.choice(&[2u32, 3, 4, 6]);
+            let scale = g.choice(&[1e-3f32, 1.0, 100.0]);
+            let w = Mat::randn(m, nb * 32, scale, &mut g.rng);
+            let q = MxintQuantizer::new(bits, 32).quantize(&w, &QuantCtx::default());
+            for i in 0..m {
+                for chunk_idx in 0..nb {
+                    let (a, b) = (chunk_idx * 32, (chunk_idx + 1) * 32);
+                    let maxabs = w.row(i)[a..b].iter().fold(0.0f32, |mm, &x| mm.max(x.abs()));
+                    if maxabs == 0.0 {
+                        continue;
+                    }
+                    let step = (maxabs.log2().floor() - (bits as f32 - 2.0)).exp2();
+                    for j in a..b {
+                        let err = (w.at(i, j) - q.at(i, j)).abs();
+                        assert!(err <= step * 1.0001, "err {err} > step {step}");
+                    }
+                }
+            }
+        });
+    }
+}

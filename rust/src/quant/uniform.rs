@@ -1,0 +1,140 @@
+//! Per-group affine scalar quantizer (symmetric or asymmetric).
+//!
+//! The generic low-bit grid: groups of `group` elements along each row
+//! share a scale (and zero point when asymmetric). Used standalone, as
+//! GPTQ's inner rounding step, and as the QuIP#-sim codebook stand-in.
+
+use super::{QuantCtx, Quantizer};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct UniformQuantizer {
+    pub bits: u32,
+    pub group: usize,
+    pub symmetric: bool,
+}
+
+impl UniformQuantizer {
+    pub fn new(bits: u32, group: usize, symmetric: bool) -> Self {
+        assert!((2..=16).contains(&bits));
+        UniformQuantizer { bits, group, symmetric }
+    }
+
+    pub fn qdq_slice(&self, chunk: &mut [f32]) {
+        if self.symmetric {
+            let maxabs = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            if maxabs == 0.0 {
+                return;
+            }
+            let qmax = (1i64 << (self.bits - 1)) as f32 - 1.0;
+            let scale = maxabs / qmax;
+            for v in chunk.iter_mut() {
+                *v = (*v / scale).round_ties_even().clamp(-qmax, qmax) * scale;
+            }
+        } else {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in chunk.iter() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if !(hi > lo) {
+                return;
+            }
+            let levels = ((1u64 << self.bits) - 1) as f32;
+            let scale = (hi - lo) / levels;
+            for v in chunk.iter_mut() {
+                let q = ((*v - lo) / scale).round_ties_even().clamp(0.0, levels);
+                *v = lo + q * scale;
+            }
+        }
+    }
+}
+
+impl Quantizer for UniformQuantizer {
+    fn name(&self) -> String {
+        format!(
+            "uniform{}g{}{}",
+            self.bits,
+            self.group,
+            if self.symmetric { "s" } else { "a" }
+        )
+    }
+
+    fn effective_bits(&self) -> f64 {
+        // one f16 scale (+ f16 zero point when asymmetric) per group
+        let overhead = if self.symmetric { 16.0 } else { 32.0 };
+        self.bits as f64 + overhead / self.group as f64
+    }
+
+    fn quantize(&self, w: &Mat, _ctx: &QuantCtx) -> Mat {
+        let mut out = w.clone();
+        for i in 0..out.rows {
+            for chunk in out.row_mut(i).chunks_mut(self.group) {
+                self.qdq_slice(chunk);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn symmetric_preserves_sign_and_bounds() {
+        let mut rng = Rng::new(80);
+        let w = Mat::randn(8, 128, 1.0, &mut rng);
+        let q = UniformQuantizer::new(4, 64, true).quantize(&w, &QuantCtx::default());
+        for (a, b) in w.data.iter().zip(&q.data) {
+            assert!(a * b >= 0.0 || b.abs() < 1e-6, "sign flip {a} -> {b}");
+        }
+        assert!(q.max_abs() <= w.max_abs() * 1.0001);
+    }
+
+    #[test]
+    fn asymmetric_handles_shifted_data() {
+        let mut rng = Rng::new(81);
+        let mut w = Mat::randn(4, 64, 0.1, &mut rng);
+        for v in w.data.iter_mut() {
+            *v += 5.0; // all positive, far from zero
+        }
+        let qs = UniformQuantizer::new(3, 64, true).quantize(&w, &QuantCtx::default());
+        let qa = UniformQuantizer::new(3, 64, false).quantize(&w, &QuantCtx::default());
+        assert!(w.sub(&qa).frob() < w.sub(&qs).frob(), "asymmetric should win on shifted data");
+    }
+
+    #[test]
+    fn constant_group_roundtrips_exactly_asymmetric() {
+        let w = Mat::from_fn(2, 32, |_, _| 3.7);
+        let q = UniformQuantizer::new(2, 32, false).quantize(&w, &QuantCtx::default());
+        // hi == lo -> group untouched
+        assert!(q.allclose(&w, 0.0));
+    }
+
+    #[test]
+    fn prop_error_bounded_by_half_step() {
+        prop::check(0xB2, 30, |g| {
+            let m = g.dim(8);
+            let groups = g.dim(3);
+            let bits = g.choice(&[2u32, 3, 4]);
+            let group = 32;
+            let w = Mat::randn(m, groups * group, 1.0, &mut g.rng);
+            let q = UniformQuantizer::new(bits, group, false).quantize(&w, &QuantCtx::default());
+            for i in 0..m {
+                for c in 0..groups {
+                    let s = &w.row(i)[c * group..(c + 1) * group];
+                    let (lo, hi) = s
+                        .iter()
+                        .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+                    let step = (hi - lo) / ((1u64 << bits) - 1) as f32;
+                    for j in 0..group {
+                        let err = (w.at(i, c * group + j) - q.at(i, c * group + j)).abs();
+                        assert!(err <= step / 2.0 + 1e-6);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,202 @@
+//! The artifact executor.
+//!
+//! [`Engine`] owns the PJRT CPU client plus a compile cache: each HLO text
+//! artifact is parsed (`HloModuleProto::from_text_file` — text is the
+//! interchange format, see DESIGN.md §6) and compiled at most once, then
+//! executed any number of times from the request path.
+//!
+//! [`Executor`] abstracts execution so the coordinator / eval / QPEFT
+//! stacks are testable without PJRT ([`MockExecutor`]).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor_value::TensorValue;
+
+/// Anything that can run a named artifact on typed host tensors.
+///
+/// NOT `Send`/`Sync`: the underlying PJRT client is `Rc`-based, so one
+/// engine serves one thread; XLA's CPU backend parallelizes internally.
+/// The coordinator's own parallelism lives in the pure-rust quantization
+/// stages, not in artifact execution.
+pub trait Executor {
+    fn run(&self, artifact: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>>;
+    fn manifest(&self) -> &Manifest;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine
+// ---------------------------------------------------------------------------
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: std::cell::RefCell::new(HashMap::new()) })
+    }
+
+    pub fn discover() -> Result<Engine> {
+        Engine::new(Manifest::discover()?)
+    }
+
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of artifacts compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    fn to_literal(t: &TensorValue) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        let lit = match t {
+            TensorValue::F32 { data, .. } => xla::Literal::vec1(data),
+            TensorValue::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<TensorValue> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(TensorValue::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(TensorValue::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            ty => Err(anyhow!("unsupported output element type {ty:?}")),
+        }
+    }
+
+    fn validate_inputs(&self, name: &str, inputs: &[TensorValue]) -> Result<()> {
+        let spec = self.manifest.artifact(name)?;
+        if spec.args.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} args, got {}",
+                spec.args.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (arg, t)) in spec.args.iter().zip(inputs).enumerate() {
+            if arg.shape != t.shape() || arg.dtype != t.dtype() {
+                return Err(anyhow!(
+                    "{name} arg {i} ({}): expected {:?} {}, got {:?} {}",
+                    arg.name,
+                    arg.shape,
+                    arg.dtype,
+                    t.shape(),
+                    t.dtype()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Executor for Engine {
+    fn run(&self, artifact: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        self.validate_inputs(artifact, inputs)?;
+        let exe = self.executable(artifact)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Self::to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // single-device: result[0][0] is the tuple of outputs
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        parts.iter().map(Self::from_literal).collect()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock executor (tests)
+// ---------------------------------------------------------------------------
+
+type MockFn = Box<dyn Fn(&[TensorValue]) -> Vec<TensorValue>>;
+
+/// Test double: routes artifact names to closures and records call counts.
+pub struct MockExecutor {
+    manifest: Manifest,
+    handlers: HashMap<String, MockFn>,
+    pub calls: Mutex<Vec<String>>,
+}
+
+impl MockExecutor {
+    pub fn new(manifest: Manifest) -> Self {
+        MockExecutor { manifest, handlers: HashMap::new(), calls: Mutex::new(vec![]) }
+    }
+
+    /// Minimal empty manifest for pure-coordinator tests.
+    pub fn empty() -> Self {
+        let manifest = Manifest::parse(
+            r#"{"models": {}, "artifacts": [], "constants": {}}"#,
+            std::path::PathBuf::from("/nonexistent"),
+        )
+        .unwrap();
+        Self::new(manifest)
+    }
+
+    pub fn on(mut self, artifact: &str, f: impl Fn(&[TensorValue]) -> Vec<TensorValue> + 'static) -> Self {
+        self.handlers.insert(artifact.to_string(), Box::new(f));
+        self
+    }
+
+    pub fn call_count(&self, artifact: &str) -> usize {
+        self.calls.lock().unwrap().iter().filter(|c| c.as_str() == artifact).count()
+    }
+}
+
+impl Executor for MockExecutor {
+    fn run(&self, artifact: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        self.calls.lock().unwrap().push(artifact.to_string());
+        let h = self
+            .handlers
+            .get(artifact)
+            .ok_or_else(|| anyhow!("mock has no handler for {artifact}"))?;
+        Ok(h(inputs))
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_routes_and_counts() {
+        let mock = MockExecutor::empty().on("echo", |ins| ins.to_vec());
+        let input = vec![TensorValue::scalar_f32(7.0)];
+        let out = mock.run("echo", &input).unwrap();
+        assert_eq!(out, input);
+        assert_eq!(mock.call_count("echo"), 1);
+        assert!(mock.run("missing", &input).is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! The artifact manifest: the compile-time contract with python/compile.
+//!
+//! aot.py writes `artifacts/manifest.json` describing every lowered HLO
+//! module (positional args with name/shape/dtype, outputs), the model
+//! configs, canonical parameter orders and linear-layer names. Everything
+//! shape-dependent on the rust side is driven from here — never
+//! hard-coded twice.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Mirrors python/compile/configs.py::ModelCfg.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub param_order: BTreeMap<String, Vec<String>>,
+    pub linear_names: BTreeMap<String, Vec<String>>,
+    pub lm_batch: usize,
+    pub cls_batch: usize,
+    pub cls_seq: usize,
+    pub cls_classes: usize,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<ArgSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of specs"))?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                shape: a
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("spec missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: a
+                    .get("dtype")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Locate the artifacts dir next to the current exe / cwd.
+    pub fn discover() -> Result<Manifest> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Manifest::load(cand);
+            }
+        }
+        Err(anyhow!("artifacts/manifest.json not found — run `make artifacts`"))
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").and_then(|m| m.as_obj()) {
+            for (name, m) in obj {
+                let g = |k: &str| m.get(k).and_then(|x| x.as_usize()).unwrap_or(0);
+                models.insert(
+                    name.clone(),
+                    ModelCfg {
+                        name: name.clone(),
+                        vocab: g("vocab"),
+                        d_model: g("d_model"),
+                        n_heads: g("n_heads"),
+                        n_layers: g("n_layers"),
+                        d_ff: g("d_ff"),
+                        seq_len: g("seq_len"),
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file: a
+                        .get("file")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    args: parse_specs(a.get("args").ok_or_else(|| anyhow!("missing args"))?)?,
+                    outputs: parse_specs(
+                        a.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?,
+                    )?,
+                },
+            );
+        }
+
+        let str_lists = |key: &str| -> BTreeMap<String, Vec<String>> {
+            j.get(key)
+                .and_then(|x| x.as_obj())
+                .map(|obj| {
+                    obj.iter()
+                        .map(|(k, v)| {
+                            let list = v
+                                .as_arr()
+                                .map(|a| {
+                                    a.iter()
+                                        .filter_map(|s| s.as_str().map(|x| x.to_string()))
+                                        .collect()
+                                })
+                                .unwrap_or_default();
+                            (k.clone(), list)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let param_order = str_lists("param_order");
+        let linear_names = str_lists("linear_names");
+
+        let consts = j.get("constants");
+        let getc = |k: &str, d: usize| {
+            consts
+                .and_then(|c| c.get(k))
+                .and_then(|x| x.as_usize())
+                .unwrap_or(d)
+        };
+
+        Ok(Manifest {
+            dir,
+            models,
+            artifacts,
+            param_order,
+            linear_names,
+            lm_batch: getc("lm_batch", 8),
+            cls_batch: getc("cls_batch", 16),
+            cls_seq: getc("cls_seq", 32),
+            cls_classes: getc("cls_classes", 4),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelCfg> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {"tiny": {"vocab": 256, "d_model": 128, "n_heads": 4,
+                           "n_layers": 2, "d_ff": 512, "seq_len": 64}},
+      "constants": {"lm_batch": 8, "cls_batch": 16, "cls_seq": 32,
+                    "cls_classes": 4, "qpeft_ranks": [8, 64]},
+      "param_order": {"tiny": ["embed", "l0.ln1", "head"]},
+      "linear_names": {"tiny": ["l0.wq", "l0.down"]},
+      "artifacts": [
+        {"name": "lm_fwd_tiny", "file": "lm_fwd_tiny.hlo.txt",
+         "args": [{"name": "embed", "shape": [256, 128], "dtype": "f32"},
+                  {"name": "tokens", "shape": [8, 64], "dtype": "i32"}],
+         "outputs": [{"shape": [8, 64, 256], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let cfg = m.model("tiny").unwrap();
+        assert_eq!(cfg.d_model, 128);
+        assert_eq!(cfg.n_layers, 2);
+        let a = m.artifact("lm_fwd_tiny").unwrap();
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(a.args[1].dtype, "i32");
+        assert_eq!(a.outputs[0].shape, vec![8, 64, 256]);
+        assert_eq!(m.param_order["tiny"].len(), 3);
+        assert_eq!(m.lm_batch, 8);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration-lite: if `make artifacts` has run, the real file parses
+        if let Ok(m) = Manifest::discover() {
+            assert!(m.artifacts.contains_key("lm_fwd_tiny"));
+            assert!(m.models.contains_key("small"));
+            assert_eq!(m.param_order["tiny"].first().map(|s| s.as_str()), Some("embed"));
+        }
+    }
+}

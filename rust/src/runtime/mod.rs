@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `make artifacts` and executes them from the request path.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (arg/output specs,
+//!   model configs, parameter orders); the contract with python/compile.
+//! * [`tensor_value`] — host-side typed tensors (f32 / i32 + shape) that
+//!   marshal to/from `xla::Literal`.
+//! * [`engine`] — the executor: PJRT CPU client + per-artifact compile
+//!   cache; also defines the [`Executor`] trait and a mock implementation
+//!   the coordinator tests run against without PJRT.
+
+pub mod manifest;
+pub mod tensor_value;
+pub mod engine;
+
+pub use engine::{Engine, Executor, MockExecutor};
+pub use manifest::{ArgSpec, ArtifactSpec, Manifest};
+pub use tensor_value::TensorValue;

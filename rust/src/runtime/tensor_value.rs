@@ -1,0 +1,115 @@
+//! Host tensors crossing the PJRT boundary.
+
+use crate::tensor::Mat;
+
+/// A typed host tensor: the unit of exchange with the artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorValue {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "f32 shape/data mismatch");
+        TensorValue::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "i32 shape/data mismatch");
+        TensorValue::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        TensorValue::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorValue::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        TensorValue::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorValue::F32 { shape, .. } | TensorValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            TensorValue::F32 { .. } => "f32",
+            TensorValue::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorValue::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            TensorValue::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            TensorValue::I32 { data, .. } => data,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// View a 2-D f32 tensor as a Mat (copies).
+    pub fn to_mat(&self) -> Mat {
+        let shape = self.shape();
+        assert_eq!(shape.len(), 2, "to_mat needs rank 2, got {shape:?}");
+        Mat::from_vec(shape[0], shape[1], self.as_f32().to_vec())
+    }
+
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.len(), 1, "scalar() on non-scalar {:?}", self.shape());
+        self.as_f32()[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mat() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let t = TensorValue::from_mat(&m);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.to_mat(), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        TensorValue::f32(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn dtype_and_scalar() {
+        assert_eq!(TensorValue::scalar_f32(2.5).scalar(), 2.5);
+        assert_eq!(TensorValue::i32(vec![2], vec![1, 2]).dtype(), "i32");
+        assert_eq!(TensorValue::zeros(vec![3, 4]).len(), 12);
+    }
+}

@@ -1,0 +1,215 @@
+//! Activation-aware scaling matrices S (paper §2, Eq. 1).
+//!
+//! Each QER baseline is characterized by its S:
+//!
+//! * ZeroQuant-V2 — S = I (weight-space reconstruction)
+//! * LQER         — S = diag(rms(x_i)) from calibration activations
+//! * QERA-approx  — S = diag(mean |x_i|)
+//! * QERA-exact   — S = (E[xxᵀ])^{1/2}, the exact minimizer of the layer
+//!   output error (computed by symmetric eigendecomposition; inverse uses
+//!   an eigenvalue floor for numerical safety on near-singular Grams)
+
+use crate::linalg::eigh;
+use crate::tensor::{matmul, matmul_tn, Mat};
+
+/// Relative eigenvalue floor for the exact scaling: eigenvalues below
+/// λ_max·REL_FLOOR are clamped, bounding κ(S) ≤ 10³. Without this, a
+/// rank-deficient calibration Gram (fewer samples than dims, or strongly
+/// correlated activations) makes S⁻¹ explode and the preserved component
+/// S⁻¹·SVD_k(SW) blows up the *unscaled* residual handed to the
+/// quantizer — the failure mode our pipeline test caught.
+const REL_FLOOR: f64 = 1e-2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScalingKind {
+    Identity,
+    DiagRms,
+    DiagAbsMean,
+    Exact,
+}
+
+impl ScalingKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScalingKind::Identity => "identity",
+            ScalingKind::DiagRms => "diag-rms(LQER)",
+            ScalingKind::DiagAbsMean => "diag-absmean(QERA-approx)",
+            ScalingKind::Exact => "exact(QERA)",
+        }
+    }
+}
+
+/// A scaling S with its inverse, applied on the left of W (m×n), S m×m.
+#[derive(Clone, Debug)]
+pub enum Scaling {
+    Identity,
+    Diagonal { d: Vec<f32>, d_inv: Vec<f32> },
+    Full { s: Mat, s_inv: Mat },
+}
+
+impl Scaling {
+    /// Build from calibration activations X (n_samples × m).
+    pub fn from_activations(kind: ScalingKind, x: &Mat) -> Scaling {
+        match kind {
+            ScalingKind::Identity => Scaling::Identity,
+            ScalingKind::DiagRms => {
+                let d = column_stat(x, |acc, v| acc + (v as f64) * (v as f64))
+                    .into_iter()
+                    .map(|s| ((s / x.rows as f64).sqrt() as f32).max(1e-6))
+                    .collect();
+                Scaling::diagonal(d)
+            }
+            ScalingKind::DiagAbsMean => {
+                let d = column_stat(x, |acc, v| acc + (v as f64).abs())
+                    .into_iter()
+                    .map(|s| ((s / x.rows as f64) as f32).max(1e-6))
+                    .collect();
+                Scaling::diagonal(d)
+            }
+            ScalingKind::Exact => {
+                // one eigendecomposition builds both S and S⁻¹
+                let gram = matmul_tn(x, x).scale(1.0 / x.rows as f32);
+                let (q, lam) = eigh(&gram);
+                let lam_max = lam.first().copied().unwrap_or(1.0).max(1e-12) as f64;
+                let floor = lam_max * REL_FLOOR;
+                let n = gram.rows;
+                let build = |pow: f64| {
+                    let mut qf = Mat::zeros(n, n);
+                    for j in 0..n {
+                        let l = (lam[j] as f64).max(floor);
+                        let f = l.powf(pow) as f32;
+                        for i in 0..n {
+                            *qf.at_mut(i, j) = q.at(i, j) * f;
+                        }
+                    }
+                    crate::tensor::matmul_nt(&qf, &q)
+                };
+                Scaling::Full { s: build(0.5), s_inv: build(-0.5) }
+            }
+        }
+    }
+
+    pub fn diagonal(d: Vec<f32>) -> Scaling {
+        let d_inv = d.iter().map(|&v| 1.0 / v).collect();
+        Scaling::Diagonal { d, d_inv }
+    }
+
+    /// S·W.
+    pub fn apply(&self, w: &Mat) -> Mat {
+        match self {
+            Scaling::Identity => w.clone(),
+            Scaling::Diagonal { d, .. } => w.scale_rows(d),
+            Scaling::Full { s, .. } => matmul(s, w),
+        }
+    }
+
+    /// S⁻¹·W.
+    pub fn unapply(&self, w: &Mat) -> Mat {
+        match self {
+            Scaling::Identity => w.clone(),
+            Scaling::Diagonal { d_inv, .. } => w.scale_rows(d_inv),
+            Scaling::Full { s_inv, .. } => matmul(s_inv, w),
+        }
+    }
+
+    pub fn dim_hint(&self) -> Option<usize> {
+        match self {
+            Scaling::Identity => None,
+            Scaling::Diagonal { d, .. } => Some(d.len()),
+            Scaling::Full { s, .. } => Some(s.rows),
+        }
+    }
+}
+
+fn column_stat(x: &Mat, fold: impl Fn(f64, f32) -> f64) -> Vec<f64> {
+    let mut acc = vec![0.0f64; x.cols];
+    for i in 0..x.rows {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            acc[j] = fold(acc[j], v);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn activations(rng: &mut Rng) -> Mat {
+        // anisotropic activations: feature j has std ~ 1/(1+j/4)
+        let mut x = Mat::randn(200, 16, 1.0, rng);
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                *x.at_mut(i, j) /= 1.0 + j as f32 / 4.0;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(110);
+        let w = Mat::randn(8, 8, 1.0, &mut rng);
+        let s = Scaling::from_activations(ScalingKind::Identity, &Mat::zeros(4, 8));
+        assert_eq!(s.apply(&w), w);
+        assert_eq!(s.unapply(&w), w);
+    }
+
+    #[test]
+    fn diagonal_apply_unapply_roundtrip() {
+        let mut rng = Rng::new(111);
+        let x = activations(&mut rng);
+        let w = Mat::randn(16, 12, 1.0, &mut rng);
+        for kind in [ScalingKind::DiagRms, ScalingKind::DiagAbsMean] {
+            let s = Scaling::from_activations(kind, &x);
+            let rt = s.unapply(&s.apply(&w));
+            assert!(rt.allclose(&w, 1e-4), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn exact_apply_unapply_roundtrip() {
+        let mut rng = Rng::new(112);
+        let x = activations(&mut rng);
+        let w = Mat::randn(16, 12, 1.0, &mut rng);
+        let s = Scaling::from_activations(ScalingKind::Exact, &x);
+        let rt = s.unapply(&s.apply(&w));
+        assert!(rt.allclose(&w, 2e-3));
+    }
+
+    #[test]
+    fn diag_rms_matches_manual_computation() {
+        let x = Mat::from_vec(2, 2, vec![3.0, 1.0, 4.0, 1.0]);
+        let s = Scaling::from_activations(ScalingKind::DiagRms, &x);
+        if let Scaling::Diagonal { d, .. } = &s {
+            assert!((d[0] - ((9.0f32 + 16.0) / 2.0).sqrt()).abs() < 1e-5);
+            assert!((d[1] - 1.0).abs() < 1e-5);
+        } else {
+            panic!("expected diagonal");
+        }
+    }
+
+    #[test]
+    fn exact_scaling_squares_to_gram() {
+        let mut rng = Rng::new(113);
+        let x = activations(&mut rng);
+        let gram = matmul_tn(&x, &x).scale(1.0 / x.rows as f32);
+        if let Scaling::Full { s, .. } = Scaling::from_activations(ScalingKind::Exact, &x) {
+            assert!(matmul(&s, &s).allclose(&gram, 1e-2));
+        } else {
+            panic!("expected full");
+        }
+    }
+
+    #[test]
+    fn exact_scaling_emphasizes_high_energy_directions() {
+        // ‖S u‖ should be larger along the dominant activation direction
+        let mut rng = Rng::new(114);
+        let x = activations(&mut rng);
+        let s = Scaling::from_activations(ScalingKind::Exact, &x);
+        let e0 = Mat::from_fn(16, 1, |i, _| if i == 0 { 1.0 } else { 0.0 });
+        let e15 = Mat::from_fn(16, 1, |i, _| if i == 15 { 1.0 } else { 0.0 });
+        assert!(s.apply(&e0).frob() > s.apply(&e15).frob());
+    }
+}

@@ -1,0 +1,242 @@
+//! The [`Mat`] type: dense, row-major, f32.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// i.i.d. U[lo, hi) entries — the SRR random probe uses U[-1, 1].
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn frob2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Scale row i by d[i] (left-multiply by diag(d)).
+    pub fn scale_rows(&self, d: &[f32]) -> Mat {
+        assert_eq!(d.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let s = d[i];
+            for v in out.row_mut(i) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    /// Columns [j0, j1) as a new matrix.
+    pub fn cols_slice(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, j1 - j0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        out
+    }
+
+    /// Rows [i0, i1) as a new matrix.
+    pub fn rows_slice(&self, i0: usize, i1: usize) -> Mat {
+        assert!(i0 <= i1 && i1 <= self.rows);
+        Mat::from_vec(i1 - i0, self.cols, self.data[i0 * self.cols..i1 * self.cols].to_vec())
+    }
+
+    /// Horizontal concatenation [A | B].
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertical concatenation [A; B].
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn allclose(&self, other: &Mat, atol: f32) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.data.iter().zip(&other.data).all(|(a, b)| (a - b).abs() <= atol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn frob_matches_manual() {
+        let m = Mat::from_vec(1, 3, vec![3.0, 4.0, 0.0]);
+        assert!((m.frob() - 5.0).abs() < 1e-12);
+        assert!((m.frob2() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slicing_and_concat_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(6, 8, 1.0, &mut rng);
+        let left = m.cols_slice(0, 3);
+        let right = m.cols_slice(3, 8);
+        assert_eq!(left.hcat(&right), m);
+        let top = m.rows_slice(0, 2);
+        let bot = m.rows_slice(2, 6);
+        assert_eq!(top.vcat(&bot), m);
+    }
+
+    #[test]
+    fn scale_rows_is_diag_mul() {
+        let m = Mat::from_fn(2, 2, |i, j| (i + j) as f32 + 1.0);
+        let d = [2.0, 3.0];
+        let s = m.scale_rows(&d);
+        assert_eq!(s.at(0, 0), 2.0);
+        assert_eq!(s.at(1, 1), 9.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::eye(2);
+        assert_eq!(a.add(&b).at(0, 0), 2.0);
+        assert_eq!(a.sub(&b).at(1, 1), 3.0);
+        assert_eq!(a.scale(2.0).at(0, 1), 4.0);
+    }
+}

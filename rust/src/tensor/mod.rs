@@ -1,0 +1,13 @@
+//! Dense row-major f32 matrix substrate.
+//!
+//! The whole algorithmic stack (quantizers, SVDs, SRR) runs on [`Mat`].
+//! Dot products accumulate in f64 where precision matters (norms, Gram
+//! entries); the blocked multithreaded matmul accumulates in f32 per the
+//! usual GEMM practice — adequate at our dimensions (<= 4096) and matching
+//! XLA's own f32 GEMM behaviour.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Mat;
+pub use ops::{matmul, matmul_nt, matmul_tn};

@@ -1,0 +1,146 @@
+//! Blocked, multithreaded matrix multiplication.
+//!
+//! The classic ikj micro-kernel with row-panel parallelism via scoped
+//! threads. At our sizes (<= 4096²) this reaches a few GFLOP/s per core —
+//! enough that the coordinator pipeline, not the GEMM, dominates wall
+//! clock (profiled in EXPERIMENTS.md §Perf; the PJRT-side GEMMs run inside
+//! XLA and don't use this path).
+
+use super::Mat;
+use crate::util::pool;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let bdata = &b.data;
+    let adata = &a.data;
+    pool::par_chunks_mut(&mut c.data, n, |i0, rows| {
+        // rows = C[i0..i0+h] flattened
+        for (di, crow) in rows.chunks_mut(n).enumerate() {
+            let i = i0 + di;
+            let arow = &adata[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bdata[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = Aᵀ · B  (A is k×m, B is k×n, C is m×n).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let adata = &a.data;
+    let bdata = &b.data;
+    pool::par_chunks_mut(&mut c.data, n, |i0, rows| {
+        for (di, crow) in rows.chunks_mut(n).enumerate() {
+            let i = i0 + di; // column i of A = row i of C
+            for kk in 0..k {
+                let aik = adata[kk * m + i];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bdata[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A · Bᵀ  (A is m×k, B is n×k, C is m×n).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    let adata = &a.data;
+    let bdata = &b.data;
+    pool::par_chunks_mut(&mut c.data, n, |i0, rows| {
+        for (di, crow) in rows.chunks_mut(n).enumerate() {
+            let i = i0 + di;
+            let arow = &adata[i * k..(i + 1) * k];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &bdata[j * k..(j + 1) * k];
+                // f64 accumulation: these dot products feed Gram matrices
+                let mut acc = 0.0f64;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av as f64 * bv as f64;
+                }
+                *cv = acc as f32;
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3, 4, 5), (17, 33, 9), (64, 64, 64), (1, 128, 1)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.allclose(&naive(&a, &b), 1e-3), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(20, 12, 1.0, &mut rng);
+        let b = Mat::randn(20, 15, 1.0, &mut rng);
+        assert!(matmul_tn(&a, &b).allclose(&matmul(&a.transpose(), &b), 1e-3));
+        let b2 = Mat::randn(9, 12, 1.0, &mut rng);
+        assert!(matmul_nt(&a, &b2).allclose(&matmul(&a, &b2.transpose()), 1e-3));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(10, 10, 1.0, &mut rng);
+        assert!(matmul(&a, &Mat::eye(10)).allclose(&a, 1e-6));
+        assert!(matmul(&Mat::eye(10), &a).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn associativity_with_vector() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(8, 6, 1.0, &mut rng);
+        let b = Mat::randn(6, 7, 1.0, &mut rng);
+        let x = Mat::randn(7, 1, 1.0, &mut rng);
+        let left = matmul(&matmul(&a, &b), &x);
+        let right = matmul(&a, &matmul(&b, &x));
+        assert!(left.allclose(&right, 1e-3));
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny argument parser (clap stand-in): `prog <subcommand> --key value --flag`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("ptq --model small --rank 64 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("ptq"));
+        assert_eq!(a.get("model"), Some("small"));
+        assert_eq!(a.get_usize("rank", 0), 64);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = parse("run --lr=0.001");
+        assert_eq!(a.get_f64("lr", 0.0), 0.001);
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert_eq!(a.get_usize("absent", 7), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b value --c");
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get("b"), Some("value"));
+        assert!(a.has_flag("c"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("bench table1 fig5");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["table1", "fig5"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("t --x -3");
+        // "-3" does not start with "--" so it is consumed as the value
+        assert_eq!(a.get_f64("x", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Substrate utilities built from scratch (offline environment: no
+//! crates.io beyond `xla`/`anyhow`). Each replaces a crate the wider
+//! ecosystem would normally pull in:
+//!
+//! * [`prng`]   — xoshiro256++ PRNG (replaces `rand`)
+//! * [`json`]   — JSON parser/writer (replaces `serde_json`)
+//! * [`cli`]    — argument parser (replaces `clap`)
+//! * [`stats`]  — descriptive stats + correlation metrics
+//! * [`bench`]  — timing harness (replaces `criterion`)
+//! * [`pool`]   — scoped data-parallel helpers (replaces `rayon`)
+//! * [`prop`]   — mini property-testing driver (replaces `proptest`)
+
+pub mod prng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod bench;
+pub mod pool;
+pub mod prop;
+
+pub use prng::Rng;

@@ -1,0 +1,167 @@
+//! Scoped data-parallel helpers (in lieu of rayon).
+//!
+//! `par_chunks_mut` splits a mutable buffer into contiguous row-panels and
+//! runs the closure on each panel from a scoped thread. Small inputs run
+//! inline to avoid spawn overhead — the threshold is tuned in the §Perf
+//! pass (EXPERIMENTS.md).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads (cached).
+pub fn n_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("SRR_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            })
+    })
+}
+
+/// Minimum elements per panel before threading is worth it.
+const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Split `buf` (logically rows of width `row_len`) into panels and call
+/// `f(first_row_index, panel)` for each, in parallel.
+pub fn par_chunks_mut<F>(buf: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && buf.len() % row_len == 0);
+    let rows = buf.len() / row_len;
+    let nt = n_threads();
+    if buf.len() < PAR_MIN_ELEMS || nt <= 1 || rows == 1 {
+        f(0, buf);
+        return;
+    }
+    let panels = nt.min(rows);
+    let per = rows.div_ceil(panels);
+    std::thread::scope(|s| {
+        let mut rest = buf;
+        let mut start_row = 0;
+        for _ in 0..panels {
+            let take = per.min(rest.len() / row_len);
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            rest = tail;
+            let fr = &f;
+            let sr = start_row;
+            s.spawn(move || fr(sr, head));
+            start_row += take;
+        }
+    });
+}
+
+/// Parallel for over `0..n`, invoking `f(i)` with work-stealing via an
+/// atomic counter. Used where iterations are coarse (per-layer jobs).
+pub fn par_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nt = n_threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let nt = n_threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        return (0..n).map(|i| f(i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<T>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            let next = &next;
+            let f = &f;
+            let results = &results;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *results[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("par_map slot unfilled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_chunks_covers_every_row_once() {
+        let rows = 103;
+        let width = 257;
+        let mut buf = vec![0.0f32; rows * width];
+        par_chunks_mut(&mut buf, width, |start, panel| {
+            for (di, row) in panel.chunks_mut(width).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (start + di) as f32 + 1.0;
+                }
+            }
+        });
+        for i in 0..rows {
+            assert!(buf[i * width..(i + 1) * width].iter().all(|&v| v == (i + 1) as f32));
+        }
+    }
+
+    #[test]
+    fn par_for_executes_each_index_once() {
+        let n = 1000;
+        let sum = AtomicU64::new(0);
+        par_for(n, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(500, |i| i * i);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+    }
+
+    #[test]
+    fn small_input_runs_inline() {
+        let mut buf = vec![0.0f32; 8];
+        par_chunks_mut(&mut buf, 4, |start, panel| {
+            assert_eq!(start, 0);
+            assert_eq!(panel.len(), 8);
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! Descriptive statistics + the correlation metrics the GLUE-sim harness
+//! reports (accuracy, Matthews correlation, Pearson/Spearman) and the
+//! coefficient-of-variation / MRE used to validate the paper's
+//! Assumptions 4.1–4.2 (Tables 20–21).
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Coefficient of variation σ/μ (Assumption 4.1 validation).
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-300 {
+        return f64::INFINITY;
+    }
+    std_dev(xs) / m
+}
+
+/// Mean relative error E[|a−b| / |a|] (Assumption 4.2 validation).
+pub fn mean_relative_error(actual: &[f64], proxy: &[f64]) -> f64 {
+    assert_eq!(actual.len(), proxy.len());
+    let terms: Vec<f64> = actual
+        .iter()
+        .zip(proxy)
+        .filter(|(a, _)| a.abs() > 1e-12)
+        .map(|(a, p)| (a - p).abs() / a.abs())
+        .collect();
+    mean(&terms)
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Five-number summary (min, q1, median, q3, max) — Fig. 5 box stats.
+pub fn box_stats(xs: &[f64]) -> (f64, f64, f64, f64, f64) {
+    (
+        percentile(xs, 0.0),
+        percentile(xs, 25.0),
+        percentile(xs, 50.0),
+        percentile(xs, 75.0),
+        percentile(xs, 100.0),
+    )
+}
+
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let (mx, my) = (mean(x), mean(y));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        num += (a - mx) * (b - my);
+        dx += (a - mx) * (a - mx);
+        dy += (b - my) * (b - my);
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Average ranks with ties.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Matthews correlation coefficient for binary labels (CoLA's metric).
+pub fn matthews(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p, t) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => panic!("matthews expects binary labels"),
+        }
+    }
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fnn) / denom
+    }
+}
+
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).filter(|(p, t)| p == t).count() as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+        assert!((coeff_of_variation(&xs) - 1.2909944 / 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(median(&xs), 25.0);
+        let (mn, q1, md, q3, mx) = box_stats(&xs);
+        assert_eq!((mn, mx), (10.0, 40.0));
+        assert!(q1 < md && md < q3);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anticorrelated() {
+        let x = [1.0, 2.0, 3.0];
+        assert!((pearson(&x, &[2.0, 4.0, 6.0]) - 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &[3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_is_rank_based() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [1.0, 10.0, 100.0, 1000.0]; // monotone, nonlinear
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_known_cases() {
+        assert!((matthews(&[1, 1, 0, 0], &[1, 1, 0, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews(&[0, 0, 1, 1], &[1, 1, 0, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews(&[1, 1, 1, 1], &[1, 1, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn mre_matches_manual() {
+        let a = [1.0, 2.0];
+        let p = [1.1, 1.8];
+        let want = ((0.1f64 / 1.0) + (0.2 / 2.0)) / 2.0;
+        assert!((mean_relative_error(&a, &p) - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! End-to-end pipeline integration: coordinator → eval → QPEFT over the
+//! real PJRT artifacts (requires `make artifacts`).
+
+use srr::coordinator::{run_ptq, Metrics, QuantizerSpec};
+use srr::data::glue_sim::GlueTask;
+use srr::data::Corpus;
+use srr::eval::perplexity;
+use srr::model::{collect_calibration, synth_lm_params};
+use srr::qer::{Method, QerConfig};
+use srr::qpeft::{init_qpeft, GradScale, QpeftInit, QpeftTrainer};
+use srr::runtime::{Engine, Executor, TensorValue};
+use srr::scaling::ScalingKind;
+use srr::tensor::Mat;
+use srr::util::Rng;
+
+fn engine() -> Engine {
+    Engine::discover().expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn ptq_pipeline_to_ppl_end_to_end() {
+    let eng = engine();
+    let cfg = eng.manifest().model("tiny").unwrap().clone();
+    let b = eng.manifest().lm_batch;
+    let params = synth_lm_params(&cfg, 3, cfg.vocab);
+    let corpus = Corpus::generate(cfg.vocab, 30_000, 4);
+    let batches: Vec<Vec<i32>> = (0..4).map(|i| corpus.train_batch(b, cfg.seq_len, i)).collect();
+    let calib = collect_calibration(&params, &cfg, &batches, b, cfg.seq_len, 256);
+
+    let metrics = Metrics::new();
+    let out = run_ptq(
+        &params,
+        &cfg,
+        &calib,
+        QuantizerSpec::Mxint { bits: 3, block: 32 },
+        &QerConfig::new(Method::QerSrr, 8, ScalingKind::DiagRms),
+        &metrics,
+    );
+    assert_eq!(out.reports.len(), 7 * cfg.n_layers);
+
+    // reconstructed model must run through PJRT and produce a finite PPL
+    let eval: Vec<Vec<i32>> = corpus.eval_batches(b, cfg.seq_len).into_iter().take(2).collect();
+    let ppl_q = perplexity(&eng, "lm_nll_tiny", &out.params, &eval, b, cfg.seq_len).unwrap();
+    let ppl_fp = perplexity(&eng, "lm_nll_tiny", &params, &eval, b, cfg.seq_len).unwrap();
+    assert!(ppl_q.is_finite() && ppl_q > 1.0);
+    assert!(ppl_fp.is_finite() && ppl_fp > 1.0);
+    // 3-bit on an untrained model: reconstruction stays within a factor
+    assert!(ppl_q < ppl_fp * 1.5, "ppl_q={ppl_q} vs fp={ppl_fp}");
+    assert!(metrics.get("ptq.layers") as usize == out.reports.len());
+}
+
+#[test]
+fn qpeft_training_reduces_loss_through_real_artifact() {
+    let eng = engine();
+    let cfg = eng.manifest().model("tiny").unwrap().clone();
+    let m = eng.manifest();
+    let (batch, seq, classes) = (m.cls_batch, m.cls_seq, m.cls_classes);
+    let params = synth_lm_params(&cfg, 5, cfg.vocab);
+    let corpus = Corpus::generate(cfg.vocab, 20_000, 6);
+    let b = m.lm_batch;
+    let batches: Vec<Vec<i32>> = (0..3).map(|i| corpus.train_batch(b, cfg.seq_len, i)).collect();
+    let calib = collect_calibration(&params, &cfg, &batches, b, cfg.seq_len, 128);
+
+    let tasks = GlueTask::all(cfg.vocab, seq, 128, 16, 11);
+    let task = &tasks[3]; // SST-sim: strong pattern
+    let mut rng = Rng::new(12);
+    let head = Mat::randn(cfg.d_model, classes, 0.02, &mut rng);
+    let state = init_qpeft(
+        &params,
+        &cfg,
+        &calib,
+        QuantizerSpec::Mxint { bits: 3, block: 32 },
+        QpeftInit::Srr,
+        8,
+        head,
+        0,
+    );
+    assert!(state.adapters.iter().any(|a| a.k_star > 0));
+    let mut trainer = QpeftTrainer::new(
+        &eng,
+        "qpeft_cls_train_tiny_r8",
+        state,
+        1e-3,
+        GradScale::Fixed { gamma: 0.1 },
+    );
+    let mut first = None;
+    for step in 0..25 {
+        let (toks, labels, _) = GlueTask::batch(&task.train, step * batch, batch, seq);
+        let loss = trainer
+            .step(&[
+                TensorValue::i32(vec![batch, seq], toks),
+                TensorValue::i32(vec![batch], labels),
+            ])
+            .unwrap();
+        first.get_or_insert(loss);
+    }
+    let last = trainer.final_loss(5);
+    assert!(
+        last < first.unwrap(),
+        "loss should drop: {} -> {last}",
+        first.unwrap()
+    );
+
+    // eval artifact runs with the trained state
+    let (toks, _, _) = GlueTask::batch(&task.dev, 0, batch, seq);
+    let out = trainer
+        .eval("qpeft_cls_fwd_tiny_r8", &[TensorValue::i32(vec![batch, seq], toks)])
+        .unwrap();
+    assert_eq!(out.shape(), &[batch, classes]);
+}
+
+#[test]
+fn lm_train_artifact_step_descends() {
+    // a short full-FT run through lm_train_tiny (the e2e driver's inner loop)
+    let eng = engine();
+    let cfg = eng.manifest().model("tiny").unwrap().clone();
+    let b = eng.manifest().lm_batch;
+    let params = synth_lm_params(&cfg, 7, cfg.vocab);
+    let corpus = Corpus::generate(cfg.vocab, 20_000, 8);
+    let mut p = params.clone();
+    let (first, last) = srr::exp::fixtures::train_lm(
+        &eng, &cfg, &mut p, &corpus, "lm_train_tiny", b, 12, 3e-3,
+    )
+    .unwrap();
+    assert!(last < first, "training loss must decrease: {first} -> {last}");
+}
