@@ -2,12 +2,16 @@
 //! evaluate perplexity through the AOT-compiled forward (PJRT) — a
 //! miniature of the paper's Table 1 protocol on one model.
 //!
+//! The whole grid runs through `coordinator::run_sweep`, so the per-layer
+//! scalings, Hessians and scaled-weight SVDs are computed once and shared
+//! across every method/rank cell (bit-identical to per-config `run_ptq`).
+//!
 //!   cargo run --release --example ptq_sweep -- [--model tiny] [--rank 8]
 
-use srr::coordinator::{run_ptq, Metrics, QuantizerSpec};
+use srr::coordinator::{run_sweep, Metrics, QuantizerSpec, SweepConfig};
 use srr::eval::perplexity;
 use srr::exp::ExpCtx;
-use srr::qer::{Method, QerConfig};
+use srr::qer::Method;
 use srr::runtime::Executor;
 use srr::scaling::ScalingKind;
 use srr::util::cli::Args;
@@ -42,12 +46,25 @@ fn main() -> anyhow::Result<()> {
         ("fixed split k=r/2", Method::FixedSplitHalf, ScalingKind::Exact),
         ("SRR eq.(6) variant", Method::SrrSingleSvd, ScalingKind::Exact),
     ];
-    for (label, method, scaling) in grid {
-        let metrics = Metrics::new();
-        let cfg = QerConfig::new(method, rank, scaling);
-        let out = run_ptq(&fx.params, &fx.cfg, &fx.calib, quant, &cfg, &metrics);
+    let configs: Vec<SweepConfig> = grid
+        .iter()
+        .map(|(label, method, scaling)| {
+            let r = if *method == Method::WOnly { 0 } else { rank };
+            SweepConfig::new(quant, *method, r, *scaling).labeled(label)
+        })
+        .collect();
+
+    let metrics = Metrics::new();
+    let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
+    for (c, out) in configs.iter().zip(&outs) {
         let ppl = perplexity(&ctx.engine, &artifact, &out.params, &batches, b, t)?;
-        println!("{label:<28} {ppl:>10.3} {:>8.1}", out.mean_k_star());
+        println!("{:<28} {ppl:>10.3} {:>8.1}", c.label, out.mean_k_star());
     }
+    println!(
+        "\nshared-work: {} cache entries, prep {:.2}s, fan-out {:.2}s",
+        metrics.get("sweep.cache_entries"),
+        metrics.get("sweep.prep_secs"),
+        metrics.get("sweep.reconstruct_secs")
+    );
     Ok(())
 }

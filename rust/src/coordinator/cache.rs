@@ -1,0 +1,178 @@
+//! The sweep's keyed per-layer cache: everything a grid of PTQ configs
+//! shares for one linear layer, computed once.
+//!
+//! A `(method, quantizer, rank, scaling, seed)` grid over one model
+//! repeats four expensive per-layer artifacts:
+//!
+//! * the activation **scaling** S per `ScalingKind` (O(d³) eigh for
+//!   QERA-exact),
+//! * the GPTQ **Hessian** H = XᵀX/n,
+//! * the k=0 **dequantized weight** per (quantizer, seed) — shared by
+//!   w-only and every plain-QER config,
+//! * the **spectra** of (S·W, S·E) per (scaling, seed) at the grid's
+//!   maximum rank — consumed by every SRR-family config, any budget
+//!   r ≤ prep rank served by prefix truncation,
+//!
+//! plus, one level up, the plain-QER **residual SVD** per (quantizer,
+//! scaling, seed), which serves every rank of that baseline. All five
+//! live here as [`PreparedLayer`] / [`LayerCache`]; `coordinator::sweep`
+//! populates them in deterministic parallel phases and fans per-config
+//! reconstruction out over the worker pool.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::linalg::Svd;
+use crate::qer::PreparedSpectra;
+use crate::quant::QuantCtx;
+use crate::scaling::{Scaling, ScalingKind};
+use crate::tensor::Mat;
+
+/// Shared per-layer artifacts, keyed by what distinguishes them across a
+/// sweep grid. Seeds in keys are *sweep-level* seeds; the stored values
+/// were derived with the layer-salted seed the per-config path uses.
+pub struct PreparedLayer {
+    pub name: String,
+    /// the original weight (owned so jobs need no `Params` access)
+    pub w: Mat,
+    pub scalings: HashMap<ScalingKind, Arc<Scaling>>,
+    /// GPTQ Hessian, present iff some config's quantizer needs it
+    pub hessian: Option<Arc<Mat>>,
+    /// k=0 dequantized weight per (quantizer label, sweep seed)
+    pub qdeq0: HashMap<(String, u64), Arc<Mat>>,
+    /// prepared (S·W, S·E) spectra per (scaling kind, sweep seed)
+    pub spectra: HashMap<(ScalingKind, u64), Arc<PreparedSpectra>>,
+    /// wall-clock spent preparing this layer (amortized into reports)
+    pub prep_secs: f64,
+}
+
+impl PreparedLayer {
+    /// The cached scaling for `kind` (must have been in the grid).
+    pub fn scaling(&self, kind: ScalingKind) -> &Scaling {
+        self.scalings
+            .get(&kind)
+            .unwrap_or_else(|| panic!("{}: scaling {kind:?} not prepared", self.name))
+            .as_ref()
+    }
+
+    /// A `QuantCtx` equivalent to `CalibrationSet::quant_ctx` for this
+    /// layer, served from the cached Hessian.
+    pub fn quant_ctx(&self, with_hessian: bool, seed: u64) -> QuantCtx {
+        let hessian = if with_hessian {
+            self.hessian.as_ref().map(|h| (**h).clone())
+        } else {
+            None
+        };
+        QuantCtx { hessian, seed }
+    }
+
+    pub fn qdeq0(&self, quantizer_label: &str, seed: u64) -> Option<&Arc<Mat>> {
+        self.qdeq0.get(&(quantizer_label.to_string(), seed))
+    }
+
+    pub fn spectra(&self, kind: ScalingKind, seed: u64) -> Option<&Arc<PreparedSpectra>> {
+        self.spectra.get(&(kind, seed))
+    }
+}
+
+/// All layers of a sweep plus the cross-layer shared residual SVDs.
+/// Immutable once built — phase B2's per-config fan-out only reads.
+pub struct LayerCache {
+    pub layers: Vec<PreparedLayer>,
+    /// plain-QER residual SVDs: (layer index, quantizer label, scaling
+    /// kind, sweep seed) → SVD of S(W − Q) at the grid's prep rank
+    resid: HashMap<(usize, String, ScalingKind, u64), Arc<Svd>>,
+}
+
+impl LayerCache {
+    pub fn new(layers: Vec<PreparedLayer>) -> Self {
+        LayerCache { layers, resid: HashMap::new() }
+    }
+
+    pub fn insert_resid(
+        &mut self,
+        layer: usize,
+        quantizer_label: String,
+        kind: ScalingKind,
+        seed: u64,
+        svd: Svd,
+    ) {
+        self.resid.insert((layer, quantizer_label, kind, seed), Arc::new(svd));
+    }
+
+    pub fn resid(
+        &self,
+        layer: usize,
+        quantizer_label: &str,
+        kind: ScalingKind,
+        seed: u64,
+    ) -> Option<&Arc<Svd>> {
+        self.resid.get(&(layer, quantizer_label.to_string(), kind, seed))
+    }
+
+    /// Total count of cached shared artifacts (metrics / tests).
+    pub fn entry_count(&self) -> usize {
+        self.resid.len()
+            + self
+                .layers
+                .iter()
+                .map(|l| {
+                    l.scalings.len()
+                        + l.qdeq0.len()
+                        + l.spectra.len()
+                        + usize::from(l.hessian.is_some())
+                })
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn layer(name: &str) -> PreparedLayer {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(8, 8, 1.0, &mut rng);
+        let mut scalings = HashMap::new();
+        scalings.insert(ScalingKind::Identity, Arc::new(Scaling::Identity));
+        PreparedLayer {
+            name: name.into(),
+            w,
+            scalings,
+            hessian: Some(Arc::new(Mat::eye(8))),
+            qdeq0: HashMap::new(),
+            spectra: HashMap::new(),
+            prep_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn quant_ctx_serves_cached_hessian() {
+        let l = layer("l0.wq");
+        let with = l.quant_ctx(true, 7);
+        assert_eq!(with.seed, 7);
+        assert_eq!(with.hessian.unwrap(), Mat::eye(8));
+        let without = l.quant_ctx(false, 7);
+        assert!(without.hessian.is_none());
+    }
+
+    #[test]
+    fn scaling_lookup_and_entry_count() {
+        let l = layer("l0.wq");
+        assert!(matches!(l.scaling(ScalingKind::Identity), Scaling::Identity));
+        let mut cache = LayerCache::new(vec![l]);
+        assert_eq!(cache.entry_count(), 2); // scaling + hessian
+        let svd = crate::linalg::jacobi_svd(&Mat::eye(4));
+        cache.insert_resid(0, "mxint3b32".into(), ScalingKind::Identity, 0, svd);
+        assert_eq!(cache.entry_count(), 3);
+        assert!(cache.resid(0, "mxint3b32", ScalingKind::Identity, 0).is_some());
+        assert!(cache.resid(0, "mxint3b32", ScalingKind::Identity, 1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "not prepared")]
+    fn missing_scaling_panics_with_layer_name() {
+        layer("l0.wq").scaling(ScalingKind::Exact);
+    }
+}

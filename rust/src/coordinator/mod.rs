@@ -8,17 +8,28 @@
 //! worker pool, tracks per-stage timings (Table 11's overhead accounting)
 //! and materializes the reconstructed model for the PJRT eval engines.
 //!
-//! * [`pipeline`] — the PTQ orchestrator.
+//! * [`pipeline`] — the single-config PTQ orchestrator (`run_ptq`).
+//! * [`sweep`] — the shared-work grid engine (`SweepRunner`): one pass
+//!   over the model executes a whole `(method, quantizer, rank, scaling,
+//!   seed)` grid, preparing scalings / Hessians / spectra once per layer
+//!   into a [`cache::LayerCache`] and fanning per-config reconstruction
+//!   out over the worker pool — bit-identical to per-config `run_ptq`.
+//!   This is the seam sharding / multi-model serving will plug into.
+//! * [`cache`] — the keyed per-layer cache ([`cache::PreparedLayer`]).
 //! * [`jobs`] — bounded work queue with backpressure (used by the
 //!   streaming calibration path; invariants property-tested).
 //! * [`metrics`] — counters/timers registry.
 //! * [`config`] — run configuration (CLI/JSON).
 
-pub mod pipeline;
+pub mod cache;
+pub mod config;
 pub mod jobs;
 pub mod metrics;
-pub mod config;
+pub mod pipeline;
+pub mod sweep;
 
+pub use cache::{LayerCache, PreparedLayer};
 pub use config::RunConfig;
 pub use metrics::Metrics;
 pub use pipeline::{run_ptq, LayerReport, PtqOutcome, QuantizerSpec};
+pub use sweep::{run_sweep, SweepConfig, SweepRunner};

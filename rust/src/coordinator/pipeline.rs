@@ -112,13 +112,13 @@ pub fn run_ptq(
         let t0 = Instant::now();
         let scaling: Scaling = calib.scaling_for(name, qer_cfg.scaling_kind);
         let ctx: QuantCtx =
-            calib.quant_ctx(name, quantizer.needs_hessian(), qer_cfg.seed ^ fx(name));
+            calib.quant_ctx(name, quantizer.needs_hessian(), qer_cfg.seed ^ layer_salt(name));
         let scale_secs = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
         let q = quantizer.build();
         let mut cfg = qer_cfg.clone();
-        cfg.seed = qer_cfg.seed ^ fx(name);
+        cfg.seed = qer_cfg.seed ^ layer_salt(name);
         let res = reconstruct(&w, q.as_ref(), &scaling, &ctx, &cfg);
         let qer_secs = t1.elapsed().as_secs_f64();
 
@@ -150,7 +150,11 @@ pub fn run_ptq(
     PtqOutcome { params: new_params, results, reports }
 }
 
-fn fx(s: &str) -> u64 {
+/// FNV-1a mix of the layer name into the run seed, so each layer draws
+/// an independent probe/SVD stream. Shared with the sweep engine — the
+/// bit-identity contract between `run_ptq` and `SweepRunner` depends on
+/// both deriving per-layer seeds identically.
+pub(crate) fn layer_salt(s: &str) -> u64 {
     s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
 }
 

@@ -1,0 +1,520 @@
+//! The shared-work PTQ sweep engine.
+//!
+//! The paper's experiment grid (Tables 1/2/5/16) evaluates many
+//! `(method, quantizer, rank, scaling, seed)` configs over the *same*
+//! model and calibration set. Running `run_ptq` per config recomputes
+//! identical per-layer work every time; [`SweepRunner`] executes the
+//! whole grid in one pass instead:
+//!
+//! * **phase A (prepare)** — per layer, compute every activation scaling,
+//!   GPTQ Hessian, k=0 dequantized weight and (S·W, S·E) spectra the
+//!   grid will touch, once each, at the grid's maximum rank, into a
+//!   [`LayerCache`] of [`PreparedLayer`]s;
+//! * **phase B1 (shared residuals)** — one residual SVD per
+//!   (layer, quantizer, scaling, seed) serves every rank of the plain-QER
+//!   baseline;
+//! * **phase B2 (fan-out)** — per-(layer, config) reconstruction jobs
+//!   over the worker pool, consuming only cached artifacts.
+//!
+//! Results are **bit-identical** to the per-config `run_ptq` path run
+//! with the same `prep_rank`: both truncate the same prep-rank
+//! factorizations and draw from the same salted RNG streams (regression-
+//! tested below; speedup recorded by `exp::perf::sweep_bench` into
+//! `BENCH_sweep.json`). Stage timings land in `metrics` under `sweep.*`
+//! for the Table 11 overhead accounting — `*_cpu_secs` keys are summed
+//! across worker threads (CPU time), `prep_secs` / `shared_resid_secs` /
+//! `reconstruct_secs` are wall-clock around each phase.
+//!
+//! Memory note: every config's [`PtqOutcome`] (spliced model + dense
+//! per-layer `qdeq`) is materialized at once — peak memory is
+//! ~grid-size × model-size. Fine at the paper's grid scales; a
+//! streaming outcome interface is the next step before multi-model
+//! serving (see ROADMAP).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::linalg::{randomized_svd, Svd};
+use crate::model::{CalibrationSet, Params};
+use crate::qer::methods::RESID_SALT;
+use crate::qer::{
+    correction_from_svd, reconstruct_prepared, Method, PreparedSpectra, QerConfig, QerResult,
+};
+use crate::quant::QuantCtx;
+use crate::runtime::manifest::ModelCfg;
+use crate::scaling::ScalingKind;
+use crate::tensor::Mat;
+use crate::util::{pool, Rng};
+
+use super::cache::{LayerCache, PreparedLayer};
+use super::metrics::Metrics;
+use super::pipeline::{layer_salt, LayerReport, PtqOutcome, QuantizerSpec};
+
+/// Randomized-SVD power iterations, matching `QerConfig::new` (§A.4: 4).
+const N_ITER: usize = 4;
+
+/// One cell of a sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub label: String,
+    pub quantizer: QuantizerSpec,
+    pub method: Method,
+    pub rank: usize,
+    pub scaling: ScalingKind,
+    pub seed: u64,
+}
+
+impl SweepConfig {
+    pub fn new(
+        quantizer: QuantizerSpec,
+        method: Method,
+        rank: usize,
+        scaling: ScalingKind,
+    ) -> Self {
+        let label = format!(
+            "{}/{}/r{}/{}",
+            quantizer.label(),
+            method.label(),
+            rank,
+            scaling.label()
+        );
+        SweepConfig { label, quantizer, method, rank, scaling, seed: 0 }
+    }
+
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn labeled(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// The `QerConfig` the equivalent per-config `run_ptq` call would
+    /// derive for a layer with salt `salt` under grid prep rank
+    /// `prep_rank` (the bit-identity contract).
+    pub fn qer_config(&self, prep_rank: usize, salt: u64) -> QerConfig {
+        let mut cfg = QerConfig::new(self.method, self.rank, self.scaling);
+        cfg.n_iter = N_ITER;
+        cfg.seed = self.seed ^ salt;
+        cfg.prep_rank = Some(prep_rank);
+        cfg
+    }
+}
+
+/// Executes a grid of PTQ configs over one model in a single shared-work
+/// pass. See the module docs for the phase structure.
+pub struct SweepRunner<'a> {
+    params: &'a Params,
+    model_cfg: &'a ModelCfg,
+    calib: &'a CalibrationSet,
+    metrics: &'a Metrics,
+}
+
+impl<'a> SweepRunner<'a> {
+    pub fn new(
+        params: &'a Params,
+        model_cfg: &'a ModelCfg,
+        calib: &'a CalibrationSet,
+        metrics: &'a Metrics,
+    ) -> Self {
+        SweepRunner { params, model_cfg, calib, metrics }
+    }
+
+    /// The grid's preparation rank: every shared factorization is
+    /// computed at the maximum rank and prefix-truncated per config.
+    pub fn prep_rank(configs: &[SweepConfig]) -> usize {
+        configs.iter().map(|c| c.rank).max().unwrap_or(0)
+    }
+
+    /// Run the grid; returns one [`PtqOutcome`] per config, aligned.
+    pub fn run(&self, configs: &[SweepConfig]) -> Vec<PtqOutcome> {
+        let names = Params::linear_names(self.model_cfg);
+        let n_layers = names.len();
+        if configs.is_empty() || n_layers == 0 {
+            return configs
+                .iter()
+                .map(|_| PtqOutcome {
+                    params: self.params.clone(),
+                    results: vec![],
+                    reports: vec![],
+                })
+                .collect();
+        }
+
+        let prep_rank = Self::prep_rank(configs);
+        let any_hessian = configs.iter().any(|c| c.quantizer.needs_hessian());
+
+        // ---- distinct shared-work keys (insertion order, deduped) -------
+        let mut kinds: Vec<ScalingKind> = Vec::new();
+        let mut spectra_keys: Vec<(ScalingKind, u64)> = Vec::new();
+        let mut qdeq0_keys: Vec<(String, u64, QuantizerSpec)> = Vec::new();
+        let mut resid_keys: Vec<(String, ScalingKind, u64, QuantizerSpec)> = Vec::new();
+        for c in configs {
+            if !kinds.contains(&c.scaling) {
+                kinds.push(c.scaling);
+            }
+            if c.method.needs_spectra() && !spectra_keys.contains(&(c.scaling, c.seed)) {
+                spectra_keys.push((c.scaling, c.seed));
+            }
+            if matches!(c.method, Method::WOnly | Method::Qer) {
+                let label = c.quantizer.label();
+                if !qdeq0_keys.iter().any(|(l, s, _)| *l == label && *s == c.seed) {
+                    qdeq0_keys.push((label.clone(), c.seed, c.quantizer));
+                }
+                if c.method == Method::Qer
+                    && !resid_keys
+                        .iter()
+                        .any(|(l, k, s, _)| *l == label && *k == c.scaling && *s == c.seed)
+                {
+                    resid_keys.push((label, c.scaling, c.seed, c.quantizer));
+                }
+            }
+        }
+
+        // ---- phase A: per-layer shared preparation ----------------------
+        let t_prep = Instant::now();
+        let layers: Vec<PreparedLayer> = pool::par_map(n_layers, |i| {
+            let name = &names[i];
+            let t0 = Instant::now();
+            let w = self.params.get_mat(name).expect("linear present");
+            let salt = layer_salt(name);
+
+            let ts = Instant::now();
+            let mut scalings = HashMap::new();
+            for &kind in &kinds {
+                scalings.insert(kind, Arc::new(self.calib.scaling_for(name, kind)));
+            }
+            self.metrics.add("sweep.scaling_cpu_secs", ts.elapsed().as_secs_f64());
+
+            let th = Instant::now();
+            let hessian = if any_hessian {
+                self.calib.quant_ctx(name, true, 0).hessian.map(Arc::new)
+            } else {
+                None
+            };
+            self.metrics.add("sweep.hessian_cpu_secs", th.elapsed().as_secs_f64());
+
+            let tq = Instant::now();
+            let mut qdeq0 = HashMap::new();
+            for (label, seed, spec) in &qdeq0_keys {
+                let hess = if spec.needs_hessian() {
+                    hessian.as_ref().map(|h| (**h).clone())
+                } else {
+                    None
+                };
+                let ctx = QuantCtx { hessian: hess, seed: seed ^ salt };
+                let q = spec.build();
+                qdeq0.insert((label.clone(), *seed), Arc::new(q.quantize(&w, &ctx)));
+            }
+            self.metrics.add("sweep.qdeq_cpu_secs", tq.elapsed().as_secs_f64());
+
+            let tsp = Instant::now();
+            let mut spectra = HashMap::new();
+            for (kind, seed) in &spectra_keys {
+                let scaling = scalings.get(kind).expect("scaling prepared above");
+                let sp = PreparedSpectra::compute(&w, scaling, prep_rank, N_ITER, seed ^ salt);
+                spectra.insert((*kind, *seed), Arc::new(sp));
+            }
+            self.metrics.add("sweep.spectra_cpu_secs", tsp.elapsed().as_secs_f64());
+
+            PreparedLayer {
+                name: name.clone(),
+                w,
+                scalings,
+                hessian,
+                qdeq0,
+                spectra,
+                prep_secs: t0.elapsed().as_secs_f64(),
+            }
+        });
+        let mut cache = LayerCache::new(layers);
+        self.metrics.add("sweep.prep_secs", t_prep.elapsed().as_secs_f64());
+
+        // ---- phase B1: shared plain-QER residual SVDs -------------------
+        let t_resid = Instant::now();
+        let n_resid = n_layers * resid_keys.len();
+        let resids: Vec<(usize, usize, Svd)> = pool::par_map(n_resid, |idx| {
+            let li = idx % n_layers;
+            let ri = idx / n_layers;
+            let (label, kind, seed, _spec) = &resid_keys[ri];
+            let layer = &cache.layers[li];
+            let salt = layer_salt(&layer.name);
+            let qdeq = layer.qdeq0(label, *seed).expect("qdeq prepared");
+            let scaling = layer.scaling(*kind);
+            let tj = Instant::now();
+            // same stream `reconstruct_prepared` would open for this cfg
+            let mut rng = Rng::new((seed ^ salt) ^ RESID_SALT);
+            let resid = scaling.apply(&layer.w.sub(qdeq));
+            let svd = randomized_svd(&resid, prep_rank, N_ITER, &mut rng);
+            self.metrics.add("sweep.resid_cpu_secs", tj.elapsed().as_secs_f64());
+            (li, ri, svd)
+        });
+        for (li, ri, svd) in resids {
+            let (label, kind, seed, _) = &resid_keys[ri];
+            cache.insert_resid(li, label.clone(), *kind, *seed, svd);
+        }
+        self.metrics.add("sweep.shared_resid_secs", t_resid.elapsed().as_secs_f64());
+
+        // ---- phase B2: per-(layer, config) fan-out ----------------------
+        let t_rec = Instant::now();
+        let n_jobs = n_layers * configs.len();
+        let jobs: Vec<(QerResult, LayerReport, Mat)> = pool::par_map(n_jobs, |idx| {
+            let li = idx % n_layers;
+            let cj = idx / n_layers;
+            let c = &configs[cj];
+            let layer = &cache.layers[li];
+            let salt = layer_salt(&layer.name);
+            let t0 = Instant::now();
+
+            let res: QerResult = match c.method {
+                Method::WOnly => {
+                    let qdeq =
+                        (**layer.qdeq0(&c.quantizer.label(), c.seed).expect("qdeq prepared"))
+                            .clone();
+                    QerResult {
+                        qdeq,
+                        l: Mat::zeros(layer.w.rows, 0),
+                        r: Mat::zeros(0, layer.w.cols),
+                        k_star: 0,
+                        selection: None,
+                    }
+                }
+                Method::Qer => {
+                    let label = c.quantizer.label();
+                    let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
+                    let svd = cache
+                        .resid(li, &label, c.scaling, c.seed)
+                        .expect("residual SVD prepared");
+                    let scaling = layer.scaling(c.scaling);
+                    let (l, r) = correction_from_svd(svd, scaling, c.rank);
+                    QerResult { qdeq, l, r, k_star: 0, selection: None }
+                }
+                _ => {
+                    let scaling = layer.scaling(c.scaling);
+                    let spectra = if c.method.needs_spectra() {
+                        layer.spectra(c.scaling, c.seed).map(|a| a.as_ref())
+                    } else {
+                        None
+                    };
+                    let ctx = layer.quant_ctx(c.quantizer.needs_hessian(), c.seed ^ salt);
+                    let q = c.quantizer.build();
+                    let qcfg = c.qer_config(prep_rank, salt);
+                    reconstruct_prepared(&layer.w, q.as_ref(), scaling, spectra, &ctx, &qcfg)
+                }
+            };
+
+            let scaling = layer.scaling(c.scaling);
+            let what = res.reconstruct();
+            self.metrics.add("sweep.reconstruct_cpu_secs", t0.elapsed().as_secs_f64());
+            let report = LayerReport {
+                name: layer.name.clone(),
+                k_star: res.k_star,
+                weight_err: layer.w.sub(&what).frob(),
+                scaled_err: scaling.apply(&layer.w.sub(&what)).frob(),
+                // prep is shared: charge each config its amortized share
+                scale_secs: layer.prep_secs / configs.len() as f64,
+                qer_secs: t0.elapsed().as_secs_f64(),
+            };
+            (res, report, what)
+        });
+        self.metrics.add("sweep.reconstruct_secs", t_rec.elapsed().as_secs_f64());
+
+        // ---- assemble one PtqOutcome per config -------------------------
+        let mut per_cfg: Vec<Vec<Option<(QerResult, LayerReport, Mat)>>> =
+            configs.iter().map(|_| (0..n_layers).map(|_| None).collect()).collect();
+        for (idx, job) in jobs.into_iter().enumerate() {
+            per_cfg[idx / n_layers][idx % n_layers] = Some(job);
+        }
+        let mut outcomes = Vec::with_capacity(configs.len());
+        for slots in per_cfg {
+            let mut new_params = self.params.clone();
+            let mut results = Vec::with_capacity(n_layers);
+            let mut reports = Vec::with_capacity(n_layers);
+            for (li, slot) in slots.into_iter().enumerate() {
+                let (res, report, what) = slot.expect("job completed");
+                self.metrics.add("ptq.scale_secs", report.scale_secs);
+                self.metrics.add("ptq.qer_secs", report.qer_secs);
+                self.metrics.incr("ptq.layers");
+                new_params.set_mat(&names[li], &what);
+                results.push((names[li].clone(), res));
+                reports.push(report);
+            }
+            outcomes.push(PtqOutcome { params: new_params, results, reports });
+        }
+
+        self.metrics.add("sweep.configs", configs.len() as f64);
+        self.metrics.add("sweep.layers", n_layers as f64);
+        self.metrics.add("sweep.cache_entries", cache.entry_count() as f64);
+        outcomes
+    }
+}
+
+/// Convenience wrapper mirroring `run_ptq`'s free-function shape.
+pub fn run_sweep(
+    params: &Params,
+    model_cfg: &ModelCfg,
+    calib: &CalibrationSet,
+    configs: &[SweepConfig],
+    metrics: &Metrics,
+) -> Vec<PtqOutcome> {
+    SweepRunner::new(params, model_cfg, calib, metrics).run(configs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::run_ptq;
+    use crate::data::Corpus;
+    use crate::model::collect_calibration;
+    use crate::model::synth::synth_lm_params;
+
+    fn setup() -> (Params, ModelCfg, CalibrationSet) {
+        // same regime as the pipeline tests: rank budget a few % of the
+        // min dim, calibration deep enough for a full-rank exact Gram
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: 16,
+        };
+        let params = synth_lm_params(&cfg, 5, cfg.vocab);
+        let corpus = Corpus::generate(cfg.vocab, 4000, 6);
+        let batches: Vec<Vec<i32>> = (0..10).map(|i| corpus.train_batch(2, 16, i)).collect();
+        let calib = collect_calibration(&params, &cfg, &batches, 2, 16, 192);
+        (params, cfg, calib)
+    }
+
+    fn grid() -> Vec<SweepConfig> {
+        let mx = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        vec![
+            SweepConfig::new(mx, Method::Qer, 4, ScalingKind::DiagRms),
+            SweepConfig::new(mx, Method::QerSrr, 8, ScalingKind::Exact).seeded(5),
+            SweepConfig::new(
+                QuantizerSpec::Gptq { bits: 3, group: 64 },
+                Method::QerSrr,
+                8,
+                ScalingKind::DiagAbsMean,
+            ),
+        ]
+    }
+
+    /// Satellite regression: the shared-work sweep must be bit-identical
+    /// (`qdeq`, `k_star`, `L`, `R`) to per-config `run_ptq` with the same
+    /// prep rank, for a mixed 3-config grid including a Hessian path.
+    #[test]
+    fn equivalent_to_per_config_run_ptq() {
+        let (params, cfg, calib) = setup();
+        let configs = grid();
+        let prep_rank = SweepRunner::prep_rank(&configs);
+        let metrics = Metrics::new();
+        let outcomes = run_sweep(&params, &cfg, &calib, &configs, &metrics);
+        assert_eq!(outcomes.len(), configs.len());
+
+        for (c, sweep_out) in configs.iter().zip(&outcomes) {
+            let mut qcfg = QerConfig::new(c.method, c.rank, c.scaling);
+            qcfg.seed = c.seed;
+            qcfg.prep_rank = Some(prep_rank);
+            let solo = run_ptq(&params, &cfg, &calib, c.quantizer, &qcfg, &metrics);
+            assert_eq!(solo.results.len(), sweep_out.results.len());
+            for ((n1, r1), (n2, r2)) in solo.results.iter().zip(&sweep_out.results) {
+                assert_eq!(n1, n2);
+                assert_eq!(r1.qdeq, r2.qdeq, "{}: {n1} qdeq differs", c.label);
+                assert_eq!(r1.l, r2.l, "{}: {n1} L differs", c.label);
+                assert_eq!(r1.r, r2.r, "{}: {n1} R differs", c.label);
+                assert_eq!(r1.k_star, r2.k_star, "{}: {n1} k* differs", c.label);
+            }
+            // spliced models agree too
+            for name in Params::linear_names(&cfg) {
+                assert_eq!(
+                    solo.params.get_mat(&name).unwrap(),
+                    sweep_out.params.get_mat(&name).unwrap(),
+                    "{}: spliced {name} differs",
+                    c.label
+                );
+            }
+        }
+    }
+
+    /// Satellite regression: two sweep runs are deterministic.
+    #[test]
+    fn deterministic_across_runs() {
+        let (params, cfg, calib) = setup();
+        let configs = grid();
+        let metrics = Metrics::new();
+        let a = run_sweep(&params, &cfg, &calib, &configs, &metrics);
+        let b = run_sweep(&params, &cfg, &calib, &configs, &metrics);
+        for (oa, ob) in a.iter().zip(&b) {
+            for ((n1, r1), (n2, r2)) in oa.results.iter().zip(&ob.results) {
+                assert_eq!(n1, n2);
+                assert_eq!(r1.qdeq, r2.qdeq, "{n1} qdeq differs across runs");
+                assert_eq!(r1.l, r2.l);
+                assert_eq!(r1.r, r2.r);
+                assert_eq!(r1.k_star, r2.k_star);
+            }
+        }
+    }
+
+    #[test]
+    fn wonly_and_qer_share_quantization() {
+        let (params, cfg, calib) = setup();
+        let mx = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let configs = vec![
+            SweepConfig::new(mx, Method::WOnly, 0, ScalingKind::Identity),
+            SweepConfig::new(mx, Method::Qer, 4, ScalingKind::DiagRms),
+            SweepConfig::new(mx, Method::Qer, 8, ScalingKind::DiagRms),
+        ];
+        let metrics = Metrics::new();
+        let outs = run_sweep(&params, &cfg, &calib, &configs, &metrics);
+        // all three share the k=0 quantization of W
+        for li in 0..outs[0].results.len() {
+            assert_eq!(outs[0].results[li].1.qdeq, outs[1].results[li].1.qdeq);
+            assert_eq!(outs[1].results[li].1.qdeq, outs[2].results[li].1.qdeq);
+            assert_eq!(outs[1].results[li].1.l.cols, 4);
+            assert_eq!(outs[2].results[li].1.l.cols, 8);
+            // the rank-4 correction is the prefix of the rank-8 one
+            // (both truncate the same shared residual SVD)
+            let l8 = &outs[2].results[li].1.l;
+            assert_eq!(outs[1].results[li].1.l, l8.cols_slice(0, 4));
+        }
+        // cache actually held shared entries and metrics were recorded
+        assert!(metrics.get("sweep.cache_entries") > 0.0);
+        assert_eq!(metrics.get("sweep.configs"), 3.0);
+        assert!(metrics.get("sweep.prep_secs") > 0.0);
+        assert!(metrics.get("sweep.reconstruct_secs") > 0.0);
+    }
+
+    #[test]
+    fn reports_and_outcome_shape_match_run_ptq_contract() {
+        let (params, cfg, calib) = setup();
+        let configs =
+            vec![SweepConfig::new(QuantizerSpec::Mxint { bits: 3, block: 32 }, Method::QerSrr, 8, ScalingKind::DiagRms)];
+        let metrics = Metrics::new();
+        let outs = run_sweep(&params, &cfg, &calib, &configs, &metrics);
+        let out = &outs[0];
+        assert_eq!(out.reports.len(), 14);
+        assert_eq!(out.results.len(), 14);
+        for (name, _) in &out.results {
+            let orig = params.get_mat(name).unwrap();
+            let new = out.params.get_mat(name).unwrap();
+            assert_ne!(orig, new, "{name} unchanged");
+        }
+        // non-linear params untouched
+        assert_eq!(params.get_mat("embed").unwrap(), out.params.get_mat("embed").unwrap());
+        // timing fields populated
+        assert!(out.reports.iter().all(|r| r.qer_secs >= 0.0 && r.scale_secs >= 0.0));
+    }
+
+    #[test]
+    fn empty_grid_is_a_noop() {
+        let (params, cfg, calib) = setup();
+        let metrics = Metrics::new();
+        let outs = run_sweep(&params, &cfg, &calib, &[], &metrics);
+        assert!(outs.is_empty());
+    }
+}

@@ -29,9 +29,42 @@ pub struct ExpCtx {
     fixtures: HashMap<String, Rc<LmFixture>>,
 }
 
+/// Built-in manifest mirroring python/compile/configs.py, for engine-free
+/// experiments (the sweep bench, CI smoke) when no `artifacts/` exists.
+/// No artifacts are listed, so fixtures skip training and anything that
+/// executes an artifact keeps failing with a clear error.
+const OFFLINE_MANIFEST: &str = r#"{
+  "models": {
+    "tiny":  {"vocab": 256,  "d_model": 128, "n_heads": 4, "n_layers": 2,
+              "d_ff": 512,  "seq_len": 64},
+    "small": {"vocab": 1024, "d_model": 256, "n_heads": 8, "n_layers": 4,
+              "d_ff": 1024, "seq_len": 128},
+    "base":  {"vocab": 2048, "d_model": 384, "n_heads": 8, "n_layers": 6,
+              "d_ff": 1536, "seq_len": 128}
+  },
+  "constants": {"lm_batch": 8, "cls_batch": 16, "cls_seq": 32, "cls_classes": 4},
+  "artifacts": []
+}"#;
+
 impl ExpCtx {
     pub fn new(quick: bool) -> Result<Self> {
         Ok(ExpCtx { engine: Engine::discover()?, quick, seed: 0, fixtures: HashMap::new() })
+    }
+
+    /// Engine-free context: model configs from the embedded manifest,
+    /// calibration through the rust-native forward, no PJRT. Experiments
+    /// flagged `offline_ok` in the registry run under this.
+    ///
+    /// Caveat: under `--features pjrt` this still constructs the PJRT
+    /// client (and fails against the vendored stub) — offline mode is
+    /// for the default build; making `ExpCtx` engine-optional is future
+    /// work.
+    pub fn offline(quick: bool) -> Result<Self> {
+        let manifest = crate::runtime::Manifest::parse(
+            OFFLINE_MANIFEST,
+            std::path::PathBuf::from("offline"),
+        )?;
+        Ok(ExpCtx { engine: Engine::new(manifest)?, quick, seed: 0, fixtures: HashMap::new() })
     }
 
     /// Paper setting: three random seeds for SRR's probe (§5.1).

@@ -7,7 +7,8 @@
 //!
 //! `quick` mode shrinks workloads (fewer seeds/steps/batches) so the
 //! suite smoke-runs in CI; the recorded EXPERIMENTS.md numbers come from
-//! full mode.
+//! full mode. Experiments flagged `offline_ok` never execute a PJRT
+//! artifact and also run without `artifacts/` (via [`ExpCtx::offline`]).
 
 pub mod fixtures;
 pub mod ptq;
@@ -23,39 +24,65 @@ use crate::util::bench::Table;
 
 pub type ExpFn = fn(&mut ExpCtx) -> Result<Vec<Table>>;
 
-/// (id, paper artifact, runner)
-pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+/// One registry row: experiment id, the paper artifact it regenerates,
+/// the runner, and whether it can run without PJRT artifacts.
+pub struct ExpEntry {
+    pub id: &'static str,
+    pub paper: &'static str,
+    pub run: ExpFn,
+    pub offline_ok: bool,
+}
+
+fn entry(id: &'static str, paper: &'static str, run: ExpFn) -> ExpEntry {
+    ExpEntry { id, paper, run, offline_ok: false }
+}
+
+fn offline(id: &'static str, paper: &'static str, run: ExpFn) -> ExpEntry {
+    ExpEntry { id, paper, run, offline_ok: true }
+}
+
+pub fn registry() -> Vec<ExpEntry> {
     vec![
-        ("table1", "Tab.1 WikiText2-PPL 3-bit MXINT, QER methods ± SRR", ptq::table1 as ExpFn),
-        ("table2", "Tab.2/13 zero-shot accuracy, QERA-exact ± SRR", ptq::table2),
-        ("table5", "Tab.5 GPTQ-3bit / QuIP#-2bit ± SRR", ptq::table5),
-        ("table15", "Tab.15 normalized eRank across scales", ptq::table15),
-        ("table16", "Tab.16 ODLRI-like fixed split vs SRR", ptq::table16),
-        ("fig7", "Fig.7 layer-wise |W-Q-LR| under S=I (ZeroQuant-V2)", ptq::fig7),
-        ("fig2", "Fig.2/6 reconstruction error vs surrogate over k", rank::fig2),
-        ("fig3", "Fig.3a singular spectrum of the packed adapter", rank::fig3),
-        ("fig5", "Fig.5 k* distribution by projection", rank::fig5),
-        ("table12", "Tab.12 k* stability across probe seeds", rank::table12),
-        ("table20", "Tab.20/21 Assumption 4.1/4.2 validation", rank::table20),
-        ("table3", "Tab.3 GLUE-sim QPEFT 4/3/2-bit", qpeft_exp::table3),
-        ("table4", "Tab.4 CLM-PPL + GSM-sim accuracy QPEFT", qpeft_exp::table4),
-        ("table6", "Tab.6/17 gamma / SGP gradient-scaling ablation", qpeft_exp::table6),
-        ("table18", "Tab.18 SGP alpha sensitivity", qpeft_exp::table18),
-        ("table19", "Tab.19 QERA ± SGP", qpeft_exp::table19),
-        ("fig4", "Fig.4/8/9 QPEFT training-loss curves", qpeft_exp::fig4),
-        ("table11", "Tab.11 computational overhead QER vs SRR", perf::table11),
-        ("perf", "§Perf kernel / pipeline / engine hot-path benches", perf::perf_suite),
+        entry("table1", "Tab.1 WikiText2-PPL 3-bit MXINT, QER methods ± SRR", ptq::table1 as ExpFn),
+        entry("table2", "Tab.2/13 zero-shot accuracy, QERA-exact ± SRR", ptq::table2),
+        entry("table5", "Tab.5 GPTQ-3bit / QuIP#-2bit ± SRR", ptq::table5),
+        entry("table15", "Tab.15 normalized eRank across scales", ptq::table15),
+        entry("table16", "Tab.16 ODLRI-like fixed split vs SRR", ptq::table16),
+        entry("fig7", "Fig.7 layer-wise |W-Q-LR| under S=I (ZeroQuant-V2)", ptq::fig7),
+        entry("fig2", "Fig.2/6 reconstruction error vs surrogate over k", rank::fig2),
+        entry("fig3", "Fig.3a singular spectrum of the packed adapter", rank::fig3),
+        entry("fig5", "Fig.5 k* distribution by projection", rank::fig5),
+        entry("table12", "Tab.12 k* stability across probe seeds", rank::table12),
+        entry("table20", "Tab.20/21 Assumption 4.1/4.2 validation", rank::table20),
+        entry("table3", "Tab.3 GLUE-sim QPEFT 4/3/2-bit", qpeft_exp::table3),
+        entry("table4", "Tab.4 CLM-PPL + GSM-sim accuracy QPEFT", qpeft_exp::table4),
+        entry("table6", "Tab.6/17 gamma / SGP gradient-scaling ablation", qpeft_exp::table6),
+        entry("table18", "Tab.18 SGP alpha sensitivity", qpeft_exp::table18),
+        entry("table19", "Tab.19 QERA ± SGP", qpeft_exp::table19),
+        entry("fig4", "Fig.4/8/9 QPEFT training-loss curves", qpeft_exp::fig4),
+        entry("table11", "Tab.11 computational overhead QER vs SRR", perf::table11),
+        entry("perf", "§Perf kernel / pipeline / engine hot-path benches", perf::perf_suite),
+        offline(
+            "sweep",
+            "§Perf sweep engine vs per-config run_ptq (writes BENCH_sweep.json)",
+            perf::sweep_bench,
+        ),
     ]
 }
 
 /// Run one experiment by id.
 pub fn run(id: &str, ctx: &mut ExpCtx) -> Result<Vec<Table>> {
-    for (name, _, f) in registry() {
-        if name == id {
-            return f(ctx);
+    for e in registry() {
+        if e.id == id {
+            return (e.run)(ctx);
         }
     }
     anyhow::bail!("unknown experiment '{id}' (see `srr bench --list`)")
+}
+
+/// Whether `id` is registered with `offline_ok` (no PJRT needed).
+pub fn offline_ok(id: &str) -> bool {
+    registry().iter().any(|e| e.id == id && e.offline_ok)
 }
 
 #[cfg(test)]
@@ -65,7 +92,7 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_complete() {
         let reg = registry();
-        let mut ids: Vec<&str> = reg.iter().map(|(n, _, _)| *n).collect();
+        let mut ids: Vec<&str> = reg.iter().map(|e| e.id).collect();
         let n = ids.len();
         ids.sort_unstable();
         ids.dedup();
@@ -73,9 +100,16 @@ mod tests {
         for required in [
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
-            "fig2", "fig3", "fig4", "fig5", "fig7", "perf",
+            "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
+    }
+
+    #[test]
+    fn sweep_is_offline_capable_and_ppl_experiments_are_not() {
+        assert!(offline_ok("sweep"));
+        assert!(!offline_ok("table1"));
+        assert!(!offline_ok("nonexistent"));
     }
 }

@@ -1,13 +1,24 @@
 //! PTQ experiments: Tables 1, 2, 5, 15, 16 and Figure 7.
+//!
+//! Every grid-shaped experiment drives the shared-work
+//! [`run_sweep`] engine: one pass over the model computes the per-layer
+//! scalings / spectra / quantizations once and fans the whole
+//! `(method, rank, scaling, seed)` grid out over the worker pool.
+//! Bit-identity to the per-config `run_ptq` path holds at *matched*
+//! prep rank (verified by `perf::sweep_bench`); cells below the grid's
+//! maximum rank now truncate the grid-max factorization instead of
+//! sketching at their own rank, so their recorded numbers shift
+//! slightly versus the pre-sweep protocol (same algorithm, wider
+//! randomized-SVD sketch).
 
 use anyhow::Result;
 
-use crate::coordinator::{run_ptq, Metrics, QuantizerSpec};
+use crate::coordinator::{run_sweep, Metrics, PtqOutcome, QuantizerSpec, SweepConfig};
 use crate::data::zeroshot::ZeroShotTask;
 use crate::eval::{perplexity, zero_shot_accuracy};
 use crate::linalg::effective_rank;
 use crate::model::Params;
-use crate::qer::{Method, QerConfig};
+use crate::qer::Method;
 use crate::runtime::Executor;
 use crate::scaling::ScalingKind;
 use crate::util::bench::{f, pm, Table};
@@ -42,23 +53,17 @@ fn ppl_of(
     perplexity(&ctx.engine, &format!("lm_nll_{model}"), params, &batches, b, t)
 }
 
-/// Run one (method, scaling, rank, seed) PTQ cell, returning PPL.
-#[allow(clippy::too_many_arguments)]
-fn ptq_ppl(
+/// Run a grid over `model` in one shared-work pass, then PPL each
+/// outcome. Returns PPLs aligned with `configs`.
+fn sweep_ppls(
     ctx: &mut ExpCtx,
     model: &str,
-    quantizer: QuantizerSpec,
-    method: Method,
-    scaling: ScalingKind,
-    rank: usize,
-    seed: u64,
-) -> Result<f64> {
+    configs: &[SweepConfig],
+) -> Result<Vec<f64>> {
     let fx = ctx.lm(model)?;
-    let mut cfg = QerConfig::new(method, rank, scaling);
-    cfg.seed = seed;
     let metrics = Metrics::new();
-    let out = run_ptq(&fx.params, &fx.cfg, &fx.calib, quantizer, &cfg, &metrics);
-    ppl_of(ctx, model, &out.params)
+    let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, configs, &metrics);
+    outs.iter().map(|o| ppl_of(ctx, model, &o.params)).collect()
 }
 
 fn mean_std(xs: &[f64]) -> (f64, f64) {
@@ -79,34 +84,52 @@ pub fn table1(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         ("QERA-approx", ScalingKind::DiagAbsMean),
         ("QERA-exact", ScalingKind::Exact),
     ];
+    let seeds = ctx.srr_seeds();
     let mut tables = vec![];
     for model in models_for(ctx) {
+        // one grid for the whole table: w-only + {base, SRR×seeds}×ranks
+        let mut configs = vec![SweepConfig::new(quant, Method::WOnly, 0, ScalingKind::Identity)];
+        // per (scaling, rank): (base config index, SRR config indices)
+        let mut cells: Vec<Vec<(usize, Vec<usize>)>> = vec![];
+        for (_, kind) in scalings {
+            let mut per_rank = vec![];
+            for rank in RANKS {
+                let base = configs.len();
+                configs.push(SweepConfig::new(quant, Method::Qer, rank, kind));
+                let srr: Vec<usize> = seeds
+                    .iter()
+                    .map(|&s| {
+                        configs.push(
+                            SweepConfig::new(quant, Method::QerSrr, rank, kind).seeded(s),
+                        );
+                        configs.len() - 1
+                    })
+                    .collect();
+                per_rank.push((base, srr));
+            }
+            cells.push(per_rank);
+        }
+        let ppls = sweep_ppls(ctx, model, &configs)?;
+
         let mut t = Table::new(
             &format!("Table 1 analog — PPL, 2-bit MXINT (2.25b eff; damage-equiv of paper 3-bit), model={model}"),
             &["method", "r=4", "r=8"],
         );
-        // reference rows
         let fx = ctx.lm(model)?;
         let bf16 = ppl_of(ctx, model, &fx.params.clone())?;
         t.row(vec!["BF16".into(), f(bf16, 2), f(bf16, 2)]);
-        let wonly = ptq_ppl(ctx, model, quant, Method::WOnly, ScalingKind::Identity, 0, 0)?;
-        t.row(vec!["w-only".into(), f(wonly, 2), f(wonly, 2)]);
+        t.row(vec!["w-only".into(), f(ppls[0], 2), f(ppls[0], 2)]);
 
-        for (label, kind) in scalings {
+        for ((label, _), per_rank) in scalings.iter().zip(&cells) {
             let mut base_cells = vec![];
             let mut srr_cells = vec![];
-            for rank in RANKS {
-                let base = ptq_ppl(ctx, model, quant, Method::Qer, kind, rank, 0)?;
-                base_cells.push(f(base, 2));
-                let ppls: Vec<f64> = ctx
-                    .srr_seeds()
-                    .iter()
-                    .map(|&s| ptq_ppl(ctx, model, quant, Method::QerSrr, kind, rank, s))
-                    .collect::<Result<_>>()?;
-                let (m, s) = mean_std(&ppls);
+            for (base, srr) in per_rank {
+                base_cells.push(f(ppls[*base], 2));
+                let srr_ppls: Vec<f64> = srr.iter().map(|&i| ppls[i]).collect();
+                let (m, s) = mean_std(&srr_ppls);
                 srr_cells.push(pm(m, s, 2));
             }
-            t.row(vec![label.into(), base_cells[0].clone(), base_cells[1].clone()]);
+            t.row(vec![label.to_string(), base_cells[0].clone(), base_cells[1].clone()]);
             t.row(vec![format!("{label} w/ SRR"), srr_cells[0].clone(), srr_cells[1].clone()]);
         }
         tables.push(t);
@@ -148,29 +171,28 @@ pub fn table2(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
             t.row(cells);
         };
 
-        push("BF16", eval_model(ctx, &fx.params.clone())?, &mut t);
+        // one shared-work pass for the three quantized rows
+        let configs = vec![
+            SweepConfig::new(quant, Method::WOnly, 0, ScalingKind::Identity)
+                .labeled("w-only"),
+            SweepConfig::new(quant, Method::Qer, 8, ScalingKind::Exact)
+                .labeled("QERA-exact"),
+            SweepConfig::new(quant, Method::QerSrr, 8, ScalingKind::Exact)
+                .labeled("w/ SRR"),
+        ];
         let metrics = Metrics::new();
-        let wonly = run_ptq(
-            &fx.params, &fx.cfg, &fx.calib, quant,
-            &QerConfig::new(Method::WOnly, 0, ScalingKind::Identity), &metrics,
-        );
-        push("w-only", eval_model(ctx, &wonly.params)?, &mut t);
-        let qera = run_ptq(
-            &fx.params, &fx.cfg, &fx.calib, quant,
-            &QerConfig::new(Method::Qer, 8, ScalingKind::Exact), &metrics,
-        );
-        push("QERA-exact", eval_model(ctx, &qera.params)?, &mut t);
-        let srr = run_ptq(
-            &fx.params, &fx.cfg, &fx.calib, quant,
-            &QerConfig::new(Method::QerSrr, 8, ScalingKind::Exact), &metrics,
-        );
-        push("w/ SRR", eval_model(ctx, &srr.params)?, &mut t);
+        let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
+
+        push("BF16", eval_model(ctx, &fx.params.clone())?, &mut t);
+        for (c, out) in configs.iter().zip(&outs) {
+            push(&c.label, eval_model(ctx, &out.params)?, &mut t);
+        }
         tables.push(t);
     }
     Ok(tables)
 }
 
-/// Table 5: alternative quantizers (GPTQ 3-bit, QuIP#-sim 2-bit).
+/// Table 5: alternative quantizers (GPTQ 2-bit, QuIP#-sim 2-bit).
 pub fn table5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let model = "tiny";
     let quants = [
@@ -182,6 +204,36 @@ pub fn table5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         ("QERA-approx", ScalingKind::DiagAbsMean),
         ("QERA-exact", ScalingKind::Exact),
     ];
+    let seeds = ctx.srr_seeds();
+
+    // one grid crossing both quantizers with every (scaling, ±SRR) cell:
+    // the sweep shares scalings/spectra across quantizers too
+    let mut configs = vec![];
+    let mut wonly_idx = vec![];
+    for (_, q) in quants {
+        wonly_idx.push(configs.len());
+        configs.push(SweepConfig::new(q, Method::WOnly, 0, ScalingKind::Identity));
+    }
+    // per scaling, per quantizer: (base idx, srr idxs)
+    let mut cells: Vec<Vec<(usize, Vec<usize>)>> = vec![];
+    for (_, kind) in scalings {
+        let mut per_quant = vec![];
+        for (_, q) in quants {
+            let base = configs.len();
+            configs.push(SweepConfig::new(q, Method::Qer, 8, kind));
+            let srr: Vec<usize> = seeds
+                .iter()
+                .map(|&s| {
+                    configs.push(SweepConfig::new(q, Method::QerSrr, 8, kind).seeded(s));
+                    configs.len() - 1
+                })
+                .collect();
+            per_quant.push((base, srr));
+        }
+        cells.push(per_quant);
+    }
+    let ppls = sweep_ppls(ctx, model, &configs)?;
+
     let mut t = Table::new(
         &format!("Table 5 analog — PPL under GPTQ / QuIP#-sim, r=8, model={model}"),
         &["method", "GPTQ(2-bit)", "QuIP#-sim(2-bit)"],
@@ -190,21 +242,17 @@ pub fn table5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let bf16 = ppl_of(ctx, model, &fx.params.clone())?;
     t.row(vec!["BF16".into(), f(bf16, 2), f(bf16, 2)]);
     let mut wrow = vec!["w-only".into()];
-    for (_, q) in quants {
-        wrow.push(f(ptq_ppl(ctx, model, q, Method::WOnly, ScalingKind::Identity, 0, 0)?, 2));
+    for &i in &wonly_idx {
+        wrow.push(f(ppls[i], 2));
     }
     t.row(wrow);
-    for (label, kind) in scalings {
+    for ((label, _), per_quant) in scalings.iter().zip(&cells) {
         let mut base_row = vec![label.to_string()];
         let mut srr_row = vec![format!("{label} w/ SRR")];
-        for (_, q) in quants {
-            base_row.push(f(ptq_ppl(ctx, model, q, Method::Qer, kind, 8, 0)?, 2));
-            let ppls: Vec<f64> = ctx
-                .srr_seeds()
-                .iter()
-                .map(|&s| ptq_ppl(ctx, model, q, Method::QerSrr, kind, 8, s))
-                .collect::<Result<_>>()?;
-            let (m, s) = mean_std(&ppls);
+        for (base, srr) in per_quant {
+            base_row.push(f(ppls[*base], 2));
+            let srr_ppls: Vec<f64> = srr.iter().map(|&i| ppls[i]).collect();
+            let (m, s) = mean_std(&srr_ppls);
             srr_row.push(pm(m, s, 2));
         }
         t.row(base_row);
@@ -260,14 +308,17 @@ pub fn table15(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
 pub fn table16(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let model = "tiny";
     let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let configs = vec![
+        SweepConfig::new(quant, Method::FixedSplitHalf, 4, ScalingKind::Exact),
+        SweepConfig::new(quant, Method::QerSrr, 4, ScalingKind::Exact),
+    ];
+    let ppls = sweep_ppls(ctx, model, &configs)?;
     let mut t = Table::new(
         &format!("Table 16 analog — fixed-split (ODLRI-like) vs SRR, PPL, r=4, model={model}"),
         &["method", "PPL"],
     );
-    let odlri = ptq_ppl(ctx, model, quant, Method::FixedSplitHalf, ScalingKind::Exact, 4, 0)?;
-    let srr = ptq_ppl(ctx, model, quant, Method::QerSrr, ScalingKind::Exact, 4, 0)?;
-    t.row(vec!["ODLRI-like (k=r/2)".into(), f(odlri, 2)]);
-    t.row(vec!["SRR (k=k*)".into(), f(srr, 2)]);
+    t.row(vec!["ODLRI-like (k=r/2)".into(), f(ppls[0], 2)]);
+    t.row(vec!["SRR (k=k*)".into(), f(ppls[1], 2)]);
     Ok(vec![t])
 }
 
@@ -277,14 +328,12 @@ pub fn fig7(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
     let fx = ctx.lm(model)?;
     let metrics = Metrics::new();
-    let qer = run_ptq(
-        &fx.params, &fx.cfg, &fx.calib, quant,
-        &QerConfig::new(Method::Qer, 8, ScalingKind::Identity), &metrics,
-    );
-    let srr = run_ptq(
-        &fx.params, &fx.cfg, &fx.calib, quant,
-        &QerConfig::new(Method::QerSrr, 8, ScalingKind::Identity), &metrics,
-    );
+    let configs = vec![
+        SweepConfig::new(quant, Method::Qer, 8, ScalingKind::Identity),
+        SweepConfig::new(quant, Method::QerSrr, 8, ScalingKind::Identity),
+    ];
+    let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
+    let (qer, srr): (&PtqOutcome, &PtqOutcome) = (&outs[0], &outs[1]);
     let mut t = Table::new(
         &format!("Fig. 7 analog — layer-wise |W-Q-LR|_F under ZeroQuant-V2 (S=I), r=8, model={model}"),
         &["layer", "QER", "SRR", "winner"],

@@ -5,8 +5,8 @@ use anyhow::Result;
 use crate::coordinator::QuantizerSpec;
 use crate::model::Params;
 use crate::qer::assumptions::{eta_q, proxy_alignment};
-use crate::qer::rank_select::select_k;
-use crate::qer::srr::srr_with_k;
+use crate::qer::rank_select::{select_k, PreparedSpectra};
+use crate::qer::srr::srr_with_k_prepared;
 use crate::scaling::ScalingKind;
 use crate::tensor::matmul;
 use crate::util::bench::{f, Table};
@@ -38,37 +38,37 @@ pub fn fig2(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         let name = format!("l{layer}.{kind}");
         let w = fx.params.get_mat(&name)?;
         let scaling = fx.calib.scaling_for(&name, ScalingKind::Exact);
+        // shared-work: one spectra preparation serves the selection and
+        // every fixed-k decomposition of the sweep below (the preserve
+        // factors are prefix truncations of the same SVD)
         let mut rng = Rng::new(42);
-        let sel = select_k(&w, &scaling, rank, 4, &mut rng);
+        let spectra = PreparedSpectra::compute_with_rng(&w, &scaling, rank, 4, &mut rng);
+        let sel = spectra.select(rank);
         let mut t = Table::new(
             &format!("Fig. 2 analog — L(k) vs surrogate, {label} (layer {layer}, r={rank}, model={model})"),
             &["k", "actual L(k)", "surrogate", "selected"],
         );
         let q = quant.build();
         let ctxq = Default::default();
-        for k in 0..=rank {
-            let mut rng2 = Rng::new(43);
-            let out = srr_with_k(
-                &w, q.as_ref(), &scaling, &ctxq, rank, k, 4, &mut rng2, sel.clone(),
-            );
-            let actual = scaling.apply(&w.sub(&out.reconstruct())).frob();
+        let actuals: Vec<f64> = (0..=rank)
+            .map(|k| {
+                let mut rng2 = Rng::new(43);
+                let out = srr_with_k_prepared(
+                    &w, q.as_ref(), &scaling, &spectra, &ctxq, rank, k, 4, &mut rng2,
+                    sel.clone(),
+                );
+                scaling.apply(&w.sub(&out.reconstruct())).frob()
+            })
+            .collect();
+        for (k, actual) in actuals.iter().enumerate() {
             t.row(vec![
                 k.to_string(),
-                f(actual, 4),
+                f(*actual, 4),
                 f(sel.objective[k], 5),
                 if k == sel.k_star { "<- k*".into() } else { String::new() },
             ]);
         }
         // alignment check: the two curves should rank k's similarly
-        let actuals: Vec<f64> = (0..=rank)
-            .map(|k| {
-                let mut rng2 = Rng::new(43);
-                let out = srr_with_k(
-                    &w, q.as_ref(), &scaling, &ctxq, rank, k, 4, &mut rng2, sel.clone(),
-                );
-                scaling.apply(&w.sub(&out.reconstruct())).frob()
-            })
-            .collect();
         let rho = stats::spearman(&actuals, &sel.objective);
         t.row(vec!["spearman(actual,surrogate)".into(), f(rho, 3), String::new(), String::new()]);
         tables.push(t);

@@ -7,7 +7,8 @@
 //! path — quantization pipeline coordination, the SRR algorithm and every
 //! QER baseline, evaluation engines, and QPEFT training — and executes the
 //! AOT-compiled JAX/Pallas compute graphs (`artifacts/*.hlo.txt`) through
-//! the PJRT C API (`xla` crate). Python never runs at request time.
+//! the PJRT C API (`xla` crate, behind the opt-in `pjrt` feature; the
+//! default build is pure rust). Python never runs at request time.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
@@ -15,16 +16,33 @@
 //!   pool, property-test helper): no crates.io access beyond `xla`/`anyhow`.
 //! * [`tensor`] / [`linalg`] — dense f32 matrices and the factorization
 //!   stack (QR, randomized SVD, Jacobi SVD/eigh, Cholesky, Hadamard).
-//! * [`quant`] — MXINT, uniform, GPTQ, QuIP#-sim quantizers.
+//! * [`quant`] — MXINT, uniform, GPTQ, QuIP#-sim quantizers
+//!   (half-step/round-trip invariants property-tested).
 //! * [`scaling`] — activation-aware scaling matrices S.
 //! * [`qer`] — QER baselines + SRR rank allocation (the paper's core).
+//!   Entry points come in self-contained (`reconstruct`, `select_k`) and
+//!   shared-work (`reconstruct_prepared` + `PreparedSpectra`) forms; the
+//!   two are bit-identical for the same seed and prep rank.
 //! * [`model`] / [`data`] — synthetic model zoo, calibration streams,
 //!   corpora and tasks standing in for the paper's gated assets.
-//! * [`runtime`] — PJRT client + manifest-driven artifact executor.
-//! * [`coordinator`] — the multi-threaded layer-pipeline orchestrator.
+//! * [`runtime`] — PJRT client + manifest-driven artifact executor
+//!   (manifest-only stub without the `pjrt` feature).
+//! * [`coordinator`] — the multi-threaded layer-pipeline orchestrator:
+//!   single-config `run_ptq`, plus the shared-work grid engine
+//!   (`SweepRunner` over a keyed `LayerCache` of `PreparedLayer`s) that
+//!   executes a whole (method, quantizer, rank, scaling, seed) grid in
+//!   one pass — the seam sharding / multi-model serving plugs into.
 //! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines.
 //! * [`qpeft`] — adapter fine-tuning: AdamW, γ gradient scaling, SGP.
-//! * [`exp`] — the benchmark harness regenerating every paper table/figure.
+//! * [`exp`] — the benchmark harness regenerating every paper table/figure
+//!   (grid experiments drive `run_sweep`; `sweep` records the shared-work
+//!   speedup into BENCH_sweep.json and runs without artifacts).
+//!
+//! Testing: `cargo build --release && cargo test -q` from a fresh clone —
+//! PJRT-bound integration tests skip with a stderr note until
+//! `make artifacts` + `--features pjrt`. Property tests (`util::prop`)
+//! print a per-case replay seed on failure; re-run one case with
+//! `util::prop::replay(seed, |g| ...)` in a scratch test.
 
 pub mod util;
 pub mod tensor;

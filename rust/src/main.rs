@@ -201,15 +201,16 @@ fn cmd_qpeft(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     if args.has_flag("list") {
-        for (id, desc, _) in registry() {
-            println!("{id:10} {desc}");
+        for e in registry() {
+            let tag = if e.offline_ok { " [offline-ok]" } else { "" };
+            println!("{:10} {}{tag}", e.id, e.paper);
         }
         return Ok(());
     }
     let mut ctx = ExpCtx::new(args.has_flag("quick"))?;
     ctx.seed = args.get_u64("seed", 0);
     let ids: Vec<String> = if args.positional.is_empty() {
-        registry().iter().map(|(id, _, _)| id.to_string()).collect()
+        registry().iter().map(|e| e.id.to_string()).collect()
     } else {
         args.positional.clone()
     };

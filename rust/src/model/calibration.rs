@@ -49,6 +49,13 @@ impl CalibrationSet {
         s
     }
 
+    /// A view over the same activations with an empty scaling memo — a
+    /// fresh `run_ptq` invocation's cache state (benchmarks use this to
+    /// measure the cold per-config path the sweep engine amortizes).
+    pub fn cold_copy(&self) -> CalibrationSet {
+        CalibrationSet::new(self.activations.clone())
+    }
+
     /// GPTQ's Hessian H = XᵀX/n for one linear.
     pub fn quant_ctx(&self, name: &str, with_hessian: bool, seed: u64) -> QuantCtx {
         let hessian = if with_hessian {
@@ -133,6 +140,24 @@ mod tests {
             for j in 0..16 {
                 assert!((h.at(i, j) - h.at(j, i)).abs() < 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn cold_copy_rebuilds_identical_scalings() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 1, c.vocab);
+        let mut rng = Rng::new(3);
+        let batches: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..2 * c.seq_len).map(|_| rng.below(c.vocab) as i32).collect())
+            .collect();
+        let cal = collect_calibration(&p, &c, &batches, 2, c.seq_len, 24);
+        let warm = cal.scaling_for("l0.wq", ScalingKind::Exact);
+        let cold = cal.cold_copy();
+        // deterministic rebuild from the same activations
+        match (warm, cold.scaling_for("l0.wq", ScalingKind::Exact)) {
+            (Scaling::Full { s: a, .. }, Scaling::Full { s: b, .. }) => assert_eq!(a, b),
+            other => panic!("expected full scalings, got {other:?}"),
         }
     }
 

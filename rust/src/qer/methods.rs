@@ -1,15 +1,29 @@
 //! The unified QER method dispatcher: every baseline + SRR behind one
 //! call, so the coordinator and the experiment benches treat methods
 //! uniformly (paper Tables 1, 5, 16; Figure 7).
+//!
+//! Two entry points:
+//!
+//! * [`reconstruct`] — self-contained: derives the spectra it needs from
+//!   `cfg.seed` and runs one config. What `run_ptq` calls per layer.
+//! * [`reconstruct_prepared`] — shared-work: takes the (scaling, spectra)
+//!   a [`PreparedSpectra`] cache computed once per layer and only runs
+//!   the config-specific stages (quantize + residual SVD). What the
+//!   sweep engine calls for every config of a grid.
+//!
+//! Both paths are bit-identical for the same `(cfg.seed, prep_rank)`:
+//! the spectra RNG stream is salted and separate from the residual
+//! stream, and every truncation is a prefix of the same prep-rank
+//! factorization (see `QerConfig::prep_rank`).
 
-use crate::linalg::{randomized_svd, truncated_from};
+use crate::linalg::{randomized_svd, truncated_from, Svd};
 use crate::quant::{QuantCtx, Quantizer};
 use crate::scaling::{Scaling, ScalingKind};
 use crate::tensor::{matmul, Mat};
 use crate::util::Rng;
 
-use super::rank_select::RankSelection;
-use super::srr::{srr_decompose, srr_with_k, SrrOutput};
+use super::rank_select::{PreparedSpectra, RankSelection};
+use super::srr::{srr_single_svd_prepared, srr_with_k_prepared, SrrOutput};
 
 /// Which reconstruction pipeline to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -45,6 +59,15 @@ impl Method {
             Method::SrrSingleSvd => "SRR(eq6)".into(),
         }
     }
+
+    /// Whether this method consumes the prepared (SW, SE) spectra — the
+    /// SRR family does; plain residual QER and w-only do not.
+    pub fn needs_spectra(&self) -> bool {
+        matches!(
+            self,
+            Method::QerSrr | Method::SrrSingleSvd | Method::PreserveOnly | Method::FixedSplitHalf
+        )
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -55,13 +78,28 @@ pub struct QerConfig {
     /// randomized-SVD power iterations (paper §A.4: 4)
     pub n_iter: usize,
     pub seed: u64,
+    /// Rank all shared factorizations (spectra, residual SVDs) are
+    /// computed at before prefix-truncating to `rank`. `None` means
+    /// `rank` (the self-contained default). A sweep sets this to the
+    /// grid's maximum rank on every config so its cached factorizations
+    /// serve all budgets bit-identically.
+    pub prep_rank: Option<usize>,
 }
 
 impl QerConfig {
     pub fn new(method: Method, rank: usize, scaling_kind: ScalingKind) -> Self {
-        QerConfig { method, rank, scaling_kind, n_iter: 4, seed: 0 }
+        QerConfig { method, rank, scaling_kind, n_iter: 4, seed: 0, prep_rank: None }
+    }
+
+    /// Effective preparation rank (≥ `rank`).
+    pub fn prep_rank(&self) -> usize {
+        self.prep_rank.unwrap_or(self.rank).max(self.rank)
     }
 }
+
+/// Salt for the residual-stage RNG stream (kept distinct from the
+/// spectra stream so prepared handoffs don't shift the draws).
+pub(crate) const RESID_SALT: u64 = 0xD1CE_BA5E;
 
 /// Result of reconstructing one weight matrix.
 #[derive(Clone, Debug)]
@@ -101,22 +139,31 @@ impl QerResult {
     }
 }
 
-/// Residual-only correction: LR = S⁻¹ SVD_r(S(W − Q)).
+/// Rank-`rank` correction factors from an (over-)computed residual SVD:
+/// prefix-truncate, then pull the left factor back through S⁻¹. Exposed
+/// so the sweep engine can serve several ranks from one factorization.
+pub fn correction_from_svd(svd: &Svd, scaling: &Scaling, rank: usize) -> (Mat, Mat) {
+    let (lu, rv) = truncated_from(svd, rank);
+    (scaling.unapply(&lu), rv)
+}
+
+/// Residual-only correction: LR = S⁻¹ SVD_r(S(W − Q)), with the SVD
+/// computed at `prep_rank` and truncated to `rank`.
 fn residual_correction(
     w: &Mat,
     qdeq: &Mat,
     scaling: &Scaling,
     rank: usize,
+    prep_rank: usize,
     n_iter: usize,
     rng: &mut Rng,
 ) -> (Mat, Mat) {
     let resid = scaling.apply(&w.sub(qdeq));
-    let svd = randomized_svd(&resid, rank, n_iter, rng);
-    let (lu, rv) = truncated_from(&svd, rank);
-    (scaling.unapply(&lu), rv)
+    let svd = randomized_svd(&resid, prep_rank, n_iter, rng);
+    correction_from_svd(&svd, scaling, rank)
 }
 
-/// Run `cfg.method` on one weight matrix.
+/// Run `cfg.method` on one weight matrix, deriving spectra on the fly.
 ///
 /// `scaling` must already be built for this layer's calibration
 /// activations (the coordinator owns that); `ctx` carries the Hessian /
@@ -128,8 +175,49 @@ pub fn reconstruct(
     ctx: &QuantCtx,
     cfg: &QerConfig,
 ) -> QerResult {
-    let mut rng = Rng::new(cfg.seed ^ 0xD1CE_BA5E);
+    let spectra = if cfg.method.needs_spectra() {
+        Some(PreparedSpectra::compute(w, scaling, cfg.prep_rank(), cfg.n_iter, cfg.seed))
+    } else {
+        None
+    };
+    reconstruct_prepared(w, quantizer, scaling, spectra.as_ref(), ctx, cfg)
+}
+
+/// Run `cfg.method` against precomputed spectra.
+///
+/// `spectra` is consumed only by the SRR family; it must be prepared at
+/// exactly `cfg.prep_rank()` and carry `cfg.seed`'s probe — a stale or
+/// missing handoff falls back to recomputing locally (identical output,
+/// no sharing).
+pub fn reconstruct_prepared(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    spectra: Option<&PreparedSpectra>,
+    ctx: &QuantCtx,
+    cfg: &QerConfig,
+) -> QerResult {
+    let mut rng = Rng::new(cfg.seed ^ RESID_SALT);
     let (m, n) = (w.rows, w.cols);
+
+    // resolve the spectra handoff for methods that need it; the rank
+    // must match cfg.prep_rank() exactly — a randomized SVD sketched at
+    // a different rank is a different factorization, and prefix
+    // truncation only preserves bit-identity within one factorization
+    let owned;
+    let sp: Option<&PreparedSpectra> = if cfg.method.needs_spectra() {
+        match spectra {
+            Some(s) if s.rank == cfg.prep_rank() && s.seed == cfg.seed => Some(s),
+            _ => {
+                owned =
+                    PreparedSpectra::compute(w, scaling, cfg.prep_rank(), cfg.n_iter, cfg.seed);
+                Some(&owned)
+            }
+        }
+    } else {
+        None
+    };
+
     match cfg.method {
         Method::WOnly => QerResult {
             qdeq: quantizer.quantize(w, ctx),
@@ -140,41 +228,53 @@ pub fn reconstruct(
         },
         Method::Qer => {
             let qdeq = quantizer.quantize(w, ctx);
-            let (l, r) = residual_correction(w, &qdeq, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            let (l, r) = residual_correction(
+                w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
+            );
             QerResult { qdeq, l, r, k_star: 0, selection: None }
         }
-        Method::QerSrr => QerResult::from_srr(srr_decompose(
-            w, quantizer, scaling, ctx, cfg.rank, cfg.n_iter, &mut rng,
-        )),
-        Method::SrrSingleSvd => QerResult::from_srr(super::srr::srr_single_svd(
-            w, quantizer, scaling, ctx, cfg.rank, cfg.n_iter, &mut rng,
-        )),
+        Method::QerSrr => {
+            let sp = sp.expect("spectra resolved above");
+            let sel = sp.select(cfg.rank);
+            let k = sel.k_star;
+            QerResult::from_srr(srr_with_k_prepared(
+                w, quantizer, scaling, sp, ctx, cfg.rank, k, cfg.n_iter, &mut rng, sel,
+            ))
+        }
+        Method::SrrSingleSvd => {
+            let sp = sp.expect("spectra resolved above");
+            QerResult::from_srr(srr_single_svd_prepared(
+                w, quantizer, scaling, sp, ctx, cfg.rank, cfg.n_iter, &mut rng,
+            ))
+        }
         Method::IterativeLowRank { iters } => {
             // LoftQ/LQ-LoRA: Q0 = quant(W); then alternate.
             let mut qdeq = quantizer.quantize(w, ctx);
-            let mut lr_pair =
-                residual_correction(w, &qdeq, scaling, cfg.rank, cfg.n_iter, &mut rng);
+            let mut lr_pair = residual_correction(
+                w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
+            );
             for _ in 1..iters.max(1) {
                 let lr = matmul(&lr_pair.0, &lr_pair.1);
                 qdeq = quantizer.quantize(&w.sub(&lr), ctx);
-                lr_pair =
-                    residual_correction(w, &qdeq, scaling, cfg.rank, cfg.n_iter, &mut rng);
+                lr_pair = residual_correction(
+                    w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
+                );
             }
             QerResult { qdeq, l: lr_pair.0, r: lr_pair.1, k_star: cfg.rank, selection: None }
         }
         Method::PreserveOnly => {
-            let sel = super::rank_select::select_k(w, scaling, cfg.rank, cfg.n_iter, &mut rng);
-            let out = srr_with_k(
-                w, quantizer, scaling, ctx, cfg.rank, cfg.rank, cfg.n_iter, &mut rng, sel,
-            );
-            QerResult::from_srr(out)
+            let sp = sp.expect("spectra resolved above");
+            let sel = sp.select(cfg.rank);
+            QerResult::from_srr(srr_with_k_prepared(
+                w, quantizer, scaling, sp, ctx, cfg.rank, cfg.rank, cfg.n_iter, &mut rng, sel,
+            ))
         }
         Method::FixedSplitHalf => {
-            let sel = super::rank_select::select_k(w, scaling, cfg.rank, cfg.n_iter, &mut rng);
-            let out = srr_with_k(
-                w, quantizer, scaling, ctx, cfg.rank, cfg.rank / 2, cfg.n_iter, &mut rng, sel,
-            );
-            QerResult::from_srr(out)
+            let sp = sp.expect("spectra resolved above");
+            let sel = sp.select(cfg.rank);
+            QerResult::from_srr(srr_with_k_prepared(
+                w, quantizer, scaling, sp, ctx, cfg.rank, cfg.rank / 2, cfg.n_iter, &mut rng, sel,
+            ))
         }
     }
 }
@@ -202,19 +302,21 @@ mod tests {
         reconstruct(w, &q, &Scaling::Identity, &QuantCtx::default(), &cfg)
     }
 
+    const ALL_CORRECTING: [Method; 6] = [
+        Method::Qer,
+        Method::QerSrr,
+        Method::SrrSingleSvd,
+        Method::IterativeLowRank { iters: 5 },
+        Method::PreserveOnly,
+        Method::FixedSplitHalf,
+    ];
+
     #[test]
     fn every_method_beats_or_matches_wonly() {
         let mut rng = Rng::new(400);
         let w = aniso(64, 96, 1.0, &mut rng);
         let base = run(Method::WOnly, &w, 16).weight_error(&w);
-        for method in [
-            Method::Qer,
-            Method::QerSrr,
-            Method::SrrSingleSvd,
-            Method::IterativeLowRank { iters: 5 },
-            Method::PreserveOnly,
-            Method::FixedSplitHalf,
-        ] {
+        for method in ALL_CORRECTING {
             let err = run(method, &w, 16).weight_error(&w);
             assert!(err <= base * 1.001, "{}: {err} > w-only {base}", method.label());
         }
@@ -272,5 +374,67 @@ mod tests {
         let srr = run(Method::QerSrr, &w, 8);
         assert!(srr.selection.is_some());
         assert_eq!(srr.selection.as_ref().unwrap().k_star, srr.k_star);
+    }
+
+    #[test]
+    fn prepared_handoff_is_bit_identical_to_self_contained() {
+        // the sweep contract: precomputed spectra at prep rank + the same
+        // (seed, prep_rank) config must reproduce `reconstruct` exactly
+        let mut rng = Rng::new(405);
+        let w = aniso(64, 64, 1.1, &mut rng);
+        let q = MxintQuantizer::new(3, 32);
+        let ctx = QuantCtx::default();
+        for method in ALL_CORRECTING {
+            for rank in [4usize, 8] {
+                let mut cfg = QerConfig::new(method, rank, ScalingKind::Identity);
+                cfg.seed = 17;
+                cfg.prep_rank = Some(8);
+                let solo = reconstruct(&w, &q, &Scaling::Identity, &ctx, &cfg);
+                let spectra =
+                    PreparedSpectra::compute(&w, &Scaling::Identity, 8, cfg.n_iter, cfg.seed);
+                let shared = reconstruct_prepared(
+                    &w, &q, &Scaling::Identity, Some(&spectra), &ctx, &cfg,
+                );
+                assert_eq!(solo.qdeq, shared.qdeq, "{} r={rank} qdeq", method.label());
+                assert_eq!(solo.l, shared.l, "{} r={rank} L", method.label());
+                assert_eq!(solo.r, shared.r, "{} r={rank} R", method.label());
+                assert_eq!(solo.k_star, shared.k_star);
+            }
+        }
+    }
+
+    #[test]
+    fn stale_spectra_handoff_falls_back_to_local_compute() {
+        // wrong seed / insufficient rank must not be silently consumed
+        let mut rng = Rng::new(406);
+        let w = aniso(48, 64, 1.0, &mut rng);
+        let q = MxintQuantizer::new(3, 32);
+        let ctx = QuantCtx::default();
+        let mut cfg = QerConfig::new(Method::QerSrr, 8, ScalingKind::Identity);
+        cfg.seed = 5;
+        let want = reconstruct(&w, &q, &Scaling::Identity, &ctx, &cfg);
+        // stale seed
+        let stale = PreparedSpectra::compute(&w, &Scaling::Identity, 8, cfg.n_iter, 99);
+        let got = reconstruct_prepared(&w, &q, &Scaling::Identity, Some(&stale), &ctx, &cfg);
+        assert_eq!(want.qdeq, got.qdeq);
+        assert_eq!(want.l, got.l);
+        // insufficient rank
+        let small = PreparedSpectra::compute(&w, &Scaling::Identity, 4, cfg.n_iter, cfg.seed);
+        let got2 = reconstruct_prepared(&w, &q, &Scaling::Identity, Some(&small), &ctx, &cfg);
+        assert_eq!(want.qdeq, got2.qdeq);
+        assert_eq!(want.l, got2.l);
+    }
+
+    #[test]
+    fn prep_rank_defaults_to_rank() {
+        let cfg = QerConfig::new(Method::Qer, 8, ScalingKind::Identity);
+        assert_eq!(cfg.prep_rank(), 8);
+        let mut wide = cfg.clone();
+        wide.prep_rank = Some(16);
+        assert_eq!(wide.prep_rank(), 16);
+        // prep rank never shrinks below the budget
+        let mut bad = cfg.clone();
+        bad.prep_rank = Some(2);
+        assert_eq!(bad.prep_rank(), 8);
     }
 }

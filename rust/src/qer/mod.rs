@@ -24,9 +24,11 @@ pub mod srr;
 pub mod methods;
 pub mod assumptions;
 
-pub use methods::{reconstruct, Method, QerConfig, QerResult};
-pub use rank_select::{rho_profile, select_k, RankSelection};
-pub use srr::{srr_decompose, SrrOutput};
+pub use methods::{
+    correction_from_svd, reconstruct, reconstruct_prepared, Method, QerConfig, QerResult,
+};
+pub use rank_select::{rho_profile, select_k, PreparedSpectra, RankSelection};
+pub use srr::{srr_decompose, srr_single_svd_prepared, srr_with_k_prepared, SrrOutput};
 
 #[cfg(test)]
 mod tests {

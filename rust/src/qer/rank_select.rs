@@ -6,11 +6,21 @@
 //! normalized quantization-error spectrum (Assumption 4.2). Both ρ
 //! profiles come from randomized SVDs of the top-r spectra plus exact
 //! Frobenius norms — no enumeration of E_k, no extra quantizer calls.
+//!
+//! The expensive part — the two randomized SVDs — is factored into
+//! [`PreparedSpectra`] so a sweep over many `(method, quantizer, rank)`
+//! configs computes it once per (layer, scaling, seed) and selects any
+//! k ≤ prep rank from the cached spectra (`coordinator::sweep` owns that
+//! amortization; `select_k` below is the one-shot convenience wrapper).
 
-use crate::linalg::{randomized_svd, rho};
+use crate::linalg::{randomized_svd, rho, Svd};
 use crate::scaling::Scaling;
 use crate::tensor::Mat;
 use crate::util::Rng;
+
+/// Salt decoupling the spectra RNG stream from the reconstruction stream,
+/// so precomputing spectra does not shift the residual-stage draws.
+pub(crate) const PREP_SALT: u64 = 0x5EED_0F_5A17_A55A;
 
 /// Everything the selection computed, kept for the analysis benches
 /// (Fig. 2 surrogate curves, Fig. 5 k* distributions, Table 12 stability).
@@ -32,11 +42,96 @@ pub fn rho_profile(sv: &[f32], frob2: f64, r: usize) -> Vec<f64> {
     (0..=r).map(|p| rho(sv, frob2, p)).collect()
 }
 
+/// The per-layer spectra every SRR-family reconstruction consumes: the
+/// leading randomized SVDs of the scaled weight S·W (spectrum + preserve
+/// factors) and of the scaled probe S·E, with exact Frobenius energies.
+///
+/// Computed once at `rank` = the largest rank the caller will ever select
+/// or preserve at; any budget r ≤ `rank` is then served by prefix
+/// truncation, which keeps a shared-work sweep bit-identical to the
+/// per-config path (both truncate the same factorization).
+#[derive(Clone, Debug)]
+pub struct PreparedSpectra {
+    /// randomized SVD of S·W to `rank` (descending spectrum)
+    pub sw_svd: Svd,
+    pub sw_frob2: f64,
+    /// randomized SVD of the scaled probe S·E
+    pub se_svd: Svd,
+    pub se_frob2: f64,
+    /// the rank the SVDs were computed at (selection budget ceiling)
+    pub rank: usize,
+    /// seed this was derived from (probe realization identity)
+    pub seed: u64,
+}
+
+impl PreparedSpectra {
+    /// Deterministic preparation from a seed: the RNG stream is private
+    /// to the spectra (salted), so per-config and sweep paths that share
+    /// a (layer, scaling, seed, rank) key produce identical spectra.
+    pub fn compute(w: &Mat, scaling: &Scaling, rank: usize, n_iter: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ PREP_SALT);
+        let mut s = Self::compute_with_rng(w, scaling, rank, n_iter, &mut rng);
+        s.seed = seed;
+        s
+    }
+
+    /// Preparation drawing from a caller-owned RNG, in the exact draw
+    /// order the original `select_k` used (SW svd → probe → SE svd), so
+    /// the legacy wrapper below reproduces its historical output.
+    pub fn compute_with_rng(
+        w: &Mat,
+        scaling: &Scaling,
+        rank: usize,
+        n_iter: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let sw = scaling.apply(w);
+        let sw_frob2 = sw.frob2();
+        let sw_svd = randomized_svd(&sw, rank, n_iter, rng);
+
+        let probe = Mat::rand_uniform(w.rows, w.cols, -1.0, 1.0, rng);
+        let se = scaling.apply(&probe);
+        let se_frob2 = se.frob2();
+        let se_svd = randomized_svd(&se, rank, n_iter, rng);
+
+        PreparedSpectra { sw_svd, sw_frob2, se_svd, se_frob2, rank, seed: 0 }
+    }
+
+    /// Eq. (5) selection for any budget `r` ≤ `self.rank`.
+    pub fn select(&self, r: usize) -> RankSelection {
+        assert!(
+            r <= self.rank,
+            "select budget {r} exceeds prepared rank {}",
+            self.rank
+        );
+        let rho_sw = rho_profile(&self.sw_svd.s, self.sw_frob2, r);
+        let rho_se_by_p = rho_profile(&self.se_svd.s, self.se_frob2, r);
+
+        let mut objective = Vec::with_capacity(r + 1);
+        let mut best = (f64::INFINITY, 0usize);
+        for k in 0..=r {
+            let obj = rho_sw[k] * rho_se_by_p[r - k];
+            objective.push(obj);
+            if obj < best.0 {
+                best = (obj, k);
+            }
+        }
+        RankSelection {
+            k_star: best.1,
+            objective,
+            rho_sw,
+            rho_se: (0..=r).map(|k| rho_se_by_p[r - k]).collect(),
+            sw_spectrum: self.sw_svd.s.clone(),
+        }
+    }
+}
+
 /// Compute k* for a weight W under scaling S with rank budget r.
 ///
-/// `n_iter` is the randomized-SVD power-iteration count (paper: 4).
-/// The probe E is drawn from `rng` — callers seed it per (layer, seed) so
-/// Table 12's stability analysis can vary it.
+/// One-shot wrapper over [`PreparedSpectra`]: prepares at `r` and selects
+/// at `r`. `n_iter` is the randomized-SVD power-iteration count (paper:
+/// 4). The probe E is drawn from `rng` — callers seed it per (layer,
+/// seed) so Table 12's stability analysis can vary it.
 pub fn select_k(
     w: &Mat,
     scaling: &Scaling,
@@ -44,40 +139,14 @@ pub fn select_k(
     n_iter: usize,
     rng: &mut Rng,
 ) -> RankSelection {
-    let sw = scaling.apply(w);
-    let sw_frob2 = sw.frob2();
-    let sw_svd = randomized_svd(&sw, r, n_iter, rng);
-
-    let probe = Mat::rand_uniform(w.rows, w.cols, -1.0, 1.0, rng);
-    let se = scaling.apply(&probe);
-    let se_frob2 = se.frob2();
-    let se_svd = randomized_svd(&se, r, n_iter, rng);
-
-    let rho_sw = rho_profile(&sw_svd.s, sw_frob2, r);
-    let rho_se_by_p = rho_profile(&se_svd.s, se_frob2, r);
-
-    let mut objective = Vec::with_capacity(r + 1);
-    let mut best = (f64::INFINITY, 0usize);
-    for k in 0..=r {
-        let obj = rho_sw[k] * rho_se_by_p[r - k];
-        objective.push(obj);
-        if obj < best.0 {
-            best = (obj, k);
-        }
-    }
-    RankSelection {
-        k_star: best.1,
-        objective,
-        rho_sw,
-        rho_se: (0..=r).map(|k| rho_se_by_p[r - k]).collect(),
-        sw_spectrum: sw_svd.s,
-    }
+    PreparedSpectra::compute_with_rng(w, scaling, r, n_iter, rng).select(r)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tensor::matmul;
+    use crate::util::prop;
 
     fn power_law_weight(m: usize, n: usize, decay: f32, rng: &mut Rng) -> Mat {
         let (qu, _) = crate::linalg::qr_thin(&Mat::randn(m, m.min(n), 1.0, rng));
@@ -192,5 +261,63 @@ mod tests {
         let sel_plain = select_k(&w, &Scaling::Identity, 16, 4, &mut rng);
         // scaled version sees a much more concentrated spectrum
         assert!(sel_scaled.rho_sw[4] < sel_plain.rho_sw[4]);
+    }
+
+    #[test]
+    fn prepared_spectra_are_seed_deterministic_and_prefix_consistent() {
+        let mut rng = Rng::new(308);
+        let w = power_law_weight(64, 96, 1.1, &mut rng);
+        let a = PreparedSpectra::compute(&w, &Scaling::Identity, 12, 4, 42);
+        let b = PreparedSpectra::compute(&w, &Scaling::Identity, 12, 4, 42);
+        assert_eq!(a.sw_svd.s, b.sw_svd.s);
+        assert_eq!(a.se_svd.s, b.se_svd.s);
+        assert_eq!(a.seed, 42);
+        // selecting a smaller budget uses the spectrum prefix
+        let sel8 = a.select(8);
+        let sel12 = a.select(12);
+        assert_eq!(sel8.objective.len(), 9);
+        for k in 0..=8 {
+            assert!((sel8.rho_sw[k] - sel12.rho_sw[k]).abs() < 1e-15);
+        }
+        // a different seed draws a different probe
+        let c = PreparedSpectra::compute(&w, &Scaling::Identity, 12, 4, 43);
+        assert_ne!(a.se_svd.s, c.se_svd.s);
+    }
+
+    #[test]
+    fn prop_selection_invariants() {
+        // Satellite: k* ≤ r, ρ_SW non-increasing, ρ_SE (by k) non-
+        // decreasing, objective = elementwise product, ρ bounded in [0,1]
+        // — across random shapes, budgets and spectral decays.
+        prop::check(0xC5, 12, |g| {
+            let m = 24 + g.rng.below(48);
+            let n = 24 + g.rng.below(48);
+            let r = 2 + g.rng.below(m.min(n) / 2);
+            let decay = g.f32_in(0.2, 2.0);
+            let w = power_law_weight(m, n, decay, &mut g.rng);
+            let sel = select_k(&w, &Scaling::Identity, r, 2, &mut g.rng);
+            assert!(sel.k_star <= r, "k*={} > r={r}", sel.k_star);
+            assert_eq!(sel.objective.len(), r + 1);
+            assert_eq!(sel.rho_sw.len(), r + 1);
+            assert_eq!(sel.rho_se.len(), r + 1);
+            for win in sel.rho_sw.windows(2) {
+                assert!(win[1] <= win[0] + 1e-9, "rho_sw not non-increasing");
+            }
+            for win in sel.rho_se.windows(2) {
+                assert!(win[1] >= win[0] - 1e-9, "rho_se not non-decreasing");
+            }
+            for k in 0..=r {
+                assert!((0.0..=1.0 + 1e-9).contains(&sel.rho_sw[k]));
+                assert!((0.0..=1.0 + 1e-9).contains(&sel.rho_se[k]));
+                let want = sel.rho_sw[k] * sel.rho_se[k];
+                assert!(
+                    (sel.objective[k] - want).abs() < 1e-12,
+                    "objective[{k}] not the profile product"
+                );
+            }
+            // the selected k attains the minimum of the objective
+            let min = sel.objective.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!((sel.objective[sel.k_star] - min).abs() < 1e-15);
+        });
     }
 }

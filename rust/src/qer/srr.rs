@@ -8,6 +8,13 @@
 //!   5. L⁽²⁾R⁽²⁾ ← S⁻¹ SVD_{r−k*}(S·E_k)                (reconstruct)
 //!   6. L ← [L⁽¹⁾ L⁽²⁾],  R ← [R⁽¹⁾; R⁽²⁾]
 //!
+//! Steps 1–2 consume only the [`PreparedSpectra`] of (S·W, S·E): the
+//! `*_prepared` entry points take them precomputed (the sweep engine
+//! caches one per layer × scaling × seed and serves every config from
+//! it), while `srr_decompose` remains the self-contained wrapper. The
+//! preserve factors are prefix truncations of the prepared SVD, so any
+//! k ≤ prep rank is served without another factorization.
+//!
 //! The Eq. (6) variant replaces step 5 with a single rank-r SVD of the
 //! total residual W − Q (optimal for fixed Q by Eckart–Young); both are
 //! exposed and compared by the ablation bench.
@@ -18,7 +25,7 @@ use crate::scaling::Scaling;
 use crate::tensor::{matmul, Mat};
 use crate::util::Rng;
 
-use super::rank_select::{select_k, RankSelection};
+use super::rank_select::{PreparedSpectra, RankSelection};
 
 /// SRR decomposition output. `l`/`r` hold the concatenated factors;
 /// columns `0..k_star` of `l` (rows of `r`) are the preserved component.
@@ -52,6 +59,9 @@ impl SrrOutput {
 }
 
 /// Algorithm 1. `n_iter` = randomized-SVD power iterations (paper: 4).
+///
+/// Self-contained wrapper: prepares the spectra from `rng`, selects k*,
+/// then runs [`srr_with_k_prepared`].
 pub fn srr_decompose(
     w: &Mat,
     quantizer: &dyn Quantizer,
@@ -61,17 +71,23 @@ pub fn srr_decompose(
     n_iter: usize,
     rng: &mut Rng,
 ) -> SrrOutput {
-    let selection = select_k(w, scaling, rank, n_iter, rng);
-    srr_with_k(w, quantizer, scaling, ctx, rank, selection.k_star, n_iter, rng, selection)
+    let spectra = PreparedSpectra::compute_with_rng(w, scaling, rank, n_iter, rng);
+    let selection = spectra.select(rank);
+    let k = selection.k_star;
+    srr_with_k_prepared(w, quantizer, scaling, &spectra, ctx, rank, k, n_iter, rng, selection)
 }
 
-/// SRR with a fixed split k (used by the Fig. 2 sweep and the ODLRI-like
-/// fixed-split baseline). Rank-0 / rank-r extremes degrade gracefully.
+/// SRR with a fixed split k against precomputed spectra (used by the
+/// dispatcher, the Fig. 2 sweep and the ODLRI-like fixed-split baseline).
+/// Rank-0 / rank-r extremes degrade gracefully. The preserve factors are
+/// the rank-k prefix of `spectra.sw_svd` (k ≤ `spectra.rank` required);
+/// only the induced-error SVD of step 5 draws from `rng`.
 #[allow(clippy::too_many_arguments)]
-pub fn srr_with_k(
+pub fn srr_with_k_prepared(
     w: &Mat,
     quantizer: &dyn Quantizer,
     scaling: &Scaling,
+    spectra: &PreparedSpectra,
     ctx: &QuantCtx,
     rank: usize,
     k: usize,
@@ -80,13 +96,16 @@ pub fn srr_with_k(
     selection: RankSelection,
 ) -> SrrOutput {
     assert!(k <= rank);
+    assert!(
+        k <= spectra.rank,
+        "split k={k} exceeds prepared spectra rank {}",
+        spectra.rank
+    );
     let (m, n) = (w.rows, w.cols);
 
-    // (2) preserve: L1·R1 = S⁻¹ SVD_k(SW)
+    // (2) preserve: L1·R1 = S⁻¹ SVD_k(SW), truncated from the prepared SVD
     let (l1, r1) = if k > 0 {
-        let sw = scaling.apply(w);
-        let svd = randomized_svd(&sw, k, n_iter, rng);
-        let (lu, rv) = truncated_from(&svd, k);
+        let (lu, rv) = truncated_from(&spectra.sw_svd, k);
         (scaling.unapply(&lu), rv)
     } else {
         (Mat::zeros(m, 0), Mat::zeros(0, n))
@@ -114,25 +133,42 @@ pub fn srr_with_k(
     SrrOutput { qdeq, l, r, k_star: k, selection }
 }
 
-/// Eq. (6) variant: same preserve-then-quantize Q, but one rank-r SVD of
-/// the *total* residual W − Q replaces the two-part packing.
-pub fn srr_single_svd(
+/// Self-contained fixed-split variant: prepares spectra from `rng` first.
+#[allow(clippy::too_many_arguments)]
+pub fn srr_with_k(
     w: &Mat,
     quantizer: &dyn Quantizer,
     scaling: &Scaling,
     ctx: &QuantCtx,
     rank: usize,
+    k: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+    selection: RankSelection,
+) -> SrrOutput {
+    let spectra = PreparedSpectra::compute_with_rng(w, scaling, rank, n_iter, rng);
+    srr_with_k_prepared(w, quantizer, scaling, &spectra, ctx, rank, k, n_iter, rng, selection)
+}
+
+/// Eq. (6) variant against precomputed spectra: same preserve-then-
+/// quantize Q, but one rank-r SVD of the *total* residual W − Q replaces
+/// the two-part packing.
+pub fn srr_single_svd_prepared(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    spectra: &PreparedSpectra,
+    ctx: &QuantCtx,
+    rank: usize,
     n_iter: usize,
     rng: &mut Rng,
 ) -> SrrOutput {
-    let selection = select_k(w, scaling, rank, n_iter, rng);
+    let selection = spectra.select(rank);
     let k = selection.k_star;
     let (m, n) = (w.rows, w.cols);
 
     let preserved = if k > 0 {
-        let sw = scaling.apply(w);
-        let svd = randomized_svd(&sw, k, n_iter, rng);
-        scaling.unapply(&svd.reconstruct(k))
+        scaling.unapply(&spectra.sw_svd.reconstruct(k))
     } else {
         Mat::zeros(m, n)
     };
@@ -146,9 +182,24 @@ pub fn srr_single_svd(
     SrrOutput { qdeq, l, r: rv, k_star: k, selection }
 }
 
+/// Self-contained Eq. (6) variant: prepares spectra from `rng` first.
+pub fn srr_single_svd(
+    w: &Mat,
+    quantizer: &dyn Quantizer,
+    scaling: &Scaling,
+    ctx: &QuantCtx,
+    rank: usize,
+    n_iter: usize,
+    rng: &mut Rng,
+) -> SrrOutput {
+    let spectra = PreparedSpectra::compute_with_rng(w, scaling, rank, n_iter, rng);
+    srr_single_svd_prepared(w, quantizer, scaling, &spectra, ctx, rank, n_iter, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::qer::rank_select::select_k;
     use crate::quant::MxintQuantizer;
     use crate::util::prop;
 
@@ -249,6 +300,30 @@ mod tests {
             let e_one = w.sub(&one.reconstruct()).frob();
             assert!(e_one <= e_two * 1.05, "e1={e_one} e2={e_two}");
         }
+    }
+
+    #[test]
+    fn prepared_path_matches_self_contained_path() {
+        // srr_decompose is literally prepare + select + srr_with_k_prepared;
+        // running the pieces by hand with the same RNG must agree bitwise.
+        let mut rng_a = Rng::new(317);
+        let mut rng_b = Rng::new(317);
+        let mut wrng = Rng::new(318);
+        let w = structured(64, 96, 6, &mut wrng);
+        let q = MxintQuantizer::new(3, 32);
+        let ctx = QuantCtx::default();
+        let a = srr_decompose(&w, &q, &Scaling::Identity, &ctx, 12, 2, &mut rng_a);
+        let spectra =
+            PreparedSpectra::compute_with_rng(&w, &Scaling::Identity, 12, 2, &mut rng_b);
+        let sel = spectra.select(12);
+        let k = sel.k_star;
+        let b = srr_with_k_prepared(
+            &w, &q, &Scaling::Identity, &spectra, &ctx, 12, k, 2, &mut rng_b, sel,
+        );
+        assert_eq!(a.qdeq, b.qdeq);
+        assert_eq!(a.l, b.l);
+        assert_eq!(a.r, b.r);
+        assert_eq!(a.k_star, b.k_star);
     }
 
     #[test]

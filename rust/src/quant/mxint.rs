@@ -124,6 +124,41 @@ mod tests {
     }
 
     #[test]
+    fn prop_block_exponent_round_trip() {
+        // Satellite invariant: dequantized values re-encode to themselves
+        // — quantize∘quantize = quantize — and the shared block exponent
+        // never grows, across random dims, bit-widths and value scales.
+        prop::check(0xA2, 30, |g| {
+            let m = g.dim(10);
+            let nb = g.dim(4);
+            let bits = g.choice(&[2u32, 3, 4, 6, 8]);
+            let scale = g.choice(&[1e-4f32, 1e-1, 1.0, 1e3]);
+            let w = Mat::randn(m, nb * 32, scale, &mut g.rng);
+            let q = MxintQuantizer::new(bits, 32);
+            let ctx = QuantCtx::default();
+            let once = q.quantize(&w, &ctx);
+            let twice = q.quantize(&once, &ctx);
+            assert_eq!(once, twice, "MXINT{bits} qdq not idempotent");
+            for i in 0..m {
+                for b in 0..nb {
+                    let (a, z) = (b * 32, (b + 1) * 32);
+                    let max_in = w.row(i)[a..z].iter().fold(0.0f32, |mm, &x| mm.max(x.abs()));
+                    let max_out =
+                        once.row(i)[a..z].iter().fold(0.0f32, |mm, &x| mm.max(x.abs()));
+                    if max_in == 0.0 {
+                        assert_eq!(max_out, 0.0);
+                        continue;
+                    }
+                    assert!(
+                        max_out.log2().floor() <= max_in.log2().floor(),
+                        "block exponent grew: {max_in} -> {max_out}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
     fn prop_error_bounded_by_one_step() {
         prop::check(0xA1, 30, |g| {
             let m = g.dim(12);

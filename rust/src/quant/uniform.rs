@@ -114,6 +114,41 @@ mod tests {
     }
 
     #[test]
+    fn prop_symmetric_error_bounded_by_half_step() {
+        // Satellite invariant: for every element, the dequantized output
+        // is within step/2 of the input (step = maxabs/qmax per group),
+        // across random dims, bit-widths and group counts.
+        prop::check(0xB3, 30, |g| {
+            let m = g.dim(8);
+            let groups = g.dim(3);
+            let bits = g.choice(&[2u32, 3, 4, 6]);
+            let group = 32;
+            let scale = g.choice(&[1e-2f32, 1.0, 50.0]);
+            let w = Mat::randn(m, groups * group, scale, &mut g.rng);
+            let q = UniformQuantizer::new(bits, group, true).quantize(&w, &QuantCtx::default());
+            let qmax = (1i64 << (bits - 1)) as f32 - 1.0;
+            for i in 0..m {
+                for c in 0..groups {
+                    let s = &w.row(i)[c * group..(c + 1) * group];
+                    let maxabs = s.iter().fold(0.0f32, |mm, &x| mm.max(x.abs()));
+                    if maxabs == 0.0 {
+                        continue;
+                    }
+                    let step = maxabs / qmax;
+                    for j in 0..group {
+                        let err = (w.at(i, c * group + j) - q.at(i, c * group + j)).abs();
+                        assert!(
+                            err <= step / 2.0 + step * 1e-5,
+                            "err {err} > step/2 {} (bits={bits})",
+                            step / 2.0
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
     fn prop_error_bounded_by_half_step() {
         prop::check(0xB2, 30, |g| {
             let m = g.dim(8);

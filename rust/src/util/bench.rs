@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 #[derive(Debug, Clone)]
@@ -19,6 +20,25 @@ impl Timing {
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }
+
+    /// JSON record for BENCH_*.json result files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean_ms())),
+            ("p50_ms", Json::num(self.p50_ns / 1e6)),
+            ("p95_ms", Json::num(self.p95_ns / 1e6)),
+        ])
+    }
+}
+
+/// Persist a benchmark record (e.g. `BENCH_sweep.json`). Relative paths
+/// resolve against the bench binary's working directory — under
+/// `cargo bench` that is the *package* root (`rust/`), not the workspace
+/// root. Failures are surfaced, not swallowed.
+pub fn write_json(path: &str, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.to_string())
 }
 
 /// Time `f` with `warmup` throwaway runs and `iters` measured runs.
@@ -131,5 +151,18 @@ mod tests {
     fn formatting_helpers() {
         assert_eq!(f(3.14159, 2), "3.14");
         assert_eq!(pm(10.25, 0.05, 2), "10.25±0.05");
+    }
+
+    #[test]
+    fn timing_serializes_and_persists() {
+        let t = time_fn("noop", 0, 3, || 1 + 1);
+        let j = t.to_json();
+        assert_eq!(j.get("name").and_then(|x| x.as_str()), Some("noop"));
+        assert_eq!(j.get("iters").and_then(|x| x.as_usize()), Some(3));
+        let path = std::env::temp_dir().join("srr_bench_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &j).unwrap();
+        let back = crate::util::json::Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(back.get("name").and_then(|x| x.as_str()), Some("noop"));
     }
 }

@@ -1,0 +1,20 @@
+//! Shared helpers for the PJRT-bound integration test suites.
+
+use srr::runtime::Engine;
+
+/// `Some(engine)` when the PJRT artifacts are executable, `None` (after
+/// a stderr note naming `suite`) otherwise — `cargo test -q` must pass
+/// on a fresh clone with neither `artifacts/` nor the `pjrt` feature.
+pub fn engine(suite: &str) -> Option<Engine> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping PJRT {suite} test: built without the `pjrt` feature");
+        return None;
+    }
+    match Engine::discover() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping PJRT {suite} test: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
