@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use crate::linalg::Svd;
 use crate::qer::PreparedSpectra;
-use crate::quant::QuantCtx;
+use crate::quant::{PackedMat, QuantCtx};
 use crate::scaling::{Scaling, ScalingKind};
 use crate::tensor::Mat;
 
@@ -40,6 +40,9 @@ pub struct PreparedLayer {
     pub hessian: Option<Arc<Mat>>,
     /// k=0 dequantized weight per (quantizer label, sweep seed)
     pub qdeq0: HashMap<(String, u64), Arc<Mat>>,
+    /// bit-packed encoding of `qdeq0`, present when the quantizer packs
+    /// (the factored outcomes of w-only / plain-QER configs reuse it)
+    pub qdeq0_packed: HashMap<(String, u64), Arc<PackedMat>>,
     /// prepared (S·W, S·E) spectra per (scaling kind, sweep seed)
     pub spectra: HashMap<(ScalingKind, u64), Arc<PreparedSpectra>>,
     /// wall-clock spent preparing this layer (amortized into reports)
@@ -68,6 +71,10 @@ impl PreparedLayer {
 
     pub fn qdeq0(&self, quantizer_label: &str, seed: u64) -> Option<&Arc<Mat>> {
         self.qdeq0.get(&(quantizer_label.to_string(), seed))
+    }
+
+    pub fn qdeq0_packed(&self, quantizer_label: &str, seed: u64) -> Option<&Arc<PackedMat>> {
+        self.qdeq0_packed.get(&(quantizer_label.to_string(), seed))
     }
 
     pub fn spectra(&self, kind: ScalingKind, seed: u64) -> Option<&Arc<PreparedSpectra>> {
@@ -142,6 +149,7 @@ mod tests {
             scalings,
             hessian: Some(Arc::new(Mat::eye(8))),
             qdeq0: HashMap::new(),
+            qdeq0_packed: HashMap::new(),
             spectra: HashMap::new(),
             prep_secs: 0.0,
         }

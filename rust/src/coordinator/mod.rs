@@ -6,9 +6,13 @@
 //! calibration activations, schedules per-layer reconstruction jobs
 //! (scale → select-k → preserve → quantize → reconstruct → pack) across a
 //! worker pool, tracks per-stage timings (Table 11's overhead accounting)
-//! and materializes the reconstructed model for the PJRT eval engines.
+//! and emits the factored serving model (`serve::FactoredModel` — packed
+//! codes + adapters); densified copies for the PJRT eval engines are
+//! derived on demand via `FactoredOutcome::to_dense`.
 //!
-//! * [`pipeline`] — the single-config PTQ orchestrator (`run_ptq`).
+//! * [`pipeline`] — the single-config PTQ orchestrator
+//!   (`run_ptq_factored`, with `run_ptq` as the dense compatibility
+//!   wrapper).
 //! * [`sweep`] — the shared-work grid engine (`SweepRunner`): one pass
 //!   over the model executes a whole `(method, quantizer, rank, scaling,
 //!   seed)` grid, preparing scalings / Hessians / spectra once per layer
@@ -31,5 +35,8 @@ pub mod sweep;
 pub use cache::{LayerCache, PreparedLayer};
 pub use config::RunConfig;
 pub use metrics::Metrics;
-pub use pipeline::{run_ptq, LayerReport, PtqOutcome, QuantizerSpec};
-pub use sweep::{run_sweep, SweepConfig, SweepRunner};
+pub use pipeline::{
+    run_ptq, run_ptq_factored, FactoredOutcome, LayerMeta, LayerReport, PtqOutcome,
+    QuantizerSpec,
+};
+pub use sweep::{run_sweep, run_sweep_factored, SweepConfig, SweepRunner};

@@ -1,20 +1,24 @@
 //! The PTQ pipeline: per-layer reconstruction jobs over a worker pool.
 //!
 //! For every quantizable linear:  build S from calibration → (SRR only:
-//! select k*) → preserve → quantize → reconstruct → pack, then splice the
-//! reconstructed W_hat back into a model copy for the PJRT eval engines.
-//! Stage timings feed the Table 11 overhead accounting.
+//! select k*) → preserve → quantize → reconstruct → pack into the
+//! factored serving form (packed codes + L·R, see `serve`). The primary
+//! outcome is a [`FactoredOutcome`]; the legacy dense [`PtqOutcome`]
+//! (W_hat spliced into a model copy for the PJRT eval engines) stays
+//! available behind the [`FactoredOutcome::to_dense`] compatibility
+//! constructor. Stage timings feed the Table 11 overhead accounting.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::model::{CalibrationSet, Params};
-use crate::qer::{reconstruct, QerConfig, QerResult};
+use crate::qer::{reconstruct, QerConfig, QerResult, RankSelection};
 use crate::quant::{
     GptqQuantizer, MxintQuantizer, QuantCtx, Quantizer, QuipSharpQuantizer, UniformQuantizer,
 };
 use crate::runtime::manifest::ModelCfg;
 use crate::scaling::Scaling;
+use crate::serve::{FactoredModel, LinearOp, QuantBase};
 use crate::tensor::Mat;
 use crate::util::pool;
 
@@ -66,7 +70,9 @@ pub struct LayerReport {
     pub qer_secs: f64,
 }
 
-/// Whole-model PTQ outcome.
+/// Whole-model PTQ outcome, densified (the legacy shape the PJRT eval
+/// engines and the regression tests consume). Built from a
+/// [`FactoredOutcome`] via [`FactoredOutcome::to_dense`].
 pub struct PtqOutcome {
     /// model copy with every linear replaced by W_hat = Qdeq + L·R
     pub params: Params,
@@ -88,21 +94,84 @@ impl PtqOutcome {
     }
 }
 
-/// Run the PTQ pipeline over every linear of `params`.
+/// Per-layer metadata a [`QerResult`] carries beyond its factors,
+/// aligned with `FactoredModel::ops`.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub k_star: usize,
+    pub selection: Option<RankSelection>,
+}
+
+/// Whole-model PTQ outcome in the factored serving form: packed bases +
+/// adapter factors, no dense `W_hat` anywhere.
+pub struct FactoredOutcome {
+    pub model: FactoredModel,
+    /// aligned with `model.ops`
+    pub meta: Vec<LayerMeta>,
+    pub reports: Vec<LayerReport>,
+}
+
+impl FactoredOutcome {
+    /// Densify into the legacy [`PtqOutcome`] — the compatibility
+    /// constructor. Bit-identical to the historical dense pipeline:
+    /// packed bases dequantize to exactly the quantizer's output (each
+    /// base is decoded once; the spliced W_hat reuses the result's qdeq).
+    pub fn to_dense(&self) -> PtqOutcome {
+        let mut params = self.model.skeleton.clone();
+        let mut results = Vec::with_capacity(self.model.ops.len());
+        for ((name, op), meta) in self.model.ops.iter().zip(&self.meta) {
+            debug_assert_eq!(name, &meta.name, "ops/meta misaligned");
+            let res = qer_result_from_op(op, meta);
+            params.set_mat(name, &res.reconstruct());
+            results.push((name.clone(), res));
+        }
+        PtqOutcome { params, results, reports: self.reports.clone() }
+    }
+}
+
+fn qer_result_from_op(op: &LinearOp, meta: &LayerMeta) -> QerResult {
+    match op {
+        LinearOp::FactoredQlr { base, l, r } => QerResult {
+            qdeq: base.densify(),
+            packed: match base {
+                QuantBase::Packed(p) => Some(p.clone()),
+                QuantBase::Dense(_) => None,
+            },
+            l: l.clone(),
+            r: r.clone(),
+            k_star: meta.k_star,
+            selection: meta.selection.clone(),
+        },
+        LinearOp::Dense(w) => QerResult {
+            qdeq: w.clone(),
+            packed: None,
+            l: Mat::zeros(w.rows, 0),
+            r: Mat::zeros(0, w.cols),
+            k_star: meta.k_star,
+            selection: meta.selection.clone(),
+        },
+    }
+}
+
+/// Run the PTQ pipeline over every linear of `params`, producing the
+/// factored serving outcome: per layer a packed quantized base plus the
+/// (L, R) correction — `W_hat` is only formed transiently for the error
+/// reports, never stored.
 ///
 /// Jobs run on the shared worker pool (`SRR_THREADS` to override); the
 /// per-stage timings are accumulated into `metrics` under
 /// `ptq.scale_secs` / `ptq.qer_secs` (Table 11's stage split).
-pub fn run_ptq(
+pub fn run_ptq_factored(
     params: &Params,
     model_cfg: &ModelCfg,
     calib: &CalibrationSet,
     quantizer: QuantizerSpec,
     qer_cfg: &QerConfig,
     metrics: &Metrics,
-) -> PtqOutcome {
+) -> FactoredOutcome {
     let names = Params::linear_names(model_cfg);
-    let outputs: Mutex<Vec<Option<(String, QerResult, LayerReport, Mat)>>> =
+    let outputs: Mutex<Vec<Option<(QerResult, LayerReport)>>> =
         Mutex::new((0..names.len()).map(|_| None).collect());
 
     pool::par_for(names.len(), |i| {
@@ -131,23 +200,41 @@ pub fn run_ptq(
             scale_secs,
             qer_secs,
         };
-        outputs.lock().unwrap()[i] = Some((name.clone(), res, report, what));
+        outputs.lock().unwrap()[i] = Some((res, report));
     });
 
-    let mut new_params = params.clone();
-    let mut results = Vec::with_capacity(names.len());
+    let mut skeleton = params.clone();
+    let mut ops = Vec::with_capacity(names.len());
+    let mut meta = Vec::with_capacity(names.len());
     let mut reports = Vec::with_capacity(names.len());
-    for slot in outputs.into_inner().unwrap() {
-        let (name, res, report, what) = slot.expect("job completed");
+    for (i, slot) in outputs.into_inner().unwrap().into_iter().enumerate() {
+        let (res, report) = slot.expect("job completed");
         metrics.add("ptq.scale_secs", report.scale_secs);
         metrics.add("ptq.qer_secs", report.qer_secs);
         metrics.incr("ptq.layers");
-        new_params.set_mat(&name, &what);
-        results.push((name, res));
+        skeleton.unset(&names[i]);
+        meta.push(LayerMeta {
+            name: names[i].clone(),
+            k_star: res.k_star,
+            selection: res.selection.clone(),
+        });
+        ops.push((names[i].clone(), res.into_factored()));
         reports.push(report);
     }
 
-    PtqOutcome { params: new_params, results, reports }
+    FactoredOutcome { model: FactoredModel { skeleton, ops }, meta, reports }
+}
+
+/// Dense compatibility wrapper around [`run_ptq_factored`].
+pub fn run_ptq(
+    params: &Params,
+    model_cfg: &ModelCfg,
+    calib: &CalibrationSet,
+    quantizer: QuantizerSpec,
+    qer_cfg: &QerConfig,
+    metrics: &Metrics,
+) -> PtqOutcome {
+    run_ptq_factored(params, model_cfg, calib, quantizer, qer_cfg, metrics).to_dense()
 }
 
 /// FNV-1a mix of the layer name into the run seed, so each layer draws
@@ -213,6 +300,46 @@ mod tests {
             params.get_mat("embed").unwrap(),
             out.params.get_mat("embed").unwrap()
         );
+    }
+
+    #[test]
+    fn factored_outcome_matches_dense_and_is_smaller() {
+        let (params, cfg, calib) = setup();
+        let metrics = Metrics::new();
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let qcfg = QerConfig::new(Method::QerSrr, 8, ScalingKind::DiagRms);
+        let fo = run_ptq_factored(&params, &cfg, &calib, spec, &qcfg, &metrics);
+        assert_eq!(fo.model.ops.len(), 14);
+        assert_eq!(fo.meta.len(), 14);
+        // packed bases + adapters are a real memory win over dense W_hat
+        assert!(
+            fo.model.linear_bytes() * 2 < fo.model.dense_linear_bytes(),
+            "factored {} vs dense {}",
+            fo.model.linear_bytes(),
+            fo.model.dense_linear_bytes()
+        );
+        // the skeleton dropped the dense linears but kept everything else
+        assert!(fo.model.skeleton.get("l0.wq").is_err());
+        assert!(fo.model.skeleton.get("embed").is_ok());
+        // densify reproduces the dense compatibility path bit-for-bit
+        let dense = run_ptq(&params, &cfg, &calib, spec, &qcfg, &metrics);
+        let densified = fo.model.densified_params();
+        for name in Params::linear_names(&cfg) {
+            assert_eq!(
+                densified.get_mat(&name).unwrap(),
+                dense.params.get_mat(&name).unwrap(),
+                "{name} diverges"
+            );
+        }
+        // to_dense round-trips results with their packed bases attached
+        let via = fo.to_dense();
+        for ((n1, r1), (n2, r2)) in via.results.iter().zip(&dense.results) {
+            assert_eq!(n1, n2);
+            assert_eq!(r1.qdeq, r2.qdeq);
+            assert_eq!(r1.l, r2.l);
+            assert_eq!(r1.k_star, r2.k_star);
+            assert!(r1.packed.is_some(), "{n1}: mxint base should stay packed");
+        }
     }
 
     #[test]

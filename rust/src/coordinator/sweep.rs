@@ -25,11 +25,12 @@
 //! across worker threads (CPU time), `prep_secs` / `shared_resid_secs` /
 //! `reconstruct_secs` are wall-clock around each phase.
 //!
-//! Memory note: every config's [`PtqOutcome`] (spliced model + dense
-//! per-layer `qdeq`) is materialized at once — peak memory is
-//! ~grid-size × model-size. Fine at the paper's grid scales; a
-//! streaming outcome interface is the next step before multi-model
-//! serving (see ROADMAP).
+//! Memory note: phase B2 emits [`FactoredOutcome`]s — packed codes +
+//! adapter factors, roughly `effective_bits/32` of a dense model each —
+//! so a whole grid's outcomes now fit where a handful of densified
+//! copies used to. The dense [`PtqOutcome`]s (grid-size × model-size)
+//! only materialize when a caller asks via [`SweepRunner::run`] /
+//! `to_dense` (the PJRT eval engines still need them).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -44,12 +45,15 @@ use crate::qer::{
 use crate::quant::QuantCtx;
 use crate::runtime::manifest::ModelCfg;
 use crate::scaling::ScalingKind;
+use crate::serve::FactoredModel;
 use crate::tensor::Mat;
 use crate::util::{pool, Rng};
 
 use super::cache::{LayerCache, PreparedLayer};
 use super::metrics::Metrics;
-use super::pipeline::{layer_salt, LayerReport, PtqOutcome, QuantizerSpec};
+use super::pipeline::{
+    layer_salt, FactoredOutcome, LayerMeta, LayerReport, PtqOutcome, QuantizerSpec,
+};
 
 /// Randomized-SVD power iterations, matching `QerConfig::new` (§A.4: 4).
 const N_ITER: usize = 4;
@@ -129,16 +133,23 @@ impl<'a> SweepRunner<'a> {
         configs.iter().map(|c| c.rank).max().unwrap_or(0)
     }
 
-    /// Run the grid; returns one [`PtqOutcome`] per config, aligned.
+    /// Run the grid densified; one [`PtqOutcome`] per config, aligned.
+    /// Compatibility wrapper over [`SweepRunner::run_factored`].
     pub fn run(&self, configs: &[SweepConfig]) -> Vec<PtqOutcome> {
+        self.run_factored(configs).iter().map(FactoredOutcome::to_dense).collect()
+    }
+
+    /// Run the grid; returns one [`FactoredOutcome`] per config, aligned
+    /// — packed bases + adapters, no dense `W_hat` materialized.
+    pub fn run_factored(&self, configs: &[SweepConfig]) -> Vec<FactoredOutcome> {
         let names = Params::linear_names(self.model_cfg);
         let n_layers = names.len();
         if configs.is_empty() || n_layers == 0 {
             return configs
                 .iter()
-                .map(|_| PtqOutcome {
-                    params: self.params.clone(),
-                    results: vec![],
+                .map(|_| FactoredOutcome {
+                    model: FactoredModel { skeleton: self.params.clone(), ops: vec![] },
+                    meta: vec![],
                     reports: vec![],
                 })
                 .collect();
@@ -199,6 +210,7 @@ impl<'a> SweepRunner<'a> {
 
             let tq = Instant::now();
             let mut qdeq0 = HashMap::new();
+            let mut qdeq0_packed = HashMap::new();
             for (label, seed, spec) in &qdeq0_keys {
                 let hess = if spec.needs_hessian() {
                     hessian.as_ref().map(|h| (**h).clone())
@@ -207,7 +219,11 @@ impl<'a> SweepRunner<'a> {
                 };
                 let ctx = QuantCtx { hessian: hess, seed: seed ^ salt };
                 let q = spec.build();
-                qdeq0.insert((label.clone(), *seed), Arc::new(q.quantize(&w, &ctx)));
+                let (qdeq, packed) = q.quantize_coded(&w, &ctx);
+                qdeq0.insert((label.clone(), *seed), Arc::new(qdeq));
+                if let Some(p) = packed {
+                    qdeq0_packed.insert((label.clone(), *seed), Arc::new(p));
+                }
             }
             self.metrics.add("sweep.qdeq_cpu_secs", tq.elapsed().as_secs_f64());
 
@@ -226,6 +242,7 @@ impl<'a> SweepRunner<'a> {
                 scalings,
                 hessian,
                 qdeq0,
+                qdeq0_packed,
                 spectra,
                 prep_secs: t0.elapsed().as_secs_f64(),
             }
@@ -261,7 +278,7 @@ impl<'a> SweepRunner<'a> {
         // ---- phase B2: per-(layer, config) fan-out ----------------------
         let t_rec = Instant::now();
         let n_jobs = n_layers * configs.len();
-        let jobs: Vec<(QerResult, LayerReport, Mat)> = pool::par_map(n_jobs, |idx| {
+        let jobs: Vec<(QerResult, LayerReport)> = pool::par_map(n_jobs, |idx| {
             let li = idx % n_layers;
             let cj = idx / n_layers;
             let c = &configs[cj];
@@ -271,11 +288,12 @@ impl<'a> SweepRunner<'a> {
 
             let res: QerResult = match c.method {
                 Method::WOnly => {
-                    let qdeq =
-                        (**layer.qdeq0(&c.quantizer.label(), c.seed).expect("qdeq prepared"))
-                            .clone();
+                    let label = c.quantizer.label();
+                    let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
+                    let packed = layer.qdeq0_packed(&label, c.seed).map(|p| (**p).clone());
                     QerResult {
                         qdeq,
+                        packed,
                         l: Mat::zeros(layer.w.rows, 0),
                         r: Mat::zeros(0, layer.w.cols),
                         k_star: 0,
@@ -285,12 +303,13 @@ impl<'a> SweepRunner<'a> {
                 Method::Qer => {
                     let label = c.quantizer.label();
                     let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
+                    let packed = layer.qdeq0_packed(&label, c.seed).map(|p| (**p).clone());
                     let svd = cache
                         .resid(li, &label, c.scaling, c.seed)
                         .expect("residual SVD prepared");
                     let scaling = layer.scaling(c.scaling);
                     let (l, r) = correction_from_svd(svd, scaling, c.rank);
-                    QerResult { qdeq, l, r, k_star: 0, selection: None }
+                    QerResult { qdeq, packed, l, r, k_star: 0, selection: None }
                 }
                 _ => {
                     let scaling = layer.scaling(c.scaling);
@@ -307,6 +326,8 @@ impl<'a> SweepRunner<'a> {
             };
 
             let scaling = layer.scaling(c.scaling);
+            // W_hat is formed transiently for the error report only; the
+            // outcome keeps the factored representation
             let what = res.reconstruct();
             self.metrics.add("sweep.reconstruct_cpu_secs", t0.elapsed().as_secs_f64());
             let report = LayerReport {
@@ -318,31 +339,41 @@ impl<'a> SweepRunner<'a> {
                 scale_secs: layer.prep_secs / configs.len() as f64,
                 qer_secs: t0.elapsed().as_secs_f64(),
             };
-            (res, report, what)
+            (res, report)
         });
         self.metrics.add("sweep.reconstruct_secs", t_rec.elapsed().as_secs_f64());
 
-        // ---- assemble one PtqOutcome per config -------------------------
-        let mut per_cfg: Vec<Vec<Option<(QerResult, LayerReport, Mat)>>> =
+        // ---- assemble one FactoredOutcome per config --------------------
+        let mut per_cfg: Vec<Vec<Option<(QerResult, LayerReport)>>> =
             configs.iter().map(|_| (0..n_layers).map(|_| None).collect()).collect();
         for (idx, job) in jobs.into_iter().enumerate() {
             per_cfg[idx / n_layers][idx % n_layers] = Some(job);
         }
         let mut outcomes = Vec::with_capacity(configs.len());
         for slots in per_cfg {
-            let mut new_params = self.params.clone();
-            let mut results = Vec::with_capacity(n_layers);
+            let mut skeleton = self.params.clone();
+            let mut ops = Vec::with_capacity(n_layers);
+            let mut meta = Vec::with_capacity(n_layers);
             let mut reports = Vec::with_capacity(n_layers);
             for (li, slot) in slots.into_iter().enumerate() {
-                let (res, report, what) = slot.expect("job completed");
+                let (res, report) = slot.expect("job completed");
                 self.metrics.add("ptq.scale_secs", report.scale_secs);
                 self.metrics.add("ptq.qer_secs", report.qer_secs);
                 self.metrics.incr("ptq.layers");
-                new_params.set_mat(&names[li], &what);
-                results.push((names[li].clone(), res));
+                skeleton.unset(&names[li]);
+                meta.push(LayerMeta {
+                    name: names[li].clone(),
+                    k_star: res.k_star,
+                    selection: res.selection.clone(),
+                });
+                ops.push((names[li].clone(), res.into_factored()));
                 reports.push(report);
             }
-            outcomes.push(PtqOutcome { params: new_params, results, reports });
+            outcomes.push(FactoredOutcome {
+                model: FactoredModel { skeleton, ops },
+                meta,
+                reports,
+            });
         }
 
         self.metrics.add("sweep.configs", configs.len() as f64);
@@ -361,6 +392,18 @@ pub fn run_sweep(
     metrics: &Metrics,
 ) -> Vec<PtqOutcome> {
     SweepRunner::new(params, model_cfg, calib, metrics).run(configs)
+}
+
+/// Factored counterpart of [`run_sweep`]: packed serving outcomes, no
+/// densified models.
+pub fn run_sweep_factored(
+    params: &Params,
+    model_cfg: &ModelCfg,
+    calib: &CalibrationSet,
+    configs: &[SweepConfig],
+    metrics: &Metrics,
+) -> Vec<FactoredOutcome> {
+    SweepRunner::new(params, model_cfg, calib, metrics).run_factored(configs)
 }
 
 #[cfg(test)]
@@ -492,8 +535,12 @@ mod tests {
     #[test]
     fn reports_and_outcome_shape_match_run_ptq_contract() {
         let (params, cfg, calib) = setup();
-        let configs =
-            vec![SweepConfig::new(QuantizerSpec::Mxint { bits: 3, block: 32 }, Method::QerSrr, 8, ScalingKind::DiagRms)];
+        let configs = vec![SweepConfig::new(
+            QuantizerSpec::Mxint { bits: 3, block: 32 },
+            Method::QerSrr,
+            8,
+            ScalingKind::DiagRms,
+        )];
         let metrics = Metrics::new();
         let outs = run_sweep(&params, &cfg, &calib, &configs, &metrics);
         let out = &outs[0];
@@ -516,5 +563,46 @@ mod tests {
         let metrics = Metrics::new();
         let outs = run_sweep(&params, &cfg, &calib, &[], &metrics);
         assert!(outs.is_empty());
+    }
+
+    /// Phase B2's primary output is factored: packed bases + adapters,
+    /// much smaller than the densified models, and densifying reproduces
+    /// the dense path exactly (including the w-only / plain-QER configs
+    /// that reuse the cached k=0 quantization and its packed codes).
+    #[test]
+    fn factored_outcomes_densify_to_run_output_and_stay_small() {
+        let (params, cfg, calib) = setup();
+        let mx = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let configs = vec![
+            SweepConfig::new(mx, Method::WOnly, 0, ScalingKind::Identity),
+            SweepConfig::new(mx, Method::Qer, 4, ScalingKind::DiagRms),
+            SweepConfig::new(mx, Method::QerSrr, 8, ScalingKind::Exact),
+        ];
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let factored = runner.run_factored(&configs);
+        let dense = runner.run(&configs);
+        for (c, (fo, po)) in configs.iter().zip(factored.iter().zip(&dense)) {
+            assert!(
+                fo.model.linear_bytes() * 2 < fo.model.dense_linear_bytes(),
+                "{}: factored {} vs dense {}",
+                c.label,
+                fo.model.linear_bytes(),
+                fo.model.dense_linear_bytes()
+            );
+            let densified = fo.model.densified_params();
+            for name in Params::linear_names(&cfg) {
+                assert_eq!(
+                    densified.get_mat(&name).unwrap(),
+                    po.params.get_mat(&name).unwrap(),
+                    "{}: {name} diverges",
+                    c.label
+                );
+            }
+            // mxint packs, so every base rides as codes, never dense f32
+            for (_, r) in &po.results {
+                assert!(r.packed.is_some(), "{}: base not packed", c.label);
+            }
+        }
     }
 }

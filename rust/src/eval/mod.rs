@@ -1,7 +1,9 @@
 //! Evaluation engines over the PJRT artifacts.
 //!
 //! * [`ppl`] — perplexity on a held-out corpus via the `lm_nll_*`
-//!   artifact (WikiText2 / SlimPajama analog).
+//!   artifact (WikiText2 / SlimPajama analog), plus the rust-native
+//!   [`ppl::perplexity_native`] that evaluates any `ModelWeights` —
+//!   including the factored QLR serving model — without PJRT.
 //! * [`zeroshot`] — option-ranking accuracy over the five probe tasks
 //!   (lm-eval protocol: argmin per-option NLL).
 //! * [`glue`] — GLUE-sim metric computation from classifier logits
@@ -15,5 +17,5 @@ pub mod gsm;
 
 pub use glue::glue_score;
 pub use gsm::gsm_exact_match;
-pub use ppl::perplexity;
+pub use ppl::{perplexity, perplexity_native};
 pub use zeroshot::zero_shot_accuracy;

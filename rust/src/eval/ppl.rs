@@ -1,9 +1,19 @@
-//! Perplexity engine: exp(Σ nll / Σ tokens) over eval batches, computed
-//! through the `lm_nll_<model>` artifact (all masking on-device).
+//! Perplexity engines: exp(Σ nll / Σ tokens) over eval batches.
+//!
+//! * [`perplexity`] — through the `lm_nll_<model>` PJRT artifact (all
+//!   masking on-device). The weight tensors are marshalled once; each
+//!   batch only appends its token/mask tensors (no per-batch re-clone of
+//!   the full flattened params).
+//! * [`perplexity_native`] — pure rust over any
+//!   [`ModelWeights`](crate::model::ModelWeights): dense params or the
+//!   factored QLR serving model (`serve::FactoredModel`), which streams
+//!   its packed bases — PPL without PJRT and without densifying `W_hat`.
 
 use anyhow::Result;
 
-use crate::model::Params;
+use crate::model::forward::lm_nll_with;
+use crate::model::{ModelWeights, Params};
+use crate::runtime::manifest::ModelCfg;
 use crate::runtime::{Executor, TensorValue};
 
 /// Perplexity of `params` on `batches` (each row-major (b, t) tokens).
@@ -15,11 +25,13 @@ pub fn perplexity(
     b: usize,
     t: usize,
 ) -> Result<f64> {
-    let base_inputs = params.flat()?;
+    let mut inputs = params.flat()?;
+    let base_len = inputs.len();
     let mut total_nll = 0.0f64;
     let mut total_tok = 0.0f64;
     for batch in batches {
-        let mut inputs = base_inputs.clone();
+        // reuse the marshalled weights; swap only the per-batch tensors
+        inputs.truncate(base_len);
         inputs.push(TensorValue::i32(vec![b, t], batch.clone()));
         inputs.push(TensorValue::f32(vec![b, t], vec![1.0; b * t]));
         let outs = exec.run(artifact, &inputs)?;
@@ -29,10 +41,32 @@ pub fn perplexity(
     Ok((total_nll / total_tok.max(1.0)).exp())
 }
 
+/// Rust-native perplexity over any [`ModelWeights`] — the factored QLR
+/// serving path evaluates PPL here with no PJRT and no dense `W_hat`.
+pub fn perplexity_native(
+    weights: &dyn ModelWeights,
+    cfg: &ModelCfg,
+    batches: &[Vec<i32>],
+    b: usize,
+    t: usize,
+) -> f64 {
+    let mask = vec![1.0f32; b * t];
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0.0f64;
+    for batch in batches {
+        let (nll, cnt) = lm_nll_with(weights, cfg, batch, &mask, b, t);
+        total_nll += nll.iter().sum::<f64>();
+        total_tok += cnt.iter().sum::<f64>();
+    }
+    (total_nll / total_tok.max(1.0)).exp()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::synth::synth_lm_params;
     use crate::runtime::MockExecutor;
+    use crate::util::Rng;
 
     #[test]
     fn aggregates_across_batches() {
@@ -51,5 +85,53 @@ mod tests {
         let ppl = perplexity(&mock, "nll", &params, &batches, 2, 4).unwrap();
         assert!((ppl - (2.0f64).exp()).abs() < 1e-9);
         assert_eq!(mock.call_count("nll"), 3);
+    }
+
+    #[test]
+    fn batch_tensors_do_not_accumulate_across_iterations() {
+        // the no-re-clone refactor must still hand each call exactly
+        // base + 2 inputs (a bug here would grow the arg list per batch)
+        let mock = MockExecutor::empty().on("nll", |ins| {
+            assert_eq!(ins.len(), 2, "weights(0) + tokens + mask");
+            let b = ins[0].shape()[0];
+            vec![
+                TensorValue::f32(vec![b], vec![1.0; b]),
+                TensorValue::f32(vec![b], vec![1.0; b]),
+            ]
+        });
+        let params = Params::new(vec![]);
+        let batches = vec![vec![0i32; 6]; 4];
+        let ppl = perplexity(&mock, "nll", &params, &batches, 2, 3).unwrap();
+        assert!(ppl.is_finite());
+        assert_eq!(mock.call_count("nll"), 4);
+    }
+
+    #[test]
+    fn native_ppl_is_finite_and_matches_manual_nll() {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 24,
+            seq_len: 8,
+        };
+        let params = synth_lm_params(&cfg, 11, cfg.vocab);
+        let mut rng = Rng::new(12);
+        let batches: Vec<Vec<i32>> =
+            (0..2).map(|_| (0..2 * 8).map(|_| rng.below(32) as i32).collect()).collect();
+        let ppl = perplexity_native(&params, &cfg, &batches, 2, 8);
+        assert!(ppl.is_finite() && ppl > 1.0);
+
+        let mask = vec![1.0f32; 16];
+        let mut nll = 0.0;
+        let mut tok = 0.0;
+        for batch in &batches {
+            let (n, c) = crate::model::forward::lm_nll(&params, &cfg, batch, &mask, 2, 8);
+            nll += n.iter().sum::<f64>();
+            tok += c.iter().sum::<f64>();
+        }
+        assert!((ppl - (nll / tok).exp()).abs() < 1e-12);
     }
 }

@@ -67,6 +67,11 @@ pub fn registry() -> Vec<ExpEntry> {
             "§Perf sweep engine vs per-config run_ptq (writes BENCH_sweep.json)",
             perf::sweep_bench,
         ),
+        offline(
+            "serve",
+            "§Perf factored QLR serving vs densified dense path (writes BENCH_serve.json)",
+            perf::serve_bench,
+        ),
     ]
 }
 
@@ -100,7 +105,7 @@ mod tests {
         for required in [
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
-            "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep",
+            "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep", "serve",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
@@ -109,6 +114,7 @@ mod tests {
     #[test]
     fn sweep_is_offline_capable_and_ppl_experiments_are_not() {
         assert!(offline_ok("sweep"));
+        assert!(offline_ok("serve"));
         assert!(!offline_ok("table1"));
         assert!(!offline_ok("nonexistent"));
     }

@@ -1,21 +1,24 @@
 //! Performance experiments: Table 11 (coordinator overhead accounting),
 //! the §Perf hot-path benches (kernel parity timings, PJRT engine
-//! throughput, linalg primitives, fused-QLR serving path), and the sweep
-//! engine's shared-work speedup measurement (`BENCH_sweep.json`).
+//! throughput, linalg primitives, fused-QLR serving path), the sweep
+//! engine's shared-work speedup measurement (`BENCH_sweep.json`), and
+//! the factored-vs-dense serving comparison (`BENCH_serve.json`).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::{
-    run_ptq, run_sweep, Metrics, QuantizerSpec, SweepConfig, SweepRunner,
+    run_ptq, run_ptq_factored, run_sweep, Metrics, QuantizerSpec, SweepConfig, SweepRunner,
 };
+use crate::eval::perplexity_native;
 use crate::linalg::{eigh, jacobi_svd, randomized_svd};
-use crate::qer::{Method, QerConfig};
-use crate::quant::{MxintQuantizer, Quantizer};
+use crate::qer::{reconstruct, Method, QerConfig};
+use crate::quant::{MxintQuantizer, QuantCtx, Quantizer};
 use crate::runtime::{Executor, TensorValue};
-use crate::scaling::ScalingKind;
-use crate::tensor::{matmul, matmul_nt, Mat};
+use crate::scaling::{Scaling, ScalingKind};
+use crate::serve::{LinearOp, QuantBase};
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Mat};
 use crate::util::bench::{self, f, time_fn, Table};
 use crate::util::json::Json;
 use crate::util::Rng;
@@ -234,6 +237,197 @@ pub fn sweep_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         String::new(),
     ]);
     Ok(vec![t])
+}
+
+/// §Perf serve: the factored QLR serving path (`serve::LinearOp`)
+/// against the densified dense path, recorded into `BENCH_serve.json`.
+///
+/// Three sections:
+/// 1. **equivalence gate** — factored forward vs densified `W_hat`
+///    forward within 1e-5 relative error for the uniform, MXINT and
+///    GPTQ quantizer families at ranks {0, 16, 64} (hard failure);
+/// 2. **model footprint** — `run_ptq_factored` on the tiny model: bytes
+///    of the factored linears vs their dense form, plus rust-native PPL
+///    through the factored model (no PJRT, no densify) cross-checked
+///    against the densified params;
+/// 3. **throughput** — matvec and batch-8 matmul through a large layer,
+///    dense GEMM vs streamed packed decode.
+pub fn serve_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let mut tables = vec![];
+    let iters = if ctx.quick { 3 } else { 10 };
+    let mut rng = Rng::new(0x5EE5);
+
+    // --- 1. factored-vs-dense equivalence over the quantizer families ---
+    let (m, n) = (192usize, 256usize);
+    let w = Mat::randn(m, n, 1.0, &mut rng);
+    let xb = Mat::randn(8, m, 1.0, &mut rng);
+    let gram = {
+        let xcal = Mat::randn(2 * m, m, 1.0, &mut rng);
+        matmul_tn(&xcal, &xcal).scale(1.0 / (2 * m) as f32)
+    };
+    let quants = [
+        QuantizerSpec::Uniform { bits: 4, group: 64, symmetric: false },
+        QuantizerSpec::Mxint { bits: 3, block: 32 },
+        QuantizerSpec::Gptq { bits: 3, group: 64 },
+    ];
+    let mut equiv = Table::new(
+        "§Perf serve — factored QLR vs densified W_hat forward (rel err, 8x192 batch)",
+        &["quantizer", "rank", "rel err", "packed bits/weight"],
+    );
+    let mut equiv_max = 0.0f64;
+    let mut equiv_rows = vec![];
+    for spec in quants {
+        for rank in [0usize, 16, 64] {
+            let method = if rank == 0 { Method::WOnly } else { Method::Qer };
+            let ctxq = QuantCtx {
+                hessian: if spec.needs_hessian() { Some(gram.clone()) } else { None },
+                seed: 1,
+            };
+            let mut cfg = QerConfig::new(method, rank, ScalingKind::Identity);
+            cfg.seed = 1;
+            let res = reconstruct(&w, spec.build().as_ref(), &Scaling::Identity, &ctxq, &cfg);
+            let what = res.reconstruct();
+            let op = res.into_factored();
+            anyhow::ensure!(
+                matches!(&op, LinearOp::FactoredQlr { base: QuantBase::Packed(_), .. }),
+                "{}: expected a packed base",
+                spec.label()
+            );
+            let bits = match &op {
+                LinearOp::FactoredQlr { base: QuantBase::Packed(p), .. } => p.effective_bits(),
+                _ => unreachable!(),
+            };
+            let dense_y = matmul(&xb, &what);
+            let fact_y = op.matmul(&xb);
+            let rel = fact_y.sub(&dense_y).frob() / dense_y.frob().max(1e-12);
+            anyhow::ensure!(
+                rel < 1e-5,
+                "{} r={rank}: factored forward diverges (rel {rel})",
+                spec.label()
+            );
+            equiv_max = equiv_max.max(rel);
+            equiv.row(vec![spec.label(), rank.to_string(), format!("{rel:.2e}"), f(bits, 2)]);
+            equiv_rows.push(Json::obj(vec![
+                ("quantizer", Json::str(spec.label())),
+                ("rank", Json::num(rank as f64)),
+                ("rel_err", Json::num(rel)),
+            ]));
+        }
+    }
+    tables.push(equiv);
+
+    // --- 2. whole-model footprint + rust-native factored PPL ------------
+    let fx = ctx.lm("tiny")?;
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let metrics = Metrics::new();
+    let qcfg = QerConfig::new(Method::QerSrr, 16, ScalingKind::DiagRms);
+    let fo = run_ptq_factored(&fx.params, &fx.cfg, &fx.calib, quant, &qcfg, &metrics);
+    let model_fact = fo.model.linear_bytes();
+    let model_dense = fo.model.dense_linear_bytes();
+    let model_x = model_dense as f64 / model_fact.max(1) as f64;
+    anyhow::ensure!(
+        model_x > 2.0,
+        "factored model should be well under half the dense bytes, got x{model_x:.2}"
+    );
+    let b = ctx.engine.manifest().lm_batch;
+    let t_len = fx.cfg.seq_len;
+    let batches = ctx.ppl_batches("tiny")?;
+    let ppl_fact = perplexity_native(&fo.model, &fx.cfg, &batches, b, t_len);
+    let densified = fo.model.densified_params();
+    let ppl_dense = perplexity_native(&densified, &fx.cfg, &batches, b, t_len);
+    anyhow::ensure!(
+        (ppl_fact / ppl_dense - 1.0).abs() < 1e-3,
+        "factored PPL {ppl_fact} vs densified {ppl_dense}"
+    );
+
+    // --- 3. serving throughput: dense GEMM vs streamed packed decode ----
+    // full mode sizes the layer well past LLC so the dense path pays DRAM
+    // for 16x the bytes the packed codes occupy
+    let big = if ctx.quick { 1024 } else { 4096 };
+    let rank = 64usize;
+    let wbig = Mat::randn(big, big, 1.0, &mut rng);
+    let q2 = MxintQuantizer::new(2, 32);
+    let (qdeq, packed) = q2.quantize_coded(&wbig, &QuantCtx::default());
+    let packed = packed.expect("mxint packs");
+    let packed_bits = packed.effective_bits();
+    let l = Mat::randn(big, rank, 0.05, &mut rng);
+    let r = Mat::randn(rank, big, 0.05, &mut rng);
+    let dense_op = LinearOp::Dense(qdeq.add(&matmul(&l, &r)));
+    let fact_op = LinearOp::FactoredQlr { base: QuantBase::Packed(packed), l, r };
+    let bytes_dense = dense_op.bytes();
+    let bytes_fact = fact_op.bytes();
+    anyhow::ensure!(bytes_fact < bytes_dense, "packed layer must be smaller");
+
+    let x1: Vec<f32> = {
+        let mut v = vec![0.0f32; big];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    };
+    let x8 = Mat::randn(8, big, 1.0, &mut rng);
+    let t_d1 = time_fn("dense matvec", 1, iters, || dense_op.matvec(&x1));
+    let t_f1 = time_fn("factored matvec", 1, iters, || fact_op.matvec(&x1));
+    let t_d8 = time_fn("dense matmul b8", 1, iters, || dense_op.matmul(&x8));
+    let t_f8 = time_fn("factored matmul b8", 1, iters, || fact_op.matmul(&x8));
+    let tps = |t: &bench::Timing, toks: f64| toks / (t.mean_ns / 1e9);
+    let sp1 = t_d1.mean_ns / t_f1.mean_ns;
+    let sp8 = t_d8.mean_ns / t_f8.mean_ns;
+
+    let mut t = Table::new(
+        &format!(
+            "§Perf serve — {big}x{big} r{rank} layer, mxint2 ({packed_bits:.2} bits/w packed), \
+             recorded in BENCH_serve.json"
+        ),
+        &["path", "bytes", "matvec ms (tok/s)", "b8 ms (tok/s)", "speedup mv / b8"],
+    );
+    t.row(vec![
+        "dense W_hat".into(),
+        bytes_dense.to_string(),
+        format!("{} ({:.0})", f(t_d1.mean_ms(), 3), tps(&t_d1, 1.0)),
+        format!("{} ({:.0})", f(t_d8.mean_ms(), 3), tps(&t_d8, 8.0)),
+        "x1.00 (ref)".into(),
+    ]);
+    t.row(vec![
+        "factored Q + L·R (packed)".into(),
+        bytes_fact.to_string(),
+        format!("{} ({:.0})", f(t_f1.mean_ms(), 3), tps(&t_f1, 1.0)),
+        format!("{} ({:.0})", f(t_f8.mean_ms(), 3), tps(&t_f8, 8.0)),
+        format!("x{sp1:.2} / x{sp8:.2}"),
+    ]);
+    t.row(vec![
+        "model (tiny, mxint2 r16 SRR)".into(),
+        format!("{model_fact} vs {model_dense}"),
+        format!("x{model_x:.2} smaller"),
+        format!("ppl {ppl_fact:.2} vs {ppl_dense:.2}"),
+        String::new(),
+    ]);
+    tables.push(t);
+
+    let record = Json::obj(vec![
+        ("quick", Json::Bool(ctx.quick)),
+        ("equivalence_max_rel_err", Json::num(equiv_max)),
+        ("equivalence", Json::arr(equiv_rows)),
+        ("layer_dim", Json::num(big as f64)),
+        ("layer_rank", Json::num(rank as f64)),
+        ("layer_packed_bits_per_weight", Json::num(packed_bits)),
+        ("bytes_dense", Json::num(bytes_dense as f64)),
+        ("bytes_factored", Json::num(bytes_fact as f64)),
+        ("bytes_compression_x", Json::num(bytes_dense as f64 / bytes_fact.max(1) as f64)),
+        ("matvec_ms_dense", Json::num(t_d1.mean_ms())),
+        ("matvec_ms_factored", Json::num(t_f1.mean_ms())),
+        ("matvec_speedup_x", Json::num(sp1)),
+        ("matvec_tokens_per_sec_dense", Json::num(tps(&t_d1, 1.0))),
+        ("matvec_tokens_per_sec_factored", Json::num(tps(&t_f1, 1.0))),
+        ("matmul8_ms_dense", Json::num(t_d8.mean_ms())),
+        ("matmul8_ms_factored", Json::num(t_f8.mean_ms())),
+        ("matmul8_speedup_x", Json::num(sp8)),
+        ("model_bytes_dense", Json::num(model_dense as f64)),
+        ("model_bytes_factored", Json::num(model_fact as f64)),
+        ("model_compression_x", Json::num(model_x)),
+        ("model_ppl_factored", Json::num(ppl_fact)),
+        ("model_ppl_densified", Json::num(ppl_dense)),
+    ]);
+    bench::write_json("BENCH_serve.json", &record)?;
+    Ok(tables)
 }
 
 /// §Perf suite: the per-layer hot paths.

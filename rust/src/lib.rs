@@ -24,25 +24,52 @@
 //!   shared-work (`reconstruct_prepared` + `PreparedSpectra`) forms; the
 //!   two are bit-identical for the same seed and prep rank.
 //! * [`model`] / [`data`] — synthetic model zoo, calibration streams,
-//!   corpora and tasks standing in for the paper's gated assets.
+//!   corpora and tasks standing in for the paper's gated assets. The
+//!   forward dispatches every linear through `model::ModelWeights`, so
+//!   dense params and the factored serving model share one code path.
 //! * [`runtime`] — PJRT client + manifest-driven artifact executor
 //!   (manifest-only stub without the `pjrt` feature).
+//! * [`serve`] — the factored QLR serving layer: `LinearOp` evaluates
+//!   `Qdeq·x + L·(R·x)` by streaming dequant over bit-packed codes
+//!   (`quant::packed`), never materializing `W_hat`; `FactoredModel`
+//!   carries a whole model 4–8× smaller than dense f32 at 2–4 bits.
 //! * [`coordinator`] — the multi-threaded layer-pipeline orchestrator:
-//!   single-config `run_ptq`, plus the shared-work grid engine
+//!   single-config `run_ptq_factored` (dense `run_ptq` kept as the
+//!   compatibility wrapper), plus the shared-work grid engine
 //!   (`SweepRunner` over a keyed `LayerCache` of `PreparedLayer`s) that
 //!   executes a whole (method, quantizer, rank, scaling, seed) grid in
-//!   one pass — the seam sharding / multi-model serving plugs into.
-//! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines.
-//! * [`qpeft`] — adapter fine-tuning: AdamW, γ gradient scaling, SGP.
+//!   one pass and emits factored outcomes — the seam sharding /
+//!   multi-model serving plugs into.
+//! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines;
+//!   `perplexity_native` evaluates any `ModelWeights` (including the
+//!   factored model) without PJRT.
+//! * [`qpeft`] — adapter fine-tuning: AdamW, γ gradient scaling, SGP;
+//!   the frozen backbone stays packed (`FrozenTensor`), dequantized only
+//!   at artifact-marshal time.
 //! * [`exp`] — the benchmark harness regenerating every paper table/figure
-//!   (grid experiments drive `run_sweep`; `sweep` records the shared-work
-//!   speedup into BENCH_sweep.json and runs without artifacts).
+//!   (grid experiments drive `run_sweep`; `sweep` and `serve` record the
+//!   shared-work speedup / factored-serving wins into BENCH_sweep.json /
+//!   BENCH_serve.json and run without artifacts).
 //!
 //! Testing: `cargo build --release && cargo test -q` from a fresh clone —
 //! PJRT-bound integration tests skip with a stderr note until
 //! `make artifacts` + `--features pjrt`. Property tests (`util::prop`)
 //! print a per-case replay seed on failure; re-run one case with
 //! `util::prop::replay(seed, |g| ...)` in a scratch test.
+
+// Style lints the numeric-kernel idioms here trip deliberately (index
+// loops over matrix storage, `add`/`sub` on Mat, constructor-only types,
+// NaN-propagating `!(a > b)` guards). CI runs `clippy -- -D warnings`;
+// everything outside this list stays a hard error.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::should_implement_trait,
+    clippy::new_without_default,
+    clippy::neg_cmp_op_on_partial_ord,
+    clippy::type_complexity,
+    clippy::manual_range_contains
+)]
 
 pub mod util;
 pub mod tensor;
@@ -53,6 +80,7 @@ pub mod qer;
 pub mod model;
 pub mod data;
 pub mod runtime;
+pub mod serve;
 pub mod coordinator;
 pub mod eval;
 pub mod qpeft;

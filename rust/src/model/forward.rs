@@ -1,14 +1,19 @@
 //! Rust-native transformer forward, numerically mirroring
 //! python/compile/model.py (rmsnorm → attention → swiglu blocks).
 //!
-//! Two jobs:
+//! Three jobs:
 //! 1. **Calibration capture** — the activation-aware scalings (LQER,
 //!    QERA) need the *inputs of every linear layer* under real data; the
 //!    [`Capture`] hook records them as the forward runs. (The PJRT
 //!    artifacts are sealed graphs — they cannot expose internals.)
 //! 2. **Cross-validation** — the integration tests assert this forward
-//!    matches the AOT `lm_fwd_*` artifact логits, pinning the rust and
+//!    matches the AOT `lm_fwd_*` artifact logits, pinning the rust and
 //!    JAX stacks to the same semantics.
+//! 3. **Factored serving** — every linear dispatches through the
+//!    [`ModelWeights`] trait, so the same forward runs against dense
+//!    [`Params`] or against `serve::FactoredModel`'s `LinearOp`s
+//!    (`Qdeq·x + L·(R·x)` streamed from packed codes, no densified
+//!    `W_hat`, no PJRT).
 
 use std::collections::BTreeMap;
 
@@ -16,6 +21,31 @@ use crate::runtime::manifest::ModelCfg;
 use crate::tensor::{matmul, Mat};
 
 use super::params::Params;
+
+/// Weight access the forward pass needs, abstracted so dense parameters
+/// and the factored QLR serving representation share one code path.
+pub trait ModelWeights {
+    /// y = x · W for the named quantizable linear.
+    fn linear(&self, name: &str, x: &Mat) -> Mat;
+    /// A 1-D parameter (rmsnorm weights).
+    fn vec(&self, name: &str) -> &[f32];
+    /// A dense 2-D parameter (embedding table / head).
+    fn mat(&self, name: &str) -> Mat;
+}
+
+impl ModelWeights for Params {
+    fn linear(&self, name: &str, x: &Mat) -> Mat {
+        matmul(x, &self.get_mat(name).expect("linear param"))
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        self.get_vec(name).expect("vec param")
+    }
+
+    fn mat(&self, name: &str) -> Mat {
+        self.get_mat(name).expect("mat param")
+    }
+}
 
 const EPS: f32 = 1e-5;
 
@@ -122,10 +152,25 @@ fn attention(q: &Mat, k: &Mat, v: &Mat, cfg: &ModelCfg, b: usize, t: usize, caus
     out
 }
 
-/// Full trunk + head forward. `tokens` is row-major (b, t). Returns
-/// logits (b*t, head_dim). `capture` optionally records linear inputs.
+/// Full trunk + head forward over dense [`Params`]. `tokens` is
+/// row-major (b, t). Returns logits (b*t, head_dim). `capture`
+/// optionally records linear inputs.
 pub fn forward(
     params: &Params,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    causal: bool,
+    capture: Option<&mut Capture>,
+) -> Mat {
+    forward_with(params, cfg, tokens, b, t, causal, capture)
+}
+
+/// The forward pass over any [`ModelWeights`] — dense parameters or the
+/// factored QLR serving representation.
+pub fn forward_with(
+    weights: &dyn ModelWeights,
     cfg: &ModelCfg,
     tokens: &[i32],
     b: usize,
@@ -134,7 +179,7 @@ pub fn forward(
     mut capture: Option<&mut Capture>,
 ) -> Mat {
     assert_eq!(tokens.len(), b * t);
-    let embed = params.get_mat("embed").expect("embed");
+    let embed = weights.mat("embed");
     let d = cfg.d_model;
     let mut x = Mat::zeros(b * t, d);
     for (i, &tok) in tokens.iter().enumerate() {
@@ -143,31 +188,31 @@ pub fn forward(
 
     for layer in 0..cfg.n_layers {
         let name = |k: &str| format!("l{layer}.{k}");
-        let ln1 = params.get_vec(&name("ln1")).unwrap();
+        let ln1 = weights.vec(&name("ln1"));
         let h = rmsnorm(&x, ln1);
         if let Some(c) = capture.as_deref_mut() {
             for k in ["wq", "wk", "wv"] {
                 c.record(&name(k), &h);
             }
         }
-        let q = matmul(&h, &params.get_mat(&name("wq")).unwrap());
-        let k = matmul(&h, &params.get_mat(&name("wk")).unwrap());
-        let v = matmul(&h, &params.get_mat(&name("wv")).unwrap());
+        let q = weights.linear(&name("wq"), &h);
+        let k = weights.linear(&name("wk"), &h);
+        let v = weights.linear(&name("wv"), &h);
         let a = attention(&q, &k, &v, cfg, b, t, causal);
         if let Some(c) = capture.as_deref_mut() {
             c.record(&name("wo"), &a);
         }
-        let o = matmul(&a, &params.get_mat(&name("wo")).unwrap());
+        let o = weights.linear(&name("wo"), &a);
         x = x.add(&o);
 
-        let ln2 = params.get_vec(&name("ln2")).unwrap();
+        let ln2 = weights.vec(&name("ln2"));
         let h2 = rmsnorm(&x, ln2);
         if let Some(c) = capture.as_deref_mut() {
             c.record(&name("gate"), &h2);
             c.record(&name("up"), &h2);
         }
-        let g = matmul(&h2, &params.get_mat(&name("gate")).unwrap());
-        let u = matmul(&h2, &params.get_mat(&name("up")).unwrap());
+        let g = weights.linear(&name("gate"), &h2);
+        let u = weights.linear(&name("up"), &h2);
         let mut m = Mat::zeros(g.rows, g.cols);
         for i in 0..g.data.len() {
             m.data[i] = silu(g.data[i]) * u.data[i];
@@ -175,17 +220,30 @@ pub fn forward(
         if let Some(c) = capture.as_deref_mut() {
             c.record(&name("down"), &m);
         }
-        let dn = matmul(&m, &params.get_mat(&name("down")).unwrap());
+        let dn = weights.linear(&name("down"), &m);
         x = x.add(&dn);
     }
 
-    let xf = rmsnorm(&x, params.get_vec("norm_f").unwrap());
-    matmul(&xf, &params.get_mat("head").unwrap())
+    let xf = rmsnorm(&x, weights.vec("norm_f"));
+    matmul(&xf, &weights.mat("head"))
 }
 
-/// Per-sequence next-token NLL + token counts (mirrors the lm_nll artifact).
+/// Per-sequence next-token NLL + token counts (mirrors the lm_nll
+/// artifact) over dense [`Params`].
 pub fn lm_nll(
     params: &Params,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    mask: &[f32],
+    b: usize,
+    t: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    lm_nll_with(params, cfg, tokens, mask, b, t)
+}
+
+/// NLL over any [`ModelWeights`] — the rust-native factored PPL path.
+pub fn lm_nll_with(
+    weights: &dyn ModelWeights,
     cfg: &ModelCfg,
     tokens: &[i32],
     mask: &[f32],
@@ -196,7 +254,7 @@ pub fn lm_nll(
     let inputs: Vec<i32> = (0..b)
         .flat_map(|bi| tokens[bi * t..bi * t + t - 1].to_vec())
         .collect();
-    let logits = forward(params, cfg, &inputs, b, t - 1, true, None);
+    let logits = forward_with(weights, cfg, &inputs, b, t - 1, true, None);
     let mut nll = vec![0.0f64; b];
     let mut cnt = vec![0.0f64; b];
     for bi in 0..b {

@@ -20,5 +20,6 @@ pub mod forward;
 pub mod calibration;
 
 pub use calibration::{collect_calibration, CalibrationSet};
+pub use forward::ModelWeights;
 pub use params::{NamedTensor, Params};
 pub use synth::{spectral_matrix, spectral_matrix_spiked, synth_lm_params, ProjectionKind};

@@ -49,6 +49,13 @@ impl Params {
         Ok(self.get(name)?.as_f32())
     }
 
+    /// Drop a parameter's value, keeping its order slot (`get` errors
+    /// until it is set again). The factored pipeline uses this to strip
+    /// dense linears out of outcome skeletons.
+    pub fn unset(&mut self, name: &str) {
+        self.by_name.remove(name);
+    }
+
     /// Positional argument list for an artifact call.
     pub fn flat(&self) -> Result<Vec<TensorValue>> {
         self.order

@@ -17,8 +17,9 @@
 //! factorization (see `QerConfig::prep_rank`).
 
 use crate::linalg::{randomized_svd, truncated_from, Svd};
-use crate::quant::{QuantCtx, Quantizer};
+use crate::quant::{PackedMat, QuantCtx, Quantizer};
 use crate::scaling::{Scaling, ScalingKind};
+use crate::serve::{LinearOp, QuantBase};
 use crate::tensor::{matmul, Mat};
 use crate::util::Rng;
 
@@ -105,6 +106,9 @@ pub(crate) const RESID_SALT: u64 = 0xD1CE_BA5E;
 #[derive(Clone, Debug)]
 pub struct QerResult {
     pub qdeq: Mat,
+    /// bit-packed encoding of `qdeq` (None for quantizers without one);
+    /// `into_factored` carries it into the serving layer
+    pub packed: Option<PackedMat>,
     pub l: Mat,
     pub r: Mat,
     pub k_star: usize,
@@ -120,6 +124,17 @@ impl QerResult {
         }
     }
 
+    /// Consume into the factored serving representation: the quantized
+    /// base stays bit-packed (dense only for quantizers without a packed
+    /// format) and `W_hat` is never materialized.
+    pub fn into_factored(self) -> LinearOp {
+        let base = match self.packed {
+            Some(p) => QuantBase::Packed(p),
+            None => QuantBase::Dense(self.qdeq),
+        };
+        LinearOp::FactoredQlr { base, l: self.l, r: self.r }
+    }
+
     pub fn weight_error(&self, w: &Mat) -> f64 {
         w.sub(&self.reconstruct()).frob()
     }
@@ -131,6 +146,7 @@ impl QerResult {
     fn from_srr(out: SrrOutput) -> QerResult {
         QerResult {
             qdeq: out.qdeq,
+            packed: out.packed,
             l: out.l,
             r: out.r,
             k_star: out.k_star,
@@ -219,19 +235,23 @@ pub fn reconstruct_prepared(
     };
 
     match cfg.method {
-        Method::WOnly => QerResult {
-            qdeq: quantizer.quantize(w, ctx),
-            l: Mat::zeros(m, 0),
-            r: Mat::zeros(0, n),
-            k_star: 0,
-            selection: None,
-        },
+        Method::WOnly => {
+            let (qdeq, packed) = quantizer.quantize_coded(w, ctx);
+            QerResult {
+                qdeq,
+                packed,
+                l: Mat::zeros(m, 0),
+                r: Mat::zeros(0, n),
+                k_star: 0,
+                selection: None,
+            }
+        }
         Method::Qer => {
-            let qdeq = quantizer.quantize(w, ctx);
+            let (qdeq, packed) = quantizer.quantize_coded(w, ctx);
             let (l, r) = residual_correction(
                 w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
             );
-            QerResult { qdeq, l, r, k_star: 0, selection: None }
+            QerResult { qdeq, packed, l, r, k_star: 0, selection: None }
         }
         Method::QerSrr => {
             let sp = sp.expect("spectra resolved above");
@@ -249,18 +269,25 @@ pub fn reconstruct_prepared(
         }
         Method::IterativeLowRank { iters } => {
             // LoftQ/LQ-LoRA: Q0 = quant(W); then alternate.
-            let mut qdeq = quantizer.quantize(w, ctx);
+            let (mut qdeq, mut packed) = quantizer.quantize_coded(w, ctx);
             let mut lr_pair = residual_correction(
                 w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
             );
             for _ in 1..iters.max(1) {
                 let lr = matmul(&lr_pair.0, &lr_pair.1);
-                qdeq = quantizer.quantize(&w.sub(&lr), ctx);
+                (qdeq, packed) = quantizer.quantize_coded(&w.sub(&lr), ctx);
                 lr_pair = residual_correction(
                     w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
                 );
             }
-            QerResult { qdeq, l: lr_pair.0, r: lr_pair.1, k_star: cfg.rank, selection: None }
+            QerResult {
+                qdeq,
+                packed,
+                l: lr_pair.0,
+                r: lr_pair.1,
+                k_star: cfg.rank,
+                selection: None,
+            }
         }
         Method::PreserveOnly => {
             let sp = sp.expect("spectra resolved above");

@@ -20,7 +20,7 @@
 //! exposed and compared by the ablation bench.
 
 use crate::linalg::{randomized_svd, truncated_from};
-use crate::quant::{QuantCtx, Quantizer};
+use crate::quant::{PackedMat, QuantCtx, Quantizer};
 use crate::scaling::Scaling;
 use crate::tensor::{matmul, Mat};
 use crate::util::Rng;
@@ -32,6 +32,8 @@ use super::rank_select::{PreparedSpectra, RankSelection};
 #[derive(Clone, Debug)]
 pub struct SrrOutput {
     pub qdeq: Mat,
+    /// bit-packed encoding of `qdeq` for the factored serving path
+    pub packed: Option<PackedMat>,
     pub l: Mat,
     pub r: Mat,
     pub k_star: usize,
@@ -112,8 +114,8 @@ pub fn srr_with_k_prepared(
     };
     let preserved = if k > 0 { matmul(&l1, &r1) } else { Mat::zeros(m, n) };
 
-    // (3) quantize the residual
-    let qdeq = quantizer.quantize(&w.sub(&preserved), ctx);
+    // (3) quantize the residual (codes kept for the factored serving path)
+    let (qdeq, packed) = quantizer.quantize_coded(&w.sub(&preserved), ctx);
 
     // (4)+(5) reconstruct the induced quantization error with rank r−k
     let ek = w.sub(&preserved).sub(&qdeq);
@@ -130,7 +132,7 @@ pub fn srr_with_k_prepared(
     // (6) pack
     let l = l1.hcat(&l2);
     let r = r1.vcat(&r2);
-    SrrOutput { qdeq, l, r, k_star: k, selection }
+    SrrOutput { qdeq, packed, l, r, k_star: k, selection }
 }
 
 /// Self-contained fixed-split variant: prepares spectra from `rng` first.
@@ -172,14 +174,14 @@ pub fn srr_single_svd_prepared(
     } else {
         Mat::zeros(m, n)
     };
-    let qdeq = quantizer.quantize(&w.sub(&preserved), ctx);
+    let (qdeq, packed) = quantizer.quantize_coded(&w.sub(&preserved), ctx);
 
     let resid = w.sub(&qdeq);
     let sresid = scaling.apply(&resid);
     let svd = randomized_svd(&sresid, rank, n_iter, rng);
     let (lu, rv) = truncated_from(&svd, rank);
     let l = scaling.unapply(&lu);
-    SrrOutput { qdeq, l, r: rv, k_star: k, selection }
+    SrrOutput { qdeq, packed, l, r: rv, k_star: k, selection }
 }
 
 /// Self-contained Eq. (6) variant: prepares spectra from `rng` first.

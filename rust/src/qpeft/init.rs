@@ -13,16 +13,20 @@
 //! * SRR     — Algorithm 1 with k\* selection; the k\* annotation then
 //!             drives gradient scaling during training.
 
+use std::collections::BTreeMap;
+
 use crate::model::{CalibrationSet, Params};
-use crate::qer::{reconstruct, Method, QerConfig};
-use crate::quant::QuantCtx;
+use crate::qer::{reconstruct, Method, QerConfig, QerResult};
+use crate::quant::{PackedMat, QuantCtx};
 use crate::runtime::manifest::ModelCfg;
+use crate::runtime::TensorValue;
 use crate::scaling::ScalingKind;
+use crate::serve::{LinearOp, QuantBase};
 use crate::tensor::Mat;
 use crate::util::Rng;
 
-use super::state::{AdapterEntry, QpeftState};
-use crate::coordinator::pipeline::QuantizerSpec;
+use super::state::{AdapterEntry, FrozenTensor, QpeftState};
+use crate::coordinator::pipeline::{FactoredOutcome, QuantizerSpec};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QpeftInit {
@@ -69,6 +73,8 @@ impl QpeftInit {
 ///
 /// `head_dim` is n_classes (cls), 1 (reg) or vocab (lm); the head is
 /// initialized from the base model's head (fine-tuning convention).
+/// Quantized backbones stay *factored*: when the quantizer packs, the
+/// frozen Qdeq rides as bit-packed codes, not a densified copy.
 pub fn init_qpeft(
     params: &Params,
     cfg: &ModelCfg,
@@ -81,24 +87,25 @@ pub fn init_qpeft(
 ) -> QpeftState {
     let mut rng = Rng::new(seed ^ 0x51D3);
     let linears = Params::linear_names(cfg);
-    let mut frozen_params = params.clone();
+    let mut frozen_linears: BTreeMap<String, FrozenTensor> = BTreeMap::new();
     let mut adapters = Vec::with_capacity(linears.len());
 
     for name in &linears {
         let w = params.get_mat(name).expect("linear");
-        let (qdeq, l, r, k_star) = match init {
+        let (frozen, l, r, k_star) = match init {
             QpeftInit::LoRA => {
                 // no quantization: backbone keeps W, adapter starts at 0
                 let l = Mat::randn(w.rows, rank, 0.02, &mut rng);
                 let r = Mat::zeros(rank, w.cols);
-                (w.clone(), l, r, 0)
+                (FrozenTensor::Dense(TensorValue::from_mat(&w)), l, r, 0)
             }
             QpeftInit::QLoRA => {
                 let q = quantizer.build();
-                let qdeq = q.quantize(&w, &calib.quant_ctx(name, quantizer.needs_hessian(), seed));
+                let qctx = calib.quant_ctx(name, quantizer.needs_hessian(), seed);
+                let (qdeq, packed) = q.quantize_coded(&w, &qctx);
                 let l = Mat::randn(w.rows, rank, 0.02, &mut rng);
                 let r = Mat::zeros(rank, w.cols);
-                (qdeq, l, r, 0)
+                (frozen_base(qdeq, packed), l, r, 0)
             }
             _ => {
                 let qcfg = init.qer_config(rank, seed ^ fx(name)).unwrap();
@@ -106,20 +113,89 @@ pub fn init_qpeft(
                 let ctx: QuantCtx =
                     calib.quant_ctx(name, quantizer.needs_hessian(), seed ^ fx(name));
                 let q = quantizer.build();
-                let res = reconstruct(&w, q.as_ref(), &scaling, &ctx, &qcfg);
-                let (l, r) = pad_rank(res.l, res.r, rank);
-                (res.qdeq, l, r, res.k_star)
+                let QerResult { qdeq, packed, l, r, k_star, .. } =
+                    reconstruct(&w, q.as_ref(), &scaling, &ctx, &qcfg);
+                let (l, r) = pad_rank(l, r, rank);
+                (frozen_base(qdeq, packed), l, r, k_star)
             }
         };
-        frozen_params.set_mat(name, &qdeq);
+        frozen_linears.insert(name.clone(), frozen);
         adapters.push(AdapterEntry { name: name.clone(), l, r, k_star });
     }
 
     QpeftState {
-        frozen: QpeftState::frozen_from_params(&frozen_params, cfg),
+        frozen: frozen_in_order(cfg, &mut frozen_linears, |n| {
+            FrozenTensor::Dense(params.get(n).expect("param").clone())
+        }),
         adapters,
         head: head_init,
     }
+}
+
+/// Build QPEFT state straight from a factored PTQ outcome: the frozen
+/// backbone keeps the packed bases (no densified copy anywhere) and the
+/// adapters start from the outcome's (L, R) factors, zero-padded to
+/// `rank`. Equivalent to the matching [`init_qpeft`] call, minus the
+/// recomputation — the QPEFT-after-PTQ path reuses the serving model.
+pub fn init_qpeft_factored(
+    outcome: &FactoredOutcome,
+    cfg: &ModelCfg,
+    rank: usize,
+    head_init: Mat,
+) -> QpeftState {
+    let mut frozen_linears: BTreeMap<String, FrozenTensor> = BTreeMap::new();
+    let mut adapters = Vec::with_capacity(outcome.model.ops.len());
+    for ((name, op), meta) in outcome.model.ops.iter().zip(&outcome.meta) {
+        debug_assert_eq!(name, &meta.name, "ops/meta misaligned");
+        let (frozen, l, r) = match op {
+            LinearOp::FactoredQlr { base, l, r } => {
+                let f = match base {
+                    QuantBase::Packed(p) => FrozenTensor::Packed(p.clone()),
+                    QuantBase::Dense(q) => FrozenTensor::Dense(TensorValue::from_mat(q)),
+                };
+                (f, l.clone(), r.clone())
+            }
+            LinearOp::Dense(w) => (
+                FrozenTensor::Dense(TensorValue::from_mat(w)),
+                Mat::zeros(w.rows, 0),
+                Mat::zeros(0, w.cols),
+            ),
+        };
+        let (l, r) = pad_rank(l, r, rank);
+        frozen_linears.insert(name.clone(), frozen);
+        adapters.push(AdapterEntry { name: name.clone(), l, r, k_star: meta.k_star });
+    }
+    QpeftState {
+        frozen: frozen_in_order(cfg, &mut frozen_linears, |n| {
+            FrozenTensor::Dense(outcome.model.skeleton.get(n).expect("param").clone())
+        }),
+        adapters,
+        head: head_init,
+    }
+}
+
+fn frozen_base(qdeq: Mat, packed: Option<PackedMat>) -> FrozenTensor {
+    match packed {
+        Some(p) => FrozenTensor::Packed(p),
+        None => FrozenTensor::Dense(TensorValue::from_mat(&qdeq)),
+    }
+}
+
+/// Assemble the frozen vec in artifact order: linears from `linears`,
+/// everything else via `other`.
+fn frozen_in_order(
+    cfg: &ModelCfg,
+    linears: &mut BTreeMap<String, FrozenTensor>,
+    other: impl Fn(&str) -> FrozenTensor,
+) -> Vec<FrozenTensor> {
+    Params::param_order(cfg)
+        .iter()
+        .filter(|n| n.as_str() != "head")
+        .map(|n| match linears.remove(n.as_str()) {
+            Some(f) => f,
+            None => other(n),
+        })
+        .collect()
 }
 
 /// Zero-pad (L, R) out to the artifact's fixed rank if a method returned
@@ -225,6 +301,44 @@ mod tests {
         let e_srr = approx_err(QpeftInit::Srr);
         let e_qlora = approx_err(QpeftInit::QLoRA);
         assert!(e_srr < e_qlora * 0.9, "srr {e_srr} should beat qlora {e_qlora}");
+    }
+
+    #[test]
+    fn factored_init_matches_direct_init_and_shrinks_frozen_memory() {
+        // init_qpeft_factored reuses a PTQ outcome; with matching seeds it
+        // must agree bit-for-bit with the recomputing init_qpeft path
+        let (params, cfg, calib) = setup();
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let seed = 7u64;
+        let mut qcfg = QerConfig::new(Method::QerSrr, 8, ScalingKind::Exact);
+        qcfg.seed = seed;
+        let metrics = crate::coordinator::Metrics::new();
+        let outcome =
+            crate::coordinator::run_ptq_factored(&params, &cfg, &calib, spec, &qcfg, &metrics);
+        let head = Mat::zeros(cfg.d_model, 4);
+        let via_factored = init_qpeft_factored(&outcome, &cfg, 8, head.clone());
+        let direct = init_qpeft(&params, &cfg, &calib, spec, QpeftInit::Srr, 8, head, seed);
+
+        assert_eq!(via_factored.adapters.len(), direct.adapters.len());
+        for (a, b) in via_factored.adapters.iter().zip(&direct.adapters) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.l, b.l, "{} L differs", a.name);
+            assert_eq!(a.r, b.r, "{} R differs", a.name);
+            assert_eq!(a.k_star, b.k_star);
+        }
+        for (fa, fb) in via_factored.frozen.iter().zip(&direct.frozen) {
+            assert_eq!(fa.to_tensor().as_f32(), fb.to_tensor().as_f32());
+        }
+        // the frozen backbone stays packed — a real memory win over the
+        // densified frozen copy the trainer used to hold
+        let dense_bytes: usize =
+            QpeftState::frozen_from_params(&params, &cfg).iter().map(|f| f.bytes()).sum();
+        assert!(
+            via_factored.frozen_bytes() * 2 < dense_bytes,
+            "factored {} vs dense {}",
+            via_factored.frozen_bytes(),
+            dense_bytes
+        );
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! QPEFT: Quantized Parameter-Efficient Fine-Tuning (paper §4.4).
 //!
-//! The quantized backbone (Qdeq per linear + embeddings/norms) is frozen;
-//! the (L, R) adapters plus the task head train through the AOT
-//! `qpeft_*_train_*` artifacts (jax.value_and_grad lowered once), with
-//! the optimizer, gradient scaling on the preserved directions (Eq. 7 /
-//! SGP Eq. 8–9) and the training loop all owned by rust.
+//! The quantized backbone (Qdeq per linear + embeddings/norms) is frozen
+//! and held *factored* — packed codes, not a densified copy (see
+//! `state::FrozenTensor`; `init_qpeft_factored` feeds a PTQ serving
+//! outcome straight in). The (L, R) adapters plus the task head train
+//! through the AOT `qpeft_*_train_*` artifacts (jax.value_and_grad
+//! lowered once), with the optimizer, gradient scaling on the preserved
+//! directions (Eq. 7 / SGP Eq. 8–9) and the training loop all owned by
+//! rust.
 //!
 //! * [`state`] — frozen + trainable tensors in artifact arg order.
 //! * [`init`] — the initialization strategies under comparison:
@@ -21,7 +24,7 @@ pub mod gradscale;
 pub mod trainer;
 
 pub use gradscale::GradScale;
-pub use init::{init_qpeft, QpeftInit};
+pub use init::{init_qpeft, init_qpeft_factored, QpeftInit};
 pub use optim::AdamW;
-pub use state::{AdapterEntry, QpeftState};
+pub use state::{AdapterEntry, FrozenTensor, QpeftState};
 pub use trainer::QpeftTrainer;

@@ -5,8 +5,14 @@
 //!              Qdeq(gate,up,down)}, norm_f
 //!   trainable: (L, R) per linear (linear_names order), head
 //!   data:      tokens [, labels]
+//!
+//! The frozen linears ride as [`FrozenTensor::Packed`] bases when the
+//! quantizer has a packed format — the trainer holds the factored base
+//! between steps (4–8× smaller at 2–4 bits) and dequantizes only while
+//! marshalling an artifact call.
 
 use crate::model::Params;
+use crate::quant::PackedMat;
 use crate::runtime::manifest::ModelCfg;
 use crate::runtime::TensorValue;
 use crate::tensor::Mat;
@@ -22,23 +28,61 @@ pub struct AdapterEntry {
     pub k_star: usize,
 }
 
+/// One frozen backbone tensor: dense, or a packed quantized linear base
+/// dequantized only at artifact-marshal time.
+#[derive(Clone, Debug)]
+pub enum FrozenTensor {
+    Dense(TensorValue),
+    Packed(PackedMat),
+}
+
+impl FrozenTensor {
+    pub fn to_tensor(&self) -> TensorValue {
+        match self {
+            FrozenTensor::Dense(t) => t.clone(),
+            FrozenTensor::Packed(p) => TensorValue::from_mat(&p.dequantize()),
+        }
+    }
+
+    pub fn to_mat(&self) -> Mat {
+        match self {
+            FrozenTensor::Dense(t) => t.to_mat(),
+            FrozenTensor::Packed(p) => p.dequantize(),
+        }
+    }
+
+    /// Resident bytes of this entry.
+    pub fn bytes(&self) -> usize {
+        match self {
+            FrozenTensor::Dense(t) => t.len() * 4,
+            FrozenTensor::Packed(p) => p.bytes(),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct QpeftState {
     /// frozen args in artifact order (embed, ln/Qdeq interleaved, norm_f)
-    pub frozen: Vec<TensorValue>,
+    pub frozen: Vec<FrozenTensor>,
     pub adapters: Vec<AdapterEntry>,
     pub head: Mat,
 }
 
 impl QpeftState {
     /// Frozen arg ordering for `cfg`: all params except `head`, with the
-    /// linears holding their dequantized Qdeq.
-    pub fn frozen_from_params(params: &Params, cfg: &ModelCfg) -> Vec<TensorValue> {
+    /// linears holding their dequantized Qdeq (all dense — the packed
+    /// entries come from `init_qpeft` / `init_qpeft_factored`).
+    pub fn frozen_from_params(params: &Params, cfg: &ModelCfg) -> Vec<FrozenTensor> {
         Params::param_order(cfg)
             .iter()
             .filter(|n| n.as_str() != "head")
-            .map(|n| params.get(n).expect("param").clone())
+            .map(|n| FrozenTensor::Dense(params.get(n).expect("param").clone()))
             .collect()
+    }
+
+    /// Resident bytes of the frozen backbone (the factored-base memory win).
+    pub fn frozen_bytes(&self) -> usize {
+        self.frozen.iter().map(|f| f.bytes()).sum()
     }
 
     /// Trainable tensors in artifact order: L0, R0, L1, R1, …, head.
@@ -63,8 +107,9 @@ impl QpeftState {
     }
 
     /// Full positional argument list for a train/fwd artifact call.
+    /// Packed frozen bases dequantize here, transiently.
     pub fn artifact_inputs(&self, data: &[TensorValue]) -> Vec<TensorValue> {
-        let mut inputs = self.frozen.clone();
+        let mut inputs: Vec<TensorValue> = self.frozen.iter().map(|f| f.to_tensor()).collect();
         for a in &self.adapters {
             inputs.push(TensorValue::from_mat(&a.l));
             inputs.push(TensorValue::from_mat(&a.r));

@@ -84,7 +84,7 @@ impl<'a> QpeftTrainer<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::qpeft::state::AdapterEntry;
+    use crate::qpeft::state::{AdapterEntry, FrozenTensor};
     use crate::runtime::MockExecutor;
 
     /// A synthetic "artifact": quadratic loss in the single adapter's
@@ -92,7 +92,7 @@ mod tests {
     /// full step loop (marshalling, grad pairing, scaling, optimizer).
     fn toy_state() -> QpeftState {
         QpeftState {
-            frozen: vec![TensorValue::scalar_f32(0.0)],
+            frozen: vec![FrozenTensor::Dense(TensorValue::scalar_f32(0.0))],
             adapters: vec![AdapterEntry {
                 name: "l0.wq".into(),
                 l: Mat::from_fn(2, 1, |_, _| 0.5),

@@ -13,6 +13,7 @@
 //! Without a Hessian in the ctx, H = I and GPTQ degrades gracefully to
 //! plain nearest rounding (the error-feedback term vanishes).
 
+use super::packed::{PackAcc, PackScheme, PackedMat};
 use super::{QuantCtx, Quantizer, UniformQuantizer};
 use crate::linalg::cholesky_solve;
 use crate::tensor::Mat;
@@ -65,6 +66,24 @@ impl Quantizer for GptqQuantizer {
     }
 
     fn quantize(&self, w: &Mat, ctx: &QuantCtx) -> Mat {
+        self.run(w, ctx, None)
+    }
+
+    fn quantize_coded(&self, w: &Mat, ctx: &QuantCtx) -> (Mat, Option<PackedMat>) {
+        let g = self.group.min(w.cols);
+        let mut acc = PackAcc::with_capacity(w.rows * w.cols, w.rows * w.cols.div_ceil(g), true);
+        let out = self.run(w, ctx, Some(&mut acc));
+        let scheme = PackScheme::GptqGrouped { bits: self.bits, group: g };
+        (out, Some(acc.into_packed(w.rows, w.cols, scheme)))
+    }
+}
+
+impl GptqQuantizer {
+    /// The sequential error-feedback loop, optionally emitting the
+    /// per-group (codes, scale, lo) of every quantized row into `acc`.
+    /// One loop serves both paths — the packed codes are by construction
+    /// the exact integers behind the dense output.
+    fn run(&self, w: &Mat, ctx: &QuantCtx, mut acc: Option<&mut PackAcc>) -> Mat {
         let (m, n) = (w.rows, w.cols);
         let hinv = self.hinv(m, ctx);
         let inner = UniformQuantizer::new(self.bits, self.group.min(n), false);
@@ -74,8 +93,19 @@ impl Quantizer for GptqQuantizer {
         for i in 0..m {
             // quantize row i with the scalar grid
             let mut qrow = work.row(i).to_vec();
-            for chunk in qrow.chunks_mut(self.group.min(n)) {
-                inner.qdq_slice(chunk);
+            match acc.as_mut() {
+                Some(a) => {
+                    for chunk in qrow.chunks_mut(self.group.min(n)) {
+                        let (lo, scale) = inner.qdq_slice_coded(chunk, &mut a.codes);
+                        a.scales.push(scale);
+                        a.los.push(lo);
+                    }
+                }
+                None => {
+                    for chunk in qrow.chunks_mut(self.group.min(n)) {
+                        inner.qdq_slice(chunk);
+                    }
+                }
             }
             let dii = hinv.at(i, i).max(1e-12);
             // propagate the compensated error into the not-yet-quantized rows
@@ -142,6 +172,23 @@ mod tests {
             err_gptq < err_near,
             "gptq {err_gptq} should beat nearest {err_near}"
         );
+    }
+
+    #[test]
+    fn coded_path_matches_dense_and_unpacks_exactly() {
+        // the packed codes come out of the same error-feedback loop, so
+        // the unpack must reproduce the Hessian-compensated output exactly
+        let mut rng = Rng::new(93);
+        let (_, gram) = calib_gram(24, 128, &mut rng);
+        let w = Mat::randn(24, 80, 1.0, &mut rng); // ragged tail group
+        let q = GptqQuantizer::new(3, 32);
+        let ctx = QuantCtx { hessian: Some(gram), seed: 0 };
+        let dense = q.quantize(&w, &ctx);
+        let (coded, packed) = q.quantize_coded(&w, &ctx);
+        let packed = packed.expect("gptq has a packed form");
+        assert_eq!(coded, dense);
+        assert_eq!(packed.dequantize(), dense);
+        assert!(packed.bytes() < packed.dense_bytes());
     }
 
     #[test]

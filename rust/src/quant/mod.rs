@@ -1,8 +1,9 @@
 //! Weight quantizers.
 //!
 //! All quantizers implement [`Quantizer`] and return the *dequantized*
-//! matrix (f32) — the packed low-bit encoding is modeled, not stored,
-//! since every downstream consumer (QER, eval, QPEFT) needs Qdeq.
+//! matrix (f32); the factored serving path additionally obtains the
+//! bit-packed low-bit encoding through [`Quantizer::quantize_coded`]
+//! (see [`packed`]) so inference never has to carry dense f32 bases.
 //!
 //! * [`mxint`] — MXINT-b, block-32 shared power-of-two exponent
 //!   (Darvish Rouhani et al. 2023); byte-exact vs the Pallas kernel /
@@ -15,12 +16,14 @@
 //!   scalar grid; see DESIGN.md §2 substitution table).
 
 mod mxint;
+pub mod packed;
 mod uniform;
 mod gptq;
 mod quipsharp;
 
 pub use gptq::GptqQuantizer;
 pub use mxint::MxintQuantizer;
+pub use packed::{PackScheme, PackedCodes, PackedMat};
 pub use quipsharp::QuipSharpQuantizer;
 pub use uniform::UniformQuantizer;
 
@@ -41,6 +44,16 @@ pub trait Quantizer: Send + Sync {
     fn effective_bits(&self) -> f64;
     /// Quantize and immediately dequantize `w`.
     fn quantize(&self, w: &Mat, ctx: &QuantCtx) -> Mat;
+
+    /// Quantize `w`, additionally returning the bit-packed encoding the
+    /// factored serving path carries. Contract: the dense output is
+    /// bit-identical to [`Quantizer::quantize`] and
+    /// `packed.dequantize()` reproduces it bit-exactly. The default
+    /// packs nothing (QuIP#-sim's codes live in a rotated basis; its
+    /// serving base stays dense).
+    fn quantize_coded(&self, w: &Mat, ctx: &QuantCtx) -> (Mat, Option<PackedMat>) {
+        (self.quantize(w, ctx), None)
+    }
 }
 
 /// The paper's default PTQ quantizer: 3-bit MXINT, block 32 (→ 3.25 bits).

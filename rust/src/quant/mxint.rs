@@ -4,6 +4,7 @@
 //! the Pallas kernel): E = floor(log2(max|block|)), scale = 2^(E-b+2),
 //! q = clip(round(w/scale), ±(2^(b-1)−1)), round-half-to-even.
 
+use super::packed::{PackAcc, PackScheme, PackedMat};
 use super::{QuantCtx, Quantizer};
 use crate::tensor::Mat;
 
@@ -20,19 +21,36 @@ impl MxintQuantizer {
         MxintQuantizer { bits, block }
     }
 
-    /// Quantize one block in place (row-contiguous slice).
-    fn qdq_block(&self, block: &mut [f32]) {
+    /// Quantize one block in place (row-contiguous slice), reporting the
+    /// block scale and emitting each element's qmax-offset mantissa code.
+    /// The single rounding loop serves both the dense path (no-op `emit`)
+    /// and the packed path, so the two can never drift apart.
+    fn qdq_block(&self, block: &mut [f32], mut emit: impl FnMut(u32)) -> f32 {
+        let qmax = (1i64 << (self.bits - 1)) as f32 - 1.0;
         let maxabs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
         if maxabs == 0.0 {
-            return;
+            for _ in block.iter() {
+                emit(qmax as u32); // q = 0
+            }
+            return 0.0;
         }
         let e = maxabs.log2().floor();
         let scale = (e - (self.bits as f32 - 2.0)).exp2();
-        let qmax = (1i64 << (self.bits - 1)) as f32 - 1.0;
         for v in block.iter_mut() {
             let q = (*v / scale).round_ties_even().clamp(-qmax, qmax);
+            emit((q + qmax) as u32);
             *v = q * scale;
         }
+        scale
+    }
+
+    fn assert_block_layout(&self, w: &Mat) {
+        assert!(
+            w.cols % self.block == 0,
+            "cols {} not divisible by MX block {}",
+            w.cols,
+            self.block
+        );
     }
 }
 
@@ -46,19 +64,29 @@ impl Quantizer for MxintQuantizer {
     }
 
     fn quantize(&self, w: &Mat, _ctx: &QuantCtx) -> Mat {
-        assert!(
-            w.cols % self.block == 0,
-            "cols {} not divisible by MX block {}",
-            w.cols,
-            self.block
-        );
+        self.assert_block_layout(w);
         let mut out = w.clone();
         for i in 0..out.rows {
             for chunk in out.row_mut(i).chunks_mut(self.block) {
-                self.qdq_block(chunk);
+                self.qdq_block(chunk, |_| {});
             }
         }
         out
+    }
+
+    fn quantize_coded(&self, w: &Mat, _ctx: &QuantCtx) -> (Mat, Option<PackedMat>) {
+        self.assert_block_layout(w);
+        let groups = w.rows * (w.cols / self.block);
+        let mut acc = PackAcc::with_capacity(w.rows * w.cols, groups, false);
+        let mut out = w.clone();
+        for i in 0..out.rows {
+            for chunk in out.row_mut(i).chunks_mut(self.block) {
+                let scale = self.qdq_block(chunk, |c| acc.codes.push(c));
+                acc.scales.push(scale);
+            }
+        }
+        let scheme = PackScheme::MxintBlock { bits: self.bits, block: self.block };
+        (out, Some(acc.into_packed(w.rows, w.cols, scheme)))
     }
 }
 
@@ -121,6 +149,27 @@ mod tests {
         assert!(once.row(2).iter().all(|&v| v == 0.0));
         let twice = q.quantize(&once, &ctx);
         assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn coded_path_matches_dense_and_unpacks_exactly() {
+        // the serving-layer contract: quantize_coded's dense output equals
+        // quantize bit-for-bit, and the packed form dequantizes to it
+        let mut rng = Rng::new(72);
+        let mut w = Mat::randn(8, 96, 1.0, &mut rng);
+        for v in w.row_mut(3) {
+            *v = 0.0; // degenerate (all-zero) blocks covered
+        }
+        for bits in [2u32, 3, 4, 8] {
+            let q = MxintQuantizer::new(bits, 32);
+            let ctx = QuantCtx::default();
+            let dense = q.quantize(&w, &ctx);
+            let (coded, packed) = q.quantize_coded(&w, &ctx);
+            let packed = packed.expect("mxint has a packed form");
+            assert_eq!(coded, dense, "bits={bits} dense outputs diverge");
+            assert_eq!(packed.dequantize(), dense, "bits={bits} unpack diverges");
+            assert!(packed.bytes() < packed.dense_bytes());
+        }
     }
 
     #[test]

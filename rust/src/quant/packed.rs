@@ -1,0 +1,378 @@
+//! Bit-packed quantized weight storage for the factored QLR serving path.
+//!
+//! The quantizers historically returned only the *dequantized* f32 matrix;
+//! serving then paid dense-f32 memory for a tensor that is really `bits`
+//! bits per weight plus per-group side data. This module defines the
+//! packed form the serving layer carries instead:
+//!
+//! * [`PackedCodes`] — a flat bit-packed integer code buffer (codes of
+//!   width 2..=32 bits, straddling word boundaries freely);
+//! * [`PackScheme`] — how codes + side data map back to values, one
+//!   variant per packable quantizer family: MXINT shared-exponent blocks,
+//!   per-group affine grids (uniform symmetric/asymmetric), and GPTQ's
+//!   grouped grid (same affine decode; the codes were produced by the
+//!   error-feedback loop);
+//! * [`PackedMat`] — codes + per-group scales (+ lower bounds for the
+//!   affine grids) with streaming decode.
+//!
+//! **Exactness contract:** `PackedMat::dequantize()` reproduces the
+//! quantizer's dense output *bit-exactly*. The quantizers guarantee this
+//! by emitting codes from inside their own rounding loops
+//! (`Quantizer::quantize_coded`) and the decode here replays the same
+//! float expressions: `q · scale` for the symmetric grids (`q` is a small
+//! integer, exactly representable), `lo + q · scale` for the affine ones.
+//! Property tests in `serve` pin the contract for every packable family.
+//! QuIP#-sim has no packed form (its codes live in a rotated basis) and
+//! falls back to a dense base in the serving layer.
+
+use crate::tensor::Mat;
+
+/// Flat bit-packed unsigned integer codes.
+#[derive(Clone, Debug)]
+pub struct PackedCodes {
+    /// code width in bits (2..=32)
+    pub bits: u32,
+    /// number of codes stored
+    pub len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedCodes {
+    /// An all-zero buffer ready for [`PackedCodes::set`].
+    pub fn zeroed(bits: u32, len: usize) -> Self {
+        assert!((2..=32).contains(&bits), "code width {bits} out of range");
+        let words = (len * bits as usize).div_ceil(64);
+        PackedCodes { bits, len, words: vec![0; words] }
+    }
+
+    #[inline]
+    fn mask(&self) -> u32 {
+        if self.bits == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.bits) - 1
+        }
+    }
+
+    /// Write code `i` (buffer must still be zero at that slot).
+    #[inline]
+    pub fn set(&mut self, i: usize, code: u32) {
+        debug_assert!(i < self.len);
+        debug_assert!(code <= self.mask(), "code {code} exceeds {} bits", self.bits);
+        let bits = self.bits as usize;
+        let bit = i * bits;
+        let (w, off) = (bit >> 6, bit & 63);
+        self.words[w] |= (code as u64) << off;
+        if off + bits > 64 {
+            self.words[w + 1] |= (code as u64) >> (64 - off);
+        }
+    }
+
+    /// Read code `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        self.get_at_bit(i * self.bits as usize)
+    }
+
+    /// Read the code starting at absolute bit offset `bit` (callers keep
+    /// an incrementing cursor to skip the per-index multiply).
+    #[inline]
+    pub fn get_at_bit(&self, bit: usize) -> u32 {
+        let bits = self.bits as usize;
+        let (w, off) = (bit >> 6, bit & 63);
+        let mut v = self.words[w] >> off;
+        if off + bits > 64 {
+            v |= self.words[w + 1] << (64 - off);
+        }
+        (v as u32) & self.mask()
+    }
+
+    /// Payload bytes of the packed buffer.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// How a [`PackedMat`]'s codes + side data decode back to values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackScheme {
+    /// MXINT block: shared power-of-two scale per `block`, codes are the
+    /// signed mantissas offset by `qmax` (value = (code − qmax) · scale).
+    MxintBlock { bits: u32, block: usize },
+    /// Per-group scalar grid. Symmetric stores codes offset by `qmax`
+    /// like MXINT; asymmetric stores unsigned codes plus a per-group
+    /// lower bound (value = lo + code · scale).
+    UniformGroup { bits: u32, group: usize, symmetric: bool },
+    /// GPTQ's grouped asymmetric grid — affine decode; the codes came out
+    /// of the Hessian error-feedback loop, not nearest rounding of W.
+    GptqGrouped { bits: u32, group: usize },
+}
+
+impl PackScheme {
+    /// Elements sharing one scale (and lower bound).
+    pub fn group_len(&self) -> usize {
+        match *self {
+            PackScheme::MxintBlock { block, .. } => block,
+            PackScheme::UniformGroup { group, .. } | PackScheme::GptqGrouped { group, .. } => {
+                group
+            }
+        }
+    }
+
+    pub fn code_bits(&self) -> u32 {
+        match *self {
+            PackScheme::MxintBlock { bits, .. }
+            | PackScheme::UniformGroup { bits, .. }
+            | PackScheme::GptqGrouped { bits, .. } => bits,
+        }
+    }
+
+    /// Symmetric grids center codes on `qmax` and carry no lower bound.
+    pub fn is_symmetric(&self) -> bool {
+        match *self {
+            PackScheme::MxintBlock { .. } => true,
+            PackScheme::UniformGroup { symmetric, .. } => symmetric,
+            PackScheme::GptqGrouped { .. } => false,
+        }
+    }
+}
+
+/// A quantized matrix in packed form: bit-packed codes plus per-group
+/// scales (and lower bounds for the affine schemes), row-major.
+#[derive(Clone, Debug)]
+pub struct PackedMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub scheme: PackScheme,
+    pub codes: PackedCodes,
+    /// one scale per group, `groups_per_row()` per row
+    pub scales: Vec<f32>,
+    /// per-group lower bound (empty for symmetric schemes)
+    pub los: Vec<f32>,
+}
+
+impl PackedMat {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.scheme.group_len())
+    }
+
+    /// Decode columns `[j0, j1)` of row `i` into `out` (len `j1 - j0`).
+    pub fn decode_span_into(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
+        debug_assert_eq!(out.len(), j1 - j0);
+        let glen = self.scheme.group_len();
+        let gpr = self.groups_per_row();
+        let bits = self.codes.bits as usize;
+        let qmax = (1i64 << (self.codes.bits - 1)) - 1;
+        let symmetric = self.scheme.is_symmetric();
+        let mut j = j0;
+        let mut bit = (i * self.cols + j0) * bits;
+        while j < j1 {
+            let g = j / glen;
+            let end = ((g + 1) * glen).min(j1);
+            let scale = self.scales[i * gpr + g];
+            if symmetric {
+                for slot in &mut out[j - j0..end - j0] {
+                    let q = self.codes.get_at_bit(bit) as i64 - qmax;
+                    bit += bits;
+                    *slot = q as f32 * scale;
+                }
+            } else {
+                let lo = self.los[i * gpr + g];
+                for slot in &mut out[j - j0..end - j0] {
+                    let c = self.codes.get_at_bit(bit) as f32;
+                    bit += bits;
+                    *slot = lo + c * scale;
+                }
+            }
+            j = end;
+        }
+    }
+
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        self.decode_span_into(i, 0, self.cols, out);
+    }
+
+    /// Fused serving hot path: `acc[..] += xv · row_i[j0..j1)`, decoding
+    /// on the fly with the scalar folded per group (`u = xv · scale`), so
+    /// a batch-1 matvec makes a single pass over the codes with no
+    /// intermediate buffer.
+    pub fn axpy_span(&self, i: usize, j0: usize, j1: usize, xv: f32, acc: &mut [f32]) {
+        debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
+        debug_assert_eq!(acc.len(), j1 - j0);
+        let glen = self.scheme.group_len();
+        let gpr = self.groups_per_row();
+        let bits = self.codes.bits as usize;
+        let qmax = (1i64 << (self.codes.bits - 1)) - 1;
+        let symmetric = self.scheme.is_symmetric();
+        let mut j = j0;
+        let mut bit = (i * self.cols + j0) * bits;
+        while j < j1 {
+            let g = j / glen;
+            let end = ((g + 1) * glen).min(j1);
+            let u = xv * self.scales[i * gpr + g];
+            if symmetric {
+                for slot in &mut acc[j - j0..end - j0] {
+                    let q = self.codes.get_at_bit(bit) as i64 - qmax;
+                    bit += bits;
+                    *slot += q as f32 * u;
+                }
+            } else {
+                let xlo = xv * self.los[i * gpr + g];
+                for slot in &mut acc[j - j0..end - j0] {
+                    let c = self.codes.get_at_bit(bit) as f32;
+                    bit += bits;
+                    *slot += xlo + c * u;
+                }
+            }
+            j = end;
+        }
+    }
+
+    /// Unpack to the dense dequantized matrix — bit-identical to the
+    /// originating quantizer's output (see the module exactness contract).
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.decode_span_into(i, 0, self.cols, out.row_mut(i));
+        }
+        out
+    }
+
+    /// Payload bytes of the packed form (codes + scales + lower bounds).
+    pub fn bytes(&self) -> usize {
+        self.codes.bytes() + (self.scales.len() + self.los.len()) * 4
+    }
+
+    /// Bytes the dense f32 form of the same matrix occupies.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Effective bits per weight of the packed form, side data included.
+    pub fn effective_bits(&self) -> f64 {
+        self.bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Code/side-data accumulator the quantizers fill while rounding; turned
+/// into a [`PackedMat`] once the full matrix has been visited.
+#[derive(Default)]
+pub struct PackAcc {
+    pub codes: Vec<u32>,
+    pub scales: Vec<f32>,
+    pub los: Vec<f32>,
+}
+
+impl PackAcc {
+    pub fn with_capacity(n_codes: usize, n_groups: usize, affine: bool) -> Self {
+        PackAcc {
+            codes: Vec::with_capacity(n_codes),
+            scales: Vec::with_capacity(n_groups),
+            los: Vec::with_capacity(if affine { n_groups } else { 0 }),
+        }
+    }
+
+    pub fn into_packed(self, rows: usize, cols: usize, scheme: PackScheme) -> PackedMat {
+        let gpr = cols.div_ceil(scheme.group_len());
+        assert_eq!(self.codes.len(), rows * cols, "code count mismatch");
+        assert_eq!(self.scales.len(), rows * gpr, "scale count mismatch");
+        if scheme.is_symmetric() {
+            assert!(self.los.is_empty(), "symmetric scheme carries no lower bounds");
+        } else {
+            assert_eq!(self.los.len(), rows * gpr, "lower-bound count mismatch");
+        }
+        let mut codes = PackedCodes::zeroed(scheme.code_bits(), rows * cols);
+        for (i, &c) in self.codes.iter().enumerate() {
+            codes.set(i, c);
+        }
+        PackedMat { rows, cols, scheme, codes, scales: self.scales, los: self.los }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn codes_round_trip_across_word_boundaries() {
+        // 3-bit codes misalign against the 64-bit words every 64/gcd steps
+        for bits in [2u32, 3, 5, 7, 12, 17, 32] {
+            let len = 257;
+            let modulus = if bits == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << bits };
+            let vals: Vec<u32> =
+                (0..len).map(|i| ((i as u64 * 2654435761) % modulus) as u32).collect();
+            let mut codes = PackedCodes::zeroed(bits, len);
+            for (i, &v) in vals.iter().enumerate() {
+                codes.set(i, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(codes.get(i), v, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_codes_round_trip() {
+        // Satellite invariant: set/get round-trips arbitrary code streams
+        // for every width, including straddled word boundaries.
+        prop::check(0xAC0DE5, 30, |g| {
+            let bits = g.choice(&[2u32, 3, 4, 6, 8, 11, 16]);
+            let len = g.dim(400);
+            let mask = (1u64 << bits) - 1;
+            let vals: Vec<u32> = (0..len).map(|_| (g.rng.next_u64() & mask) as u32).collect();
+            let mut codes = PackedCodes::zeroed(bits, len);
+            for (i, &v) in vals.iter().enumerate() {
+                codes.set(i, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(codes.get(i), v, "bits={bits} i={i}/{len}");
+            }
+        });
+    }
+
+    #[test]
+    fn packed_buffer_is_actually_small() {
+        let codes = PackedCodes::zeroed(3, 1024);
+        // 3072 bits = 48 words = 384 bytes vs 4096 dense f32 bytes
+        assert_eq!(codes.bytes(), 384);
+    }
+
+    #[test]
+    fn decode_span_matches_full_dequantize() {
+        // hand-build a 2-row affine PackedMat and check span decode
+        let scheme = PackScheme::UniformGroup { bits: 4, group: 3, symmetric: false };
+        let (rows, cols) = (2usize, 7usize);
+        let gpr = cols.div_ceil(3);
+        let mut acc = PackAcc::default();
+        for i in 0..rows {
+            for g in 0..gpr {
+                acc.scales.push(0.5 + i as f32);
+                acc.los.push(-1.0 + g as f32 * 0.25);
+            }
+            for j in 0..cols {
+                acc.codes.push(((i * cols + j) % 16) as u32);
+            }
+        }
+        let p = acc.into_packed(rows, cols, scheme);
+        let full = p.dequantize();
+        for i in 0..rows {
+            for (j0, j1) in [(0usize, 7usize), (1, 4), (2, 7), (5, 5)] {
+                let mut buf = vec![0.0f32; j1 - j0];
+                p.decode_span_into(i, j0, j1, &mut buf);
+                assert_eq!(&full.row(i)[j0..j1], &buf[..], "row {i} span {j0}..{j1}");
+            }
+        }
+        assert!(p.bytes() < p.dense_bytes());
+        assert!(p.effective_bits() < 32.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scale count mismatch")]
+    fn pack_acc_validates_side_data() {
+        let acc = PackAcc { codes: vec![0; 8], scales: vec![], los: vec![] };
+        let _ = acc.into_packed(2, 4, PackScheme::MxintBlock { bits: 3, block: 4 });
+    }
+}

@@ -4,6 +4,7 @@
 //! share a scale (and zero point when asymmetric). Used standalone, as
 //! GPTQ's inner rounding step, and as the QuIP#-sim codebook stand-in.
 
+use super::packed::{PackAcc, PackScheme, PackedMat};
 use super::{QuantCtx, Quantizer};
 use crate::tensor::Mat;
 
@@ -20,17 +21,29 @@ impl UniformQuantizer {
         UniformQuantizer { bits, group, symmetric }
     }
 
-    pub fn qdq_slice(&self, chunk: &mut [f32]) {
+    /// Quantize one group in place, reporting `(lo, scale)` and emitting
+    /// each element's integer code (qmax-offset when symmetric). One
+    /// rounding loop serves both the dense path (no-op `emit`) and the
+    /// packed path so the two can never drift apart. Degenerate groups
+    /// (all-zero symmetric, constant asymmetric) report scale 0 with
+    /// codes that decode back to the untouched values.
+    fn qdq_slice_inner(&self, chunk: &mut [f32], mut emit: impl FnMut(u32)) -> (f32, f32) {
         if self.symmetric {
+            let qmax = (1i64 << (self.bits - 1)) as f32 - 1.0;
             let maxabs = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
             if maxabs == 0.0 {
-                return;
+                for _ in chunk.iter() {
+                    emit(qmax as u32); // q = 0
+                }
+                return (0.0, 0.0);
             }
-            let qmax = (1i64 << (self.bits - 1)) as f32 - 1.0;
             let scale = maxabs / qmax;
             for v in chunk.iter_mut() {
-                *v = (*v / scale).round_ties_even().clamp(-qmax, qmax) * scale;
+                let q = (*v / scale).round_ties_even().clamp(-qmax, qmax);
+                emit((q + qmax) as u32);
+                *v = q * scale;
             }
+            (0.0, scale)
         } else {
             let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
             for &v in chunk.iter() {
@@ -38,15 +51,31 @@ impl UniformQuantizer {
                 hi = hi.max(v);
             }
             if !(hi > lo) {
-                return;
+                // constant group: every value equals lo, decoded as lo + 0·0
+                let c = if lo.is_finite() { lo } else { 0.0 };
+                for _ in chunk.iter() {
+                    emit(0);
+                }
+                return (c, 0.0);
             }
             let levels = ((1u64 << self.bits) - 1) as f32;
             let scale = (hi - lo) / levels;
             for v in chunk.iter_mut() {
                 let q = ((*v - lo) / scale).round_ties_even().clamp(0.0, levels);
+                emit(q as u32);
                 *v = lo + q * scale;
             }
+            (lo, scale)
         }
+    }
+
+    pub fn qdq_slice(&self, chunk: &mut [f32]) {
+        self.qdq_slice_inner(chunk, |_| {});
+    }
+
+    /// The coded variant GPTQ's error-feedback loop packs through.
+    pub(crate) fn qdq_slice_coded(&self, chunk: &mut [f32], codes: &mut Vec<u32>) -> (f32, f32) {
+        self.qdq_slice_inner(chunk, |c| codes.push(c))
     }
 }
 
@@ -74,6 +103,27 @@ impl Quantizer for UniformQuantizer {
             }
         }
         out
+    }
+
+    fn quantize_coded(&self, w: &Mat, _ctx: &QuantCtx) -> (Mat, Option<PackedMat>) {
+        let groups = w.rows * w.cols.div_ceil(self.group);
+        let mut acc = PackAcc::with_capacity(w.rows * w.cols, groups, !self.symmetric);
+        let mut out = w.clone();
+        for i in 0..out.rows {
+            for chunk in out.row_mut(i).chunks_mut(self.group) {
+                let (lo, scale) = self.qdq_slice_inner(chunk, |c| acc.codes.push(c));
+                acc.scales.push(scale);
+                if !self.symmetric {
+                    acc.los.push(lo);
+                }
+            }
+        }
+        let scheme = PackScheme::UniformGroup {
+            bits: self.bits,
+            group: self.group,
+            symmetric: self.symmetric,
+        };
+        (out, Some(acc.into_packed(w.rows, w.cols, scheme)))
     }
 }
 
@@ -111,6 +161,32 @@ mod tests {
         let q = UniformQuantizer::new(2, 32, false).quantize(&w, &QuantCtx::default());
         // hi == lo -> group untouched
         assert!(q.allclose(&w, 0.0));
+    }
+
+    #[test]
+    fn coded_path_matches_dense_and_unpacks_exactly() {
+        // serving-layer contract for both grid variants, including the
+        // degenerate all-zero (symmetric) / constant (asymmetric) groups
+        let mut rng = Rng::new(82);
+        let mut w = Mat::randn(6, 80, 1.0, &mut rng); // 80 = 2.5 groups of 32
+        for v in w.row_mut(1) {
+            *v = 0.0;
+        }
+        for v in w.row_mut(4) {
+            *v = 3.7;
+        }
+        for symmetric in [true, false] {
+            for bits in [2u32, 3, 4] {
+                let q = UniformQuantizer::new(bits, 32, symmetric);
+                let ctx = QuantCtx::default();
+                let dense = q.quantize(&w, &ctx);
+                let (coded, packed) = q.quantize_coded(&w, &ctx);
+                let packed = packed.expect("uniform has a packed form");
+                assert_eq!(coded, dense, "bits={bits} sym={symmetric}");
+                assert_eq!(packed.dequantize(), dense, "bits={bits} sym={symmetric} unpack");
+                assert!(packed.bytes() < packed.dense_bytes());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! The factored QLR serving layer: carry `Q + L·R` end-to-end instead of
+//! densifying `W_hat`.
+//!
+//! The whole point of the Q + L·R parameterization (SRR, and its
+//! ancestors LQER / QERA) is that the quantized base and the rank-r
+//! correction stay *factored* at inference. This module is the serving
+//! representation every consumer dispatches through:
+//!
+//! * [`LinearOp`] — one linear's weight: either a plain [`Mat`]
+//!   (`Dense`) or the factored pair `FactoredQlr { base, l, r }`, whose
+//!   matmul evaluates `Qdeq·x + L·(R·x)` by *streaming* dequantization
+//!   over the packed code blocks — the dense `W_hat` is never
+//!   materialized. The streamed base splits into column stripes across
+//!   the worker pool, so even a batch-1 matvec parallelizes (the dense
+//!   GEMM path parallelizes over batch rows and degenerates there).
+//! * [`QuantBase`] — the quantized base: bit-packed codes
+//!   ([`PackedMat`], 4–8× smaller than f32 at 2–4 bits) or a dense
+//!   fallback for quantizers without a packed format (QuIP#-sim).
+//! * [`FactoredModel`] — a whole model: non-linear parameters in a
+//!   [`Params`] skeleton plus one [`LinearOp`] per quantizable linear.
+//!   Implements [`ModelWeights`], so `model::forward_with` /
+//!   `eval::perplexity_native` run the factored model rust-natively,
+//!   without PJRT and without densifying.
+//!
+//! Producers: `qer::QerResult::into_factored` (single layer),
+//! `coordinator::run_ptq_factored` / `SweepRunner::run_factored` (whole
+//! models). `exp::perf::serve_bench` records the dense-vs-factored
+//! footprint and throughput into `BENCH_serve.json`.
+
+use crate::model::{ModelWeights, Params};
+use crate::quant::packed::PackedMat;
+use crate::tensor::{matmul, Mat};
+use crate::util::pool;
+
+/// The quantized base of a factored linear.
+#[derive(Clone, Debug)]
+pub enum QuantBase {
+    /// bit-packed codes + per-group scales (uniform / MXINT / GPTQ)
+    Packed(PackedMat),
+    /// dense dequantized fallback (quantizers without a packed format)
+    Dense(Mat),
+}
+
+impl QuantBase {
+    pub fn rows(&self) -> usize {
+        match self {
+            QuantBase::Packed(p) => p.rows,
+            QuantBase::Dense(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            QuantBase::Packed(p) => p.cols,
+            QuantBase::Dense(m) => m.cols,
+        }
+    }
+
+    /// Payload bytes this base occupies in memory.
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantBase::Packed(p) => p.bytes(),
+            QuantBase::Dense(m) => m.data.len() * 4,
+        }
+    }
+
+    /// Dense dequantized form (bit-identical to the quantizer's output
+    /// for packed bases — see `quant::packed`).
+    pub fn densify(&self) -> Mat {
+        match self {
+            QuantBase::Packed(p) => p.dequantize(),
+            QuantBase::Dense(m) => m.clone(),
+        }
+    }
+}
+
+/// One linear layer's weight as the serving path evaluates it.
+#[derive(Clone, Debug)]
+pub enum LinearOp {
+    /// plain dense weight (unquantized parameter)
+    Dense(Mat),
+    /// factored `W_hat = Qdeq + L·R`, kept factored end-to-end
+    FactoredQlr { base: QuantBase, l: Mat, r: Mat },
+}
+
+impl LinearOp {
+    /// Input dimension (weights are stored W (in × out), applied y = x·W).
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.rows,
+            LinearOp::FactoredQlr { base, .. } => base.rows(),
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.cols,
+            LinearOp::FactoredQlr { base, .. } => base.cols(),
+        }
+    }
+
+    /// Rank of the low-rank correction (0 for dense).
+    pub fn rank(&self) -> usize {
+        match self {
+            LinearOp::Dense(_) => 0,
+            LinearOp::FactoredQlr { l, .. } => l.cols,
+        }
+    }
+
+    /// Payload bytes of this representation.
+    pub fn bytes(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.data.len() * 4,
+            LinearOp::FactoredQlr { base, l, r } => {
+                base.bytes() + (l.data.len() + r.data.len()) * 4
+            }
+        }
+    }
+
+    /// Materialize the dense weight (compatibility path only — serving
+    /// never calls this).
+    pub fn densify(&self) -> Mat {
+        match self {
+            LinearOp::Dense(w) => w.clone(),
+            LinearOp::FactoredQlr { base, l, r } => {
+                let q = base.densify();
+                if l.cols == 0 {
+                    q
+                } else {
+                    q.add(&matmul(l, r))
+                }
+            }
+        }
+    }
+
+    /// y = x · W for a batch x (rows = samples). The factored form
+    /// evaluates `x·Qdeq + (x·L)·R`, streaming the base from packed
+    /// codes; `W_hat` is never materialized.
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        match self {
+            LinearOp::Dense(w) => matmul(x, w),
+            LinearOp::FactoredQlr { base, l, r } => {
+                let mut y = match base {
+                    QuantBase::Packed(p) => packed_matmul(p, x),
+                    QuantBase::Dense(q) => matmul(x, q),
+                };
+                if l.cols > 0 {
+                    y.add_assign(&matmul(&matmul(x, l), r));
+                }
+                y
+            }
+        }
+    }
+
+    /// Single-token serving: y = x · W for one activation row.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim(), "matvec dim mismatch");
+        let xm = Mat::from_vec(1, x.len(), x.to_vec());
+        self.matmul(&xm).data
+    }
+}
+
+/// y = x · Qdeq with the base streamed from packed codes one row-span at
+/// a time. Work splits into group-aligned column stripes over the worker
+/// pool: every stripe decodes a disjoint slice of the code buffer, so
+/// there is no duplicated dequant work at any batch size, and the result
+/// is deterministic (per-element summation order is the row order).
+fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
+    assert_eq!(
+        x.cols, p.rows,
+        "packed matmul shape mismatch: {}x{} · {}x{}",
+        x.rows, x.cols, p.rows, p.cols
+    );
+    let (b, m, n) = (x.rows, p.rows, p.cols);
+    let glen = p.scheme.group_len();
+    let gpr = p.groups_per_row();
+    let stripes = pool::n_threads().min(gpr).max(1);
+    let groups_per_stripe = gpr.div_ceil(stripes);
+    let bounds: Vec<(usize, usize)> = (0..stripes)
+        .map(|s| {
+            let j0 = (s * groups_per_stripe * glen).min(n);
+            let j1 = ((s + 1) * groups_per_stripe * glen).min(n);
+            (j0, j1)
+        })
+        .filter(|(j0, j1)| j0 < j1)
+        .collect();
+
+    let blocks: Vec<(usize, usize, Vec<f32>)> = pool::par_map(bounds.len(), |s| {
+        let (j0, j1) = bounds[s];
+        let width = j1 - j0;
+        let mut acc = vec![0.0f32; b * width];
+        if b == 1 {
+            // batch-1 serving: fused decode+accumulate, single code pass
+            for i in 0..m {
+                let xv = x.at(0, i);
+                if xv != 0.0 {
+                    p.axpy_span(i, j0, j1, xv, &mut acc);
+                }
+            }
+        } else {
+            // batched: decode each row-span once, reuse it for every sample
+            let mut buf = vec![0.0f32; width];
+            for i in 0..m {
+                p.decode_span_into(i, j0, j1, &mut buf);
+                for bi in 0..b {
+                    let xv = x.at(bi, i);
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for (a, &v) in acc[bi * width..(bi + 1) * width].iter_mut().zip(&buf) {
+                        *a += xv * v;
+                    }
+                }
+            }
+        }
+        (j0, j1, acc)
+    });
+
+    let mut y = Mat::zeros(b, n);
+    for (j0, j1, acc) in blocks {
+        let width = j1 - j0;
+        for bi in 0..b {
+            y.row_mut(bi)[j0..j1].copy_from_slice(&acc[bi * width..(bi + 1) * width]);
+        }
+    }
+    y
+}
+
+/// A whole model in factored serving form: the non-linear parameters
+/// (embedding, norms, head) live in a [`Params`] skeleton whose linear
+/// slots are unset; every quantizable linear is a [`LinearOp`].
+#[derive(Clone, Debug)]
+pub struct FactoredModel {
+    pub skeleton: Params,
+    /// (name, op) in `Params::linear_names` order
+    pub ops: Vec<(String, LinearOp)>,
+}
+
+impl FactoredModel {
+    pub fn op(&self, name: &str) -> Option<&LinearOp> {
+        self.ops.iter().find(|(n, _)| n == name).map(|(_, op)| op)
+    }
+
+    /// Densify every linear back into a full [`Params`] (compatibility
+    /// with the PJRT artifact path and the legacy dense pipeline).
+    pub fn densified_params(&self) -> Params {
+        let mut out = self.skeleton.clone();
+        for (name, op) in &self.ops {
+            out.set_mat(name, &op.densify());
+        }
+        out
+    }
+
+    /// Serving bytes of the quantizable linears (packed codes + scales +
+    /// adapter factors).
+    pub fn linear_bytes(&self) -> usize {
+        self.ops.iter().map(|(_, op)| op.bytes()).sum()
+    }
+
+    /// Bytes the same linears occupy densified to f32.
+    pub fn dense_linear_bytes(&self) -> usize {
+        self.ops.iter().map(|(_, op)| op.in_dim() * op.out_dim() * 4).sum()
+    }
+}
+
+impl ModelWeights for FactoredModel {
+    fn linear(&self, name: &str, x: &Mat) -> Mat {
+        match self.op(name) {
+            Some(op) => op.matmul(x),
+            None => matmul(x, &self.skeleton.get_mat(name).expect("linear param")),
+        }
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        self.skeleton.get_vec(name).expect("vec param")
+    }
+
+    fn mat(&self, name: &str) -> Mat {
+        self.skeleton.get_mat(name).expect("mat param")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::QuantizerSpec;
+    use crate::quant::{QuantCtx, Quantizer};
+    use crate::util::{prop, Rng};
+
+    fn rel_err(got: &Mat, want: &Mat) -> f64 {
+        got.sub(want).frob() / want.frob().max(1e-12)
+    }
+
+    /// Satellite requirement: `FactoredQlr` forward matches the densified
+    /// `W_hat` forward within 1e-5 for all three packable quantizer
+    /// families, across random shapes, bit-widths, batch sizes and ranks.
+    #[test]
+    fn prop_factored_forward_matches_densified() {
+        prop::check(0xFAC70, 20, |g| {
+            let m = 32 * g.dim(3); // 32..96, keeps MXINT blocks whole
+            let n = 32 * g.dim(3);
+            let bsz = g.dim(4);
+            let rank = g.choice(&[0usize, 4, 16]);
+            let spec = g.choice(&[
+                QuantizerSpec::Mxint { bits: 3, block: 32 },
+                QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: true },
+                QuantizerSpec::Uniform { bits: 3, group: 32, symmetric: false },
+                QuantizerSpec::Gptq { bits: 3, group: 32 },
+            ]);
+            let w = Mat::randn(m, n, 1.0, &mut g.rng);
+            let ctx = QuantCtx::default();
+            let (qdeq, packed) = spec.build().quantize_coded(&w, &ctx);
+            let packed = packed.expect("all three families pack");
+
+            // exactness half of the contract: unpack == dense quantize
+            assert_eq!(packed.dequantize(), qdeq, "{}: unpack diverges", spec.label());
+
+            let l = Mat::randn(m, rank, 0.1, &mut g.rng);
+            let r = Mat::randn(rank, n, 0.1, &mut g.rng);
+            let what = if rank == 0 { qdeq.clone() } else { qdeq.add(&matmul(&l, &r)) };
+            let op = LinearOp::FactoredQlr { base: QuantBase::Packed(packed), l, r };
+            assert!(op.densify().allclose(&what, 1e-6));
+
+            let x = Mat::randn(bsz, m, 1.0, &mut g.rng);
+            let dense_y = matmul(&x, &what);
+            let fact_y = op.matmul(&x);
+            let rel = rel_err(&fact_y, &dense_y);
+            assert!(rel < 1e-5, "{}: rel err {rel}", spec.label());
+
+            // single-row serving path (fused decode+accumulate) agrees
+            // with the batched one up to summation-order rounding
+            let yv = op.matvec(x.row(0));
+            let y0 = Mat::from_vec(1, n, yv);
+            let f0 = Mat::from_vec(1, n, fact_y.row(0).to_vec());
+            assert!(rel_err(&y0, &f0) < 1e-5, "matvec vs batched row diverge");
+        });
+    }
+
+    #[test]
+    fn factored_is_smaller_than_dense() {
+        let mut rng = Rng::new(11);
+        let w = Mat::randn(128, 256, 1.0, &mut rng);
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let (qdeq, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        let l = Mat::randn(128, 16, 0.1, &mut rng);
+        let r = Mat::randn(16, 256, 0.1, &mut rng);
+        let dense = LinearOp::Dense(qdeq.add(&matmul(&l, &r)));
+        let fact = LinearOp::FactoredQlr { base: QuantBase::Packed(packed.unwrap()), l, r };
+        assert_eq!(fact.in_dim(), 128);
+        assert_eq!(fact.out_dim(), 256);
+        assert_eq!(fact.rank(), 16);
+        // 3.25 effective bits + rank-16 adapters still beat 32-bit dense
+        assert!(fact.bytes() * 2 < dense.bytes(), "{} vs {}", fact.bytes(), dense.bytes());
+    }
+
+    #[test]
+    fn dense_base_fallback_matches() {
+        // quantizers without a packed format serve through a dense base
+        let mut rng = Rng::new(12);
+        let w = Mat::randn(64, 64, 1.0, &mut rng);
+        let l = Mat::randn(64, 8, 0.1, &mut rng);
+        let r = Mat::randn(8, 64, 0.1, &mut rng);
+        let what = w.add(&matmul(&l, &r));
+        let op = LinearOp::FactoredQlr { base: QuantBase::Dense(w.clone()), l, r };
+        let x = Mat::randn(3, 64, 1.0, &mut rng);
+        let rel = rel_err(&op.matmul(&x), &matmul(&x, &what));
+        assert!(rel < 1e-5);
+        assert_eq!(op.densify(), what);
+        assert_eq!(QuantBase::Dense(w).bytes(), 64 * 64 * 4);
+    }
+
+    #[test]
+    fn rank_zero_op_is_base_only() {
+        let mut rng = Rng::new(13);
+        let w = Mat::randn(32, 64, 1.0, &mut rng);
+        let spec = QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: false };
+        let (qdeq, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        let op = LinearOp::FactoredQlr {
+            base: QuantBase::Packed(packed.unwrap()),
+            l: Mat::zeros(32, 0),
+            r: Mat::zeros(0, 64),
+        };
+        assert_eq!(op.densify(), qdeq);
+        let x = Mat::randn(2, 32, 1.0, &mut rng);
+        assert!(op.matmul(&x).allclose(&matmul(&x, &qdeq), 1e-5));
+    }
+}
