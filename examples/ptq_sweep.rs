@@ -1,19 +1,25 @@
 //! PTQ sweep: quantize a full synthetic LM with every QER method and
-//! evaluate perplexity through the AOT-compiled forward (PJRT) — a
-//! miniature of the paper's Table 1 protocol on one model.
+//! evaluate perplexity — a miniature of the paper's Table 1 protocol on
+//! one model, runnable from a fresh clone with no PJRT artifacts.
 //!
-//! The whole grid runs through `coordinator::run_sweep`, so the per-layer
-//! scalings, Hessians and scaled-weight SVDs are computed once and shared
-//! across every method/rank cell (bit-identical to per-config `run_ptq`).
+//! The whole grid runs through `coordinator::run_sweep_factored`, so the
+//! per-layer scalings, Hessians and scaled-weight SVDs are computed once
+//! and shared across every method/rank cell, and the outcomes come back
+//! *factored*: bit-packed bases + adapters, with rank/scaling variants
+//! of one quantization sharing their base buffers through `Arc`. Scoring
+//! then goes through the fleet evaluator (`eval::fleet_perplexity`):
+//! outcomes that share bases forward in one lock-step pass, decoding
+//! each packed base once per group per batch.
 //!
 //!   cargo run --release --example ptq_sweep -- [--model tiny] [--rank 8]
 
-use srr::coordinator::{run_sweep, Metrics, QuantizerSpec, SweepConfig};
-use srr::eval::perplexity;
+use srr::coordinator::{run_sweep_factored, Metrics, QuantizerSpec, SweepConfig};
+use srr::eval::{fleet_footprint, fleet_perplexity, perplexity_native};
 use srr::exp::ExpCtx;
 use srr::qer::Method;
 use srr::runtime::Executor;
 use srr::scaling::ScalingKind;
+use srr::serve::FactoredModel;
 use srr::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -21,14 +27,21 @@ fn main() -> anyhow::Result<()> {
     let model = args.get_or("model", "tiny").to_string();
     let rank = args.get_usize("rank", 8);
 
-    let mut ctx = ExpCtx::new(false)?;
+    // with artifacts the fixture model is trained first; without, the
+    // offline context still runs the whole sweep + eval rust-natively
+    let mut ctx = match ExpCtx::new(false) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("[no artifacts ({e:#}); offline mode — untrained synthetic fixture]");
+            ExpCtx::offline(false)?
+        }
+    };
     let fx = ctx.lm(&model)?;
     let b = ctx.engine.manifest().lm_batch;
     let t = fx.cfg.seq_len;
     let batches = ctx.ppl_batches(&model)?;
-    let artifact = format!("lm_nll_{model}");
 
-    let bf16 = perplexity(&ctx.engine, &artifact, &fx.params.clone(), &batches, b, t)?;
+    let bf16 = perplexity_native(&fx.params, &fx.cfg, &batches, b, t);
     println!("model={model} rank={rank}  BF16 PPL = {bf16:.3}\n");
     println!("{:<28} {:>10} {:>8}", "method", "PPL", "mean k*");
 
@@ -55,16 +68,27 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let metrics = Metrics::new();
-    let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
-    for (c, out) in configs.iter().zip(&outs) {
-        let ppl = perplexity(&ctx.engine, &artifact, &out.params, &batches, b, t)?;
+    let outs = run_sweep_factored(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
+    let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    let ppls = fleet_perplexity(&models, &fx.cfg, &batches, b, t);
+    for ((c, out), ppl) in configs.iter().zip(&outs).zip(&ppls) {
         println!("{:<28} {ppl:>10.3} {:>8.1}", c.label, out.mean_k_star());
     }
+
+    let fp = fleet_footprint(&models);
     println!(
         "\nshared-work: {} cache entries, prep {:.2}s, fan-out {:.2}s",
         metrics.get("sweep.cache_entries"),
         metrics.get("sweep.prep_secs"),
         metrics.get("sweep.reconstruct_secs")
+    );
+    println!(
+        "fleet eval: {} outcomes in {} lock-step groups; packed bases {} bytes resident \
+         (vs {} if unshared)",
+        models.len(),
+        fp.groups,
+        fp.unique_base_bytes,
+        fp.total_base_bytes
     );
     Ok(())
 }

@@ -32,9 +32,11 @@ use crate::tensor::Mat;
 /// sweep grid. Seeds in keys are *sweep-level* seeds; the stored values
 /// were derived with the layer-salted seed the per-config path uses.
 pub struct PreparedLayer {
+    /// the linear's parameter name (e.g. `l0.wq`)
     pub name: String,
     /// the original weight (owned so jobs need no `Params` access)
     pub w: Mat,
+    /// activation scalings S per kind the grid touches
     pub scalings: HashMap<ScalingKind, Arc<Scaling>>,
     /// GPTQ Hessian, present iff some config's quantizer needs it
     pub hessian: Option<Arc<Mat>>,
@@ -69,14 +71,20 @@ impl PreparedLayer {
         QuantCtx { hessian, seed }
     }
 
+    /// The cached k=0 dequantized weight for a (quantizer, sweep seed).
     pub fn qdeq0(&self, quantizer_label: &str, seed: u64) -> Option<&Arc<Mat>> {
         self.qdeq0.get(&(quantizer_label.to_string(), seed))
     }
 
+    /// The bit-packed encoding of [`PreparedLayer::qdeq0`]. Handed to
+    /// outcomes as the `Arc` itself, so every w-only / plain-QER config
+    /// of the cell serves one buffer — the sharing
+    /// `eval::fleet::group_by_shared_bases` groups on.
     pub fn qdeq0_packed(&self, quantizer_label: &str, seed: u64) -> Option<&Arc<PackedMat>> {
         self.qdeq0_packed.get(&(quantizer_label.to_string(), seed))
     }
 
+    /// The prepared (S·W, S·E) spectra for a (scaling kind, sweep seed).
     pub fn spectra(&self, kind: ScalingKind, seed: u64) -> Option<&Arc<PreparedSpectra>> {
         self.spectra.get(&(kind, seed))
     }
@@ -85,6 +93,7 @@ impl PreparedLayer {
 /// All layers of a sweep plus the cross-layer shared residual SVDs.
 /// Immutable once built — phase B2's per-config fan-out only reads.
 pub struct LayerCache {
+    /// the prepared layers, in `Params::linear_names` order
     pub layers: Vec<PreparedLayer>,
     /// plain-QER residual SVDs: (layer index, quantizer label, scaling
     /// kind, sweep seed) → SVD of S(W − Q) at the grid's prep rank
@@ -92,10 +101,12 @@ pub struct LayerCache {
 }
 
 impl LayerCache {
+    /// A cache over prepared layers with no residual SVDs yet.
     pub fn new(layers: Vec<PreparedLayer>) -> Self {
         LayerCache { layers, resid: HashMap::new() }
     }
 
+    /// Store a shared plain-QER residual SVD (phase B1).
     pub fn insert_resid(
         &mut self,
         layer: usize,
@@ -107,6 +118,7 @@ impl LayerCache {
         self.resid.insert((layer, quantizer_label, kind, seed), Arc::new(svd));
     }
 
+    /// Look up a shared residual SVD stored by [`LayerCache::insert_resid`].
     pub fn resid(
         &self,
         layer: usize,

@@ -12,15 +12,25 @@ use crate::util::json::Json;
 
 use super::pipeline::QuantizerSpec;
 
+/// One PTQ run's configuration, merged from CLI args and an optional
+/// JSON file.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// manifest model name (`tiny` / `small` / `base`)
     pub model: String,
+    /// reconstruction method (see [`parse_method`] for the CLI names)
     pub method: Method,
+    /// rank budget r for the L·R correction
     pub rank: usize,
+    /// activation scaling kind (see [`parse_scaling`])
     pub scaling: ScalingKind,
+    /// quantizer spec (see [`parse_quantizer`])
     pub quantizer: QuantizerSpec,
+    /// base RNG seed (layer-salted per linear)
     pub seed: u64,
+    /// calibration rows collected per linear
     pub calib_rows: usize,
+    /// output directory for reports
     pub out_dir: String,
 }
 
@@ -39,6 +49,7 @@ impl Default for RunConfig {
     }
 }
 
+/// Parse a CLI method name (`w-only`, `qer`, `srr`, `loftq`, …).
 pub fn parse_method(s: &str) -> Result<Method> {
     Ok(match s {
         "w-only" | "wonly" => Method::WOnly,
@@ -52,6 +63,7 @@ pub fn parse_method(s: &str) -> Result<Method> {
     })
 }
 
+/// Parse a CLI scaling name (`identity`, `rms`, `absmean`, `exact`, …).
 pub fn parse_scaling(s: &str) -> Result<ScalingKind> {
     Ok(match s {
         "identity" | "zeroquant" => ScalingKind::Identity,
@@ -62,6 +74,8 @@ pub fn parse_scaling(s: &str) -> Result<ScalingKind> {
     })
 }
 
+/// Parse a CLI quantizer spec (`mxint3`, `mxint4:16`, `uniform4g64`,
+/// `gptq3`, `quip2`).
 pub fn parse_quantizer(s: &str) -> Result<QuantizerSpec> {
     // forms: mxint3, mxint4:16, uniform4g64, gptq3, quip2
     if let Some(rest) = s.strip_prefix("mxint") {

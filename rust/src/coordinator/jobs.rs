@@ -8,6 +8,8 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
+/// A bounded multi-producer multi-consumer queue; `push` blocks at
+/// capacity (backpressure), `pop` blocks until an item or close.
 pub struct BoundedQueue<T> {
     inner: Mutex<Inner<T>>,
     not_full: Condvar,
@@ -21,6 +23,7 @@ struct Inner<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// An empty open queue holding at most `capacity` items.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         BoundedQueue {
@@ -62,6 +65,7 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Close the queue: pending pushes fail, pops drain then end.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;
@@ -69,10 +73,12 @@ impl<T> BoundedQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// Whether the queue is currently empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

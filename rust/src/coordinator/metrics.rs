@@ -4,24 +4,29 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// A thread-safe registry of named f64 counters/timers.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, f64>>,
 }
 
 impl Metrics {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulate `v` into `key`.
     pub fn add(&self, key: &str, v: f64) {
         *self.counters.lock().unwrap().entry(key.to_string()).or_insert(0.0) += v;
     }
 
+    /// Increment `key` by one.
     pub fn incr(&self, key: &str) {
         self.add(key, 1.0);
     }
 
+    /// Current value of `key` (0.0 if never written).
     pub fn get(&self, key: &str) -> f64 {
         self.counters.lock().unwrap().get(key).copied().unwrap_or(0.0)
     }
@@ -34,10 +39,12 @@ impl Metrics {
         out
     }
 
+    /// A point-in-time copy of every counter.
     pub fn snapshot(&self) -> BTreeMap<String, f64> {
         self.counters.lock().unwrap().clone()
     }
 
+    /// Human-readable key/value report, sorted by key.
     pub fn report(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::new();

@@ -18,7 +18,10 @@
 //!   seed)` grid, preparing scalings / Hessians / spectra once per layer
 //!   into a [`cache::LayerCache`] and fanning per-config reconstruction
 //!   out over the worker pool — bit-identical to per-config `run_ptq`.
-//!   This is the seam sharding / multi-model serving will plug into.
+//!   Outcomes share packed bases through `Arc`, which is what the fleet
+//!   evaluator ([`crate::eval::fleet`]) groups on to score a whole grid
+//!   in lock-step. This is the seam sharding / multi-model serving will
+//!   plug into.
 //! * [`cache`] — the keyed per-layer cache ([`cache::PreparedLayer`]).
 //! * [`jobs`] — bounded work queue with backpressure (used by the
 //!   streaming calibration path; invariants property-tested).

@@ -35,6 +35,7 @@ pub enum QuantizerSpec {
 }
 
 impl QuantizerSpec {
+    /// Instantiate the described quantizer.
     pub fn build(&self) -> Box<dyn Quantizer> {
         match *self {
             QuantizerSpec::Mxint { bits, block } => Box::new(MxintQuantizer::new(bits, block)),
@@ -46,14 +47,17 @@ impl QuantizerSpec {
         }
     }
 
+    /// Whether this quantizer consumes a calibration Hessian (GPTQ).
     pub fn needs_hessian(&self) -> bool {
         matches!(self, QuantizerSpec::Gptq { .. })
     }
 
+    /// Stable label, e.g. `mxint3b32` (cache/report key).
     pub fn label(&self) -> String {
         self.build().name()
     }
 
+    /// Effective bits per weight including side data.
     pub fn effective_bits(&self) -> f64 {
         self.build().effective_bits()
     }
@@ -62,11 +66,17 @@ impl QuantizerSpec {
 /// Per-layer outcome report.
 #[derive(Clone, Debug)]
 pub struct LayerReport {
+    /// the linear's parameter name
     pub name: String,
+    /// preserved rank chosen by SRR (0 for non-SRR methods)
     pub k_star: usize,
+    /// ‖W − Ŵ‖_F
     pub weight_err: f64,
+    /// ‖S(W − Ŵ)‖_F under the config's scaling
     pub scaled_err: f64,
+    /// seconds building scaling/calibration context (amortized in sweeps)
     pub scale_secs: f64,
+    /// seconds in quantize + reconstruct
     pub qer_secs: f64,
 }
 
@@ -78,14 +88,17 @@ pub struct PtqOutcome {
     pub params: Params,
     /// raw per-layer decompositions (QPEFT init consumes these)
     pub results: Vec<(String, QerResult)>,
+    /// per-layer error/timing reports
     pub reports: Vec<LayerReport>,
 }
 
 impl PtqOutcome {
+    /// √Σ‖W − Ŵ‖²_F over layers.
     pub fn total_weight_err(&self) -> f64 {
         self.reports.iter().map(|r| r.weight_err * r.weight_err).sum::<f64>().sqrt()
     }
 
+    /// Mean preserved rank k* across layers.
     pub fn mean_k_star(&self) -> f64 {
         if self.reports.is_empty() {
             return 0.0;
@@ -98,21 +111,44 @@ impl PtqOutcome {
 /// aligned with `FactoredModel::ops`.
 #[derive(Clone, Debug)]
 pub struct LayerMeta {
+    /// the linear's parameter name
     pub name: String,
+    /// preserved rank chosen by SRR (0 for non-SRR methods)
     pub k_star: usize,
+    /// the full k-selection trace (SRR only)
     pub selection: Option<RankSelection>,
 }
 
 /// Whole-model PTQ outcome in the factored serving form: packed bases +
-/// adapter factors, no dense `W_hat` anywhere.
+/// adapter factors, no dense `W_hat` anywhere. Sweep outcomes that reuse
+/// a cached k=0 quantization share their [`crate::serve::QuantBase`]
+/// buffers through `Arc` — M rank variants hold one packed base, and
+/// [`crate::eval::fleet`] evaluates them in one lock-step pass.
 pub struct FactoredOutcome {
+    /// the factored serving model (consumed by `perplexity_native` /
+    /// the fleet evaluator)
     pub model: FactoredModel,
     /// aligned with `model.ops`
     pub meta: Vec<LayerMeta>,
+    /// per-layer error/timing reports, aligned with `model.ops`
     pub reports: Vec<LayerReport>,
 }
 
 impl FactoredOutcome {
+    /// √Σ‖W − Ŵ‖²_F over layers (parity with
+    /// [`PtqOutcome::total_weight_err`]).
+    pub fn total_weight_err(&self) -> f64 {
+        self.reports.iter().map(|r| r.weight_err * r.weight_err).sum::<f64>().sqrt()
+    }
+
+    /// Mean preserved rank k* across layers.
+    pub fn mean_k_star(&self) -> f64 {
+        if self.reports.is_empty() {
+            return 0.0;
+        }
+        self.reports.iter().map(|r| r.k_star as f64).sum::<f64>() / self.reports.len() as f64
+    }
+
     /// Densify into the legacy [`PtqOutcome`] — the compatibility
     /// constructor. Bit-identical to the historical dense pipeline:
     /// packed bases dequantize to exactly the quantizer's output (each

@@ -28,9 +28,15 @@
 //! Memory note: phase B2 emits [`FactoredOutcome`]s — packed codes +
 //! adapter factors, roughly `effective_bits/32` of a dense model each —
 //! so a whole grid's outcomes now fit where a handful of densified
-//! copies used to. The dense [`PtqOutcome`]s (grid-size × model-size)
-//! only materialize when a caller asks via [`SweepRunner::run`] /
-//! `to_dense` (the PJRT eval engines still need them).
+//! copies used to. On top of that, every w-only / plain-QER config of a
+//! `(quantizer, seed)` cell receives the *same* `Arc<PackedMat>` from
+//! the [`LayerCache`] (not a copy), deduping the grid's base memory
+//! M-fold across rank/scaling variants — and marking the outcomes as
+//! lock-step-evaluable for `eval::fleet::fleet_perplexity`, which
+//! decodes each shared base once per group per eval batch. The dense
+//! [`PtqOutcome`]s (grid-size × model-size) only materialize when a
+//! caller asks via [`SweepRunner::run`] / `to_dense` (the PJRT eval
+//! engines still need them).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -61,15 +67,22 @@ const N_ITER: usize = 4;
 /// One cell of a sweep grid.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
+    /// display/report label (defaults to `quantizer/method/rank/scaling`)
     pub label: String,
+    /// quantizer spec for the base
     pub quantizer: QuantizerSpec,
+    /// reconstruction method
     pub method: Method,
+    /// rank budget r
     pub rank: usize,
+    /// activation scaling kind
     pub scaling: ScalingKind,
+    /// sweep-level seed (layer-salted per linear)
     pub seed: u64,
 }
 
 impl SweepConfig {
+    /// A cell with the default label and seed 0.
     pub fn new(
         quantizer: QuantizerSpec,
         method: Method,
@@ -86,11 +99,13 @@ impl SweepConfig {
         SweepConfig { label, quantizer, method, rank, scaling, seed: 0 }
     }
 
+    /// Builder: replace the sweep-level seed.
     pub fn seeded(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Builder: replace the display label.
     pub fn labeled(mut self, label: &str) -> Self {
         self.label = label.to_string();
         self
@@ -118,6 +133,8 @@ pub struct SweepRunner<'a> {
 }
 
 impl<'a> SweepRunner<'a> {
+    /// A runner over one model + calibration set; `metrics` receives the
+    /// `sweep.*` stage timings.
     pub fn new(
         params: &'a Params,
         model_cfg: &'a ModelCfg,
@@ -290,7 +307,10 @@ impl<'a> SweepRunner<'a> {
                 Method::WOnly => {
                     let label = c.quantizer.label();
                     let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
-                    let packed = layer.qdeq0_packed(&label, c.seed).map(|p| (**p).clone());
+                    // the Arc, not a copy: every rank/scaling variant of
+                    // this (quantizer, seed) cell serves the same buffer,
+                    // and the fleet evaluator groups outcomes by it
+                    let packed = layer.qdeq0_packed(&label, c.seed).cloned();
                     QerResult {
                         qdeq,
                         packed,
@@ -303,7 +323,7 @@ impl<'a> SweepRunner<'a> {
                 Method::Qer => {
                     let label = c.quantizer.label();
                     let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
-                    let packed = layer.qdeq0_packed(&label, c.seed).map(|p| (**p).clone());
+                    let packed = layer.qdeq0_packed(&label, c.seed).cloned();
                     let svd = cache
                         .resid(li, &label, c.scaling, c.seed)
                         .expect("residual SVD prepared");

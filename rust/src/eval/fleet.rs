@@ -1,0 +1,426 @@
+//! The fleet evaluator: lock-step batched PPL over many sweep outcomes.
+//!
+//! A sweep grid produces one [`FactoredModel`] per config, and rank
+//! variants of the same `(layer, quantizer, seed)` cell carry
+//! *pointer-identical* packed bases (the sweep engine hands them the
+//! same `Arc<PackedMat>` from its `LayerCache`). Scoring those outcomes
+//! with one [`perplexity_native`](super::ppl::perplexity_native) loop
+//! each re-pays the streaming dequantization of every shared base per
+//! outcome; this module evaluates them together instead:
+//!
+//! * [`group_by_shared_bases`] partitions outcomes into lock-step
+//!   groups — two outcomes share a group iff *every* quantized linear's
+//!   base aliases the same buffer
+//!   ([`QuantBase::same_buffer`](crate::serve::QuantBase::same_buffer));
+//! * [`FleetGroup`] implements
+//!   [`FleetWeights`](crate::model::forward::FleetWeights): the group
+//!   runs layer-by-layer through one
+//!   [`forward_fleet`](crate::model::forward::forward_fleet) pass with
+//!   every member's activations stacked, so each base's code row-spans
+//!   are decoded **once per group per batch**
+//!   ([`LinearOp::matmul_grouped`]) while only the cheap per-member
+//!   `L·(R·x)` corrections differ;
+//! * [`fleet_perplexity`] fans the per-(group, batch) jobs over the
+//!   coordinator worker pool and reduces per-member NLL sums in batch
+//!   order, so every PPL matches the per-outcome
+//!   [`perplexity_native`](super::ppl::perplexity_native) value (bit-
+//!   identically on the batched path; a group of one takes exactly that
+//!   single-outcome path).
+//!
+//! Consumers: the `exp::ptq` grid experiments (Tables 1/5/16), the
+//! `ptq_sweep` example, and `exp::perf::evalbatch_bench`, which records
+//! per-outcome vs fleet tokens/sec and the packed-buffer dedup into
+//! `BENCH_evalbatch.json`.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::model::forward::{lm_nll_fleet, FleetWeights};
+use crate::runtime::manifest::ModelCfg;
+use crate::serve::{FactoredModel, LinearOp};
+use crate::tensor::{matmul, Mat};
+use crate::util::pool;
+
+use super::ppl::perplexity_native_masked;
+
+/// A group of factored models whose quantized linears all share base
+/// buffers, evaluated in lock-step. Non-linear parameters are served
+/// from the first member's skeleton — a group only ever contains
+/// outcomes of one sweep over one model, whose skeletons are equal by
+/// construction.
+pub struct FleetGroup<'a> {
+    members: Vec<&'a FactoredModel>,
+}
+
+impl<'a> FleetGroup<'a> {
+    /// Build a group. The members must have aligned `ops` (same linear
+    /// names in the same order); [`group_by_shared_bases`] guarantees
+    /// this for groups it emits.
+    pub fn new(members: Vec<&'a FactoredModel>) -> Self {
+        assert!(!members.is_empty(), "empty fleet group");
+        debug_assert!(members
+            .iter()
+            .all(|m| m.ops.len() == members[0].ops.len()));
+        FleetGroup { members }
+    }
+
+    /// The models in this group, in input order.
+    pub fn members(&self) -> &[&'a FactoredModel] {
+        &self.members
+    }
+}
+
+impl FleetWeights for FleetGroup<'_> {
+    fn group_size(&self) -> usize {
+        self.members.len()
+    }
+
+    fn linear_stacked(&self, name: &str, x: &Mat) -> Mat {
+        if self.members[0].op(name).is_some() {
+            let ops: Vec<&LinearOp> = self
+                .members
+                .iter()
+                .map(|m| m.op(name).expect("fleet group ops aligned"))
+                .collect();
+            LinearOp::matmul_grouped(&ops, x)
+        } else {
+            // un-quantized linear: shared skeleton weight, plain GEMM
+            matmul(x, &self.members[0].skeleton.get_mat(name).expect("linear param"))
+        }
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        self.members[0].skeleton.get_vec(name).expect("vec param")
+    }
+
+    fn mat(&self, name: &str) -> Mat {
+        self.members[0].skeleton.get_mat(name).expect("mat param")
+    }
+}
+
+fn shares_all_bases(a: &FactoredModel, b: &FactoredModel) -> bool {
+    !a.ops.is_empty()
+        && a.ops.len() == b.ops.len()
+        && a.ops.iter().zip(&b.ops).all(|((na, oa), (nb, ob))| {
+            na == nb
+                && match (oa, ob) {
+                    (
+                        LinearOp::FactoredQlr { base: ba, .. },
+                        LinearOp::FactoredQlr { base: bb, .. },
+                    ) => ba.same_buffer(bb),
+                    _ => false,
+                }
+        })
+}
+
+/// Partition `models` into lock-step groups by shared base buffers.
+///
+/// Two models land in one group iff every quantized linear's
+/// [`QuantBase`](crate::serve::QuantBase) aliases the same underlying
+/// buffer — pointer identity,
+/// not content equality, so only outcomes that genuinely share memory
+/// (rank/scaling variants of one sweep cell) are batched; equal-looking
+/// but independently quantized models stay apart. Returns index groups
+/// in first-seen order; singletons stay singletons.
+pub fn group_by_shared_bases(models: &[&FactoredModel]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    'outer: for i in 0..models.len() {
+        for group in groups.iter_mut() {
+            if shares_all_bases(models[group[0]], models[i]) {
+                group.push(i);
+                continue 'outer;
+            }
+        }
+        groups.push(vec![i]);
+    }
+    groups
+}
+
+/// Packed/dense base-buffer accounting across a fleet of outcomes.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetFootprint {
+    /// base bytes summed per model — what per-outcome serving would hold
+    /// resident if every outcome owned its buffers
+    pub total_base_bytes: usize,
+    /// bytes of *distinct* buffers — what the `Arc`-shared outcomes
+    /// actually keep resident
+    pub unique_base_bytes: usize,
+    /// number of lock-step groups the fleet evaluator would form
+    pub groups: usize,
+}
+
+/// Measure the base-buffer dedup across `models` (see
+/// [`FleetFootprint`]).
+pub fn fleet_footprint(models: &[&FactoredModel]) -> FleetFootprint {
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut total = 0usize;
+    let mut unique = 0usize;
+    for m in models {
+        for (_, op) in &m.ops {
+            if let LinearOp::FactoredQlr { base, .. } = op {
+                total += base.bytes();
+                if seen.insert(base.buffer_ptr()) {
+                    unique += base.bytes();
+                }
+            }
+        }
+    }
+    FleetFootprint {
+        total_base_bytes: total,
+        unique_base_bytes: unique,
+        groups: group_by_shared_bases(models).len(),
+    }
+}
+
+/// Lock-step batched perplexity over many factored models; returns PPLs
+/// aligned with `models`.
+///
+/// Models are grouped by [`group_by_shared_bases`]; each multi-member
+/// group evaluates per batch through one stacked
+/// [`forward_fleet`](crate::model::forward::forward_fleet) pass (one
+/// base decode per group per batch), each singleton takes the existing
+/// single-outcome
+/// [`perplexity_native`](super::ppl::perplexity_native) path. All
+/// (group × batch) jobs fan out over the shared worker pool; per-member
+/// sums reduce in batch order, so results match the per-outcome loop.
+pub fn fleet_perplexity(
+    models: &[&FactoredModel],
+    cfg: &ModelCfg,
+    batches: &[Vec<i32>],
+    b: usize,
+    t: usize,
+) -> Vec<f64> {
+    let groups = group_by_shared_bases(models);
+    // one mask allocation for the whole fleet (satellite: hoisted out of
+    // every perplexity_native call)
+    let mask = vec![1.0f32; b * t];
+
+    enum Job {
+        /// singleton group → the existing single-outcome path
+        Single(usize),
+        /// (group index, batch index) lock-step slice
+        GroupBatch(usize, usize),
+    }
+    let mut jobs: Vec<Job> = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        if group.len() == 1 {
+            jobs.push(Job::Single(group[0]));
+        } else {
+            for bj in 0..batches.len() {
+                jobs.push(Job::GroupBatch(gi, bj));
+            }
+        }
+    }
+
+    enum Out {
+        Ppl(usize, f64),
+        /// (group index, per-member (Σ nll, Σ tokens) for one batch)
+        Partial(usize, Vec<(f64, f64)>),
+    }
+    let outs: Vec<Out> = pool::par_map(jobs.len(), |j| match jobs[j] {
+        Job::Single(mi) => Out::Ppl(
+            mi,
+            perplexity_native_masked(models[mi], cfg, batches, &mask, b, t),
+        ),
+        Job::GroupBatch(gi, bj) => {
+            let fleet = FleetGroup::new(groups[gi].iter().map(|&mi| models[mi]).collect());
+            Out::Partial(gi, lm_nll_fleet(&fleet, cfg, &batches[bj], &mask, b, t))
+        }
+    });
+
+    // reduce — par_map preserves job order, so a group's partials arrive
+    // in batch order and the f64 accumulation matches perplexity_native
+    let mut sums: HashMap<usize, Vec<(f64, f64)>> = groups
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| g.len() > 1)
+        .map(|(gi, g)| (gi, vec![(0.0f64, 0.0f64); g.len()]))
+        .collect();
+    let mut ppl = vec![f64::NAN; models.len()];
+    for out in outs {
+        match out {
+            Out::Ppl(mi, p) => ppl[mi] = p,
+            Out::Partial(gi, parts) => {
+                let acc = sums.get_mut(&gi).expect("group registered");
+                for (a, p) in acc.iter_mut().zip(parts) {
+                    a.0 += p.0;
+                    a.1 += p.1;
+                }
+            }
+        }
+    }
+    for (gi, group) in groups.iter().enumerate() {
+        if group.len() > 1 {
+            for (slot, &mi) in sums[&gi].iter().zip(group) {
+                ppl[mi] = (slot.0 / slot.1.max(1.0)).exp();
+            }
+        }
+    }
+    ppl
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::coordinator::QuantizerSpec;
+    use crate::model::synth::synth_lm_params;
+    use crate::model::Params;
+    use crate::quant::QuantCtx;
+    use crate::serve::QuantBase;
+    use crate::util::{prop, Rng};
+
+    use super::super::ppl::perplexity_native;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 48,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 96,
+            seq_len: 8,
+        }
+    }
+
+    /// Factored outcomes over `params`: one model per rank, every rank
+    /// sharing the same freshly quantized base per linear (the sweep
+    /// engine's layout).
+    fn rank_variants(
+        params: &Params,
+        cfg: &ModelCfg,
+        spec: QuantizerSpec,
+        ranks: &[usize],
+        seed: u64,
+        rng: &mut Rng,
+    ) -> Vec<FactoredModel> {
+        let names = Params::linear_names(cfg);
+        // one shared base per linear
+        let bases: Vec<(String, QuantBase)> = names
+            .iter()
+            .map(|n| {
+                let w = params.get_mat(n).expect("linear");
+                let ctx = QuantCtx { hessian: None, seed };
+                let (_, packed) = spec.build().quantize_coded(&w, &ctx);
+                (n.clone(), QuantBase::Packed(Arc::new(packed.expect("packable"))))
+            })
+            .collect();
+        ranks
+            .iter()
+            .map(|&rank| {
+                let mut skeleton = params.clone();
+                let ops: Vec<(String, LinearOp)> = bases
+                    .iter()
+                    .map(|(n, base)| {
+                        skeleton.unset(n);
+                        let (m, k) = (base.rows(), base.cols());
+                        let op = LinearOp::FactoredQlr {
+                            base: base.clone(),
+                            l: Mat::randn(m, rank, 0.05, rng),
+                            r: Mat::randn(rank, k, 0.05, rng),
+                        };
+                        (n.clone(), op)
+                    })
+                    .collect();
+                FactoredModel { skeleton, ops }
+            })
+            .collect()
+    }
+
+    /// Satellite property: fleet PPL matches the per-outcome
+    /// `perplexity_native` loop to ≤ 1e-6 across all three packed
+    /// families, ranks {0, 16, 64}, and mixed group sizes — including a
+    /// group of one, which must take the single-outcome path.
+    #[test]
+    fn prop_fleet_matches_per_outcome_ppl() {
+        prop::check(0xF1EE7BA7, 4, |g| {
+            let cfg = tiny_cfg();
+            let params = synth_lm_params(&cfg, 100 + g.rng.next_u64() % 50, cfg.vocab);
+            let ranks = [0usize, 16, 64];
+            let families = [
+                QuantizerSpec::Mxint { bits: 3, block: 32 },
+                QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: false },
+                QuantizerSpec::Gptq { bits: 3, group: 32 },
+            ];
+            let mut models: Vec<FactoredModel> = Vec::new();
+            for (fi, spec) in families.iter().enumerate() {
+                models.extend(rank_variants(
+                    &params,
+                    &cfg,
+                    *spec,
+                    &ranks,
+                    fi as u64,
+                    &mut g.rng,
+                ));
+            }
+            // a singleton: same family as group 0 but its own buffers,
+            // so pointer-grouping must keep it apart
+            models.extend(rank_variants(&params, &cfg, families[0], &[16], 99, &mut g.rng));
+
+            let refs: Vec<&FactoredModel> = models.iter().collect();
+            let groups = group_by_shared_bases(&refs);
+            let mut sizes: Vec<usize> = groups.iter().map(|gr| gr.len()).collect();
+            sizes.sort_unstable();
+            assert_eq!(sizes, vec![1, 3, 3, 3], "grouping by shared buffers");
+
+            let b = 1 + g.dim(2); // 2..3 sequences
+            let t = cfg.seq_len;
+            let n_batches = g.dim(3);
+            let batches: Vec<Vec<i32>> = (0..n_batches)
+                .map(|_| (0..b * t).map(|_| g.rng.below(cfg.vocab) as i32).collect())
+                .collect();
+
+            let fleet = fleet_perplexity(&refs, &cfg, &batches, b, t);
+            for (i, m) in refs.iter().enumerate() {
+                let solo = perplexity_native(*m, &cfg, &batches, b, t);
+                assert!(
+                    (fleet[i] - solo).abs() <= 1e-6,
+                    "model {i}: fleet {} vs per-outcome {solo}",
+                    fleet[i]
+                );
+            }
+
+            // dedup accounting: 10 models, 4 distinct buffer sets
+            let fp = fleet_footprint(&refs);
+            assert_eq!(fp.groups, 4);
+            assert!(fp.unique_base_bytes * 2 < fp.total_base_bytes);
+        });
+    }
+
+    #[test]
+    fn singleton_group_of_dense_ops_never_groups() {
+        let cfg = tiny_cfg();
+        let params = synth_lm_params(&cfg, 7, cfg.vocab);
+        let w = params.get_mat("l0.wq").unwrap();
+        let mk = || {
+            let mut skeleton = params.clone();
+            skeleton.unset("l0.wq");
+            FactoredModel {
+                skeleton,
+                ops: vec![("l0.wq".into(), LinearOp::Dense(w.clone()))],
+            }
+        };
+        let (a, b) = (mk(), mk());
+        let refs: Vec<&FactoredModel> = vec![&a, &b];
+        assert_eq!(group_by_shared_bases(&refs).len(), 2);
+    }
+
+    #[test]
+    fn empty_batches_yield_unit_ppl() {
+        let cfg = tiny_cfg();
+        let params = synth_lm_params(&cfg, 9, cfg.vocab);
+        let mut rng = Rng::new(4);
+        let models = rank_variants(
+            &params,
+            &cfg,
+            QuantizerSpec::Mxint { bits: 3, block: 32 },
+            &[0, 16],
+            1,
+            &mut rng,
+        );
+        let refs: Vec<&FactoredModel> = models.iter().collect();
+        let ppl = fleet_perplexity(&refs, &cfg, &[], 2, cfg.seq_len);
+        assert_eq!(ppl, vec![1.0, 1.0]);
+    }
+}

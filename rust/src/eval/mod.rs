@@ -1,21 +1,32 @@
-//! Evaluation engines over the PJRT artifacts.
+//! Evaluation engines: perplexity (PJRT and rust-native), zero-shot,
+//! GLUE-sim, GSM-sim — plus the fleet evaluator for sweep outcomes.
 //!
 //! * [`ppl`] — perplexity on a held-out corpus via the `lm_nll_*`
 //!   artifact (WikiText2 / SlimPajama analog), plus the rust-native
-//!   [`ppl::perplexity_native`] that evaluates any `ModelWeights` —
-//!   including the factored QLR serving model — without PJRT.
+//!   [`ppl::perplexity_native`] that evaluates any
+//!   [`ModelWeights`](crate::model::ModelWeights) — including the
+//!   factored QLR serving model
+//!   ([`FactoredModel`](crate::serve::FactoredModel)) — without PJRT.
+//! * [`fleet`] — lock-step batched PPL over many sweep outcomes:
+//!   outcomes sharing `Arc`-shared packed bases are grouped by buffer
+//!   identity and forwarded together, decoding each base once per group
+//!   per batch ([`fleet::fleet_perplexity`]).
 //! * [`zeroshot`] — option-ranking accuracy over the five probe tasks
 //!   (lm-eval protocol: argmin per-option NLL).
 //! * [`glue`] — GLUE-sim metric computation from classifier logits
 //!   (accuracy / Matthews / Pearson+Spearman per task).
 //! * [`gsm`] — teacher-forced exact-match on the arithmetic task.
 
+pub mod fleet;
 pub mod ppl;
 pub mod zeroshot;
 pub mod glue;
 pub mod gsm;
 
+pub use fleet::{
+    fleet_footprint, fleet_perplexity, group_by_shared_bases, FleetFootprint, FleetGroup,
+};
 pub use glue::glue_score;
 pub use gsm::gsm_exact_match;
-pub use ppl::{perplexity, perplexity_native};
+pub use ppl::{perplexity, perplexity_native, perplexity_native_masked};
 pub use zeroshot::zero_shot_accuracy;

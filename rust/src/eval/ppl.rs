@@ -2,12 +2,18 @@
 //!
 //! * [`perplexity`] — through the `lm_nll_<model>` PJRT artifact (all
 //!   masking on-device). The weight tensors are marshalled once; each
-//!   batch only appends its token/mask tensors (no per-batch re-clone of
-//!   the full flattened params).
+//!   batch only overwrites the token slot (no per-batch re-clone of the
+//!   full flattened params), and the all-ones mask tensor is built once
+//!   per run, not once per batch.
 //! * [`perplexity_native`] — pure rust over any
 //!   [`ModelWeights`](crate::model::ModelWeights): dense params or the
-//!   factored QLR serving model (`serve::FactoredModel`), which streams
-//!   its packed bases — PPL without PJRT and without densifying `W_hat`.
+//!   factored QLR serving model
+//!   ([`FactoredModel`](crate::serve::FactoredModel)), which streams its
+//!   packed bases — PPL without PJRT and without densifying `W_hat`.
+//!   [`perplexity_native_masked`] is the same engine with the mask
+//!   hoisted by the caller; the fleet evaluator
+//!   ([`crate::eval::fleet`]) shares one mask allocation across every
+//!   outcome it scores.
 
 use anyhow::Result;
 
@@ -26,14 +32,15 @@ pub fn perplexity(
     t: usize,
 ) -> Result<f64> {
     let mut inputs = params.flat()?;
-    let base_len = inputs.len();
+    let tok_slot = inputs.len();
+    // marshal the weights once; reserve a token slot that each batch
+    // overwrites, and build the all-ones mask once for the whole run
+    inputs.push(TensorValue::i32(vec![b, t], vec![0; b * t]));
+    inputs.push(TensorValue::f32(vec![b, t], vec![1.0; b * t]));
     let mut total_nll = 0.0f64;
     let mut total_tok = 0.0f64;
     for batch in batches {
-        // reuse the marshalled weights; swap only the per-batch tensors
-        inputs.truncate(base_len);
-        inputs.push(TensorValue::i32(vec![b, t], batch.clone()));
-        inputs.push(TensorValue::f32(vec![b, t], vec![1.0; b * t]));
+        inputs[tok_slot] = TensorValue::i32(vec![b, t], batch.clone());
         let outs = exec.run(artifact, &inputs)?;
         total_nll += outs[0].as_f32().iter().map(|&x| x as f64).sum::<f64>();
         total_tok += outs[1].as_f32().iter().map(|&x| x as f64).sum::<f64>();
@@ -50,11 +57,25 @@ pub fn perplexity_native(
     b: usize,
     t: usize,
 ) -> f64 {
-    let mask = vec![1.0f32; b * t];
+    perplexity_native_masked(weights, cfg, batches, &vec![1.0f32; b * t], b, t)
+}
+
+/// [`perplexity_native`] with the (all-ones) mask allocated by the
+/// caller, so loops that score many models over the same batches — the
+/// fleet evaluator, the serving benches — share one allocation instead
+/// of re-building it per call.
+pub fn perplexity_native_masked(
+    weights: &dyn ModelWeights,
+    cfg: &ModelCfg,
+    batches: &[Vec<i32>],
+    mask: &[f32],
+    b: usize,
+    t: usize,
+) -> f64 {
     let mut total_nll = 0.0f64;
     let mut total_tok = 0.0f64;
     for batch in batches {
-        let (nll, cnt) = lm_nll_with(weights, cfg, batch, &mask, b, t);
+        let (nll, cnt) = lm_nll_with(weights, cfg, batch, mask, b, t);
         total_nll += nll.iter().sum::<f64>();
         total_tok += cnt.iter().sum::<f64>();
     }

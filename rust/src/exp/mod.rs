@@ -72,6 +72,11 @@ pub fn registry() -> Vec<ExpEntry> {
             "§Perf factored QLR serving vs densified dense path (writes BENCH_serve.json)",
             perf::serve_bench,
         ),
+        offline(
+            "evalbatch",
+            "§Perf fleet evaluator vs per-outcome PPL loops (writes BENCH_evalbatch.json)",
+            perf::evalbatch_bench,
+        ),
     ]
 }
 
@@ -106,6 +111,7 @@ mod tests {
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
             "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep", "serve",
+            "evalbatch",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
@@ -115,6 +121,7 @@ mod tests {
     fn sweep_is_offline_capable_and_ppl_experiments_are_not() {
         assert!(offline_ok("sweep"));
         assert!(offline_ok("serve"));
+        assert!(offline_ok("evalbatch"));
         assert!(!offline_ok("table1"));
         assert!(!offline_ok("nonexistent"));
     }

@@ -1,23 +1,26 @@
 //! Performance experiments: Table 11 (coordinator overhead accounting),
 //! the §Perf hot-path benches (kernel parity timings, PJRT engine
 //! throughput, linalg primitives, fused-QLR serving path), the sweep
-//! engine's shared-work speedup measurement (`BENCH_sweep.json`), and
-//! the factored-vs-dense serving comparison (`BENCH_serve.json`).
+//! engine's shared-work speedup measurement (`BENCH_sweep.json`), the
+//! factored-vs-dense serving comparison (`BENCH_serve.json`), and the
+//! fleet-vs-per-outcome eval comparison (`BENCH_evalbatch.json`).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::{
-    run_ptq, run_ptq_factored, run_sweep, Metrics, QuantizerSpec, SweepConfig, SweepRunner,
+    run_ptq, run_ptq_factored, run_sweep, run_sweep_factored, Metrics, QuantizerSpec,
+    SweepConfig, SweepRunner,
 };
-use crate::eval::perplexity_native;
+use crate::eval::{fleet_footprint, fleet_perplexity, perplexity_native, perplexity_native_masked};
 use crate::linalg::{eigh, jacobi_svd, randomized_svd};
 use crate::qer::{reconstruct, Method, QerConfig};
 use crate::quant::{MxintQuantizer, QuantCtx, Quantizer};
 use crate::runtime::{Executor, TensorValue};
 use crate::scaling::{Scaling, ScalingKind};
-use crate::serve::{LinearOp, QuantBase};
+use crate::serve::{FactoredModel, LinearOp, QuantBase};
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Mat};
 use crate::util::bench::{self, f, time_fn, Table};
 use crate::util::json::Json;
@@ -353,7 +356,7 @@ pub fn serve_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let l = Mat::randn(big, rank, 0.05, &mut rng);
     let r = Mat::randn(rank, big, 0.05, &mut rng);
     let dense_op = LinearOp::Dense(qdeq.add(&matmul(&l, &r)));
-    let fact_op = LinearOp::FactoredQlr { base: QuantBase::Packed(packed), l, r };
+    let fact_op = LinearOp::FactoredQlr { base: QuantBase::Packed(Arc::new(packed)), l, r };
     let bytes_dense = dense_op.bytes();
     let bytes_fact = fact_op.bytes();
     anyhow::ensure!(bytes_fact < bytes_dense, "packed layer must be smaller");
@@ -428,6 +431,149 @@ pub fn serve_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     ]);
     bench::write_json("BENCH_serve.json", &record)?;
     Ok(tables)
+}
+
+/// §Perf evalbatch: the fleet evaluator against the per-outcome
+/// `perplexity_native` loop, recorded into `BENCH_evalbatch.json`.
+///
+/// A sweep grid of w-only + plain-QER rank/scaling variants reuses one
+/// cached k=0 quantization per (quantizer, seed) cell, so all those
+/// outcomes carry pointer-identical `Arc`-shared packed bases; one extra
+/// SRR config quantizes its own base and must stay a singleton. The
+/// eval stream is serving-shaped — single-sequence batches over a short
+/// context — the regime where the per-outcome loop re-pays the packed
+/// base decode (and the per-forward fixed costs) hardest. The bench
+/// asserts PPL equivalence (≤ 1e-6 per outcome) between the two paths
+/// and records tokens/sec plus the packed-buffer dedup.
+pub fn evalbatch_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+
+    // w-only + QER ranks × scalings: all 13 reuse the cached k=0
+    // quantization, so they form one shared-base lock-step group …
+    let mut configs = vec![SweepConfig::new(quant, Method::WOnly, 0, ScalingKind::Identity)];
+    for kind in [ScalingKind::DiagRms, ScalingKind::DiagAbsMean, ScalingKind::Exact] {
+        for rank in [2usize, 4, 8, 16] {
+            configs.push(SweepConfig::new(quant, Method::Qer, rank, kind));
+        }
+    }
+    // … plus one SRR outcome with its own quantized base (a singleton
+    // group, exercising the mixed-grid path)
+    configs.push(SweepConfig::new(quant, Method::QerSrr, 8, ScalingKind::DiagRms));
+
+    let metrics = Metrics::new();
+    let outs = run_sweep_factored(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
+    let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    let fp = fleet_footprint(&models);
+    anyhow::ensure!(
+        fp.groups == 2,
+        "expected one shared-base group + one SRR singleton, got {} groups",
+        fp.groups
+    );
+
+    // serving-shaped scoring stream: b=1 sequences, short context
+    let (b_ev, t_ev) = (1usize, 12usize.min(fx.cfg.seq_len));
+    let n_batches = if ctx.quick { 4 } else { 8 };
+    let batches: Vec<Vec<i32>> =
+        (0..n_batches).map(|i| fx.corpus.train_batch(b_ev, t_ev, 70_000 + i)).collect();
+    let mask = vec![1.0f32; b_ev * t_ev];
+
+    // correctness gate before timing: fleet PPL ≡ per-outcome PPL
+    let solo: Vec<f64> = models
+        .iter()
+        .map(|m| perplexity_native_masked(*m, &fx.cfg, &batches, &mask, b_ev, t_ev))
+        .collect();
+    let fleet = fleet_perplexity(&models, &fx.cfg, &batches, b_ev, t_ev);
+    for (i, (a, bppl)) in solo.iter().zip(&fleet).enumerate() {
+        anyhow::ensure!(
+            (a - bppl).abs() <= 1e-6,
+            "{}: fleet ppl {bppl} vs per-outcome {a}",
+            configs[i].label
+        );
+    }
+
+    let iters = if ctx.quick { 2 } else { 5 };
+    let t_solo = time_fn("per-outcome ppl loop", 1, iters, || {
+        models
+            .iter()
+            .map(|m| perplexity_native_masked(*m, &fx.cfg, &batches, &mask, b_ev, t_ev))
+            .collect::<Vec<f64>>()
+    });
+    let t_fleet = time_fn("fleet ppl", 1, iters, || {
+        fleet_perplexity(&models, &fx.cfg, &batches, b_ev, t_ev)
+    });
+
+    let scored_toks = (models.len() * batches.len() * b_ev * (t_ev - 1)) as f64;
+    let tps_solo = scored_toks / (t_solo.mean_ns / 1e9);
+    let tps_fleet = scored_toks / (t_fleet.mean_ns / 1e9);
+    let speedup = t_solo.mean_ns / t_fleet.mean_ns;
+
+    let mut t = Table::new(
+        &format!(
+            "§Perf evalbatch — fleet vs per-outcome PPL ({} outcomes, {} groups, b={b_ev} \
+             t={t_ev}, recorded in BENCH_evalbatch.json)",
+            models.len(),
+            fp.groups
+        ),
+        &["path", "mean ms", "tokens/s", "speedup"],
+    );
+    t.row(vec![
+        "per-outcome perplexity_native loop".into(),
+        f(t_solo.mean_ms(), 2),
+        f(tps_solo, 0),
+        "x1.00 (ref)".into(),
+    ]);
+    t.row(vec![
+        "fleet (lock-step groups)".into(),
+        f(t_fleet.mean_ms(), 2),
+        f(tps_fleet, 0),
+        format!("x{speedup:.2}"),
+    ]);
+    t.row(vec![
+        "packed bases resident".into(),
+        format!("{} bytes", fp.unique_base_bytes),
+        format!("{} unshared", fp.total_base_bytes),
+        format!(
+            "x{:.2} dedup",
+            fp.total_base_bytes as f64 / fp.unique_base_bytes.max(1) as f64
+        ),
+    ]);
+
+    let record = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("quick", Json::Bool(ctx.quick)),
+        ("grid", Json::arr(configs.iter().map(|c| Json::str(c.label.clone())).collect())),
+        ("outcomes", Json::num(models.len() as f64)),
+        ("groups", Json::num(fp.groups as f64)),
+        ("eval_b", Json::num(b_ev as f64)),
+        ("eval_t", Json::num(t_ev as f64)),
+        ("eval_batches", Json::num(batches.len() as f64)),
+        ("scored_tokens", Json::num(scored_toks)),
+        ("per_outcome_ms", Json::num(t_solo.mean_ms())),
+        ("fleet_ms", Json::num(t_fleet.mean_ms())),
+        ("per_outcome_tokens_per_sec", Json::num(tps_solo)),
+        ("fleet_tokens_per_sec", Json::num(tps_fleet)),
+        ("fleet_speedup_x", Json::num(speedup)),
+        ("ppl_equivalent_1e6", Json::Bool(true)),
+        (
+            "ppl_max_abs_diff",
+            Json::num(
+                solo.iter()
+                    .zip(&fleet)
+                    .map(|(a, bppl)| (a - bppl).abs())
+                    .fold(0.0f64, f64::max),
+            ),
+        ),
+        ("peak_packed_bytes_shared", Json::num(fp.unique_base_bytes as f64)),
+        ("peak_packed_bytes_per_outcome", Json::num(fp.total_base_bytes as f64)),
+        (
+            "packed_dedup_x",
+            Json::num(fp.total_base_bytes as f64 / fp.unique_base_bytes.max(1) as f64),
+        ),
+    ]);
+    bench::write_json("BENCH_evalbatch.json", &record)?;
+    Ok(vec![t])
 }
 
 /// §Perf suite: the per-layer hot paths.

@@ -1,8 +1,8 @@
 //! PTQ experiments: Tables 1, 2, 5, 15, 16 and Figure 7.
 //!
 //! Every grid-shaped experiment drives the shared-work
-//! [`run_sweep`] engine: one pass over the model computes the per-layer
-//! scalings / spectra / quantizations once and fans the whole
+//! [`run_sweep_factored`] engine: one pass over the model computes the
+//! per-layer scalings / spectra / quantizations once and fans the whole
 //! `(method, rank, scaling, seed)` grid out over the worker pool.
 //! Bit-identity to the per-config `run_ptq` path holds at *matched*
 //! prep rank (verified by `perf::sweep_bench`); cells below the grid's
@@ -10,17 +10,26 @@
 //! sketching at their own rank, so their recorded numbers shift
 //! slightly versus the pre-sweep protocol (same algorithm, wider
 //! randomized-SVD sketch).
+//!
+//! PPL grids score through the **fleet evaluator**
+//! (`eval::fleet::fleet_perplexity`): outcomes sharing packed bases
+//! (every rank/scaling variant of a `(quantizer, seed)` cell) forward in
+//! one lock-step pass, decoding each base once per group per batch —
+//! rust-native, no PJRT, no densified `W_hat` (speedup recorded by
+//! `perf::evalbatch_bench` into `BENCH_evalbatch.json`). The BF16
+//! reference rows use the same rust-native engine for consistency.
 
 use anyhow::Result;
 
-use crate::coordinator::{run_sweep, Metrics, PtqOutcome, QuantizerSpec, SweepConfig};
+use crate::coordinator::{run_sweep, run_sweep_factored, Metrics, QuantizerSpec, SweepConfig};
 use crate::data::zeroshot::ZeroShotTask;
-use crate::eval::{perplexity, zero_shot_accuracy};
+use crate::eval::{fleet_perplexity, perplexity_native, zero_shot_accuracy};
 use crate::linalg::effective_rank;
-use crate::model::Params;
+use crate::model::{ModelWeights, Params};
 use crate::qer::Method;
 use crate::runtime::Executor;
 use crate::scaling::ScalingKind;
+use crate::serve::FactoredModel;
 use crate::util::bench::{f, pm, Table};
 use crate::util::stats;
 
@@ -42,28 +51,32 @@ pub fn models_for(_ctx: &ExpCtx) -> Vec<&'static str> {
     vec!["tiny"]
 }
 
-fn ppl_of(
-    ctx: &mut ExpCtx,
-    model: &str,
-    params: &Params,
-) -> Result<f64> {
+/// Rust-native PPL of one model (dense params or a factored outcome) on
+/// the held-out batches — the same engine the fleet evaluator uses, so
+/// reference rows and grid rows are comparable.
+fn native_ppl(ctx: &mut ExpCtx, model: &str, weights: &dyn ModelWeights) -> Result<f64> {
+    let fx = ctx.lm(model)?;
     let batches = ctx.ppl_batches(model)?;
     let b = ctx.engine.manifest().lm_batch;
-    let t = ctx.engine.manifest().model(model)?.seq_len;
-    perplexity(&ctx.engine, &format!("lm_nll_{model}"), params, &batches, b, t)
+    Ok(perplexity_native(weights, &fx.cfg, &batches, b, fx.cfg.seq_len))
 }
 
-/// Run a grid over `model` in one shared-work pass, then PPL each
-/// outcome. Returns PPLs aligned with `configs`.
+/// Run a grid over `model` in one shared-work pass, then score every
+/// outcome through the fleet evaluator in one lock-step batch — shared
+/// packed bases are decoded once per group per eval batch instead of
+/// once per outcome. Returns PPLs aligned with `configs`.
 fn sweep_ppls(
     ctx: &mut ExpCtx,
     model: &str,
     configs: &[SweepConfig],
 ) -> Result<Vec<f64>> {
     let fx = ctx.lm(model)?;
+    let batches = ctx.ppl_batches(model)?;
+    let b = ctx.engine.manifest().lm_batch;
     let metrics = Metrics::new();
-    let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, configs, &metrics);
-    outs.iter().map(|o| ppl_of(ctx, model, &o.params)).collect()
+    let outs = run_sweep_factored(&fx.params, &fx.cfg, &fx.calib, configs, &metrics);
+    let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    Ok(fleet_perplexity(&models, &fx.cfg, &batches, b, fx.cfg.seq_len))
 }
 
 fn mean_std(xs: &[f64]) -> (f64, f64) {
@@ -116,7 +129,7 @@ pub fn table1(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
             &["method", "r=4", "r=8"],
         );
         let fx = ctx.lm(model)?;
-        let bf16 = ppl_of(ctx, model, &fx.params.clone())?;
+        let bf16 = native_ppl(ctx, model, &fx.params)?;
         t.row(vec!["BF16".into(), f(bf16, 2), f(bf16, 2)]);
         t.row(vec!["w-only".into(), f(ppls[0], 2), f(ppls[0], 2)]);
 
@@ -239,7 +252,7 @@ pub fn table5(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         &["method", "GPTQ(2-bit)", "QuIP#-sim(2-bit)"],
     );
     let fx = ctx.lm(model)?;
-    let bf16 = ppl_of(ctx, model, &fx.params.clone())?;
+    let bf16 = native_ppl(ctx, model, &fx.params)?;
     t.row(vec!["BF16".into(), f(bf16, 2), f(bf16, 2)]);
     let mut wrow = vec!["w-only".into()];
     for &i in &wonly_idx {
@@ -332,8 +345,9 @@ pub fn fig7(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         SweepConfig::new(quant, Method::Qer, 8, ScalingKind::Identity),
         SweepConfig::new(quant, Method::QerSrr, 8, ScalingKind::Identity),
     ];
-    let outs = run_sweep(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
-    let (qer, srr): (&PtqOutcome, &PtqOutcome) = (&outs[0], &outs[1]);
+    // reports only — stay on the factored outcomes, no densified W_hat
+    let outs = run_sweep_factored(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics);
+    let (qer, srr) = (&outs[0], &outs[1]);
     let mut t = Table::new(
         &format!("Fig. 7 analog — layer-wise |W-Q-LR|_F under ZeroQuant-V2 (S=I), r=8, model={model}"),
         &["layer", "QER", "SRR", "winner"],

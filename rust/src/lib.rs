@@ -33,6 +33,9 @@
 //!   `Qdeq·x + L·(R·x)` by streaming dequant over bit-packed codes
 //!   (`quant::packed`), never materializing `W_hat`; `FactoredModel`
 //!   carries a whole model 4–8× smaller than dense f32 at 2–4 bits.
+//!   `QuantBase` buffers are `Arc`-shared, so sweep rank variants alias
+//!   one packed base and `LinearOp::matmul_grouped` decodes it once for
+//!   a whole lock-step group.
 //! * [`coordinator`] — the multi-threaded layer-pipeline orchestrator:
 //!   single-config `run_ptq_factored` (dense `run_ptq` kept as the
 //!   compatibility wrapper), plus the shared-work grid engine
@@ -42,7 +45,10 @@
 //!   multi-model serving plugs into.
 //! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines;
 //!   `perplexity_native` evaluates any `ModelWeights` (including the
-//!   factored model) without PJRT.
+//!   factored model) without PJRT, and `eval::fleet` scores whole sweep
+//!   grids in lock-step: outcomes grouped by shared packed bases
+//!   forward together, one base decode per group per batch
+//!   (`BENCH_evalbatch.json` records the speedup).
 //! * [`qpeft`] — adapter fine-tuning: AdamW, γ gradient scaling, SGP;
 //!   the frozen backbone stays packed (`FrozenTensor`), dequantized only
 //!   at artifact-marshal time.

@@ -4,6 +4,7 @@
 //!   info                       — artifact/model inventory
 //!   ptq    [--model --method --scaling --quantizer --rank --seed]
 //!                              — quantize a model, report per-layer stats + PPL
+//!                                (runs offline: rust-native factored eval)
 //!   qpeft  [--task --init --bits --steps --gamma]
 //!                              — fine-tune adapters on a GLUE-sim task
 //!   bench  [ids… | --list] [--quick]
@@ -14,9 +15,9 @@
 
 use anyhow::Result;
 
-use srr::coordinator::{run_ptq, Metrics, RunConfig};
+use srr::coordinator::{run_ptq_factored, Metrics, RunConfig};
 use srr::data::glue_sim::GlueTask;
-use srr::eval::{glue_score, perplexity};
+use srr::eval::{glue_score, perplexity_native};
 use srr::exp::{registry, ExpCtx};
 use srr::qpeft::{init_qpeft, GradScale, QpeftInit, QpeftTrainer};
 use srr::runtime::{Engine, Executor, TensorValue};
@@ -76,7 +77,15 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_ptq(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args)?;
-    let mut ctx = ExpCtx::new(args.has_flag("quick"))?;
+    // no artifacts? fall back to the embedded offline manifest — the
+    // factored pipeline and the rust-native PPL below need no PJRT
+    let mut ctx = match ExpCtx::new(args.has_flag("quick")) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("[no artifacts ({e:#}); offline mode — untrained synthetic fixture]");
+            ExpCtx::offline(args.has_flag("quick"))?
+        }
+    };
     ctx.seed = cfg.seed;
     println!(
         "PTQ: model={} method={} scaling={:?} quantizer={} rank={}",
@@ -90,7 +99,7 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     let metrics = Metrics::new();
     let mut qcfg = srr::qer::QerConfig::new(cfg.method, cfg.rank, cfg.scaling);
     qcfg.seed = cfg.seed;
-    let out = run_ptq(&fx.params, &fx.cfg, &fx.calib, cfg.quantizer, &qcfg, &metrics);
+    let out = run_ptq_factored(&fx.params, &fx.cfg, &fx.calib, cfg.quantizer, &qcfg, &metrics);
     println!("\nper-layer:");
     for r in &out.reports {
         println!(
@@ -105,12 +114,16 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     let b = ctx.engine.manifest().lm_batch;
     let t = fx.cfg.seq_len;
     let batches = ctx.ppl_batches(&cfg.model)?;
-    let artifact = format!("lm_nll_{}", cfg.model);
-    let bf16 = perplexity(&ctx.engine, &artifact, &fx.params.clone(), &batches, b, t)?;
-    let ppl = perplexity(&ctx.engine, &artifact, &out.params, &batches, b, t)?;
+    // rust-native eval: the BF16 reference densely, the outcome straight
+    // through its factored serving form (packed bases never densified)
+    let bf16 = perplexity_native(&fx.params, &fx.cfg, &batches, b, t);
+    let ppl = perplexity_native(&out.model, &fx.cfg, &batches, b, t);
     println!(
-        "\nBF16 PPL = {bf16:.3}   quantized PPL = {ppl:.3}   mean k* = {:.1}",
-        out.mean_k_star()
+        "\nBF16 PPL = {bf16:.3}   quantized PPL = {ppl:.3}   mean k* = {:.1}   \
+         serving bytes = {} (dense {})",
+        out.mean_k_star(),
+        out.model.linear_bytes(),
+        out.model.dense_linear_bytes()
     );
     println!("\n{}", metrics.report());
     Ok(())

@@ -241,6 +241,143 @@ pub fn lm_nll(
     lm_nll_with(params, cfg, tokens, mask, b, t)
 }
 
+/// Weight access for a lock-step *fleet* forward: `group_size()` models
+/// evaluated simultaneously over vertically stacked activations.
+///
+/// The stacked activation matrix hands member `g` rows
+/// `[g·rows, (g+1)·rows)`; [`FleetWeights::linear_stacked`] applies each
+/// member's weight to its own block — the factored serving
+/// implementation (`eval::fleet::FleetGroup`) dispatches the whole stack
+/// through one `serve::LinearOp::matmul_grouped` call so a shared packed
+/// base is decoded once per group. Non-linear parameters (`vec` / `mat`)
+/// are shared by construction: a fleet group only ever contains outcomes
+/// of one sweep over one model.
+pub trait FleetWeights {
+    /// Number of models evaluated in lock-step.
+    fn group_size(&self) -> usize;
+    /// y = x·W_g per member block of the stacked `x`.
+    fn linear_stacked(&self, name: &str, x: &Mat) -> Mat;
+    /// A 1-D parameter (rmsnorm weights), shared across members.
+    fn vec(&self, name: &str) -> &[f32];
+    /// A dense 2-D parameter (embedding table / head), shared across
+    /// members.
+    fn mat(&self, name: &str) -> Mat;
+}
+
+/// The lock-step fleet forward: one pass evaluates `group_size()` models
+/// on the *same* tokens, carrying all members' activations stacked in
+/// one matrix (member `g` owns sequences `[g·b, (g+1)·b)`).
+///
+/// Per member, bit-identical to [`forward_with`] on that member alone
+/// whenever both runs take the batched base-matmul path (`b·t > 1`):
+/// every stage — rmsnorm, attention, swiglu, the head — is row- or
+/// sequence-local, and the grouped linear preserves per-row summation
+/// order. Returns stacked logits (`group·b·t`, head_dim).
+pub fn forward_fleet(
+    weights: &dyn FleetWeights,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    causal: bool,
+) -> Mat {
+    assert_eq!(tokens.len(), b * t);
+    let g = weights.group_size();
+    let embed = weights.mat("embed");
+    let d = cfg.d_model;
+    // every member sees the same tokens: embed once, replicate G times
+    let mut x = Mat::zeros(g * b * t, d);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(embed.row(tok as usize));
+    }
+    let block = b * t * d;
+    for gi in 1..g {
+        x.data.copy_within(0..block, gi * block);
+    }
+    let gb = g * b; // stacked sequence count
+
+    for layer in 0..cfg.n_layers {
+        let name = |k: &str| format!("l{layer}.{k}");
+        let h = rmsnorm(&x, weights.vec(&name("ln1")));
+        let q = weights.linear_stacked(&name("wq"), &h);
+        let k = weights.linear_stacked(&name("wk"), &h);
+        let v = weights.linear_stacked(&name("wv"), &h);
+        let a = attention(&q, &k, &v, cfg, gb, t, causal);
+        let o = weights.linear_stacked(&name("wo"), &a);
+        x = x.add(&o);
+
+        let h2 = rmsnorm(&x, weights.vec(&name("ln2")));
+        let gate = weights.linear_stacked(&name("gate"), &h2);
+        let u = weights.linear_stacked(&name("up"), &h2);
+        let mut m = Mat::zeros(gate.rows, gate.cols);
+        for i in 0..gate.data.len() {
+            m.data[i] = silu(gate.data[i]) * u.data[i];
+        }
+        let dn = weights.linear_stacked(&name("down"), &m);
+        x = x.add(&dn);
+    }
+
+    let xf = rmsnorm(&x, weights.vec("norm_f"));
+    matmul(&xf, &weights.mat("head"))
+}
+
+/// Masked NLL of one predicted position: `-log softmax(row)[target]`
+/// weighted by `mk`. Shared by the single-model and fleet NLL loops —
+/// the fleet evaluator's ≤1e-6 equivalence gate depends on both paths
+/// computing the identical float expression, so there is exactly one
+/// copy of it. (`-(a)·b` and `x + (-y)` are IEEE-exact rewrites of the
+/// historical `x - a·b` accumulation.)
+#[inline]
+fn row_nll(row: &[f32], target: usize, mk: f32) -> f64 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let z: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+    let logp = (row[target] - m) - z.ln();
+    -(logp as f64) * mk as f64
+}
+
+/// Lock-step NLL: per-member `(Σ nll, Σ tokens)` for one token batch,
+/// all members forwarded together through [`forward_fleet`].
+///
+/// The per-sequence math and accumulation order mirror [`lm_nll_with`] +
+/// `eval::ppl::perplexity_native` exactly, so a member's sums equal the
+/// single-model path's bit for bit (same batched-path caveat as
+/// [`forward_fleet`]).
+pub fn lm_nll_fleet(
+    weights: &dyn FleetWeights,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    mask: &[f32],
+    b: usize,
+    t: usize,
+) -> Vec<(f64, f64)> {
+    let g = weights.group_size();
+    // logits over the first t-1 positions predict tokens 1..t
+    let inputs: Vec<i32> = (0..b)
+        .flat_map(|bi| tokens[bi * t..bi * t + t - 1].to_vec())
+        .collect();
+    let logits = forward_fleet(weights, cfg, &inputs, b, t - 1, true);
+    let mut out = vec![(0.0f64, 0.0f64); g];
+    for (gi, slot) in out.iter_mut().enumerate() {
+        for bi in 0..b {
+            let mut nll = 0.0f64;
+            let mut cnt = 0.0f64;
+            for pos in 0..t - 1 {
+                let mk = mask[bi * t + pos + 1];
+                if mk == 0.0 {
+                    continue;
+                }
+                let row = logits.row((gi * b + bi) * (t - 1) + pos);
+                let target = tokens[bi * t + pos + 1] as usize;
+                nll += row_nll(row, target, mk);
+                cnt += mk as f64;
+            }
+            slot.0 += nll;
+            slot.1 += cnt;
+        }
+    }
+    out
+}
+
 /// NLL over any [`ModelWeights`] — the rust-native factored PPL path.
 pub fn lm_nll_with(
     weights: &dyn ModelWeights,
@@ -265,10 +402,7 @@ pub fn lm_nll_with(
             }
             let row = logits.row(bi * (t - 1) + pos);
             let target = tokens[bi * t + pos + 1] as usize;
-            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-            let z: f32 = row.iter().map(|&x| (x - m).exp()).sum();
-            let logp = (row[target] - m) - z.ln();
-            nll[bi] -= (logp as f64) * mk as f64;
+            nll[bi] += row_nll(row, target, mk);
             cnt[bi] += mk as f64;
         }
     }
@@ -352,6 +486,61 @@ mod tests {
             assert_eq!(x.rows, 12, "{name} row cap");
             let want_cols = if name.ends_with("down") { c.d_ff } else { c.d_model };
             assert_eq!(x.cols, want_cols, "{name} width");
+        }
+    }
+
+    /// A fleet of G members all serving the same dense weights: every
+    /// member's stacked block must equal the single-model forward bit
+    /// for bit, and the fleet NLL must match `lm_nll`'s sums.
+    struct DenseFleet<'a> {
+        params: &'a Params,
+        g: usize,
+    }
+
+    impl FleetWeights for DenseFleet<'_> {
+        fn group_size(&self) -> usize {
+            self.g
+        }
+        fn linear_stacked(&self, name: &str, x: &Mat) -> Mat {
+            // same weight for every member; matmul is row-local, so one
+            // call over the stack serves all blocks
+            ModelWeights::linear(self.params, name, x)
+        }
+        fn vec(&self, name: &str) -> &[f32] {
+            ModelWeights::vec(self.params, name)
+        }
+        fn mat(&self, name: &str) -> Mat {
+            ModelWeights::mat(self.params, name)
+        }
+    }
+
+    #[test]
+    fn fleet_forward_replicates_single_forward() {
+        let c = cfg();
+        let p = synth_lm_params(&c, 21, c.vocab);
+        let mut rng = Rng::new(22);
+        let tk = toks(&c, 2, &mut rng);
+        let single = forward(&p, &c, &tk, 2, c.seq_len, true, None);
+        let fleet = DenseFleet { params: &p, g: 3 };
+        let stacked = forward_fleet(&fleet, &c, &tk, 2, c.seq_len, true);
+        assert_eq!(stacked.rows, 3 * single.rows);
+        for gi in 0..3 {
+            for i in 0..single.rows {
+                assert_eq!(
+                    stacked.row(gi * single.rows + i),
+                    single.row(i),
+                    "member {gi} row {i}"
+                );
+            }
+        }
+
+        let mask = vec![1.0f32; 2 * c.seq_len];
+        let (nll, cnt) = lm_nll(&p, &c, &tk, &mask, 2, c.seq_len);
+        let per_member = lm_nll_fleet(&fleet, &c, &tk, &mask, 2, c.seq_len);
+        let want = (nll.iter().sum::<f64>(), cnt.iter().sum::<f64>());
+        for (gi, got) in per_member.iter().enumerate() {
+            assert_eq!(got.0, want.0, "member {gi} nll");
+            assert_eq!(got.1, want.1, "member {gi} count");
         }
     }
 

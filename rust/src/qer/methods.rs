@@ -16,6 +16,8 @@
 //! stream, and every truncation is a prefix of the same prep-rank
 //! factorization (see `QerConfig::prep_rank`).
 
+use std::sync::Arc;
+
 use crate::linalg::{randomized_svd, truncated_from, Svd};
 use crate::quant::{PackedMat, QuantCtx, Quantizer};
 use crate::scaling::{Scaling, ScalingKind};
@@ -107,8 +109,11 @@ pub(crate) const RESID_SALT: u64 = 0xD1CE_BA5E;
 pub struct QerResult {
     pub qdeq: Mat,
     /// bit-packed encoding of `qdeq` (None for quantizers without one);
-    /// `into_factored` carries it into the serving layer
-    pub packed: Option<PackedMat>,
+    /// `into_factored` carries it into the serving layer. Behind an
+    /// [`Arc`] so sweep outcomes that reuse a cached k=0 quantization
+    /// share one buffer (and the fleet evaluator can group them by
+    /// pointer identity).
+    pub packed: Option<Arc<PackedMat>>,
     pub l: Mat,
     pub r: Mat,
     pub k_star: usize,
@@ -130,7 +135,7 @@ impl QerResult {
     pub fn into_factored(self) -> LinearOp {
         let base = match self.packed {
             Some(p) => QuantBase::Packed(p),
-            None => QuantBase::Dense(self.qdeq),
+            None => QuantBase::Dense(Arc::new(self.qdeq)),
         };
         LinearOp::FactoredQlr { base, l: self.l, r: self.r }
     }
@@ -146,7 +151,7 @@ impl QerResult {
     fn from_srr(out: SrrOutput) -> QerResult {
         QerResult {
             qdeq: out.qdeq,
-            packed: out.packed,
+            packed: out.packed.map(Arc::new),
             l: out.l,
             r: out.r,
             k_star: out.k_star,
@@ -239,7 +244,7 @@ pub fn reconstruct_prepared(
             let (qdeq, packed) = quantizer.quantize_coded(w, ctx);
             QerResult {
                 qdeq,
-                packed,
+                packed: packed.map(Arc::new),
                 l: Mat::zeros(m, 0),
                 r: Mat::zeros(0, n),
                 k_star: 0,
@@ -251,7 +256,7 @@ pub fn reconstruct_prepared(
             let (l, r) = residual_correction(
                 w, &qdeq, scaling, cfg.rank, cfg.prep_rank(), cfg.n_iter, &mut rng,
             );
-            QerResult { qdeq, packed, l, r, k_star: 0, selection: None }
+            QerResult { qdeq, packed: packed.map(Arc::new), l, r, k_star: 0, selection: None }
         }
         Method::QerSrr => {
             let sp = sp.expect("spectra resolved above");
@@ -282,7 +287,7 @@ pub fn reconstruct_prepared(
             }
             QerResult {
                 qdeq,
-                packed,
+                packed: packed.map(Arc::new),
                 l: lr_pair.0,
                 r: lr_pair.1,
                 k_star: cfg.rank,

@@ -14,6 +14,7 @@
 //!             drives gradient scaling during training.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::model::{CalibrationSet, Params};
 use crate::qer::{reconstruct, Method, QerConfig, QerResult};
@@ -105,7 +106,7 @@ pub fn init_qpeft(
                 let (qdeq, packed) = q.quantize_coded(&w, &qctx);
                 let l = Mat::randn(w.rows, rank, 0.02, &mut rng);
                 let r = Mat::zeros(rank, w.cols);
-                (frozen_base(qdeq, packed), l, r, 0)
+                (frozen_base(qdeq, packed.map(Arc::new)), l, r, 0)
             }
             _ => {
                 let qcfg = init.qer_config(rank, seed ^ fx(name)).unwrap();
@@ -174,7 +175,7 @@ pub fn init_qpeft_factored(
     }
 }
 
-fn frozen_base(qdeq: Mat, packed: Option<PackedMat>) -> FrozenTensor {
+fn frozen_base(qdeq: Mat, packed: Option<Arc<PackedMat>>) -> FrozenTensor {
     match packed {
         Some(p) => FrozenTensor::Packed(p),
         None => FrozenTensor::Dense(TensorValue::from_mat(&qdeq)),

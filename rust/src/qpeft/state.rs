@@ -11,6 +11,8 @@
 //! between steps (4–8× smaller at 2–4 bits) and dequantizes only while
 //! marshalling an artifact call.
 
+use std::sync::Arc;
+
 use crate::model::Params;
 use crate::quant::PackedMat;
 use crate::runtime::manifest::ModelCfg;
@@ -29,11 +31,15 @@ pub struct AdapterEntry {
 }
 
 /// One frozen backbone tensor: dense, or a packed quantized linear base
-/// dequantized only at artifact-marshal time.
+/// dequantized only at artifact-marshal time. Packed bases ride behind
+/// an [`Arc`], so freezing a sweep outcome shares the buffer the serving
+/// layer (and the fleet evaluator) already hold — no copy at init.
 #[derive(Clone, Debug)]
 pub enum FrozenTensor {
+    /// a dense (unquantized or densified) tensor
     Dense(TensorValue),
-    Packed(PackedMat),
+    /// a bit-packed quantized base, shared with its producer
+    Packed(Arc<PackedMat>),
 }
 
 impl FrozenTensor {

@@ -22,26 +22,40 @@
 //!   `eval::perplexity_native` run the factored model rust-natively,
 //!   without PJRT and without densifying.
 //!
-//! Producers: `qer::QerResult::into_factored` (single layer),
-//! `coordinator::run_ptq_factored` / `SweepRunner::run_factored` (whole
-//! models). `exp::perf::serve_bench` records the dense-vs-factored
-//! footprint and throughput into `BENCH_serve.json`.
+//! Producers: [`crate::qer::QerResult::into_factored`] (single layer),
+//! [`crate::coordinator::run_ptq_factored`] /
+//! [`crate::coordinator::SweepRunner::run_factored`] (whole models).
+//! `exp::perf::serve_bench` records the dense-vs-factored footprint and
+//! throughput into `BENCH_serve.json`.
+//!
+//! Both [`QuantBase`] payloads sit behind [`Arc`]: rank variants of the
+//! same `(layer, quantizer, seed)` sweep cell carry the *same* packed
+//! buffer (the sweep engine hands every such outcome one
+//! `Arc<PackedMat>` from its `LayerCache`), so a grid of M rank variants
+//! holds one base in memory instead of M — and the fleet evaluator
+//! ([`crate::eval::fleet`]) recognizes the sharing by pointer identity
+//! ([`QuantBase::same_buffer`]) to decode each base once for the whole
+//! group via [`LinearOp::matmul_grouped`].
+
+use std::sync::Arc;
 
 use crate::model::{ModelWeights, Params};
 use crate::quant::packed::PackedMat;
 use crate::tensor::{matmul, Mat};
 use crate::util::pool;
 
-/// The quantized base of a factored linear.
+/// The quantized base of a factored linear. Cheap to clone: both
+/// variants share their buffer through an [`Arc`].
 #[derive(Clone, Debug)]
 pub enum QuantBase {
     /// bit-packed codes + per-group scales (uniform / MXINT / GPTQ)
-    Packed(PackedMat),
+    Packed(Arc<PackedMat>),
     /// dense dequantized fallback (quantizers without a packed format)
-    Dense(Mat),
+    Dense(Arc<Mat>),
 }
 
 impl QuantBase {
+    /// Input dimension of the base weight.
     pub fn rows(&self) -> usize {
         match self {
             QuantBase::Packed(p) => p.rows,
@@ -49,11 +63,28 @@ impl QuantBase {
         }
     }
 
+    /// Output dimension of the base weight.
     pub fn cols(&self) -> usize {
         match self {
             QuantBase::Packed(p) => p.cols,
             QuantBase::Dense(m) => m.cols,
         }
+    }
+
+    /// Address of the shared underlying buffer — the grouping key the
+    /// fleet evaluator uses to detect bases it can decode once per
+    /// lock-step group.
+    pub fn buffer_ptr(&self) -> usize {
+        match self {
+            QuantBase::Packed(p) => Arc::as_ptr(p) as usize,
+            QuantBase::Dense(m) => Arc::as_ptr(m) as usize,
+        }
+    }
+
+    /// Whether two bases alias the same underlying buffer (not merely
+    /// equal contents).
+    pub fn same_buffer(&self, other: &QuantBase) -> bool {
+        self.buffer_ptr() == other.buffer_ptr()
     }
 
     /// Payload bytes this base occupies in memory.
@@ -69,7 +100,7 @@ impl QuantBase {
     pub fn densify(&self) -> Mat {
         match self {
             QuantBase::Packed(p) => p.dequantize(),
-            QuantBase::Dense(m) => m.clone(),
+            QuantBase::Dense(m) => (**m).clone(),
         }
     }
 }
@@ -92,6 +123,7 @@ impl LinearOp {
         }
     }
 
+    /// Output dimension of the linear.
     pub fn out_dim(&self) -> usize {
         match self {
             LinearOp::Dense(w) => w.cols,
@@ -158,7 +190,86 @@ impl LinearOp {
         let xm = Mat::from_vec(1, x.len(), x.to_vec());
         self.matmul(&xm).data
     }
+
+    /// Lock-step matmul for a *group* of ops evaluated simultaneously.
+    ///
+    /// `x` vertically stacks one activation block per op (op `g` owns
+    /// rows `[g·rows_per, (g+1)·rows_per)` with
+    /// `rows_per = x.rows / ops.len()`). When every op is
+    /// [`LinearOp::FactoredQlr`] over the *same* base buffer
+    /// ([`QuantBase::same_buffer`]) — the sweep-engine layout for rank
+    /// variants of one `(layer, quantizer, seed)` cell — the shared base
+    /// streams through one [`QuantBase`] matmul over the whole stack, so
+    /// each packed code row-span is decoded once for the group instead
+    /// of once per op; only the cheap per-op `(x·L)·R` correction runs
+    /// per member. Ops without a shared buffer fall back to the per-op
+    /// [`LinearOp::matmul`] on their row block.
+    ///
+    /// Row-for-row bit-identical to calling [`LinearOp::matmul`] per op
+    /// on its block whenever the stacked and per-op calls both take the
+    /// batched (`rows > 1`) base path — the per-element summation order
+    /// is unchanged by stacking.
+    pub fn matmul_grouped(ops: &[&LinearOp], x: &Mat) -> Mat {
+        let g = ops.len();
+        assert!(g > 0, "empty op group");
+        assert_eq!(x.rows % g, 0, "stacked rows {} not divisible by group {g}", x.rows);
+        let rows_per = x.rows / g;
+
+        let shared: Option<&QuantBase> = match ops[0] {
+            LinearOp::FactoredQlr { base, .. }
+                if ops.iter().all(|op| match op {
+                    LinearOp::FactoredQlr { base: b, .. } => base.same_buffer(b),
+                    LinearOp::Dense(_) => false,
+                }) =>
+            {
+                Some(base)
+            }
+            _ => None,
+        };
+
+        match shared {
+            Some(base) => {
+                // one streaming pass over the shared base serves every op
+                let mut y = match base {
+                    QuantBase::Packed(p) => packed_matmul(p, x),
+                    QuantBase::Dense(q) => matmul(x, q),
+                };
+                for (gi, op) in ops.iter().enumerate() {
+                    if let LinearOp::FactoredQlr { l, r, .. } = op {
+                        if l.cols > 0 {
+                            let xg = x.rows_slice(gi * rows_per, (gi + 1) * rows_per);
+                            let corr = matmul(&matmul(&xg, l), r);
+                            for i in 0..rows_per {
+                                let yrow = y.row_mut(gi * rows_per + i);
+                                for (a, &v) in yrow.iter_mut().zip(corr.row(i)) {
+                                    *a += v;
+                                }
+                            }
+                        }
+                    }
+                }
+                y
+            }
+            None => {
+                let mut y = Mat::zeros(x.rows, ops[0].out_dim());
+                for (gi, op) in ops.iter().enumerate() {
+                    let yg = op.matmul(&x.rows_slice(gi * rows_per, (gi + 1) * rows_per));
+                    for i in 0..rows_per {
+                        y.row_mut(gi * rows_per + i).copy_from_slice(yg.row(i));
+                    }
+                }
+                y
+            }
+        }
+    }
 }
+
+/// Minimum code count before striping the decode across the pool is
+/// worth a scoped-thread spawn (~tens of µs per call). Small layers —
+/// and fleet eval jobs that already run *inside* a pool worker — take
+/// the single-stripe path; stripe count never changes results (each
+/// output element lives in exactly one stripe, summed in row order).
+const PAR_MIN_CODES: usize = 32 * 1024;
 
 /// y = x · Qdeq with the base streamed from packed codes one row-span at
 /// a time. Work splits into group-aligned column stripes over the worker
@@ -174,7 +285,11 @@ fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
     let (b, m, n) = (x.rows, p.rows, p.cols);
     let glen = p.scheme.group_len();
     let gpr = p.groups_per_row();
-    let stripes = pool::n_threads().min(gpr).max(1);
+    let stripes = if m * n >= PAR_MIN_CODES {
+        pool::n_threads().min(gpr).max(1)
+    } else {
+        1
+    };
     let groups_per_stripe = gpr.div_ceil(stripes);
     let bounds: Vec<(usize, usize)> = (0..stripes)
         .map(|s| {
@@ -231,12 +346,15 @@ fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
 /// slots are unset; every quantizable linear is a [`LinearOp`].
 #[derive(Clone, Debug)]
 pub struct FactoredModel {
+    /// non-linear parameters (embedding, norms, head); the quantized
+    /// linear slots are unset
     pub skeleton: Params,
     /// (name, op) in `Params::linear_names` order
     pub ops: Vec<(String, LinearOp)>,
 }
 
 impl FactoredModel {
+    /// The serving op for the named linear, if it was quantized.
     pub fn op(&self, name: &str) -> Option<&LinearOp> {
         self.ops.iter().find(|(n, _)| n == name).map(|(_, op)| op)
     }
@@ -318,7 +436,7 @@ mod tests {
             let l = Mat::randn(m, rank, 0.1, &mut g.rng);
             let r = Mat::randn(rank, n, 0.1, &mut g.rng);
             let what = if rank == 0 { qdeq.clone() } else { qdeq.add(&matmul(&l, &r)) };
-            let op = LinearOp::FactoredQlr { base: QuantBase::Packed(packed), l, r };
+            let op = LinearOp::FactoredQlr { base: QuantBase::Packed(Arc::new(packed)), l, r };
             assert!(op.densify().allclose(&what, 1e-6));
 
             let x = Mat::randn(bsz, m, 1.0, &mut g.rng);
@@ -345,7 +463,8 @@ mod tests {
         let l = Mat::randn(128, 16, 0.1, &mut rng);
         let r = Mat::randn(16, 256, 0.1, &mut rng);
         let dense = LinearOp::Dense(qdeq.add(&matmul(&l, &r)));
-        let fact = LinearOp::FactoredQlr { base: QuantBase::Packed(packed.unwrap()), l, r };
+        let fact =
+            LinearOp::FactoredQlr { base: QuantBase::Packed(Arc::new(packed.unwrap())), l, r };
         assert_eq!(fact.in_dim(), 128);
         assert_eq!(fact.out_dim(), 256);
         assert_eq!(fact.rank(), 16);
@@ -361,12 +480,12 @@ mod tests {
         let l = Mat::randn(64, 8, 0.1, &mut rng);
         let r = Mat::randn(8, 64, 0.1, &mut rng);
         let what = w.add(&matmul(&l, &r));
-        let op = LinearOp::FactoredQlr { base: QuantBase::Dense(w.clone()), l, r };
+        let op = LinearOp::FactoredQlr { base: QuantBase::Dense(Arc::new(w.clone())), l, r };
         let x = Mat::randn(3, 64, 1.0, &mut rng);
         let rel = rel_err(&op.matmul(&x), &matmul(&x, &what));
         assert!(rel < 1e-5);
         assert_eq!(op.densify(), what);
-        assert_eq!(QuantBase::Dense(w).bytes(), 64 * 64 * 4);
+        assert_eq!(QuantBase::Dense(Arc::new(w)).bytes(), 64 * 64 * 4);
     }
 
     #[test]
@@ -376,12 +495,92 @@ mod tests {
         let spec = QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: false };
         let (qdeq, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
         let op = LinearOp::FactoredQlr {
-            base: QuantBase::Packed(packed.unwrap()),
+            base: QuantBase::Packed(Arc::new(packed.unwrap())),
             l: Mat::zeros(32, 0),
             r: Mat::zeros(0, 64),
         };
         assert_eq!(op.densify(), qdeq);
         let x = Mat::randn(2, 32, 1.0, &mut rng);
         assert!(op.matmul(&x).allclose(&matmul(&x, &qdeq), 1e-5));
+    }
+
+    /// Tentpole contract: the lock-step grouped matmul over ops sharing
+    /// one base buffer is bit-identical to the per-op batched path, for
+    /// every packable family and mixed ranks (including rank 0).
+    #[test]
+    fn prop_grouped_matmul_matches_per_op() {
+        prop::check(0xF1EE7, 15, |g| {
+            let m = 32 * g.dim(2); // 32..64
+            let n = 32 * g.dim(2);
+            let rows_per = 2 + g.dim(6); // >= 3 rows: both paths batched
+            let spec = g.choice(&[
+                QuantizerSpec::Mxint { bits: 3, block: 32 },
+                QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: true },
+                QuantizerSpec::Gptq { bits: 3, group: 32 },
+            ]);
+            let w = Mat::randn(m, n, 1.0, &mut g.rng);
+            let (_, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+            let base = QuantBase::Packed(Arc::new(packed.expect("packable family")));
+
+            let ranks = [0usize, 4, 8];
+            let ops: Vec<LinearOp> = ranks
+                .iter()
+                .map(|&rank| LinearOp::FactoredQlr {
+                    base: base.clone(),
+                    l: Mat::randn(m, rank, 0.1, &mut g.rng),
+                    r: Mat::randn(rank, n, 0.1, &mut g.rng),
+                })
+                .collect();
+            let refs: Vec<&LinearOp> = ops.iter().collect();
+            assert!(refs.iter().all(|op| match op {
+                LinearOp::FactoredQlr { base: b, .. } => base.same_buffer(b),
+                _ => false,
+            }));
+
+            let x = Mat::randn(refs.len() * rows_per, m, 1.0, &mut g.rng);
+            let y = LinearOp::matmul_grouped(&refs, &x);
+            assert_eq!((y.rows, y.cols), (x.rows, n));
+            for (gi, op) in refs.iter().enumerate() {
+                let xg = x.rows_slice(gi * rows_per, (gi + 1) * rows_per);
+                let solo = op.matmul(&xg);
+                for i in 0..rows_per {
+                    assert_eq!(
+                        y.row(gi * rows_per + i),
+                        solo.row(i),
+                        "member {gi} row {i} diverges"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn grouped_matmul_falls_back_without_shared_buffer() {
+        // equal *contents*, distinct buffers: must take the per-op path
+        // and still agree with per-op matmul
+        let mut rng = Rng::new(21);
+        let w = Mat::randn(64, 64, 1.0, &mut rng);
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let (_, p1) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        let (_, p2) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        let b1 = QuantBase::Packed(Arc::new(p1.unwrap()));
+        let b2 = QuantBase::Packed(Arc::new(p2.unwrap()));
+        assert!(!b1.same_buffer(&b2));
+        assert!(b1.same_buffer(&b1.clone()), "Arc clone aliases the buffer");
+        let l = Mat::randn(64, 4, 0.1, &mut rng);
+        let r = Mat::randn(4, 64, 0.1, &mut rng);
+        let ops = [
+            LinearOp::FactoredQlr { base: b1, l: l.clone(), r: r.clone() },
+            LinearOp::FactoredQlr { base: b2, l, r },
+        ];
+        let refs: Vec<&LinearOp> = ops.iter().collect();
+        let x = Mat::randn(6, 64, 1.0, &mut rng);
+        let y = LinearOp::matmul_grouped(&refs, &x);
+        for (gi, op) in refs.iter().enumerate() {
+            let solo = op.matmul(&x.rows_slice(gi * 3, (gi + 1) * 3));
+            for i in 0..3 {
+                assert_eq!(y.row(gi * 3 + i), solo.row(i));
+            }
+        }
     }
 }
