@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Bench-record equivalence gate.
+
+Scans every BENCH_*.json the bench smoke produced and fails if any
+boolean field whose name marks an equivalence assertion (contains
+"identical" or "equiv", or ends with "_ok") is false. The benches assert
+these themselves, but the gate also catches a record flushed before an
+abort and future benches that record without asserting.
+"""
+
+import glob
+import json
+import sys
+
+files = sorted(set(glob.glob("BENCH_*.json") + glob.glob("rust/BENCH_*.json")))
+if not files:
+    sys.exit("bench gate: no BENCH_*.json records found")
+
+
+def is_equiv_key(key: str) -> bool:
+    k = key.lower()
+    return "identical" in k or "equiv" in k or k.endswith("_ok")
+
+
+failures = []
+checked = 0
+
+
+def walk(path: str, node, record: str):
+    global checked
+    if isinstance(node, dict):
+        for key, val in node.items():
+            walk(f"{path}.{key}" if path else key, val, record)
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            walk(f"{path}[{i}]", val, record)
+    elif isinstance(node, bool):
+        leaf = path.rsplit(".", 1)[-1]
+        if is_equiv_key(leaf):
+            checked += 1
+            if node is False:
+                failures.append(f"{record}: {path} = false")
+
+
+for f in files:
+    with open(f) as fh:
+        try:
+            data = json.load(fh)
+        except json.JSONDecodeError as e:
+            failures.append(f"{f}: unparseable record ({e})")
+            continue
+    walk("", data, f)
+
+print(f"bench gate: {len(files)} record(s), {checked} equivalence flag(s) checked")
+if failures:
+    print("bench gate FAILURES:")
+    for line in failures:
+        print(f"  {line}")
+    sys.exit(1)

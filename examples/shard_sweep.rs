@@ -1,0 +1,74 @@
+//! Multi-process PTQ sweep: shard the reconstruction grid and the fleet
+//! perplexity evaluation across `srr shard-worker` processes.
+//!
+//! The host runs the shared-work preparation (scalings, Hessians, k=0
+//! quantizations, spectra) in-process, then ships per-(layer, config)
+//! reconstruction jobs — and fleet (group × batch) PPL jobs — to N
+//! worker processes over the binary wire codec (`coordinator::wire`),
+//! merging results deterministically by job id. Outcomes are
+//! bit-identical to the single-process `SweepRunner` path; shared packed
+//! bases are deduplicated on the wire by content hash, so the workers
+//! see the same lock-step groups the in-process fleet evaluator uses.
+//!
+//!   cargo run --release --example shard_sweep -- [--workers 2] [--rank 8]
+//!
+//! Requires the `srr` binary (`cargo build --release`) so the host can
+//! spawn workers; set `SRR_SHARD_BIN` if it lives somewhere unusual.
+
+use srr::coordinator::{
+    fleet_perplexity_sharded, Metrics, QuantizerSpec, ShardOptions, ShardSession,
+    ShardedSweepRunner, SweepConfig,
+};
+use srr::exp::ExpCtx;
+use srr::qer::Method;
+use srr::scaling::ScalingKind;
+use srr::serve::FactoredModel;
+use srr::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let workers = args.get_usize("workers", 2);
+    let rank = args.get_usize("rank", 8);
+
+    let mut ctx = match ExpCtx::new(true) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("[no artifacts ({e:#}); offline mode — untrained synthetic fixture]");
+            ExpCtx::offline(true)?
+        }
+    };
+    let fx = ctx.lm("tiny")?;
+
+    // a small Table-1-shaped grid: w-only + plain-QER ranks (shared
+    // packed base → one lock-step eval group) + the SRR method
+    let quant = QuantizerSpec::Mxint { bits: 3, block: 32 };
+    let mut configs = vec![SweepConfig::new(quant, Method::WOnly, 0, ScalingKind::Identity)];
+    for r in [rank / 2, rank] {
+        configs.push(SweepConfig::new(quant, Method::Qer, r.max(1), ScalingKind::DiagRms));
+    }
+    configs.push(SweepConfig::new(quant, Method::QerSrr, rank, ScalingKind::DiagRms));
+
+    println!("spawning {workers} shard worker(s)…");
+    let mut session = ShardSession::spawn(&ShardOptions::with_workers(workers))?;
+    let metrics = Metrics::new();
+    let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+    let outcomes = runner.run_factored(&mut session, &configs)?;
+    println!(
+        "sweep done: {} outcomes, {} jobs over {} worker(s), {} bytes shipped",
+        outcomes.len(),
+        metrics.get("shard.jobs_sent"),
+        workers,
+        metrics.get("shard.tx_bytes") as u64,
+    );
+
+    let models: Vec<&FactoredModel> = outcomes.iter().map(|o| &o.model).collect();
+    let b = 2;
+    let t = fx.cfg.seq_len;
+    let batches: Vec<Vec<i32>> = (0..4).map(|i| fx.corpus.train_batch(b, t, 30 + i)).collect();
+    let ppl = fleet_perplexity_sharded(&mut session, &models, &fx.cfg, &batches, b, t, &metrics)?;
+    for (i, (c, p)) in configs.iter().zip(&ppl).enumerate() {
+        println!("  {:32} ppl {p:8.3}  mean k* {:.1}", c.label, outcomes[i].mean_k_star());
+    }
+    session.shutdown();
+    Ok(())
+}

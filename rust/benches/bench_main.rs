@@ -40,6 +40,9 @@ fn run_ids(ctx: &mut ExpCtx, ids: &[String]) -> usize {
 }
 
 fn main() {
+    // the shard bench spawns `srr shard-worker` processes; cargo hands
+    // bench targets the bin's absolute path at compile time
+    std::env::set_var("SRR_SHARD_BIN", env!("CARGO_BIN_EXE_srr"));
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let quick = raw.iter().any(|a| a == "--quick");
     let exps: Vec<String> = {

@@ -7,6 +7,22 @@
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a non-blocking or bounded-wait pop ([`BoundedQueue::try_pop`]
+/// / [`BoundedQueue::pop_timeout`]). Distinguishes "nothing *yet*" from
+/// "nothing *ever again*" — the shard host's event loop waits with a
+/// timeout so it can probe worker liveness instead of blocking forever
+/// on a peer that died without closing the pipe.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopResult<T> {
+    /// an item was dequeued
+    Item(T),
+    /// the queue was empty for the whole wait (still open — retry later)
+    Empty,
+    /// closed and fully drained (no item will ever arrive)
+    Closed,
+}
 
 /// A bounded multi-producer multi-consumer queue; `push` blocks at
 /// capacity (backpressure), `pop` blocks until an item or close.
@@ -62,6 +78,46 @@ impl<T> BoundedQueue<T> {
                 return None;
             }
             g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop: an item if one is queued right now,
+    /// [`PopResult::Empty`] if not, [`PopResult::Closed`] once closed
+    /// and drained.
+    pub fn try_pop(&self) -> PopResult<T> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(item) = g.items.pop_front() {
+            self.not_full.notify_one();
+            return PopResult::Item(item);
+        }
+        if g.closed {
+            PopResult::Closed
+        } else {
+            PopResult::Empty
+        }
+    }
+
+    /// Pop, waiting at most `timeout` for an item. Returns
+    /// [`PopResult::Empty`] when the deadline expires on a still-open
+    /// queue — the caller can check liveness out-of-band and retry —
+    /// and [`PopResult::Closed`] once closed and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> PopResult<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return PopResult::Item(item);
+            }
+            if g.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::Empty;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
         }
     }
 
@@ -163,6 +219,62 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
         assert_eq!(t.join().unwrap(), None);
+    }
+
+    /// Satellite: closing while a producer is blocked at capacity must
+    /// wake it with `false` — the shard host relies on this to unwedge a
+    /// feeder pointed at a dead worker.
+    #[test]
+    fn close_wakes_blocked_producer_with_failure() {
+        let q = Arc::new(BoundedQueue::new(1));
+        assert!(q.push(0));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(1));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "producer still blocked at capacity");
+        q.close();
+        assert!(!t.join().unwrap(), "blocked push must fail once closed");
+        // the queued item still drains, then the close is visible
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None);
+    }
+
+    /// Satellite: `pop_timeout` expires with `Empty` on an open queue,
+    /// returns items when they exist, and reports `Closed` after drain.
+    #[test]
+    fn pop_timeout_expiry_and_close() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(2);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(40)), PopResult::Empty);
+        assert!(
+            t0.elapsed() >= std::time::Duration::from_millis(35),
+            "expiry returned early after {:?}",
+            t0.elapsed()
+        );
+        assert!(q.push(7));
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(40)), PopResult::Item(7));
+        q.close();
+        assert_eq!(q.pop_timeout(std::time::Duration::from_millis(40)), PopResult::Closed);
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_push_before_deadline() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_timeout(std::time::Duration::from_secs(5)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(q.push(3usize));
+        assert_eq!(t.join().unwrap(), PopResult::Item(3));
+    }
+
+    #[test]
+    fn try_pop_reports_state_without_blocking() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(2);
+        assert_eq!(q.try_pop(), PopResult::Empty);
+        assert!(q.push(1));
+        assert_eq!(q.try_pop(), PopResult::Item(1));
+        q.close();
+        assert_eq!(q.try_pop(), PopResult::Closed);
     }
 
     #[test]

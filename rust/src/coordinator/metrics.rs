@@ -26,6 +26,12 @@ impl Metrics {
         self.add(key, 1.0);
     }
 
+    /// Overwrite `key` with `v` (gauges like `shard.workers`, where
+    /// accumulation across runs would be meaningless).
+    pub fn put(&self, key: &str, v: f64) {
+        self.counters.lock().unwrap().insert(key.to_string(), v);
+    }
+
     /// Current value of `key` (0.0 if never written).
     pub fn get(&self, key: &str) -> f64 {
         self.counters.lock().unwrap().get(key).copied().unwrap_or(0.0)

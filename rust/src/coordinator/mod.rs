@@ -24,7 +24,14 @@
 //!   plug into.
 //! * [`cache`] — the keyed per-layer cache ([`cache::PreparedLayer`]).
 //! * [`jobs`] — bounded work queue with backpressure (used by the
-//!   streaming calibration path; invariants property-tested).
+//!   streaming calibration path and the shard plane's reader/writer
+//!   threads; invariants property-tested).
+//! * [`wire`] — the dependency-free binary wire codec (versioned,
+//!   length-prefixed, checksummed frames; content-addressed blob dedup)
+//!   the shard plane speaks.
+//! * [`shard`] — the multi-process execution plane: phase-B2 sweep jobs
+//!   and fleet PPL jobs sharded across `srr shard-worker` processes,
+//!   bit-identical to the in-process engines, with worker-death requeue.
 //! * [`metrics`] — counters/timers registry.
 //! * [`config`] — run configuration (CLI/JSON).
 
@@ -33,7 +40,9 @@ pub mod config;
 pub mod jobs;
 pub mod metrics;
 pub mod pipeline;
+pub mod shard;
 pub mod sweep;
+pub mod wire;
 
 pub use cache::{LayerCache, PreparedLayer};
 pub use config::RunConfig;
@@ -41,5 +50,8 @@ pub use metrics::Metrics;
 pub use pipeline::{
     run_ptq, run_ptq_factored, FactoredOutcome, LayerMeta, LayerReport, PtqOutcome,
     QuantizerSpec,
+};
+pub use shard::{
+    fleet_perplexity_sharded, worker_main, ShardOptions, ShardSession, ShardedSweepRunner,
 };
 pub use sweep::{run_sweep, run_sweep_factored, SweepConfig, SweepRunner};

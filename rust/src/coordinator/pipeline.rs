@@ -26,7 +26,7 @@ use super::metrics::Metrics;
 
 /// Constructible quantizer description (trait objects aren't clonable
 /// across worker threads; each job builds its own from the spec).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QuantizerSpec {
     Mxint { bits: u32, block: usize },
     Uniform { bits: u32, group: usize, symmetric: bool },
@@ -124,6 +124,7 @@ pub struct LayerMeta {
 /// a cached k=0 quantization share their [`crate::serve::QuantBase`]
 /// buffers through `Arc` — M rank variants hold one packed base, and
 /// [`crate::eval::fleet`] evaluates them in one lock-step pass.
+#[derive(Debug)]
 pub struct FactoredOutcome {
     /// the factored serving model (consumed by `perplexity_native` /
     /// the fleet evaluator)

@@ -1,0 +1,1407 @@
+//! Multi-process execution plane: shard sweep phase B2 and fleet PPL
+//! evaluation across `srr shard-worker` processes.
+//!
+//! The in-process engines already saturate one machine's cores; this
+//! module is the seam that takes them to N processes (and, with a future
+//! TCP/ssh transport, N hosts). The division of labor:
+//!
+//! * the **host** runs sweep phases A + B1 in-process
+//!   ([`SweepRunner::prepare`]), then ships per-`(layer, config)`
+//!   phase-B2 jobs — and fleet `(group × batch)` PPL jobs — to worker
+//!   processes over the [`wire`](super::wire) codec (stdin/stdout
+//!   pipes), merging results deterministically by job id;
+//! * each **worker** ([`worker_main`], the `srr shard-worker` CLI mode)
+//!   pulls frames through a reader thread into a bounded job queue
+//!   (backpressure end-to-end: a full queue stops the read loop, which
+//!   stops the host's pipe), computes with the *same*
+//!   [`b2_job`](super::sweep) / fleet-job functions the in-process
+//!   engines run, and pushes result frames through a writer thread.
+//!
+//! **Bit-identity contract:** [`ShardedSweepRunner::run_factored`]
+//! produces outcomes — and [`fleet_perplexity_sharded`] PPLs —
+//! bit-identical to [`SweepRunner::run_factored`] +
+//! [`fleet_perplexity`](crate::eval::fleet_perplexity) for any worker
+//! count, including after worker-death requeue (regression- and
+//! property-tested; `cargo bench -- --exp shard` records the scaling
+//! efficiency into `BENCH_shard.json`). The contract holds because both
+//! paths run the same job functions on the same artifacts and merge in
+//! the same order; the wire layer's content-addressed blob dedup
+//! rebuilds the `Arc` sharing (grid dedup, lock-step groups) on each
+//! side of the pipe.
+//!
+//! **Failure model:** a worker that exits (cleanly or by crash) or
+//! writes garbage frames is marked dead; its in-flight jobs requeue
+//! onto surviving workers, and
+//! late frames from a dead worker are discarded (the survivor's
+//! recomputation is authoritative). The host's event loop waits with
+//! [`BoundedQueue::pop_timeout`](super::jobs::BoundedQueue::pop_timeout)
+//! and probes child exit status on every timeout, so even a worker that
+//! dies without closing its pipe is noticed. Only when every worker has
+//! died does the run error out. A worker that hangs *without* exiting is
+//! waited on indefinitely — a per-job heartbeat is future work for the
+//! TCP/ssh transport.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::eval::fleet::{
+    fleet_job_list, reduce_fleet_results, FleetGroup, FleetJob, FleetJobResult,
+};
+use crate::eval::{group_by_shared_bases, perplexity_native_masked};
+use crate::linalg::Svd;
+use crate::model::forward::lm_nll_fleet;
+use crate::model::{CalibrationSet, Params};
+use crate::qer::{Method, PreparedSpectra};
+use crate::runtime::manifest::ModelCfg;
+use crate::scaling::Scaling;
+use crate::serve::{FactoredModel, LinearOp, QuantBase};
+use crate::tensor::Mat;
+use crate::util::cli::Args;
+
+use super::cache::LayerCache;
+use super::jobs::{BoundedQueue, PopResult};
+use super::metrics::Metrics;
+use super::pipeline::{FactoredOutcome, LayerMeta, LayerReport};
+use super::sweep::{
+    assemble_outcomes, b2_artifacts, b2_job, empty_outcomes, B2Artifacts, SweepConfig,
+    SweepPrep, SweepRunner,
+};
+use super::wire::{
+    self, decode_fleet_job, decode_fleet_result, decode_sweep_job, decode_sweep_result,
+    encode_fleet_job, encode_fleet_result, encode_sweep_job, encode_sweep_result, kind,
+    shutdown_frame, BlobRx, BlobTx, FleetJobMsg, FleetOut, FleetResultMsg, Frame, SweepJobMsg,
+    SweepResultMsg, WireBase, WireLinearOp, WireModel, WireScaling, WireSpectra, WireSvd,
+};
+
+/// Jobs a worker may hold in flight before the host waits for results —
+/// one computing, one queued behind it.
+const WINDOW: usize = 2;
+
+/// Worker-side queue depth for decoded jobs / encoded results. Small on
+/// purpose: the queue, not the OS pipe, is the unit of backpressure.
+const WORKER_QUEUE_CAP: usize = 4;
+
+/// How long the host event loop waits before probing child liveness.
+const EVENT_POLL: Duration = Duration::from_millis(500);
+
+/// Configuration for a shard session.
+#[derive(Clone, Debug)]
+pub struct ShardOptions {
+    /// worker processes to spawn (≥ 1)
+    pub workers: usize,
+    /// `SRR_THREADS` for each worker (0 = inherit the environment); the
+    /// default of 1 makes N workers ≈ N single-threaded executors, the
+    /// configuration the scaling bench measures
+    pub worker_threads: usize,
+    /// fault injection for tests/benches: the *first* worker exits after
+    /// completing this many jobs, exercising the requeue path
+    pub exit_after_first: Option<usize>,
+    /// explicit path to the `srr` binary (otherwise `SRR_SHARD_BIN`,
+    /// then a search near the current executable)
+    pub binary: Option<PathBuf>,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        ShardOptions { workers: 2, worker_threads: 1, exit_after_first: None, binary: None }
+    }
+}
+
+impl ShardOptions {
+    /// `n` workers with the default single-threaded worker config.
+    pub fn with_workers(n: usize) -> Self {
+        ShardOptions { workers: n, ..Default::default() }
+    }
+}
+
+/// Locate the `srr` binary to spawn workers from: an explicit override,
+/// the `SRR_SHARD_BIN` env var (integration tests and benches set it
+/// from `CARGO_BIN_EXE_srr`), the current executable when it *is* `srr`,
+/// or a sibling/parent search from the current executable (covers test
+/// and example binaries under `target/<profile>/deps`).
+fn worker_binary(opts: &ShardOptions) -> Result<PathBuf> {
+    if let Some(p) = &opts.binary {
+        return Ok(p.clone());
+    }
+    if let Ok(p) = std::env::var("SRR_SHARD_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    if exe.file_stem().map(|s| s == "srr").unwrap_or(false) {
+        return Ok(exe);
+    }
+    let mut dir = exe.parent();
+    for _ in 0..3 {
+        let Some(d) = dir else { break };
+        let cand = d.join(format!("srr{}", std::env::consts::EXE_SUFFIX));
+        if cand.is_file() {
+            return Ok(cand);
+        }
+        dir = d.parent();
+    }
+    anyhow::bail!(
+        "cannot locate the `srr` worker binary near {}; set SRR_SHARD_BIN or ShardOptions.binary",
+        exe.display()
+    )
+}
+
+/// Shard-plane transfer/fault counters (shared with reader threads).
+#[derive(Default)]
+struct ShardStats {
+    jobs_sent: AtomicU64,
+    tx_bytes: AtomicU64,
+    rx_bytes: AtomicU64,
+    requeued: AtomicU64,
+    deaths: AtomicU64,
+}
+
+/// Host→worker result/failure notifications.
+enum Event {
+    /// a decoded result frame from `worker`
+    Result { worker: usize, msg: ResultMsg },
+    /// `worker`'s pipe ended or produced garbage
+    Dead { worker: usize },
+}
+
+/// A decoded worker result.
+pub(crate) enum ResultMsg {
+    /// phase-B2 sweep job result
+    Sweep(Box<SweepResultMsg>),
+    /// fleet PPL job result
+    Fleet(FleetResultMsg),
+}
+
+impl ResultMsg {
+    fn job_id(&self) -> u64 {
+        match self {
+            ResultMsg::Sweep(m) => m.job_id,
+            ResultMsg::Fleet(m) => m.job_id,
+        }
+    }
+}
+
+/// A source of encodable jobs; the dispatch loop is generic over sweep
+/// and fleet batches.
+pub(crate) trait JobSource {
+    /// Total job count; job ids are `0..n_jobs`.
+    fn n_jobs(&self) -> usize;
+    /// Encode job `job` for one worker connection: any blob frames the
+    /// worker is missing, then the job frame.
+    fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame>;
+}
+
+struct WorkerProc {
+    child: Child,
+    /// `None` once the worker is dead or shut down (closes the pipe)
+    stdin: Option<BufWriter<ChildStdin>>,
+    /// per-connection blob dedup state
+    tx: BlobTx,
+    /// job ids in flight on this worker
+    outstanding: Vec<usize>,
+    alive: bool,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// A pool of spawned `srr shard-worker` processes. One session serves
+/// any number of job batches ([`ShardedSweepRunner::run_factored`],
+/// [`fleet_perplexity_sharded`]) — blob caches persist across batches,
+/// so a fleet evaluation right after a sweep reuses the bases the sweep
+/// already shipped.
+pub struct ShardSession {
+    workers: Vec<WorkerProc>,
+    events: Arc<BoundedQueue<Event>>,
+    /// host-side blob cache, shared by all worker readers; seeded with
+    /// outbound artifacts so results resolve to the very same `Arc`s
+    rx: Arc<Mutex<BlobRx>>,
+    stats: Arc<ShardStats>,
+}
+
+fn spawn_reader(
+    wi: usize,
+    stdout: ChildStdout,
+    events: Arc<BoundedQueue<Event>>,
+    rx: Arc<Mutex<BlobRx>>,
+    stats: Arc<ShardStats>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut out = BufReader::new(stdout);
+        loop {
+            match wire::read_frame(&mut out) {
+                Ok(Some(f)) => {
+                    stats.rx_bytes.fetch_add(f.payload.len() as u64 + 24, Ordering::Relaxed);
+                    let ev = match f.kind {
+                        kind::BLOB_MAT | kind::BLOB_PACKED | kind::BLOB_PARAMS => {
+                            match rx.lock().unwrap().insert(f.kind, &f.payload) {
+                                Ok(_) => continue,
+                                Err(_) => Event::Dead { worker: wi },
+                            }
+                        }
+                        kind::SWEEP_RESULT => match decode_sweep_result(&f.payload) {
+                            Ok(m) => {
+                                let msg = ResultMsg::Sweep(Box::new(m));
+                                Event::Result { worker: wi, msg }
+                            }
+                            Err(_) => Event::Dead { worker: wi },
+                        },
+                        kind::FLEET_RESULT => match decode_fleet_result(&f.payload) {
+                            Ok(m) => Event::Result { worker: wi, msg: ResultMsg::Fleet(m) },
+                            Err(_) => Event::Dead { worker: wi },
+                        },
+                        _ => Event::Dead { worker: wi },
+                    };
+                    let dead = matches!(ev, Event::Dead { .. });
+                    events.push(ev);
+                    if dead {
+                        return;
+                    }
+                }
+                Ok(None) | Err(_) => {
+                    events.push(Event::Dead { worker: wi });
+                    return;
+                }
+            }
+        }
+    })
+}
+
+impl ShardSession {
+    /// Spawn `opts.workers` worker processes with piped stdin/stdout
+    /// (stderr inherited so worker panics stay visible).
+    pub fn spawn(opts: &ShardOptions) -> Result<ShardSession> {
+        anyhow::ensure!(opts.workers >= 1, "shard session needs at least one worker");
+        let bin = worker_binary(opts)?;
+        let events = Arc::new(BoundedQueue::new(opts.workers * (WINDOW + 2) + 4));
+        let rx = Arc::new(Mutex::new(BlobRx::new()));
+        let stats = Arc::new(ShardStats::default());
+        let mut workers: Vec<WorkerProc> = Vec::with_capacity(opts.workers);
+        for wi in 0..opts.workers {
+            let mut cmd = Command::new(&bin);
+            cmd.arg("shard-worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit());
+            if opts.worker_threads > 0 {
+                cmd.env("SRR_THREADS", opts.worker_threads.to_string());
+            }
+            if wi == 0 {
+                if let Some(k) = opts.exit_after_first {
+                    cmd.arg("--exit-after").arg(k.to_string());
+                }
+            }
+            let spawned = cmd.spawn().with_context(|| format!("spawning {}", bin.display()));
+            let mut child = match spawned {
+                Ok(c) => c,
+                Err(e) => {
+                    for w in &mut workers {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                    }
+                    return Err(e);
+                }
+            };
+            let stdin = child.stdin.take().expect("piped stdin");
+            let stdout = child.stdout.take().expect("piped stdout");
+            let reader =
+                spawn_reader(wi, stdout, events.clone(), rx.clone(), stats.clone());
+            workers.push(WorkerProc {
+                child,
+                stdin: Some(BufWriter::new(stdin)),
+                tx: BlobTx::new(),
+                outstanding: Vec::new(),
+                alive: true,
+                reader: Some(reader),
+            });
+        }
+        Ok(ShardSession { workers, events, rx, stats })
+    }
+
+    /// Workers still accepting jobs.
+    pub fn n_alive(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// The shared host-side blob cache (the sweep runner seeds it with
+    /// the `Arc`s it ships, so results resolve back to the same
+    /// buffers).
+    pub(crate) fn rx(&self) -> &Mutex<BlobRx> {
+        &self.rx
+    }
+
+    fn mark_dead(&mut self, wi: usize, pending: &mut VecDeque<usize>) {
+        let w = &mut self.workers[wi];
+        if !w.alive {
+            return;
+        }
+        w.alive = false;
+        w.stdin = None; // close the pipe
+        self.stats.deaths.fetch_add(1, Ordering::Relaxed);
+        let orphans = std::mem::take(&mut w.outstanding);
+        self.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+        // requeue in front so interrupted work retires first
+        for j in orphans.into_iter().rev() {
+            pending.push_front(j);
+        }
+    }
+
+    fn feed_worker<S: JobSource>(
+        &mut self,
+        wi: usize,
+        src: &S,
+        pending: &mut VecDeque<usize>,
+    ) {
+        loop {
+            if !self.workers[wi].alive || self.workers[wi].outstanding.len() >= WINDOW {
+                return;
+            }
+            let Some(job) = pending.pop_front() else { return };
+            let frames = src.encode(job, &mut self.workers[wi].tx);
+            let sent = match self.workers[wi].stdin.as_mut() {
+                Some(stdin) => {
+                    frames.iter().all(|f| f.write_to(stdin).is_ok()) && stdin.flush().is_ok()
+                }
+                None => false,
+            };
+            if sent {
+                let bytes: u64 = frames.iter().map(|f| f.payload.len() as u64 + 24).sum();
+                self.stats.tx_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.stats.jobs_sent.fetch_add(1, Ordering::Relaxed);
+                self.workers[wi].outstanding.push(job);
+            } else {
+                // unreachable worker: give the job back, let the reader's
+                // Dead event (or this mark) finish the cleanup
+                pending.push_front(job);
+                self.mark_dead(wi, pending);
+                return;
+            }
+        }
+    }
+
+    fn fill_windows<S: JobSource>(&mut self, src: &S, pending: &mut VecDeque<usize>) {
+        for wi in 0..self.workers.len() {
+            self.feed_worker(wi, src, pending);
+        }
+    }
+
+    /// Run every job in `src` across the workers; returns results
+    /// indexed by job id (merge order is therefore deterministic
+    /// regardless of which worker finished what, when).
+    pub(crate) fn run_jobs<S: JobSource>(
+        &mut self,
+        src: &S,
+        metrics: &Metrics,
+    ) -> Result<Vec<ResultMsg>> {
+        let n = src.n_jobs();
+        let mut results: Vec<Option<ResultMsg>> = (0..n).map(|_| None).collect();
+        let mut pending: VecDeque<usize> = (0..n).collect();
+        let mut n_done = 0usize;
+
+        // absorb deaths noticed since the previous batch
+        loop {
+            match self.events.try_pop() {
+                PopResult::Item(Event::Dead { worker }) => {
+                    self.mark_dead(worker, &mut pending)
+                }
+                PopResult::Item(Event::Result { .. }) => {} // stale duplicate
+                PopResult::Empty | PopResult::Closed => break,
+            }
+        }
+
+        self.fill_windows(src, &mut pending);
+        while n_done < n {
+            anyhow::ensure!(
+                self.workers.iter().any(|w| w.alive),
+                "all shard workers died with {} of {n} jobs unfinished",
+                n - n_done
+            );
+            match self.events.pop_timeout(EVENT_POLL) {
+                PopResult::Item(Event::Result { worker, msg }) => {
+                    // results from a worker already marked dead are stale:
+                    // its jobs were requeued the moment it was marked, and
+                    // a late frame may even belong to a previous batch —
+                    // the survivor's recomputation is the one that counts
+                    if !self.workers[worker].alive {
+                        continue;
+                    }
+                    let job = msg.job_id() as usize;
+                    anyhow::ensure!(job < n, "worker returned unknown job id {job}");
+                    self.workers[worker].outstanding.retain(|&j| j != job);
+                    if results[job].is_none() {
+                        results[job] = Some(msg);
+                        n_done += 1;
+                    }
+                    self.feed_worker(worker, src, &mut pending);
+                }
+                PopResult::Item(Event::Dead { worker }) => {
+                    self.mark_dead(worker, &mut pending);
+                    self.fill_windows(src, &mut pending);
+                }
+                PopResult::Empty => {
+                    // no events: probe for children that exited without
+                    // their reader noticing, then keep waiting
+                    for wi in 0..self.workers.len() {
+                        if self.workers[wi].alive
+                            && matches!(self.workers[wi].child.try_wait(), Ok(Some(_)))
+                        {
+                            self.mark_dead(wi, &mut pending);
+                        }
+                    }
+                    self.fill_windows(src, &mut pending);
+                }
+                PopResult::Closed => anyhow::bail!("shard event queue closed"),
+            }
+        }
+
+        metrics.put("shard.workers", self.workers.len() as f64);
+        metrics.put("shard.workers_alive", self.n_alive() as f64);
+        metrics.put("shard.jobs_sent", self.stats.jobs_sent.load(Ordering::Relaxed) as f64);
+        metrics.put("shard.tx_bytes", self.stats.tx_bytes.load(Ordering::Relaxed) as f64);
+        metrics.put("shard.rx_bytes", self.stats.rx_bytes.load(Ordering::Relaxed) as f64);
+        metrics.put("shard.requeued", self.stats.requeued.load(Ordering::Relaxed) as f64);
+        metrics.put("shard.worker_deaths", self.stats.deaths.load(Ordering::Relaxed) as f64);
+        Ok(results.into_iter().map(|r| r.expect("job completed")).collect())
+    }
+
+    /// Graceful teardown: drain, send shutdown frames, reap children.
+    pub fn shutdown(mut self) {
+        self.teardown(true);
+    }
+
+    fn teardown(&mut self, graceful: bool) {
+        for w in &mut self.workers {
+            if graceful {
+                if let Some(stdin) = w.stdin.as_mut() {
+                    let _ = shutdown_frame().write_to(stdin);
+                    let _ = stdin.flush();
+                }
+            }
+            w.stdin = None; // EOF either way
+        }
+        self.events.close();
+        for w in &mut self.workers {
+            if !graceful && matches!(w.child.try_wait(), Ok(None)) {
+                let _ = w.child.kill();
+            }
+            let _ = w.child.wait();
+            if let Some(r) = w.reader.take() {
+                let _ = r.join();
+            }
+        }
+        self.workers.clear();
+    }
+}
+
+impl Drop for ShardSession {
+    fn drop(&mut self) {
+        self.teardown(false);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sweep sharding
+// ---------------------------------------------------------------------------
+
+/// Per-batch memo of encoded blob bodies. Job encoding runs once per
+/// job per worker on the host's dispatch thread; without the memo every
+/// job re-serializes (and re-hashes) its layer's full artifacts just to
+/// discover the worker already holds them. Keys are the source buffer's
+/// address plus dimensions — sound because the memo lives inside a
+/// `JobSource` that borrows the cache/models for the whole batch, so
+/// the addresses are pinned (dimensions disambiguate zero-length
+/// buffers, whose dangling pointers all compare equal).
+#[derive(Default)]
+struct EncodeMemo {
+    entries: RefCell<HashMap<(u8, usize, usize, usize), (wire::BlobRef, Vec<u8>)>>,
+}
+
+impl EncodeMemo {
+    fn blob(
+        &self,
+        k: u8,
+        key: (usize, usize, usize),
+        tx: &mut BlobTx,
+        frames: &mut Vec<Frame>,
+        encode: impl FnOnce() -> (wire::BlobRef, Vec<u8>),
+    ) -> wire::BlobRef {
+        let mut entries = self.entries.borrow_mut();
+        let (hash, body) = entries.entry((k, key.0, key.1, key.2)).or_insert_with(encode);
+        tx.prehashed_ref(k, *hash, body, frames)
+    }
+
+    fn mat(&self, m: &Mat, tx: &mut BlobTx, frames: &mut Vec<Frame>) -> wire::BlobRef {
+        let key = (m.data.as_ptr() as usize, m.rows, m.cols);
+        self.blob(kind::BLOB_MAT, key, tx, frames, || wire::encode_mat_blob(m))
+    }
+
+    fn packed(&self, p: &PackedMat, tx: &mut BlobTx, frames: &mut Vec<Frame>) -> wire::BlobRef {
+        let key = (p as *const PackedMat as usize, 0, 0);
+        self.blob(kind::BLOB_PACKED, key, tx, frames, || wire::encode_packed_blob(p))
+    }
+
+    fn params(&self, p: &Params, tx: &mut BlobTx, frames: &mut Vec<Frame>) -> wire::BlobRef {
+        let key = (p as *const Params as usize, 0, 0);
+        self.blob(kind::BLOB_PARAMS, key, tx, frames, || wire::encode_params_blob(p))
+    }
+}
+
+fn wire_svd(
+    svd: &Svd,
+    memo: &EncodeMemo,
+    tx: &mut BlobTx,
+    frames: &mut Vec<Frame>,
+) -> WireSvd {
+    WireSvd {
+        u: memo.mat(&svd.u, tx, frames),
+        s: svd.s.clone(),
+        v: memo.mat(&svd.v, tx, frames),
+    }
+}
+
+struct SweepJobSource<'a> {
+    configs: &'a [SweepConfig],
+    cache: &'a LayerCache,
+    prep_rank: usize,
+    n_layers: usize,
+    memo: EncodeMemo,
+}
+
+impl JobSource for SweepJobSource<'_> {
+    fn n_jobs(&self) -> usize {
+        self.n_layers * self.configs.len()
+    }
+
+    fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame> {
+        let li = job % self.n_layers;
+        let c = &self.configs[job / self.n_layers];
+        let layer = &self.cache.layers[li];
+        let arts = b2_artifacts(self.cache, li, c);
+        let memo = &self.memo;
+        let mut frames = Vec::new();
+        let w_ref = memo.mat(arts.w, tx, &mut frames);
+        let scaling = match arts.scaling {
+            Scaling::Identity => WireScaling::Identity,
+            Scaling::Diagonal { d, d_inv } => {
+                WireScaling::Diagonal { d: d.clone(), d_inv: d_inv.clone() }
+            }
+            Scaling::Full { s, s_inv } => WireScaling::Full {
+                s: memo.mat(s, tx, &mut frames),
+                s_inv: memo.mat(s_inv, tx, &mut frames),
+            },
+        };
+        let msg = SweepJobMsg {
+            job_id: job as u64,
+            prep_rank: self.prep_rank,
+            config: c.clone(),
+            layer_name: layer.name.clone(),
+            w: w_ref,
+            scaling,
+            hessian: arts.hessian.map(|h| memo.mat(h, tx, &mut frames)),
+            qdeq0: arts.qdeq0.map(|m| memo.mat(m, tx, &mut frames)),
+            qdeq0_packed: arts.qdeq0_packed.map(|p| memo.packed(p, tx, &mut frames)),
+            resid: arts.resid.map(|svd| wire_svd(svd, memo, tx, &mut frames)),
+            spectra: arts.spectra.map(|sp| WireSpectra {
+                sw: wire_svd(&sp.sw_svd, memo, tx, &mut frames),
+                sw_frob2: sp.sw_frob2,
+                se: wire_svd(&sp.se_svd, memo, tx, &mut frames),
+                se_frob2: sp.se_frob2,
+                rank: sp.rank,
+                seed: sp.seed,
+            }),
+        };
+        frames.push(encode_sweep_job(&msg));
+        frames
+    }
+}
+
+/// Rebuild phase-B2 assembly parts from worker results (job-id order),
+/// reproducing the in-process engine's `Arc` layout exactly:
+///
+/// * **w-only / plain-QER** results share the packed base through the
+///   blob cache — which the runner seeded with the host's own
+///   `LayerCache` `Arc`s — so every rank/scaling variant of a cell
+///   aliases the very same buffer the in-process sweep would hand out
+///   (grid dedup + lock-step groups);
+/// * **every other** result gets a *fresh* `Arc` per result, because
+///   the in-process path quantizes per config and never shares those —
+///   even two byte-identical bases stay distinct, so pointer-based
+///   fleet grouping cannot coarsen across the wire. Dense bases are
+///   fresh per result for the same reason.
+fn sweep_parts(
+    msgs: Vec<ResultMsg>,
+    rx: &BlobRx,
+    configs: &[SweepConfig],
+    names: &[String],
+    n_layers: usize,
+    prep: &SweepPrep,
+) -> Result<Vec<(LinearOp, LayerMeta, LayerReport)>> {
+    let n_configs = configs.len();
+    let mut parts = Vec::with_capacity(msgs.len());
+    for (idx, msg) in msgs.into_iter().enumerate() {
+        let ResultMsg::Sweep(m) = msg else {
+            anyhow::bail!("unexpected fleet result in a sweep batch")
+        };
+        debug_assert_eq!(m.job_id as usize, idx);
+        let li = idx % n_layers;
+        let shares_cell_base =
+            matches!(configs[idx / n_layers].method, Method::WOnly | Method::Qer);
+        let base = match m.base {
+            WireBase::Packed(h) if shares_cell_base => QuantBase::Packed(rx.packed(h)?),
+            WireBase::Packed(h) => QuantBase::Packed(Arc::new((*rx.packed(h)?).clone())),
+            WireBase::Dense(h) => QuantBase::Dense(Arc::new((*rx.mat(h)?).clone())),
+        };
+        let op = LinearOp::FactoredQlr { base, l: m.l, r: m.r };
+        let meta = LayerMeta { name: names[li].clone(), k_star: m.k_star, selection: m.selection };
+        let report = LayerReport {
+            name: names[li].clone(),
+            k_star: m.k_star,
+            weight_err: m.weight_err,
+            scaled_err: m.scaled_err,
+            // same amortization the in-process fan-out applies
+            scale_secs: prep.cache.layers[li].prep_secs / n_configs as f64,
+            qer_secs: m.qer_secs,
+        };
+        parts.push((op, meta, report));
+    }
+    Ok(parts)
+}
+
+/// [`SweepRunner`]'s multi-process counterpart: phases A + B1 run
+/// in-process, phase B2 fans out over a [`ShardSession`]'s workers.
+/// Outcomes are bit-identical to the in-process engine (module docs).
+pub struct ShardedSweepRunner<'a> {
+    params: &'a Params,
+    model_cfg: &'a ModelCfg,
+    calib: &'a CalibrationSet,
+    metrics: &'a Metrics,
+}
+
+impl<'a> ShardedSweepRunner<'a> {
+    /// A runner over one model + calibration set; `metrics` receives the
+    /// `sweep.*` prep timings and `shard.*` transfer counters.
+    pub fn new(
+        params: &'a Params,
+        model_cfg: &'a ModelCfg,
+        calib: &'a CalibrationSet,
+        metrics: &'a Metrics,
+    ) -> Self {
+        ShardedSweepRunner { params, model_cfg, calib, metrics }
+    }
+
+    /// Run the grid with phase B2 sharded across `session`'s workers;
+    /// one [`FactoredOutcome`] per config, aligned, bit-identical to
+    /// [`SweepRunner::run_factored`].
+    pub fn run_factored(
+        &self,
+        session: &mut ShardSession,
+        configs: &[SweepConfig],
+    ) -> Result<Vec<FactoredOutcome>> {
+        let names = Params::linear_names(self.model_cfg);
+        let n_layers = names.len();
+        if configs.is_empty() || n_layers == 0 {
+            return Ok(empty_outcomes(self.params, configs.len()));
+        }
+        let runner = SweepRunner::new(self.params, self.model_cfg, self.calib, self.metrics);
+        let prep = runner.prepare(configs);
+
+        // seed the host cache with the Arc'd artifacts being shipped, so
+        // results that reference them come back as these very buffers
+        {
+            let mut rx = session.rx().lock().unwrap();
+            for layer in &prep.cache.layers {
+                for arc in layer.qdeq0.values() {
+                    rx.seed_mat(arc);
+                }
+                for arc in layer.qdeq0_packed.values() {
+                    rx.seed_packed(arc);
+                }
+            }
+        }
+
+        let src = SweepJobSource {
+            configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers,
+            memo: EncodeMemo::default(),
+        };
+        let t0 = Instant::now();
+        let msgs = session.run_jobs(&src, self.metrics)?;
+        self.metrics.add("shard.sweep_secs", t0.elapsed().as_secs_f64());
+
+        let parts = {
+            let rx = session.rx().lock().unwrap();
+            sweep_parts(msgs, &rx, configs, &names, n_layers, &prep)?
+        };
+        Ok(assemble_outcomes(self.params, &names, configs.len(), parts, self.metrics))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet sharding
+// ---------------------------------------------------------------------------
+
+fn wire_model(
+    m: &FactoredModel,
+    memo: &EncodeMemo,
+    tx: &mut BlobTx,
+    frames: &mut Vec<Frame>,
+) -> WireModel {
+    let skeleton = memo.params(&m.skeleton, tx, frames);
+    let ops = m
+        .ops
+        .iter()
+        .map(|(name, op)| {
+            let wop = match op {
+                LinearOp::Dense(w) => WireLinearOp::Dense(memo.mat(w, tx, frames)),
+                LinearOp::FactoredQlr { base, l, r } => WireLinearOp::Factored {
+                    base: match base {
+                        QuantBase::Packed(p) => WireBase::Packed(memo.packed(p, tx, frames)),
+                        QuantBase::Dense(d) => WireBase::Dense(memo.mat(d, tx, frames)),
+                    },
+                    l: memo.mat(l, tx, frames),
+                    r: memo.mat(r, tx, frames),
+                },
+            };
+            (name.clone(), wop)
+        })
+        .collect();
+    WireModel { skeleton, ops }
+}
+
+struct FleetJobSource<'a> {
+    models: &'a [&'a FactoredModel],
+    groups: &'a [Vec<usize>],
+    jobs: &'a [FleetJob],
+    cfg: &'a ModelCfg,
+    batches: &'a [Vec<i32>],
+    b: usize,
+    t: usize,
+    memo: EncodeMemo,
+}
+
+impl JobSource for FleetJobSource<'_> {
+    fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame> {
+        let mut frames = Vec::new();
+        let (lockstep, member_ids, batches): (bool, Vec<usize>, Vec<Vec<i32>>) =
+            match self.jobs[job] {
+                FleetJob::Single(mi) => (false, vec![mi], self.batches.to_vec()),
+                FleetJob::GroupBatch(gi, bj) => {
+                    (true, self.groups[gi].clone(), vec![self.batches[bj].clone()])
+                }
+            };
+        let models = member_ids
+            .iter()
+            .map(|&mi| wire_model(self.models[mi], &self.memo, tx, &mut frames))
+            .collect();
+        let msg = FleetJobMsg {
+            job_id: job as u64,
+            lockstep,
+            cfg: self.cfg.clone(),
+            b: self.b,
+            t: self.t,
+            models,
+            batches,
+        };
+        frames.push(encode_fleet_job(&msg));
+        frames
+    }
+}
+
+/// Lock-step batched perplexity with the `(group × batch)` jobs sharded
+/// across `session`'s workers instead of the in-process pool. Grouping,
+/// job layout, and the f64 reduce are shared with
+/// [`fleet_perplexity`](crate::eval::fleet_perplexity), so the returned
+/// PPLs are bit-identical to it.
+pub fn fleet_perplexity_sharded(
+    session: &mut ShardSession,
+    models: &[&FactoredModel],
+    cfg: &ModelCfg,
+    batches: &[Vec<i32>],
+    b: usize,
+    t: usize,
+    metrics: &Metrics,
+) -> Result<Vec<f64>> {
+    let groups = group_by_shared_bases(models);
+    let jobs = fleet_job_list(&groups, batches.len());
+    if jobs.is_empty() {
+        return Ok(reduce_fleet_results(models.len(), &groups, &jobs, vec![]));
+    }
+    let src = FleetJobSource {
+        models,
+        groups: &groups,
+        jobs: &jobs,
+        cfg,
+        batches,
+        b,
+        t,
+        memo: EncodeMemo::default(),
+    };
+    let t0 = Instant::now();
+    let msgs = session.run_jobs(&src, metrics)?;
+    metrics.add("shard.fleet_secs", t0.elapsed().as_secs_f64());
+    let outs = msgs
+        .into_iter()
+        .map(|m| match m {
+            ResultMsg::Fleet(f) => Ok(match f.out {
+                FleetOut::Ppl(p) => FleetJobResult::Ppl(p),
+                FleetOut::Partials(p) => FleetJobResult::Partials(p),
+            }),
+            ResultMsg::Sweep(_) => {
+                Err(anyhow::anyhow!("unexpected sweep result in a fleet batch"))
+            }
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(reduce_fleet_results(models.len(), &groups, &jobs, outs))
+}
+
+// ---------------------------------------------------------------------------
+// the worker side
+// ---------------------------------------------------------------------------
+
+enum WorkMsg {
+    Sweep(Box<SweepJobMsg>),
+    Fleet(Box<FleetJobMsg>),
+}
+
+/// Execute one sweep job from wire artifacts — the same
+/// [`b2_job`](super::sweep) the in-process fan-out runs.
+fn run_sweep_job(
+    msg: &SweepJobMsg,
+    rx: &Mutex<BlobRx>,
+    tx: &Mutex<BlobTx>,
+) -> Result<Vec<Frame>, wire::WireError> {
+    // resolve shared artifacts (clone the Arcs out under a short lock)
+    let (w, scaling, hessian, qdeq0, qdeq0_packed, resid, spectra) = {
+        let rx = rx.lock().unwrap();
+        let w = rx.mat(msg.w)?;
+        let scaling = match &msg.scaling {
+            WireScaling::Identity => Scaling::Identity,
+            WireScaling::Diagonal { d, d_inv } => {
+                Scaling::Diagonal { d: d.clone(), d_inv: d_inv.clone() }
+            }
+            WireScaling::Full { s, s_inv } => Scaling::Full {
+                s: (*rx.mat(*s)?).clone(),
+                s_inv: (*rx.mat(*s_inv)?).clone(),
+            },
+        };
+        let hessian = msg.hessian.map(|h| rx.mat(h)).transpose()?;
+        let qdeq0 = msg.qdeq0.map(|h| rx.mat(h)).transpose()?;
+        let qdeq0_packed = msg.qdeq0_packed.map(|h| rx.packed(h)).transpose()?;
+        let resid = msg
+            .resid
+            .as_ref()
+            .map(|sv| {
+                Ok::<Svd, wire::WireError>(Svd {
+                    u: (*rx.mat(sv.u)?).clone(),
+                    s: sv.s.clone(),
+                    v: (*rx.mat(sv.v)?).clone(),
+                })
+            })
+            .transpose()?;
+        let spectra = msg
+            .spectra
+            .as_ref()
+            .map(|sp| {
+                Ok::<PreparedSpectra, wire::WireError>(PreparedSpectra {
+                    sw_svd: Svd {
+                        u: (*rx.mat(sp.sw.u)?).clone(),
+                        s: sp.sw.s.clone(),
+                        v: (*rx.mat(sp.sw.v)?).clone(),
+                    },
+                    sw_frob2: sp.sw_frob2,
+                    se_svd: Svd {
+                        u: (*rx.mat(sp.se.u)?).clone(),
+                        s: sp.se.s.clone(),
+                        v: (*rx.mat(sp.se.v)?).clone(),
+                    },
+                    se_frob2: sp.se_frob2,
+                    rank: sp.rank,
+                    seed: sp.seed,
+                })
+            })
+            .transpose()?;
+        (w, scaling, hessian, qdeq0, qdeq0_packed, resid, spectra)
+    };
+
+    let arts = B2Artifacts {
+        name: &msg.layer_name,
+        w: &w,
+        scaling: &scaling,
+        hessian: hessian.as_deref(),
+        qdeq0: qdeq0.as_deref(),
+        qdeq0_packed: qdeq0_packed.as_ref(),
+        resid: resid.as_ref(),
+        spectra: spectra.as_ref(),
+    };
+    let (res, report) = b2_job(&msg.config, msg.prep_rank, &arts);
+
+    let mut frames = Vec::new();
+    let mut tx = tx.lock().unwrap();
+    let base = match &res.packed {
+        Some(p) => WireBase::Packed(tx.packed_ref(p, &mut frames)),
+        None => WireBase::Dense(tx.mat_ref(&res.qdeq, &mut frames)),
+    };
+    let out = SweepResultMsg {
+        job_id: msg.job_id,
+        base,
+        l: res.l,
+        r: res.r,
+        k_star: res.k_star,
+        selection: res.selection,
+        weight_err: report.weight_err,
+        scaled_err: report.scaled_err,
+        qer_secs: report.qer_secs,
+    };
+    frames.push(encode_sweep_result(&out));
+    Ok(frames)
+}
+
+fn build_model(wm: &WireModel, rx: &BlobRx) -> Result<FactoredModel, wire::WireError> {
+    let skeleton = (*rx.params(wm.skeleton)?).clone();
+    let mut ops = Vec::with_capacity(wm.ops.len());
+    for (name, op) in &wm.ops {
+        let lop = match op {
+            WireLinearOp::Dense(h) => LinearOp::Dense((*rx.mat(*h)?).clone()),
+            WireLinearOp::Factored { base, l, r } => LinearOp::FactoredQlr {
+                base: match base {
+                    // shared Arc from the blob cache: group members alias
+                    // one buffer, so matmul_grouped's lock-step path fires
+                    WireBase::Packed(h) => QuantBase::Packed(rx.packed(*h)?),
+                    // fresh Arc per op, mirroring in-process dense bases
+                    // (never shared between outcomes)
+                    WireBase::Dense(h) => QuantBase::Dense(Arc::new((*rx.mat(*h)?).clone())),
+                },
+                l: (*rx.mat(*l)?).clone(),
+                r: (*rx.mat(*r)?).clone(),
+            },
+        };
+        ops.push((name.clone(), lop));
+    }
+    Ok(FactoredModel { skeleton, ops })
+}
+
+/// Execute one fleet job: a singleton's whole-stream PPL or one
+/// lock-step `(group, batch)` slice — the same code paths
+/// `eval::fleet::fleet_perplexity` runs in-process.
+fn run_fleet_job(msg: &FleetJobMsg, rx: &Mutex<BlobRx>) -> Result<FleetResultMsg, wire::WireError> {
+    let models: Vec<FactoredModel> = {
+        let rx = rx.lock().unwrap();
+        msg.models.iter().map(|wm| build_model(wm, &rx)).collect::<Result<_, _>>()?
+    };
+    if models.is_empty() || (msg.lockstep && msg.batches.len() != 1) {
+        return Err(wire::WireError::Malformed("inconsistent fleet job"));
+    }
+    let mask = vec![1.0f32; msg.b * msg.t];
+    let out = if msg.lockstep {
+        let refs: Vec<&FactoredModel> = models.iter().collect();
+        let fleet = FleetGroup::new(refs);
+        FleetOut::Partials(lm_nll_fleet(&fleet, &msg.cfg, &msg.batches[0], &mask, msg.b, msg.t))
+    } else {
+        FleetOut::Ppl(perplexity_native_masked(
+            &models[0],
+            &msg.cfg,
+            &msg.batches,
+            &mask,
+            msg.b,
+            msg.t,
+        ))
+    };
+    Ok(FleetResultMsg { job_id: msg.job_id, out })
+}
+
+/// The worker loop over arbitrary transports (stdin/stdout in
+/// production; in-memory buffers in the loopback tests).
+///
+/// Three threads: a reader decoding frames into a bounded job queue, the
+/// caller's thread computing, and a writer flushing result frames. The
+/// bounded queues are the backpressure: a slow worker stops reading, the
+/// pipe fills, and the host's feeder blocks instead of ballooning
+/// memory. `exit_after` is the fault-injection hook behind the
+/// `--exit-after` CLI flag: the worker stops (abruptly, from the host's
+/// point of view) after completing that many jobs.
+pub fn run_worker<R, W>(input: R, output: W, exit_after: Option<usize>) -> Result<()>
+where
+    R: Read + Send + 'static,
+    W: Write + Send + 'static,
+{
+    let rx = Arc::new(Mutex::new(BlobRx::new()));
+    let tx = Arc::new(Mutex::new(BlobTx::new()));
+    let jobs: Arc<BoundedQueue<WorkMsg>> = Arc::new(BoundedQueue::new(WORKER_QUEUE_CAP));
+    let results: Arc<BoundedQueue<Vec<Frame>>> = Arc::new(BoundedQueue::new(WORKER_QUEUE_CAP));
+
+    let reader = {
+        let rx = rx.clone();
+        let tx = tx.clone();
+        let jobs = jobs.clone();
+        std::thread::spawn(move || {
+            let mut input = input;
+            loop {
+                match wire::read_frame(&mut input) {
+                    Ok(Some(f)) => match f.kind {
+                        kind::SHUTDOWN => break,
+                        kind::BLOB_MAT | kind::BLOB_PACKED | kind::BLOB_PARAMS => {
+                            match rx.lock().unwrap().insert(f.kind, &f.payload) {
+                                // referencing a host-sent blob back needs
+                                // no re-upload
+                                Ok(h) => tx.lock().unwrap().mark_seen(h),
+                                Err(_) => break,
+                            }
+                        }
+                        kind::SWEEP_JOB => match decode_sweep_job(&f.payload) {
+                            Ok(m) => {
+                                if !jobs.push(WorkMsg::Sweep(Box::new(m))) {
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
+                        },
+                        kind::FLEET_JOB => match decode_fleet_job(&f.payload) {
+                            Ok(m) => {
+                                if !jobs.push(WorkMsg::Fleet(Box::new(m))) {
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
+                        },
+                        _ => break,
+                    },
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            jobs.close();
+        })
+    };
+
+    let writer = {
+        let results = results.clone();
+        std::thread::spawn(move || {
+            let mut out = BufWriter::new(output);
+            while let Some(frames) = results.pop() {
+                for fr in &frames {
+                    if fr.write_to(&mut out).is_err() {
+                        return;
+                    }
+                }
+                if out.flush().is_err() {
+                    return;
+                }
+            }
+            let _ = out.flush();
+        })
+    };
+
+    let mut done = 0usize;
+    while let Some(job) = jobs.pop() {
+        let frames = match job {
+            WorkMsg::Sweep(m) => run_sweep_job(&m, &rx, &tx)?,
+            WorkMsg::Fleet(m) => vec![encode_fleet_result(&run_fleet_job(&m, &rx)?)],
+        };
+        if !results.push(frames) {
+            break;
+        }
+        done += 1;
+        if exit_after == Some(done) {
+            break;
+        }
+    }
+    jobs.close();
+    results.close();
+    let _ = writer.join();
+    // the reader may be blocked on a live input; it exits on queue close,
+    // EOF, or process exit — never join it here
+    drop(reader);
+    Ok(())
+}
+
+/// Entry point behind `srr shard-worker`: speak the wire codec over
+/// stdin/stdout until shutdown or EOF. `--exit-after N` is the
+/// fault-injection hook the requeue tests use.
+pub fn worker_main(args: &Args) -> Result<()> {
+    let exit_after = args.get("exit-after").and_then(|s| s.parse::<usize>().ok());
+    run_worker(std::io::stdin(), std::io::stdout(), exit_after)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{QuantizerSpec, SweepConfig};
+    use crate::data::Corpus;
+    use crate::eval::fleet_perplexity;
+    use crate::model::{collect_calibration, synth::synth_lm_params};
+    use crate::qer::Method;
+    use crate::scaling::ScalingKind;
+    use std::io::Cursor;
+
+    /// An in-memory `Write` whose contents the test can inspect after
+    /// the worker's writer thread finishes.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn setup() -> (Params, ModelCfg, CalibrationSet) {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: 16,
+        };
+        let params = synth_lm_params(&cfg, 5, cfg.vocab);
+        let corpus = Corpus::generate(cfg.vocab, 4000, 6);
+        let batches: Vec<Vec<i32>> = (0..10).map(|i| corpus.train_batch(2, 16, i)).collect();
+        let calib = collect_calibration(&params, &cfg, &batches, 2, 16, 192);
+        (params, cfg, calib)
+    }
+
+    fn grid() -> Vec<SweepConfig> {
+        let mx = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        vec![
+            // w-only + two QER ranks of one cell: shared packed base
+            SweepConfig::new(mx, Method::WOnly, 0, ScalingKind::Identity),
+            SweepConfig::new(mx, Method::Qer, 4, ScalingKind::DiagRms),
+            SweepConfig::new(mx, Method::Qer, 8, ScalingKind::DiagRms),
+            // SRR family with its own quantization, plus a Hessian path
+            SweepConfig::new(mx, Method::QerSrr, 8, ScalingKind::Exact).seeded(5),
+            SweepConfig::new(
+                QuantizerSpec::Gptq { bits: 3, group: 64 },
+                Method::QerSrr,
+                8,
+                ScalingKind::DiagAbsMean,
+            ),
+        ]
+    }
+
+    fn assert_outcomes_identical(a: &[FactoredOutcome], b: &[FactoredOutcome]) {
+        assert_eq!(a.len(), b.len());
+        for (oa, ob) in a.iter().zip(b) {
+            assert_eq!(oa.model.ops.len(), ob.model.ops.len());
+            for (((na, opa), (nb, opb)), (ma, mb)) in
+                oa.model.ops.iter().zip(&ob.model.ops).zip(oa.meta.iter().zip(&ob.meta))
+            {
+                assert_eq!(na, nb);
+                assert_eq!(ma.k_star, mb.k_star, "{na}: k* differs");
+                match (opa, opb) {
+                    (
+                        LinearOp::FactoredQlr { base: ba, l: la, r: ra },
+                        LinearOp::FactoredQlr { base: bb, l: lb, r: rb },
+                    ) => {
+                        assert_eq!(la, lb, "{na}: L differs");
+                        assert_eq!(ra, rb, "{na}: R differs");
+                        assert_eq!(ba.densify(), bb.densify(), "{na}: base differs");
+                        assert_eq!(
+                            matches!(ba, QuantBase::Packed(_)),
+                            matches!(bb, QuantBase::Packed(_)),
+                            "{na}: packedness differs"
+                        );
+                    }
+                    _ => panic!("{na}: unexpected op shape"),
+                }
+            }
+            for (ra, rb) in oa.reports.iter().zip(&ob.reports) {
+                assert_eq!(ra.weight_err.to_bits(), rb.weight_err.to_bits());
+                assert_eq!(ra.scaled_err.to_bits(), rb.scaled_err.to_bits());
+            }
+        }
+    }
+
+    /// Tentpole (hermetic half): drive `run_worker` over in-memory pipes
+    /// with real sweep + fleet jobs and check the results merge
+    /// bit-identical to the in-process engines — no processes involved,
+    /// so this runs even where spawning is unavailable.
+    #[test]
+    fn worker_loopback_matches_in_process_sweep_and_fleet() {
+        let (params, cfg, calib) = setup();
+        let configs = grid();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let expect = runner.run_factored(&configs);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+        let n_layers = names.len();
+
+        // ---- sweep jobs through the worker loop ------------------------
+        let src = SweepJobSource {
+            configs: &configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers,
+            memo: EncodeMemo::default(),
+        };
+        let mut tx = BlobTx::new();
+        let mut input = Vec::new();
+        for j in 0..src.n_jobs() {
+            for f in src.encode(j, &mut tx) {
+                f.write_to(&mut input).unwrap();
+            }
+        }
+        shutdown_frame().write_to(&mut input).unwrap();
+        let out = SharedBuf::default();
+        run_worker(Cursor::new(input), out.clone(), None).unwrap();
+
+        // host-side merge: seed the cache like the sharded runner does
+        let mut rx = BlobRx::new();
+        for layer in &prep.cache.layers {
+            for a in layer.qdeq0.values() {
+                rx.seed_mat(a);
+            }
+            for a in layer.qdeq0_packed.values() {
+                rx.seed_packed(a);
+            }
+        }
+        let bytes = out.0.lock().unwrap().clone();
+        let mut msgs: Vec<Option<SweepResultMsg>> = (0..src.n_jobs()).map(|_| None).collect();
+        let mut cur = Cursor::new(&bytes[..]);
+        while let Some(f) = wire::read_frame(&mut cur).unwrap() {
+            match f.kind {
+                kind::BLOB_MAT | kind::BLOB_PACKED | kind::BLOB_PARAMS => {
+                    rx.insert(f.kind, &f.payload).unwrap();
+                }
+                kind::SWEEP_RESULT => {
+                    let m = decode_sweep_result(&f.payload).unwrap();
+                    let id = m.job_id as usize;
+                    assert!(msgs[id].is_none(), "duplicate result {id}");
+                    msgs[id] = Some(m);
+                }
+                other => panic!("unexpected frame kind {other}"),
+            }
+        }
+        let msgs: Vec<ResultMsg> = msgs
+            .into_iter()
+            .map(|m| ResultMsg::Sweep(Box::new(m.expect("job completed"))))
+            .collect();
+        let parts =
+            sweep_parts(msgs, &rx, &configs, &names, n_layers, &prep).unwrap();
+        let got = assemble_outcomes(&params, &names, configs.len(), parts, &metrics);
+        assert_outcomes_identical(&expect, &got);
+
+        // grid dedup survives the wire: the w-only + QER rank variants
+        // still alias one base per layer, and the sharded merge resolves
+        // it to the host cache's own Arc
+        let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+        let got_models: Vec<&FactoredModel> = got.iter().map(|o| &o.model).collect();
+        let exp_groups = group_by_shared_bases(&exp_models);
+        let got_groups = group_by_shared_bases(&got_models);
+        assert_eq!(exp_groups, got_groups, "lock-step grouping changed across the wire");
+        assert!(exp_groups.iter().any(|g| g.len() == 3), "expected a 3-member cell group");
+
+        // ---- fleet jobs through the worker loop ------------------------
+        let corpus = Corpus::generate(cfg.vocab, 4000, 7);
+        let batches: Vec<Vec<i32>> =
+            (0..3).map(|i| corpus.train_batch(2, cfg.seq_len, 50 + i)).collect();
+        let (b, t) = (2usize, cfg.seq_len);
+        let solo = fleet_perplexity(&got_models, &cfg, &batches, b, t);
+
+        let groups = group_by_shared_bases(&got_models);
+        let jobs = fleet_job_list(&groups, batches.len());
+        let fsrc = FleetJobSource {
+            models: &got_models,
+            groups: &groups,
+            jobs: &jobs,
+            cfg: &cfg,
+            batches: &batches,
+            b,
+            t,
+            memo: EncodeMemo::default(),
+        };
+        let mut ftx = BlobTx::new();
+        let mut finput = Vec::new();
+        for j in 0..fsrc.n_jobs() {
+            for f in fsrc.encode(j, &mut ftx) {
+                f.write_to(&mut finput).unwrap();
+            }
+        }
+        shutdown_frame().write_to(&mut finput).unwrap();
+        let fout = SharedBuf::default();
+        run_worker(Cursor::new(finput), fout.clone(), None).unwrap();
+
+        let fbytes = fout.0.lock().unwrap().clone();
+        let mut fres: Vec<Option<FleetResultMsg>> = (0..jobs.len()).map(|_| None).collect();
+        let mut cur = Cursor::new(&fbytes[..]);
+        while let Some(f) = wire::read_frame(&mut cur).unwrap() {
+            if f.kind == kind::FLEET_RESULT {
+                let m = decode_fleet_result(&f.payload).unwrap();
+                fres[m.job_id as usize] = Some(m);
+            }
+        }
+        let outs: Vec<FleetJobResult> = fres
+            .into_iter()
+            .map(|m| match m.expect("job completed").out {
+                FleetOut::Ppl(p) => FleetJobResult::Ppl(p),
+                FleetOut::Partials(p) => FleetJobResult::Partials(p),
+            })
+            .collect();
+        let sharded = reduce_fleet_results(got_models.len(), &groups, &jobs, outs);
+        assert_eq!(solo.len(), sharded.len());
+        for (i, (a, b)) in solo.iter().zip(&sharded).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "model {i}: ppl {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn worker_exit_after_truncates_results_cleanly() {
+        let (params, cfg, calib) = setup();
+        let configs = grid();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+        let src = SweepJobSource {
+            configs: &configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers: names.len(),
+            memo: EncodeMemo::default(),
+        };
+        let mut tx = BlobTx::new();
+        let mut input = Vec::new();
+        for j in 0..src.n_jobs() {
+            for f in src.encode(j, &mut tx) {
+                f.write_to(&mut input).unwrap();
+            }
+        }
+        // no shutdown frame: the worker dies by exit_after, as in a crash
+        let out = SharedBuf::default();
+        run_worker(Cursor::new(input), out.clone(), Some(3)).unwrap();
+        let bytes = out.0.lock().unwrap().clone();
+        let mut n_results = 0;
+        let mut cur = Cursor::new(&bytes[..]);
+        while let Some(f) = wire::read_frame(&mut cur).unwrap() {
+            if f.kind == kind::SWEEP_RESULT {
+                n_results += 1;
+            }
+        }
+        assert_eq!(n_results, 3, "exactly exit_after results, all complete frames");
+    }
+
+    #[test]
+    fn worker_binary_env_override_wins() {
+        let opts = ShardOptions {
+            binary: Some(PathBuf::from("/explicit/srr")),
+            ..Default::default()
+        };
+        assert_eq!(worker_binary(&opts).unwrap(), PathBuf::from("/explicit/srr"));
+    }
+}

@@ -48,10 +48,10 @@ use crate::qer::methods::RESID_SALT;
 use crate::qer::{
     correction_from_svd, reconstruct_prepared, Method, PreparedSpectra, QerConfig, QerResult,
 };
-use crate::quant::QuantCtx;
+use crate::quant::{PackedMat, QuantCtx};
 use crate::runtime::manifest::ModelCfg;
-use crate::scaling::ScalingKind;
-use crate::serve::FactoredModel;
+use crate::scaling::{Scaling, ScalingKind};
+use crate::serve::{FactoredModel, LinearOp};
 use crate::tensor::Mat;
 use crate::util::{pool, Rng};
 
@@ -65,7 +65,7 @@ use super::pipeline::{
 const N_ITER: usize = 4;
 
 /// One cell of a sweep grid.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SweepConfig {
     /// display/report label (defaults to `quantizer/method/rank/scaling`)
     pub label: String,
@@ -162,16 +162,52 @@ impl<'a> SweepRunner<'a> {
         let names = Params::linear_names(self.model_cfg);
         let n_layers = names.len();
         if configs.is_empty() || n_layers == 0 {
-            return configs
-                .iter()
-                .map(|_| FactoredOutcome {
-                    model: FactoredModel { skeleton: self.params.clone(), ops: vec![] },
-                    meta: vec![],
-                    reports: vec![],
-                })
-                .collect();
+            return empty_outcomes(self.params, configs.len());
         }
 
+        let prep = self.prepare(configs);
+
+        // ---- phase B2: per-(layer, config) fan-out ----------------------
+        let t_rec = Instant::now();
+        let n_jobs = n_layers * configs.len();
+        let parts: Vec<(LinearOp, LayerMeta, LayerReport)> = pool::par_map(n_jobs, |idx| {
+            let li = idx % n_layers;
+            let c = &configs[idx / n_layers];
+            let layer = &prep.cache.layers[li];
+            let t0 = Instant::now();
+            let arts = b2_artifacts(&prep.cache, li, c);
+            let (res, mut report) = b2_job(c, prep.prep_rank, &arts);
+            self.metrics.add("sweep.reconstruct_cpu_secs", t0.elapsed().as_secs_f64());
+            // prep is shared: charge each config its amortized share
+            report.scale_secs = layer.prep_secs / configs.len() as f64;
+            let meta = LayerMeta {
+                name: layer.name.clone(),
+                k_star: res.k_star,
+                selection: res.selection.clone(),
+            };
+            (res.into_factored(), meta, report)
+        });
+        self.metrics.add("sweep.reconstruct_secs", t_rec.elapsed().as_secs_f64());
+
+        let outcomes =
+            assemble_outcomes(self.params, &names, configs.len(), parts, self.metrics);
+        self.metrics.add("sweep.configs", configs.len() as f64);
+        self.metrics.add("sweep.layers", n_layers as f64);
+        self.metrics.add("sweep.cache_entries", prep.cache.entry_count() as f64);
+        outcomes
+    }
+
+    /// Phases A + B1: populate the shared-work [`LayerCache`] for
+    /// `configs` — every scaling / Hessian / k=0 quantization / spectra
+    /// the grid touches, plus the plain-QER residual SVDs — leaving only
+    /// the per-(layer, config) phase-B2 fan-out, which the in-process
+    /// [`SweepRunner::run_factored`] and the multi-process
+    /// [`ShardedSweepRunner`](super::shard::ShardedSweepRunner) execute
+    /// from the same cache (the sharded path ships the cached artifacts
+    /// over the wire instead of sharing memory).
+    pub(crate) fn prepare(&self, configs: &[SweepConfig]) -> SweepPrep {
+        let names = Params::linear_names(self.model_cfg);
+        let n_layers = names.len();
         let prep_rank = Self::prep_rank(configs);
         let any_hessian = configs.iter().any(|c| c.quantizer.needs_hessian());
 
@@ -292,115 +328,186 @@ impl<'a> SweepRunner<'a> {
         }
         self.metrics.add("sweep.shared_resid_secs", t_resid.elapsed().as_secs_f64());
 
-        // ---- phase B2: per-(layer, config) fan-out ----------------------
-        let t_rec = Instant::now();
-        let n_jobs = n_layers * configs.len();
-        let jobs: Vec<(QerResult, LayerReport)> = pool::par_map(n_jobs, |idx| {
-            let li = idx % n_layers;
-            let cj = idx / n_layers;
-            let c = &configs[cj];
-            let layer = &cache.layers[li];
-            let salt = layer_salt(&layer.name);
-            let t0 = Instant::now();
-
-            let res: QerResult = match c.method {
-                Method::WOnly => {
-                    let label = c.quantizer.label();
-                    let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
-                    // the Arc, not a copy: every rank/scaling variant of
-                    // this (quantizer, seed) cell serves the same buffer,
-                    // and the fleet evaluator groups outcomes by it
-                    let packed = layer.qdeq0_packed(&label, c.seed).cloned();
-                    QerResult {
-                        qdeq,
-                        packed,
-                        l: Mat::zeros(layer.w.rows, 0),
-                        r: Mat::zeros(0, layer.w.cols),
-                        k_star: 0,
-                        selection: None,
-                    }
-                }
-                Method::Qer => {
-                    let label = c.quantizer.label();
-                    let qdeq = (**layer.qdeq0(&label, c.seed).expect("qdeq prepared")).clone();
-                    let packed = layer.qdeq0_packed(&label, c.seed).cloned();
-                    let svd = cache
-                        .resid(li, &label, c.scaling, c.seed)
-                        .expect("residual SVD prepared");
-                    let scaling = layer.scaling(c.scaling);
-                    let (l, r) = correction_from_svd(svd, scaling, c.rank);
-                    QerResult { qdeq, packed, l, r, k_star: 0, selection: None }
-                }
-                _ => {
-                    let scaling = layer.scaling(c.scaling);
-                    let spectra = if c.method.needs_spectra() {
-                        layer.spectra(c.scaling, c.seed).map(|a| a.as_ref())
-                    } else {
-                        None
-                    };
-                    let ctx = layer.quant_ctx(c.quantizer.needs_hessian(), c.seed ^ salt);
-                    let q = c.quantizer.build();
-                    let qcfg = c.qer_config(prep_rank, salt);
-                    reconstruct_prepared(&layer.w, q.as_ref(), scaling, spectra, &ctx, &qcfg)
-                }
-            };
-
-            let scaling = layer.scaling(c.scaling);
-            // W_hat is formed transiently for the error report only; the
-            // outcome keeps the factored representation
-            let what = res.reconstruct();
-            self.metrics.add("sweep.reconstruct_cpu_secs", t0.elapsed().as_secs_f64());
-            let report = LayerReport {
-                name: layer.name.clone(),
-                k_star: res.k_star,
-                weight_err: layer.w.sub(&what).frob(),
-                scaled_err: scaling.apply(&layer.w.sub(&what)).frob(),
-                // prep is shared: charge each config its amortized share
-                scale_secs: layer.prep_secs / configs.len() as f64,
-                qer_secs: t0.elapsed().as_secs_f64(),
-            };
-            (res, report)
-        });
-        self.metrics.add("sweep.reconstruct_secs", t_rec.elapsed().as_secs_f64());
-
-        // ---- assemble one FactoredOutcome per config --------------------
-        let mut per_cfg: Vec<Vec<Option<(QerResult, LayerReport)>>> =
-            configs.iter().map(|_| (0..n_layers).map(|_| None).collect()).collect();
-        for (idx, job) in jobs.into_iter().enumerate() {
-            per_cfg[idx / n_layers][idx % n_layers] = Some(job);
-        }
-        let mut outcomes = Vec::with_capacity(configs.len());
-        for slots in per_cfg {
-            let mut skeleton = self.params.clone();
-            let mut ops = Vec::with_capacity(n_layers);
-            let mut meta = Vec::with_capacity(n_layers);
-            let mut reports = Vec::with_capacity(n_layers);
-            for (li, slot) in slots.into_iter().enumerate() {
-                let (res, report) = slot.expect("job completed");
-                self.metrics.add("ptq.scale_secs", report.scale_secs);
-                self.metrics.add("ptq.qer_secs", report.qer_secs);
-                self.metrics.incr("ptq.layers");
-                skeleton.unset(&names[li]);
-                meta.push(LayerMeta {
-                    name: names[li].clone(),
-                    k_star: res.k_star,
-                    selection: res.selection.clone(),
-                });
-                ops.push((names[li].clone(), res.into_factored()));
-                reports.push(report);
-            }
-            outcomes.push(FactoredOutcome {
-                model: FactoredModel { skeleton, ops },
-                meta,
-                reports,
-            });
-        }
-
-        self.metrics.add("sweep.configs", configs.len() as f64);
-        self.metrics.add("sweep.layers", n_layers as f64);
-        self.metrics.add("sweep.cache_entries", cache.entry_count() as f64);
-        outcomes
+        SweepPrep { cache, prep_rank }
     }
+}
+
+/// Output of [`SweepRunner::prepare`]: the populated cache plus the
+/// grid's preparation rank.
+pub(crate) struct SweepPrep {
+    /// shared artifacts for every layer, phases A + B1 complete
+    pub cache: LayerCache,
+    /// rank all shared factorizations were computed at
+    pub prep_rank: usize,
+}
+
+/// The shared artifacts one phase-B2 job consumes, borrowed from a
+/// [`LayerCache`] in-process or rebuilt from wire blobs on a shard
+/// worker. Only the fields the config's method touches are populated.
+pub(crate) struct B2Artifacts<'a> {
+    /// the linear's parameter name (derives the layer salt)
+    pub name: &'a str,
+    /// original weight
+    pub w: &'a Mat,
+    /// activation scaling for the config's kind
+    pub scaling: &'a Scaling,
+    /// GPTQ Hessian (quantizers that need one)
+    pub hessian: Option<&'a Mat>,
+    /// cached k=0 dequantized weight (w-only / plain-QER)
+    pub qdeq0: Option<&'a Mat>,
+    /// bit-packed encoding of `qdeq0` — handed to the outcome as the
+    /// `Arc` itself, so every rank/scaling variant of the cell serves
+    /// one buffer (the sharing the fleet evaluator groups on)
+    pub qdeq0_packed: Option<&'a Arc<PackedMat>>,
+    /// shared plain-QER residual SVD (QER)
+    pub resid: Option<&'a Svd>,
+    /// prepared (S·W, S·E) spectra (SRR family)
+    pub spectra: Option<&'a PreparedSpectra>,
+}
+
+/// Borrow the artifacts job `(layer, config)` needs out of the cache.
+pub(crate) fn b2_artifacts<'a>(
+    cache: &'a LayerCache,
+    li: usize,
+    c: &SweepConfig,
+) -> B2Artifacts<'a> {
+    let layer = &cache.layers[li];
+    let label = c.quantizer.label();
+    let wants_qdeq = matches!(c.method, Method::WOnly | Method::Qer);
+    B2Artifacts {
+        name: &layer.name,
+        w: &layer.w,
+        scaling: layer.scaling(c.scaling),
+        hessian: if c.quantizer.needs_hessian() { layer.hessian.as_deref() } else { None },
+        qdeq0: if wants_qdeq {
+            layer.qdeq0(&label, c.seed).map(|a| a.as_ref())
+        } else {
+            None
+        },
+        qdeq0_packed: if wants_qdeq { layer.qdeq0_packed(&label, c.seed) } else { None },
+        resid: if c.method == Method::Qer {
+            cache.resid(li, &label, c.scaling, c.seed).map(|a| a.as_ref())
+        } else {
+            None
+        },
+        spectra: if c.method.needs_spectra() {
+            layer.spectra(c.scaling, c.seed).map(|a| a.as_ref())
+        } else {
+            None
+        },
+    }
+}
+
+/// One phase-B2 reconstruction job, shared verbatim by the in-process
+/// fan-out and the shard workers — the bit-identity contract between the
+/// two paths is that both run exactly this function on the same
+/// artifacts. `scale_secs` in the returned report is 0; the caller
+/// charges the amortized shared-prep cost.
+pub(crate) fn b2_job(
+    c: &SweepConfig,
+    prep_rank: usize,
+    a: &B2Artifacts,
+) -> (QerResult, LayerReport) {
+    let salt = layer_salt(a.name);
+    let t0 = Instant::now();
+    let res: QerResult = match c.method {
+        Method::WOnly => {
+            let qdeq = a.qdeq0.expect("qdeq prepared").clone();
+            // the Arc, not a copy: every rank/scaling variant of this
+            // (quantizer, seed) cell serves the same buffer, and the
+            // fleet evaluator groups outcomes by it
+            let packed = a.qdeq0_packed.cloned();
+            QerResult {
+                qdeq,
+                packed,
+                l: Mat::zeros(a.w.rows, 0),
+                r: Mat::zeros(0, a.w.cols),
+                k_star: 0,
+                selection: None,
+            }
+        }
+        Method::Qer => {
+            let qdeq = a.qdeq0.expect("qdeq prepared").clone();
+            let packed = a.qdeq0_packed.cloned();
+            let svd = a.resid.expect("residual SVD prepared");
+            let (l, r) = correction_from_svd(svd, a.scaling, c.rank);
+            QerResult { qdeq, packed, l, r, k_star: 0, selection: None }
+        }
+        _ => {
+            let ctx = QuantCtx {
+                hessian: if c.quantizer.needs_hessian() { a.hessian.cloned() } else { None },
+                seed: c.seed ^ salt,
+            };
+            let q = c.quantizer.build();
+            let qcfg = c.qer_config(prep_rank, salt);
+            reconstruct_prepared(a.w, q.as_ref(), a.scaling, a.spectra, &ctx, &qcfg)
+        }
+    };
+
+    // W_hat is formed transiently for the error report only; the outcome
+    // keeps the factored representation
+    let what = res.reconstruct();
+    let report = LayerReport {
+        name: a.name.to_string(),
+        k_star: res.k_star,
+        weight_err: a.w.sub(&what).frob(),
+        scaled_err: a.scaling.apply(&a.w.sub(&what)).frob(),
+        scale_secs: 0.0,
+        qer_secs: t0.elapsed().as_secs_f64(),
+    };
+    (res, report)
+}
+
+/// The per-config outcomes every sweep produces when configs or layers
+/// are absent.
+pub(crate) fn empty_outcomes(params: &Params, n: usize) -> Vec<FactoredOutcome> {
+    (0..n)
+        .map(|_| FactoredOutcome {
+            model: FactoredModel { skeleton: params.clone(), ops: vec![] },
+            meta: vec![],
+            reports: vec![],
+        })
+        .collect()
+}
+
+/// Assemble one [`FactoredOutcome`] per config from completed phase-B2
+/// parts in job-id order (`idx = config_idx * n_layers + layer_idx`).
+/// Shared by the in-process and sharded paths so the merge — including
+/// the `ptq.*` metric accounting — is identical regardless of where the
+/// jobs ran.
+pub(crate) fn assemble_outcomes(
+    params: &Params,
+    names: &[String],
+    n_configs: usize,
+    parts: Vec<(LinearOp, LayerMeta, LayerReport)>,
+    metrics: &Metrics,
+) -> Vec<FactoredOutcome> {
+    let n_layers = names.len();
+    assert_eq!(parts.len(), n_configs * n_layers, "phase-B2 parts incomplete");
+    let mut per_cfg: Vec<Vec<Option<(LinearOp, LayerMeta, LayerReport)>>> =
+        (0..n_configs).map(|_| (0..n_layers).map(|_| None).collect()).collect();
+    for (idx, part) in parts.into_iter().enumerate() {
+        per_cfg[idx / n_layers][idx % n_layers] = Some(part);
+    }
+    let mut outcomes = Vec::with_capacity(n_configs);
+    for slots in per_cfg {
+        let mut skeleton = params.clone();
+        let mut ops = Vec::with_capacity(n_layers);
+        let mut meta = Vec::with_capacity(n_layers);
+        let mut reports = Vec::with_capacity(n_layers);
+        for (li, slot) in slots.into_iter().enumerate() {
+            let (op, m, report) = slot.expect("job completed");
+            metrics.add("ptq.scale_secs", report.scale_secs);
+            metrics.add("ptq.qer_secs", report.qer_secs);
+            metrics.incr("ptq.layers");
+            skeleton.unset(&names[li]);
+            meta.push(m);
+            ops.push((names[li].clone(), op));
+            reports.push(report);
+        }
+        outcomes.push(FactoredOutcome { model: FactoredModel { skeleton, ops }, meta, reports });
+    }
+    outcomes
 }
 
 /// Convenience wrapper mirroring `run_ptq`'s free-function shape.

@@ -1,0 +1,1700 @@
+//! Dependency-free binary wire codec for the multi-process shard plane.
+//!
+//! [`coordinator::shard`](super::shard) ships phase-B2 sweep jobs and
+//! fleet PPL jobs to `srr shard-worker` processes over stdin/stdout.
+//! Everything on that pipe is a [`Frame`]:
+//!
+//! ```text
+//! [magic "SRRW"][version u16][kind u8][0u8][payload_len u64]
+//! [payload bytes …][fnv1a64(payload) u64]
+//! ```
+//!
+//! * **versioned** — a reader refuses frames from a different
+//!   [`WIRE_VERSION`] ([`WireError::BadVersion`]), so a host never
+//!   silently exchanges jobs with a stale worker binary;
+//! * **length-prefixed** — readers know exactly how many payload bytes
+//!   to consume, and a pipe that ends mid-frame surfaces as
+//!   [`WireError::Truncated`] instead of a garbage decode;
+//! * **checksummed** — the payload carries an FNV-1a trailer; corruption
+//!   is [`WireError::BadChecksum`], never a silently wrong matrix.
+//!
+//! Large artifacts (weights, packed bases, skeleton [`Params`]) travel
+//! as **blobs**, content-addressed by a 128-bit FNV hash of their
+//! encoded bytes. A sender ([`BlobTx`]) emits each distinct blob once
+//! per connection and thereafter refers to it by hash; a receiver
+//! ([`BlobRx`]) caches decoded blobs in `Arc`s keyed by that hash. Two
+//! properties of the sweep/fleet data model ride on this:
+//!
+//! * the **M-fold grid dedup** — every w-only / plain-QER result of one
+//!   `(quantizer, seed)` cell references the same packed-base hash, so
+//!   the host rebuilds them as one shared `Arc<PackedMat>` exactly like
+//!   the in-process sweep engine hands out its `LayerCache` `Arc`s;
+//! * the **lock-step groups** — a fleet job's group members all resolve
+//!   their base to the same cached `Arc`, so
+//!   [`LinearOp::matmul_grouped`](crate::serve::LinearOp::matmul_grouped)
+//!   still sees pointer-identical buffers on the worker and decodes the
+//!   base once per group.
+//!
+//! Every message and payload kind round-trips bit-exactly (f32/f64 as
+//! IEEE-754 little-endian bytes) — property-tested below, including
+//! rank-0 adapters and all three [`PackScheme`] families.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::model::Params;
+use crate::qer::RankSelection;
+use crate::quant::packed::{PackScheme, PackedCodes, PackedMat};
+use crate::runtime::manifest::ModelCfg;
+use crate::runtime::TensorValue;
+use crate::scaling::ScalingKind;
+use crate::tensor::Mat;
+
+use super::pipeline::QuantizerSpec;
+use super::sweep::SweepConfig;
+use crate::qer::Method;
+
+/// Magic bytes opening every frame.
+pub const WIRE_MAGIC: [u8; 4] = *b"SRRW";
+/// Protocol version; readers refuse any other value.
+pub const WIRE_VERSION: u16 = 1;
+/// Upper bound on a frame payload (defense against garbage lengths).
+pub const MAX_FRAME_LEN: u64 = 1 << 32;
+
+/// Frame kinds (the `kind` byte of the header).
+pub mod kind {
+    /// blob: a dense matrix, content-addressed
+    pub const BLOB_MAT: u8 = 1;
+    /// blob: a bit-packed quantized matrix
+    pub const BLOB_PACKED: u8 = 2;
+    /// blob: a `Params` skeleton
+    pub const BLOB_PARAMS: u8 = 3;
+    /// host→worker: one phase-B2 sweep reconstruction job
+    pub const SWEEP_JOB: u8 = 4;
+    /// host→worker: one fleet PPL job (singleton or group×batch)
+    pub const FLEET_JOB: u8 = 5;
+    /// worker→host: a sweep job's factored result
+    pub const SWEEP_RESULT: u8 = 6;
+    /// worker→host: a fleet job's PPL / partial sums
+    pub const FLEET_RESULT: u8 = 7;
+    /// host→worker: drain and exit cleanly
+    pub const SHUTDOWN: u8 = 8;
+}
+
+/// Content-address of a blob: 128-bit FNV over its encoded bytes.
+pub type BlobRef = u128;
+
+/// Decode/IO failure. Any of these on a shard connection means the peer
+/// is broken; the host reacts by requeueing the worker's jobs.
+#[derive(Debug)]
+pub enum WireError {
+    /// the underlying pipe failed
+    Io(std::io::ErrorKind),
+    /// the stream ended inside a frame
+    Truncated,
+    /// the frame did not open with [`WIRE_MAGIC`]
+    BadMagic,
+    /// the peer speaks a different protocol version
+    BadVersion {
+        /// version advertised by the peer
+        got: u16,
+    },
+    /// the payload checksum did not match
+    BadChecksum,
+    /// structurally invalid payload (short buffer, bad tag, bad utf-8,
+    /// unknown blob reference, …)
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(k) => write!(f, "wire io error: {k:?}"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::BadVersion { got } => {
+                write!(f, "wire version {got} != supported {WIRE_VERSION}")
+            }
+            WireError::BadChecksum => write!(f, "frame checksum mismatch"),
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// FNV-1a over `bytes` (the frame checksum).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf29ce484222325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// 128-bit content hash: two decorrelated FNV-1a lanes. Used only to
+/// key blob caches within one shard session (dozens-to-thousands of
+/// artifacts), where a 2⁻¹²⁸ collision is not a practical concern.
+pub fn content_hash128(bytes: &[u8]) -> u128 {
+    let lo = fnv1a64(bytes);
+    // second lane: offset basis perturbed by a fixed odd constant so the
+    // lanes decorrelate while staying deterministic across processes
+    let hi = bytes
+        .iter()
+        .fold(0xcbf29ce484222325u64 ^ 0x9e3779b97f4a7c15, |h, &b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    ((hi as u128) << 64) | lo as u128
+}
+
+/// One length-prefixed, checksummed protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// frame kind (see [`kind`])
+    pub kind: u8,
+    /// the frame body (message or blob encoding)
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Serialize header + payload + checksum onto `w`.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut head = [0u8; 16];
+        head[0..4].copy_from_slice(&WIRE_MAGIC);
+        head[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+        head[6] = self.kind;
+        head[8..16].copy_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        w.write_all(&head)?;
+        w.write_all(&self.payload)?;
+        w.write_all(&fnv1a64(&self.payload).to_le_bytes())
+    }
+}
+
+fn read_fully<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, WireError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(filled),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.kind())),
+        }
+    }
+    Ok(filled)
+}
+
+/// Read one frame. `Ok(None)` is a clean end-of-stream exactly at a
+/// frame boundary; a stream ending anywhere inside a frame is
+/// [`WireError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, WireError> {
+    let mut head = [0u8; 16];
+    match read_fully(r, &mut head)? {
+        0 => return Ok(None),
+        16 => {}
+        _ => return Err(WireError::Truncated),
+    }
+    if head[0..4] != WIRE_MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    let version = u16::from_le_bytes([head[4], head[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion { got: version });
+    }
+    let kind = head[6];
+    let len = u64::from_le_bytes(head[8..16].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Malformed("frame length out of bounds"));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if read_fully(r, &mut payload)? != payload.len() {
+        return Err(WireError::Truncated);
+    }
+    let mut trailer = [0u8; 8];
+    if read_fully(r, &mut trailer)? != 8 {
+        return Err(WireError::Truncated);
+    }
+    if u64::from_le_bytes(trailer) != fnv1a64(&payload) {
+        return Err(WireError::BadChecksum);
+    }
+    Ok(Some(Frame { kind, payload }))
+}
+
+// ---------------------------------------------------------------------------
+// primitive payload encoding
+// ---------------------------------------------------------------------------
+
+/// Append-only payload builder (little-endian throughout).
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    /// An empty builder.
+    pub fn new() -> Self {
+        WireWriter { buf: Vec::new() }
+    }
+
+    /// Finish, yielding the payload bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    fn put_bool(&mut self, x: bool) {
+        self.buf.push(u8::from(x));
+    }
+
+    fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_usize(&mut self, x: usize) {
+        self.put_u64(x as u64);
+    }
+
+    fn put_u128(&mut self, x: u128) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_usize(xs.len());
+        self.buf.reserve(4 * xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn put_f64s(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        self.buf.reserve(8 * xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn put_i32s(&mut self, xs: &[i32]) {
+        self.put_usize(xs.len());
+        self.buf.reserve(4 * xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        self.buf.reserve(8 * xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked payload cursor.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// A cursor over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Whether the whole payload was consumed.
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Malformed("short payload"));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_bool(&mut self) -> Result<bool, WireError> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bad bool")),
+        }
+    }
+
+    fn get_u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn get_usize(&mut self) -> Result<usize, WireError> {
+        let x = self.get_u64()?;
+        usize::try_from(x).map_err(|_| WireError::Malformed("usize overflow"))
+    }
+
+    fn get_u128(&mut self) -> Result<u128, WireError> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    fn get_f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn get_str(&mut self) -> Result<String, WireError> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("bad utf-8"))
+    }
+
+    fn get_f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n.checked_mul(4).ok_or(WireError::Malformed("len overflow"))?)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn get_f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n.checked_mul(8).ok_or(WireError::Malformed("len overflow"))?)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn get_i32s(&mut self) -> Result<Vec<i32>, WireError> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n.checked_mul(4).ok_or(WireError::Malformed("len overflow"))?)?;
+        Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn get_u64s(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n.checked_mul(8).ok_or(WireError::Malformed("len overflow"))?)?;
+        Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// domain-type codecs
+// ---------------------------------------------------------------------------
+
+fn put_mat(w: &mut WireWriter, m: &Mat) {
+    w.put_usize(m.rows);
+    w.put_usize(m.cols);
+    w.put_f32s(&m.data);
+}
+
+fn get_mat(r: &mut WireReader) -> Result<Mat, WireError> {
+    let rows = r.get_usize()?;
+    let cols = r.get_usize()?;
+    let data = r.get_f32s()?;
+    if rows.checked_mul(cols) != Some(data.len()) {
+        return Err(WireError::Malformed("mat shape/data mismatch"));
+    }
+    Ok(Mat { rows, cols, data })
+}
+
+fn put_packed(w: &mut WireWriter, p: &PackedMat) {
+    w.put_usize(p.rows);
+    w.put_usize(p.cols);
+    match p.scheme {
+        PackScheme::MxintBlock { bits, block } => {
+            w.put_u8(0);
+            w.put_u32(bits);
+            w.put_usize(block);
+        }
+        PackScheme::UniformGroup { bits, group, symmetric } => {
+            w.put_u8(1);
+            w.put_u32(bits);
+            w.put_usize(group);
+            w.put_bool(symmetric);
+        }
+        PackScheme::GptqGrouped { bits, group } => {
+            w.put_u8(2);
+            w.put_u32(bits);
+            w.put_usize(group);
+        }
+    }
+    w.put_u32(p.codes.bits);
+    w.put_usize(p.codes.len);
+    w.put_u64s(p.codes.words());
+    w.put_f32s(&p.scales);
+    w.put_f32s(&p.los);
+}
+
+fn get_packed(r: &mut WireReader) -> Result<PackedMat, WireError> {
+    let rows = r.get_usize()?;
+    let cols = r.get_usize()?;
+    let scheme = match r.get_u8()? {
+        0 => PackScheme::MxintBlock { bits: r.get_u32()?, block: r.get_usize()? },
+        1 => PackScheme::UniformGroup {
+            bits: r.get_u32()?,
+            group: r.get_usize()?,
+            symmetric: r.get_bool()?,
+        },
+        2 => PackScheme::GptqGrouped { bits: r.get_u32()?, group: r.get_usize()? },
+        _ => return Err(WireError::Malformed("bad pack scheme tag")),
+    };
+    if scheme.group_len() == 0 {
+        return Err(WireError::Malformed("zero pack group"));
+    }
+    let bits = r.get_u32()?;
+    let len = r.get_usize()?;
+    let words = r.get_u64s()?;
+    // every arithmetic step is checked: a hostile/corrupt payload must
+    // surface as Malformed, never as an overflow panic
+    let n_elems = rows.checked_mul(cols).ok_or(WireError::Malformed("len overflow"))?;
+    let total_bits =
+        len.checked_mul(bits as usize).ok_or(WireError::Malformed("bit count overflow"))?;
+    if !(2..=32).contains(&bits) || len != n_elems || words.len() != total_bits.div_ceil(64) {
+        return Err(WireError::Malformed("packed code layout"));
+    }
+    let codes = PackedCodes::from_raw(bits, len, words);
+    let scales = r.get_f32s()?;
+    let los = r.get_f32s()?;
+    let gpr = cols.div_ceil(scheme.group_len());
+    let n_groups = rows.checked_mul(gpr).ok_or(WireError::Malformed("group count overflow"))?;
+    if scales.len() != n_groups {
+        return Err(WireError::Malformed("packed scale count"));
+    }
+    if scheme.is_symmetric() {
+        if !los.is_empty() {
+            return Err(WireError::Malformed("symmetric scheme with lower bounds"));
+        }
+    } else if los.len() != n_groups {
+        return Err(WireError::Malformed("packed lower-bound count"));
+    }
+    Ok(PackedMat { rows, cols, scheme, codes, scales, los })
+}
+
+fn put_tensor_value(w: &mut WireWriter, v: &TensorValue) {
+    match v {
+        TensorValue::F32 { shape, data } => {
+            w.put_u8(0);
+            w.put_u64s(&shape.iter().map(|&d| d as u64).collect::<Vec<_>>());
+            w.put_f32s(data);
+        }
+        TensorValue::I32 { shape, data } => {
+            w.put_u8(1);
+            w.put_u64s(&shape.iter().map(|&d| d as u64).collect::<Vec<_>>());
+            w.put_i32s(data);
+        }
+    }
+}
+
+fn get_tensor_value(r: &mut WireReader) -> Result<TensorValue, WireError> {
+    let tag = r.get_u8()?;
+    let shape: Vec<usize> = r.get_u64s()?.into_iter().map(|d| d as usize).collect();
+    let n = shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .ok_or(WireError::Malformed("shape overflow"))?;
+    match tag {
+        0 => {
+            let data = r.get_f32s()?;
+            if data.len() != n {
+                return Err(WireError::Malformed("tensor shape/data mismatch"));
+            }
+            Ok(TensorValue::F32 { shape, data })
+        }
+        1 => {
+            let data = r.get_i32s()?;
+            if data.len() != n {
+                return Err(WireError::Malformed("tensor shape/data mismatch"));
+            }
+            Ok(TensorValue::I32 { shape, data })
+        }
+        _ => Err(WireError::Malformed("bad tensor tag")),
+    }
+}
+
+fn put_params(w: &mut WireWriter, p: &Params) {
+    w.put_usize(p.order.len());
+    for n in &p.order {
+        w.put_str(n);
+    }
+    w.put_usize(p.by_name.len());
+    for (n, v) in &p.by_name {
+        w.put_str(n);
+        put_tensor_value(w, v);
+    }
+}
+
+fn get_params(r: &mut WireReader) -> Result<Params, WireError> {
+    let n_order = r.get_usize()?;
+    let mut order = Vec::with_capacity(n_order.min(1 << 16));
+    for _ in 0..n_order {
+        order.push(r.get_str()?);
+    }
+    let mut params = Params::new(order);
+    let n_set = r.get_usize()?;
+    for _ in 0..n_set {
+        let name = r.get_str()?;
+        let value = get_tensor_value(r)?;
+        if !params.order.iter().any(|n| *n == name) {
+            return Err(WireError::Malformed("param outside order"));
+        }
+        params.set(&name, value);
+    }
+    Ok(params)
+}
+
+fn put_method(w: &mut WireWriter, m: &Method) {
+    match m {
+        Method::WOnly => w.put_u8(0),
+        Method::Qer => w.put_u8(1),
+        Method::QerSrr => w.put_u8(2),
+        Method::IterativeLowRank { iters } => {
+            w.put_u8(3);
+            w.put_usize(*iters);
+        }
+        Method::PreserveOnly => w.put_u8(4),
+        Method::FixedSplitHalf => w.put_u8(5),
+        Method::SrrSingleSvd => w.put_u8(6),
+    }
+}
+
+fn get_method(r: &mut WireReader) -> Result<Method, WireError> {
+    Ok(match r.get_u8()? {
+        0 => Method::WOnly,
+        1 => Method::Qer,
+        2 => Method::QerSrr,
+        3 => Method::IterativeLowRank { iters: r.get_usize()? },
+        4 => Method::PreserveOnly,
+        5 => Method::FixedSplitHalf,
+        6 => Method::SrrSingleSvd,
+        _ => return Err(WireError::Malformed("bad method tag")),
+    })
+}
+
+fn put_scaling_kind(w: &mut WireWriter, k: ScalingKind) {
+    w.put_u8(match k {
+        ScalingKind::Identity => 0,
+        ScalingKind::DiagRms => 1,
+        ScalingKind::DiagAbsMean => 2,
+        ScalingKind::Exact => 3,
+    });
+}
+
+fn get_scaling_kind(r: &mut WireReader) -> Result<ScalingKind, WireError> {
+    Ok(match r.get_u8()? {
+        0 => ScalingKind::Identity,
+        1 => ScalingKind::DiagRms,
+        2 => ScalingKind::DiagAbsMean,
+        3 => ScalingKind::Exact,
+        _ => return Err(WireError::Malformed("bad scaling kind")),
+    })
+}
+
+fn put_quantizer(w: &mut WireWriter, q: &QuantizerSpec) {
+    match *q {
+        QuantizerSpec::Mxint { bits, block } => {
+            w.put_u8(0);
+            w.put_u32(bits);
+            w.put_usize(block);
+        }
+        QuantizerSpec::Uniform { bits, group, symmetric } => {
+            w.put_u8(1);
+            w.put_u32(bits);
+            w.put_usize(group);
+            w.put_bool(symmetric);
+        }
+        QuantizerSpec::Gptq { bits, group } => {
+            w.put_u8(2);
+            w.put_u32(bits);
+            w.put_usize(group);
+        }
+        QuantizerSpec::QuipSharp { bits } => {
+            w.put_u8(3);
+            w.put_u32(bits);
+        }
+    }
+}
+
+fn get_quantizer(r: &mut WireReader) -> Result<QuantizerSpec, WireError> {
+    Ok(match r.get_u8()? {
+        0 => QuantizerSpec::Mxint { bits: r.get_u32()?, block: r.get_usize()? },
+        1 => QuantizerSpec::Uniform {
+            bits: r.get_u32()?,
+            group: r.get_usize()?,
+            symmetric: r.get_bool()?,
+        },
+        2 => QuantizerSpec::Gptq { bits: r.get_u32()?, group: r.get_usize()? },
+        3 => QuantizerSpec::QuipSharp { bits: r.get_u32()? },
+        _ => return Err(WireError::Malformed("bad quantizer tag")),
+    })
+}
+
+fn put_sweep_config(w: &mut WireWriter, c: &SweepConfig) {
+    w.put_str(&c.label);
+    put_quantizer(w, &c.quantizer);
+    put_method(w, &c.method);
+    w.put_usize(c.rank);
+    put_scaling_kind(w, c.scaling);
+    w.put_u64(c.seed);
+}
+
+fn get_sweep_config(r: &mut WireReader) -> Result<SweepConfig, WireError> {
+    Ok(SweepConfig {
+        label: r.get_str()?,
+        quantizer: get_quantizer(r)?,
+        method: get_method(r)?,
+        rank: r.get_usize()?,
+        scaling: get_scaling_kind(r)?,
+        seed: r.get_u64()?,
+    })
+}
+
+fn put_selection(w: &mut WireWriter, s: &RankSelection) {
+    w.put_usize(s.k_star);
+    w.put_f64s(&s.objective);
+    w.put_f64s(&s.rho_sw);
+    w.put_f64s(&s.rho_se);
+    w.put_f32s(&s.sw_spectrum);
+}
+
+fn get_selection(r: &mut WireReader) -> Result<RankSelection, WireError> {
+    Ok(RankSelection {
+        k_star: r.get_usize()?,
+        objective: r.get_f64s()?,
+        rho_sw: r.get_f64s()?,
+        rho_se: r.get_f64s()?,
+        sw_spectrum: r.get_f32s()?,
+    })
+}
+
+fn put_model_cfg(w: &mut WireWriter, c: &ModelCfg) {
+    w.put_str(&c.name);
+    w.put_usize(c.vocab);
+    w.put_usize(c.d_model);
+    w.put_usize(c.n_heads);
+    w.put_usize(c.n_layers);
+    w.put_usize(c.d_ff);
+    w.put_usize(c.seq_len);
+}
+
+fn get_model_cfg(r: &mut WireReader) -> Result<ModelCfg, WireError> {
+    Ok(ModelCfg {
+        name: r.get_str()?,
+        vocab: r.get_usize()?,
+        d_model: r.get_usize()?,
+        n_heads: r.get_usize()?,
+        n_layers: r.get_usize()?,
+        d_ff: r.get_usize()?,
+        seq_len: r.get_usize()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// blob dedup
+// ---------------------------------------------------------------------------
+
+/// Encode `m` as a blob body plus its content hash. Callers that
+/// reference the same artifact many times (the shard host's job
+/// encoding) cache the pair instead of re-serializing per reference.
+pub fn encode_mat_blob(m: &Mat) -> (BlobRef, Vec<u8>) {
+    let mut w = WireWriter::new();
+    put_mat(&mut w, m);
+    let bytes = w.into_bytes();
+    (content_hash128(&bytes), bytes)
+}
+
+/// [`encode_mat_blob`] for packed bases.
+pub fn encode_packed_blob(p: &PackedMat) -> (BlobRef, Vec<u8>) {
+    let mut w = WireWriter::new();
+    put_packed(&mut w, p);
+    let bytes = w.into_bytes();
+    (content_hash128(&bytes), bytes)
+}
+
+/// [`encode_mat_blob`] for `Params` skeletons.
+pub fn encode_params_blob(p: &Params) -> (BlobRef, Vec<u8>) {
+    let mut w = WireWriter::new();
+    put_params(&mut w, p);
+    let bytes = w.into_bytes();
+    (content_hash128(&bytes), bytes)
+}
+
+/// Per-connection sender state: remembers which blob hashes the peer
+/// already holds, so each distinct artifact crosses the pipe once.
+#[derive(Default)]
+pub struct BlobTx {
+    sent: HashSet<BlobRef>,
+}
+
+impl BlobTx {
+    /// Fresh sender state (nothing sent yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark `h` as already held by the peer (used by a worker for blobs
+    /// it *received* from the host — referencing them back needs no
+    /// re-upload).
+    pub fn mark_seen(&mut self, h: BlobRef) {
+        self.sent.insert(h);
+    }
+
+    fn owned_ref(
+        &mut self,
+        k: u8,
+        hash: BlobRef,
+        body: Vec<u8>,
+        frames: &mut Vec<Frame>,
+    ) -> BlobRef {
+        if self.sent.insert(hash) {
+            frames.push(Frame { kind: k, payload: body });
+        }
+        hash
+    }
+
+    /// Reference a pre-encoded blob by its precomputed hash, queueing a
+    /// frame (copying `body`) only on first use for this connection.
+    pub fn prehashed_ref(
+        &mut self,
+        k: u8,
+        hash: BlobRef,
+        body: &[u8],
+        frames: &mut Vec<Frame>,
+    ) -> BlobRef {
+        if self.sent.insert(hash) {
+            frames.push(Frame { kind: k, payload: body.to_vec() });
+        }
+        hash
+    }
+
+    /// Reference `m`, queueing a [`kind::BLOB_MAT`] frame on first use.
+    pub fn mat_ref(&mut self, m: &Mat, frames: &mut Vec<Frame>) -> BlobRef {
+        let (h, body) = encode_mat_blob(m);
+        self.owned_ref(kind::BLOB_MAT, h, body, frames)
+    }
+
+    /// Reference `p`, queueing a [`kind::BLOB_PACKED`] frame on first use.
+    pub fn packed_ref(&mut self, p: &PackedMat, frames: &mut Vec<Frame>) -> BlobRef {
+        let (h, body) = encode_packed_blob(p);
+        self.owned_ref(kind::BLOB_PACKED, h, body, frames)
+    }
+
+    /// Reference `p`, queueing a [`kind::BLOB_PARAMS`] frame on first use.
+    pub fn params_ref(&mut self, p: &Params, frames: &mut Vec<Frame>) -> BlobRef {
+        let (h, body) = encode_params_blob(p);
+        self.owned_ref(kind::BLOB_PARAMS, h, body, frames)
+    }
+}
+
+/// Receiver-side blob cache: hash → decoded `Arc`. First insert wins, so
+/// every later reference to the same content aliases one buffer — this
+/// is what reconstructs the sweep grid's `Arc` dedup (and the fleet
+/// evaluator's lock-step groups) on the far side of the pipe.
+#[derive(Default)]
+pub struct BlobRx {
+    mats: HashMap<BlobRef, Arc<Mat>>,
+    packed: HashMap<BlobRef, Arc<PackedMat>>,
+    params: HashMap<BlobRef, Arc<Params>>,
+}
+
+impl BlobRx {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode and cache a blob frame; returns its content hash. Keeps
+    /// the existing `Arc` if the hash is already present.
+    pub fn insert(&mut self, k: u8, payload: &[u8]) -> Result<BlobRef, WireError> {
+        let h = content_hash128(payload);
+        let mut r = WireReader::new(payload);
+        match k {
+            kind::BLOB_MAT => {
+                let m = get_mat(&mut r)?;
+                self.mats.entry(h).or_insert_with(|| Arc::new(m));
+            }
+            kind::BLOB_PACKED => {
+                let p = get_packed(&mut r)?;
+                self.packed.entry(h).or_insert_with(|| Arc::new(p));
+            }
+            kind::BLOB_PARAMS => {
+                let p = get_params(&mut r)?;
+                self.params.entry(h).or_insert_with(|| Arc::new(p));
+            }
+            _ => return Err(WireError::Malformed("not a blob kind")),
+        }
+        Ok(h)
+    }
+
+    /// Pre-register an outgoing matrix under its wire hash, so incoming
+    /// references resolve to this very `Arc` (the host seeds its cache
+    /// with the `LayerCache` artifacts it ships out — results that
+    /// reference them come back sharing the *same* buffers the
+    /// in-process sweep would have handed out).
+    pub fn seed_mat(&mut self, m: &Arc<Mat>) -> BlobRef {
+        let (h, _) = encode_mat_blob(m);
+        self.mats.entry(h).or_insert_with(|| m.clone());
+        h
+    }
+
+    /// [`BlobRx::seed_mat`] for packed bases.
+    pub fn seed_packed(&mut self, p: &Arc<PackedMat>) -> BlobRef {
+        let (h, _) = encode_packed_blob(p);
+        self.packed.entry(h).or_insert_with(|| p.clone());
+        h
+    }
+
+    /// Resolve a matrix reference.
+    pub fn mat(&self, h: BlobRef) -> Result<Arc<Mat>, WireError> {
+        self.mats.get(&h).cloned().ok_or(WireError::Malformed("unknown mat blob"))
+    }
+
+    /// Resolve a packed-base reference.
+    pub fn packed(&self, h: BlobRef) -> Result<Arc<PackedMat>, WireError> {
+        self.packed.get(&h).cloned().ok_or(WireError::Malformed("unknown packed blob"))
+    }
+
+    /// Resolve a `Params` skeleton reference.
+    pub fn params(&self, h: BlobRef) -> Result<Arc<Params>, WireError> {
+        self.params.get(&h).cloned().ok_or(WireError::Malformed("unknown params blob"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// An SVD shipped by reference: `u`/`v` as matrix blobs, spectrum inline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSvd {
+    /// left factor blob
+    pub u: BlobRef,
+    /// singular values (descending)
+    pub s: Vec<f32>,
+    /// right factor blob
+    pub v: BlobRef,
+}
+
+/// [`PreparedSpectra`](crate::qer::PreparedSpectra) on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSpectra {
+    /// randomized SVD of S·W
+    pub sw: WireSvd,
+    /// ‖S·W‖²_F
+    pub sw_frob2: f64,
+    /// randomized SVD of the scaled probe S·E
+    pub se: WireSvd,
+    /// ‖S·E‖²_F
+    pub se_frob2: f64,
+    /// rank the SVDs were computed at
+    pub rank: usize,
+    /// sweep-level seed the spectra derive from
+    pub seed: u64,
+}
+
+/// [`Scaling`](crate::scaling::Scaling) on the wire (full matrices by
+/// reference, diagonals inline).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireScaling {
+    /// S = I
+    Identity,
+    /// diagonal S with its inverse
+    Diagonal {
+        /// diag(S)
+        d: Vec<f32>,
+        /// diag(S⁻¹)
+        d_inv: Vec<f32>,
+    },
+    /// full S (QERA-exact) with its inverse, as matrix blobs
+    Full {
+        /// S blob
+        s: BlobRef,
+        /// S⁻¹ blob
+        s_inv: BlobRef,
+    },
+}
+
+/// A quantized base by reference: packed codes or a dense fallback.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WireBase {
+    /// bit-packed base ([`kind::BLOB_PACKED`] reference)
+    Packed(BlobRef),
+    /// dense dequantized base ([`kind::BLOB_MAT`] reference)
+    Dense(BlobRef),
+}
+
+/// One phase-B2 reconstruction job: a [`SweepConfig`]-keyed spec plus
+/// references to every shared artifact the job consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepJobMsg {
+    /// dense job index (`config_idx * n_layers + layer_idx`)
+    pub job_id: u64,
+    /// the grid's preparation rank (bit-identity contract)
+    pub prep_rank: usize,
+    /// the grid cell being reconstructed
+    pub config: SweepConfig,
+    /// the linear's parameter name (seeds the layer salt)
+    pub layer_name: String,
+    /// original weight blob
+    pub w: BlobRef,
+    /// activation scaling for the config's kind
+    pub scaling: WireScaling,
+    /// GPTQ Hessian blob (quantizers that need one)
+    pub hessian: Option<BlobRef>,
+    /// cached k=0 dequantized weight (w-only / plain-QER configs)
+    pub qdeq0: Option<BlobRef>,
+    /// bit-packed encoding of `qdeq0`
+    pub qdeq0_packed: Option<BlobRef>,
+    /// shared plain-QER residual SVD (QER configs)
+    pub resid: Option<WireSvd>,
+    /// prepared (S·W, S·E) spectra (SRR-family configs)
+    pub spectra: Option<WireSpectra>,
+}
+
+/// A completed phase-B2 job: the factored decomposition plus the error
+/// report fields the host folds into its [`LayerReport`]s.
+///
+/// [`LayerReport`]: super::pipeline::LayerReport
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepResultMsg {
+    /// echoes [`SweepJobMsg::job_id`]
+    pub job_id: u64,
+    /// the quantized base (packed when the quantizer packs)
+    pub base: WireBase,
+    /// left adapter factor (rank 0 ⇒ zero columns)
+    pub l: Mat,
+    /// right adapter factor
+    pub r: Mat,
+    /// preserved rank chosen by SRR (0 otherwise)
+    pub k_star: usize,
+    /// the full k-selection trace (SRR only)
+    pub selection: Option<RankSelection>,
+    /// ‖W − Ŵ‖_F
+    pub weight_err: f64,
+    /// ‖S(W − Ŵ)‖_F
+    pub scaled_err: f64,
+    /// worker seconds in quantize + reconstruct
+    pub qer_secs: f64,
+}
+
+/// One linear of a fleet-job model.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireLinearOp {
+    /// unquantized dense weight blob
+    Dense(BlobRef),
+    /// factored `Qdeq + L·R`
+    Factored {
+        /// the shared quantized base
+        base: WireBase,
+        /// left adapter blob
+        l: BlobRef,
+        /// right adapter blob
+        r: BlobRef,
+    },
+}
+
+/// A [`FactoredModel`](crate::serve::FactoredModel) on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireModel {
+    /// skeleton `Params` blob (shared by every member of a sweep)
+    pub skeleton: BlobRef,
+    /// (linear name, op) in `Params::linear_names` order
+    pub ops: Vec<(String, WireLinearOp)>,
+}
+
+/// One fleet PPL job: a singleton model over all batches, or one
+/// lock-step group over one batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetJobMsg {
+    /// dense job index into the host's fleet job list
+    pub job_id: u64,
+    /// true ⇒ lock-step group × single batch; false ⇒ singleton × all
+    /// batches (the exact split `eval::fleet::fleet_perplexity` uses)
+    pub lockstep: bool,
+    /// model architecture
+    pub cfg: ModelCfg,
+    /// sequences per batch
+    pub b: usize,
+    /// tokens per sequence
+    pub t: usize,
+    /// the models to score (singleton: exactly one)
+    pub models: Vec<WireModel>,
+    /// token batches (lock-step: exactly one)
+    pub batches: Vec<Vec<i32>>,
+}
+
+/// A completed fleet job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetResultMsg {
+    /// echoes [`FleetJobMsg::job_id`]
+    pub job_id: u64,
+    /// singleton PPL or per-member partial sums
+    pub out: FleetOut,
+}
+
+/// Fleet job output payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetOut {
+    /// a singleton's full perplexity
+    Ppl(f64),
+    /// per-member (Σ nll, Σ tokens) for one lock-step batch
+    Partials(Vec<(f64, f64)>),
+}
+
+fn put_wire_svd(w: &mut WireWriter, s: &WireSvd) {
+    w.put_u128(s.u);
+    w.put_f32s(&s.s);
+    w.put_u128(s.v);
+}
+
+fn get_wire_svd(r: &mut WireReader) -> Result<WireSvd, WireError> {
+    Ok(WireSvd { u: r.get_u128()?, s: r.get_f32s()?, v: r.get_u128()? })
+}
+
+fn put_opt<T>(w: &mut WireWriter, v: &Option<T>, f: impl FnOnce(&mut WireWriter, &T)) {
+    match v {
+        Some(x) => {
+            w.put_u8(1);
+            f(w, x);
+        }
+        None => w.put_u8(0),
+    }
+}
+
+fn get_opt<T>(
+    r: &mut WireReader,
+    f: impl FnOnce(&mut WireReader) -> Result<T, WireError>,
+) -> Result<Option<T>, WireError> {
+    match r.get_u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(f(r)?)),
+        _ => Err(WireError::Malformed("bad option tag")),
+    }
+}
+
+fn put_wire_base(w: &mut WireWriter, b: &WireBase) {
+    match b {
+        WireBase::Packed(h) => {
+            w.put_u8(0);
+            w.put_u128(*h);
+        }
+        WireBase::Dense(h) => {
+            w.put_u8(1);
+            w.put_u128(*h);
+        }
+    }
+}
+
+fn get_wire_base(r: &mut WireReader) -> Result<WireBase, WireError> {
+    Ok(match r.get_u8()? {
+        0 => WireBase::Packed(r.get_u128()?),
+        1 => WireBase::Dense(r.get_u128()?),
+        _ => return Err(WireError::Malformed("bad base tag")),
+    })
+}
+
+/// Encode a sweep job into its frame.
+pub fn encode_sweep_job(m: &SweepJobMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    w.put_usize(m.prep_rank);
+    put_sweep_config(&mut w, &m.config);
+    w.put_str(&m.layer_name);
+    w.put_u128(m.w);
+    match &m.scaling {
+        WireScaling::Identity => w.put_u8(0),
+        WireScaling::Diagonal { d, d_inv } => {
+            w.put_u8(1);
+            w.put_f32s(d);
+            w.put_f32s(d_inv);
+        }
+        WireScaling::Full { s, s_inv } => {
+            w.put_u8(2);
+            w.put_u128(*s);
+            w.put_u128(*s_inv);
+        }
+    }
+    put_opt(&mut w, &m.hessian, |w, h| w.put_u128(*h));
+    put_opt(&mut w, &m.qdeq0, |w, h| w.put_u128(*h));
+    put_opt(&mut w, &m.qdeq0_packed, |w, h| w.put_u128(*h));
+    put_opt(&mut w, &m.resid, put_wire_svd);
+    put_opt(&mut w, &m.spectra, |w, sp| {
+        put_wire_svd(w, &sp.sw);
+        w.put_f64(sp.sw_frob2);
+        put_wire_svd(w, &sp.se);
+        w.put_f64(sp.se_frob2);
+        w.put_usize(sp.rank);
+        w.put_u64(sp.seed);
+    });
+    Frame { kind: kind::SWEEP_JOB, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::SWEEP_JOB`] payload.
+pub fn decode_sweep_job(payload: &[u8]) -> Result<SweepJobMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    Ok(SweepJobMsg {
+        job_id: r.get_u64()?,
+        prep_rank: r.get_usize()?,
+        config: get_sweep_config(&mut r)?,
+        layer_name: r.get_str()?,
+        w: r.get_u128()?,
+        scaling: match r.get_u8()? {
+            0 => WireScaling::Identity,
+            1 => WireScaling::Diagonal { d: r.get_f32s()?, d_inv: r.get_f32s()? },
+            2 => WireScaling::Full { s: r.get_u128()?, s_inv: r.get_u128()? },
+            _ => return Err(WireError::Malformed("bad scaling tag")),
+        },
+        hessian: get_opt(&mut r, |r| r.get_u128())?,
+        qdeq0: get_opt(&mut r, |r| r.get_u128())?,
+        qdeq0_packed: get_opt(&mut r, |r| r.get_u128())?,
+        resid: get_opt(&mut r, get_wire_svd)?,
+        spectra: get_opt(&mut r, |r| {
+            Ok(WireSpectra {
+                sw: get_wire_svd(r)?,
+                sw_frob2: r.get_f64()?,
+                se: get_wire_svd(r)?,
+                se_frob2: r.get_f64()?,
+                rank: r.get_usize()?,
+                seed: r.get_u64()?,
+            })
+        })?,
+    })
+}
+
+/// Encode a sweep result into its frame.
+pub fn encode_sweep_result(m: &SweepResultMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    put_wire_base(&mut w, &m.base);
+    put_mat(&mut w, &m.l);
+    put_mat(&mut w, &m.r);
+    w.put_usize(m.k_star);
+    put_opt(&mut w, &m.selection, put_selection);
+    w.put_f64(m.weight_err);
+    w.put_f64(m.scaled_err);
+    w.put_f64(m.qer_secs);
+    Frame { kind: kind::SWEEP_RESULT, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::SWEEP_RESULT`] payload.
+pub fn decode_sweep_result(payload: &[u8]) -> Result<SweepResultMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    Ok(SweepResultMsg {
+        job_id: r.get_u64()?,
+        base: get_wire_base(&mut r)?,
+        l: get_mat(&mut r)?,
+        r: get_mat(&mut r)?,
+        k_star: r.get_usize()?,
+        selection: get_opt(&mut r, get_selection)?,
+        weight_err: r.get_f64()?,
+        scaled_err: r.get_f64()?,
+        qer_secs: r.get_f64()?,
+    })
+}
+
+/// Encode a fleet job into its frame.
+pub fn encode_fleet_job(m: &FleetJobMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    w.put_bool(m.lockstep);
+    put_model_cfg(&mut w, &m.cfg);
+    w.put_usize(m.b);
+    w.put_usize(m.t);
+    w.put_usize(m.models.len());
+    for model in &m.models {
+        w.put_u128(model.skeleton);
+        w.put_usize(model.ops.len());
+        for (name, op) in &model.ops {
+            w.put_str(name);
+            match op {
+                WireLinearOp::Dense(h) => {
+                    w.put_u8(0);
+                    w.put_u128(*h);
+                }
+                WireLinearOp::Factored { base, l, r } => {
+                    w.put_u8(1);
+                    put_wire_base(&mut w, base);
+                    w.put_u128(*l);
+                    w.put_u128(*r);
+                }
+            }
+        }
+    }
+    w.put_usize(m.batches.len());
+    for batch in &m.batches {
+        w.put_i32s(batch);
+    }
+    Frame { kind: kind::FLEET_JOB, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::FLEET_JOB`] payload.
+pub fn decode_fleet_job(payload: &[u8]) -> Result<FleetJobMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    let job_id = r.get_u64()?;
+    let lockstep = r.get_bool()?;
+    let cfg = get_model_cfg(&mut r)?;
+    let b = r.get_usize()?;
+    let t = r.get_usize()?;
+    let n_models = r.get_usize()?;
+    let mut models = Vec::with_capacity(n_models.min(1 << 16));
+    for _ in 0..n_models {
+        let skeleton = r.get_u128()?;
+        let n_ops = r.get_usize()?;
+        let mut ops = Vec::with_capacity(n_ops.min(1 << 16));
+        for _ in 0..n_ops {
+            let name = r.get_str()?;
+            let op = match r.get_u8()? {
+                0 => WireLinearOp::Dense(r.get_u128()?),
+                1 => WireLinearOp::Factored {
+                    base: get_wire_base(&mut r)?,
+                    l: r.get_u128()?,
+                    r: r.get_u128()?,
+                },
+                _ => return Err(WireError::Malformed("bad op tag")),
+            };
+            ops.push((name, op));
+        }
+        models.push(WireModel { skeleton, ops });
+    }
+    let n_batches = r.get_usize()?;
+    let mut batches = Vec::with_capacity(n_batches.min(1 << 16));
+    for _ in 0..n_batches {
+        batches.push(r.get_i32s()?);
+    }
+    Ok(FleetJobMsg { job_id, lockstep, cfg, b, t, models, batches })
+}
+
+/// Encode a fleet result into its frame.
+pub fn encode_fleet_result(m: &FleetResultMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    match &m.out {
+        FleetOut::Ppl(p) => {
+            w.put_u8(0);
+            w.put_f64(*p);
+        }
+        FleetOut::Partials(parts) => {
+            w.put_u8(1);
+            w.put_usize(parts.len());
+            for &(nll, tok) in parts {
+                w.put_f64(nll);
+                w.put_f64(tok);
+            }
+        }
+    }
+    Frame { kind: kind::FLEET_RESULT, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::FLEET_RESULT`] payload.
+pub fn decode_fleet_result(payload: &[u8]) -> Result<FleetResultMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    let job_id = r.get_u64()?;
+    let out = match r.get_u8()? {
+        0 => FleetOut::Ppl(r.get_f64()?),
+        1 => {
+            let n = r.get_usize()?;
+            let mut parts = Vec::with_capacity(n.min(1 << 16));
+            for _ in 0..n {
+                parts.push((r.get_f64()?, r.get_f64()?));
+            }
+            FleetOut::Partials(parts)
+        }
+        _ => return Err(WireError::Malformed("bad fleet out tag")),
+    };
+    Ok(FleetResultMsg { job_id, out })
+}
+
+/// The empty [`kind::SHUTDOWN`] frame.
+pub fn shutdown_frame() -> Frame {
+    Frame { kind: kind::SHUTDOWN, payload: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packed::PackAcc;
+    use crate::quant::QuantCtx;
+    use crate::util::{prop, Rng};
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut bytes = Vec::new();
+        frame.write_to(&mut bytes).unwrap();
+        let got = read_frame(&mut Cursor::new(&bytes)).unwrap().expect("one frame");
+        assert!(read_frame(&mut Cursor::new(&bytes[bytes.len()..])).unwrap().is_none());
+        got
+    }
+
+    fn sample_packed(g: &mut prop::Gen) -> PackedMat {
+        // cover every PackScheme family, via the real quantizers and via
+        // hand-packed affine grids
+        let spec = g.choice(&[
+            QuantizerSpec::Mxint { bits: 3, block: 32 },
+            QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: true },
+            QuantizerSpec::Uniform { bits: 3, group: 32, symmetric: false },
+            QuantizerSpec::Gptq { bits: 3, group: 32 },
+        ]);
+        let m = 32 * g.dim(2);
+        let n = 32 * g.dim(2);
+        let w = Mat::randn(m, n, 1.0, &mut g.rng);
+        let (_, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        packed.expect("packable family")
+    }
+
+    fn assert_packed_eq(a: &PackedMat, b: &PackedMat) {
+        assert_eq!((a.rows, a.cols, a.scheme), (b.rows, b.cols, b.scheme));
+        assert_eq!(a.scales, b.scales);
+        assert_eq!(a.los, b.los);
+        assert_eq!(a.codes.words(), b.codes.words());
+        assert_eq!(a.dequantize(), b.dequantize());
+    }
+
+    /// Satellite: every payload kind round-trips bit-exactly through a
+    /// frame — matrices (including zero-column rank-0 adapters), packed
+    /// bases of every scheme, params, and both job/result messages with
+    /// every optional field populated and absent.
+    #[test]
+    fn prop_frames_round_trip_all_payload_kinds() {
+        prop::check(0x51BE17, 12, |g| {
+            // --- packed blob ---------------------------------------------
+            let p = sample_packed(g);
+            let mut tx = BlobTx::new();
+            let mut rx = BlobRx::new();
+            let mut frames = Vec::new();
+            let hp = tx.packed_ref(&p, &mut frames);
+            assert_eq!(frames.len(), 1);
+            let fr = roundtrip(&frames[0]);
+            assert_eq!(fr.kind, kind::BLOB_PACKED);
+            assert_eq!(rx.insert(fr.kind, &fr.payload).unwrap(), hp);
+            assert_packed_eq(&rx.packed(hp).unwrap(), &p);
+
+            // --- mat blobs, including a rank-0 (zero-column) adapter -----
+            let rank = g.choice(&[0usize, 4, 8]);
+            let l = Mat::randn(p.rows, rank, 0.1, &mut g.rng);
+            let r = Mat::randn(rank, p.cols, 0.1, &mut g.rng);
+            let hl = tx.mat_ref(&l, &mut frames);
+            let f_l = roundtrip(frames.last().unwrap());
+            assert_eq!(rx.insert(f_l.kind, &f_l.payload).unwrap(), hl);
+            assert_eq!(*rx.mat(hl).unwrap(), l);
+
+            // --- sweep job with/without optionals ------------------------
+            let svd = WireSvd { u: hl, s: vec![3.0, 2.0, 1.0], v: hl };
+            let job = SweepJobMsg {
+                job_id: g.rng.next_u64(),
+                prep_rank: g.dim(32),
+                config: SweepConfig::new(
+                    g.choice(&[
+                        QuantizerSpec::Mxint { bits: 2, block: 32 },
+                        QuantizerSpec::QuipSharp { bits: 2 },
+                        QuantizerSpec::Gptq { bits: 3, group: 64 },
+                    ]),
+                    g.choice(&[
+                        Method::WOnly,
+                        Method::Qer,
+                        Method::QerSrr,
+                        Method::IterativeLowRank { iters: 3 },
+                        Method::PreserveOnly,
+                        Method::FixedSplitHalf,
+                        Method::SrrSingleSvd,
+                    ]),
+                    g.dim(16),
+                    g.choice(&[
+                        ScalingKind::Identity,
+                        ScalingKind::DiagRms,
+                        ScalingKind::DiagAbsMean,
+                        ScalingKind::Exact,
+                    ]),
+                )
+                .seeded(g.rng.next_u64()),
+                layer_name: "l0.wq".into(),
+                w: hl,
+                scaling: match g.rng.below(3) {
+                    0 => WireScaling::Identity,
+                    1 => WireScaling::Diagonal { d: vec![1.0, 2.0], d_inv: vec![1.0, 0.5] },
+                    _ => WireScaling::Full { s: hl, s_inv: hl },
+                },
+                hessian: if g.rng.below(2) == 0 { None } else { Some(hl) },
+                qdeq0: Some(hl),
+                qdeq0_packed: if g.rng.below(2) == 0 { None } else { Some(hp) },
+                resid: if g.rng.below(2) == 0 { None } else { Some(svd.clone()) },
+                spectra: if g.rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(WireSpectra {
+                        sw: svd.clone(),
+                        sw_frob2: 1.25,
+                        se: svd,
+                        se_frob2: 0.5,
+                        rank: 8,
+                        seed: 7,
+                    })
+                },
+            };
+            let fr = roundtrip(&encode_sweep_job(&job));
+            assert_eq!(fr.kind, kind::SWEEP_JOB);
+            assert_eq!(decode_sweep_job(&fr.payload).unwrap(), job);
+
+            // --- sweep result (rank-0 adapters included) -----------------
+            let res = SweepResultMsg {
+                job_id: job.job_id,
+                base: if g.rng.below(2) == 0 { WireBase::Packed(hp) } else { WireBase::Dense(hl) },
+                l,
+                r,
+                k_star: g.rng.below(9),
+                selection: if g.rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(RankSelection {
+                        k_star: 2,
+                        objective: vec![0.5, 0.25, 0.75],
+                        rho_sw: vec![1.0, 0.5],
+                        rho_se: vec![1.0, 0.25],
+                        sw_spectrum: vec![4.0, 2.0, 1.0],
+                    })
+                },
+                weight_err: g.rng.uniform_in(0.0, 10.0),
+                scaled_err: g.rng.uniform_in(0.0, 10.0),
+                qer_secs: 0.125,
+            };
+            let fr = roundtrip(&encode_sweep_result(&res));
+            assert_eq!(decode_sweep_result(&fr.payload).unwrap(), res);
+
+            // --- fleet job / result --------------------------------------
+            let fjob = FleetJobMsg {
+                job_id: 3,
+                lockstep: g.rng.below(2) == 1,
+                cfg: ModelCfg {
+                    name: "t".into(),
+                    vocab: 48,
+                    d_model: 64,
+                    n_heads: 2,
+                    n_layers: 1,
+                    d_ff: 96,
+                    seq_len: 8,
+                },
+                b: 2,
+                t: 8,
+                models: vec![WireModel {
+                    skeleton: hl,
+                    ops: vec![
+                        ("l0.wq".into(), WireLinearOp::Dense(hl)),
+                        (
+                            "l0.wk".into(),
+                            WireLinearOp::Factored {
+                                base: WireBase::Packed(hp),
+                                l: hl,
+                                r: hl,
+                            },
+                        ),
+                    ],
+                }],
+                batches: vec![(0..16).collect(), vec![]],
+            };
+            let fr = roundtrip(&encode_fleet_job(&fjob));
+            assert_eq!(decode_fleet_job(&fr.payload).unwrap(), fjob);
+
+            let fres = FleetResultMsg {
+                job_id: 3,
+                out: if fjob.lockstep {
+                    FleetOut::Partials(vec![(1.5, 16.0), (2.25, 16.0)])
+                } else {
+                    FleetOut::Ppl(12.75)
+                },
+            };
+            let fr = roundtrip(&encode_fleet_result(&fres));
+            assert_eq!(decode_fleet_result(&fr.payload).unwrap(), fres);
+        });
+    }
+
+    #[test]
+    fn params_round_trip() {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 16,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 16,
+            seq_len: 4,
+        };
+        let mut params = crate::model::synth::synth_lm_params(&cfg, 5, cfg.vocab);
+        params.unset("l0.wq"); // skeletons ship with linears unset
+        let mut w = WireWriter::new();
+        put_params(&mut w, &params);
+        let bytes = w.into_bytes();
+        let got = get_params(&mut WireReader::new(&bytes)).unwrap();
+        assert_eq!(got.order, params.order);
+        assert_eq!(got.by_name.len(), params.by_name.len());
+        assert!(got.get("l0.wq").is_err());
+        assert_eq!(got.get_mat("embed").unwrap(), params.get_mat("embed").unwrap());
+        // i32 tensors survive too
+        let mut p2 = Params::new(vec!["embed".into()]);
+        p2.set("embed", TensorValue::i32(vec![3], vec![1, -2, 3]));
+        let mut w2 = WireWriter::new();
+        put_params(&mut w2, &p2);
+        let b2 = w2.into_bytes();
+        let got2 = get_params(&mut WireReader::new(&b2)).unwrap();
+        match got2.get("embed").unwrap() {
+            TensorValue::I32 { data, .. } => assert_eq!(data, &vec![1, -2, 3]),
+            _ => panic!("wrong tensor tag"),
+        }
+    }
+
+    #[test]
+    fn hand_packed_affine_scheme_round_trips() {
+        // the asymmetric UniformGroup path with a ragged trailing group
+        let scheme = PackScheme::UniformGroup { bits: 4, group: 3, symmetric: false };
+        let (rows, cols) = (2usize, 7usize);
+        let gpr = cols.div_ceil(3);
+        let mut acc = PackAcc::default();
+        for i in 0..rows {
+            for gidx in 0..gpr {
+                acc.scales.push(0.5 + i as f32);
+                acc.los.push(-1.0 + gidx as f32 * 0.25);
+            }
+            for j in 0..cols {
+                acc.codes.push(((i * cols + j) % 16) as u32);
+            }
+        }
+        let p = acc.into_packed(rows, cols, scheme);
+        let mut w = WireWriter::new();
+        put_packed(&mut w, &p);
+        let bytes = w.into_bytes();
+        let got = get_packed(&mut WireReader::new(&bytes)).unwrap();
+        assert_packed_eq(&got, &p);
+    }
+
+    #[test]
+    fn blob_dedup_sends_once_and_aliases_on_receive() {
+        let mut rng = Rng::new(9);
+        let m = Mat::randn(8, 8, 1.0, &mut rng);
+        let mut tx = BlobTx::new();
+        let mut frames = Vec::new();
+        let h1 = tx.mat_ref(&m, &mut frames);
+        let h2 = tx.mat_ref(&m, &mut frames);
+        let h3 = tx.mat_ref(&m.clone(), &mut frames); // equal content, new alloc
+        assert_eq!(h1, h2);
+        assert_eq!(h1, h3);
+        assert_eq!(frames.len(), 1, "one upload for three references");
+
+        let mut rx = BlobRx::new();
+        rx.insert(frames[0].kind, &frames[0].payload).unwrap();
+        // replay of the same blob keeps the first Arc
+        rx.insert(frames[0].kind, &frames[0].payload).unwrap();
+        let a = rx.mat(h1).unwrap();
+        let b = rx.mat(h1).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "references alias one buffer");
+
+        // mark_seen suppresses the upload entirely (worker referencing a
+        // host-sent blob back)
+        let mut tx2 = BlobTx::new();
+        tx2.mark_seen(h1);
+        let mut frames2 = Vec::new();
+        assert_eq!(tx2.mat_ref(&m, &mut frames2), h1);
+        assert!(frames2.is_empty());
+
+        // host-side seeding resolves to the seeded Arc itself
+        let arc = Arc::new(m);
+        let mut rx2 = BlobRx::new();
+        let hs = rx2.seed_mat(&arc);
+        assert_eq!(hs, h1);
+        assert!(Arc::ptr_eq(&rx2.mat(hs).unwrap(), &arc));
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected() {
+        let frame = Frame { kind: kind::SWEEP_JOB, payload: vec![7u8; 100] };
+        let mut bytes = Vec::new();
+        frame.write_to(&mut bytes).unwrap();
+        // chop anywhere inside the frame (header, payload, checksum)
+        for cut in [1usize, 8, 15, 16, 60, bytes.len() - 1] {
+            let got = read_frame(&mut Cursor::new(&bytes[..cut]));
+            assert!(
+                matches!(got, Err(WireError::Truncated)),
+                "cut at {cut}: {got:?}"
+            );
+        }
+        // clean EOF at a frame boundary is Ok(None)
+        assert!(read_frame(&mut Cursor::new(&[] as &[u8])).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let frame = Frame { kind: kind::FLEET_RESULT, payload: vec![1, 2, 3, 4, 5] };
+        let mut bytes = Vec::new();
+        frame.write_to(&mut bytes).unwrap();
+        for flip in [16usize, 18, 20] {
+            let mut corrupt = bytes.clone();
+            corrupt[flip] ^= 0x40;
+            let got = read_frame(&mut Cursor::new(&corrupt));
+            assert!(
+                matches!(got, Err(WireError::BadChecksum)),
+                "flip at {flip}: {got:?}"
+            );
+        }
+        // a flipped trailer byte also fails
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        assert!(matches!(read_frame(&mut Cursor::new(&bytes)), Err(WireError::BadChecksum)));
+    }
+
+    #[test]
+    fn cross_version_header_is_refused() {
+        let frame = shutdown_frame();
+        let mut bytes = Vec::new();
+        frame.write_to(&mut bytes).unwrap();
+        bytes[4] = WIRE_VERSION as u8 + 1; // bump the version field
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Err(WireError::BadVersion { got }) => assert_eq!(got, WIRE_VERSION + 1),
+            other => panic!("expected BadVersion, got {other:?}"),
+        }
+        // and bad magic is its own refusal
+        let mut bad = Vec::new();
+        frame.write_to(&mut bad).unwrap();
+        bad[0] = b'X';
+        assert!(matches!(read_frame(&mut Cursor::new(&bad)), Err(WireError::BadMagic)));
+    }
+
+    #[test]
+    fn malformed_payloads_error_not_panic() {
+        // short payloads, bad tags, inconsistent shapes
+        assert!(decode_sweep_job(&[]).is_err());
+        assert!(decode_sweep_result(&[0u8; 4]).is_err());
+        assert!(decode_fleet_job(&[9u8; 9]).is_err());
+        let mut rx = BlobRx::new();
+        assert!(rx.insert(kind::BLOB_MAT, &[1, 2, 3]).is_err());
+        assert!(rx.insert(kind::SWEEP_JOB, &[]).is_err());
+        // mat with a lying shape header
+        let mut w = WireWriter::new();
+        w.put_usize(4);
+        w.put_usize(4);
+        w.put_f32s(&[0.0; 3]);
+        let bytes = w.into_bytes();
+        assert!(get_mat(&mut WireReader::new(&bytes)).is_err());
+        assert!(rx.mat(42).is_err());
+    }
+
+    #[test]
+    fn shutdown_frame_round_trips_empty() {
+        let fr = roundtrip(&shutdown_frame());
+        assert_eq!(fr.kind, kind::SHUTDOWN);
+        assert!(fr.payload.is_empty());
+    }
+}

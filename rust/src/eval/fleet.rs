@@ -171,6 +171,87 @@ pub fn fleet_footprint(models: &[&FactoredModel]) -> FleetFootprint {
     }
 }
 
+/// One unit of fleet-eval work. The job layout — and therefore the f64
+/// reduce order — is shared between the in-process [`fleet_perplexity`]
+/// and the multi-process
+/// [`fleet_perplexity_sharded`](crate::coordinator::shard::fleet_perplexity_sharded),
+/// which is what keeps the two paths bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum FleetJob {
+    /// singleton group → the existing single-outcome path over all
+    /// batches (the model index)
+    Single(usize),
+    /// (group index, batch index) lock-step slice
+    GroupBatch(usize, usize),
+}
+
+/// The canonical job layout for `groups` over `n_batches` batches:
+/// singleton groups take one whole-stream job, multi-member groups one
+/// job per batch, in group order.
+pub(crate) fn fleet_job_list(groups: &[Vec<usize>], n_batches: usize) -> Vec<FleetJob> {
+    let mut jobs: Vec<FleetJob> = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        if group.len() == 1 {
+            jobs.push(FleetJob::Single(group[0]));
+        } else {
+            for bj in 0..n_batches {
+                jobs.push(FleetJob::GroupBatch(gi, bj));
+            }
+        }
+    }
+    jobs
+}
+
+/// A completed [`FleetJob`]'s output.
+pub(crate) enum FleetJobResult {
+    /// a singleton's full perplexity
+    Ppl(f64),
+    /// per-member (Σ nll, Σ tokens) for one lock-step batch
+    Partials(Vec<(f64, f64)>),
+}
+
+/// Reduce per-job outputs (aligned with `jobs`) into per-model PPLs.
+/// Jobs are consumed in list order, so a group's partials accumulate in
+/// batch order and the f64 summation matches `perplexity_native`
+/// regardless of where the jobs executed.
+pub(crate) fn reduce_fleet_results(
+    n_models: usize,
+    groups: &[Vec<usize>],
+    jobs: &[FleetJob],
+    outs: Vec<FleetJobResult>,
+) -> Vec<f64> {
+    assert_eq!(jobs.len(), outs.len(), "fleet outputs incomplete");
+    let mut sums: HashMap<usize, Vec<(f64, f64)>> = groups
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| g.len() > 1)
+        .map(|(gi, g)| (gi, vec![(0.0f64, 0.0f64); g.len()]))
+        .collect();
+    let mut ppl = vec![f64::NAN; n_models];
+    for (job, out) in jobs.iter().zip(outs) {
+        match (job, out) {
+            (FleetJob::Single(mi), FleetJobResult::Ppl(p)) => ppl[*mi] = p,
+            (FleetJob::GroupBatch(gi, _), FleetJobResult::Partials(parts)) => {
+                let acc = sums.get_mut(gi).expect("group registered");
+                assert_eq!(acc.len(), parts.len(), "partial arity mismatch");
+                for (a, p) in acc.iter_mut().zip(parts) {
+                    a.0 += p.0;
+                    a.1 += p.1;
+                }
+            }
+            _ => panic!("fleet job/result shape mismatch"),
+        }
+    }
+    for (gi, group) in groups.iter().enumerate() {
+        if group.len() > 1 {
+            for (slot, &mi) in sums[&gi].iter().zip(group) {
+                ppl[mi] = (slot.0 / slot.1.max(1.0)).exp();
+            }
+        }
+    }
+    ppl
+}
+
 /// Lock-step batched perplexity over many factored models; returns PPLs
 /// aligned with `models`.
 ///
@@ -182,6 +263,8 @@ pub fn fleet_footprint(models: &[&FactoredModel]) -> FleetFootprint {
 /// [`perplexity_native`](super::ppl::perplexity_native) path. All
 /// (group × batch) jobs fan out over the shared worker pool; per-member
 /// sums reduce in batch order, so results match the per-outcome loop.
+/// The job layout and reduce are shared with the sharded evaluator
+/// (`coordinator::shard`), which runs the same jobs in worker processes.
 pub fn fleet_perplexity(
     models: &[&FactoredModel],
     cfg: &ModelCfg,
@@ -193,69 +276,24 @@ pub fn fleet_perplexity(
     // one mask allocation for the whole fleet (satellite: hoisted out of
     // every perplexity_native call)
     let mask = vec![1.0f32; b * t];
+    let jobs = fleet_job_list(&groups, batches.len());
 
-    enum Job {
-        /// singleton group → the existing single-outcome path
-        Single(usize),
-        /// (group index, batch index) lock-step slice
-        GroupBatch(usize, usize),
-    }
-    let mut jobs: Vec<Job> = Vec::new();
-    for (gi, group) in groups.iter().enumerate() {
-        if group.len() == 1 {
-            jobs.push(Job::Single(group[0]));
-        } else {
-            for bj in 0..batches.len() {
-                jobs.push(Job::GroupBatch(gi, bj));
-            }
-        }
-    }
-
-    enum Out {
-        Ppl(usize, f64),
-        /// (group index, per-member (Σ nll, Σ tokens) for one batch)
-        Partial(usize, Vec<(f64, f64)>),
-    }
-    let outs: Vec<Out> = pool::par_map(jobs.len(), |j| match jobs[j] {
-        Job::Single(mi) => Out::Ppl(
-            mi,
-            perplexity_native_masked(models[mi], cfg, batches, &mask, b, t),
-        ),
-        Job::GroupBatch(gi, bj) => {
+    let outs: Vec<FleetJobResult> = pool::par_map(jobs.len(), |j| match jobs[j] {
+        FleetJob::Single(mi) => FleetJobResult::Ppl(perplexity_native_masked(
+            models[mi],
+            cfg,
+            batches,
+            &mask,
+            b,
+            t,
+        )),
+        FleetJob::GroupBatch(gi, bj) => {
             let fleet = FleetGroup::new(groups[gi].iter().map(|&mi| models[mi]).collect());
-            Out::Partial(gi, lm_nll_fleet(&fleet, cfg, &batches[bj], &mask, b, t))
+            FleetJobResult::Partials(lm_nll_fleet(&fleet, cfg, &batches[bj], &mask, b, t))
         }
     });
 
-    // reduce — par_map preserves job order, so a group's partials arrive
-    // in batch order and the f64 accumulation matches perplexity_native
-    let mut sums: HashMap<usize, Vec<(f64, f64)>> = groups
-        .iter()
-        .enumerate()
-        .filter(|(_, g)| g.len() > 1)
-        .map(|(gi, g)| (gi, vec![(0.0f64, 0.0f64); g.len()]))
-        .collect();
-    let mut ppl = vec![f64::NAN; models.len()];
-    for out in outs {
-        match out {
-            Out::Ppl(mi, p) => ppl[mi] = p,
-            Out::Partial(gi, parts) => {
-                let acc = sums.get_mut(&gi).expect("group registered");
-                for (a, p) in acc.iter_mut().zip(parts) {
-                    a.0 += p.0;
-                    a.1 += p.1;
-                }
-            }
-        }
-    }
-    for (gi, group) in groups.iter().enumerate() {
-        if group.len() > 1 {
-            for (slot, &mi) in sums[&gi].iter().zip(group) {
-                ppl[mi] = (slot.0 / slot.1.max(1.0)).exp();
-            }
-        }
-    }
-    ppl
+    reduce_fleet_results(models.len(), &groups, &jobs, outs)
 }
 
 #[cfg(test)]

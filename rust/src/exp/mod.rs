@@ -77,6 +77,11 @@ pub fn registry() -> Vec<ExpEntry> {
             "§Perf fleet evaluator vs per-outcome PPL loops (writes BENCH_evalbatch.json)",
             perf::evalbatch_bench,
         ),
+        offline(
+            "shard",
+            "§Perf multi-process shard plane: scaling + bit-identity vs in-process (writes BENCH_shard.json)",
+            perf::shard_bench,
+        ),
     ]
 }
 
@@ -111,7 +116,7 @@ mod tests {
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
             "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep", "serve",
-            "evalbatch",
+            "evalbatch", "shard",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
@@ -122,6 +127,7 @@ mod tests {
         assert!(offline_ok("sweep"));
         assert!(offline_ok("serve"));
         assert!(offline_ok("evalbatch"));
+        assert!(offline_ok("shard"));
         assert!(!offline_ok("table1"));
         assert!(!offline_ok("nonexistent"));
     }

@@ -11,7 +11,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{
-    run_ptq, run_ptq_factored, run_sweep, run_sweep_factored, Metrics, QuantizerSpec,
+    fleet_perplexity_sharded, run_ptq, run_ptq_factored, run_sweep, run_sweep_factored,
+    FactoredOutcome, Metrics, QuantizerSpec, ShardOptions, ShardSession, ShardedSweepRunner,
     SweepConfig, SweepRunner,
 };
 use crate::eval::{fleet_footprint, fleet_perplexity, perplexity_native, perplexity_native_masked};
@@ -573,6 +574,163 @@ pub fn evalbatch_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         ),
     ]);
     bench::write_json("BENCH_evalbatch.json", &record)?;
+    Ok(vec![t])
+}
+
+/// Bit-level outcome comparison for the shard bench's equivalence gate.
+fn outcomes_identical(a: &[FactoredOutcome], b: &[FactoredOutcome]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(oa, ob)| {
+            oa.model.ops.len() == ob.model.ops.len()
+                && oa
+                    .model
+                    .ops
+                    .iter()
+                    .zip(&ob.model.ops)
+                    .all(|((na, opa), (nb, opb))| {
+                        na == nb
+                            && opa.rank() == opb.rank()
+                            && opa.densify() == opb.densify()
+                    })
+                && oa
+                    .reports
+                    .iter()
+                    .zip(&ob.reports)
+                    .all(|(ra, rb)| {
+                        ra.k_star == rb.k_star
+                            && ra.weight_err.to_bits() == rb.weight_err.to_bits()
+                            && ra.scaled_err.to_bits() == rb.scaled_err.to_bits()
+                    })
+        })
+}
+
+/// §Perf shard: the multi-process shard plane (`coordinator::shard`),
+/// recorded into `BENCH_shard.json`.
+///
+/// Two gates and one scaling measurement:
+/// 1. **equivalence** (hard failure + recorded flags) — sweep outcomes
+///    and fleet PPLs through N ∈ {1, 2} single-threaded worker
+///    processes are bit-identical to the in-process
+///    `SweepRunner::run_factored` + `fleet_perplexity`;
+/// 2. **scaling** — wall-clock of the sharded pipeline (phase-B2 jobs +
+///    fleet jobs over the wire) at N=2 vs N=1: the speedup is the shard
+///    plane's scaling efficiency on a 2-core runner, the number the
+///    future TCP/ssh multi-host transport inherits.
+pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+
+    // one shared-base cell (w-only + QER ranks — lock-step group across
+    // the wire) plus an SRR block whose per-job preserve/quantize/SVD
+    // work dominates, so the grid is B2-heavy and scaling is visible
+    let mut configs = vec![SweepConfig::new(quant, Method::WOnly, 0, ScalingKind::Identity)];
+    for rank in [4usize, 8] {
+        configs.push(SweepConfig::new(quant, Method::Qer, rank, ScalingKind::DiagRms));
+    }
+    let srr_ranks: &[usize] = if ctx.quick { &[4, 8, 16] } else { &[2, 4, 8, 12, 16, 24] };
+    for &rank in srr_ranks {
+        configs.push(SweepConfig::new(quant, Method::QerSrr, rank, ScalingKind::DiagRms));
+        configs.push(SweepConfig::new(quant, Method::FixedSplitHalf, rank, ScalingKind::DiagRms));
+    }
+
+    // serving-shaped eval stream for the fleet half
+    let (b_ev, t_ev) = (1usize, 12usize.min(fx.cfg.seq_len));
+    let n_batches = if ctx.quick { 4 } else { 8 };
+    let batches: Vec<Vec<i32>> =
+        (0..n_batches).map(|i| fx.corpus.train_batch(b_ev, t_ev, 90_000 + i)).collect();
+
+    // in-process reference (full host parallelism)
+    let metrics = Metrics::new();
+    let t0 = Instant::now();
+    let expect = SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics)
+        .run_factored(&configs);
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &fx.cfg, &batches, b_ev, t_ev);
+    let inproc_secs = t0.elapsed().as_secs_f64();
+
+    // sharded runs: N single-threaded workers each
+    let mut shard_secs = Vec::new();
+    let mut equiv_flags = Vec::new();
+    for n in [1usize, 2] {
+        let mut session = ShardSession::spawn(&ShardOptions::with_workers(n))?;
+        let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+        let t0 = Instant::now();
+        let outs = runner.run_factored(&mut session, &configs)?;
+        let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+        let ppl = fleet_perplexity_sharded(
+            &mut session,
+            &models,
+            &fx.cfg,
+            &batches,
+            b_ev,
+            t_ev,
+            &metrics,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        session.shutdown();
+
+        let outcomes_ok = outcomes_identical(&expect, &outs);
+        let ppl_ok = exp_ppl.iter().zip(&ppl).all(|(a, b)| a.to_bits() == b.to_bits());
+        anyhow::ensure!(outcomes_ok, "N={n}: sharded sweep outcomes diverge from in-process");
+        anyhow::ensure!(ppl_ok, "N={n}: sharded fleet PPLs diverge from in-process");
+        shard_secs.push(secs);
+        equiv_flags.push((n, outcomes_ok, ppl_ok));
+    }
+    let speedup = shard_secs[0] / shard_secs[1].max(1e-9);
+
+    let record = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("quick", Json::Bool(ctx.quick)),
+        ("grid", Json::arr(configs.iter().map(|c| Json::str(c.label.clone())).collect())),
+        ("sweep_jobs", Json::num((configs.len() * expect[0].model.ops.len()) as f64)),
+        ("eval_batches", Json::num(batches.len() as f64)),
+        ("worker_threads", Json::num(1.0)),
+        ("inprocess_secs", Json::num(inproc_secs)),
+        ("shard_n1_secs", Json::num(shard_secs[0])),
+        ("shard_n2_secs", Json::num(shard_secs[1])),
+        ("speedup_n2_over_n1", Json::num(speedup)),
+        ("scaling_efficiency_n2", Json::num(speedup / 2.0)),
+        (
+            "outcomes_identical_n1",
+            Json::Bool(equiv_flags[0].1),
+        ),
+        ("fleet_ppl_identical_n1", Json::Bool(equiv_flags[0].2)),
+        ("outcomes_identical_n2", Json::Bool(equiv_flags[1].1)),
+        ("fleet_ppl_identical_n2", Json::Bool(equiv_flags[1].2)),
+        ("shard_tx_bytes", Json::num(metrics.get("shard.tx_bytes"))),
+        ("shard_rx_bytes", Json::num(metrics.get("shard.rx_bytes"))),
+        ("shard_requeued", Json::num(metrics.get("shard.requeued"))),
+    ]);
+    bench::write_json("BENCH_shard.json", &record)?;
+
+    let mut t = Table::new(
+        &format!(
+            "§Perf shard — multi-process plane, {} sweep configs + {} eval batches, \
+             model={model} (recorded in BENCH_shard.json)",
+            configs.len(),
+            batches.len()
+        ),
+        &["path", "secs", "vs N=1", "bit-identical"],
+    );
+    t.row(vec![
+        "in-process (reference)".into(),
+        f(inproc_secs, 3),
+        String::new(),
+        "—".into(),
+    ]);
+    t.row(vec![
+        "sharded, N=1 worker (1 thread)".into(),
+        f(shard_secs[0], 3),
+        "x1.00 (ref)".into(),
+        "yes".into(),
+    ]);
+    t.row(vec![
+        "sharded, N=2 workers (1 thread each)".into(),
+        f(shard_secs[1], 3),
+        format!("x{speedup:.2}"),
+        "yes".into(),
+    ]);
     Ok(vec![t])
 }
 

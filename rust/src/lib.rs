@@ -41,8 +41,13 @@
 //!   compatibility wrapper), plus the shared-work grid engine
 //!   (`SweepRunner` over a keyed `LayerCache` of `PreparedLayer`s) that
 //!   executes a whole (method, quantizer, rank, scaling, seed) grid in
-//!   one pass and emits factored outcomes — the seam sharding /
-//!   multi-model serving plugs into.
+//!   one pass and emits factored outcomes — plus the multi-process shard
+//!   plane that seam grew into: `coordinator::wire` (versioned,
+//!   length-prefixed, checksummed frames with content-addressed blob
+//!   dedup) and `coordinator::shard` (`ShardedSweepRunner` /
+//!   `fleet_perplexity_sharded` over `srr shard-worker` processes,
+//!   bit-identical to the in-process engines, with worker-death
+//!   requeue).
 //! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines;
 //!   `perplexity_native` evaluates any `ModelWeights` (including the
 //!   factored model) without PJRT, and `eval::fleet` scores whole sweep

@@ -3,19 +3,28 @@
 //! Subcommands:
 //!   info                       — artifact/model inventory
 //!   ptq    [--model --method --scaling --quantizer --rank --seed]
-//!                              — quantize a model, report per-layer stats + PPL
-//!                                (runs offline: rust-native factored eval)
+//!          [--workers N]       — quantize a model, report per-layer stats + PPL
+//!                                (runs offline: rust-native factored eval;
+//!                                --workers shards reconstruction + eval
+//!                                across N worker processes)
 //!   qpeft  [--task --init --bits --steps --gamma]
 //!                              — fine-tune adapters on a GLUE-sim task
 //!   bench  [ids… | --list] [--quick]
 //!                              — regenerate paper tables/figures
+//!   shard-worker [--exit-after N]
+//!                              — wire-codec job executor over stdin/stdout
+//!                                (spawned by the shard host; not for
+//!                                interactive use)
 //!
 //! Examples live in `examples/` (quickstart, ptq_sweep, qpeft_finetune,
-//! e2e_train_quantize).
+//! e2e_train_quantize, shard_sweep).
 
 use anyhow::Result;
 
-use srr::coordinator::{run_ptq_factored, Metrics, RunConfig};
+use srr::coordinator::{
+    fleet_perplexity_sharded, run_ptq_factored, Metrics, RunConfig, ShardOptions, ShardSession,
+    ShardedSweepRunner, SweepConfig,
+};
 use srr::data::glue_sim::GlueTask;
 use srr::eval::{glue_score, perplexity_native};
 use srr::exp::{registry, ExpCtx};
@@ -33,11 +42,14 @@ fn main() {
         Some("ptq") => cmd_ptq(&args),
         Some("qpeft") => cmd_qpeft(&args),
         Some("bench") => cmd_bench(&args),
+        // spawned by ShardSession with piped stdio; speaks coordinator::wire
+        Some("shard-worker") => srr::coordinator::worker_main(&args),
         _ => {
             eprintln!(
-                "usage: srr <info|ptq|qpeft|bench> [options]\n\
+                "usage: srr <info|ptq|qpeft|bench|shard-worker> [options]\n\
                  \n  srr info\
                  \n  srr ptq --model small --method srr --scaling qera-exact --quantizer mxint3 --rank 8\
+                 \n  srr ptq --model tiny --rank 8 --workers 2   # multi-process reconstruction + eval\
                  \n  srr qpeft --task SST-sim --init srr --bits 2 --steps 60\
                  \n  srr bench table1 fig5 [--quick]   |   srr bench --list"
             );
@@ -97,9 +109,29 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     );
     let fx = ctx.lm(&cfg.model)?;
     let metrics = Metrics::new();
-    let mut qcfg = srr::qer::QerConfig::new(cfg.method, cfg.rank, cfg.scaling);
-    qcfg.seed = cfg.seed;
-    let out = run_ptq_factored(&fx.params, &fx.cfg, &fx.calib, cfg.quantizer, &qcfg, &metrics);
+    // --workers N: shard reconstruction (and the PPL below) across N
+    // `srr shard-worker` processes — bit-identical to the in-process path.
+    // worker_threads: 0 lets each worker size its own pool (SRR_THREADS /
+    // available cores); the single-threaded pinning is only for the
+    // scaling bench, not for real CLI runs.
+    let workers = args.get_usize("workers", 0);
+    let mut session = if workers > 0 {
+        let opts = ShardOptions { workers, worker_threads: 0, ..Default::default() };
+        Some(ShardSession::spawn(&opts)?)
+    } else {
+        None
+    };
+    let out = if let Some(session) = session.as_mut() {
+        let sweep_cfg = SweepConfig::new(cfg.quantizer, cfg.method, cfg.rank, cfg.scaling)
+            .seeded(cfg.seed);
+        let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+        let mut outs = runner.run_factored(session, &[sweep_cfg])?;
+        outs.pop().expect("one outcome for one config")
+    } else {
+        let mut qcfg = srr::qer::QerConfig::new(cfg.method, cfg.rank, cfg.scaling);
+        qcfg.seed = cfg.seed;
+        run_ptq_factored(&fx.params, &fx.cfg, &fx.calib, cfg.quantizer, &qcfg, &metrics)
+    };
     println!("\nper-layer:");
     for r in &out.reports {
         println!(
@@ -115,9 +147,17 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     let t = fx.cfg.seq_len;
     let batches = ctx.ppl_batches(&cfg.model)?;
     // rust-native eval: the BF16 reference densely, the outcome straight
-    // through its factored serving form (packed bases never densified)
+    // through its factored serving form (packed bases never densified);
+    // under --workers the outcome PPL runs on the shard workers too
     let bf16 = perplexity_native(&fx.params, &fx.cfg, &batches, b, t);
-    let ppl = perplexity_native(&out.model, &fx.cfg, &batches, b, t);
+    let ppl = if let Some(session) = session.as_mut() {
+        fleet_perplexity_sharded(session, &[&out.model], &fx.cfg, &batches, b, t, &metrics)?[0]
+    } else {
+        perplexity_native(&out.model, &fx.cfg, &batches, b, t)
+    };
+    if let Some(session) = session.take() {
+        session.shutdown();
+    }
     println!(
         "\nBF16 PPL = {bf16:.3}   quantized PPL = {ppl:.3}   mean k* = {:.1}   \
          serving bytes = {} (dense {})",

@@ -24,7 +24,7 @@ pub(crate) const PREP_SALT: u64 = 0x5EED_0F_5A17_A55A;
 
 /// Everything the selection computed, kept for the analysis benches
 /// (Fig. 2 surrogate curves, Fig. 5 k* distributions, Table 12 stability).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RankSelection {
     pub k_star: usize,
     /// surrogate objective value per k ∈ [0, r]

@@ -92,6 +92,27 @@ impl PackedCodes {
     pub fn bytes(&self) -> usize {
         self.words.len() * 8
     }
+
+    /// The backing 64-bit words, exposed for wire serialization
+    /// (`coordinator::wire` ships packed bases between shard processes
+    /// without decoding them).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild a buffer from its raw parts (the wire deserialization
+    /// counterpart of [`PackedCodes::words`]). The caller must have
+    /// validated the word count against `len`/`bits` — this asserts the
+    /// same invariant [`PackedCodes::zeroed`] establishes.
+    pub fn from_raw(bits: u32, len: usize, words: Vec<u64>) -> Self {
+        assert!((2..=32).contains(&bits), "code width {bits} out of range");
+        assert_eq!(
+            words.len(),
+            (len * bits as usize).div_ceil(64),
+            "word count mismatch for {len} codes of {bits} bits"
+        );
+        PackedCodes { bits, len, words }
+    }
 }
 
 /// How a [`PackedMat`]'s codes + side data decode back to values.
@@ -331,6 +352,25 @@ mod tests {
                 assert_eq!(codes.get(i), v, "bits={bits} i={i}/{len}");
             }
         });
+    }
+
+    #[test]
+    fn raw_parts_round_trip() {
+        // the wire-serialization accessors reproduce the buffer exactly
+        let mut codes = PackedCodes::zeroed(3, 100);
+        for i in 0..100 {
+            codes.set(i, (i % 8) as u32);
+        }
+        let rebuilt = PackedCodes::from_raw(3, 100, codes.words().to_vec());
+        for i in 0..100 {
+            assert_eq!(rebuilt.get(i), codes.get(i), "code {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "word count mismatch")]
+    fn raw_parts_validate_word_count() {
+        let _ = PackedCodes::from_raw(3, 100, vec![0; 1]);
     }
 
     #[test]

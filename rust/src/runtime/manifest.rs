@@ -29,7 +29,7 @@ pub struct ArtifactSpec {
 }
 
 /// Mirrors python/compile/configs.py::ModelCfg.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelCfg {
     pub name: String,
     pub vocab: usize,

@@ -95,6 +95,24 @@ impl QuantBase {
         }
     }
 
+    /// The shared packed payload, if this base is bit-packed. The wire
+    /// codec (`coordinator::wire`) uses this to ship a base's content
+    /// once per shard connection and reference it thereafter.
+    pub fn as_packed(&self) -> Option<&Arc<PackedMat>> {
+        match self {
+            QuantBase::Packed(p) => Some(p),
+            QuantBase::Dense(_) => None,
+        }
+    }
+
+    /// The shared dense payload for bases without a packed form.
+    pub fn as_dense(&self) -> Option<&Arc<Mat>> {
+        match self {
+            QuantBase::Packed(_) => None,
+            QuantBase::Dense(m) => Some(m),
+        }
+    }
+
     /// Dense dequantized form (bit-identical to the quantizer's output
     /// for packed bases — see `quant::packed`).
     pub fn densify(&self) -> Mat {

@@ -1,0 +1,227 @@
+//! Multi-process shard plane regression: `ShardedSweepRunner` +
+//! `fleet_perplexity_sharded` against real spawned `srr shard-worker`
+//! processes must be bit-identical to the in-process
+//! `SweepRunner::run_factored` + `fleet_perplexity` for N ∈ {1, 2, 4}
+//! workers — including after a worker dies mid-run and its jobs requeue.
+//!
+//! Runs offline (no PJRT, no artifacts). The worker binary is resolved
+//! through `SRR_SHARD_BIN`, which cargo provides to integration tests as
+//! `CARGO_BIN_EXE_srr`.
+
+use srr::coordinator::{
+    fleet_perplexity_sharded, FactoredOutcome, Metrics, QuantizerSpec, ShardOptions,
+    ShardSession, ShardedSweepRunner, SweepConfig, SweepRunner,
+};
+use srr::data::Corpus;
+use srr::eval::{fleet_perplexity, group_by_shared_bases};
+use srr::model::{collect_calibration, synth_lm_params, CalibrationSet, Params};
+use srr::qer::Method;
+use srr::runtime::manifest::ModelCfg;
+use srr::scaling::ScalingKind;
+use srr::serve::{FactoredModel, LinearOp, QuantBase};
+
+/// Point worker spawning at the binary cargo built for this test run.
+fn shard_opts(workers: usize) -> ShardOptions {
+    ShardOptions {
+        workers,
+        binary: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_srr"))),
+        ..Default::default()
+    }
+}
+
+fn setup() -> (Params, ModelCfg, CalibrationSet, Vec<Vec<i32>>) {
+    let cfg = ModelCfg {
+        name: "t".into(),
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 128,
+        seq_len: 16,
+    };
+    let params = synth_lm_params(&cfg, 5, cfg.vocab);
+    let corpus = Corpus::generate(cfg.vocab, 4000, 6);
+    let batches: Vec<Vec<i32>> = (0..10).map(|i| corpus.train_batch(2, 16, i)).collect();
+    let calib = collect_calibration(&params, &cfg, &batches, 2, 16, 192);
+    let eval_batches: Vec<Vec<i32>> =
+        (0..3).map(|i| corpus.train_batch(2, cfg.seq_len, 40 + i)).collect();
+    (params, cfg, calib, eval_batches)
+}
+
+/// The regression grid: a shared-base cell (w-only + QER ranks over one
+/// mxint quantization — a lock-step fleet group), the SRR family with
+/// its own per-config quantization, and a GPTQ Hessian path.
+fn grid() -> Vec<SweepConfig> {
+    let mx = QuantizerSpec::Mxint { bits: 3, block: 32 };
+    vec![
+        SweepConfig::new(mx, Method::WOnly, 0, ScalingKind::Identity),
+        SweepConfig::new(mx, Method::Qer, 4, ScalingKind::DiagRms),
+        SweepConfig::new(mx, Method::Qer, 8, ScalingKind::DiagRms),
+        SweepConfig::new(mx, Method::QerSrr, 8, ScalingKind::Exact).seeded(5),
+        SweepConfig::new(
+            QuantizerSpec::Gptq { bits: 3, group: 64 },
+            Method::QerSrr,
+            8,
+            ScalingKind::DiagAbsMean,
+        ),
+    ]
+}
+
+fn assert_outcomes_identical(tag: &str, a: &[FactoredOutcome], b: &[FactoredOutcome]) {
+    assert_eq!(a.len(), b.len(), "{tag}: outcome count");
+    for (ci, (oa, ob)) in a.iter().zip(b).enumerate() {
+        assert_eq!(oa.model.ops.len(), ob.model.ops.len(), "{tag} cfg {ci}: op count");
+        for ((na, opa), (nb, opb)) in oa.model.ops.iter().zip(&ob.model.ops) {
+            assert_eq!(na, nb, "{tag} cfg {ci}: op order");
+            match (opa, opb) {
+                (
+                    LinearOp::FactoredQlr { base: ba, l: la, r: ra },
+                    LinearOp::FactoredQlr { base: bb, l: lb, r: rb },
+                ) => {
+                    assert_eq!(la, lb, "{tag} cfg {ci} {na}: L differs");
+                    assert_eq!(ra, rb, "{tag} cfg {ci} {na}: R differs");
+                    assert_eq!(ba.densify(), bb.densify(), "{tag} cfg {ci} {na}: base differs");
+                    assert_eq!(
+                        matches!(ba, QuantBase::Packed(_)),
+                        matches!(bb, QuantBase::Packed(_)),
+                        "{tag} cfg {ci} {na}: packedness differs"
+                    );
+                }
+                _ => panic!("{tag} cfg {ci} {na}: unexpected op shape"),
+            }
+        }
+        for (ma, mb) in oa.meta.iter().zip(&ob.meta) {
+            assert_eq!(ma.k_star, mb.k_star, "{tag} cfg {ci}: k* differs");
+        }
+        for (ra, rb) in oa.reports.iter().zip(&ob.reports) {
+            assert_eq!(
+                ra.weight_err.to_bits(),
+                rb.weight_err.to_bits(),
+                "{tag} cfg {ci} {}: weight_err differs",
+                ra.name
+            );
+            assert_eq!(
+                ra.scaled_err.to_bits(),
+                rb.scaled_err.to_bits(),
+                "{tag} cfg {ci} {}: scaled_err differs",
+                ra.name
+            );
+        }
+    }
+}
+
+/// Tentpole acceptance: sweep outcomes and fleet PPLs through N ∈
+/// {1, 2, 4} worker processes are bit-identical to the in-process path,
+/// and the wire preserves the lock-step grouping (shared packed bases).
+#[test]
+fn sharded_sweep_and_fleet_bit_identical_n_1_2_4() {
+    let (params, cfg, calib, eval_batches) = setup();
+    let configs = grid();
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+
+    for n in [1usize, 2, 4] {
+        let mut session = ShardSession::spawn(&shard_opts(n)).expect("spawn workers");
+        let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+        let outs = runner.run_factored(&mut session, &configs).expect("sharded sweep");
+        assert_outcomes_identical(&format!("N={n}"), &expect, &outs);
+
+        let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+        // grid dedup / lock-step groups survive the wire round-trip
+        assert_eq!(
+            group_by_shared_bases(&exp_models),
+            group_by_shared_bases(&models),
+            "N={n}: lock-step grouping changed"
+        );
+        let ppl = fleet_perplexity_sharded(
+            &mut session,
+            &models,
+            &cfg,
+            &eval_batches,
+            2,
+            cfg.seq_len,
+            &metrics,
+        )
+        .expect("sharded fleet");
+        for (i, (a, b)) in exp_ppl.iter().zip(&ppl).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "N={n} model {i}: ppl {a} vs {b}");
+        }
+        session.shutdown();
+    }
+}
+
+/// Worker-death requeue: the first of two workers exits after 2 jobs
+/// (an abrupt EOF from the host's perspective); its in-flight jobs move
+/// to the survivor and the merged result is still bit-identical.
+#[test]
+fn worker_death_requeues_bit_identically() {
+    let (params, cfg, calib, eval_batches) = setup();
+    let configs = grid();
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+
+    let opts = ShardOptions { exit_after_first: Some(2), ..shard_opts(2) };
+    let mut session = ShardSession::spawn(&opts).expect("spawn workers");
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let outs = runner.run_factored(&mut session, &configs).expect("sharded sweep with a death");
+    assert_outcomes_identical("death", &expect, &outs);
+    assert_eq!(session.n_alive(), 1, "worker 0 must have died");
+    assert!(
+        metrics.get("shard.worker_deaths") >= 1.0,
+        "death not recorded: {}",
+        metrics.get("shard.worker_deaths")
+    );
+
+    // the surviving worker also carries the fleet batch afterwards
+    let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let ppl = fleet_perplexity_sharded(
+        &mut session,
+        &models,
+        &cfg,
+        &eval_batches,
+        2,
+        cfg.seq_len,
+        &metrics,
+    )
+    .expect("fleet on survivor");
+    for (a, b) in exp_ppl.iter().zip(&ppl) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    session.shutdown();
+}
+
+/// When every worker dies before finishing, the host errors out instead
+/// of hanging (the pop_timeout liveness probe catches even a worker that
+/// exits without a clean EOF handshake).
+#[test]
+fn all_workers_dead_is_an_error_not_a_hang() {
+    let (params, cfg, calib, _) = setup();
+    let configs = grid();
+    let metrics = Metrics::new();
+    let opts = ShardOptions { exit_after_first: Some(1), ..shard_opts(1) };
+    let mut session = ShardSession::spawn(&opts).expect("spawn worker");
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let err = runner
+        .run_factored(&mut session, &configs)
+        .expect_err("single worker dying after one job must fail the run");
+    assert!(
+        err.to_string().contains("all shard workers died"),
+        "unexpected error: {err:#}"
+    );
+}
+
+/// An empty grid never spawns work and mirrors the in-process shape.
+#[test]
+fn empty_grid_is_a_noop_without_worker_traffic() {
+    let (params, cfg, calib, _) = setup();
+    let metrics = Metrics::new();
+    let mut session = ShardSession::spawn(&shard_opts(1)).expect("spawn worker");
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let outs = runner.run_factored(&mut session, &[]).expect("empty grid");
+    assert!(outs.is_empty());
+    session.shutdown();
+}
