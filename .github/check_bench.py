@@ -10,11 +10,24 @@ abort and future benches that record without asserting.
 
 import glob
 import json
+import os
 import sys
 
 files = sorted(set(glob.glob("BENCH_*.json") + glob.glob("rust/BENCH_*.json")))
 if not files:
     sys.exit("bench gate: no BENCH_*.json records found")
+
+# Records and flags that MUST be present (and true), so a bench
+# refactor cannot silently drop an equivalence assertion by renaming a
+# record or skipping its write: the shard record has to exist and has
+# to prove the TCP transport, not just the pipes. (CI always runs
+# `--exp shard`, so a missing record is itself a failure.)
+REQUIRED_FLAGS = {
+    "BENCH_shard.json": ["tcp_bit_identical"],
+}
+
+present = {os.path.basename(f) for f in files}
+missing_records = [name for name in REQUIRED_FLAGS if name not in present]
 
 
 def is_equiv_key(key: str) -> bool:
@@ -22,7 +35,10 @@ def is_equiv_key(key: str) -> bool:
     return "identical" in k or "equiv" in k or k.endswith("_ok")
 
 
-failures = []
+failures = [
+    f"{name}: required bench record missing (was --exp shard run?)"
+    for name in missing_records
+]
 checked = 0
 
 
@@ -50,6 +66,13 @@ for f in files:
             failures.append(f"{f}: unparseable record ({e})")
             continue
     walk("", data, f)
+    for flag in REQUIRED_FLAGS.get(os.path.basename(f), []):
+        # the flag must be the literal boolean true — a string/int/null
+        # stand-in would dodge the walk's bool-only validation
+        if not isinstance(data, dict) or data.get(flag) is not True:
+            failures.append(
+                f"{f}: required equivalence flag '{flag}' missing or not true"
+            )
 
 print(f"bench gate: {len(files)} record(s), {checked} equivalence flag(s) checked")
 if failures:

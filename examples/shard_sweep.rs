@@ -10,10 +10,13 @@
 //! bases are deduplicated on the wire by content hash, so the workers
 //! see the same lock-step groups the in-process fleet evaluator uses.
 //!
-//!   cargo run --release --example shard_sweep -- [--workers 2] [--rank 8]
+//!   cargo run --release --example shard_sweep -- [--workers 2] [--rank 8] [--tcp]
 //!
 //! Requires the `srr` binary (`cargo build --release`) so the host can
 //! spawn workers; set `SRR_SHARD_BIN` if it lives somewhere unusual.
+//! With `--tcp` the workers dial back over a loopback socket instead of
+//! stdin/stdout pipes — the same transport remote workers use (see the
+//! README's remote-worker workflow for the multi-host invocation).
 
 use srr::coordinator::{
     fleet_perplexity_sharded, Metrics, QuantizerSpec, ShardOptions, ShardSession,
@@ -48,8 +51,14 @@ fn main() -> anyhow::Result<()> {
     }
     configs.push(SweepConfig::new(quant, Method::QerSrr, rank, ScalingKind::DiagRms));
 
-    println!("spawning {workers} shard worker(s)…");
-    let mut session = ShardSession::spawn(&ShardOptions::with_workers(workers))?;
+    let opts = ShardOptions::with_workers(workers);
+    let mut session = if args.has_flag("tcp") {
+        println!("spawning {workers} shard worker(s) over TCP loopback…");
+        ShardSession::spawn_tcp(&opts)?
+    } else {
+        println!("spawning {workers} shard worker(s) over pipes…");
+        ShardSession::spawn(&opts)?
+    };
     let metrics = Metrics::new();
     let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
     let outcomes = runner.run_factored(&mut session, &configs)?;

@@ -1,12 +1,17 @@
-//! Bounded MPMC job queue with backpressure.
+//! Bounded MPMC job queue with backpressure, plus an in-memory byte
+//! pipe with the same close semantics as an OS pipe.
 //!
 //! Built on Mutex + Condvar (no crossbeam available offline). Producers
 //! block when the queue is at capacity — the backpressure that keeps the
 //! streaming calibration path from ballooning memory — and consumers
-//! block until an item or shutdown arrives.
+//! block until an item or shutdown arrives. [`byte_pipe`] layers a
+//! `Read`/`Write` byte stream over the same primitives: dropping the
+//! writer is EOF for the reader, dropping the reader is `BrokenPipe`
+//! for the writer — the duplex the shard plane's loopback transports
+//! ([`FaultTransport`](super::transport::FaultTransport)) are built on.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Outcome of a non-blocking or bounded-wait pop ([`BoundedQueue::try_pop`]
@@ -137,6 +142,121 @@ impl<T> BoundedQueue<T> {
     /// Whether the queue is currently empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-memory byte pipe
+// ---------------------------------------------------------------------------
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    write_closed: bool,
+    read_closed: bool,
+}
+
+struct PipeShared {
+    state: Mutex<PipeState>,
+    readable: Condvar,
+    writable: Condvar,
+    capacity: usize,
+}
+
+/// Write half of an in-memory [`byte_pipe`]. Dropping it (or all clones
+/// of it — there are none; it is not `Clone`) signals EOF to the reader.
+pub struct PipeWriter(Arc<PipeShared>);
+
+/// Read half of an in-memory [`byte_pipe`]. Dropping it makes further
+/// writes fail with `BrokenPipe`, mirroring an OS pipe whose consumer
+/// died.
+pub struct PipeReader(Arc<PipeShared>);
+
+/// An in-memory unidirectional byte stream with OS-pipe close
+/// semantics and `capacity` bytes of buffering (writers block at
+/// capacity — the same backpressure a full kernel pipe applies).
+pub fn byte_pipe(capacity: usize) -> (PipeWriter, PipeReader) {
+    assert!(capacity > 0);
+    let shared = Arc::new(PipeShared {
+        state: Mutex::new(PipeState {
+            buf: VecDeque::new(),
+            write_closed: false,
+            read_closed: false,
+        }),
+        readable: Condvar::new(),
+        writable: Condvar::new(),
+        capacity,
+    });
+    (PipeWriter(shared.clone()), PipeReader(shared))
+}
+
+impl std::io::Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut g = self.0.state.lock().unwrap();
+        loop {
+            if g.read_closed {
+                return Err(std::io::ErrorKind::BrokenPipe.into());
+            }
+            let space = self.0.capacity - g.buf.len().min(self.0.capacity);
+            if space > 0 {
+                let n = space.min(buf.len());
+                g.buf.extend(&buf[..n]);
+                self.0.readable.notify_one();
+                return Ok(n);
+            }
+            g = self.0.writable.wait(g).unwrap();
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        let mut g = self.0.state.lock().unwrap();
+        g.write_closed = true;
+        self.0.readable.notify_all();
+    }
+}
+
+impl std::io::Read for PipeReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut g = self.0.state.lock().unwrap();
+        loop {
+            if !g.buf.is_empty() {
+                let n = g.buf.len().min(buf.len());
+                // slice copies instead of per-byte pops: blob traffic in
+                // the fault-injection suite moves megabytes through here
+                let (a, b) = g.buf.as_slices();
+                let na = a.len().min(n);
+                buf[..na].copy_from_slice(&a[..na]);
+                if na < n {
+                    buf[na..n].copy_from_slice(&b[..n - na]);
+                }
+                g.buf.drain(..n);
+                self.0.writable.notify_one();
+                return Ok(n);
+            }
+            if g.write_closed {
+                return Ok(0); // EOF
+            }
+            g = self.0.readable.wait(g).unwrap();
+        }
+    }
+}
+
+impl Drop for PipeReader {
+    fn drop(&mut self) {
+        let mut g = self.0.state.lock().unwrap();
+        g.read_closed = true;
+        self.0.writable.notify_all();
     }
 }
 
@@ -275,6 +395,47 @@ mod tests {
         assert_eq!(q.try_pop(), PopResult::Item(1));
         q.close();
         assert_eq!(q.try_pop(), PopResult::Closed);
+    }
+
+    #[test]
+    fn byte_pipe_round_trips_and_signals_eof() {
+        use std::io::{Read, Write};
+        let (mut w, mut r) = byte_pipe(8);
+        // writes larger than capacity complete across reads (write_all
+        // loops on the partial writes the bounded buffer hands back)
+        let payload: Vec<u8> = (0..64u8).collect();
+        let t = std::thread::spawn(move || {
+            w.write_all(&payload).unwrap();
+            // dropping w here is the EOF
+        });
+        let mut got = Vec::new();
+        r.read_to_end(&mut got).unwrap();
+        t.join().unwrap();
+        assert_eq!(got, (0..64u8).collect::<Vec<_>>());
+        // reading at EOF stays EOF
+        let mut buf = [0u8; 4];
+        assert_eq!(r.read(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn byte_pipe_write_fails_broken_pipe_after_reader_drop() {
+        use std::io::Write;
+        let (mut w, r) = byte_pipe(4);
+        drop(r);
+        let err = w.write(&[1, 2, 3]).expect_err("reader is gone");
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn byte_pipe_reader_drop_wakes_blocked_writer() {
+        use std::io::Write;
+        let (mut w, r) = byte_pipe(2);
+        assert_eq!(w.write(&[0, 1]).unwrap(), 2); // buffer now full
+        let t = std::thread::spawn(move || w.write(&[2]));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(r); // must wake the blocked writer with BrokenPipe
+        let res = t.join().unwrap();
+        assert_eq!(res.expect_err("no reader").kind(), std::io::ErrorKind::BrokenPipe);
     }
 
     #[test]

@@ -29,9 +29,14 @@
 //! * [`wire`] — the dependency-free binary wire codec (versioned,
 //!   length-prefixed, checksummed frames; content-addressed blob dedup)
 //!   the shard plane speaks.
+//! * [`transport`] — how a shard host reaches a worker's byte stream:
+//!   the [`transport::Transport`] trait with child-pipe, TCP
+//!   (handshaken, local or remote), and fault-injection
+//!   implementations.
 //! * [`shard`] — the multi-process execution plane: phase-B2 sweep jobs
-//!   and fleet PPL jobs sharded across `srr shard-worker` processes,
-//!   bit-identical to the in-process engines, with worker-death requeue.
+//!   and fleet PPL jobs sharded across `srr shard-worker` processes
+//!   (pipes or TCP), bit-identical to the in-process engines, with
+//!   worker-death requeue.
 //! * [`metrics`] — counters/timers registry.
 //! * [`config`] — run configuration (CLI/JSON).
 
@@ -42,6 +47,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod shard;
 pub mod sweep;
+pub mod transport;
 pub mod wire;
 
 pub use cache::{LayerCache, PreparedLayer};
@@ -55,3 +61,6 @@ pub use shard::{
     fleet_perplexity_sharded, worker_main, ShardOptions, ShardSession, ShardedSweepRunner,
 };
 pub use sweep::{run_sweep, run_sweep_factored, SweepConfig, SweepRunner};
+pub use transport::{
+    ChildPipeTransport, FaultPlan, FaultTransport, ShardHost, TcpTransport, Transport,
+};

@@ -8,8 +8,13 @@
 //! * the **host** runs sweep phases A + B1 in-process
 //!   ([`SweepRunner::prepare`]), then ships per-`(layer, config)`
 //!   phase-B2 jobs — and fleet `(group × batch)` PPL jobs — to worker
-//!   processes over the [`wire`](super::wire) codec (stdin/stdout
-//!   pipes), merging results deterministically by job id;
+//!   processes over the [`wire`](super::wire) codec, merging results
+//!   deterministically by job id. The byte stream underneath is a
+//!   [`Transport`](super::transport::Transport): child-process pipes
+//!   ([`ShardSession::spawn`]), TCP to local or remote workers
+//!   ([`ShardSession::spawn_tcp`], [`ShardSession::listen`],
+//!   [`ShardSession::dial`]), or the fault-injection double the tests
+//!   drive;
 //! * each **worker** ([`worker_main`], the `srr shard-worker` CLI mode)
 //!   pulls frames through a reader thread into a bounded job queue
 //!   (backpressure end-to-end: a full queue stops the read loop, which
@@ -29,23 +34,24 @@
 //! rebuilds the `Arc` sharing (grid dedup, lock-step groups) on each
 //! side of the pipe.
 //!
-//! **Failure model:** a worker that exits (cleanly or by crash) or
-//! writes garbage frames is marked dead; its in-flight jobs requeue
-//! onto surviving workers, and
+//! **Failure model:** a worker that exits (cleanly or by crash), drops
+//! its connection, or writes garbage frames is marked dead; its
+//! in-flight jobs requeue onto surviving workers, and
 //! late frames from a dead worker are discarded (the survivor's
 //! recomputation is authoritative). The host's event loop waits with
 //! [`BoundedQueue::pop_timeout`](super::jobs::BoundedQueue::pop_timeout)
-//! and probes child exit status on every timeout, so even a worker that
-//! dies without closing its pipe is noticed. Only when every worker has
-//! died does the run error out. A worker that hangs *without* exiting is
-//! waited on indefinitely — a per-job heartbeat is future work for the
-//! TCP/ssh transport.
+//! and probes [`Transport::poll_dead`](super::transport::Transport) on
+//! every timeout, so even a worker that dies without closing its stream
+//! is noticed when the transport owns a side channel (child exit
+//! status). Only when every worker has died does the run error out. A
+//! worker that hangs *without* exiting or disconnecting is waited on
+//! indefinitely — a per-job heartbeat remains future work.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::PathBuf;
-use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -74,6 +80,9 @@ use super::pipeline::{FactoredOutcome, LayerMeta, LayerReport};
 use super::sweep::{
     assemble_outcomes, b2_artifacts, b2_job, empty_outcomes, B2Artifacts, SweepConfig,
     SweepPrep, SweepRunner,
+};
+use super::transport::{
+    worker_accept, worker_connect, ChildPipeTransport, ShardHost, TcpTransport, Transport,
 };
 use super::wire::{
     self, decode_fleet_job, decode_fleet_result, decode_sweep_job, decode_sweep_result,
@@ -173,6 +182,7 @@ enum Event {
 }
 
 /// A decoded worker result.
+#[derive(Debug)]
 pub(crate) enum ResultMsg {
     /// phase-B2 sweep job result
     Sweep(Box<SweepResultMsg>),
@@ -199,10 +209,10 @@ pub(crate) trait JobSource {
     fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame>;
 }
 
-struct WorkerProc {
-    child: Child,
-    /// `None` once the worker is dead or shut down (closes the pipe)
-    stdin: Option<BufWriter<ChildStdin>>,
+struct WorkerConn {
+    /// the framed byte stream to this worker (pipes, TCP, or a test
+    /// double); the write half closes when the worker dies or shuts down
+    transport: Box<dyn Transport>,
     /// per-connection blob dedup state
     tx: BlobTx,
     /// job ids in flight on this worker
@@ -211,13 +221,14 @@ struct WorkerProc {
     reader: Option<JoinHandle<()>>,
 }
 
-/// A pool of spawned `srr shard-worker` processes. One session serves
-/// any number of job batches ([`ShardedSweepRunner::run_factored`],
-/// [`fleet_perplexity_sharded`]) — blob caches persist across batches,
-/// so a fleet evaluation right after a sweep reuses the bases the sweep
-/// already shipped.
+/// A pool of worker connections — spawned `srr shard-worker` processes
+/// over pipes or TCP, remote dial-ins, or any custom [`Transport`]. One
+/// session serves any number of job batches
+/// ([`ShardedSweepRunner::run_factored`], [`fleet_perplexity_sharded`])
+/// — blob caches persist across batches, so a fleet evaluation right
+/// after a sweep reuses the bases the sweep already shipped.
 pub struct ShardSession {
-    workers: Vec<WorkerProc>,
+    workers: Vec<WorkerConn>,
     events: Arc<BoundedQueue<Event>>,
     /// host-side blob cache, shared by all worker readers; seeded with
     /// outbound artifacts so results resolve to the very same `Arc`s
@@ -227,13 +238,13 @@ pub struct ShardSession {
 
 fn spawn_reader(
     wi: usize,
-    stdout: ChildStdout,
+    input: Box<dyn Read + Send>,
     events: Arc<BoundedQueue<Event>>,
     rx: Arc<Mutex<BlobRx>>,
     stats: Arc<ShardStats>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
-        let mut out = BufReader::new(stdout);
+        let mut out = BufReader::new(input);
         loop {
             match wire::read_frame(&mut out) {
                 Ok(Some(f)) => {
@@ -273,48 +284,52 @@ fn spawn_reader(
     })
 }
 
+/// Kill and reap a set of spawned worker children (the error-path
+/// cleanup shared by [`ShardSession::spawn_tcp`]).
+fn reap_children(children: HashMap<u64, Child>) {
+    for mut c in children.into_values() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Base `srr shard-worker` invocation shared by the pipe and TCP spawn
+/// paths (threads env, first-worker fault injection).
+fn worker_command(bin: &Path, opts: &ShardOptions, wi: usize) -> Command {
+    let mut cmd = Command::new(bin);
+    cmd.arg("shard-worker");
+    if opts.worker_threads > 0 {
+        cmd.env("SRR_THREADS", opts.worker_threads.to_string());
+    }
+    if wi == 0 {
+        if let Some(k) = opts.exit_after_first {
+            cmd.arg("--exit-after").arg(k.to_string());
+        }
+    }
+    cmd
+}
+
+/// How long [`ShardSession::spawn_tcp`] waits for its own loopback
+/// children to dial back in.
+const SPAWN_TCP_ACCEPT: Duration = Duration::from_secs(30);
+
 impl ShardSession {
-    /// Spawn `opts.workers` worker processes with piped stdin/stdout
-    /// (stderr inherited so worker panics stay visible).
-    pub fn spawn(opts: &ShardOptions) -> Result<ShardSession> {
-        anyhow::ensure!(opts.workers >= 1, "shard session needs at least one worker");
-        let bin = worker_binary(opts)?;
-        let events = Arc::new(BoundedQueue::new(opts.workers * (WINDOW + 2) + 4));
+    /// Wrap already-connected transports into a session (the seam every
+    /// other constructor goes through; also the entry point for custom
+    /// transports — ssh tunnels, test doubles).
+    pub fn from_transports(transports: Vec<Box<dyn Transport>>) -> Result<ShardSession> {
+        anyhow::ensure!(!transports.is_empty(), "shard session needs at least one worker");
+        let events = Arc::new(BoundedQueue::new(transports.len() * (WINDOW + 2) + 4));
         let rx = Arc::new(Mutex::new(BlobRx::new()));
         let stats = Arc::new(ShardStats::default());
-        let mut workers: Vec<WorkerProc> = Vec::with_capacity(opts.workers);
-        for wi in 0..opts.workers {
-            let mut cmd = Command::new(&bin);
-            cmd.arg("shard-worker")
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped())
-                .stderr(Stdio::inherit());
-            if opts.worker_threads > 0 {
-                cmd.env("SRR_THREADS", opts.worker_threads.to_string());
-            }
-            if wi == 0 {
-                if let Some(k) = opts.exit_after_first {
-                    cmd.arg("--exit-after").arg(k.to_string());
-                }
-            }
-            let spawned = cmd.spawn().with_context(|| format!("spawning {}", bin.display()));
-            let mut child = match spawned {
-                Ok(c) => c,
-                Err(e) => {
-                    for w in &mut workers {
-                        let _ = w.child.kill();
-                        let _ = w.child.wait();
-                    }
-                    return Err(e);
-                }
-            };
-            let stdin = child.stdin.take().expect("piped stdin");
-            let stdout = child.stdout.take().expect("piped stdout");
-            let reader =
-                spawn_reader(wi, stdout, events.clone(), rx.clone(), stats.clone());
-            workers.push(WorkerProc {
-                child,
-                stdin: Some(BufWriter::new(stdin)),
+        let mut workers: Vec<WorkerConn> = Vec::with_capacity(transports.len());
+        for (wi, mut transport) in transports.into_iter().enumerate() {
+            let input = transport.take_reader().ok_or_else(|| {
+                anyhow::anyhow!("transport {} has no read half left", transport.describe())
+            })?;
+            let reader = spawn_reader(wi, input, events.clone(), rx.clone(), stats.clone());
+            workers.push(WorkerConn {
+                transport,
                 tx: BlobTx::new(),
                 outstanding: Vec::new(),
                 alive: true,
@@ -322,6 +337,122 @@ impl ShardSession {
             });
         }
         Ok(ShardSession { workers, events, rx, stats })
+    }
+
+    /// Spawn `opts.workers` worker processes with piped stdin/stdout
+    /// (stderr inherited so worker panics stay visible).
+    pub fn spawn(opts: &ShardOptions) -> Result<ShardSession> {
+        anyhow::ensure!(opts.workers >= 1, "shard session needs at least one worker");
+        let bin = worker_binary(opts)?;
+        let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(opts.workers);
+        for wi in 0..opts.workers {
+            let mut cmd = worker_command(&bin, opts, wi);
+            cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
+            let child = cmd
+                .spawn()
+                .with_context(|| format!("spawning {}", bin.display()))?;
+            // earlier transports kill their children on drop if a later
+            // spawn fails
+            transports.push(Box::new(ChildPipeTransport::new(child)));
+        }
+        Self::from_transports(transports)
+    }
+
+    /// Spawn `opts.workers` worker processes that dial back over TCP
+    /// loopback: the host binds an ephemeral `127.0.0.1` port, each
+    /// child runs `srr shard-worker --connect 127.0.0.1:<port>` with a
+    /// per-worker token, and the session maps dial-ins back to the
+    /// child processes (so the liveness probe still sees exits). Same
+    /// dispatcher, same bit-identity contract — only the bytes travel
+    /// through the loopback stack instead of pipes, which is what
+    /// `cargo bench -- --exp shard` measures TCP framing overhead with.
+    pub fn spawn_tcp(opts: &ShardOptions) -> Result<ShardSession> {
+        anyhow::ensure!(opts.workers >= 1, "shard session needs at least one worker");
+        let bin = worker_binary(opts)?;
+        let host = ShardHost::bind("127.0.0.1:0")?;
+        let addr = host.local_addr()?.to_string();
+        let mut children: HashMap<u64, Child> = HashMap::new();
+        for wi in 0..opts.workers {
+            let token = wi as u64 + 1;
+            let mut cmd = worker_command(&bin, opts, wi);
+            cmd.arg("--connect")
+                .arg(&addr)
+                .arg("--token")
+                .arg(token.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit());
+            match cmd.spawn().with_context(|| format!("spawning {}", bin.display())) {
+                Ok(child) => {
+                    children.insert(token, child);
+                }
+                Err(e) => {
+                    reap_children(children);
+                    return Err(e);
+                }
+            }
+        }
+        let accepted = host.accept_workers(opts.workers, SPAWN_TCP_ACCEPT);
+        let mut accepted = match accepted {
+            Ok(a) => a,
+            Err(e) => {
+                reap_children(children);
+                return Err(e);
+            }
+        };
+        // every admitted dial-in must present a token this session issued
+        // to one of its own children — a foreign process that happened to
+        // dial the ephemeral port (and would skew SRR_THREADS pinning /
+        // --exit-after fault injection) is an error, not a fleet member
+        let mut err: Option<anyhow::Error> = None;
+        for t in &mut accepted {
+            match children.remove(&t.token()) {
+                Some(child) => t.attach_child(child),
+                None if err.is_none() => {
+                    err = Some(anyhow::anyhow!(
+                        "shard host: unexpected dial-in {} — not one of this session's workers",
+                        t.describe()
+                    ));
+                }
+                None => {}
+            }
+        }
+        if err.is_none() && !children.is_empty() {
+            err = Some(anyhow::anyhow!(
+                "shard host: {} spawned worker(s) never completed the handshake",
+                children.len()
+            ));
+        }
+        if let Some(e) = err {
+            // reap the children whose slots were taken; accepted
+            // transports drop below (killing any attached children)
+            reap_children(children);
+            return Err(e);
+        }
+        Self::from_transports(accepted.into_iter().map(|t| Box::new(t) as _).collect())
+    }
+
+    /// Listen on `addr` and wait (up to `deadline`) for `workers`
+    /// remote `srr shard-worker --connect` dial-ins. No authentication
+    /// beyond the wire handshake — bind loopback and tunnel over ssh,
+    /// or stay on a trusted LAN (see the README's remote-worker
+    /// workflow).
+    pub fn listen(addr: &str, workers: usize, deadline: Duration) -> Result<ShardSession> {
+        anyhow::ensure!(workers >= 1, "shard session needs at least one worker");
+        let host = ShardHost::bind(addr)?;
+        let accepted = host.accept_workers(workers, deadline)?;
+        Self::from_transports(accepted.into_iter().map(|t| Box::new(t) as _).collect())
+    }
+
+    /// Dial workers that are already listening (`srr shard-worker
+    /// --listen host:port`), one session worker per address.
+    pub fn dial(addrs: &[String]) -> Result<ShardSession> {
+        anyhow::ensure!(!addrs.is_empty(), "shard session needs at least one worker");
+        let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            transports.push(Box::new(TcpTransport::dial(addr)?));
+        }
+        Self::from_transports(transports)
     }
 
     /// Workers still accepting jobs.
@@ -342,7 +473,7 @@ impl ShardSession {
             return;
         }
         w.alive = false;
-        w.stdin = None; // close the pipe
+        w.transport.close_writer(); // peer sees EOF
         self.stats.deaths.fetch_add(1, Ordering::Relaxed);
         let orphans = std::mem::take(&mut w.outstanding);
         self.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
@@ -364,9 +495,9 @@ impl ShardSession {
             }
             let Some(job) = pending.pop_front() else { return };
             let frames = src.encode(job, &mut self.workers[wi].tx);
-            let sent = match self.workers[wi].stdin.as_mut() {
-                Some(stdin) => {
-                    frames.iter().all(|f| f.write_to(stdin).is_ok()) && stdin.flush().is_ok()
+            let sent = match self.workers[wi].transport.writer() {
+                Some(mut out) => {
+                    frames.iter().all(|f| f.write_to(&mut out).is_ok()) && out.flush().is_ok()
                 }
                 None => false,
             };
@@ -445,12 +576,11 @@ impl ShardSession {
                     self.fill_windows(src, &mut pending);
                 }
                 PopResult::Empty => {
-                    // no events: probe for children that exited without
-                    // their reader noticing, then keep waiting
+                    // no events: probe each transport's out-of-band death
+                    // signal (a child that exited without its reader
+                    // noticing), then keep waiting
                     for wi in 0..self.workers.len() {
-                        if self.workers[wi].alive
-                            && matches!(self.workers[wi].child.try_wait(), Ok(Some(_)))
-                        {
+                        if self.workers[wi].alive && self.workers[wi].transport.poll_dead() {
                             self.mark_dead(wi, &mut pending);
                         }
                     }
@@ -478,19 +608,20 @@ impl ShardSession {
     fn teardown(&mut self, graceful: bool) {
         for w in &mut self.workers {
             if graceful {
-                if let Some(stdin) = w.stdin.as_mut() {
-                    let _ = shutdown_frame().write_to(stdin);
-                    let _ = stdin.flush();
+                if let Some(mut out) = w.transport.writer() {
+                    let _ = shutdown_frame().write_to(&mut out);
+                    let _ = out.flush();
                 }
             }
-            w.stdin = None; // EOF either way
+            w.transport.close_writer(); // EOF either way
         }
         self.events.close();
         for w in &mut self.workers {
-            if !graceful && matches!(w.child.try_wait(), Ok(None)) {
-                let _ = w.child.kill();
+            if graceful {
+                w.transport.wait();
+            } else {
+                w.transport.kill();
             }
-            let _ = w.child.wait();
             if let Some(r) = w.reader.take() {
                 let _ = r.join();
             }
@@ -1046,7 +1177,9 @@ where
         let tx = tx.clone();
         let jobs = jobs.clone();
         std::thread::spawn(move || {
-            let mut input = input;
+            // buffer the read half: a raw TcpStream would otherwise pay
+            // three read syscalls per frame (header, payload, checksum)
+            let mut input = BufReader::new(input);
             loop {
                 match wire::read_frame(&mut input) {
                     Ok(Some(f)) => match f.kind {
@@ -1091,10 +1224,17 @@ where
             while let Some(frames) = results.pop() {
                 for fr in &frames {
                     if fr.write_to(&mut out).is_err() {
+                        // close the queue so the compute loop's next push
+                        // fails instead of blocking forever against a
+                        // writer that is gone (a remote host that
+                        // disconnected mid-results must not wedge the
+                        // worker process)
+                        results.close();
                         return;
                     }
                 }
                 if out.flush().is_err() {
+                    results.close();
                     return;
                 }
             }
@@ -1126,10 +1266,24 @@ where
 }
 
 /// Entry point behind `srr shard-worker`: speak the wire codec over
-/// stdin/stdout until shutdown or EOF. `--exit-after N` is the
-/// fault-injection hook the requeue tests use.
+/// stdin/stdout (default), over a dialed-out TCP connection
+/// (`--connect host:port`, optionally presenting `--token N` so a host
+/// that spawned this process can map the dial-in back to it), or over a
+/// single accepted connection (`--listen host:port`) until shutdown or
+/// EOF. `--exit-after N` is the fault-injection hook the requeue tests
+/// use.
 pub fn worker_main(args: &Args) -> Result<()> {
     let exit_after = args.get("exit-after").and_then(|s| s.parse::<usize>().ok());
+    if let Some(addr) = args.get("connect") {
+        let stream = worker_connect(addr, args.get_u64("token", 0))?;
+        let input = stream.try_clone().context("cloning TCP read half")?;
+        return run_worker(input, stream, exit_after);
+    }
+    if let Some(addr) = args.get("listen") {
+        let stream = worker_accept(addr)?;
+        let input = stream.try_clone().context("cloning TCP read half")?;
+        return run_worker(input, stream, exit_after);
+    }
     run_worker(std::io::stdin(), std::io::stdout(), exit_after)
 }
 
@@ -1403,5 +1557,187 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(worker_binary(&opts).unwrap(), PathBuf::from("/explicit/srr"));
+    }
+
+    // -----------------------------------------------------------------------
+    // fault injection (satellite: FaultTransport property suite)
+    // -----------------------------------------------------------------------
+
+    use crate::coordinator::jobs::byte_pipe;
+    use crate::coordinator::transport::{FaultPlan, FaultTransport, Transport};
+    use crate::util::prop;
+
+    /// A worker on a thread behind in-memory pipes, with `plan`
+    /// interposed on the host side of both directions.
+    fn fault_worker(plan: FaultPlan) -> Box<dyn Transport> {
+        let (host_to_worker, worker_input) = byte_pipe(1 << 16);
+        let (worker_output, worker_to_host) = byte_pipe(1 << 16);
+        std::thread::spawn(move || {
+            // errors are the host's problem: a severed pipe here is the
+            // crash being simulated
+            let _ = run_worker(worker_input, worker_output, None);
+        });
+        Box::new(FaultTransport::new(host_to_worker, worker_to_host, plan))
+    }
+
+    /// One seeded fault schedule. Corruption severs the stream right
+    /// after the corrupted byte: a flip landing in a frame's *header
+    /// length field* (not covered by the payload checksum) would
+    /// otherwise leave the host parser waiting for bytes the worker
+    /// will never send — an unbounded stall `poll_dead` cannot see.
+    /// With the cut at `at + 1` every corrupted stream terminates, and
+    /// the parser observes the damage as `Truncated`/`BadChecksum`
+    /// either way (the dedicated transport unit tests cover the pure
+    /// checksum path deterministically).
+    fn random_plan(g: &mut prop::Gen) -> FaultPlan {
+        match g.rng.below(5) {
+            0 => FaultPlan::default(),
+            1 => FaultPlan {
+                chop: 1 + g.rng.below(7),
+                flush_delay: Duration::from_millis(g.rng.below(3) as u64),
+                ..Default::default()
+            },
+            2 => FaultPlan {
+                cut_tx_after: Some(g.rng.below(200_000) as u64),
+                chop: g.rng.below(9),
+                ..Default::default()
+            },
+            3 => FaultPlan {
+                cut_rx_after: Some(g.rng.below(100_000) as u64),
+                ..Default::default()
+            },
+            _ => {
+                let at = g.rng.below(100_000) as u64;
+                FaultPlan {
+                    corrupt_rx: Some((at, 1 << g.rng.below(8))),
+                    cut_rx_after: Some(at + 1),
+                    ..Default::default()
+                }
+            }
+        }
+    }
+
+    /// Records how often each job was dispatched, so the suite can
+    /// prove a completed job is never handed out again: a job's
+    /// dispatch count can only exceed one by way of worker-death
+    /// requeue.
+    struct CountingSource<S> {
+        inner: S,
+        counts: RefCell<Vec<usize>>,
+    }
+
+    impl<S: JobSource> JobSource for CountingSource<S> {
+        fn n_jobs(&self) -> usize {
+            self.inner.n_jobs()
+        }
+        fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame> {
+            self.counts.borrow_mut()[job] += 1;
+            self.inner.encode(job, tx)
+        }
+    }
+
+    /// Satellite: for seeded schedules of byte-chopped writes, delayed
+    /// flushes, mid-frame disconnects, and bit corruption, the
+    /// dispatcher never deadlocks (worker 0 stays clean, so every run
+    /// must complete), never double-assigns a completed job (dispatch
+    /// counts bounded by deaths), and the surviving workers' merged
+    /// results stay bit-identical to the in-process `SweepRunner`.
+    /// Failures report a seed replayable via `util::prop::replay`.
+    #[test]
+    fn prop_fault_schedules_never_deadlock_or_double_assign() {
+        let (params, cfg, calib) = setup();
+        let configs: Vec<SweepConfig> = grid().into_iter().take(3).collect();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let expect = runner.run_factored(&configs);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+        let n_layers = names.len();
+
+        prop::check(0xFA17, 6, |g| {
+            let n_workers = 2 + g.rng.below(2);
+            let transports: Vec<Box<dyn Transport>> = (0..n_workers)
+                .map(|wi| {
+                    // worker 0 is always clean: the run must finish
+                    let plan = if wi == 0 { FaultPlan::default() } else { random_plan(g) };
+                    fault_worker(plan)
+                })
+                .collect();
+            let mut session = ShardSession::from_transports(transports).unwrap();
+            {
+                let mut rx = session.rx().lock().unwrap();
+                for layer in &prep.cache.layers {
+                    for arc in layer.qdeq0.values() {
+                        rx.seed_mat(arc);
+                    }
+                    for arc in layer.qdeq0_packed.values() {
+                        rx.seed_packed(arc);
+                    }
+                }
+            }
+            let src = CountingSource {
+                inner: SweepJobSource {
+                    configs: &configs,
+                    cache: &prep.cache,
+                    prep_rank: prep.prep_rank,
+                    n_layers,
+                    memo: EncodeMemo::default(),
+                },
+                counts: RefCell::new(vec![0; configs.len() * n_layers]),
+            };
+            let case_metrics = Metrics::new();
+            let msgs = session
+                .run_jobs(&src, &case_metrics)
+                .expect("a clean worker survives every schedule");
+            let parts = {
+                let rx = session.rx().lock().unwrap();
+                sweep_parts(msgs, &rx, &configs, &names, n_layers, &prep).unwrap()
+            };
+            let got = assemble_outcomes(&params, &names, configs.len(), parts, &case_metrics);
+            assert_outcomes_identical(&expect, &got);
+
+            let deaths = case_metrics.get("shard.worker_deaths") as usize;
+            for (j, &c) in src.counts.borrow().iter().enumerate() {
+                assert!(c >= 1, "job {j} was never dispatched");
+                assert!(
+                    c <= 1 + deaths,
+                    "job {j} dispatched {c}× with only {deaths} worker death(s) — \
+                     a completed job was re-assigned"
+                );
+            }
+            session.shutdown();
+        });
+    }
+
+    /// Every worker faulted to death: the dispatcher must error out —
+    /// "all shard workers died" — rather than hang waiting on peers
+    /// that will never answer.
+    #[test]
+    fn all_faulty_workers_error_instead_of_hanging() {
+        let (params, cfg, calib) = setup();
+        let configs: Vec<SweepConfig> = grid().into_iter().take(2).collect();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+
+        let transports: Vec<Box<dyn Transport>> = (0..2)
+            .map(|_| {
+                fault_worker(FaultPlan { cut_tx_after: Some(100), ..Default::default() })
+            })
+            .collect();
+        let mut session = ShardSession::from_transports(transports).unwrap();
+        let src = SweepJobSource {
+            configs: &configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers: names.len(),
+            memo: EncodeMemo::default(),
+        };
+        let err = session.run_jobs(&src, &metrics).expect_err("no worker can finish a job");
+        assert!(
+            err.to_string().contains("all shard workers died"),
+            "unexpected error: {err:#}"
+        );
     }
 }

@@ -1,0 +1,828 @@
+//! Transports for the shard plane: how a [`ShardSession`] host reaches
+//! a worker's framed byte stream.
+//!
+//! The wire codec ([`super::wire`]) and the dispatcher
+//! ([`super::shard`]) are transport-agnostic: everything they need from
+//! a connection is a duplex byte stream with *liveness close semantics*
+//! (EOF/`BrokenPipe` when the peer goes away) plus an out-of-band death
+//! probe for peers that can hang without closing. This module is that
+//! seam, the [`Transport`] trait, with three implementations:
+//!
+//! * [`ChildPipeTransport`] — a spawned `srr shard-worker` child over
+//!   stdin/stdout pipes (the original, single-host production path);
+//! * [`TcpTransport`] — a worker on the other end of a TCP connection,
+//!   opened by either side ([`ShardHost`] accepts dial-ins from
+//!   `srr shard-worker --connect host:port`; [`TcpTransport::dial`]
+//!   reaches a worker started with `--listen`). Connections open with a
+//!   [`kind::HELLO`](super::wire::kind::HELLO) exchange carried in a
+//!   regular wire frame, so the codec's magic/version/checksum checks
+//!   *are* the handshake — a peer speaking another [`WIRE_VERSION`]
+//!   (or not speaking the protocol at all) is refused before any job
+//!   bytes flow. **No authentication beyond that**: run it on a trusted
+//!   LAN or through an ssh tunnel (see the README's remote-worker
+//!   workflow).
+//! * [`FaultTransport`] — a deterministic fault-injection double for
+//!   tests: a seeded [`FaultPlan`] chops writes into short chunks,
+//!   delays flushes, severs either direction mid-frame, and flips bits
+//!   on the receive path, so the dispatcher's death/requeue handling is
+//!   exercised without real processes or sockets.
+//!
+//! [`ShardSession`]: super::shard::ShardSession
+//! [`WIRE_VERSION`]: super::wire::WIRE_VERSION
+
+use std::io::{BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::wire::{self, decode_hello, encode_hello, kind, WireError};
+
+/// How long each side of a TCP handshake waits for the peer's HELLO.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Payload cap for the HELLO frame (a real hello is 9 bytes): an
+/// unauthenticated peer must not be able to make the handshake
+/// allocate an attacker-chosen buffer.
+const HELLO_MAX_LEN: u64 = 64;
+
+/// A duplex framed byte stream to one shard worker.
+///
+/// Contract with the dispatcher ([`super::shard::ShardSession`]):
+///
+/// * [`take_reader`](Transport::take_reader) yields the owned read half
+///   exactly once (it moves into the session's reader thread); the read
+///   half must return `Ok(0)` — EOF — once the peer is gone, which is
+///   the in-band death signal.
+/// * [`writer`](Transport::writer) is the framed write half; a write or
+///   flush error means the peer is unreachable and the caller marks the
+///   worker dead. [`close_writer`](Transport::close_writer) delivers
+///   EOF to the peer (a worker drains and exits on it).
+/// * [`poll_dead`](Transport::poll_dead) is the out-of-band probe the
+///   event loop calls on `pop_timeout` expiry, for peers that can die
+///   *without* closing the stream (a wedged child); transports without
+///   such a side channel return `false` and rely on reader EOF.
+pub trait Transport: Send {
+    /// Take the owned read half for the session's reader thread.
+    /// Returns `None` after the first call.
+    fn take_reader(&mut self) -> Option<Box<dyn Read + Send>>;
+
+    /// The write half, or `None` once closed/dead.
+    fn writer(&mut self) -> Option<&mut dyn Write>;
+
+    /// Close the write half so the peer sees EOF (idempotent).
+    fn close_writer(&mut self);
+
+    /// Out-of-band liveness probe: `true` once the peer is known dead.
+    fn poll_dead(&mut self) -> bool;
+
+    /// Graceful reap: block until a peer this transport owns (a spawned
+    /// child process) has exited. No-op for unowned peers.
+    fn wait(&mut self);
+
+    /// Forceful teardown: kill an owned peer / sever the connection.
+    fn kill(&mut self);
+
+    /// Human-readable endpoint description for error messages.
+    fn describe(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// child-process pipes
+// ---------------------------------------------------------------------------
+
+/// A spawned worker child reached over its stdin/stdout pipes.
+pub struct ChildPipeTransport {
+    child: Child,
+    stdin: Option<BufWriter<std::process::ChildStdin>>,
+    stdout: Option<std::process::ChildStdout>,
+}
+
+impl ChildPipeTransport {
+    /// Adopt a freshly spawned child whose stdin/stdout were configured
+    /// as pipes (panics if they were not).
+    pub fn new(mut child: Child) -> Self {
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        ChildPipeTransport { child, stdin: Some(BufWriter::new(stdin)), stdout: Some(stdout) }
+    }
+}
+
+impl Transport for ChildPipeTransport {
+    fn take_reader(&mut self) -> Option<Box<dyn Read + Send>> {
+        self.stdout.take().map(|s| Box::new(s) as Box<dyn Read + Send>)
+    }
+
+    fn writer(&mut self) -> Option<&mut dyn Write> {
+        self.stdin.as_mut().map(|w| w as &mut dyn Write)
+    }
+
+    fn close_writer(&mut self) {
+        self.stdin = None; // drop → pipe EOF
+    }
+
+    fn poll_dead(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(Some(_)))
+    }
+
+    fn wait(&mut self) {
+        let _ = self.child.wait();
+    }
+
+    fn kill(&mut self) {
+        self.stdin = None;
+        if matches!(self.child.try_wait(), Ok(None)) {
+            let _ = self.child.kill();
+        }
+        let _ = self.child.wait();
+    }
+
+    fn describe(&self) -> String {
+        format!("child pid {}", self.child.id())
+    }
+}
+
+impl Drop for ChildPipeTransport {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+/// A worker reached over a handshaken TCP connection. When the host
+/// spawned the worker process itself (loopback benches/tests), the
+/// transport also owns the [`Child`] so the liveness probe can notice
+/// an exit that never sent FIN.
+pub struct TcpTransport {
+    /// buffered write half (the read half is a `try_clone` of the same
+    /// socket, handed to the session's reader thread)
+    writer: Option<BufWriter<TcpStream>>,
+    reader: Option<TcpStream>,
+    /// a third clone of the socket kept for shutdown: after the session
+    /// takes the reader and teardown drops the writer, this is the only
+    /// handle left that can sever the connection and unblock a reader
+    /// thread parked on a wedged remote peer
+    ctrl: TcpStream,
+    peer: String,
+    /// the token the worker presented in its HELLO (0 = anonymous)
+    token: u64,
+    child: Option<Child>,
+}
+
+impl TcpTransport {
+    /// Wrap an already-handshaken stream. `token` is the peer's HELLO
+    /// token; `child` attaches a host-spawned worker process.
+    fn from_stream(stream: TcpStream, token: u64, child: Option<Child>) -> Result<Self> {
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown peer>".into());
+        let _ = stream.set_nodelay(true);
+        let reader = stream.try_clone().context("cloning TCP read half")?;
+        let ctrl = stream.try_clone().context("cloning TCP shutdown handle")?;
+        Ok(TcpTransport {
+            writer: Some(BufWriter::new(stream)),
+            reader: Some(reader),
+            ctrl,
+            peer,
+            token,
+            child,
+        })
+    }
+
+    /// Dial a worker that is listening (`srr shard-worker --listen
+    /// host:port`), performing the HELLO handshake as the host side.
+    pub fn dial(addr: &str) -> Result<Self> {
+        let sock = resolve(addr)?;
+        let mut stream = TcpStream::connect_timeout(&sock, Duration::from_secs(10))
+            .with_context(|| format!("dialing shard worker at {addr}"))?;
+        let token = handshake_tcp(&mut stream, false, 0)
+            .map_err(|e| anyhow::anyhow!("handshake with {addr} failed: {e}"))?;
+        Self::from_stream(stream, token, None)
+    }
+
+    /// The token the peer presented in its HELLO.
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    /// Attach a host-spawned child process for liveness probing.
+    pub fn attach_child(&mut self, child: Child) {
+        self.child = Some(child);
+    }
+
+    fn shutdown_both(&mut self) {
+        let _ = self.ctrl.shutdown(Shutdown::Both);
+    }
+}
+
+impl Transport for TcpTransport {
+    fn take_reader(&mut self) -> Option<Box<dyn Read + Send>> {
+        self.reader.take().map(|s| Box::new(s) as Box<dyn Read + Send>)
+    }
+
+    fn writer(&mut self) -> Option<&mut dyn Write> {
+        self.writer.as_mut().map(|w| w as &mut dyn Write)
+    }
+
+    fn close_writer(&mut self) {
+        if let Some(mut w) = self.writer.take() {
+            let _ = w.flush();
+            let _ = self.ctrl.shutdown(Shutdown::Write); // FIN
+        }
+    }
+
+    fn poll_dead(&mut self) -> bool {
+        match &mut self.child {
+            Some(c) => matches!(c.try_wait(), Ok(Some(_))),
+            None => false, // rely on reader EOF (FIN) for remote peers
+        }
+    }
+
+    fn wait(&mut self) {
+        if let Some(c) = &mut self.child {
+            let _ = c.wait();
+        }
+        // unblock a reader thread still parked on the socket
+        self.shutdown_both();
+    }
+
+    fn kill(&mut self) {
+        self.shutdown_both();
+        self.writer = None;
+        if let Some(c) = &mut self.child {
+            if matches!(c.try_wait(), Ok(None)) {
+                let _ = c.kill();
+            }
+            let _ = c.wait();
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self.token {
+            0 => format!("tcp {}", self.peer),
+            t => format!("tcp {} (token {t})", self.peer),
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{addr} resolved to no address"))
+}
+
+/// Exchange HELLO frames over any duplex stream. Both sides send first,
+/// then read — no ordering deadlock. Refuses a peer claiming the local
+/// role, so success implies the peer holds the opposite role; returns
+/// the peer's token.
+pub(crate) fn handshake_io<S: Read + Write>(
+    s: &mut S,
+    local_is_worker: bool,
+    token: u64,
+) -> Result<u64, WireError> {
+    encode_hello(local_is_worker, token)
+        .write_to(s)
+        .map_err(|e| WireError::Io(e.kind()))?;
+    s.flush().map_err(|e| WireError::Io(e.kind()))?;
+    let frame =
+        wire::read_frame_limited(s, HELLO_MAX_LEN)?.ok_or(WireError::Truncated)?;
+    if frame.kind != kind::HELLO {
+        return Err(WireError::Malformed("expected hello frame"));
+    }
+    let (peer_is_worker, peer_token) = decode_hello(&frame.payload)?;
+    if peer_is_worker == local_is_worker {
+        return Err(WireError::Malformed("peer claims the same role"));
+    }
+    Ok(peer_token)
+}
+
+/// [`handshake_io`] over TCP, with a read/write deadline so a silent
+/// peer cannot wedge the accept loop. Timeouts are cleared afterwards
+/// (a read timeout would surface as spurious I/O errors on the
+/// session's reader thread).
+pub(crate) fn handshake_tcp(
+    stream: &mut TcpStream,
+    local_is_worker: bool,
+    token: u64,
+) -> Result<u64, WireError> {
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT));
+    let out = handshake_io(stream, local_is_worker, token);
+    let _ = stream.set_read_timeout(None);
+    let _ = stream.set_write_timeout(None);
+    out
+}
+
+/// A bound listener collecting handshaken worker dial-ins. Two-phase
+/// (bind, then [`accept_workers`](ShardHost::accept_workers)) so
+/// callers can learn the ephemeral port before starting workers that
+/// dial it.
+pub struct ShardHost {
+    listener: TcpListener,
+}
+
+impl ShardHost {
+    /// Bind `addr` (e.g. `0.0.0.0:7777`, or `127.0.0.1:0` for an
+    /// ephemeral loopback port).
+    pub fn bind(addr: &str) -> Result<ShardHost> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding shard host on {addr}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        Ok(ShardHost { listener })
+    }
+
+    /// The bound address (the port workers must `--connect` to).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept dial-ins until `n` workers pass the HELLO handshake or
+    /// `deadline` elapses. Connections that fail the handshake — wrong
+    /// wire version, wrong role, not the protocol at all — are logged
+    /// to stderr and dropped; they do not count and do not abort the
+    /// accept loop. Handshakes run on their own threads, so a silent
+    /// connection (a port scanner, a health check) burning its
+    /// [`HANDSHAKE_TIMEOUT`] cannot stall the admission of legitimate
+    /// workers dialing in behind it.
+    pub fn accept_workers(&self, n: usize, deadline: Duration) -> Result<Vec<TcpTransport>> {
+        let t_end = Instant::now() + deadline;
+        let mut out = Vec::with_capacity(n);
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<Option<TcpTransport>>();
+        let mut in_flight = 0usize;
+        while out.len() < n {
+            // collect finished handshakes without blocking
+            while let Ok(res) = done_rx.try_recv() {
+                in_flight -= 1;
+                if let Some(t) = res {
+                    out.push(t);
+                }
+            }
+            if out.len() >= n {
+                break;
+            }
+            // deadline is enforced every iteration — a steady stream of
+            // refused connections must not extend the accept window
+            if Instant::now() >= t_end {
+                // give in-flight handshakes their bounded window before
+                // declaring the accept window closed
+                while in_flight > 0 && out.len() < n {
+                    match done_rx.recv_timeout(HANDSHAKE_TIMEOUT) {
+                        Ok(res) => {
+                            in_flight -= 1;
+                            if let Some(t) = res {
+                                out.push(t);
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+                if out.len() >= n {
+                    break;
+                }
+                anyhow::bail!(
+                    "shard host: only {}/{n} workers connected within {:?}",
+                    out.len(),
+                    deadline
+                );
+            }
+            match self.listener.accept() {
+                Ok((mut stream, peer)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let done_tx = done_tx.clone();
+                    in_flight += 1;
+                    std::thread::spawn(move || {
+                        let res = match handshake_tcp(&mut stream, false, 0) {
+                            Ok(token) => {
+                                match TcpTransport::from_stream(stream, token, None) {
+                                    Ok(t) => Some(t),
+                                    Err(e) => {
+                                        eprintln!("shard host: dropping {peer}: {e:#}");
+                                        None
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("shard host: refusing {peer}: {e}");
+                                None
+                            }
+                        };
+                        let _ = done_tx.send(res);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(e).context("accepting shard worker"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Worker-side TCP entry: dial `addr` and handshake as a worker,
+/// presenting `token`. Returns the connected stream ready for the
+/// worker loop (the caller clones it for the read half).
+pub fn worker_connect(addr: &str, token: u64) -> Result<TcpStream> {
+    let sock = resolve(addr)?;
+    let mut stream = TcpStream::connect_timeout(&sock, Duration::from_secs(10))
+        .with_context(|| format!("connecting to shard host at {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    handshake_tcp(&mut stream, true, token)
+        .map_err(|e| anyhow::anyhow!("handshake with host {addr} failed: {e}"))?;
+    Ok(stream)
+}
+
+/// Worker-side listen entry: bind `addr` and accept connections until
+/// one passes the host handshake. Stray connections — port scanners,
+/// health checks, cross-version peers — are logged and dropped instead
+/// of killing the worker before the real host dials in, and each
+/// handshake runs on its own thread (mirroring
+/// [`ShardHost::accept_workers`]) so a slow or silent stray cannot
+/// block the real host's dial-in past its handshake timeout. Used by
+/// `srr shard-worker --listen`.
+pub fn worker_accept(addr: &str) -> Result<TcpStream> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("worker listening on {addr}"))?;
+    listener.set_nonblocking(true).context("nonblocking worker listener")?;
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<TcpStream>();
+    loop {
+        if let Ok(stream) = done_rx.try_recv() {
+            return Ok(stream);
+        }
+        match listener.accept() {
+            Ok((mut stream, peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let done_tx = done_tx.clone();
+                std::thread::spawn(move || match handshake_tcp(&mut stream, true, 0) {
+                    Ok(_) => {
+                        let _ = done_tx.send(stream);
+                    }
+                    Err(e) => eprintln!("shard worker: refusing {peer}: {e}"),
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => return Err(e).context("accepting shard host"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// Deterministic fault schedule for one [`FaultTransport`] connection.
+/// All offsets are absolute byte positions in the respective direction's
+/// stream, so a schedule replays exactly (see
+/// [`util::prop`](crate::util::prop) for the replay workflow).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// accept at most this many bytes per `write` call (0 = unlimited):
+    /// byte-chops frames so peers must reassemble short reads/writes
+    pub chop: usize,
+    /// sleep this long on every flush (delayed delivery)
+    pub flush_delay: Duration,
+    /// sever the host→worker direction after this many bytes: the write
+    /// fails with `BrokenPipe` and the worker sees EOF mid-frame
+    pub cut_tx_after: Option<u64>,
+    /// sever the worker→host direction after this many bytes: the host
+    /// reader sees EOF mid-frame
+    pub cut_rx_after: Option<u64>,
+    /// XOR this mask into the worker→host byte at this offset (bit
+    /// corruption the frame checksum must catch). Schedules should pair
+    /// this with [`cut_rx_after`](FaultPlan::cut_rx_after) at the very
+    /// next byte — mirroring a link that corrupts and then drops.
+    /// A flip left on a *live* stream can land in a frame header's
+    /// length field, which the payload checksum does not cover; the
+    /// parser would then wait for bytes the peer never sends, a stall
+    /// no liveness probe can see.
+    pub corrupt_rx: Option<(u64, u8)>,
+}
+
+struct FaultWriter {
+    inner: Option<Box<dyn Write + Send>>,
+    chop: usize,
+    flush_delay: Duration,
+    cut_after: Option<u64>,
+    written: u64,
+}
+
+impl Write for FaultWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if let Some(cut) = self.cut_after {
+            if self.written >= cut {
+                self.inner = None; // sever: peer sees EOF mid-frame
+                return Err(std::io::ErrorKind::BrokenPipe.into());
+            }
+        }
+        let inner = match &mut self.inner {
+            Some(w) => w,
+            None => return Err(std::io::ErrorKind::BrokenPipe.into()),
+        };
+        let mut n = buf.len();
+        if self.chop > 0 {
+            n = n.min(self.chop);
+        }
+        if let Some(cut) = self.cut_after {
+            // written < cut here (checked above), so at least one byte
+            // still fits before the sever point
+            n = n.min((cut - self.written) as usize);
+        }
+        let n = inner.write(&buf[..n])?;
+        self.written += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if !self.flush_delay.is_zero() {
+            std::thread::sleep(self.flush_delay);
+        }
+        match &mut self.inner {
+            Some(w) => w.flush(),
+            None => Err(std::io::ErrorKind::BrokenPipe.into()),
+        }
+    }
+}
+
+struct FaultReader {
+    inner: Box<dyn Read + Send>,
+    cut_after: Option<u64>,
+    corrupt: Option<(u64, u8)>,
+    read: u64,
+}
+
+impl Read for FaultReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut limit = buf.len();
+        if let Some(cut) = self.cut_after {
+            if self.read >= cut {
+                return Ok(0); // EOF mid-frame
+            }
+            limit = limit.min((cut - self.read) as usize);
+        }
+        let n = self.inner.read(&mut buf[..limit])?;
+        if let Some((at, mask)) = self.corrupt {
+            if at >= self.read && at < self.read + n as u64 {
+                buf[(at - self.read) as usize] ^= mask;
+            }
+        }
+        self.read += n as u64;
+        Ok(n)
+    }
+}
+
+/// Fault-injecting [`Transport`] over any duplex pair — in practice the
+/// in-memory [`byte_pipe`](super::jobs::byte_pipe)s of a worker running
+/// on a thread. With a default (empty) [`FaultPlan`] it is a clean
+/// loopback transport.
+pub struct FaultTransport {
+    writer: Option<FaultWriter>,
+    reader: Option<FaultReader>,
+}
+
+impl FaultTransport {
+    /// Interpose `plan` on a duplex pair: `to_peer` carries host→worker
+    /// bytes, `from_peer` carries worker→host bytes.
+    pub fn new(
+        to_peer: impl Write + Send + 'static,
+        from_peer: impl Read + Send + 'static,
+        plan: FaultPlan,
+    ) -> Self {
+        FaultTransport {
+            writer: Some(FaultWriter {
+                inner: Some(Box::new(to_peer)),
+                chop: plan.chop,
+                flush_delay: plan.flush_delay,
+                cut_after: plan.cut_tx_after,
+                written: 0,
+            }),
+            reader: Some(FaultReader {
+                inner: Box::new(from_peer),
+                cut_after: plan.cut_rx_after,
+                corrupt: plan.corrupt_rx,
+                read: 0,
+            }),
+        }
+    }
+}
+
+impl Transport for FaultTransport {
+    fn take_reader(&mut self) -> Option<Box<dyn Read + Send>> {
+        self.reader.take().map(|r| Box::new(r) as Box<dyn Read + Send>)
+    }
+
+    fn writer(&mut self) -> Option<&mut dyn Write> {
+        match &mut self.writer {
+            Some(w) if w.inner.is_some() => Some(w as &mut dyn Write),
+            _ => None,
+        }
+    }
+
+    fn close_writer(&mut self) {
+        self.writer = None; // drops the inner half → peer EOF
+    }
+
+    fn poll_dead(&mut self) -> bool {
+        false
+    }
+
+    fn wait(&mut self) {}
+
+    fn kill(&mut self) {
+        self.writer = None;
+        self.reader = None;
+    }
+
+    fn describe(&self) -> String {
+        "fault-injected loopback".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::jobs::byte_pipe;
+    use crate::coordinator::wire::{read_frame, Frame, WIRE_VERSION};
+
+    #[test]
+    fn handshake_pairs_host_and_worker_roles() {
+        let (host_w, worker_r) = byte_pipe(1 << 12);
+        let (worker_w, host_r) = byte_pipe(1 << 12);
+        let worker = std::thread::spawn(move || {
+            let mut duplex = Duplex { r: worker_r, w: worker_w };
+            handshake_io(&mut duplex, true, 42)
+        });
+        let mut duplex = Duplex { r: host_r, w: host_w };
+        let host_view = handshake_io(&mut duplex, false, 0).expect("host handshake");
+        let worker_view = worker.join().unwrap().expect("worker handshake");
+        assert_eq!(host_view, 42, "host sees the worker's token");
+        assert_eq!(worker_view, 0, "worker sees the host's token");
+    }
+
+    #[test]
+    fn handshake_refuses_same_role_and_non_hello() {
+        // two hosts
+        let (host_w, peer_r) = byte_pipe(1 << 12);
+        let (peer_w, host_r) = byte_pipe(1 << 12);
+        let peer = std::thread::spawn(move || {
+            let mut duplex = Duplex { r: peer_r, w: peer_w };
+            handshake_io(&mut duplex, false, 0)
+        });
+        let mut duplex = Duplex { r: host_r, w: host_w };
+        assert!(matches!(
+            handshake_io(&mut duplex, false, 0),
+            Err(WireError::Malformed("peer claims the same role"))
+        ));
+        let _ = peer.join().unwrap();
+
+        // a shutdown frame where the hello belongs
+        let (mut raw_w, raw_r) = byte_pipe(1 << 12);
+        wire::shutdown_frame().write_to(&mut raw_w).unwrap();
+        let (sink_w, _keep) = byte_pipe(1 << 12);
+        let mut duplex = Duplex { r: raw_r, w: sink_w };
+        assert!(matches!(
+            handshake_io(&mut duplex, false, 0),
+            Err(WireError::Malformed("expected hello frame"))
+        ));
+    }
+
+    /// The handshake *is* the wire version gate: a peer advertising a
+    /// different WIRE_VERSION is refused by the frame reader itself.
+    #[test]
+    fn handshake_refuses_cross_version_peer() {
+        let mut bytes = Vec::new();
+        wire::encode_hello(true, 0).write_to(&mut bytes).unwrap();
+        bytes[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        let (mut raw_w, raw_r) = byte_pipe(1 << 12);
+        std::io::Write::write_all(&mut raw_w, &bytes).unwrap();
+        let (sink_w, _keep) = byte_pipe(1 << 12);
+        let mut duplex = Duplex { r: raw_r, w: sink_w };
+        match handshake_io(&mut duplex, false, 0) {
+            Err(WireError::BadVersion { got }) => assert_eq!(got, WIRE_VERSION + 1),
+            other => panic!("expected BadVersion, got {other:?}"),
+        }
+    }
+
+    /// An unauthenticated peer advertising a huge payload length in the
+    /// hello header must be refused without the allocation.
+    #[test]
+    fn handshake_refuses_oversized_hello_frame() {
+        let mut bytes = Vec::new();
+        wire::encode_hello(true, 0).write_to(&mut bytes).unwrap();
+        // lie about the payload length (4 GiB) in the frame header
+        bytes[8..16].copy_from_slice(&(u32::MAX as u64).to_le_bytes());
+        let (mut raw_w, raw_r) = byte_pipe(1 << 12);
+        std::io::Write::write_all(&mut raw_w, &bytes).unwrap();
+        let (sink_w, _keep) = byte_pipe(1 << 12);
+        let mut duplex = Duplex { r: raw_r, w: sink_w };
+        assert!(matches!(
+            handshake_io(&mut duplex, false, 0),
+            Err(WireError::Malformed("frame length out of bounds"))
+        ));
+    }
+
+    #[test]
+    fn chopped_writes_still_frame_correctly() {
+        let (to_peer, mut peer_r) = byte_pipe(1 << 12);
+        let (_keep_w, from_peer) = byte_pipe(16);
+        let mut t = FaultTransport::new(
+            to_peer,
+            from_peer,
+            FaultPlan { chop: 3, ..Default::default() },
+        );
+        let frame = Frame { kind: 5, payload: (0..100u8).collect() };
+        let reader = std::thread::spawn(move || read_frame(&mut peer_r));
+        {
+            let mut w = t.writer().expect("open writer");
+            frame.write_to(&mut w).unwrap();
+            w.flush().unwrap();
+        }
+        t.close_writer();
+        let got = reader.join().unwrap().unwrap().expect("one frame");
+        assert_eq!(got, frame);
+    }
+
+    #[test]
+    fn cut_tx_severs_mid_frame_with_broken_pipe_then_peer_eof() {
+        let (to_peer, mut peer_r) = byte_pipe(1 << 12);
+        let (_keep_w, from_peer) = byte_pipe(16);
+        let mut t = FaultTransport::new(
+            to_peer,
+            from_peer,
+            FaultPlan { cut_tx_after: Some(40), ..Default::default() },
+        );
+        let frame = Frame { kind: 4, payload: vec![7u8; 600] };
+        let mut w = t.writer().expect("open writer");
+        let err = frame.write_to(&mut w).expect_err("cut severs the write");
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+        assert!(t.writer().is_none(), "writer is gone after the cut");
+        // the peer sees the truncation as a mid-frame EOF
+        assert!(matches!(read_frame(&mut peer_r), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn rx_corruption_fails_checksum_and_rx_cut_truncates() {
+        // corruption at a payload byte (header is 16 bytes)
+        let (mut src_w, from_peer) = byte_pipe(1 << 12);
+        let frame = Frame { kind: 6, payload: vec![9u8; 64] };
+        frame.write_to(&mut src_w).unwrap();
+        drop(src_w);
+        let (to_peer, _keep_r) = byte_pipe(16);
+        let mut t = FaultTransport::new(
+            to_peer,
+            from_peer,
+            FaultPlan { corrupt_rx: Some((20, 0x10)), ..Default::default() },
+        );
+        let mut r = t.take_reader().expect("reader");
+        assert!(matches!(read_frame(&mut r), Err(WireError::BadChecksum)));
+
+        // rx cut: EOF inside the frame
+        let (mut src_w, from_peer) = byte_pipe(1 << 12);
+        frame.write_to(&mut src_w).unwrap();
+        drop(src_w);
+        let (to_peer, _keep_r) = byte_pipe(16);
+        let mut t = FaultTransport::new(
+            to_peer,
+            from_peer,
+            FaultPlan { cut_rx_after: Some(30), ..Default::default() },
+        );
+        let mut r = t.take_reader().expect("reader");
+        assert!(matches!(read_frame(&mut r), Err(WireError::Truncated)));
+    }
+
+    /// Minimal duplex adapter for driving `handshake_io` over two
+    /// unidirectional byte pipes.
+    struct Duplex<R, W> {
+        r: R,
+        w: W,
+    }
+
+    impl<R: Read, W> Read for Duplex<R, W> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.r.read(buf)
+        }
+    }
+
+    impl<R, W: Write> Write for Duplex<R, W> {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.w.write(buf)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            self.w.flush()
+        }
+    }
+}

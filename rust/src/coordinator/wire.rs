@@ -80,6 +80,11 @@ pub mod kind {
     pub const FLEET_RESULT: u8 = 7;
     /// host→worker: drain and exit cleanly
     pub const SHUTDOWN: u8 = 8;
+    /// both directions: TCP connection opener (role + session token).
+    /// Carried in a regular frame, so the version/magic/checksum checks
+    /// of [`read_frame`](super::read_frame) *are* the handshake — a
+    /// stale binary is refused before any job bytes flow.
+    pub const HELLO: u8 = 9;
 }
 
 /// Content-address of a blob: 128-bit FNV over its encoded bytes.
@@ -186,6 +191,17 @@ fn read_fully<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, WireError> {
 /// frame boundary; a stream ending anywhere inside a frame is
 /// [`WireError::Truncated`].
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, WireError> {
+    read_frame_limited(r, MAX_FRAME_LEN)
+}
+
+/// [`read_frame`] with a caller-imposed payload cap. Pre-handshake
+/// reads (the TCP HELLO exchange) cap to hello size, so an
+/// unauthenticated peer advertising a multi-GiB length in the header
+/// cannot make the handshake thread allocate it.
+pub fn read_frame_limited<R: Read>(
+    r: &mut R,
+    max_len: u64,
+) -> Result<Option<Frame>, WireError> {
     let mut head = [0u8; 16];
     match read_fully(r, &mut head)? {
         0 => return Ok(None),
@@ -201,12 +217,24 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, WireError> {
     }
     let kind = head[6];
     let len = u64::from_le_bytes(head[8..16].try_into().unwrap());
-    if len > MAX_FRAME_LEN {
+    if len > max_len.min(MAX_FRAME_LEN) {
         return Err(WireError::Malformed("frame length out of bounds"));
     }
-    let mut payload = vec![0u8; len as usize];
-    if read_fully(r, &mut payload)? != payload.len() {
-        return Err(WireError::Truncated);
+    // grow the payload buffer in bounded chunks as bytes actually
+    // arrive: a lying length field (bit-corrupted header, hostile TCP
+    // peer) must surface as Truncated, not as a multi-GiB upfront
+    // allocation
+    const ALLOC_CHUNK: usize = 1 << 20;
+    let mut payload = Vec::with_capacity((len as usize).min(ALLOC_CHUNK));
+    let mut remaining = len as usize;
+    while remaining > 0 {
+        let take = remaining.min(ALLOC_CHUNK);
+        let start = payload.len();
+        payload.resize(start + take, 0);
+        if read_fully(r, &mut payload[start..])? != take {
+            return Err(WireError::Truncated);
+        }
+        remaining -= take;
     }
     let mut trailer = [0u8; 8];
     if read_fully(r, &mut trailer)? != 8 {
@@ -1326,6 +1354,28 @@ pub fn shutdown_frame() -> Frame {
     Frame { kind: kind::SHUTDOWN, payload: Vec::new() }
 }
 
+/// Encode a [`kind::HELLO`] handshake frame. `worker` is the sender's
+/// role (a host refuses a peer claiming its own role); `token` lets a
+/// host that spawned its own TCP workers map dial-ins back to child
+/// processes (0 = anonymous, e.g. a hand-started remote worker).
+pub fn encode_hello(worker: bool, token: u64) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_bool(worker);
+    w.put_u64(token);
+    Frame { kind: kind::HELLO, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::HELLO`] payload into `(is_worker, token)`.
+pub fn decode_hello(payload: &[u8]) -> Result<(bool, u64), WireError> {
+    let mut r = WireReader::new(payload);
+    let worker = r.get_bool()?;
+    let token = r.get_u64()?;
+    if !r.is_done() {
+        return Err(WireError::Malformed("hello trailing bytes"));
+    }
+    Ok((worker, token))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1696,5 +1746,104 @@ mod tests {
         let fr = roundtrip(&shutdown_frame());
         assert_eq!(fr.kind, kind::SHUTDOWN);
         assert!(fr.payload.is_empty());
+    }
+
+    #[test]
+    fn hello_round_trips_and_rejects_garbage() {
+        for (worker, token) in [(false, 0u64), (true, 42), (true, u64::MAX)] {
+            let fr = roundtrip(&encode_hello(worker, token));
+            assert_eq!(fr.kind, kind::HELLO);
+            assert_eq!(decode_hello(&fr.payload).unwrap(), (worker, token));
+        }
+        // bad role byte, short payload, trailing bytes
+        assert!(decode_hello(&[2u8, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        assert!(decode_hello(&[1u8, 0, 0]).is_err());
+        let mut long = encode_hello(true, 7).payload;
+        long.push(0);
+        assert!(matches!(
+            decode_hello(&long),
+            Err(WireError::Malformed("hello trailing bytes"))
+        ));
+    }
+
+    /// Satellite: a packed blob whose word buffer disagrees with the
+    /// declared shape/scheme must be refused at decode (`Malformed`),
+    /// never handed to `PackedCodes::from_raw` where the mismatch would
+    /// panic the worker.
+    #[test]
+    fn packed_blob_layout_disagreement_is_malformed() {
+        let mut rng = Rng::new(11);
+        let w = Mat::randn(32, 32, 1.0, &mut rng);
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let (_, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        let p = packed.expect("packable family");
+
+        // a helper that re-encodes `p` with one field surgically lied
+        // about, then feeds the payload through the public insert path
+        let reject = |mutate: &dyn Fn(&mut WireWriter, &PackedMat)| {
+            let mut wtr = WireWriter::new();
+            mutate(&mut wtr, &p);
+            let payload = wtr.into_bytes();
+            let mut rx = BlobRx::new();
+            assert!(
+                matches!(rx.insert(kind::BLOB_PACKED, &payload), Err(WireError::Malformed(_))),
+                "lying packed payload must be Malformed"
+            );
+        };
+
+        // word buffer shorter than shape × bits requires
+        reject(&|w, p| {
+            put_packed_with(w, p, |words| {
+                words.pop();
+            });
+        });
+        // word buffer longer than the declared layout
+        reject(&|w, p| {
+            put_packed_with(w, p, |words| words.push(0));
+        });
+        // declared element count disagreeing with rows × cols
+        reject(&|wtr, p| {
+            let mut clone = p.clone();
+            clone.rows += 1; // codes/scales no longer match the shape
+            put_packed(wtr, &clone);
+        });
+        // scale count disagreeing with the scheme's group layout
+        reject(&|wtr, p| {
+            let mut clone = p.clone();
+            clone.scales.push(1.0);
+            put_packed(wtr, &clone);
+        });
+    }
+
+    /// Re-encode `p` with `words` mutated after the fact (the layout
+    /// check under test compares the word count against len × bits).
+    fn put_packed_with(w: &mut WireWriter, p: &PackedMat, tweak: impl FnOnce(&mut Vec<u64>)) {
+        w.put_usize(p.rows);
+        w.put_usize(p.cols);
+        match p.scheme {
+            PackScheme::MxintBlock { bits, block } => {
+                w.put_u8(0);
+                w.put_u32(bits);
+                w.put_usize(block);
+            }
+            PackScheme::UniformGroup { bits, group, symmetric } => {
+                w.put_u8(1);
+                w.put_u32(bits);
+                w.put_usize(group);
+                w.put_bool(symmetric);
+            }
+            PackScheme::GptqGrouped { bits, group } => {
+                w.put_u8(2);
+                w.put_u32(bits);
+                w.put_usize(group);
+            }
+        }
+        w.put_u32(p.codes.bits);
+        w.put_usize(p.codes.len);
+        let mut words = p.codes.words().to_vec();
+        tweak(&mut words);
+        w.put_u64s(&words);
+        w.put_f32s(&p.scales);
+        w.put_f32s(&p.los);
     }
 }

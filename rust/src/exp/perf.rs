@@ -607,15 +607,21 @@ fn outcomes_identical(a: &[FactoredOutcome], b: &[FactoredOutcome]) -> bool {
 /// §Perf shard: the multi-process shard plane (`coordinator::shard`),
 /// recorded into `BENCH_shard.json`.
 ///
-/// Two gates and one scaling measurement:
+/// Three gates and two scaling measurements:
 /// 1. **equivalence** (hard failure + recorded flags) — sweep outcomes
 ///    and fleet PPLs through N ∈ {1, 2} single-threaded worker
 ///    processes are bit-identical to the in-process
 ///    `SweepRunner::run_factored` + `fleet_perplexity`;
 /// 2. **scaling** — wall-clock of the sharded pipeline (phase-B2 jobs +
 ///    fleet jobs over the wire) at N=2 vs N=1: the speedup is the shard
-///    plane's scaling efficiency on a 2-core runner, the number the
-///    future TCP/ssh multi-host transport inherits.
+///    plane's scaling efficiency on a 2-core runner, the number a
+///    multi-host deployment inherits;
+/// 3. **TCP loopback** — the same N=2 run with workers dialing in over
+///    `127.0.0.1` (`ShardSession::spawn_tcp`) instead of pipes:
+///    `tcp_bit_identical` gates equivalence through the TCP transport
+///    and `tcp_vs_pipe_n2` records the loopback framing overhead — the
+///    per-byte cost a real remote deployment starts from before network
+///    latency.
 pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let model = "tiny";
     let fx = ctx.lm(model)?;
@@ -679,6 +685,39 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     }
     let speedup = shard_secs[0] / shard_secs[1].max(1e-9);
 
+    // run_jobs overwrites the shard.* metrics per session, so snapshot
+    // the pipe legs' counters before the TCP leg clobbers them
+    let pipe_tx_bytes = metrics.get("shard.tx_bytes");
+    let pipe_rx_bytes = metrics.get("shard.rx_bytes");
+    let pipe_requeued = metrics.get("shard.requeued");
+
+    // TCP loopback leg: N=2 single-threaded workers dialing back over
+    // 127.0.0.1 — same dispatcher and jobs, only the transport differs.
+    // Equivalence is recorded (then asserted *after* the record is
+    // written, so a divergence still lands in BENCH_shard.json for the
+    // CI gate to flag).
+    let (tcp_secs, tcp_ok) = {
+        let mut session = ShardSession::spawn_tcp(&ShardOptions::with_workers(2))?;
+        let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+        let t0 = Instant::now();
+        let outs = runner.run_factored(&mut session, &configs)?;
+        let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+        let ppl = fleet_perplexity_sharded(
+            &mut session,
+            &models,
+            &fx.cfg,
+            &batches,
+            b_ev,
+            t_ev,
+            &metrics,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        session.shutdown();
+        let ok = outcomes_identical(&expect, &outs)
+            && exp_ppl.iter().zip(&ppl).all(|(a, b)| a.to_bits() == b.to_bits());
+        (secs, ok)
+    };
+
     let record = Json::obj(vec![
         ("model", Json::str(model)),
         ("quick", Json::Bool(ctx.quick)),
@@ -698,11 +737,20 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         ("fleet_ppl_identical_n1", Json::Bool(equiv_flags[0].2)),
         ("outcomes_identical_n2", Json::Bool(equiv_flags[1].1)),
         ("fleet_ppl_identical_n2", Json::Bool(equiv_flags[1].2)),
-        ("shard_tx_bytes", Json::num(metrics.get("shard.tx_bytes"))),
-        ("shard_rx_bytes", Json::num(metrics.get("shard.rx_bytes"))),
-        ("shard_requeued", Json::num(metrics.get("shard.requeued"))),
+        ("tcp_n2_secs", Json::num(tcp_secs)),
+        ("tcp_vs_pipe_n2", Json::num(shard_secs[1] / tcp_secs.max(1e-9))),
+        ("tcp_bit_identical", Json::Bool(tcp_ok)),
+        ("tcp_tx_bytes", Json::num(metrics.get("shard.tx_bytes"))),
+        ("tcp_rx_bytes", Json::num(metrics.get("shard.rx_bytes"))),
+        ("shard_tx_bytes", Json::num(pipe_tx_bytes)),
+        ("shard_rx_bytes", Json::num(pipe_rx_bytes)),
+        ("shard_requeued", Json::num(pipe_requeued)),
     ]);
     bench::write_json("BENCH_shard.json", &record)?;
+    anyhow::ensure!(
+        tcp_ok,
+        "TCP N=2: sharded results diverge from in-process (recorded in BENCH_shard.json)"
+    );
 
     let mut t = Table::new(
         &format!(
@@ -729,6 +777,12 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         "sharded, N=2 workers (1 thread each)".into(),
         f(shard_secs[1], 3),
         format!("x{speedup:.2}"),
+        "yes".into(),
+    ]);
+    t.row(vec![
+        "sharded, N=2 TCP loopback workers".into(),
+        f(tcp_secs, 3),
+        format!("x{:.2}", shard_secs[0] / tcp_secs.max(1e-9)),
         "yes".into(),
     ]);
     Ok(vec![t])

@@ -3,18 +3,22 @@
 //! Subcommands:
 //!   info                       — artifact/model inventory
 //!   ptq    [--model --method --scaling --quantizer --rank --seed]
-//!          [--workers N]       — quantize a model, report per-layer stats + PPL
+//!          [--workers N | --workers tcp:host:port,... | --listen host:port]
+//!                              — quantize a model, report per-layer stats + PPL
 //!                                (runs offline: rust-native factored eval;
-//!                                --workers shards reconstruction + eval
-//!                                across N worker processes)
+//!                                --workers N spawns local worker processes,
+//!                                --workers tcp:… dials listening remote
+//!                                workers, --listen waits for remote workers
+//!                                to dial in)
 //!   qpeft  [--task --init --bits --steps --gamma]
 //!                              — fine-tune adapters on a GLUE-sim task
 //!   bench  [ids… | --list] [--quick]
 //!                              — regenerate paper tables/figures
-//!   shard-worker [--exit-after N]
+//!   shard-worker [--exit-after N] [--connect host:port [--token N] | --listen host:port]
 //!                              — wire-codec job executor over stdin/stdout
-//!                                (spawned by the shard host; not for
-//!                                interactive use)
+//!                                (spawned by the shard host) or over a
+//!                                handshaken TCP connection (remote workers;
+//!                                not for interactive use)
 //!
 //! Examples live in `examples/` (quickstart, ptq_sweep, qpeft_finetune,
 //! e2e_train_quantize, shard_sweep).
@@ -50,6 +54,8 @@ fn main() {
                  \n  srr info\
                  \n  srr ptq --model small --method srr --scaling qera-exact --quantizer mxint3 --rank 8\
                  \n  srr ptq --model tiny --rank 8 --workers 2   # multi-process reconstruction + eval\
+                 \n  srr ptq --model tiny --rank 8 --listen 127.0.0.1:7777 --workers 2   # remote workers dial in\
+                 \n  srr shard-worker --connect host:7777        # remote worker side\
                  \n  srr qpeft --task SST-sim --init srr --bits 2 --steps 60\
                  \n  srr bench table1 fig5 [--quick]   |   srr bench --list"
             );
@@ -109,15 +115,62 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     );
     let fx = ctx.lm(&cfg.model)?;
     let metrics = Metrics::new();
-    // --workers N: shard reconstruction (and the PPL below) across N
-    // `srr shard-worker` processes — bit-identical to the in-process path.
-    // worker_threads: 0 lets each worker size its own pool (SRR_THREADS /
-    // available cores); the single-threaded pinning is only for the
-    // scaling bench, not for real CLI runs.
-    let workers = args.get_usize("workers", 0);
-    let mut session = if workers > 0 {
-        let opts = ShardOptions { workers, worker_threads: 0, ..Default::default() };
-        Some(ShardSession::spawn(&opts)?)
+    // Sharding (all modes bit-identical to the in-process path):
+    //   --workers N                 spawn N local `srr shard-worker`
+    //                               processes over pipes;
+    //   --workers tcp:host:port,…   dial workers already listening
+    //                               (`srr shard-worker --listen …`);
+    //   --listen host:port          wait for --workers N (default 1)
+    //                               remote workers to dial in
+    //                               (`srr shard-worker --connect …`).
+    // worker_threads: 0 lets each local worker size its own pool
+    // (SRR_THREADS / available cores); the single-threaded pinning is
+    // only for the scaling bench, not for real CLI runs.
+    let mut session = if let Some(addr) = args.get("listen") {
+        // an unparseable or zero count must not silently turn into the
+        // default (pipe mode gives --workers 0 a different meaning)
+        let n = match args.get("workers") {
+            Some(spec) => {
+                let n: usize = spec.parse().map_err(|_| {
+                    anyhow::anyhow!("--listen expects --workers N (a count), got {spec:?}")
+                })?;
+                anyhow::ensure!(n >= 1, "--listen needs --workers ≥ 1");
+                n
+            }
+            None => 1,
+        };
+        let deadline = std::time::Duration::from_secs(args.get_u64("accept-timeout", 120));
+        println!("listening on {addr} for {n} remote worker(s)…");
+        Some(ShardSession::listen(addr, n, deadline)?)
+    } else if let Some(spec) = args.get("workers") {
+        if spec.contains("tcp:") {
+            // every entry must parse — a silently dropped worker address
+            // would shrink the fleet without anyone noticing
+            let addrs: Vec<String> = spec
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .strip_prefix("tcp:")
+                        .filter(|a| !a.is_empty())
+                        .map(str::to_string)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("--workers entry {s:?} is not tcp:host:port")
+                        })
+                })
+                .collect::<Result<_>>()?;
+            println!("dialing {} remote worker(s)…", addrs.len());
+            Some(ShardSession::dial(&addrs)?)
+        } else {
+            let workers: usize = spec
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--workers expects a count or tcp:host:port list"))?;
+            if workers > 0 {
+                let opts = ShardOptions { workers, worker_threads: 0, ..Default::default() };
+                Some(ShardSession::spawn(&opts)?)
+            } else {
+                None
+            }
+        }
     } else {
         None
     };

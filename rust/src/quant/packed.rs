@@ -374,6 +374,19 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "word count mismatch")]
+    fn raw_parts_reject_oversized_word_buffer() {
+        // 100 3-bit codes need ceil(300/64) = 5 words; 6 is a lie too
+        let _ = PackedCodes::from_raw(3, 100, vec![0; 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn raw_parts_reject_code_width_out_of_range() {
+        let _ = PackedCodes::from_raw(1, 64, vec![0; 1]);
+    }
+
+    #[test]
     fn packed_buffer_is_actually_small() {
         let codes = PackedCodes::zeroed(3, 1024);
         // 3072 bits = 48 words = 384 bytes vs 4096 dense f32 bytes

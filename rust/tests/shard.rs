@@ -225,3 +225,182 @@ fn empty_grid_is_a_noop_without_worker_traffic() {
     assert!(outs.is_empty());
     session.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// TCP transport (satellites: loopback bit-identity, mid-job worker death,
+// handshake refusal)
+// ---------------------------------------------------------------------------
+
+/// Satellite acceptance: the TCP transport (real worker processes
+/// dialing a loopback socket) is bit-identical to both the pipe
+/// transport and the in-process engines for N ∈ {1, 2, 4} — sweep
+/// outcomes, lock-step grouping, and fleet PPLs.
+#[test]
+fn tcp_loopback_sharded_bit_identical_n_1_2_4() {
+    let (params, cfg, calib, eval_batches) = setup();
+    let configs = grid();
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+
+    for n in [1usize, 2, 4] {
+        let mut session = ShardSession::spawn_tcp(&shard_opts(n)).expect("spawn TCP workers");
+        let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+        let outs = runner.run_factored(&mut session, &configs).expect("TCP sharded sweep");
+        assert_outcomes_identical(&format!("tcp N={n}"), &expect, &outs);
+
+        let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+        assert_eq!(
+            group_by_shared_bases(&exp_models),
+            group_by_shared_bases(&models),
+            "tcp N={n}: lock-step grouping changed"
+        );
+        let ppl = fleet_perplexity_sharded(
+            &mut session,
+            &models,
+            &cfg,
+            &eval_batches,
+            2,
+            cfg.seq_len,
+            &metrics,
+        )
+        .expect("TCP sharded fleet");
+        for (i, (a, b)) in exp_ppl.iter().zip(&ppl).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "tcp N={n} model {i}: ppl {a} vs {b}");
+        }
+        session.shutdown();
+    }
+}
+
+/// Satellite: a TCP worker that dies mid-run (a real process on a
+/// loopback socket, exiting after 2 jobs without any shutdown
+/// handshake) is noticed — reader FIN plus the `pop_timeout` child
+/// probe — its in-flight jobs requeue onto the survivor, and the merged
+/// results still match the in-process engines bit-for-bit.
+#[test]
+fn tcp_worker_killed_mid_job_requeues_bit_identically() {
+    let (params, cfg, calib, eval_batches) = setup();
+    let configs = grid();
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+
+    let opts = ShardOptions { exit_after_first: Some(2), ..shard_opts(2) };
+    let mut session = ShardSession::spawn_tcp(&opts).expect("spawn TCP workers");
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let outs = runner.run_factored(&mut session, &configs).expect("TCP sweep with a death");
+    assert_outcomes_identical("tcp death", &expect, &outs);
+    assert_eq!(session.n_alive(), 1, "worker 0 must have died");
+    assert!(
+        metrics.get("shard.worker_deaths") >= 1.0,
+        "death not recorded: {}",
+        metrics.get("shard.worker_deaths")
+    );
+    assert!(
+        metrics.get("shard.requeued") >= 1.0,
+        "no jobs requeued: {}",
+        metrics.get("shard.requeued")
+    );
+
+    // the surviving TCP worker also carries the fleet batch afterwards
+    let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let ppl = fleet_perplexity_sharded(
+        &mut session,
+        &models,
+        &cfg,
+        &eval_batches,
+        2,
+        cfg.seq_len,
+        &metrics,
+    )
+    .expect("fleet on TCP survivor");
+    for (a, b) in exp_ppl.iter().zip(&ppl) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    session.shutdown();
+}
+
+/// Satellite: the TCP handshake refuses a peer speaking another wire
+/// version — the connection is dropped without counting toward the
+/// expected worker set — while a well-versioned worker on the same
+/// listener is admitted and serves jobs.
+#[test]
+fn tcp_handshake_refuses_version_mismatch() {
+    use srr::coordinator::wire::{encode_hello, WIRE_VERSION};
+    use srr::coordinator::{ShardHost, Transport};
+    use std::io::Write;
+
+    // refusal alone: a stale client is never admitted, so the accept
+    // deadline expires with zero workers
+    let host = ShardHost::bind("127.0.0.1:0").expect("bind");
+    let addr = host.local_addr().expect("addr").to_string();
+    let stale = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).expect("connect");
+            let mut bytes = Vec::new();
+            encode_hello(true, 0).write_to(&mut bytes).unwrap();
+            // advertise a future wire version in the frame header
+            bytes[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+            s.write_all(&bytes).unwrap();
+            // hold the socket open until the host refuses (EOF/RST)
+            let _ = std::io::Read::read(&mut s, &mut [0u8; 16]);
+        })
+    };
+    let err = match host.accept_workers(1, std::time::Duration::from_millis(1500)) {
+        Ok(_) => panic!("a cross-version peer must not be admitted"),
+        Err(e) => e,
+    };
+    assert!(
+        err.to_string().contains("0/1 workers connected"),
+        "unexpected error: {err:#}"
+    );
+    drop(host); // release the listener so the stale peer unblocks
+    stale.join().unwrap();
+
+    // the same listener still admits a well-versioned real worker
+    let host = ShardHost::bind("127.0.0.1:0").expect("bind");
+    let addr = host.local_addr().expect("addr").to_string();
+    let stale2 = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).expect("connect");
+            let mut bytes = Vec::new();
+            encode_hello(true, 0).write_to(&mut bytes).unwrap();
+            bytes[4..6].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+            s.write_all(&bytes).unwrap();
+            let _ = std::io::Read::read(&mut s, &mut [0u8; 16]);
+        })
+    };
+    let mut worker = std::process::Command::new(env!("CARGO_BIN_EXE_srr"))
+        .arg("shard-worker")
+        .arg("--connect")
+        .arg(&addr)
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn worker");
+    let accepted = host
+        .accept_workers(1, std::time::Duration::from_secs(30))
+        .expect("good worker admitted despite the stale peer");
+    assert_eq!(accepted.len(), 1);
+    drop(host); // unblock the stale peer if it was never accepted
+    stale2.join().unwrap();
+
+    // the admitted connection serves real jobs end to end
+    let (params, cfg, calib, _) = setup();
+    let configs: Vec<_> = grid().into_iter().take(2).collect();
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+    let mut session = ShardSession::from_transports(
+        accepted.into_iter().map(|t| Box::new(t) as Box<dyn Transport>).collect(),
+    )
+    .expect("session over the admitted worker");
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let outs = runner.run_factored(&mut session, &configs).expect("sweep over dial-in");
+    assert_outcomes_identical("dial-in", &expect, &outs);
+    session.shutdown();
+    let _ = worker.wait();
+}
