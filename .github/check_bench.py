@@ -20,10 +20,11 @@ if not files:
 # Records and flags that MUST be present (and true), so a bench
 # refactor cannot silently drop an equivalence assertion by renaming a
 # record or skipping its write: the shard record has to exist and has
-# to prove the TCP transport, not just the pipes. (CI always runs
+# to prove the TCP transport, not just the pipes, and to prove the
+# heartbeat wedge-recovery path actually fired. (CI always runs
 # `--exp shard`, so a missing record is itself a failure.)
 REQUIRED_FLAGS = {
-    "BENCH_shard.json": ["tcp_bit_identical"],
+    "BENCH_shard.json": ["tcp_bit_identical", "wedge_recovered"],
 }
 
 present = {os.path.basename(f) for f in files}

@@ -55,7 +55,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Blocking push; returns false if the queue was closed.
+    /// Blocking push; returns false if the queue was closed. The result
+    /// must be handled: a `false` on a shutdown race means the item was
+    /// *not* enqueued, and a caller that drops it silently loses a
+    /// job/result (the shard plane either propagates the failure or
+    /// counts the drop — see `ShardStats`).
+    #[must_use = "returns false when the queue is closed — the item was dropped"]
     pub fn push(&self, item: T) -> bool {
         let mut g = self.inner.lock().unwrap();
         loop {
@@ -454,7 +459,7 @@ mod tests {
             });
             let mut want = 0usize;
             for i in 0..n {
-                q.push(i);
+                assert!(q.push(i));
                 want += i;
             }
             q.close();

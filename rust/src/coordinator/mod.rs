@@ -33,10 +33,13 @@
 //!   the [`transport::Transport`] trait with child-pipe, TCP
 //!   (handshaken, local or remote), and fault-injection
 //!   implementations.
-//! * [`shard`] — the multi-process execution plane: phase-B2 sweep jobs
+//! * [`shard`] — the multi-process execution plane: phase-A prep jobs
+//!   (per-layer Hessians/spectra/quantizations), phase-B2 sweep jobs,
 //!   and fleet PPL jobs sharded across `srr shard-worker` processes
-//!   (pipes or TCP), bit-identical to the in-process engines, with
-//!   worker-death requeue.
+//!   (pipes or TCP), bit-identical to the in-process engines. The fleet
+//!   is elastic and stall-proof: workers heartbeat per in-flight job, a
+//!   silent (wedged) worker is requeued like a death, and new workers
+//!   may dial in and be admitted mid-run.
 //! * [`metrics`] — counters/timers registry.
 //! * [`config`] — run configuration (CLI/JSON).
 

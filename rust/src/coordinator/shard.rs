@@ -5,10 +5,12 @@
 //! module is the seam that takes them to N processes (and, with a future
 //! TCP/ssh transport, N hosts). The division of labor:
 //!
-//! * the **host** runs sweep phases A + B1 in-process
-//!   ([`SweepRunner::prepare`]), then ships per-`(layer, config)`
-//!   phase-B2 jobs — and fleet `(group × batch)` PPL jobs — to worker
-//!   processes over the [`wire`](super::wire) codec, merging results
+//! * the **host** ships per-layer phase-A/B1 **preparation jobs**
+//!   (k=0 quantizations, SRR spectra, residual SVDs — the same work
+//!   [`SweepRunner::prepare`] does in-process), then per-`(layer,
+//!   config)` phase-B2 jobs — and fleet `(group × batch)` PPL jobs —
+//!   to worker processes over the [`wire`](super::wire) codec, merging
+//!   results
 //!   deterministically by job id. The byte stream underneath is a
 //!   [`Transport`](super::transport::Transport): child-process pipes
 //!   ([`ShardSession::spawn`]), TCP to local or remote workers
@@ -43,16 +45,29 @@
 //! and probes [`Transport::poll_dead`](super::transport::Transport) on
 //! every timeout, so even a worker that dies without closing its stream
 //! is noticed when the transport owns a side channel (child exit
-//! status). Only when every worker has died does the run error out. A
-//! worker that hangs *without* exiting or disconnecting is waited on
-//! indefinitely — a per-job heartbeat remains future work.
+//! status). A worker that hangs *without* exiting or disconnecting is
+//! caught by the **per-job heartbeat**: workers emit a
+//! [`kind::HEARTBEAT`] frame per in-flight job at a fixed cadence
+//! ([`DEFAULT_HEARTBEAT`]), and a job that goes
+//! [`ShardOptions::heartbeat_timeout`] without one marks its worker
+//! *wedged* — the same requeue as a death, plus a transport kill so a
+//! peer that later wakes up cannot publish stale frames into the
+//! session. Only when every worker has died does the run error out.
+//!
+//! **Elasticity:** a session built by [`ShardSession::listen`] keeps
+//! its accept loop running *while jobs run*, so `srr shard-worker
+//! --connect` dial-ins join mid-run: an admitted joiner gets its own
+//! credit window and starts pulling from the shared pending queue
+//! immediately. A departing worker — clean exit, crash, or wedge —
+//! requeues exactly as above, so the fleet grows and shrinks mid-run
+//! without affecting results.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -67,18 +82,21 @@ use crate::linalg::Svd;
 use crate::model::forward::lm_nll_fleet;
 use crate::model::{CalibrationSet, Params};
 use crate::qer::{Method, PreparedSpectra};
+use crate::quant::PackedMat;
 use crate::runtime::manifest::ModelCfg;
-use crate::scaling::Scaling;
+use crate::scaling::{Scaling, ScalingKind};
 use crate::serve::{FactoredModel, LinearOp, QuantBase};
 use crate::tensor::Mat;
 use crate::util::cli::Args;
+use crate::util::pool;
 
-use super::cache::LayerCache;
+use super::cache::{LayerCache, PreparedLayer};
 use super::jobs::{BoundedQueue, PopResult};
 use super::metrics::Metrics;
-use super::pipeline::{FactoredOutcome, LayerMeta, LayerReport};
+use super::pipeline::{layer_salt, FactoredOutcome, LayerMeta, LayerReport};
 use super::sweep::{
-    assemble_outcomes, b2_artifacts, b2_job, empty_outcomes, B2Artifacts, SweepConfig,
+    assemble_outcomes, b2_artifacts, b2_job, compute_qdeq0, compute_resid_svd,
+    compute_spectra, empty_outcomes, sweep_keys, B2Artifacts, SweepConfig, SweepKeys,
     SweepPrep, SweepRunner,
 };
 use super::transport::{
@@ -102,6 +120,14 @@ const WORKER_QUEUE_CAP: usize = 4;
 /// How long the host event loop waits before probing child liveness.
 const EVENT_POLL: Duration = Duration::from_millis(500);
 
+/// Default cadence at which a worker emits a [`kind::HEARTBEAT`] frame
+/// per in-flight job (`srr shard-worker --heartbeat-secs` overrides).
+pub const DEFAULT_HEARTBEAT: Duration = Duration::from_secs(1);
+
+/// Default host-side deadline: a dispatched job that goes this long
+/// without a result *or* a heartbeat marks its worker wedged.
+pub const DEFAULT_HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// Configuration for a shard session.
 #[derive(Clone, Debug)]
 pub struct ShardOptions {
@@ -117,11 +143,20 @@ pub struct ShardOptions {
     /// explicit path to the `srr` binary (otherwise `SRR_SHARD_BIN`,
     /// then a search near the current executable)
     pub binary: Option<PathBuf>,
+    /// how long a dispatched job may go without a heartbeat before its
+    /// worker is marked wedged and the job requeues
+    pub heartbeat_timeout: Duration,
 }
 
 impl Default for ShardOptions {
     fn default() -> Self {
-        ShardOptions { workers: 2, worker_threads: 1, exit_after_first: None, binary: None }
+        ShardOptions {
+            workers: 2,
+            worker_threads: 1,
+            exit_after_first: None,
+            binary: None,
+            heartbeat_timeout: DEFAULT_HEARTBEAT_TIMEOUT,
+        }
     }
 }
 
@@ -171,14 +206,27 @@ struct ShardStats {
     rx_bytes: AtomicU64,
     requeued: AtomicU64,
     deaths: AtomicU64,
+    /// workers whose in-flight job outlived its heartbeat deadline
+    wedged: AtomicU64,
+    /// result frames refused by the dispatch-window check: duplicates,
+    /// frames from dead/wedged workers, ids from a previous batch
+    rejected: AtomicU64,
+    /// workers admitted after the session was built (mid-run joins)
+    joined: AtomicU64,
+    /// events lost because the queue closed mid-push (teardown races)
+    events_dropped: AtomicU64,
 }
 
 /// Host→worker result/failure notifications.
 enum Event {
     /// a decoded result frame from `worker`
     Result { worker: usize, msg: ResultMsg },
+    /// `worker` reports `job` still making progress
+    Heartbeat { worker: usize, job: u64 },
     /// `worker`'s pipe ended or produced garbage
     Dead { worker: usize },
+    /// a freshly handshaken transport wants to join the fleet
+    Join(Box<dyn Transport>),
 }
 
 /// A decoded worker result.
@@ -188,6 +236,8 @@ pub(crate) enum ResultMsg {
     Sweep(Box<SweepResultMsg>),
     /// fleet PPL job result
     Fleet(FleetResultMsg),
+    /// phase-A/B1 preparation job result
+    Prep(Box<wire::PrepResultMsg>),
 }
 
 impl ResultMsg {
@@ -195,6 +245,7 @@ impl ResultMsg {
         match self {
             ResultMsg::Sweep(m) => m.job_id,
             ResultMsg::Fleet(m) => m.job_id,
+            ResultMsg::Prep(m) => m.job_id,
         }
     }
 }
@@ -215,8 +266,9 @@ struct WorkerConn {
     transport: Box<dyn Transport>,
     /// per-connection blob dedup state
     tx: BlobTx,
-    /// job ids in flight on this worker
-    outstanding: Vec<usize>,
+    /// job ids in flight on this worker, each with its heartbeat
+    /// deadline — set at dispatch, refreshed on every heartbeat frame
+    outstanding: Vec<(usize, Instant)>,
     alive: bool,
     reader: Option<JoinHandle<()>>,
 }
@@ -234,6 +286,33 @@ pub struct ShardSession {
     /// outbound artifacts so results resolve to the very same `Arc`s
     rx: Arc<Mutex<BlobRx>>,
     stats: Arc<ShardStats>,
+    /// per-job silence budget before a worker is marked wedged
+    heartbeat_timeout: Duration,
+    /// stops the mid-run accept thread ([`ShardSession::listen`])
+    accept_stop: Option<Arc<AtomicBool>>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+/// Clonable handle that offers a connected transport to a session as a
+/// mid-run joiner, from any thread (what [`ShardSession::listen`]'s
+/// accept loop does internally; tests drive it directly).
+#[derive(Clone)]
+pub(crate) struct JoinSender {
+    events: Arc<BoundedQueue<Event>>,
+    stats: Arc<ShardStats>,
+}
+
+impl JoinSender {
+    /// Queue `transport` for admission. Returns `false` if the session
+    /// is tearing down (the joiner is dropped, not admitted).
+    pub(crate) fn admit(&self, transport: Box<dyn Transport>) -> bool {
+        if self.events.push(Event::Join(transport)) {
+            true
+        } else {
+            self.stats.events_dropped.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
 }
 
 fn spawn_reader(
@@ -267,16 +346,33 @@ fn spawn_reader(
                             Ok(m) => Event::Result { worker: wi, msg: ResultMsg::Fleet(m) },
                             Err(_) => Event::Dead { worker: wi },
                         },
+                        kind::PREP_RESULT => match wire::decode_prep_result(&f.payload) {
+                            Ok(m) => {
+                                let msg = ResultMsg::Prep(Box::new(m));
+                                Event::Result { worker: wi, msg }
+                            }
+                            Err(_) => Event::Dead { worker: wi },
+                        },
+                        kind::HEARTBEAT => match wire::decode_heartbeat(&f.payload) {
+                            Ok(job) => Event::Heartbeat { worker: wi, job },
+                            Err(_) => Event::Dead { worker: wi },
+                        },
                         _ => Event::Dead { worker: wi },
                     };
                     let dead = matches!(ev, Event::Dead { .. });
-                    events.push(ev);
+                    if !events.push(ev) {
+                        // queue closed mid-teardown: nobody is listening
+                        stats.events_dropped.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
                     if dead {
                         return;
                     }
                 }
                 Ok(None) | Err(_) => {
-                    events.push(Event::Dead { worker: wi });
+                    if !events.push(Event::Dead { worker: wi }) {
+                        stats.events_dropped.fetch_add(1, Ordering::Relaxed);
+                    }
                     return;
                 }
             }
@@ -301,6 +397,10 @@ fn worker_command(bin: &Path, opts: &ShardOptions, wi: usize) -> Command {
     if opts.worker_threads > 0 {
         cmd.env("SRR_THREADS", opts.worker_threads.to_string());
     }
+    // keep the cadence a comfortable multiple of the wedge deadline, so
+    // a short test timeout never false-positives on a healthy child
+    let cadence = (opts.heartbeat_timeout / 4).min(DEFAULT_HEARTBEAT);
+    cmd.arg("--heartbeat-secs").arg(format!("{}", cadence.as_secs_f64()));
     if wi == 0 {
         if let Some(k) = opts.exit_after_first {
             cmd.arg("--exit-after").arg(k.to_string());
@@ -336,7 +436,15 @@ impl ShardSession {
                 reader: Some(reader),
             });
         }
-        Ok(ShardSession { workers, events, rx, stats })
+        Ok(ShardSession {
+            workers,
+            events,
+            rx,
+            stats,
+            heartbeat_timeout: DEFAULT_HEARTBEAT_TIMEOUT,
+            accept_stop: None,
+            accept_thread: None,
+        })
     }
 
     /// Spawn `opts.workers` worker processes with piped stdin/stdout
@@ -355,7 +463,9 @@ impl ShardSession {
             // spawn fails
             transports.push(Box::new(ChildPipeTransport::new(child)));
         }
-        Self::from_transports(transports)
+        let mut session = Self::from_transports(transports)?;
+        session.heartbeat_timeout = opts.heartbeat_timeout;
+        Ok(session)
     }
 
     /// Spawn `opts.workers` worker processes that dial back over TCP
@@ -429,7 +539,10 @@ impl ShardSession {
             reap_children(children);
             return Err(e);
         }
-        Self::from_transports(accepted.into_iter().map(|t| Box::new(t) as _).collect())
+        let mut session =
+            Self::from_transports(accepted.into_iter().map(|t| Box::new(t) as _).collect())?;
+        session.heartbeat_timeout = opts.heartbeat_timeout;
+        Ok(session)
     }
 
     /// Listen on `addr` and wait (up to `deadline`) for `workers`
@@ -437,11 +550,20 @@ impl ShardSession {
     /// beyond the wire handshake — bind loopback and tunnel over ssh,
     /// or stay on a trusted LAN (see the README's remote-worker
     /// workflow).
+    ///
+    /// The listener stays open after the initial fleet assembles: the
+    /// accept loop keeps running on its own thread, and any later
+    /// dial-in is queued as a join event that the job dispatcher (or an
+    /// explicit [`ShardSession::admit_pending_joins`]) admits into the
+    /// fleet — mid-run elasticity.
     pub fn listen(addr: &str, workers: usize, deadline: Duration) -> Result<ShardSession> {
         anyhow::ensure!(workers >= 1, "shard session needs at least one worker");
         let host = ShardHost::bind(addr)?;
         let accepted = host.accept_workers(workers, deadline)?;
-        Self::from_transports(accepted.into_iter().map(|t| Box::new(t) as _).collect())
+        let mut session =
+            Self::from_transports(accepted.into_iter().map(|t| Box::new(t) as _).collect())?;
+        session.keep_accepting(host);
+        Ok(session)
     }
 
     /// Dial workers that are already listening (`srr shard-worker
@@ -458,6 +580,130 @@ impl ShardSession {
     /// Workers still accepting jobs.
     pub fn n_alive(&self) -> usize {
         self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Override the wedge deadline (tests drive this down to
+    /// milliseconds; the CLI maps `--heartbeat-timeout` here for the
+    /// listen/dial constructors, which have no [`ShardOptions`]).
+    pub fn set_heartbeat_timeout(&mut self, timeout: Duration) {
+        self.heartbeat_timeout = timeout;
+    }
+
+    /// Keep `host`'s accept loop running on a background thread; each
+    /// accepted dial-in is queued as a join event for the dispatcher.
+    /// [`ShardSession::listen`] calls this for you; sessions assembled
+    /// by hand ([`ShardSession::from_transports`] over a
+    /// [`ShardHost`](super::transport::ShardHost) the caller bound, e.g.
+    /// to learn an ephemeral port) call it to opt into mid-run joins.
+    pub fn keep_accepting(&mut self, host: ShardHost) {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let events = self.events.clone();
+        let stats = self.stats.clone();
+        let thread = std::thread::spawn(move || {
+            host.accept_loop(&stop2, |t| {
+                if !events.push(Event::Join(Box::new(t))) {
+                    stats.events_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        self.accept_stop = Some(stop);
+        self.accept_thread = Some(thread);
+    }
+
+    /// A handle that injects a joiner into the session's event queue
+    /// from another thread — the test seam for mid-run joins (the
+    /// production path is [`ShardSession::listen`]'s accept loop).
+    pub(crate) fn join_sender(&self) -> JoinSender {
+        JoinSender { events: self.events.clone(), stats: self.stats.clone() }
+    }
+
+    /// Wire a freshly-connected transport into the fleet as a new
+    /// worker: spawn its reader, give it an empty credit window.
+    fn admit_worker(&mut self, mut transport: Box<dyn Transport>) -> Option<usize> {
+        let wi = self.workers.len();
+        let Some(input) = transport.take_reader() else {
+            eprintln!(
+                "shard host: joiner {} has no read half — rejected",
+                transport.describe()
+            );
+            return None;
+        };
+        let reader =
+            spawn_reader(wi, input, self.events.clone(), self.rx.clone(), self.stats.clone());
+        self.workers.push(WorkerConn {
+            transport,
+            tx: BlobTx::new(),
+            outstanding: Vec::new(),
+            alive: true,
+            reader: Some(reader),
+        });
+        self.stats.joined.fetch_add(1, Ordering::Relaxed);
+        Some(wi)
+    }
+
+    /// Drain whatever is sitting in the event queue *between* job
+    /// batches: deaths noticed since the last run, joiners waiting for
+    /// admission, stale result frames from previous batches.
+    fn absorb_idle_events(&mut self, pending: &mut VecDeque<usize>) {
+        loop {
+            match self.events.try_pop() {
+                PopResult::Item(Event::Dead { worker }) => self.mark_dead(worker, pending),
+                PopResult::Item(Event::Join(t)) => {
+                    self.admit_worker(t);
+                }
+                PopResult::Item(Event::Result { .. }) => {
+                    // stale frame from a previous batch
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                PopResult::Item(Event::Heartbeat { .. }) => {}
+                PopResult::Empty | PopResult::Closed => return,
+            }
+        }
+    }
+
+    /// Admit any joiners (and absorb any deaths) queued while no job
+    /// batch was running — lets callers poll fleet growth between runs.
+    pub fn admit_pending_joins(&mut self) {
+        // no batch is running, so requeued orphans (possible only after
+        // a failed run) have nowhere to go — drop them with the batch
+        let mut orphans = VecDeque::new();
+        self.absorb_idle_events(&mut orphans);
+    }
+
+    /// Expire heartbeat deadlines: any live worker holding a job past
+    /// its deadline is wedged (requeued + killed). Returns whether
+    /// anything expired, so the caller can refill windows.
+    fn requeue_expired(&mut self, pending: &mut VecDeque<usize>) -> bool {
+        let now = Instant::now();
+        let mut any = false;
+        for wi in 0..self.workers.len() {
+            let expired = {
+                let w = &self.workers[wi];
+                w.alive && w.outstanding.iter().any(|&(_, deadline)| deadline <= now)
+            };
+            if expired {
+                self.mark_wedged(wi, pending);
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// A wedged worker is a dead worker that hasn't had the grace to
+    /// disconnect: requeue its jobs like a death, then kill the
+    /// transport so a late wake-up can't write stale frames.
+    fn mark_wedged(&mut self, wi: usize, pending: &mut VecDeque<usize>) {
+        if !self.workers[wi].alive {
+            return;
+        }
+        self.stats.wedged.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "shard host: worker {wi} ({}) missed its heartbeat deadline — requeueing",
+            self.workers[wi].transport.describe()
+        );
+        self.mark_dead(wi, pending);
+        self.workers[wi].transport.kill();
     }
 
     /// The shared host-side blob cache (the sweep runner seeds it with
@@ -478,7 +724,7 @@ impl ShardSession {
         let orphans = std::mem::take(&mut w.outstanding);
         self.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
         // requeue in front so interrupted work retires first
-        for j in orphans.into_iter().rev() {
+        for (j, _) in orphans.into_iter().rev() {
             pending.push_front(j);
         }
     }
@@ -505,7 +751,8 @@ impl ShardSession {
                 let bytes: u64 = frames.iter().map(|f| f.payload.len() as u64 + 24).sum();
                 self.stats.tx_bytes.fetch_add(bytes, Ordering::Relaxed);
                 self.stats.jobs_sent.fetch_add(1, Ordering::Relaxed);
-                self.workers[wi].outstanding.push(job);
+                let deadline = Instant::now() + self.heartbeat_timeout;
+                self.workers[wi].outstanding.push((job, deadline));
             } else {
                 // unreachable worker: give the job back, let the reader's
                 // Dead event (or this mark) finish the cleanup
@@ -535,16 +782,9 @@ impl ShardSession {
         let mut pending: VecDeque<usize> = (0..n).collect();
         let mut n_done = 0usize;
 
-        // absorb deaths noticed since the previous batch
-        loop {
-            match self.events.try_pop() {
-                PopResult::Item(Event::Dead { worker }) => {
-                    self.mark_dead(worker, &mut pending)
-                }
-                PopResult::Item(Event::Result { .. }) => {} // stale duplicate
-                PopResult::Empty | PopResult::Closed => break,
-            }
-        }
+        // absorb deaths, joins, and stale frames noticed since the
+        // previous batch
+        self.absorb_idle_events(&mut pending);
 
         self.fill_windows(src, &mut pending);
         while n_done < n {
@@ -553,23 +793,55 @@ impl ShardSession {
                 "all shard workers died with {} of {n} jobs unfinished",
                 n - n_done
             );
+            if self.requeue_expired(&mut pending) {
+                self.fill_windows(src, &mut pending);
+                continue;
+            }
             match self.events.pop_timeout(EVENT_POLL) {
                 PopResult::Item(Event::Result { worker, msg }) => {
                     // results from a worker already marked dead are stale:
                     // its jobs were requeued the moment it was marked, and
                     // a late frame may even belong to a previous batch —
-                    // the survivor's recomputation is the one that counts
-                    if !self.workers[worker].alive {
-                        continue;
-                    }
+                    // the survivor's recomputation is the one that counts.
+                    // From a *live* worker, only a job actually sitting in
+                    // its credit window counts: anything else is a replay
+                    // or a leftover from before a requeue and would
+                    // double-count against a fresh dispatch.
                     let job = msg.job_id() as usize;
-                    anyhow::ensure!(job < n, "worker returned unknown job id {job}");
-                    self.workers[worker].outstanding.retain(|&j| j != job);
+                    let pos = if self.workers[worker].alive {
+                        self.workers[worker]
+                            .outstanding
+                            .iter()
+                            .position(|&(j, _)| j == job)
+                    } else {
+                        None
+                    };
+                    let Some(pos) = pos else {
+                        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    };
+                    self.workers[worker].outstanding.remove(pos);
                     if results[job].is_none() {
                         results[job] = Some(msg);
                         n_done += 1;
                     }
                     self.feed_worker(worker, src, &mut pending);
+                }
+                PopResult::Item(Event::Heartbeat { worker, job }) => {
+                    // a beat renews the wedge deadline of that one job
+                    if self.workers[worker].alive {
+                        let deadline = Instant::now() + self.heartbeat_timeout;
+                        for slot in &mut self.workers[worker].outstanding {
+                            if slot.0 == job as usize {
+                                slot.1 = deadline;
+                            }
+                        }
+                    }
+                }
+                PopResult::Item(Event::Join(t)) => {
+                    if let Some(wi) = self.admit_worker(t) {
+                        self.feed_worker(wi, src, &mut pending);
+                    }
                 }
                 PopResult::Item(Event::Dead { worker }) => {
                     self.mark_dead(worker, &mut pending);
@@ -597,6 +869,16 @@ impl ShardSession {
         metrics.put("shard.rx_bytes", self.stats.rx_bytes.load(Ordering::Relaxed) as f64);
         metrics.put("shard.requeued", self.stats.requeued.load(Ordering::Relaxed) as f64);
         metrics.put("shard.worker_deaths", self.stats.deaths.load(Ordering::Relaxed) as f64);
+        metrics.put("shard.wedged", self.stats.wedged.load(Ordering::Relaxed) as f64);
+        metrics.put(
+            "shard.rejected_frames",
+            self.stats.rejected.load(Ordering::Relaxed) as f64,
+        );
+        metrics.put("shard.joined", self.stats.joined.load(Ordering::Relaxed) as f64);
+        metrics.put(
+            "shard.events_dropped",
+            self.stats.events_dropped.load(Ordering::Relaxed) as f64,
+        );
         Ok(results.into_iter().map(|r| r.expect("job completed")).collect())
     }
 
@@ -606,6 +888,9 @@ impl ShardSession {
     }
 
     fn teardown(&mut self, graceful: bool) {
+        if let Some(stop) = self.accept_stop.take() {
+            stop.store(true, Ordering::Release);
+        }
         for w in &mut self.workers {
             if graceful {
                 if let Some(mut out) = w.transport.writer() {
@@ -616,6 +901,9 @@ impl ShardSession {
             w.transport.close_writer(); // EOF either way
         }
         self.events.close();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
         for w in &mut self.workers {
             if graceful {
                 w.transport.wait();
@@ -777,7 +1065,7 @@ fn sweep_parts(
     let mut parts = Vec::with_capacity(msgs.len());
     for (idx, msg) in msgs.into_iter().enumerate() {
         let ResultMsg::Sweep(m) = msg else {
-            anyhow::bail!("unexpected fleet result in a sweep batch")
+            anyhow::bail!("unexpected non-sweep result in a sweep batch")
         };
         debug_assert_eq!(m.job_id as usize, idx);
         let li = idx % n_layers;
@@ -804,9 +1092,10 @@ fn sweep_parts(
     Ok(parts)
 }
 
-/// [`SweepRunner`]'s multi-process counterpart: phases A + B1 run
-/// in-process, phase B2 fans out over a [`ShardSession`]'s workers.
-/// Outcomes are bit-identical to the in-process engine (module docs).
+/// [`SweepRunner`]'s multi-process counterpart: phase-A/B1 preparation
+/// fans out as one job per layer, then phase B2 fans out per `(layer,
+/// config)` cell — all over a [`ShardSession`]'s workers. Outcomes are
+/// bit-identical to the in-process engine (module docs).
 pub struct ShardedSweepRunner<'a> {
     params: &'a Params,
     model_cfg: &'a ModelCfg,
@@ -826,9 +1115,9 @@ impl<'a> ShardedSweepRunner<'a> {
         ShardedSweepRunner { params, model_cfg, calib, metrics }
     }
 
-    /// Run the grid with phase B2 sharded across `session`'s workers;
-    /// one [`FactoredOutcome`] per config, aligned, bit-identical to
-    /// [`SweepRunner::run_factored`].
+    /// Run the grid with phase-A/B1 prep *and* phase B2 sharded across
+    /// `session`'s workers; one [`FactoredOutcome`] per config, aligned,
+    /// bit-identical to [`SweepRunner::run_factored`].
     pub fn run_factored(
         &self,
         session: &mut ShardSession,
@@ -839,8 +1128,7 @@ impl<'a> ShardedSweepRunner<'a> {
         if configs.is_empty() || n_layers == 0 {
             return Ok(empty_outcomes(self.params, configs.len()));
         }
-        let runner = SweepRunner::new(self.params, self.model_cfg, self.calib, self.metrics);
-        let prep = runner.prepare(configs);
+        let prep = self.sharded_prepare(session, configs, &names)?;
 
         // seed the host cache with the Arc'd artifacts being shipped, so
         // results that reference them come back as these very buffers
@@ -872,6 +1160,199 @@ impl<'a> ShardedSweepRunner<'a> {
             sweep_parts(msgs, &rx, configs, &names, n_layers, &prep)?
         };
         Ok(assemble_outcomes(self.params, &names, configs.len(), parts, self.metrics))
+    }
+
+    /// Phases A + B1 as one shardable job per layer: the host computes
+    /// what needs the calibration set (activation scalings, GPTQ
+    /// Hessians) and ships it with `W`; workers run the *same*
+    /// [`compute_qdeq0`] / [`compute_spectra`] / [`compute_resid_svd`]
+    /// calls [`SweepRunner::prepare`] makes in-process, over the same
+    /// deduped key lists ([`sweep_keys`]) — so the rebuilt
+    /// [`LayerCache`] is bit-identical to the in-process one.
+    fn sharded_prepare(
+        &self,
+        session: &mut ShardSession,
+        configs: &[SweepConfig],
+        names: &[String],
+    ) -> Result<SweepPrep> {
+        let keys = sweep_keys(configs);
+        let prep_rank = SweepRunner::prep_rank(configs);
+
+        // host half of phase A: everything that needs the calibration set
+        let t_host = Instant::now();
+        let host: Vec<HostPrep> = pool::par_map(names.len(), |i| {
+            let name = &names[i];
+            let t0 = Instant::now();
+            let w = self.params.get_mat(name).expect("linear present");
+            let mut scalings = HashMap::new();
+            for &kind in &keys.kinds {
+                scalings.insert(kind, Arc::new(self.calib.scaling_for(name, kind)));
+            }
+            let hessian = if keys.any_hessian {
+                self.calib.quant_ctx(name, true, 0).hessian.map(Arc::new)
+            } else {
+                None
+            };
+            HostPrep { w, scalings, hessian, host_secs: t0.elapsed().as_secs_f64() }
+        });
+        self.metrics.add("sweep.scaling_cpu_secs", t_host.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        let msgs = {
+            let src = PrepJobSource {
+                names,
+                keys: &keys,
+                host: &host,
+                memo: EncodeMemo::default(),
+            };
+            session.run_jobs(&src, self.metrics)?
+        };
+        self.metrics.add("shard.prep_secs", t0.elapsed().as_secs_f64());
+
+        // rebuild the LayerCache from the result blobs; resolve under one
+        // rx lock so every Arc comes from the shared cache (grid dedup)
+        let mut resids: Vec<(usize, usize, Svd)> = Vec::new();
+        let layers: Vec<PreparedLayer> = {
+            let rx = session.rx().lock().unwrap();
+            host.into_iter()
+                .zip(msgs)
+                .enumerate()
+                .map(|(li, (hp, msg))| {
+                    let ResultMsg::Prep(m) = msg else {
+                        anyhow::bail!("unexpected non-prep result in a prep batch")
+                    };
+                    anyhow::ensure!(
+                        m.qdeq0.len() == keys.qdeq0_keys.len()
+                            && m.spectra.len() == keys.spectra_keys.len()
+                            && m.resid.len() == keys.resid_keys.len(),
+                        "prep result for layer {li} does not match the grid's key lists"
+                    );
+                    let mut qdeq0 = HashMap::new();
+                    let mut qdeq0_packed = HashMap::new();
+                    for ((label, seed, _), (dense, packed)) in
+                        keys.qdeq0_keys.iter().zip(&m.qdeq0)
+                    {
+                        qdeq0.insert((label.clone(), *seed), rx.mat(*dense)?);
+                        if let Some(p) = packed {
+                            qdeq0_packed.insert((label.clone(), *seed), rx.packed(*p)?);
+                        }
+                    }
+                    let mut spectra = HashMap::new();
+                    for ((kind, seed), sp) in keys.spectra_keys.iter().zip(&m.spectra) {
+                        spectra.insert(
+                            (*kind, *seed),
+                            Arc::new(PreparedSpectra {
+                                sw_svd: Svd {
+                                    u: (*rx.mat(sp.sw.u)?).clone(),
+                                    s: sp.sw.s.clone(),
+                                    v: (*rx.mat(sp.sw.v)?).clone(),
+                                },
+                                sw_frob2: sp.sw_frob2,
+                                se_svd: Svd {
+                                    u: (*rx.mat(sp.se.u)?).clone(),
+                                    s: sp.se.s.clone(),
+                                    v: (*rx.mat(sp.se.v)?).clone(),
+                                },
+                                se_frob2: sp.se_frob2,
+                                rank: sp.rank,
+                                seed: sp.seed,
+                            }),
+                        );
+                    }
+                    for (ri, sv) in m.resid.iter().enumerate() {
+                        resids.push((
+                            li,
+                            ri,
+                            Svd {
+                                u: (*rx.mat(sv.u)?).clone(),
+                                s: sv.s.clone(),
+                                v: (*rx.mat(sv.v)?).clone(),
+                            },
+                        ));
+                    }
+                    Ok(PreparedLayer {
+                        name: names[li].clone(),
+                        w: hp.w,
+                        scalings: hp.scalings,
+                        hessian: hp.hessian,
+                        qdeq0,
+                        qdeq0_packed,
+                        spectra,
+                        prep_secs: hp.host_secs + m.prep_secs,
+                    })
+                })
+                .collect::<Result<_>>()?
+        };
+        let mut cache = LayerCache::new(layers);
+        for (li, ri, svd) in resids {
+            let (label, kind, seed, _) = &keys.resid_keys[ri];
+            cache.insert_resid(li, label.clone(), *kind, *seed, svd);
+        }
+        self.metrics.add("sweep.prep_secs", t0.elapsed().as_secs_f64());
+        Ok(SweepPrep { cache, prep_rank })
+    }
+}
+
+/// Host-computed half of one layer's phase-A prep: the artifacts that
+/// need the calibration set, which never leaves the host.
+struct HostPrep {
+    w: Mat,
+    scalings: HashMap<ScalingKind, Arc<Scaling>>,
+    hessian: Option<Arc<Mat>>,
+    host_secs: f64,
+}
+
+/// One phase-A/B1 prep job per layer: ship `W` + scalings (+ Hessian)
+/// and the grid's deduped key lists; the worker returns every k=0 base,
+/// spectra pair, and shared residual SVD for that layer.
+struct PrepJobSource<'a> {
+    names: &'a [String],
+    keys: &'a SweepKeys,
+    host: &'a [HostPrep],
+    memo: EncodeMemo,
+}
+
+impl JobSource for PrepJobSource<'_> {
+    fn n_jobs(&self) -> usize {
+        self.names.len()
+    }
+
+    fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame> {
+        let hp = &self.host[job];
+        let memo = &self.memo;
+        let mut frames = Vec::new();
+        let w = memo.mat(&hp.w, tx, &mut frames);
+        let scalings = self
+            .keys
+            .kinds
+            .iter()
+            .map(|&kind| {
+                let ws = match hp.scalings.get(&kind).expect("scaling prepared").as_ref() {
+                    Scaling::Identity => WireScaling::Identity,
+                    Scaling::Diagonal { d, d_inv } => {
+                        WireScaling::Diagonal { d: d.clone(), d_inv: d_inv.clone() }
+                    }
+                    Scaling::Full { s, s_inv } => WireScaling::Full {
+                        s: memo.mat(s, tx, &mut frames),
+                        s_inv: memo.mat(s_inv, tx, &mut frames),
+                    },
+                };
+                (kind, ws)
+            })
+            .collect();
+        let msg = wire::PrepJobMsg {
+            job_id: job as u64,
+            layer_name: self.names[job].clone(),
+            prep_rank: self.keys.prep_rank,
+            w,
+            scalings,
+            hessian: hp.hessian.as_ref().map(|h| memo.mat(h, tx, &mut frames)),
+            qdeq0: self.keys.qdeq0_keys.clone(),
+            spectra: self.keys.spectra_keys.clone(),
+            resid: self.keys.resid_keys.clone(),
+        };
+        frames.push(wire::encode_prep_job(&msg));
+        frames
     }
 }
 
@@ -989,8 +1470,8 @@ pub fn fleet_perplexity_sharded(
                 FleetOut::Ppl(p) => FleetJobResult::Ppl(p),
                 FleetOut::Partials(p) => FleetJobResult::Partials(p),
             }),
-            ResultMsg::Sweep(_) => {
-                Err(anyhow::anyhow!("unexpected sweep result in a fleet batch"))
+            ResultMsg::Sweep(_) | ResultMsg::Prep(_) => {
+                Err(anyhow::anyhow!("unexpected non-fleet result in a fleet batch"))
             }
         })
         .collect::<Result<Vec<_>>>()?;
@@ -1004,6 +1485,134 @@ pub fn fleet_perplexity_sharded(
 enum WorkMsg {
     Sweep(Box<SweepJobMsg>),
     Fleet(Box<FleetJobMsg>),
+    Prep(Box<wire::PrepJobMsg>),
+}
+
+impl WorkMsg {
+    fn job_id(&self) -> u64 {
+        match self {
+            WorkMsg::Sweep(m) => m.job_id,
+            WorkMsg::Fleet(m) => m.job_id,
+            WorkMsg::Prep(m) => m.job_id,
+        }
+    }
+}
+
+/// Execute one phase-A/B1 prep job — the same compute calls
+/// [`SweepRunner::prepare`] makes in-process, over the job's key lists,
+/// in the same order (bit-identity contract).
+fn run_prep_job(
+    msg: &wire::PrepJobMsg,
+    rx: &Mutex<BlobRx>,
+    tx: &Mutex<BlobTx>,
+) -> Result<Vec<Frame>, wire::WireError> {
+    // resolve inputs under a short rx lock (never hold rx and tx
+    // together: the reader thread locks rx then tx)
+    let (w, scalings, hessian) = {
+        let rx = rx.lock().unwrap();
+        let w = rx.mat(msg.w)?;
+        let scalings = msg
+            .scalings
+            .iter()
+            .map(|(kind, ws)| {
+                let s = match ws {
+                    WireScaling::Identity => Scaling::Identity,
+                    WireScaling::Diagonal { d, d_inv } => {
+                        Scaling::Diagonal { d: d.clone(), d_inv: d_inv.clone() }
+                    }
+                    WireScaling::Full { s, s_inv } => Scaling::Full {
+                        s: (*rx.mat(*s)?).clone(),
+                        s_inv: (*rx.mat(*s_inv)?).clone(),
+                    },
+                };
+                Ok((*kind, s))
+            })
+            .collect::<Result<Vec<(ScalingKind, Scaling)>, wire::WireError>>()?;
+        let hessian = msg.hessian.map(|h| rx.mat(h)).transpose()?;
+        (w, scalings, hessian)
+    };
+
+    let t0 = Instant::now();
+    let salt = layer_salt(&msg.layer_name);
+    let scaling_of = |kind: ScalingKind| -> Result<&Scaling, wire::WireError> {
+        scalings
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, s)| s)
+            .ok_or(wire::WireError::Malformed("prep job missing a scaling kind"))
+    };
+
+    let qdeq0: Vec<(Mat, Option<PackedMat>)> = msg
+        .qdeq0
+        .iter()
+        .map(|(_, seed, spec)| compute_qdeq0(&w, hessian.as_deref(), spec, *seed, salt))
+        .collect();
+    let spectra = msg
+        .spectra
+        .iter()
+        .map(|(kind, seed)| {
+            Ok(compute_spectra(&w, scaling_of(*kind)?, msg.prep_rank, *seed, salt))
+        })
+        .collect::<Result<Vec<PreparedSpectra>, wire::WireError>>()?;
+    let resid = msg
+        .resid
+        .iter()
+        .map(|(label, kind, seed, _)| {
+            let qdeq = msg
+                .qdeq0
+                .iter()
+                .position(|(l, s, _)| l == label && s == seed)
+                .map(|i| &qdeq0[i].0)
+                .ok_or(wire::WireError::Malformed("prep job resid without its qdeq0"))?;
+            Ok(compute_resid_svd(&w, qdeq, scaling_of(*kind)?, msg.prep_rank, *seed, salt))
+        })
+        .collect::<Result<Vec<Svd>, wire::WireError>>()?;
+    let prep_secs = t0.elapsed().as_secs_f64();
+
+    let mut frames = Vec::new();
+    let mut tx = tx.lock().unwrap();
+    let out = wire::PrepResultMsg {
+        job_id: msg.job_id,
+        qdeq0: qdeq0
+            .iter()
+            .map(|(dense, packed)| {
+                (
+                    tx.mat_ref(dense, &mut frames),
+                    packed.as_ref().map(|p| tx.packed_ref(p, &mut frames)),
+                )
+            })
+            .collect(),
+        spectra: spectra
+            .iter()
+            .map(|sp| WireSpectra {
+                sw: WireSvd {
+                    u: tx.mat_ref(&sp.sw_svd.u, &mut frames),
+                    s: sp.sw_svd.s.clone(),
+                    v: tx.mat_ref(&sp.sw_svd.v, &mut frames),
+                },
+                sw_frob2: sp.sw_frob2,
+                se: WireSvd {
+                    u: tx.mat_ref(&sp.se_svd.u, &mut frames),
+                    s: sp.se_svd.s.clone(),
+                    v: tx.mat_ref(&sp.se_svd.v, &mut frames),
+                },
+                se_frob2: sp.se_frob2,
+                rank: sp.rank,
+                seed: sp.seed,
+            })
+            .collect(),
+        resid: resid
+            .iter()
+            .map(|sv| WireSvd {
+                u: tx.mat_ref(&sv.u, &mut frames),
+                s: sv.s.clone(),
+                v: tx.mat_ref(&sv.v, &mut frames),
+            })
+            .collect(),
+        prep_secs,
+    };
+    frames.push(wire::encode_prep_result(&out));
+    Ok(frames)
 }
 
 /// Execute one sweep job from wire artifacts — the same
@@ -1153,16 +1762,36 @@ fn run_fleet_job(msg: &FleetJobMsg, rx: &Mutex<BlobRx>) -> Result<FleetResultMsg
 }
 
 /// The worker loop over arbitrary transports (stdin/stdout in
-/// production; in-memory buffers in the loopback tests).
-///
-/// Three threads: a reader decoding frames into a bounded job queue, the
-/// caller's thread computing, and a writer flushing result frames. The
-/// bounded queues are the backpressure: a slow worker stops reading, the
-/// pipe fills, and the host's feeder blocks instead of ballooning
-/// memory. `exit_after` is the fault-injection hook behind the
-/// `--exit-after` CLI flag: the worker stops (abruptly, from the host's
-/// point of view) after completing that many jobs.
+/// production; in-memory buffers in the loopback tests), beating at the
+/// default [`DEFAULT_HEARTBEAT`] cadence.
 pub fn run_worker<R, W>(input: R, output: W, exit_after: Option<usize>) -> Result<()>
+where
+    R: Read + Send + 'static,
+    W: Write + Send + 'static,
+{
+    run_worker_paced(input, output, exit_after, DEFAULT_HEARTBEAT)
+}
+
+/// [`run_worker`] with an explicit heartbeat cadence (the
+/// `--heartbeat-secs` CLI flag; tests drive it down to milliseconds).
+///
+/// Four threads: a reader decoding frames into a bounded job queue, the
+/// caller's thread computing, a writer flushing result frames, and a
+/// heartbeat ticker that emits one [`kind::HEARTBEAT`] frame per
+/// enqueued-or-computing job every `heartbeat` — the host renews that
+/// job's wedge deadline on each beat, so only a genuinely stalled
+/// worker (not a slow one) gets requeued. The bounded queues are the
+/// backpressure: a slow worker stops reading, the pipe fills, and the
+/// host's feeder blocks instead of ballooning memory. `exit_after` is
+/// the fault-injection hook behind the `--exit-after` CLI flag: the
+/// worker stops (abruptly, from the host's point of view) after
+/// completing that many jobs.
+pub fn run_worker_paced<R, W>(
+    input: R,
+    output: W,
+    exit_after: Option<usize>,
+    heartbeat: Duration,
+) -> Result<()>
 where
     R: Read + Send + 'static,
     W: Write + Send + 'static,
@@ -1171,15 +1800,25 @@ where
     let tx = Arc::new(Mutex::new(BlobTx::new()));
     let jobs: Arc<BoundedQueue<WorkMsg>> = Arc::new(BoundedQueue::new(WORKER_QUEUE_CAP));
     let results: Arc<BoundedQueue<Vec<Frame>>> = Arc::new(BoundedQueue::new(WORKER_QUEUE_CAP));
+    // job ids accepted but not yet completed — what the ticker beats for
+    let inflight: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
 
     let reader = {
         let rx = rx.clone();
         let tx = tx.clone();
         let jobs = jobs.clone();
+        let inflight = inflight.clone();
         std::thread::spawn(move || {
             // buffer the read half: a raw TcpStream would otherwise pay
             // three read syscalls per frame (header, payload, checksum)
             let mut input = BufReader::new(input);
+            // record the id *before* the (blocking) queue push: a job
+            // waiting for queue space is in flight from the host's view
+            // and must beat like one
+            let accept = |id: u64, m: WorkMsg| {
+                inflight.lock().unwrap().push(id);
+                jobs.push(m)
+            };
             loop {
                 match wire::read_frame(&mut input) {
                     Ok(Some(f)) => match f.kind {
@@ -1194,7 +1833,7 @@ where
                         }
                         kind::SWEEP_JOB => match decode_sweep_job(&f.payload) {
                             Ok(m) => {
-                                if !jobs.push(WorkMsg::Sweep(Box::new(m))) {
+                                if !accept(m.job_id, WorkMsg::Sweep(Box::new(m))) {
                                     break;
                                 }
                             }
@@ -1202,7 +1841,15 @@ where
                         },
                         kind::FLEET_JOB => match decode_fleet_job(&f.payload) {
                             Ok(m) => {
-                                if !jobs.push(WorkMsg::Fleet(Box::new(m))) {
+                                if !accept(m.job_id, WorkMsg::Fleet(Box::new(m))) {
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
+                        },
+                        kind::PREP_JOB => match wire::decode_prep_job(&f.payload) {
+                            Ok(m) => {
+                                if !accept(m.job_id, WorkMsg::Prep(Box::new(m))) {
                                     break;
                                 }
                             }
@@ -1242,13 +1889,39 @@ where
         })
     };
 
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let ticker = {
+        let hb_stop = hb_stop.clone();
+        let inflight = inflight.clone();
+        let results = results.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(heartbeat);
+            if hb_stop.load(Ordering::Acquire) {
+                return;
+            }
+            // snapshot, then push without the lock: a beat must never
+            // block the compute loop's completion bookkeeping
+            let ids: Vec<u64> = inflight.lock().unwrap().clone();
+            for id in ids {
+                if !results.push(vec![wire::encode_heartbeat(id)]) {
+                    return; // teardown
+                }
+            }
+        })
+    };
+
     let mut done = 0usize;
     while let Some(job) = jobs.pop() {
+        let id = job.job_id();
         let frames = match job {
             WorkMsg::Sweep(m) => run_sweep_job(&m, &rx, &tx)?,
             WorkMsg::Fleet(m) => vec![encode_fleet_result(&run_fleet_job(&m, &rx)?)],
+            WorkMsg::Prep(m) => run_prep_job(&m, &rx, &tx)?,
         };
-        if !results.push(frames) {
+        let pushed = results.push(frames);
+        // only stop beating for a job whose result actually queued
+        inflight.lock().unwrap().retain(|&j| j != id);
+        if !pushed {
             break;
         }
         done += 1;
@@ -1256,12 +1929,14 @@ where
             break;
         }
     }
+    hb_stop.store(true, Ordering::Release);
     jobs.close();
     results.close();
     let _ = writer.join();
-    // the reader may be blocked on a live input; it exits on queue close,
-    // EOF, or process exit — never join it here
+    // the reader and ticker may be blocked (on a live input / mid-sleep);
+    // both exit on queue close, EOF, or process exit — never join them
     drop(reader);
+    drop(ticker);
     Ok(())
 }
 
@@ -1270,21 +1945,25 @@ where
 /// (`--connect host:port`, optionally presenting `--token N` so a host
 /// that spawned this process can map the dial-in back to it), or over a
 /// single accepted connection (`--listen host:port`) until shutdown or
-/// EOF. `--exit-after N` is the fault-injection hook the requeue tests
-/// use.
+/// EOF. `--heartbeat-secs S` sets the per-job heartbeat cadence
+/// (fractional seconds; default [`DEFAULT_HEARTBEAT`]); `--exit-after N`
+/// is the fault-injection hook the requeue tests use.
 pub fn worker_main(args: &Args) -> Result<()> {
     let exit_after = args.get("exit-after").and_then(|s| s.parse::<usize>().ok());
+    let heartbeat = Duration::from_secs_f64(
+        args.get_f64("heartbeat-secs", DEFAULT_HEARTBEAT.as_secs_f64()).max(0.05),
+    );
     if let Some(addr) = args.get("connect") {
         let stream = worker_connect(addr, args.get_u64("token", 0))?;
         let input = stream.try_clone().context("cloning TCP read half")?;
-        return run_worker(input, stream, exit_after);
+        return run_worker_paced(input, stream, exit_after, heartbeat);
     }
     if let Some(addr) = args.get("listen") {
         let stream = worker_accept(addr)?;
         let input = stream.try_clone().context("cloning TCP read half")?;
-        return run_worker(input, stream, exit_after);
+        return run_worker_paced(input, stream, exit_after, heartbeat);
     }
-    run_worker(std::io::stdin(), std::io::stdout(), exit_after)
+    run_worker_paced(std::io::stdin(), std::io::stdout(), exit_after, heartbeat)
 }
 
 #[cfg(test)]
@@ -1439,6 +2118,7 @@ mod tests {
                     assert!(msgs[id].is_none(), "duplicate result {id}");
                     msgs[id] = Some(m);
                 }
+                kind::HEARTBEAT => {} // slow CI: a job outlived a cadence
                 other => panic!("unexpected frame kind {other}"),
             }
         }
@@ -1568,14 +2248,20 @@ mod tests {
     use crate::util::prop;
 
     /// A worker on a thread behind in-memory pipes, with `plan`
-    /// interposed on the host side of both directions.
+    /// interposed on the host side of both directions. Beats fast
+    /// (100ms) so tests can run with short wedge deadlines.
     fn fault_worker(plan: FaultPlan) -> Box<dyn Transport> {
         let (host_to_worker, worker_input) = byte_pipe(1 << 16);
         let (worker_output, worker_to_host) = byte_pipe(1 << 16);
         std::thread::spawn(move || {
             // errors are the host's problem: a severed pipe here is the
             // crash being simulated
-            let _ = run_worker(worker_input, worker_output, None);
+            let _ = run_worker_paced(
+                worker_input,
+                worker_output,
+                None,
+                Duration::from_millis(100),
+            );
         });
         Box::new(FaultTransport::new(host_to_worker, worker_to_host, plan))
     }
@@ -1590,7 +2276,7 @@ mod tests {
     /// either way (the dedicated transport unit tests cover the pure
     /// checksum path deterministically).
     fn random_plan(g: &mut prop::Gen) -> FaultPlan {
-        match g.rng.below(5) {
+        match g.rng.below(7) {
             0 => FaultPlan::default(),
             1 => FaultPlan {
                 chop: 1 + g.rng.below(7),
@@ -1606,7 +2292,7 @@ mod tests {
                 cut_rx_after: Some(g.rng.below(100_000) as u64),
                 ..Default::default()
             },
-            _ => {
+            4 => {
                 let at = g.rng.below(100_000) as u64;
                 FaultPlan {
                     corrupt_rx: Some((at, 1 << g.rng.below(8))),
@@ -1614,6 +2300,23 @@ mod tests {
                     ..Default::default()
                 }
             }
+            // silent stall: the socket stays open but no byte (result or
+            // heartbeat) arrives — only the wedge deadline can clear it
+            5 => FaultPlan {
+                stall_rx_after: Some(g.rng.below(150_000) as u64),
+                ..Default::default()
+            },
+            // stall-then-resume, straddling the 1500ms wedge deadline:
+            // either the stall is absorbed (just a slow worker) or the
+            // peer wakes after the host wedged it, and its late frames
+            // must be rejected, not merged
+            _ => FaultPlan {
+                stall_rx_after: Some(g.rng.below(150_000) as u64),
+                stall_rx_resume: Some(Duration::from_millis(
+                    500 + g.rng.below(2000) as u64,
+                )),
+                ..Default::default()
+            },
         }
     }
 
@@ -1664,6 +2367,9 @@ mod tests {
                 })
                 .collect();
             let mut session = ShardSession::from_transports(transports).unwrap();
+            // wedge deadline: 15× the 100ms beat cadence, so a loaded CI
+            // box never false-positives on a healthy-but-slow worker
+            session.set_heartbeat_timeout(Duration::from_millis(1500));
             {
                 let mut rx = session.rx().lock().unwrap();
                 for layer in &prep.cache.layers {
@@ -1739,5 +2445,228 @@ mod tests {
             err.to_string().contains("all shard workers died"),
             "unexpected error: {err:#}"
         );
+    }
+
+    /// Tentpole regression (wedge): a worker whose result stream stalls
+    /// silently — socket open, no bytes, no heartbeats — is marked
+    /// wedged at the deadline and its jobs requeue onto the clean
+    /// worker; the merged outcomes stay bit-identical.
+    #[test]
+    fn wedged_worker_requeues_via_heartbeat_expiry() {
+        let (params, cfg, calib) = setup();
+        let configs: Vec<SweepConfig> = grid().into_iter().take(2).collect();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let expect = runner.run_factored(&configs);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+        let n_layers = names.len();
+
+        let transports: Vec<Box<dyn Transport>> = vec![
+            fault_worker(FaultPlan::default()),
+            // stalls after its first byte: every job it holds goes silent
+            fault_worker(FaultPlan { stall_rx_after: Some(1), ..Default::default() }),
+        ];
+        let mut session = ShardSession::from_transports(transports).unwrap();
+        session.set_heartbeat_timeout(Duration::from_millis(2000));
+        {
+            let mut rx = session.rx().lock().unwrap();
+            for layer in &prep.cache.layers {
+                for arc in layer.qdeq0.values() {
+                    rx.seed_mat(arc);
+                }
+                for arc in layer.qdeq0_packed.values() {
+                    rx.seed_packed(arc);
+                }
+            }
+        }
+        let src = SweepJobSource {
+            configs: &configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers,
+            memo: EncodeMemo::default(),
+        };
+        let case_metrics = Metrics::new();
+        let msgs = session.run_jobs(&src, &case_metrics).expect("clean worker finishes");
+        let parts = {
+            let rx = session.rx().lock().unwrap();
+            sweep_parts(msgs, &rx, &configs, &names, n_layers, &prep).unwrap()
+        };
+        let got = assemble_outcomes(&params, &names, configs.len(), parts, &case_metrics);
+        assert_outcomes_identical(&expect, &got);
+        assert!(
+            case_metrics.get("shard.wedged") >= 1.0,
+            "the stalled worker was never wedged"
+        );
+        assert!(
+            case_metrics.get("shard.requeued") >= 1.0,
+            "the wedged worker's jobs were never requeued"
+        );
+        session.shutdown();
+    }
+
+    /// A worker behind a pump that re-emits every sweep-result frame
+    /// twice — the replayed-frame double the stale-frame satellite
+    /// needs.
+    fn duplicating_worker() -> Box<dyn Transport> {
+        let (host_to_worker, worker_input) = byte_pipe(1 << 16);
+        let (worker_output, pump_input) = byte_pipe(1 << 16);
+        let (mut pump_output, host_read) = byte_pipe(1 << 16);
+        std::thread::spawn(move || {
+            let _ = run_worker_paced(
+                worker_input,
+                worker_output,
+                None,
+                Duration::from_millis(100),
+            );
+        });
+        std::thread::spawn(move || {
+            let mut src = BufReader::new(pump_input);
+            while let Ok(Some(f)) = wire::read_frame(&mut src) {
+                let dup = f.kind == kind::SWEEP_RESULT;
+                if f.write_to(&mut pump_output).is_err() {
+                    return;
+                }
+                if dup && f.write_to(&mut pump_output).is_err() {
+                    return;
+                }
+                if pump_output.flush().is_err() {
+                    return;
+                }
+            }
+        });
+        Box::new(FaultTransport::new(host_to_worker, host_read, FaultPlan::default()))
+    }
+
+    /// Satellite regression (stale-frame fix): a replayed result frame
+    /// whose job is no longer in the worker's dispatch window is
+    /// rejected and counted — never merged, never double-counted, and
+    /// never a reason to re-dispatch a completed job.
+    #[test]
+    fn duplicate_result_frames_are_rejected_and_counted() {
+        let (params, cfg, calib) = setup();
+        let configs: Vec<SweepConfig> = grid().into_iter().take(2).collect();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let expect = runner.run_factored(&configs);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+        let n_layers = names.len();
+
+        let mut session =
+            ShardSession::from_transports(vec![duplicating_worker()]).unwrap();
+        {
+            let mut rx = session.rx().lock().unwrap();
+            for layer in &prep.cache.layers {
+                for arc in layer.qdeq0.values() {
+                    rx.seed_mat(arc);
+                }
+                for arc in layer.qdeq0_packed.values() {
+                    rx.seed_packed(arc);
+                }
+            }
+        }
+        let src = CountingSource {
+            inner: SweepJobSource {
+                configs: &configs,
+                cache: &prep.cache,
+                prep_rank: prep.prep_rank,
+                n_layers,
+                memo: EncodeMemo::default(),
+            },
+            counts: RefCell::new(vec![0; configs.len() * n_layers]),
+        };
+        let case_metrics = Metrics::new();
+        let msgs = session.run_jobs(&src, &case_metrics).expect("duplicates are benign");
+        for (j, &c) in src.counts.borrow().iter().enumerate() {
+            assert_eq!(c, 1, "job {j} dispatched {c}× with no worker death");
+        }
+        assert!(
+            case_metrics.get("shard.rejected_frames") >= 1.0,
+            "no duplicate frame was rejected"
+        );
+        let parts = {
+            let rx = session.rx().lock().unwrap();
+            sweep_parts(msgs, &rx, &configs, &names, n_layers, &prep).unwrap()
+        };
+        let got = assemble_outcomes(&params, &names, configs.len(), parts, &case_metrics);
+        assert_outcomes_identical(&expect, &got);
+        session.shutdown();
+    }
+
+    /// Tentpole regression (elasticity): workers admitted mid-run — one
+    /// before the batch, one racing the dispatcher, one that joins and
+    /// immediately stalls — take load without disturbing bit-identity,
+    /// and the departing (wedged) joiner requeues cleanly.
+    #[test]
+    fn mid_run_join_takes_load_and_stays_bit_identical() {
+        let (params, cfg, calib) = setup();
+        let configs = grid();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let expect = runner.run_factored(&configs);
+        let prep = runner.prepare(&configs);
+        let names = Params::linear_names(&cfg);
+        let n_layers = names.len();
+
+        let mut session =
+            ShardSession::from_transports(vec![fault_worker(FaultPlan::default())]).unwrap();
+        session.set_heartbeat_timeout(Duration::from_millis(2000));
+        {
+            let mut rx = session.rx().lock().unwrap();
+            for layer in &prep.cache.layers {
+                for arc in layer.qdeq0.values() {
+                    rx.seed_mat(arc);
+                }
+                for arc in layer.qdeq0_packed.values() {
+                    rx.seed_packed(arc);
+                }
+            }
+        }
+
+        // a join queued before the batch is admitted on demand
+        let sender = session.join_sender();
+        assert!(sender.admit(fault_worker(FaultPlan::default())));
+        session.admit_pending_joins();
+        assert_eq!(session.n_alive(), 2, "pre-batch joiner admitted");
+
+        // a second joiner races the dispatcher mid-run — and stalls
+        // right after joining, so it also exercises wedge-on-joiner
+        let racer = {
+            let sender = session.join_sender();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                sender.admit(fault_worker(FaultPlan {
+                    stall_rx_after: Some(1),
+                    ..Default::default()
+                }))
+            })
+        };
+
+        let src = SweepJobSource {
+            configs: &configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers,
+            memo: EncodeMemo::default(),
+        };
+        let case_metrics = Metrics::new();
+        let msgs = session.run_jobs(&src, &case_metrics).expect("fleet survives the churn");
+        racer.join().unwrap();
+        let parts = {
+            let rx = session.rx().lock().unwrap();
+            sweep_parts(msgs, &rx, &configs, &names, n_layers, &prep).unwrap()
+        };
+        let got = assemble_outcomes(&params, &names, configs.len(), parts, &case_metrics);
+        assert_outcomes_identical(&expect, &got);
+
+        // however the race landed, both clean workers are alive once any
+        // leftover join is absorbed; the stalled joiner never survives
+        // holding a job past its deadline
+        session.admit_pending_joins();
+        assert!(session.n_alive() >= 2, "clean workers survive");
+        assert!(case_metrics.get("shard.joined") >= 1.0, "no join was recorded");
+        session.shutdown();
     }
 }

@@ -208,35 +208,8 @@ impl<'a> SweepRunner<'a> {
     pub(crate) fn prepare(&self, configs: &[SweepConfig]) -> SweepPrep {
         let names = Params::linear_names(self.model_cfg);
         let n_layers = names.len();
-        let prep_rank = Self::prep_rank(configs);
-        let any_hessian = configs.iter().any(|c| c.quantizer.needs_hessian());
-
-        // ---- distinct shared-work keys (insertion order, deduped) -------
-        let mut kinds: Vec<ScalingKind> = Vec::new();
-        let mut spectra_keys: Vec<(ScalingKind, u64)> = Vec::new();
-        let mut qdeq0_keys: Vec<(String, u64, QuantizerSpec)> = Vec::new();
-        let mut resid_keys: Vec<(String, ScalingKind, u64, QuantizerSpec)> = Vec::new();
-        for c in configs {
-            if !kinds.contains(&c.scaling) {
-                kinds.push(c.scaling);
-            }
-            if c.method.needs_spectra() && !spectra_keys.contains(&(c.scaling, c.seed)) {
-                spectra_keys.push((c.scaling, c.seed));
-            }
-            if matches!(c.method, Method::WOnly | Method::Qer) {
-                let label = c.quantizer.label();
-                if !qdeq0_keys.iter().any(|(l, s, _)| *l == label && *s == c.seed) {
-                    qdeq0_keys.push((label.clone(), c.seed, c.quantizer));
-                }
-                if c.method == Method::Qer
-                    && !resid_keys
-                        .iter()
-                        .any(|(l, k, s, _)| *l == label && *k == c.scaling && *s == c.seed)
-                {
-                    resid_keys.push((label, c.scaling, c.seed, c.quantizer));
-                }
-            }
-        }
+        let SweepKeys { kinds, spectra_keys, qdeq0_keys, resid_keys, prep_rank, any_hessian } =
+            sweep_keys(configs);
 
         // ---- phase A: per-layer shared preparation ----------------------
         let t_prep = Instant::now();
@@ -265,14 +238,7 @@ impl<'a> SweepRunner<'a> {
             let mut qdeq0 = HashMap::new();
             let mut qdeq0_packed = HashMap::new();
             for (label, seed, spec) in &qdeq0_keys {
-                let hess = if spec.needs_hessian() {
-                    hessian.as_ref().map(|h| (**h).clone())
-                } else {
-                    None
-                };
-                let ctx = QuantCtx { hessian: hess, seed: seed ^ salt };
-                let q = spec.build();
-                let (qdeq, packed) = q.quantize_coded(&w, &ctx);
+                let (qdeq, packed) = compute_qdeq0(&w, hessian.as_deref(), spec, *seed, salt);
                 qdeq0.insert((label.clone(), *seed), Arc::new(qdeq));
                 if let Some(p) = packed {
                     qdeq0_packed.insert((label.clone(), *seed), Arc::new(p));
@@ -284,7 +250,7 @@ impl<'a> SweepRunner<'a> {
             let mut spectra = HashMap::new();
             for (kind, seed) in &spectra_keys {
                 let scaling = scalings.get(kind).expect("scaling prepared above");
-                let sp = PreparedSpectra::compute(&w, scaling, prep_rank, N_ITER, seed ^ salt);
+                let sp = compute_spectra(&w, scaling, prep_rank, *seed, salt);
                 spectra.insert((*kind, *seed), Arc::new(sp));
             }
             self.metrics.add("sweep.spectra_cpu_secs", tsp.elapsed().as_secs_f64());
@@ -315,10 +281,7 @@ impl<'a> SweepRunner<'a> {
             let qdeq = layer.qdeq0(label, *seed).expect("qdeq prepared");
             let scaling = layer.scaling(*kind);
             let tj = Instant::now();
-            // same stream `reconstruct_prepared` would open for this cfg
-            let mut rng = Rng::new((seed ^ salt) ^ RESID_SALT);
-            let resid = scaling.apply(&layer.w.sub(qdeq));
-            let svd = randomized_svd(&resid, prep_rank, N_ITER, &mut rng);
+            let svd = compute_resid_svd(&layer.w, qdeq, scaling, prep_rank, *seed, salt);
             self.metrics.add("sweep.resid_cpu_secs", tj.elapsed().as_secs_f64());
             (li, ri, svd)
         });
@@ -339,6 +302,102 @@ pub(crate) struct SweepPrep {
     pub cache: LayerCache,
     /// rank all shared factorizations were computed at
     pub prep_rank: usize,
+}
+
+/// The distinct shared-work keys a grid touches, insertion-ordered and
+/// deduped, plus the grid's prep rank and whether any quantizer wants a
+/// Hessian. One derivation shared by the in-process
+/// [`SweepRunner::prepare`] and the sharded phase-A prep
+/// ([`ShardedSweepRunner`](super::shard::ShardedSweepRunner)), so both
+/// paths enumerate exactly the same work — the bit-identity contract
+/// between them starts here.
+pub(crate) struct SweepKeys {
+    /// every scaling kind any config uses
+    pub kinds: Vec<ScalingKind>,
+    /// (scaling, seed) pairs needing prepared (S·W, S·E) spectra
+    pub spectra_keys: Vec<(ScalingKind, u64)>,
+    /// (quantizer label, seed, spec) cells needing a k=0 quantization
+    pub qdeq0_keys: Vec<(String, u64, QuantizerSpec)>,
+    /// (label, scaling, seed, spec) cells needing a plain-QER residual SVD
+    pub resid_keys: Vec<(String, ScalingKind, u64, QuantizerSpec)>,
+    /// rank every shared factorization is computed at
+    pub prep_rank: usize,
+    /// whether any config's quantizer consumes a GPTQ Hessian
+    pub any_hessian: bool,
+}
+
+/// Derive the deduped shared-work key lists for `configs`.
+pub(crate) fn sweep_keys(configs: &[SweepConfig]) -> SweepKeys {
+    let prep_rank = SweepRunner::prep_rank(configs);
+    let any_hessian = configs.iter().any(|c| c.quantizer.needs_hessian());
+    let mut kinds: Vec<ScalingKind> = Vec::new();
+    let mut spectra_keys: Vec<(ScalingKind, u64)> = Vec::new();
+    let mut qdeq0_keys: Vec<(String, u64, QuantizerSpec)> = Vec::new();
+    let mut resid_keys: Vec<(String, ScalingKind, u64, QuantizerSpec)> = Vec::new();
+    for c in configs {
+        if !kinds.contains(&c.scaling) {
+            kinds.push(c.scaling);
+        }
+        if c.method.needs_spectra() && !spectra_keys.contains(&(c.scaling, c.seed)) {
+            spectra_keys.push((c.scaling, c.seed));
+        }
+        if matches!(c.method, Method::WOnly | Method::Qer) {
+            let label = c.quantizer.label();
+            if !qdeq0_keys.iter().any(|(l, s, _)| *l == label && *s == c.seed) {
+                qdeq0_keys.push((label.clone(), c.seed, c.quantizer));
+            }
+            if c.method == Method::Qer
+                && !resid_keys
+                    .iter()
+                    .any(|(l, k, s, _)| *l == label && *k == c.scaling && *s == c.seed)
+            {
+                resid_keys.push((label, c.scaling, c.seed, c.quantizer));
+            }
+        }
+    }
+    SweepKeys { kinds, spectra_keys, qdeq0_keys, resid_keys, prep_rank, any_hessian }
+}
+
+/// One phase-A k=0 quantization: the salted-seed stream every path —
+/// per-config `run_ptq`, in-process sweep, shard prep job — must open
+/// identically for cell (`seed`, quantizer) on the layer with `salt`.
+pub(crate) fn compute_qdeq0(
+    w: &Mat,
+    hessian: Option<&Mat>,
+    spec: &QuantizerSpec,
+    seed: u64,
+    salt: u64,
+) -> (Mat, Option<PackedMat>) {
+    let hess = if spec.needs_hessian() { hessian.cloned() } else { None };
+    let ctx = QuantCtx { hessian: hess, seed: seed ^ salt };
+    spec.build().quantize_coded(w, &ctx)
+}
+
+/// One phase-A prepared-spectra computation (same salting contract as
+/// [`compute_qdeq0`]).
+pub(crate) fn compute_spectra(
+    w: &Mat,
+    scaling: &Scaling,
+    prep_rank: usize,
+    seed: u64,
+    salt: u64,
+) -> PreparedSpectra {
+    PreparedSpectra::compute(w, scaling, prep_rank, N_ITER, seed ^ salt)
+}
+
+/// One phase-B1 shared plain-QER residual SVD — the same stream
+/// `reconstruct_prepared` would open for this cfg.
+pub(crate) fn compute_resid_svd(
+    w: &Mat,
+    qdeq: &Mat,
+    scaling: &Scaling,
+    prep_rank: usize,
+    seed: u64,
+    salt: u64,
+) -> Svd {
+    let mut rng = Rng::new((seed ^ salt) ^ RESID_SALT);
+    let resid = scaling.apply(&w.sub(qdeq));
+    randomized_svd(&resid, prep_rank, N_ITER, &mut rng)
 }
 
 /// The shared artifacts one phase-B2 job consumes, borrowed from a

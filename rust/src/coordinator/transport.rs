@@ -23,8 +23,10 @@
 //!   workflow).
 //! * [`FaultTransport`] — a deterministic fault-injection double for
 //!   tests: a seeded [`FaultPlan`] chops writes into short chunks,
-//!   delays flushes, severs either direction mid-frame, and flips bits
-//!   on the receive path, so the dispatcher's death/requeue handling is
+//!   delays flushes, severs either direction mid-frame, flips bits on
+//!   the receive path, and *wedges* the worker→host direction (silent
+//!   stall without EOF — the failure only per-job heartbeat expiry can
+//!   see), so the dispatcher's death/wedge/requeue handling is
 //!   exercised without real processes or sockets.
 //!
 //! [`ShardSession`]: super::shard::ShardSession
@@ -398,28 +400,9 @@ impl ShardHost {
                 );
             }
             match self.listener.accept() {
-                Ok((mut stream, peer)) => {
-                    let _ = stream.set_nonblocking(false);
-                    let done_tx = done_tx.clone();
+                Ok((stream, peer)) => {
                     in_flight += 1;
-                    std::thread::spawn(move || {
-                        let res = match handshake_tcp(&mut stream, false, 0) {
-                            Ok(token) => {
-                                match TcpTransport::from_stream(stream, token, None) {
-                                    Ok(t) => Some(t),
-                                    Err(e) => {
-                                        eprintln!("shard host: dropping {peer}: {e:#}");
-                                        None
-                                    }
-                                }
-                            }
-                            Err(e) => {
-                                eprintln!("shard host: refusing {peer}: {e}");
-                                None
-                            }
-                        };
-                        let _ = done_tx.send(res);
-                    });
+                    spawn_handshake(stream, peer, done_tx.clone());
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(25));
@@ -429,6 +412,63 @@ impl ShardHost {
         }
         Ok(out)
     }
+
+    /// Persistent accept loop for **mid-run joins**: every dial-in that
+    /// passes the worker handshake is handed to `admit`, until `stop`
+    /// goes true. Handshakes run on their own threads (like
+    /// [`accept_workers`](ShardHost::accept_workers)), so a silent
+    /// connection cannot stall later joiners. Runs on a dedicated
+    /// thread owned by the shard session while `run_jobs` executes.
+    pub fn accept_loop(
+        &self,
+        stop: &std::sync::atomic::AtomicBool,
+        admit: impl Fn(TcpTransport),
+    ) {
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<Option<TcpTransport>>();
+        while !stop.load(std::sync::atomic::Ordering::Acquire) {
+            while let Ok(res) = done_rx.try_recv() {
+                if let Some(t) = res {
+                    admit(t);
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => spawn_handshake(stream, peer, done_tx.clone()),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => {
+                    eprintln!("shard host: accept loop stopping: {e}");
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Handshake one accepted dial-in on its own thread, reporting the
+/// admitted transport (or `None` for a refused/broken peer) on `done`.
+fn spawn_handshake(
+    mut stream: TcpStream,
+    peer: SocketAddr,
+    done: std::sync::mpsc::Sender<Option<TcpTransport>>,
+) {
+    let _ = stream.set_nonblocking(false);
+    std::thread::spawn(move || {
+        let res = match handshake_tcp(&mut stream, false, 0) {
+            Ok(token) => match TcpTransport::from_stream(stream, token, None) {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    eprintln!("shard host: dropping {peer}: {e:#}");
+                    None
+                }
+            },
+            Err(e) => {
+                eprintln!("shard host: refusing {peer}: {e}");
+                None
+            }
+        };
+        let _ = done.send(res);
+    });
 }
 
 /// Worker-side TCP entry: dial `addr` and handshake as a worker,
@@ -511,6 +551,18 @@ pub struct FaultPlan {
     /// parser would then wait for bytes the peer never sends, a stall
     /// no liveness probe can see.
     pub corrupt_rx: Option<(u64, u8)>,
+    /// **wedge**: after this many worker→host bytes, stop delivering —
+    /// no further bytes, no EOF, connection still "open". Unlike the
+    /// cuts, nothing in-band ever tells the host the worker is gone;
+    /// only per-job heartbeat expiry can recover. The stall lifts when
+    /// [`stall_rx_resume`](FaultPlan::stall_rx_resume) elapses or the
+    /// host [`kill`](Transport::kill)s the transport (which surfaces as
+    /// EOF to the parked reader thread).
+    pub stall_rx_after: Option<u64>,
+    /// lift the stall after this long (`None` = wedged forever): the
+    /// stall-then-resume schedule, where late frames from the requeued
+    /// window arrive after the host already re-dispatched the jobs
+    pub stall_rx_resume: Option<Duration>,
 }
 
 struct FaultWriter {
@@ -562,12 +614,45 @@ struct FaultReader {
     inner: Box<dyn Read + Send>,
     cut_after: Option<u64>,
     corrupt: Option<(u64, u8)>,
+    stall_after: Option<u64>,
+    stall_resume: Option<Duration>,
+    stall_started: Option<Instant>,
+    /// set by [`FaultTransport::kill`]: severs a stalled (or future)
+    /// read with EOF, exactly what a real socket shutdown does to a
+    /// parked reader thread
+    severed: std::sync::Arc<std::sync::atomic::AtomicBool>,
     read: u64,
 }
 
 impl Read for FaultReader {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        use std::sync::atomic::Ordering;
         let mut limit = buf.len();
+        if self.severed.load(Ordering::Acquire) {
+            return Ok(0);
+        }
+        if let Some(at) = self.stall_after {
+            if self.read >= at {
+                // wedged: neither bytes nor EOF. Poll for the two ways
+                // out — the schedule's resume point, or the host
+                // severing the transport after heartbeat expiry.
+                let started = *self.stall_started.get_or_insert_with(Instant::now);
+                loop {
+                    if self.severed.load(Ordering::Acquire) {
+                        return Ok(0);
+                    }
+                    match self.stall_resume {
+                        Some(resume) if started.elapsed() >= resume => {
+                            self.stall_after = None;
+                            break;
+                        }
+                        _ => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+            } else {
+                limit = limit.min((at - self.read) as usize);
+            }
+        }
         if let Some(cut) = self.cut_after {
             if self.read >= cut {
                 return Ok(0); // EOF mid-frame
@@ -592,6 +677,10 @@ impl Read for FaultReader {
 pub struct FaultTransport {
     writer: Option<FaultWriter>,
     reader: Option<FaultReader>,
+    /// shared with the reader (which may already live on the session's
+    /// reader thread when `kill` runs): setting it delivers EOF, even to
+    /// a read parked inside a stall
+    severed: std::sync::Arc<std::sync::atomic::AtomicBool>,
 }
 
 impl FaultTransport {
@@ -602,6 +691,7 @@ impl FaultTransport {
         from_peer: impl Read + Send + 'static,
         plan: FaultPlan,
     ) -> Self {
+        let severed = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         FaultTransport {
             writer: Some(FaultWriter {
                 inner: Some(Box::new(to_peer)),
@@ -614,8 +704,13 @@ impl FaultTransport {
                 inner: Box::new(from_peer),
                 cut_after: plan.cut_rx_after,
                 corrupt: plan.corrupt_rx,
+                stall_after: plan.stall_rx_after,
+                stall_resume: plan.stall_rx_resume,
+                stall_started: None,
+                severed: severed.clone(),
                 read: 0,
             }),
+            severed,
         }
     }
 }
@@ -643,6 +738,7 @@ impl Transport for FaultTransport {
     fn wait(&mut self) {}
 
     fn kill(&mut self) {
+        self.severed.store(true, std::sync::atomic::Ordering::Release);
         self.writer = None;
         self.reader = None;
     }
@@ -802,6 +898,53 @@ mod tests {
         );
         let mut r = t.take_reader().expect("reader");
         assert!(matches!(read_frame(&mut r), Err(WireError::Truncated)));
+    }
+
+    /// A wedged (stalled, never closed) rx direction parks the reader
+    /// without EOF; `kill` severs it, and a scheduled resume delivers
+    /// the frame intact, just late.
+    #[test]
+    fn stalled_rx_parks_until_kill_or_resume() {
+        let frame = Frame { kind: 6, payload: vec![3u8; 64] };
+
+        // wedge forever: the read parks; kill() surfaces EOF mid-frame
+        let (mut src_w, from_peer) = byte_pipe(1 << 12);
+        frame.write_to(&mut src_w).unwrap();
+        let (to_peer, _keep_r) = byte_pipe(16);
+        let mut t = FaultTransport::new(
+            to_peer,
+            from_peer,
+            FaultPlan { stall_rx_after: Some(20), ..Default::default() },
+        );
+        let mut r = t.take_reader().expect("reader");
+        let parked = std::thread::spawn(move || read_frame(&mut r));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!parked.is_finished(), "reader must be parked inside the stall");
+        t.kill();
+        assert!(matches!(parked.join().unwrap(), Err(WireError::Truncated)));
+
+        // stall-then-resume: the frame arrives intact, just late
+        let (mut src_w, from_peer) = byte_pipe(1 << 12);
+        frame.write_to(&mut src_w).unwrap();
+        drop(src_w);
+        let (to_peer, _keep_r) = byte_pipe(16);
+        let mut t = FaultTransport::new(
+            to_peer,
+            from_peer,
+            FaultPlan {
+                stall_rx_after: Some(20),
+                stall_rx_resume: Some(Duration::from_millis(30)),
+                ..Default::default()
+            },
+        );
+        let mut r = t.take_reader().expect("reader");
+        let t0 = Instant::now();
+        let got = read_frame(&mut r).unwrap().expect("one frame");
+        assert_eq!(got, frame);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "resume must actually have delayed delivery"
+        );
     }
 
     /// Minimal duplex adapter for driving `handshake_io` over two

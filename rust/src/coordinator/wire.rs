@@ -85,6 +85,15 @@ pub mod kind {
     /// of [`read_frame`](super::read_frame) *are* the handshake — a
     /// stale binary is refused before any job bytes flow.
     pub const HELLO: u8 = 9;
+    /// worker→host: "job N is still making progress" — emitted per
+    /// in-flight job at a fixed cadence so the host can tell a slow
+    /// worker from a wedged one and requeue on silence.
+    pub const HEARTBEAT: u8 = 10;
+    /// host→worker: one phase-A preparation job (a whole layer's
+    /// quantized bases, spectra, and residual SVDs)
+    pub const PREP_JOB: u8 = 11;
+    /// worker→host: a prep job's artifacts (blobs precede this frame)
+    pub const PREP_RESULT: u8 = 12;
 }
 
 /// Content-address of a blob: 128-bit FNV over its encoded bytes.
@@ -1086,6 +1095,54 @@ pub enum FleetOut {
     Partials(Vec<(f64, f64)>),
 }
 
+/// One phase-A preparation job: every shared artifact of one layer —
+/// k=0 quantized bases, SRR spectra, plain-QER residual SVDs — computed
+/// on a worker instead of serializing on the host. The key vectors
+/// mirror the dedup loop of the in-process
+/// [`SweepRunner::prepare`](super::sweep::SweepRunner); the worker runs
+/// the same salted-seed functions on the same f32 inputs, so the
+/// artifacts are bit-identical to the host computing them itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrepJobMsg {
+    /// layer index into the sweep's linear list (doubles as job id)
+    pub job_id: u64,
+    /// the linear's parameter name (seeds the layer salt)
+    pub layer_name: String,
+    /// the grid's preparation rank (bit-identity contract)
+    pub prep_rank: usize,
+    /// original weight blob
+    pub w: BlobRef,
+    /// activation scalings, one per distinct kind in the grid (computed
+    /// on the host — they need the calibration set)
+    pub scalings: Vec<(ScalingKind, WireScaling)>,
+    /// GPTQ Hessian blob (when any quantizer in the grid needs one)
+    pub hessian: Option<BlobRef>,
+    /// distinct (quantizer label, seed, spec) cells needing a k=0 base
+    pub qdeq0: Vec<(String, u64, QuantizerSpec)>,
+    /// distinct (scaling kind, seed) cells needing SRR spectra
+    pub spectra: Vec<(ScalingKind, u64)>,
+    /// distinct (label, scaling kind, seed, spec) cells needing a shared
+    /// plain-QER residual SVD
+    pub resid: Vec<(String, ScalingKind, u64, QuantizerSpec)>,
+}
+
+/// A completed prep job: one entry per key of the corresponding
+/// [`PrepJobMsg`], in the same order. Blob frames for the referenced
+/// artifacts precede this frame on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrepResultMsg {
+    /// echoes [`PrepJobMsg::job_id`]
+    pub job_id: u64,
+    /// per [`PrepJobMsg::qdeq0`] key: dense base blob + packed encoding
+    pub qdeq0: Vec<(BlobRef, Option<BlobRef>)>,
+    /// per [`PrepJobMsg::spectra`] key
+    pub spectra: Vec<WireSpectra>,
+    /// per [`PrepJobMsg::resid`] key
+    pub resid: Vec<WireSvd>,
+    /// worker seconds spent preparing the layer
+    pub prep_secs: f64,
+}
+
 fn put_wire_svd(w: &mut WireWriter, s: &WireSvd) {
     w.put_u128(s.u);
     w.put_f32s(&s.s);
@@ -1138,15 +1195,8 @@ fn get_wire_base(r: &mut WireReader) -> Result<WireBase, WireError> {
     })
 }
 
-/// Encode a sweep job into its frame.
-pub fn encode_sweep_job(m: &SweepJobMsg) -> Frame {
-    let mut w = WireWriter::new();
-    w.put_u64(m.job_id);
-    w.put_usize(m.prep_rank);
-    put_sweep_config(&mut w, &m.config);
-    w.put_str(&m.layer_name);
-    w.put_u128(m.w);
-    match &m.scaling {
+fn put_wire_scaling(w: &mut WireWriter, s: &WireScaling) {
+    match s {
         WireScaling::Identity => w.put_u8(0),
         WireScaling::Diagonal { d, d_inv } => {
             w.put_u8(1);
@@ -1159,18 +1209,51 @@ pub fn encode_sweep_job(m: &SweepJobMsg) -> Frame {
             w.put_u128(*s_inv);
         }
     }
+}
+
+fn get_wire_scaling(r: &mut WireReader) -> Result<WireScaling, WireError> {
+    Ok(match r.get_u8()? {
+        0 => WireScaling::Identity,
+        1 => WireScaling::Diagonal { d: r.get_f32s()?, d_inv: r.get_f32s()? },
+        2 => WireScaling::Full { s: r.get_u128()?, s_inv: r.get_u128()? },
+        _ => return Err(WireError::Malformed("bad scaling tag")),
+    })
+}
+
+fn put_wire_spectra(w: &mut WireWriter, sp: &WireSpectra) {
+    put_wire_svd(w, &sp.sw);
+    w.put_f64(sp.sw_frob2);
+    put_wire_svd(w, &sp.se);
+    w.put_f64(sp.se_frob2);
+    w.put_usize(sp.rank);
+    w.put_u64(sp.seed);
+}
+
+fn get_wire_spectra(r: &mut WireReader) -> Result<WireSpectra, WireError> {
+    Ok(WireSpectra {
+        sw: get_wire_svd(r)?,
+        sw_frob2: r.get_f64()?,
+        se: get_wire_svd(r)?,
+        se_frob2: r.get_f64()?,
+        rank: r.get_usize()?,
+        seed: r.get_u64()?,
+    })
+}
+
+/// Encode a sweep job into its frame.
+pub fn encode_sweep_job(m: &SweepJobMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    w.put_usize(m.prep_rank);
+    put_sweep_config(&mut w, &m.config);
+    w.put_str(&m.layer_name);
+    w.put_u128(m.w);
+    put_wire_scaling(&mut w, &m.scaling);
     put_opt(&mut w, &m.hessian, |w, h| w.put_u128(*h));
     put_opt(&mut w, &m.qdeq0, |w, h| w.put_u128(*h));
     put_opt(&mut w, &m.qdeq0_packed, |w, h| w.put_u128(*h));
     put_opt(&mut w, &m.resid, put_wire_svd);
-    put_opt(&mut w, &m.spectra, |w, sp| {
-        put_wire_svd(w, &sp.sw);
-        w.put_f64(sp.sw_frob2);
-        put_wire_svd(w, &sp.se);
-        w.put_f64(sp.se_frob2);
-        w.put_usize(sp.rank);
-        w.put_u64(sp.seed);
-    });
+    put_opt(&mut w, &m.spectra, put_wire_spectra);
     Frame { kind: kind::SWEEP_JOB, payload: w.into_bytes() }
 }
 
@@ -1183,26 +1266,12 @@ pub fn decode_sweep_job(payload: &[u8]) -> Result<SweepJobMsg, WireError> {
         config: get_sweep_config(&mut r)?,
         layer_name: r.get_str()?,
         w: r.get_u128()?,
-        scaling: match r.get_u8()? {
-            0 => WireScaling::Identity,
-            1 => WireScaling::Diagonal { d: r.get_f32s()?, d_inv: r.get_f32s()? },
-            2 => WireScaling::Full { s: r.get_u128()?, s_inv: r.get_u128()? },
-            _ => return Err(WireError::Malformed("bad scaling tag")),
-        },
+        scaling: get_wire_scaling(&mut r)?,
         hessian: get_opt(&mut r, |r| r.get_u128())?,
         qdeq0: get_opt(&mut r, |r| r.get_u128())?,
         qdeq0_packed: get_opt(&mut r, |r| r.get_u128())?,
         resid: get_opt(&mut r, get_wire_svd)?,
-        spectra: get_opt(&mut r, |r| {
-            Ok(WireSpectra {
-                sw: get_wire_svd(r)?,
-                sw_frob2: r.get_f64()?,
-                se: get_wire_svd(r)?,
-                se_frob2: r.get_f64()?,
-                rank: r.get_usize()?,
-                seed: r.get_u64()?,
-            })
-        })?,
+        spectra: get_opt(&mut r, get_wire_spectra)?,
     })
 }
 
@@ -1349,9 +1418,143 @@ pub fn decode_fleet_result(payload: &[u8]) -> Result<FleetResultMsg, WireError> 
     Ok(FleetResultMsg { job_id, out })
 }
 
+/// Encode a prep job into its frame.
+pub fn encode_prep_job(m: &PrepJobMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    w.put_str(&m.layer_name);
+    w.put_usize(m.prep_rank);
+    w.put_u128(m.w);
+    w.put_usize(m.scalings.len());
+    for (k, s) in &m.scalings {
+        put_scaling_kind(&mut w, *k);
+        put_wire_scaling(&mut w, s);
+    }
+    put_opt(&mut w, &m.hessian, |w, h| w.put_u128(*h));
+    w.put_usize(m.qdeq0.len());
+    for (label, seed, spec) in &m.qdeq0 {
+        w.put_str(label);
+        w.put_u64(*seed);
+        put_quantizer(&mut w, spec);
+    }
+    w.put_usize(m.spectra.len());
+    for (k, seed) in &m.spectra {
+        put_scaling_kind(&mut w, *k);
+        w.put_u64(*seed);
+    }
+    w.put_usize(m.resid.len());
+    for (label, k, seed, spec) in &m.resid {
+        w.put_str(label);
+        put_scaling_kind(&mut w, *k);
+        w.put_u64(*seed);
+        put_quantizer(&mut w, spec);
+    }
+    Frame { kind: kind::PREP_JOB, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::PREP_JOB`] payload.
+pub fn decode_prep_job(payload: &[u8]) -> Result<PrepJobMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    let job_id = r.get_u64()?;
+    let layer_name = r.get_str()?;
+    let prep_rank = r.get_usize()?;
+    let w = r.get_u128()?;
+    let n_scalings = r.get_usize()?;
+    let mut scalings = Vec::with_capacity(n_scalings.min(1 << 8));
+    for _ in 0..n_scalings {
+        let k = get_scaling_kind(&mut r)?;
+        scalings.push((k, get_wire_scaling(&mut r)?));
+    }
+    let hessian = get_opt(&mut r, |r| r.get_u128())?;
+    let n_qdeq0 = r.get_usize()?;
+    let mut qdeq0 = Vec::with_capacity(n_qdeq0.min(1 << 16));
+    for _ in 0..n_qdeq0 {
+        let label = r.get_str()?;
+        let seed = r.get_u64()?;
+        qdeq0.push((label, seed, get_quantizer(&mut r)?));
+    }
+    let n_spectra = r.get_usize()?;
+    let mut spectra = Vec::with_capacity(n_spectra.min(1 << 16));
+    for _ in 0..n_spectra {
+        let k = get_scaling_kind(&mut r)?;
+        spectra.push((k, r.get_u64()?));
+    }
+    let n_resid = r.get_usize()?;
+    let mut resid = Vec::with_capacity(n_resid.min(1 << 16));
+    for _ in 0..n_resid {
+        let label = r.get_str()?;
+        let k = get_scaling_kind(&mut r)?;
+        let seed = r.get_u64()?;
+        resid.push((label, k, seed, get_quantizer(&mut r)?));
+    }
+    Ok(PrepJobMsg { job_id, layer_name, prep_rank, w, scalings, hessian, qdeq0, spectra, resid })
+}
+
+/// Encode a prep result into its frame.
+pub fn encode_prep_result(m: &PrepResultMsg) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(m.job_id);
+    w.put_usize(m.qdeq0.len());
+    for (dense, packed) in &m.qdeq0 {
+        w.put_u128(*dense);
+        put_opt(&mut w, packed, |w, h| w.put_u128(*h));
+    }
+    w.put_usize(m.spectra.len());
+    for sp in &m.spectra {
+        put_wire_spectra(&mut w, sp);
+    }
+    w.put_usize(m.resid.len());
+    for svd in &m.resid {
+        put_wire_svd(&mut w, svd);
+    }
+    w.put_f64(m.prep_secs);
+    Frame { kind: kind::PREP_RESULT, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::PREP_RESULT`] payload.
+pub fn decode_prep_result(payload: &[u8]) -> Result<PrepResultMsg, WireError> {
+    let mut r = WireReader::new(payload);
+    let job_id = r.get_u64()?;
+    let n_qdeq0 = r.get_usize()?;
+    let mut qdeq0 = Vec::with_capacity(n_qdeq0.min(1 << 16));
+    for _ in 0..n_qdeq0 {
+        let dense = r.get_u128()?;
+        qdeq0.push((dense, get_opt(&mut r, |r| r.get_u128())?));
+    }
+    let n_spectra = r.get_usize()?;
+    let mut spectra = Vec::with_capacity(n_spectra.min(1 << 16));
+    for _ in 0..n_spectra {
+        spectra.push(get_wire_spectra(&mut r)?);
+    }
+    let n_resid = r.get_usize()?;
+    let mut resid = Vec::with_capacity(n_resid.min(1 << 16));
+    for _ in 0..n_resid {
+        resid.push(get_wire_svd(&mut r)?);
+    }
+    let prep_secs = r.get_f64()?;
+    Ok(PrepResultMsg { job_id, qdeq0, spectra, resid, prep_secs })
+}
+
 /// The empty [`kind::SHUTDOWN`] frame.
 pub fn shutdown_frame() -> Frame {
     Frame { kind: kind::SHUTDOWN, payload: Vec::new() }
+}
+
+/// Encode a [`kind::HEARTBEAT`] frame for an in-flight job.
+pub fn encode_heartbeat(job_id: u64) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(job_id);
+    Frame { kind: kind::HEARTBEAT, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::HEARTBEAT`] payload into its job id.
+pub fn decode_heartbeat(payload: &[u8]) -> Result<u64, WireError> {
+    let mut r = WireReader::new(payload);
+    let job_id = r.get_u64()?;
+    if !r.is_done() {
+        return Err(WireError::Malformed("heartbeat trailing bytes"));
+    }
+    Ok(job_id)
 }
 
 /// Encode a [`kind::HELLO`] handshake frame. `worker` is the sender's
@@ -1764,6 +1967,98 @@ mod tests {
             decode_hello(&long),
             Err(WireError::Malformed("hello trailing bytes"))
         ));
+    }
+
+    #[test]
+    fn heartbeat_round_trips_and_rejects_garbage() {
+        for job in [0u64, 17, u64::MAX] {
+            let fr = roundtrip(&encode_heartbeat(job));
+            assert_eq!(fr.kind, kind::HEARTBEAT);
+            assert_eq!(decode_heartbeat(&fr.payload).unwrap(), job);
+        }
+        assert!(decode_heartbeat(&[1u8, 2]).is_err());
+        let mut long = encode_heartbeat(3).payload;
+        long.push(0);
+        assert!(matches!(
+            decode_heartbeat(&long),
+            Err(WireError::Malformed("heartbeat trailing bytes"))
+        ));
+    }
+
+    /// Prep job/result messages round-trip bit-exactly with every key
+    /// vector populated and empty.
+    #[test]
+    fn prop_prep_messages_round_trip() {
+        prop::check(0x93E9, 8, |g| {
+            let h = g.rng.next_u64() as u128;
+            let empty = g.rng.below(4) == 0;
+            let job = PrepJobMsg {
+                job_id: g.rng.next_u64(),
+                layer_name: "l1.wo".into(),
+                prep_rank: g.dim(32),
+                w: h,
+                scalings: if empty {
+                    vec![]
+                } else {
+                    vec![
+                        (ScalingKind::Identity, WireScaling::Identity),
+                        (
+                            ScalingKind::DiagRms,
+                            WireScaling::Diagonal { d: vec![1.0, 2.0], d_inv: vec![1.0, 0.5] },
+                        ),
+                        (ScalingKind::Exact, WireScaling::Full { s: h, s_inv: h.wrapping_add(1) }),
+                    ]
+                },
+                hessian: if g.rng.below(2) == 0 { None } else { Some(h) },
+                qdeq0: if empty {
+                    vec![]
+                } else {
+                    vec![
+                        ("mx3".into(), 5, QuantizerSpec::Mxint { bits: 3, block: 32 }),
+                        ("gptq".into(), 7, QuantizerSpec::Gptq { bits: 3, group: 64 }),
+                    ]
+                },
+                spectra: if empty { vec![] } else { vec![(ScalingKind::DiagRms, 5)] },
+                resid: if empty {
+                    vec![]
+                } else {
+                    vec![(
+                        "mx3".into(),
+                        ScalingKind::DiagAbsMean,
+                        9,
+                        QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: false },
+                    )]
+                },
+            };
+            let fr = roundtrip(&encode_prep_job(&job));
+            assert_eq!(fr.kind, kind::PREP_JOB);
+            assert_eq!(decode_prep_job(&fr.payload).unwrap(), job);
+
+            let svd = WireSvd { u: h, s: vec![2.0, 1.0], v: h };
+            let res = PrepResultMsg {
+                job_id: job.job_id,
+                qdeq0: if empty { vec![] } else { vec![(h, None), (h, Some(h))] },
+                spectra: if empty {
+                    vec![]
+                } else {
+                    vec![WireSpectra {
+                        sw: svd.clone(),
+                        sw_frob2: 4.5,
+                        se: svd.clone(),
+                        se_frob2: 0.25,
+                        rank: 8,
+                        seed: 11,
+                    }]
+                },
+                resid: if empty { vec![] } else { vec![svd] },
+                prep_secs: 0.75,
+            };
+            let fr = roundtrip(&encode_prep_result(&res));
+            assert_eq!(fr.kind, kind::PREP_RESULT);
+            assert_eq!(decode_prep_result(&fr.payload).unwrap(), res);
+            assert!(decode_prep_job(&[]).is_err());
+            assert!(decode_prep_result(&[0u8; 3]).is_err());
+        });
     }
 
     /// Satellite: a packed blob whose word buffer disagrees with the

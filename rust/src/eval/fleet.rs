@@ -245,7 +245,10 @@ pub(crate) fn reduce_fleet_results(
     for (gi, group) in groups.iter().enumerate() {
         if group.len() > 1 {
             for (slot, &mi) in sums[&gi].iter().zip(group) {
-                ppl[mi] = (slot.0 / slot.1.max(1.0)).exp();
+                // zero scored tokens (no batches, all-zero masks) stays
+                // NaN — the documented contract shared with
+                // `perplexity_native_masked` — instead of a bogus 1.0
+                ppl[mi] = if slot.1 == 0.0 { f64::NAN } else { (slot.0 / slot.1).exp() };
             }
         }
     }
@@ -265,6 +268,10 @@ pub(crate) fn reduce_fleet_results(
 /// sums reduce in batch order, so results match the per-outcome loop.
 /// The job layout and reduce are shared with the sharded evaluator
 /// (`coordinator::shard`), which runs the same jobs in worker processes.
+///
+/// **Zero-token contract:** a model scored over zero tokens (no
+/// batches, all-zero masks) gets `NaN`, matching
+/// [`perplexity_native_masked`] — never a fabricated finite PPL.
 pub fn fleet_perplexity(
     models: &[&FactoredModel],
     cfg: &ModelCfg,
@@ -444,12 +451,15 @@ mod tests {
         assert_eq!(group_by_shared_bases(&refs).len(), 2);
     }
 
+    /// Regression (zero-token contract): zero batches must surface as
+    /// NaN for every member — singleton and lock-step alike — never as
+    /// a fabricated "perfect" PPL of 1.0.
     #[test]
-    fn empty_batches_yield_unit_ppl() {
+    fn empty_batches_yield_nan_not_bogus_ppl() {
         let cfg = tiny_cfg();
         let params = synth_lm_params(&cfg, 9, cfg.vocab);
         let mut rng = Rng::new(4);
-        let models = rank_variants(
+        let mut models = rank_variants(
             &params,
             &cfg,
             QuantizerSpec::Mxint { bits: 3, block: 32 },
@@ -457,8 +467,18 @@ mod tests {
             1,
             &mut rng,
         );
+        // a singleton with its own buffers exercises the Single path too
+        models.extend(rank_variants(
+            &params,
+            &cfg,
+            QuantizerSpec::Mxint { bits: 3, block: 32 },
+            &[16],
+            2,
+            &mut rng,
+        ));
         let refs: Vec<&FactoredModel> = models.iter().collect();
         let ppl = fleet_perplexity(&refs, &cfg, &[], 2, cfg.seq_len);
-        assert_eq!(ppl, vec![1.0, 1.0]);
+        assert_eq!(ppl.len(), 3);
+        assert!(ppl.iter().all(|p| p.is_nan()), "{ppl:?}");
     }
 }

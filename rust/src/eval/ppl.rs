@@ -45,7 +45,15 @@ pub fn perplexity(
         total_nll += outs[0].as_f32().iter().map(|&x| x as f64).sum::<f64>();
         total_tok += outs[1].as_f32().iter().map(|&x| x as f64).sum::<f64>();
     }
-    Ok((total_nll / total_tok.max(1.0)).exp())
+    // zero scored tokens would make any finite PPL a fabrication —
+    // surface the misconfiguration (empty batch list, all-zero mask)
+    // instead of reporting exp(0/1) = 1.0 as if the model were perfect
+    anyhow::ensure!(
+        total_tok > 0.0,
+        "perplexity over zero scored tokens ({} batches)",
+        batches.len()
+    );
+    Ok((total_nll / total_tok).exp())
 }
 
 /// Rust-native perplexity over any [`ModelWeights`] — the factored QLR
@@ -64,6 +72,13 @@ pub fn perplexity_native(
 /// caller, so loops that score many models over the same batches — the
 /// fleet evaluator, the serving benches — share one allocation instead
 /// of re-building it per call.
+///
+/// **Zero-token contract:** scoring zero tokens (empty batch list,
+/// all-zero mask) returns `NaN`, never a bogus finite PPL — the same
+/// contract as [`crate::eval::fleet::fleet_perplexity`]. The
+/// `Result`-returning engines ([`perplexity`],
+/// [`crate::eval::zeroshot::zero_shot_accuracy`]) make the same
+/// condition a hard error instead.
 pub fn perplexity_native_masked(
     weights: &dyn ModelWeights,
     cfg: &ModelCfg,
@@ -79,7 +94,10 @@ pub fn perplexity_native_masked(
         total_nll += nll.iter().sum::<f64>();
         total_tok += cnt.iter().sum::<f64>();
     }
-    (total_nll / total_tok.max(1.0)).exp()
+    if total_tok == 0.0 {
+        return f64::NAN; // documented zero-token contract
+    }
+    (total_nll / total_tok).exp()
 }
 
 #[cfg(test)]
@@ -125,6 +143,48 @@ mod tests {
         let ppl = perplexity(&mock, "nll", &params, &batches, 2, 3).unwrap();
         assert!(ppl.is_finite());
         assert_eq!(mock.call_count("nll"), 4);
+    }
+
+    /// Regression (zero-token contract): an empty batch list or an
+    /// all-zero token count must never produce a finite "PPL 1.0" — the
+    /// executor path errors, the native path returns NaN.
+    #[test]
+    fn zero_scored_tokens_error_or_nan_not_bogus_ppl() {
+        let mock = MockExecutor::empty().on("nll", |ins| {
+            let b = ins[ins.len() - 2].shape()[0];
+            vec![
+                TensorValue::f32(vec![b], vec![0.0; b]),
+                TensorValue::f32(vec![b], vec![0.0; b]), // zero tokens counted
+            ]
+        });
+        let params = Params::new(vec![]);
+        let err = perplexity(&mock, "nll", &params, &[], 2, 4).unwrap_err();
+        assert!(err.to_string().contains("zero scored tokens"), "{err}");
+        let err =
+            perplexity(&mock, "nll", &params, &[vec![0i32; 8]], 2, 4).unwrap_err();
+        assert!(err.to_string().contains("zero scored tokens"), "{err}");
+
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 24,
+            seq_len: 8,
+        };
+        let native_params = synth_lm_params(&cfg, 11, cfg.vocab);
+        assert!(perplexity_native(&native_params, &cfg, &[], 2, 8).is_nan());
+        let zero_mask = vec![0.0f32; 16];
+        assert!(perplexity_native_masked(
+            &native_params,
+            &cfg,
+            &[vec![1i32; 16]],
+            &zero_mask,
+            2,
+            8
+        )
+        .is_nan());
     }
 
     #[test]

@@ -47,7 +47,15 @@ pub fn zero_shot_accuracy(
         let nll = outs[0].as_f32();
         let cnt = outs[1].as_f32();
         for (row, &(ei, oi, _, _)) in chunk.iter().enumerate() {
-            scores[ei][oi] = nll[row] as f64 / cnt[row].max(1.0) as f64;
+            // only real rows are read (padded rows land past `chunk`),
+            // so a zero token count here is a broken mask, not padding —
+            // erroring beats ranking options by a fabricated score (and
+            // a silent NaN would poison the argmin below)
+            anyhow::ensure!(
+                cnt[row] > 0.0,
+                "zero scored tokens for example {ei} option {oi}"
+            );
+            scores[ei][oi] = nll[row] as f64 / cnt[row] as f64;
         }
     }
 
@@ -118,5 +126,22 @@ mod tests {
         let acc = zero_shot_accuracy(&mock, "nll", &params, &toy_task(), 4, 8).unwrap();
         assert_eq!(mock.call_count("nll"), 2);
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    /// Regression (zero-token contract): a scored row with zero counted
+    /// tokens is an error, never a fabricated per-token score.
+    #[test]
+    fn zero_token_option_is_an_error() {
+        let mock = MockExecutor::empty().on("nll", |ins| {
+            let b = ins[ins.len() - 2].shape()[0];
+            vec![
+                TensorValue::f32(vec![b], vec![1.0; b]),
+                TensorValue::f32(vec![b], vec![0.0; b]),
+            ]
+        });
+        let params = Params::new(vec![]);
+        let err =
+            zero_shot_accuracy(&mock, "nll", &params, &toy_task(), 4, 8).unwrap_err();
+        assert!(err.to_string().contains("zero scored tokens"), "{err}");
     }
 }

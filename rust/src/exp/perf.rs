@@ -621,7 +621,14 @@ fn outcomes_identical(a: &[FactoredOutcome], b: &[FactoredOutcome]) -> bool {
 ///    `tcp_bit_identical` gates equivalence through the TCP transport
 ///    and `tcp_vs_pipe_n2` records the loopback framing overhead — the
 ///    per-byte cost a real remote deployment starts from before network
-///    latency.
+///    latency;
+/// 4. **wedge recovery** — N=2 in-memory workers, one of which goes
+///    silent after its first byte (stream open, no frames, no
+///    heartbeats — only the heartbeat deadline can clear it):
+///    `wedge_recovered` gates that the host declares the wedge,
+///    requeues onto the survivor, and still finishes bit-identically,
+///    and `wedge_recovery_secs` records the end-to-end cost of riding
+///    out a wedged worker at a `wedge_timeout_secs` deadline.
 pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let model = "tiny";
     let fx = ctx.lm(model)?;
@@ -718,6 +725,51 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         (secs, ok)
     };
 
+    // Wedge-recovery leg: one healthy worker plus one that stalls
+    // silently after its first byte. Fresh Metrics so the counters are
+    // unambiguously this leg's. The deadline is generous against the
+    // 100ms worker heartbeat cadence (20×), so a slow CI runner can't
+    // false-positive a healthy worker into a wedge.
+    let wedge_timeout = std::time::Duration::from_millis(2000);
+    let (wedge_secs, wedge_identical, wedge_count, wedge_requeued) = {
+        use crate::coordinator::jobs::byte_pipe;
+        use crate::coordinator::shard::run_worker_paced;
+        use crate::coordinator::{FaultPlan, FaultTransport, Transport};
+        let mk_worker = |plan: FaultPlan| -> Box<dyn Transport> {
+            let (host_to_worker, worker_input) = byte_pipe(1 << 16);
+            let (worker_output, worker_to_host) = byte_pipe(1 << 16);
+            std::thread::spawn(move || {
+                // a severed pipe here is the simulated crash — host's problem
+                let _ = run_worker_paced(
+                    worker_input,
+                    worker_output,
+                    None,
+                    std::time::Duration::from_millis(100),
+                );
+            });
+            Box::new(FaultTransport::new(host_to_worker, worker_to_host, plan))
+        };
+        let wmetrics = Metrics::new();
+        let transports = vec![
+            mk_worker(FaultPlan::default()),
+            mk_worker(FaultPlan { stall_rx_after: Some(1), ..Default::default() }),
+        ];
+        let mut session = ShardSession::from_transports(transports)?;
+        session.set_heartbeat_timeout(wedge_timeout);
+        let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &wmetrics);
+        let t0 = Instant::now();
+        let outs = runner.run_factored(&mut session, &configs)?;
+        let secs = t0.elapsed().as_secs_f64();
+        session.shutdown();
+        (
+            secs,
+            outcomes_identical(&expect, &outs),
+            wmetrics.get("shard.wedged"),
+            wmetrics.get("shard.requeued"),
+        )
+    };
+    let wedge_recovered = wedge_identical && wedge_count >= 1.0;
+
     let record = Json::obj(vec![
         ("model", Json::str(model)),
         ("quick", Json::Bool(ctx.quick)),
@@ -745,11 +797,21 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         ("shard_tx_bytes", Json::num(pipe_tx_bytes)),
         ("shard_rx_bytes", Json::num(pipe_rx_bytes)),
         ("shard_requeued", Json::num(pipe_requeued)),
+        ("wedge_timeout_secs", Json::num(wedge_timeout.as_secs_f64())),
+        ("wedge_recovery_secs", Json::num(wedge_secs)),
+        ("wedge_workers_wedged", Json::num(wedge_count)),
+        ("wedge_requeued", Json::num(wedge_requeued)),
+        ("wedge_recovered", Json::Bool(wedge_recovered)),
     ]);
     bench::write_json("BENCH_shard.json", &record)?;
     anyhow::ensure!(
         tcp_ok,
         "TCP N=2: sharded results diverge from in-process (recorded in BENCH_shard.json)"
+    );
+    anyhow::ensure!(
+        wedge_recovered,
+        "wedge leg: stalled worker not recovered bit-identically \
+         (wedged={wedge_count}, recorded in BENCH_shard.json)"
     );
 
     let mut t = Table::new(
@@ -783,6 +845,12 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         "sharded, N=2 TCP loopback workers".into(),
         f(tcp_secs, 3),
         format!("x{:.2}", shard_secs[0] / tcp_secs.max(1e-9)),
+        "yes".into(),
+    ]);
+    t.row(vec![
+        "sharded, N=2, one wedged (heartbeat requeue)".into(),
+        f(wedge_secs, 3),
+        format!("x{:.2}", shard_secs[0] / wedge_secs.max(1e-9)),
         "yes".into(),
     ]);
     Ok(vec![t])

@@ -4,21 +4,28 @@
 //!   info                       — artifact/model inventory
 //!   ptq    [--model --method --scaling --quantizer --rank --seed]
 //!          [--workers N | --workers tcp:host:port,... | --listen host:port]
+//!          [--heartbeat-timeout S]
 //!                              — quantize a model, report per-layer stats + PPL
 //!                                (runs offline: rust-native factored eval;
 //!                                --workers N spawns local worker processes,
 //!                                --workers tcp:… dials listening remote
 //!                                workers, --listen waits for remote workers
-//!                                to dial in)
+//!                                to dial in; --heartbeat-timeout tunes how
+//!                                long a silent worker may go before being
+//!                                declared wedged and its jobs requeued)
 //!   qpeft  [--task --init --bits --steps --gamma]
 //!                              — fine-tune adapters on a GLUE-sim task
 //!   bench  [ids… | --list] [--quick]
 //!                              — regenerate paper tables/figures
-//!   shard-worker [--exit-after N] [--connect host:port [--token N] | --listen host:port]
+//!   shard-worker [--exit-after N] [--heartbeat-secs S]
+//!                [--connect host:port [--token N] | --listen host:port]
 //!                              — wire-codec job executor over stdin/stdout
 //!                                (spawned by the shard host) or over a
 //!                                handshaken TCP connection (remote workers;
-//!                                not for interactive use)
+//!                                not for interactive use). `--connect` may
+//!                                also join a host *mid-run*: an elastic host
+//!                                keeps its accept loop open and feeds
+//!                                late joiners from the live job queue
 //!
 //! Examples live in `examples/` (quickstart, ptq_sweep, qpeft_finetune,
 //! e2e_train_quantize, shard_sweep).
@@ -126,6 +133,20 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     // worker_threads: 0 lets each local worker size its own pool
     // (SRR_THREADS / available cores); the single-threaded pinning is
     // only for the scaling bench, not for real CLI runs.
+    // --heartbeat-timeout S: a worker whose in-flight jobs go silent for
+    // S seconds is declared wedged — its jobs requeue onto live workers.
+    // Over WANs with long GC/paging pauses, raise it; the default (10 s)
+    // suits LAN and local-pipe fleets.
+    let heartbeat_timeout = match args.get("heartbeat-timeout") {
+        Some(spec) => {
+            let secs: f64 = spec.parse().map_err(|_| {
+                anyhow::anyhow!("--heartbeat-timeout expects seconds, got {spec:?}")
+            })?;
+            anyhow::ensure!(secs > 0.0, "--heartbeat-timeout must be > 0");
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+        None => None,
+    };
     let mut session = if let Some(addr) = args.get("listen") {
         // an unparseable or zero count must not silently turn into the
         // default (pipe mode gives --workers 0 a different meaning)
@@ -141,7 +162,11 @@ fn cmd_ptq(args: &Args) -> Result<()> {
         };
         let deadline = std::time::Duration::from_secs(args.get_u64("accept-timeout", 120));
         println!("listening on {addr} for {n} remote worker(s)…");
-        Some(ShardSession::listen(addr, n, deadline)?)
+        let mut session = ShardSession::listen(addr, n, deadline)?;
+        if let Some(t) = heartbeat_timeout {
+            session.set_heartbeat_timeout(t);
+        }
+        Some(session)
     } else if let Some(spec) = args.get("workers") {
         if spec.contains("tcp:") {
             // every entry must parse — a silently dropped worker address
@@ -159,13 +184,23 @@ fn cmd_ptq(args: &Args) -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
             println!("dialing {} remote worker(s)…", addrs.len());
-            Some(ShardSession::dial(&addrs)?)
+            let mut session = ShardSession::dial(&addrs)?;
+            if let Some(t) = heartbeat_timeout {
+                session.set_heartbeat_timeout(t);
+            }
+            Some(session)
         } else {
             let workers: usize = spec
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--workers expects a count or tcp:host:port list"))?;
             if workers > 0 {
-                let opts = ShardOptions { workers, worker_threads: 0, ..Default::default() };
+                let mut opts =
+                    ShardOptions { workers, worker_threads: 0, ..Default::default() };
+                if let Some(t) = heartbeat_timeout {
+                    // set before spawn so the workers' --heartbeat-secs
+                    // cadence is derived from the same timeout
+                    opts.heartbeat_timeout = t;
+                }
                 Some(ShardSession::spawn(&opts)?)
             } else {
                 None

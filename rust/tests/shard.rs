@@ -2,7 +2,8 @@
 //! `fleet_perplexity_sharded` against real spawned `srr shard-worker`
 //! processes must be bit-identical to the in-process
 //! `SweepRunner::run_factored` + `fleet_perplexity` for N ∈ {1, 2, 4}
-//! workers — including after a worker dies mid-run and its jobs requeue.
+//! workers — including after a worker dies mid-run and its jobs requeue,
+//! and after a fresh worker dials in mid-run and is admitted on the fly.
 //!
 //! Runs offline (no PJRT, no artifacts). The worker binary is resolved
 //! through `SRR_SHARD_BIN`, which cargo provides to integration tests as
@@ -403,4 +404,98 @@ fn tcp_handshake_refuses_version_mismatch() {
     assert_outcomes_identical("dial-in", &expect, &outs);
     session.shutdown();
     let _ = worker.wait();
+}
+
+/// Tentpole acceptance (elasticity): a real `srr shard-worker --connect`
+/// process dialing in *mid-run* is admitted by the host's still-open
+/// accept loop, the merged sweep stays bit-identical, and the grown
+/// fleet then serves the fleet-PPL batch — also bit-identically.
+#[test]
+fn mid_run_connect_join_admits_worker_and_stays_bit_identical() {
+    use srr::coordinator::{ShardHost, Transport};
+    use std::time::Duration;
+
+    let (params, cfg, calib, eval_batches) = setup();
+    let configs = grid();
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+
+    let host = ShardHost::bind("127.0.0.1:0").expect("bind");
+    let addr = host.local_addr().expect("addr").to_string();
+    let spawn_worker = |addr: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_srr"))
+            .arg("shard-worker")
+            .arg("--connect")
+            .arg(addr)
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn worker")
+    };
+
+    // assemble a one-worker fleet, then keep the listener open — the
+    // by-hand equivalent of `ShardSession::listen` on an ephemeral port
+    let mut first = spawn_worker(&addr);
+    let accepted = host
+        .accept_workers(1, Duration::from_secs(30))
+        .expect("first worker dials in");
+    let mut session = ShardSession::from_transports(
+        accepted.into_iter().map(|t| Box::new(t) as Box<dyn Transport>).collect(),
+    )
+    .expect("session over the first worker");
+    session.keep_accepting(host);
+    assert_eq!(session.n_alive(), 1);
+
+    // the joiner dials in while the sweep is running; the dispatcher's
+    // accept loop admits it and feeds it from the live job queue
+    let joiner = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(200));
+            spawn_worker(&addr)
+        })
+    };
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let outs = runner
+        .run_factored(&mut session, &configs)
+        .expect("sweep with a mid-run joiner");
+    assert_outcomes_identical("mid-run join", &expect, &outs);
+    let mut second = joiner.join().unwrap();
+
+    // a short grid can drain before the joiner's handshake lands — poll
+    // the between-batch admission path until the fleet has grown
+    let t0 = std::time::Instant::now();
+    loop {
+        session.admit_pending_joins();
+        if session.n_alive() >= 2 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "joiner never admitted (n_alive={})",
+            session.n_alive()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the grown fleet (incumbent + joiner) carries the fleet batch
+    let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let ppl = fleet_perplexity_sharded(
+        &mut session,
+        &models,
+        &cfg,
+        &eval_batches,
+        2,
+        cfg.seq_len,
+        &metrics,
+    )
+    .expect("fleet over the grown fleet");
+    for (i, (a, b)) in exp_ppl.iter().zip(&ppl).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "join model {i}: ppl {a} vs {b}");
+    }
+    session.shutdown();
+    let _ = first.wait();
+    let _ = second.wait();
 }
