@@ -21,14 +21,25 @@ if not files:
 # refactor cannot silently drop an equivalence assertion by renaming a
 # record or skipping its write: the shard record has to exist and has
 # to prove the TCP transport, not just the pipes, and to prove the
-# heartbeat wedge-recovery path actually fired. (CI always runs
-# `--exp shard`, so a missing record is itself a failure.)
+# heartbeat wedge-recovery path actually fired; the serve record has to
+# prove the block decode kernels stayed bit-identical to the scalar
+# reference. (CI always runs `--exp shard` and `--exp serve`, so a
+# missing record is itself a failure.)
 REQUIRED_FLAGS = {
     "BENCH_shard.json": ["tcp_bit_identical", "wedge_recovered"],
+    "BENCH_serve.json": ["kernel_bit_identical"],
+}
+
+# Numeric fields that MUST be present (finite numbers): the serve
+# roofline accounting, so a kernel regression can't hide by dropping
+# the bytes/FLOPs bookkeeping from the record.
+REQUIRED_NUMBERS = {
+    "BENCH_serve.json": ["decode_bytes", "flops", "achieved_gbps"],
 }
 
 present = {os.path.basename(f) for f in files}
-missing_records = [name for name in REQUIRED_FLAGS if name not in present]
+required_names = set(REQUIRED_FLAGS) | set(REQUIRED_NUMBERS)
+missing_records = [name for name in required_names if name not in present]
 
 
 def is_equiv_key(key: str) -> bool:
@@ -37,7 +48,7 @@ def is_equiv_key(key: str) -> bool:
 
 
 failures = [
-    f"{name}: required bench record missing (was --exp shard run?)"
+    f"{name}: required bench record missing (were --exp shard/serve run?)"
     for name in missing_records
 ]
 checked = 0
@@ -73,6 +84,19 @@ for f in files:
         if not isinstance(data, dict) or data.get(flag) is not True:
             failures.append(
                 f"{f}: required equivalence flag '{flag}' missing or not true"
+            )
+    for field in REQUIRED_NUMBERS.get(os.path.basename(f), []):
+        # bool is an int subclass in python — exclude it explicitly
+        val = data.get(field) if isinstance(data, dict) else None
+        ok = (
+            isinstance(val, (int, float))
+            and not isinstance(val, bool)
+            and val == val  # NaN guard
+            and abs(val) != float("inf")
+        )
+        if not ok:
+            failures.append(
+                f"{f}: required roofline field '{field}' missing or not a finite number"
             )
 
 print(f"bench gate: {len(files)} record(s), {checked} equivalence flag(s) checked")

@@ -19,7 +19,11 @@
 //!   every member's activations stacked, so each base's code row-spans
 //!   are decoded **once per group per batch**
 //!   ([`LinearOp::matmul_grouped`]) while only the cheap per-member
-//!   `L·(R·x)` corrections differ;
+//!   `L·(R·x)` corrections differ — and that one decode runs the
+//!   word-at-a-time block kernels with the stacked activations reusing
+//!   each L1-resident tile (`quant::packed`), so the fleet path rides
+//!   the serving layer's cache-blocked matmul, not a scalar per-code
+//!   loop;
 //! * [`fleet_perplexity`] fans the per-(group, batch) jobs over the
 //!   coordinator worker pool and reduces per-member NLL sums in batch
 //!   order, so every PPL matches the per-outcome

@@ -24,8 +24,102 @@
 //! Property tests in `serve` pin the contract for every packable family.
 //! QuIP#-sim has no packed form (its codes live in a rotated basis) and
 //! falls back to a dense base in the serving layer.
+//!
+//! **Decode kernels.** The serving hot paths ([`PackedMat::decode_span_into`],
+//! [`PackedMat::axpy_span`]) run *block* decode: [`PackedCodes::unpack_span_into`]
+//! pulls one `u64` word (or the straddling pair, fused through a `u128`
+//! shift) from the code buffer per lane block and emits every resident
+//! code with a fixed-trip, branch-free shift+mask loop LLVM can unroll
+//! and autovectorize, monomorphized for the widths the quantizers
+//! actually emit (2, 3, 4, 8 bits) with a generic word-pair path for
+//! 5–7 and a scalar cursor for wide codes. The unpacked lanes then take
+//! an affine map per group in equally fixed `[f32]` chunk loops. The
+//! per-code bit-cursor paths survive as
+//! [`PackedMat::decode_span_into_scalar`] / [`PackedMat::axpy_span_scalar`]:
+//! they are the property-test oracle and the bench baseline the block
+//! kernels must stay bit-identical to (`kernel_bit_identical` in
+//! `BENCH_serve.json`), so the exactness contract above transfers to the
+//! fast paths verbatim.
 
 use crate::tensor::Mat;
+
+/// Codes unpacked per scratch burst in the block decode paths: two
+/// cache lines of `u32` lanes, enough to amortize the per-burst group
+/// bookkeeping while staying comfortably on the stack.
+const DECODE_CHUNK: usize = 128;
+
+/// Word-at-a-time unpack, monomorphized per code width: each block of
+/// `LANES` codes spans at most two `u64` words (`BITS * LANES <= 64`),
+/// which are fused through one `u128` shift so the lane loop below is
+/// branch-free with a fixed trip count — the shape LLVM autovectorizes.
+/// Bit-exact with per-code [`PackedCodes::get`].
+#[inline]
+fn unpack_words<const BITS: usize, const LANES: usize>(
+    words: &[u64],
+    start: usize,
+    out: &mut [u32],
+) {
+    debug_assert!(BITS >= 2 && BITS * LANES <= 64);
+    let mask = ((1u64 << BITS) - 1) as u32;
+    let n = out.len();
+    let mut k = 0usize;
+    while k + LANES <= n {
+        let bit = (start + k) * BITS;
+        let (w, off) = (bit >> 6, bit & 63);
+        // the block needs words[w + 1] iff its bits spill past word w,
+        // and exactly then the spill bits keep w + 1 in bounds
+        let lo = words[w] as u128;
+        let hi = if off + BITS * LANES > 64 { (words[w + 1] as u128) << 64 } else { 0 };
+        let v = ((lo | hi) >> off) as u64;
+        for (lane, slot) in out[k..k + LANES].iter_mut().enumerate() {
+            *slot = ((v >> (lane * BITS)) as u32) & mask;
+        }
+        k += LANES;
+    }
+    while k < n {
+        let bit = (start + k) * BITS;
+        let (w, off) = (bit >> 6, bit & 63);
+        let mut v = words[w] >> off;
+        if off + BITS > 64 {
+            v |= words[w + 1] << (64 - off);
+        }
+        out[k] = (v as u32) & mask;
+        k += 1;
+    }
+}
+
+/// The width-generic twin of [`unpack_words`] for the odd widths without
+/// a monomorphized fast path (5–7 bits): same two-word `u128` fuse, lane
+/// count fixed at 8 so `bits * 8 <= 64` always holds.
+#[inline]
+fn unpack_words_generic(words: &[u64], bits: usize, start: usize, out: &mut [u32]) {
+    const LANES: usize = 8;
+    debug_assert!((2..=8).contains(&bits));
+    let mask = ((1u64 << bits) - 1) as u32;
+    let n = out.len();
+    let mut k = 0usize;
+    while k + LANES <= n {
+        let bit = (start + k) * bits;
+        let (w, off) = (bit >> 6, bit & 63);
+        let lo = words[w] as u128;
+        let hi = if off + bits * LANES > 64 { (words[w + 1] as u128) << 64 } else { 0 };
+        let v = ((lo | hi) >> off) as u64;
+        for (lane, slot) in out[k..k + LANES].iter_mut().enumerate() {
+            *slot = ((v >> (lane * bits)) as u32) & mask;
+        }
+        k += LANES;
+    }
+    while k < n {
+        let bit = (start + k) * bits;
+        let (w, off) = (bit >> 6, bit & 63);
+        let mut v = words[w] >> off;
+        if off + bits > 64 {
+            v |= words[w + 1] << (64 - off);
+        }
+        out[k] = (v as u32) & mask;
+        k += 1;
+    }
+}
 
 /// Flat bit-packed unsigned integer codes.
 #[derive(Clone, Debug)]
@@ -86,6 +180,32 @@ impl PackedCodes {
             v |= self.words[w + 1] << (64 - off);
         }
         (v as u32) & self.mask()
+    }
+
+    /// Unpack `out.len()` consecutive codes starting at code index
+    /// `start`, word-at-a-time (see `unpack_words` above). Bit-exact
+    /// with a per-code [`PackedCodes::get`] loop at any alignment —
+    /// spans may start mid-word and codes may straddle word boundaries
+    /// freely.
+    pub fn unpack_span_into(&self, start: usize, out: &mut [u32]) {
+        debug_assert!(start + out.len() <= self.len);
+        match self.bits {
+            // monomorphized fast paths for the widths quantizers emit
+            2 => unpack_words::<2, 32>(&self.words, start, out),
+            3 => unpack_words::<3, 16>(&self.words, start, out),
+            4 => unpack_words::<4, 16>(&self.words, start, out),
+            8 => unpack_words::<8, 8>(&self.words, start, out),
+            b @ 5..=7 => unpack_words_generic(&self.words, b as usize, start, out),
+            // wide codes (no serving quantizer emits them): scalar cursor
+            _ => {
+                let bits = self.bits as usize;
+                let mut bit = start * bits;
+                for slot in out.iter_mut() {
+                    *slot = self.get_at_bit(bit);
+                    bit += bits;
+                }
+            }
+        }
     }
 
     /// Payload bytes of the packed buffer.
@@ -178,8 +298,59 @@ impl PackedMat {
         self.cols.div_ceil(self.scheme.group_len())
     }
 
-    /// Decode columns `[j0, j1)` of row `i` into `out` (len `j1 - j0`).
+    /// Decode columns `[j0, j1)` of row `i` into `out` (len `j1 - j0`)
+    /// through the block unpacker: codes burst into a stack scratch via
+    /// [`PackedCodes::unpack_span_into`], then each group segment takes
+    /// its affine map in a fixed chunk loop. Bit-exact with
+    /// [`PackedMat::decode_span_into_scalar`] at any span alignment.
     pub fn decode_span_into(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
+        debug_assert_eq!(out.len(), j1 - j0);
+        if self.codes.bits > 16 {
+            // wide codes overflow the i32 lane math; no serving
+            // quantizer emits them, so they keep the reference path
+            self.decode_span_into_scalar(i, j0, j1, out);
+            return;
+        }
+        let glen = self.scheme.group_len();
+        let gpr = self.groups_per_row();
+        let qmax = ((1u32 << (self.codes.bits - 1)) - 1) as i32;
+        let symmetric = self.scheme.is_symmetric();
+        let scales = &self.scales[i * gpr..(i + 1) * gpr];
+        let los: &[f32] = if symmetric { &[] } else { &self.los[i * gpr..(i + 1) * gpr] };
+        let base = i * self.cols;
+        let mut cbuf = [0u32; DECODE_CHUNK];
+        let mut j = j0;
+        while j < j1 {
+            let take = DECODE_CHUNK.min(j1 - j);
+            self.codes.unpack_span_into(base + j, &mut cbuf[..take]);
+            let mut s = 0usize; // burst-local cursor
+            while s < take {
+                let g = (j + s) / glen;
+                let e = (((g + 1) * glen).min(j + take)) - j;
+                let dst = &mut out[j - j0 + s..j - j0 + e];
+                let codes = &cbuf[s..e];
+                let scale = scales[g];
+                if symmetric {
+                    for (slot, &c) in dst.iter_mut().zip(codes) {
+                        *slot = (c as i32 - qmax) as f32 * scale;
+                    }
+                } else {
+                    let lo = los[g];
+                    for (slot, &c) in dst.iter_mut().zip(codes) {
+                        *slot = lo + c as f32 * scale;
+                    }
+                }
+                s = e;
+            }
+            j += take;
+        }
+    }
+
+    /// The pre-kernel per-code bit-cursor decode, retained verbatim as
+    /// the property-test oracle and the bench reference the block
+    /// kernels are measured against (`kernel_bit_identical`).
+    pub fn decode_span_into_scalar(&self, i: usize, j0: usize, j1: usize, out: &mut [f32]) {
         debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
         debug_assert_eq!(out.len(), j1 - j0);
         let glen = self.scheme.group_len();
@@ -218,8 +389,54 @@ impl PackedMat {
     /// Fused serving hot path: `acc[..] += xv · row_i[j0..j1)`, decoding
     /// on the fly with the scalar folded per group (`u = xv · scale`), so
     /// a batch-1 matvec makes a single pass over the codes with no
-    /// intermediate buffer.
+    /// intermediate buffer. Runs the same block unpack as
+    /// [`PackedMat::decode_span_into`]; bit-exact with
+    /// [`PackedMat::axpy_span_scalar`].
     pub fn axpy_span(&self, i: usize, j0: usize, j1: usize, xv: f32, acc: &mut [f32]) {
+        debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
+        debug_assert_eq!(acc.len(), j1 - j0);
+        if self.codes.bits > 16 {
+            self.axpy_span_scalar(i, j0, j1, xv, acc);
+            return;
+        }
+        let glen = self.scheme.group_len();
+        let gpr = self.groups_per_row();
+        let qmax = ((1u32 << (self.codes.bits - 1)) - 1) as i32;
+        let symmetric = self.scheme.is_symmetric();
+        let scales = &self.scales[i * gpr..(i + 1) * gpr];
+        let los: &[f32] = if symmetric { &[] } else { &self.los[i * gpr..(i + 1) * gpr] };
+        let base = i * self.cols;
+        let mut cbuf = [0u32; DECODE_CHUNK];
+        let mut j = j0;
+        while j < j1 {
+            let take = DECODE_CHUNK.min(j1 - j);
+            self.codes.unpack_span_into(base + j, &mut cbuf[..take]);
+            let mut s = 0usize;
+            while s < take {
+                let g = (j + s) / glen;
+                let e = (((g + 1) * glen).min(j + take)) - j;
+                let dst = &mut acc[j - j0 + s..j - j0 + e];
+                let codes = &cbuf[s..e];
+                let u = xv * scales[g];
+                if symmetric {
+                    for (slot, &c) in dst.iter_mut().zip(codes) {
+                        *slot += (c as i32 - qmax) as f32 * u;
+                    }
+                } else {
+                    let xlo = xv * los[g];
+                    for (slot, &c) in dst.iter_mut().zip(codes) {
+                        *slot += xlo + c as f32 * u;
+                    }
+                }
+                s = e;
+            }
+            j += take;
+        }
+    }
+
+    /// The pre-kernel per-code fused axpy, retained verbatim as the
+    /// oracle/bench twin of [`PackedMat::axpy_span`].
+    pub fn axpy_span_scalar(&self, i: usize, j0: usize, j1: usize, xv: f32, acc: &mut [f32]) {
         debug_assert!(i < self.rows && j0 <= j1 && j1 <= self.cols);
         debug_assert_eq!(acc.len(), j1 - j0);
         let glen = self.scheme.group_len();
@@ -352,6 +569,150 @@ mod tests {
                 assert_eq!(codes.get(i), v, "bits={bits} i={i}/{len}");
             }
         });
+    }
+
+    #[test]
+    fn unpack_span_matches_per_code_get() {
+        // every dispatch arm (2/3/4/8 monomorphized, 5..=7 generic
+        // word-pair, >8 scalar cursor), at starts that land mid-word and
+        // spans whose codes straddle u64 boundaries
+        for bits in [2u32, 3, 4, 5, 6, 7, 8, 11, 16, 32] {
+            let len = 517;
+            let modulus = if bits == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << bits };
+            let vals: Vec<u32> =
+                (0..len).map(|i| ((i as u64 * 2654435761 + 977) % modulus) as u32).collect();
+            let mut codes = PackedCodes::zeroed(bits, len);
+            for (i, &v) in vals.iter().enumerate() {
+                codes.set(i, v);
+            }
+            for start in [0usize, 1, 7, 20, 21, 42, 63, 64, 65, 127, 500, len] {
+                for span in [0usize, 1, 5, 13, 16, 17, 64, len - start] {
+                    if start + span > len {
+                        continue;
+                    }
+                    let mut out = vec![0u32; span];
+                    codes.unpack_span_into(start, &mut out);
+                    for (k, &o) in out.iter().enumerate() {
+                        assert_eq!(
+                            o,
+                            vals[start + k],
+                            "bits={bits} start={start} span={span} lane={k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Builds a random [`PackedMat`] of the given family with `bits` in
+    /// 2..=8 and group lengths that misalign against both the chunk
+    /// bursts and the u64 words.
+    fn random_packed(g: &mut prop::Gen) -> PackedMat {
+        let bits = 2 + g.rng.below(7) as u32; // 2..=8
+        let glen = g.choice(&[3usize, 7, 8, 32, 33]);
+        let scheme = match g.rng.below(3) {
+            0 => PackScheme::MxintBlock { bits, block: glen },
+            1 => PackScheme::UniformGroup { bits, group: glen, symmetric: g.rng.below(2) == 0 },
+            _ => PackScheme::GptqGrouped { bits, group: glen },
+        };
+        let rows = g.dim(4);
+        let cols = g.dim(97);
+        let gpr = cols.div_ceil(glen);
+        let mask = (1u64 << bits) - 1;
+        let mut acc = PackAcc::default();
+        for _ in 0..rows {
+            for _ in 0..gpr {
+                acc.scales.push(g.f32_in(0.01, 2.0));
+                if !scheme.is_symmetric() {
+                    acc.los.push(g.f32_in(-3.0, 3.0));
+                }
+            }
+            for _ in 0..cols {
+                acc.codes.push((g.rng.next_u64() & mask) as u32);
+            }
+        }
+        acc.into_packed(rows, cols, scheme)
+    }
+
+    /// Satellite invariant: block-kernel span decode and fused axpy are
+    /// bit-exact with the scalar reference AND with `dequantize()` for
+    /// **unaligned** spans — `j0`/`j1` landing mid-group, codes
+    /// straddling u64 word boundaries — across all three `PackScheme`
+    /// families × bits 2..=8. Failures print a `replay seed: 0x…`;
+    /// re-run one case via `util::prop::replay(seed, |g| { same body })`.
+    #[test]
+    fn prop_unaligned_span_decode_is_bit_exact() {
+        prop::check(0xB10CDE, 40, |g| {
+            let p = random_packed(g);
+            let (rows, cols) = (p.rows, p.cols);
+            let full = p.dequantize();
+            for _ in 0..8 {
+                let i = g.rng.below(rows);
+                let j0 = g.rng.below(cols);
+                let j1 = j0 + g.rng.below(cols - j0 + 1);
+                let w = j1 - j0;
+                let mut fast = vec![0.0f32; w];
+                let mut slow = vec![0.0f32; w];
+                p.decode_span_into(i, j0, j1, &mut fast);
+                p.decode_span_into_scalar(i, j0, j1, &mut slow);
+                for (k, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "decode {:?} row {i} span {j0}..{j1} lane {k}",
+                        p.scheme
+                    );
+                }
+                for (k, (a, b)) in fast.iter().zip(&full.row(i)[j0..j1]).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "decode vs dequantize {:?} row {i} span {j0}..{j1} lane {k}",
+                        p.scheme
+                    );
+                }
+
+                let xv = g.f32_in(-2.0, 2.0);
+                let mut acc_fast: Vec<f32> = (0..w).map(|_| g.f32_in(-1.0, 1.0)).collect();
+                let mut acc_slow = acc_fast.clone();
+                p.axpy_span(i, j0, j1, xv, &mut acc_fast);
+                p.axpy_span_scalar(i, j0, j1, xv, &mut acc_slow);
+                for (k, (a, b)) in acc_fast.iter().zip(&acc_slow).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "axpy {:?} row {i} span {j0}..{j1} lane {k}",
+                        p.scheme
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wide_codes_decode_through_scalar_fallback() {
+        // 17-bit codes take the bits>16 delegation; the two paths must
+        // still agree bit-for-bit
+        let scheme = PackScheme::UniformGroup { bits: 17, group: 5, symmetric: true };
+        let (rows, cols) = (2usize, 13usize);
+        let gpr = cols.div_ceil(5);
+        let mut acc = PackAcc::default();
+        for i in 0..rows {
+            for gidx in 0..gpr {
+                acc.scales.push(0.25 + (i + gidx) as f32 * 0.5);
+            }
+            for j in 0..cols {
+                acc.codes.push(((i * cols + j) * 7919 % (1 << 17)) as u32);
+            }
+        }
+        let p = acc.into_packed(rows, cols, scheme);
+        for i in 0..rows {
+            let mut fast = vec![0.0f32; cols];
+            let mut slow = vec![0.0f32; cols];
+            p.decode_span_into(i, 0, cols, &mut fast);
+            p.decode_span_into_scalar(i, 0, cols, &mut slow);
+            assert_eq!(fast, slow, "row {i}");
+        }
     }
 
     #[test]

@@ -13,6 +13,16 @@
 //!   materialized. The streamed base splits into column stripes across
 //!   the worker pool, so even a batch-1 matvec parallelizes (the dense
 //!   GEMM path parallelizes over batch rows and degenerates there).
+//!   Within a stripe the decode runs the word-at-a-time block kernels
+//!   (`quant::packed`): batches stream row-panel × group-aligned column
+//!   tiles sized to L1 so every unpacked panel is reused by all samples
+//!   while cache-hot, and batch-1 takes [`LinearOp::matvec`] — a
+//!   borrowing path that folds `xv·scale` into the unpack
+//!   ([`PackedMat::axpy_span`]) and accumulates the `(x·L)·R` correction
+//!   into the same stripe tile, one pass over the codes per token. The
+//!   pre-kernel scalar paths stay callable
+//!   ([`LinearOp::matvec_scalar_ref`], [`packed_matmul_scalar_ref`]) as
+//!   the bit-identity oracle and measured-against bench baseline.
 //! * [`QuantBase`] — the quantized base: bit-packed codes
 //!   ([`PackedMat`], 4–8× smaller than f32 at 2–4 bits) or a dense
 //!   fallback for quantizers without a packed format (QuIP#-sim).
@@ -185,8 +195,16 @@ impl LinearOp {
 
     /// y = x · W for a batch x (rows = samples). The factored form
     /// evaluates `x·Qdeq + (x·L)·R`, streaming the base from packed
-    /// codes; `W_hat` is never materialized.
+    /// codes; `W_hat` is never materialized. A single-row batch takes
+    /// the fused [`LinearOp::matvec`] path (correction folded into the
+    /// base pass); larger batches run the cache-blocked tile decode.
     pub fn matmul(&self, x: &Mat) -> Mat {
+        if x.rows == 1 {
+            if let LinearOp::FactoredQlr { .. } = self {
+                let y = self.matvec(x.row(0));
+                return Mat::from_vec(1, self.out_dim(), y);
+            }
+        }
         match self {
             LinearOp::Dense(w) => matmul(x, w),
             LinearOp::FactoredQlr { base, l, r } => {
@@ -202,11 +220,59 @@ impl LinearOp {
         }
     }
 
-    /// Single-token serving: y = x · W for one activation row.
+    /// Single-token serving: y = x · W for one activation row, borrowing
+    /// `x` — the only allocation is the output row (plus a rank-length
+    /// fold for factored ops). The factored path fuses the `(x·L)·R`
+    /// correction into the same per-stripe accumulator the streamed base
+    /// fills, so a token makes one pass over the codes and one over the
+    /// adapter rows with no intermediate `Mat` and no
+    /// `matmul`+`add_assign` round trip through memory.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.in_dim(), "matvec dim mismatch");
+        match self {
+            LinearOp::Dense(w) => dense_matvec(w, x),
+            LinearOp::FactoredQlr { base, l, r } => {
+                // fold x·L once; stripes add (x·L)·R into their own tile
+                let xl = if l.cols > 0 { dense_matvec(l, x) } else { Vec::new() };
+                match base {
+                    QuantBase::Packed(p) => packed_matvec_fused(p, x, &xl, r),
+                    QuantBase::Dense(q) => {
+                        let mut y = dense_matvec(q, x);
+                        for (k, &u) in xl.iter().enumerate() {
+                            if u != 0.0 {
+                                for (a, &v) in y.iter_mut().zip(r.row(k)) {
+                                    *a += u * v;
+                                }
+                            }
+                        }
+                        y
+                    }
+                }
+            }
+        }
+    }
+
+    /// The pre-kernel single-token path: clone `x` into a 1-row [`Mat`],
+    /// scalar-decode base matmul, then the unfused `matmul`+`add_assign`
+    /// correction. Retained callable so `exp::perf::serve_bench` and the
+    /// property suite *measure* the block-kernel speedup against the
+    /// real PR-2 baseline instead of asserting it.
+    pub fn matvec_scalar_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim(), "matvec dim mismatch");
         let xm = Mat::from_vec(1, x.len(), x.to_vec());
-        self.matmul(&xm).data
+        match self {
+            LinearOp::Dense(w) => matmul(&xm, w).data,
+            LinearOp::FactoredQlr { base, l, r } => {
+                let mut y = match base {
+                    QuantBase::Packed(p) => packed_matmul_scalar_ref(p, &xm),
+                    QuantBase::Dense(q) => matmul(&xm, q),
+                };
+                if l.cols > 0 {
+                    y.add_assign(&matmul(&matmul(&xm, l), r));
+                }
+                y.data
+            }
+        }
     }
 
     /// Lock-step matmul for a *group* of ops evaluated simultaneously.
@@ -289,18 +355,20 @@ impl LinearOp {
 /// output element lives in exactly one stripe, summed in row order).
 const PAR_MIN_CODES: usize = 32 * 1024;
 
-/// y = x · Qdeq with the base streamed from packed codes one row-span at
-/// a time. Work splits into group-aligned column stripes over the worker
-/// pool: every stripe decodes a disjoint slice of the code buffer, so
-/// there is no duplicated dequant work at any batch size, and the result
-/// is deterministic (per-element summation order is the row order).
-fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
-    assert_eq!(
-        x.cols, p.rows,
-        "packed matmul shape mismatch: {}x{} · {}x{}",
-        x.rows, x.cols, p.rows, p.cols
-    );
-    let (b, m, n) = (x.rows, p.rows, p.cols);
+/// Rows per decoded panel in the cache-blocked batched path.
+const PANEL_ROWS: usize = 8;
+
+/// Target column-tile width (f32 lanes; group-aligned at use). A decoded
+/// `PANEL_ROWS × TILE_COLS` panel is 16 KiB — it, the accumulator rows
+/// it feeds, and the code bytes behind it stay L1-resident while a row
+/// panel streams, so every unpacked lane is reused by the whole batch at
+/// cache speed.
+const TILE_COLS: usize = 512;
+
+/// Group-aligned column stripes splitting `p`'s columns across the
+/// worker pool (shared by the batched and fused batch-1 paths).
+fn stripe_bounds(p: &PackedMat) -> Vec<(usize, usize)> {
+    let (m, n) = (p.rows, p.cols);
     let glen = p.scheme.group_len();
     let gpr = p.groups_per_row();
     let stripes = if m * n >= PAR_MIN_CODES {
@@ -309,14 +377,43 @@ fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
         1
     };
     let groups_per_stripe = gpr.div_ceil(stripes);
-    let bounds: Vec<(usize, usize)> = (0..stripes)
+    (0..stripes)
         .map(|s| {
             let j0 = (s * groups_per_stripe * glen).min(n);
             let j1 = ((s + 1) * groups_per_stripe * glen).min(n);
             (j0, j1)
         })
         .filter(|(j0, j1)| j0 < j1)
-        .collect();
+        .collect()
+}
+
+/// Decode the `rows [i0, i1) × cols [j0, j1)` block of `p` into `out`
+/// (row-major, width `j1 - j0`) — the row-panel × column-tile unit the
+/// cache-blocked batched path feeds on.
+fn decode_block_into(p: &PackedMat, i0: usize, i1: usize, j0: usize, j1: usize, out: &mut [f32]) {
+    let w = j1 - j0;
+    debug_assert!(out.len() >= (i1 - i0) * w);
+    for (ip, i) in (i0..i1).enumerate() {
+        p.decode_span_into(i, j0, j1, &mut out[ip * w..(ip + 1) * w]);
+    }
+}
+
+/// y = x · Qdeq with the base streamed from packed codes through the
+/// block decode kernels. Work splits into group-aligned column stripes
+/// over the worker pool: every stripe decodes a disjoint slice of the
+/// code buffer, so there is no duplicated dequant work at any batch
+/// size, and the result is deterministic (per-element summation order is
+/// the row order — tiling never reorders the `i` accumulation, so the
+/// output is bit-identical to `packed_matmul_scalar_ref`).
+fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
+    assert_eq!(
+        x.cols, p.rows,
+        "packed matmul shape mismatch: {}x{} · {}x{}",
+        x.rows, x.cols, p.rows, p.cols
+    );
+    let (b, m, n) = (x.rows, p.rows, p.cols);
+    let glen = p.scheme.group_len();
+    let bounds = stripe_bounds(p);
 
     let blocks: Vec<(usize, usize, Vec<f32>)> = pool::par_map(bounds.len(), |s| {
         let (j0, j1) = bounds[s];
@@ -331,10 +428,79 @@ fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
                 }
             }
         } else {
-            // batched: decode each row-span once, reuse it for every sample
+            // cache-blocked: group-aligned column tiles × row panels;
+            // each decoded panel is reused by every sample while hot
+            let tile = (TILE_COLS / glen).max(1) * glen;
+            let mut buf = vec![0.0f32; PANEL_ROWS * tile.min(width)];
+            let mut jt = j0;
+            while jt < j1 {
+                let jt1 = (jt + tile).min(j1);
+                let tw = jt1 - jt;
+                let mut i0 = 0usize;
+                while i0 < m {
+                    let i1 = (i0 + PANEL_ROWS).min(m);
+                    decode_block_into(p, i0, i1, jt, jt1, &mut buf[..(i1 - i0) * tw]);
+                    for bi in 0..b {
+                        let at = bi * width + (jt - j0);
+                        let acc_t = &mut acc[at..at + tw];
+                        for (ip, i) in (i0..i1).enumerate() {
+                            let xv = x.at(bi, i);
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let trow = &buf[ip * tw..(ip + 1) * tw];
+                            for (a, &v) in acc_t.iter_mut().zip(trow) {
+                                *a += xv * v;
+                            }
+                        }
+                    }
+                    i0 = i1;
+                }
+                jt = jt1;
+            }
+        }
+        (j0, j1, acc)
+    });
+
+    let mut y = Mat::zeros(b, n);
+    for (j0, j1, acc) in blocks {
+        let width = j1 - j0;
+        for bi in 0..b {
+            y.row_mut(bi)[j0..j1].copy_from_slice(&acc[bi * width..(bi + 1) * width]);
+        }
+    }
+    y
+}
+
+/// The pre-kernel streaming matmul — per-code scalar decode
+/// ([`PackedMat::axpy_span_scalar`] / [`PackedMat::decode_span_into_scalar`]),
+/// unblocked batched loop, same striping. Retained callable as the bench
+/// baseline and the bit-identity oracle for the block kernels
+/// (`kernel_bit_identical` in `BENCH_serve.json`).
+pub fn packed_matmul_scalar_ref(p: &PackedMat, x: &Mat) -> Mat {
+    assert_eq!(
+        x.cols, p.rows,
+        "packed matmul shape mismatch: {}x{} · {}x{}",
+        x.rows, x.cols, p.rows, p.cols
+    );
+    let (b, m, n) = (x.rows, p.rows, p.cols);
+    let bounds = stripe_bounds(p);
+
+    let blocks: Vec<(usize, usize, Vec<f32>)> = pool::par_map(bounds.len(), |s| {
+        let (j0, j1) = bounds[s];
+        let width = j1 - j0;
+        let mut acc = vec![0.0f32; b * width];
+        if b == 1 {
+            for i in 0..m {
+                let xv = x.at(0, i);
+                if xv != 0.0 {
+                    p.axpy_span_scalar(i, j0, j1, xv, &mut acc);
+                }
+            }
+        } else {
             let mut buf = vec![0.0f32; width];
             for i in 0..m {
-                p.decode_span_into(i, j0, j1, &mut buf);
+                p.decode_span_into_scalar(i, j0, j1, &mut buf);
                 for bi in 0..b {
                     let xv = x.at(bi, i);
                     if xv == 0.0 {
@@ -355,6 +521,59 @@ fn packed_matmul(p: &PackedMat, x: &Mat) -> Mat {
         for bi in 0..b {
             y.row_mut(bi)[j0..j1].copy_from_slice(&acc[bi * width..(bi + 1) * width]);
         }
+    }
+    y
+}
+
+/// Dense y = x · W for one activation row, borrowing both: row-major
+/// axpy over W's rows, allocating only the output row.
+fn dense_matvec(w: &Mat, x: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), w.rows);
+    let mut y = vec![0.0f32; w.cols];
+    for (i, &xv) in x.iter().enumerate() {
+        if xv != 0.0 {
+            for (a, &v) in y.iter_mut().zip(w.row(i)) {
+                *a += xv * v;
+            }
+        }
+    }
+    y
+}
+
+/// Fused batch-1 factored serving: per column stripe, one pass streams
+/// the packed base through [`PackedMat::axpy_span`] (scale/lo folded
+/// into the unpacked lanes) and then accumulates the low-rank correction
+/// `(x·L)·R` into the *same* stripe tile while it is cache-hot — the
+/// separate correction `matmul` + `add_assign` round trip through memory
+/// is gone. `xl` is the precomputed `x·L` fold (empty for rank 0);
+/// stripes are disjoint, so the merge is a plain copy.
+fn packed_matvec_fused(p: &PackedMat, x: &[f32], xl: &[f32], r: &Mat) -> Vec<f32> {
+    debug_assert_eq!(x.len(), p.rows);
+    debug_assert!(xl.is_empty() || (r.rows == xl.len() && r.cols == p.cols));
+    let n = p.cols;
+    let bounds = stripe_bounds(p);
+
+    let blocks: Vec<(usize, usize, Vec<f32>)> = pool::par_map(bounds.len(), |s| {
+        let (j0, j1) = bounds[s];
+        let mut acc = vec![0.0f32; j1 - j0];
+        for (i, &xv) in x.iter().enumerate() {
+            if xv != 0.0 {
+                p.axpy_span(i, j0, j1, xv, &mut acc);
+            }
+        }
+        for (k, &u) in xl.iter().enumerate() {
+            if u != 0.0 {
+                for (a, &v) in acc.iter_mut().zip(&r.row(k)[j0..j1]) {
+                    *a += u * v;
+                }
+            }
+        }
+        (j0, j1, acc)
+    });
+
+    let mut y = vec![0.0f32; n];
+    for (j0, j1, acc) in blocks {
+        y[j0..j1].copy_from_slice(&acc);
     }
     y
 }
@@ -470,6 +689,63 @@ mod tests {
             let f0 = Mat::from_vec(1, n, fact_y.row(0).to_vec());
             assert!(rel_err(&y0, &f0) < 1e-5, "matvec vs batched row diverge");
         });
+    }
+
+    /// Satellite contract for the borrowing batch-1 path: at rank 0 the
+    /// fused matvec computes the same sums in the same order as the
+    /// retained scalar reference (bit-identical — this is the batch-1
+    /// half of `kernel_bit_identical`); with a correction the fused path
+    /// folds `(x·L)·R` into the base stripes, which reorders the f32
+    /// adds, so agreement there is 1e-5.
+    #[test]
+    fn prop_matvec_matches_scalar_ref() {
+        prop::check(0x3A7EC, 15, |g| {
+            let m = 32 * g.dim(2);
+            let n = 32 * g.dim(2);
+            let spec = g.choice(&[
+                QuantizerSpec::Mxint { bits: 3, block: 32 },
+                QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: false },
+                QuantizerSpec::Gptq { bits: 3, group: 32 },
+            ]);
+            let w = Mat::randn(m, n, 1.0, &mut g.rng);
+            let (_, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+            let base = QuantBase::Packed(Arc::new(packed.expect("packable family")));
+            let x = Mat::randn(1, m, 1.0, &mut g.rng);
+
+            let op0 = LinearOp::FactoredQlr {
+                base: base.clone(),
+                l: Mat::zeros(m, 0),
+                r: Mat::zeros(0, n),
+            };
+            let fast = op0.matvec(x.row(0));
+            let slow = op0.matvec_scalar_ref(x.row(0));
+            for (k, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: rank-0 lane {k}", spec.label());
+            }
+
+            let op = LinearOp::FactoredQlr {
+                base,
+                l: Mat::randn(m, 8, 0.1, &mut g.rng),
+                r: Mat::randn(8, n, 0.1, &mut g.rng),
+            };
+            let fast = Mat::from_vec(1, n, op.matvec(x.row(0)));
+            let slow = Mat::from_vec(1, n, op.matvec_scalar_ref(x.row(0)));
+            assert!(rel_err(&fast, &slow) < 1e-5, "{}: fused matvec diverges", spec.label());
+        });
+    }
+
+    #[test]
+    fn dense_matvec_matches_matmul_row() {
+        let mut rng = Rng::new(31);
+        let w = Mat::randn(48, 37, 1.0, &mut rng);
+        let op = LinearOp::Dense(w.clone());
+        let x = Mat::randn(1, 48, 1.0, &mut rng);
+        let y = op.matvec(x.row(0));
+        let want = matmul(&x, &w);
+        assert_eq!(y.len(), 37);
+        for (k, (a, b)) in y.iter().zip(want.row(0)).enumerate() {
+            assert!((a - b).abs() < 1e-4, "lane {k}: {a} vs {b}");
+        }
     }
 
     #[test]

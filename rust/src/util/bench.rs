@@ -61,6 +61,31 @@ pub fn time_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -
     }
 }
 
+/// Measured streaming-read ceiling of this machine in GB/s: the best of
+/// `iters` sequential sum passes over a buffer far past last-level
+/// cache. `exp::perf::serve_bench` records it as the roofline
+/// denominator next to the decode kernels' achieved GB/s — the decode
+/// path is memory-bound by design, so "achieved / ceiling" is the
+/// fraction of the hardware the kernels actually reach.
+pub fn stream_read_gbps(iters: usize) -> f64 {
+    const WORDS: usize = 8 << 20; // 64 MiB of u64
+    let buf: Vec<u64> = (0..WORDS as u64).collect();
+    let mut best_ns = f64::INFINITY;
+    let mut sink = 0u64;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        for &w in &buf {
+            acc = acc.wrapping_add(w);
+        }
+        best_ns = best_ns.min(t0.elapsed().as_nanos() as f64);
+        sink ^= acc;
+    }
+    std::hint::black_box(sink);
+    // bytes per nanosecond == GB/s (decimal)
+    (WORDS * 8) as f64 / best_ns
+}
+
 /// Simple fixed-width table printer for bench output.
 pub struct Table {
     pub title: String,
@@ -145,6 +170,11 @@ mod tests {
         assert!(s.contains("demo"));
         assert!(s.contains("333"));
         assert_eq!(s.lines().filter(|l| !l.is_empty()).count(), 5);
+    }
+
+    #[test]
+    fn stream_read_ceiling_is_positive() {
+        assert!(stream_read_gbps(1) > 0.0);
     }
 
     #[test]
