@@ -28,13 +28,19 @@ if not files:
 REQUIRED_FLAGS = {
     "BENCH_shard.json": ["tcp_bit_identical", "wedge_recovered"],
     "BENCH_serve.json": ["kernel_bit_identical"],
+    # the live-daemon record has to prove every batched request matched
+    # the serial one-at-a-time oracle bit for bit
+    "BENCH_serve_live.json": ["batched_bit_identical"],
 }
 
 # Numeric fields that MUST be present (finite numbers): the serve
 # roofline accounting, so a kernel regression can't hide by dropping
-# the bytes/FLOPs bookkeeping from the record.
+# the bytes/FLOPs bookkeeping from the record; the live-daemon load
+# metrics, so the serve_live leg can't pass with zero completed
+# requests.
 REQUIRED_NUMBERS = {
     "BENCH_serve.json": ["decode_bytes", "flops", "achieved_gbps"],
+    "BENCH_serve_live.json": ["sustained_rps", "p99_latency_ms"],
 }
 
 present = {os.path.basename(f) for f in files}

@@ -94,6 +94,15 @@ pub mod kind {
     pub const PREP_JOB: u8 = 11;
     /// worker→host: a prep job's artifacts (blobs precede this frame)
     pub const PREP_RESULT: u8 = 12;
+    /// client→daemon: one serving request (generate or score) for the
+    /// continuous-batching daemon (`serve::daemon`)
+    pub const SERVE_REQUEST: u8 = 13;
+    /// daemon→client: the reply to a serving request (tokens, score,
+    /// busy, or a structured error)
+    pub const SERVE_REPLY: u8 = 14;
+    /// client→daemon: cancel an in-flight serving request by id; the
+    /// daemon frees the request's scheduler slot and sends no reply
+    pub const SERVE_CANCEL: u8 = 15;
 }
 
 /// Content-address of a blob: 128-bit FNV over its encoded bytes.
@@ -276,40 +285,49 @@ impl WireWriter {
         self.buf
     }
 
-    fn put_u8(&mut self, x: u8) {
+    /// Append one byte.
+    pub fn put_u8(&mut self, x: u8) {
         self.buf.push(x);
     }
 
-    fn put_bool(&mut self, x: bool) {
+    /// Append a bool as one byte (0/1).
+    pub fn put_bool(&mut self, x: bool) {
         self.buf.push(u8::from(x));
     }
 
-    fn put_u32(&mut self, x: u32) {
+    /// Append a `u32` (little-endian).
+    pub fn put_u32(&mut self, x: u32) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
-    fn put_u64(&mut self, x: u64) {
+    /// Append a `u64` (little-endian).
+    pub fn put_u64(&mut self, x: u64) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
-    fn put_usize(&mut self, x: usize) {
+    /// Append a `usize` as a `u64` (little-endian).
+    pub fn put_usize(&mut self, x: usize) {
         self.put_u64(x as u64);
     }
 
-    fn put_u128(&mut self, x: u128) {
+    /// Append a `u128` (little-endian).
+    pub fn put_u128(&mut self, x: u128) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
-    fn put_f64(&mut self, x: f64) {
+    /// Append an `f64` as its IEEE-754 little-endian bytes.
+    pub fn put_f64(&mut self, x: f64) {
         self.buf.extend_from_slice(&x.to_le_bytes());
     }
 
-    fn put_str(&mut self, s: &str) {
+    /// Append a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
         self.put_usize(s.len());
         self.buf.extend_from_slice(s.as_bytes());
     }
 
-    fn put_f32s(&mut self, xs: &[f32]) {
+    /// Append a length-prefixed `f32` slice (IEEE-754 LE).
+    pub fn put_f32s(&mut self, xs: &[f32]) {
         self.put_usize(xs.len());
         self.buf.reserve(4 * xs.len());
         for &x in xs {
@@ -317,7 +335,8 @@ impl WireWriter {
         }
     }
 
-    fn put_f64s(&mut self, xs: &[f64]) {
+    /// Append a length-prefixed `f64` slice (IEEE-754 LE).
+    pub fn put_f64s(&mut self, xs: &[f64]) {
         self.put_usize(xs.len());
         self.buf.reserve(8 * xs.len());
         for &x in xs {
@@ -325,7 +344,8 @@ impl WireWriter {
         }
     }
 
-    fn put_i32s(&mut self, xs: &[i32]) {
+    /// Append a length-prefixed `i32` slice (little-endian).
+    pub fn put_i32s(&mut self, xs: &[i32]) {
         self.put_usize(xs.len());
         self.buf.reserve(4 * xs.len());
         for &x in xs {
@@ -333,7 +353,8 @@ impl WireWriter {
         }
     }
 
-    fn put_u64s(&mut self, xs: &[u64]) {
+    /// Append a length-prefixed `u64` slice (little-endian).
+    pub fn put_u64s(&mut self, xs: &[u64]) {
         self.put_usize(xs.len());
         self.buf.reserve(8 * xs.len());
         for &x in xs {
@@ -368,11 +389,13 @@ impl<'a> WireReader<'a> {
         Ok(out)
     }
 
-    fn get_u8(&mut self) -> Result<u8, WireError> {
+    /// Read one byte.
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn get_bool(&mut self) -> Result<bool, WireError> {
+    /// Read a bool byte; any value other than 0/1 is `Malformed`.
+    pub fn get_bool(&mut self) -> Result<bool, WireError> {
         match self.get_u8()? {
             0 => Ok(false),
             1 => Ok(true),
@@ -380,52 +403,62 @@ impl<'a> WireReader<'a> {
         }
     }
 
-    fn get_u32(&mut self) -> Result<u32, WireError> {
+    /// Read a `u32` (little-endian).
+    pub fn get_u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn get_u64(&mut self) -> Result<u64, WireError> {
+    /// Read a `u64` (little-endian).
+    pub fn get_u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn get_usize(&mut self) -> Result<usize, WireError> {
+    /// Read a `u64` and convert to `usize` (overflow is `Malformed`).
+    pub fn get_usize(&mut self) -> Result<usize, WireError> {
         let x = self.get_u64()?;
         usize::try_from(x).map_err(|_| WireError::Malformed("usize overflow"))
     }
 
-    fn get_u128(&mut self) -> Result<u128, WireError> {
+    /// Read a `u128` (little-endian).
+    pub fn get_u128(&mut self) -> Result<u128, WireError> {
         Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
     }
 
-    fn get_f64(&mut self) -> Result<f64, WireError> {
+    /// Read an `f64` from IEEE-754 little-endian bytes.
+    pub fn get_f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn get_str(&mut self) -> Result<String, WireError> {
+    /// Read a length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<String, WireError> {
         let n = self.get_usize()?;
         let bytes = self.take(n)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("bad utf-8"))
     }
 
-    fn get_f32s(&mut self) -> Result<Vec<f32>, WireError> {
+    /// Read a length-prefixed `f32` slice.
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>, WireError> {
         let n = self.get_usize()?;
         let bytes = self.take(n.checked_mul(4).ok_or(WireError::Malformed("len overflow"))?)?;
         Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn get_f64s(&mut self) -> Result<Vec<f64>, WireError> {
+    /// Read a length-prefixed `f64` slice.
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>, WireError> {
         let n = self.get_usize()?;
         let bytes = self.take(n.checked_mul(8).ok_or(WireError::Malformed("len overflow"))?)?;
         Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn get_i32s(&mut self) -> Result<Vec<i32>, WireError> {
+    /// Read a length-prefixed `i32` slice.
+    pub fn get_i32s(&mut self) -> Result<Vec<i32>, WireError> {
         let n = self.get_usize()?;
         let bytes = self.take(n.checked_mul(4).ok_or(WireError::Malformed("len overflow"))?)?;
         Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn get_u64s(&mut self) -> Result<Vec<u64>, WireError> {
+    /// Read a length-prefixed `u64` slice.
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>, WireError> {
         let n = self.get_usize()?;
         let bytes = self.take(n.checked_mul(8).ok_or(WireError::Malformed("len overflow"))?)?;
         Ok(bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())

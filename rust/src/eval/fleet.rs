@@ -85,7 +85,10 @@ impl FleetWeights for FleetGroup<'_> {
                 .iter()
                 .map(|m| m.op(name).expect("fleet group ops aligned"))
                 .collect();
-            LinearOp::matmul_grouped(&ops, x)
+            // group construction guarantees aligned ops over a stack
+            // whose rows are a multiple of the member count, so a
+            // refusal here is a caller bug, not a recoverable state
+            LinearOp::matmul_grouped(&ops, x).expect("fleet group stack is well-formed")
         } else {
             // un-quantized linear: shared skeleton weight, plain GEMM
             matmul(x, &self.members[0].skeleton.get_mat(name).expect("linear param"))

@@ -82,6 +82,11 @@ pub fn registry() -> Vec<ExpEntry> {
             "§Perf multi-process shard plane: scaling + bit-identity vs in-process (writes BENCH_shard.json)",
             perf::shard_bench,
         ),
+        offline(
+            "serve_live",
+            "§Perf continuous-batching daemon under live TCP load, serial-oracle bit-identity (writes BENCH_serve_live.json)",
+            perf::serve_live_bench,
+        ),
     ]
 }
 
@@ -116,7 +121,7 @@ mod tests {
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
             "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep", "serve",
-            "evalbatch", "shard",
+            "evalbatch", "shard", "serve_live",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
@@ -128,6 +133,7 @@ mod tests {
         assert!(offline_ok("serve"));
         assert!(offline_ok("evalbatch"));
         assert!(offline_ok("shard"));
+        assert!(offline_ok("serve_live"));
         assert!(!offline_ok("table1"));
         assert!(!offline_ok("nonexistent"));
     }

@@ -991,6 +991,157 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// `--exp serve_live`: the continuous-batching daemon under live TCP
+/// load, gated on end-to-end bit-identity (writes
+/// `BENCH_serve_live.json`).
+///
+/// Quantizes the tiny model into rank variants sharing one packed base
+/// per linear, serves them behind one loopback daemon, drives ≥ 8
+/// concurrent open-loop clients against it, then replays **every
+/// completed request** through the serial one-at-a-time oracle
+/// ([`FleetEngine::run_to_completion`]) and asserts bit-identical
+/// outputs (token-exact generates, f64-bit-exact scores). The record is
+/// written before the assertions so a divergence still lands in the
+/// JSON for the CI gate.
+pub fn serve_live_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    use crate::serve::daemon::{
+        run_open_loop, Daemon, DaemonConfig, FleetEngine, LoadSpec, ReqKind, ServeReply, StepOut,
+    };
+
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+
+    // one quantizer/seed across ranks → shared Arc<PackedMat> bases
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+    let ranks = [4usize, 8];
+    let configs: Vec<SweepConfig> = ranks
+        .iter()
+        .map(|&r| {
+            SweepConfig::new(quant, Method::Qer, r, ScalingKind::DiagRms).labeled(&format!("r{r}"))
+        })
+        .collect();
+    let metrics = Metrics::new();
+    let outs =
+        SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics).run_factored(&configs);
+    let as_refs: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+    let variants_share_base = crate::eval::group_by_shared_bases(&as_refs).len() == 1;
+
+    let mk_variants = || -> Vec<(String, FactoredModel)> {
+        configs.iter().zip(&outs).map(|(c, o)| (c.label.clone(), o.model.clone())).collect()
+    };
+    // two engines off the same outcomes: one moves into the daemon, the
+    // other replays requests serially as the oracle (FactoredModel
+    // clones share their packed buffers via Arc, so this is cheap)
+    let engine = FleetEngine::new(fx.cfg.clone(), mk_variants())?;
+    let oracle = FleetEngine::new(fx.cfg.clone(), mk_variants())?;
+
+    let mut daemon = Daemon::new(
+        engine,
+        DaemonConfig { max_slots: 64, max_batch: 8, ..Default::default() },
+    );
+    let addr = daemon.bind("127.0.0.1:0")?;
+    let handle = daemon.spawn();
+
+    let spec = LoadSpec {
+        clients: 8,
+        per_client: if ctx.quick { 8 } else { 24 },
+        gap: std::time::Duration::from_millis(3),
+        prompt_len: 6,
+        max_new: 4,
+        vocab: fx.cfg.vocab,
+        variants: configs.iter().map(|c| c.label.clone()).collect(),
+        score_every: 3,
+        seed: 0xC0FFEE,
+    };
+    let t0 = Instant::now();
+    let report = run_open_loop(&addr.to_string(), &spec)?;
+    let load_secs = t0.elapsed().as_secs_f64();
+    handle.join();
+
+    // serial-oracle replay of every completed request
+    let mut checked = 0usize;
+    let mut identical = true;
+    for o in &report.outcomes {
+        let vi = oracle
+            .variant_index(&o.variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {:?} in outcome", o.variant))?;
+        let ok = match &o.reply {
+            ServeReply::Tokens { tokens, .. } => {
+                checked += 1;
+                matches!(
+                    oracle.run_to_completion(vi, &o.tokens, o.kind)?,
+                    StepOut::Tokens(serial) if &serial == tokens
+                )
+            }
+            ServeReply::Score { nll, count, .. } => {
+                checked += 1;
+                matches!(
+                    oracle.run_to_completion(vi, &o.tokens, ReqKind::Score)?,
+                    StepOut::Score { nll: s_nll, count: s_count }
+                        if s_nll.to_bits() == nll.to_bits() && s_count == *count
+                )
+            }
+            ServeReply::Busy { .. } | ServeReply::Error { .. } => true,
+        };
+        identical &= ok;
+    }
+    let batched_bit_identical = identical && checked > 0;
+
+    let record = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("quick", Json::Bool(ctx.quick)),
+        ("variants", Json::arr(configs.iter().map(|c| Json::str(c.label.clone())).collect())),
+        ("variants_share_base", Json::Bool(variants_share_base)),
+        ("clients", Json::num(spec.clients as f64)),
+        ("requests", Json::num(report.sent as f64)),
+        ("completed", Json::num(report.completed as f64)),
+        ("busy", Json::num(report.busy as f64)),
+        ("errors", Json::num(report.errors as f64)),
+        ("oracle_checked", Json::num(checked as f64)),
+        ("load_secs", Json::num(load_secs)),
+        ("sustained_rps", Json::num(report.sustained_rps)),
+        ("p50_latency_ms", Json::num(report.p50_ms)),
+        ("p99_latency_ms", Json::num(report.p99_ms)),
+        ("batched_bit_identical", Json::Bool(batched_bit_identical)),
+    ]);
+    bench::write_json("BENCH_serve_live.json", &record)?;
+    anyhow::ensure!(
+        variants_share_base,
+        "rank variants do not share packed bases (recorded in BENCH_serve_live.json)"
+    );
+    anyhow::ensure!(
+        batched_bit_identical,
+        "batched daemon outputs diverge from the serial oracle over {checked} \
+         completed requests (recorded in BENCH_serve_live.json)"
+    );
+    anyhow::ensure!(
+        report.completed > 0 && report.p99_ms.is_finite(),
+        "load run completed no requests (recorded in BENCH_serve_live.json)"
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "§Perf serve_live — continuous-batching daemon, {} clients × {} requests, \
+             variants [{}] off one shared base, model={model} \
+             (recorded in BENCH_serve_live.json)",
+            spec.clients,
+            spec.per_client,
+            configs.iter().map(|c| c.label.clone()).collect::<Vec<_>>().join(", ")
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["completed / sent".into(), format!("{} / {}", report.completed, report.sent)]);
+    t.row(vec!["busy (shed)".into(), format!("{}", report.busy)]);
+    t.row(vec!["sustained req/s".into(), f(report.sustained_rps, 1)]);
+    t.row(vec!["p50 latency (ms)".into(), f(report.p50_ms, 2)]);
+    t.row(vec!["p99 latency (ms)".into(), f(report.p99_ms, 2)]);
+    t.row(vec![
+        "batched ≡ serial oracle".into(),
+        format!("{batched_bit_identical} ({checked} replayed)"),
+    ]);
+    Ok(vec![t])
+}
+
 /// §Perf suite: the per-layer hot paths.
 pub fn perf_suite(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let mut tables = vec![];

@@ -26,6 +26,15 @@
 //!                                also join a host *mid-run*: an elastic host
 //!                                keeps its accept loop open and feeds
 //!                                late joiners from the live job queue
+//!   serve  [--model M] [--listen host:port] [--ranks 4,8] [--slots N]
+//!          [--batch N] [--quick]
+//!                              — continuous-batching inference daemon:
+//!                                quantizes M into several rank variants
+//!                                sharing one packed base and serves them
+//!                                behind one endpoint (runs offline)
+//!   client --connect host:port [--variant NAME] [--prompt 1,2,3]
+//!          [--max-new N | --score]
+//!                              — one-shot serving client for `srr serve`
 //!
 //! Examples live in `examples/` (quickstart, ptq_sweep, qpeft_finetune,
 //! e2e_train_quantize, shard_sweep).
@@ -34,8 +43,9 @@ use anyhow::Result;
 
 use srr::coordinator::{
     fleet_perplexity_sharded, run_ptq_factored, Metrics, RunConfig, ShardOptions, ShardSession,
-    ShardedSweepRunner, SweepConfig,
+    ShardedSweepRunner, SweepConfig, SweepRunner,
 };
+use srr::serve::daemon::{Daemon, DaemonConfig, FleetEngine, ServeClient};
 use srr::data::glue_sim::GlueTask;
 use srr::eval::{glue_score, perplexity_native};
 use srr::exp::{registry, ExpCtx};
@@ -55,16 +65,20 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         // spawned by ShardSession with piped stdio; speaks coordinator::wire
         Some("shard-worker") => srr::coordinator::worker_main(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         _ => {
             eprintln!(
-                "usage: srr <info|ptq|qpeft|bench|shard-worker> [options]\n\
+                "usage: srr <info|ptq|qpeft|bench|shard-worker|serve|client> [options]\n\
                  \n  srr info\
                  \n  srr ptq --model small --method srr --scaling qera-exact --quantizer mxint3 --rank 8\
                  \n  srr ptq --model tiny --rank 8 --workers 2   # multi-process reconstruction + eval\
                  \n  srr ptq --model tiny --rank 8 --listen 127.0.0.1:7777 --workers 2   # remote workers dial in\
                  \n  srr shard-worker --connect host:7777        # remote worker side\
                  \n  srr qpeft --task SST-sim --init srr --bits 2 --steps 60\
-                 \n  srr bench table1 fig5 [--quick]   |   srr bench --list"
+                 \n  srr bench table1 fig5 [--quick]   |   srr bench --list\
+                 \n  srr serve --model tiny --listen 127.0.0.1:7878 --ranks 4,8   # batching daemon\
+                 \n  srr client --connect 127.0.0.1:7878 --variant r8 --prompt 3,1,4,1,5 --max-new 8"
             );
             Ok(())
         }
@@ -337,6 +351,113 @@ fn cmd_qpeft(args: &Args) -> Result<()> {
     }
     let score = glue_score(task.metric, &logits, n_out, &task.dev);
     println!("dev score: {}", f(score, 2));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny").to_string();
+    let listen = args.get_or("listen", "127.0.0.1:7878").to_string();
+    let ranks: Vec<usize> = args
+        .get_or("ranks", "4,8")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--ranks expects a comma list of ranks, got {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!ranks.is_empty(), "--ranks must name at least one rank");
+    let mut ctx = match ExpCtx::new(args.has_flag("quick")) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("[no artifacts ({e:#}); offline mode — untrained synthetic fixture]");
+            ExpCtx::offline(args.has_flag("quick"))?
+        }
+    };
+    let fx = ctx.lm(&model)?;
+    let metrics = Metrics::new();
+    // one quantizer/seed across ranks → every variant shares the same
+    // Arc<PackedMat> base per linear, so mixed batches decode each base
+    // once (the whole point of serving a rank family together)
+    let quant = srr::coordinator::QuantizerSpec::Mxint { bits: 4, block: 32 };
+    let configs: Vec<SweepConfig> = ranks
+        .iter()
+        .map(|&r| {
+            SweepConfig::new(quant, srr::qer::Method::Qer, r, srr::scaling::ScalingKind::DiagRms)
+                .labeled(&format!("r{r}"))
+        })
+        .collect();
+    println!("quantizing {model} into {} rank variant(s)…", configs.len());
+    let outs = SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics).run_factored(&configs);
+    let variants: Vec<(String, srr::serve::FactoredModel)> = configs
+        .iter()
+        .zip(outs)
+        .map(|(c, o)| (c.label.clone(), o.model))
+        .collect();
+    let engine = FleetEngine::new(fx.cfg.clone(), variants)?;
+    let cfg = DaemonConfig {
+        max_slots: args.get_usize("slots", 16),
+        max_batch: args.get_usize("batch", 8),
+        ..Default::default()
+    };
+    let names: Vec<String> = engine.variant_names().iter().map(|s| s.to_string()).collect();
+    let mut daemon = Daemon::new(engine, cfg);
+    let bound = daemon.bind(&listen)?;
+    println!("serving variants [{}] on {bound}", names.join(", "));
+    let handle = daemon.spawn();
+    // foreground stats ticker; the daemon itself runs on its own threads
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let s = handle.stats();
+        println!(
+            "active={} served={} busy={} refused={} malformed={} disconnects={}",
+            s.active_slots.load(std::sync::atomic::Ordering::Relaxed),
+            s.served.load(std::sync::atomic::Ordering::Relaxed),
+            s.shed.load(std::sync::atomic::Ordering::Relaxed),
+            s.refused.load(std::sync::atomic::Ordering::Relaxed),
+            s.malformed.load(std::sync::atomic::Ordering::Relaxed),
+            s.disconnects.load(std::sync::atomic::Ordering::Relaxed),
+        );
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("srr client needs --connect host:port"))?;
+    let variant = args.get_or("variant", "r8").to_string();
+    let tokens: Vec<i32> = args
+        .get_or("prompt", "1,2,3,4")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--prompt expects comma-separated token ids"))
+        })
+        .collect::<Result<_>>()?;
+    let mut client = ServeClient::dial(addr, &variant)?;
+    let reply = if args.has_flag("score") {
+        client.score(&tokens)?
+    } else {
+        client.generate(&tokens, args.get_usize("max-new", 8))?
+    };
+    match reply {
+        srr::serve::daemon::ServeReply::Tokens { tokens, .. } => {
+            println!(
+                "generated: {}",
+                tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+            );
+        }
+        srr::serve::daemon::ServeReply::Score { nll, count, .. } => {
+            println!("nll = {nll:.4} over {count} positions (ppl {:.3})", (nll / count).exp());
+        }
+        srr::serve::daemon::ServeReply::Busy { .. } => {
+            println!("daemon busy — request shed; retry later");
+        }
+        srr::serve::daemon::ServeReply::Error { message, .. } => {
+            anyhow::bail!("daemon refused the request: {message}");
+        }
+    }
     Ok(())
 }
 

@@ -294,8 +294,50 @@ pub fn forward_fleet(
     for gi in 1..g {
         x.data.copy_within(0..block, gi * block);
     }
-    let gb = g * b; // stacked sequence count
+    fleet_trunk(weights, cfg, x, g * b, t, causal)
+}
 
+/// The lock-step fleet forward over **per-member tokens**: member `g`
+/// runs its own sequences `tokens[g·b·t .. (g+1)·b·t]` — the
+/// continuous-batching daemon's shape, where every batch member is a
+/// *different* request evaluated under its own model variant.
+///
+/// Identical to [`forward_fleet`] except for the embedding (each row is
+/// looked up from its member's own token instead of replicated); the
+/// post-embedding trunk is literally shared code, so the per-member
+/// bit-identity argument of [`forward_fleet`] carries over unchanged.
+/// Returns stacked logits (`group·b·t`, head_dim).
+pub fn forward_fleet_distinct(
+    weights: &dyn FleetWeights,
+    cfg: &ModelCfg,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    causal: bool,
+) -> Mat {
+    let g = weights.group_size();
+    assert_eq!(tokens.len(), g * b * t, "stacked token count");
+    let embed = weights.mat("embed");
+    let mut x = Mat::zeros(g * b * t, cfg.d_model);
+    for (i, &tok) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(embed.row(tok as usize));
+    }
+    fleet_trunk(weights, cfg, x, g * b, t, causal)
+}
+
+/// The token-agnostic post-embedding trunk shared by [`forward_fleet`]
+/// and [`forward_fleet_distinct`]: the layer loop plus head over `gb`
+/// stacked sequences of length `t`. Every stage is row- or
+/// sequence-local, so stacking never changes a member's per-element
+/// summation order.
+fn fleet_trunk(
+    weights: &dyn FleetWeights,
+    cfg: &ModelCfg,
+    mut x: Mat,
+    gb: usize,
+    t: usize,
+    causal: bool,
+) -> Mat {
     for layer in 0..cfg.n_layers {
         let name = |k: &str| format!("l{layer}.{k}");
         let h = rmsnorm(&x, weights.vec(&name("ln1")));
@@ -328,7 +370,7 @@ pub fn forward_fleet(
 /// copy of it. (`-(a)·b` and `x + (-y)` are IEEE-exact rewrites of the
 /// historical `x - a·b` accumulation.)
 #[inline]
-fn row_nll(row: &[f32], target: usize, mk: f32) -> f64 {
+pub(crate) fn row_nll(row: &[f32], target: usize, mk: f32) -> f64 {
     let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
     let z: f32 = row.iter().map(|&x| (x - m).exp()).sum();
     let logp = (row[target] - m) - z.ln();

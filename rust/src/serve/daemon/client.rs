@@ -1,0 +1,171 @@
+//! The serving client: dial a daemon over TCP (HELLO handshake
+//! included) or attach in-process over any reader/writer pair, send
+//! requests, receive replies.
+//!
+//! The client is deliberately thin — frames in, frames out — so the
+//! load generator can split it into independent send/receive halves
+//! and drive the daemon open-loop (sends never wait for replies).
+
+use std::io::{BufWriter, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::transport::worker_connect;
+use crate::coordinator::wire::{kind, read_frame_limited};
+
+use super::protocol::{
+    decode_reply, encode_cancel, encode_request, ReqKind, ServeReply, ServeRequest,
+    SERVE_MAX_REQUEST_LEN,
+};
+
+/// The sending half: owns the write stream and the request-id counter.
+pub struct ClientTx {
+    writer: Box<dyn Write + Send>,
+    next_id: u64,
+    variant: String,
+}
+
+/// The receiving half: owns the read stream.
+pub struct ClientRx {
+    reader: Box<dyn Read + Send>,
+}
+
+/// A connected serving client (a [`ClientTx`] / [`ClientRx`] pair).
+pub struct ServeClient {
+    tx: ClientTx,
+    rx: ClientRx,
+}
+
+impl ServeClient {
+    /// Dial a daemon over TCP, passing the HELLO handshake as a
+    /// worker-role peer. `variant` is the served variant this client's
+    /// requests run under.
+    pub fn dial(addr: &str, variant: &str) -> Result<ServeClient> {
+        let stream = worker_connect(addr, 0)?;
+        let read_half = stream.try_clone().context("cloning client stream")?;
+        Ok(Self::over(
+            Box::new(BufWriter::new(stream)),
+            Box::new(read_half),
+            variant,
+        ))
+    }
+
+    /// Attach over an already-open reader/writer pair (in-process
+    /// clients admitted via `DaemonHandle::admit`, which skips the TCP
+    /// handshake).
+    pub fn over(
+        writer: Box<dyn Write + Send>,
+        reader: Box<dyn Read + Send>,
+        variant: &str,
+    ) -> ServeClient {
+        ServeClient {
+            tx: ClientTx { writer, next_id: 1, variant: variant.to_string() },
+            rx: ClientRx { reader },
+        }
+    }
+
+    /// Split into independent send/receive halves (open-loop load
+    /// generation: one thread sends on schedule, another drains
+    /// replies).
+    pub fn split(self) -> (ClientTx, ClientRx) {
+        (self.tx, self.rx)
+    }
+
+    /// Send a generate request; returns its id.
+    pub fn send_generate(&mut self, tokens: &[i32], max_new: usize) -> Result<u64> {
+        self.tx.send_generate(tokens, max_new)
+    }
+
+    /// Send a score request; returns its id.
+    pub fn send_score(&mut self, tokens: &[i32]) -> Result<u64> {
+        self.tx.send_score(tokens)
+    }
+
+    /// Cancel an in-flight request by id (fire-and-forget; the daemon
+    /// sends no reply for cancels).
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.tx.cancel(id)
+    }
+
+    /// Block for the next reply.
+    pub fn recv(&mut self) -> Result<ServeReply> {
+        self.rx.recv()
+    }
+
+    /// Convenience: send one generate request and block for its reply.
+    pub fn generate(&mut self, tokens: &[i32], max_new: usize) -> Result<ServeReply> {
+        let id = self.send_generate(tokens, max_new)?;
+        self.recv_for(id)
+    }
+
+    /// Convenience: send one score request and block for its reply.
+    pub fn score(&mut self, tokens: &[i32]) -> Result<ServeReply> {
+        let id = self.send_score(tokens)?;
+        self.recv_for(id)
+    }
+
+    fn recv_for(&mut self, id: u64) -> Result<ServeReply> {
+        loop {
+            let reply = self.recv()?;
+            if reply.id() == id {
+                return Ok(reply);
+            }
+        }
+    }
+}
+
+impl ClientTx {
+    /// Send a generate request; returns its id.
+    pub fn send_generate(&mut self, tokens: &[i32], max_new: usize) -> Result<u64> {
+        self.send(tokens, ReqKind::Generate { max_new })
+    }
+
+    /// Send a score request; returns its id.
+    pub fn send_score(&mut self, tokens: &[i32]) -> Result<u64> {
+        self.send(tokens, ReqKind::Score)
+    }
+
+    /// Cancel an in-flight request by id.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        encode_cancel(id).write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn send(&mut self, tokens: &[i32], kind: ReqKind) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = ServeRequest {
+            id,
+            variant: self.variant.clone(),
+            tokens: tokens.to_vec(),
+            kind,
+        };
+        encode_request(&req).write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+}
+
+impl ClientRx {
+    /// Block for the next reply frame; EOF and protocol violations are
+    /// errors.
+    pub fn recv(&mut self) -> Result<ServeReply> {
+        let frame = read_frame_limited(&mut self.reader, SERVE_MAX_REQUEST_LEN)
+            .map_err(|e| anyhow::anyhow!("reading serve reply: {e}"))?
+            .context("daemon closed the connection")?;
+        anyhow::ensure!(
+            frame.kind == kind::SERVE_REPLY,
+            "unexpected frame kind {} from daemon",
+            frame.kind
+        );
+        decode_reply(&frame.payload).map_err(|e| anyhow::anyhow!("decoding serve reply: {e}"))
+    }
+}
+
+/// Dial a daemon and return the raw handshaken stream (the load
+/// generator's socket-timeout path needs the `TcpStream` itself).
+pub fn dial_raw(addr: &str) -> Result<TcpStream> {
+    worker_connect(addr, 0)
+}

@@ -1,0 +1,401 @@
+//! The batched inference engine behind the daemon: a fixed table of
+//! served model variants plus one lock-step `step` that advances a
+//! mixed batch of requests by one forward pass.
+//!
+//! **Bit-identity contract.** Every forward — whether the batch holds
+//! one request or eight, and regardless of which variants its members
+//! run under — goes through the same code path: a [`MixedFleet`] view
+//! dispatching each linear through [`LinearOp::matmul_grouped`] into
+//! [`forward_fleet_distinct`]. The grouped matmul preserves per-row
+//! summation order no matter how many members share the stack, and the
+//! trunk is row/sequence-local, so a request's logits are bit-identical
+//! whoever it was batched with. [`FleetEngine::run_to_completion`] is
+//! the serial oracle the test harness compares against: it runs the
+//! *same* path with a group of one, so "batched output == serial
+//! output" is checked end to end, not proved by assumption.
+//!
+//! One hazard keeps the contract honest: the batch-1 fused matvec
+//! kernels reorder summation. The engine never reaches them because
+//! the grouped path is unconditional and the daemon's admission floor
+//! (`min_prompt ≥ 2`) keeps every stacked member at `t ≥ 2` rows.
+
+use crate::model::forward::{forward_fleet_distinct, row_nll, FleetWeights};
+use crate::runtime::manifest::ModelCfg;
+use crate::serve::{FactoredModel, LinearOp, ServeError};
+use crate::tensor::{matmul, Mat};
+
+use super::protocol::ReqKind;
+use super::scheduler::SlotRequest;
+
+/// What one finished request produced.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepOut {
+    /// a generate request's full decoded continuation
+    Tokens(Vec<i32>),
+    /// a score request's summed NLL and scored-position count
+    Score {
+        /// Σ next-token negative log-likelihood over the prompt
+        nll: f64,
+        /// number of scored positions (t − 1)
+        count: f64,
+    },
+}
+
+/// A fixed set of named model variants served off shared state. The
+/// interesting deployment shape is several rank/bit variants of one
+/// sweep carrying the *same* `Arc<PackedMat>` bases — the engine
+/// doesn't require that, but [`LinearOp::matmul_grouped`] exploits it
+/// (one base decode per group) whenever it holds.
+pub struct FleetEngine {
+    cfg: ModelCfg,
+    variants: Vec<(String, FactoredModel)>,
+}
+
+/// A per-batch [`FleetWeights`] view: member `g` of the stack is
+/// evaluated under `members[g]`'s weights. Members may repeat (two
+/// requests on the same variant) and mix freely.
+struct MixedFleet<'a> {
+    members: Vec<&'a FactoredModel>,
+}
+
+impl FleetWeights for MixedFleet<'_> {
+    fn group_size(&self) -> usize {
+        self.members.len()
+    }
+
+    fn linear_stacked(&self, name: &str, x: &Mat) -> Mat {
+        if self.members[0].op(name).is_some() {
+            let ops: Vec<&LinearOp> = self
+                .members
+                .iter()
+                .map(|m| m.op(name).expect("engine-validated ops aligned"))
+                .collect();
+            // engine construction validated op alignment and the
+            // engine's own step built the stack, so a refusal here is
+            // an engine bug, not a recoverable request error
+            LinearOp::matmul_grouped(&ops, x).expect("engine stack is well-formed")
+        } else {
+            let w = self.members[0].skeleton.get_mat(name).expect("mat param");
+            matmul(x, &w)
+        }
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        self.members[0].skeleton.get_vec(name).expect("vec param")
+    }
+
+    fn mat(&self, name: &str) -> Mat {
+        self.members[0].skeleton.get_mat(name).expect("mat param")
+    }
+}
+
+impl FleetEngine {
+    /// Build an engine over named variants, validating that every
+    /// variant quantizes the same set of linears (so any mix of them
+    /// can share one stacked forward).
+    pub fn new(
+        cfg: ModelCfg,
+        variants: Vec<(String, FactoredModel)>,
+    ) -> Result<Self, ServeError> {
+        if variants.is_empty() {
+            return Err(ServeError::EmptyGroup);
+        }
+        let first = &variants[0].1;
+        for (_, m) in &variants[1..] {
+            let aligned = m.ops.len() == first.ops.len()
+                && m.ops.iter().zip(&first.ops).all(|((a, _), (b, _))| a == b);
+            if !aligned {
+                return Err(ServeError::ShapeMismatch {
+                    what: "served variants quantize different linear sets",
+                });
+            }
+        }
+        Ok(FleetEngine { cfg, variants })
+    }
+
+    /// The model configuration every variant serves.
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.cfg
+    }
+
+    /// The served variant names, in table order.
+    pub fn variant_names(&self) -> Vec<&str> {
+        self.variants.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Resolve a variant name to its table index.
+    pub fn variant_index(&self, name: &str) -> Option<usize> {
+        self.variants.iter().position(|(n, _)| n == name)
+    }
+
+    /// Advance every batch member by one lock-step forward. Members
+    /// must share one current length `t ≥ 2` (the scheduler's batching
+    /// rule guarantees this). Returns, per member, `Some(StepOut)` when
+    /// the request finished this step and `None` when it still needs
+    /// more decode steps (generate only; score always finishes).
+    pub fn step(
+        &self,
+        batch: &mut [SlotRequest],
+    ) -> Result<Vec<Option<StepOut>>, ServeError> {
+        let g = batch.len();
+        if g == 0 {
+            return Err(ServeError::EmptyBatch);
+        }
+        let t = batch[0].cur_len();
+        if batch.iter().any(|r| r.cur_len() != t) {
+            return Err(ServeError::RaggedStack { rows: 0, group: g });
+        }
+        if t < 2 {
+            return Err(ServeError::ShapeMismatch {
+                what: "batch member shorter than 2 tokens",
+            });
+        }
+        let mut members = Vec::with_capacity(g);
+        let mut stacked = Vec::with_capacity(g * t);
+        for r in batch.iter() {
+            let (_, model) = self
+                .variants
+                .get(r.variant)
+                .ok_or_else(|| ServeError::UnknownTensor(format!("variant #{}", r.variant)))?;
+            members.push(model);
+            stacked.extend_from_slice(&r.tokens);
+            stacked.extend_from_slice(&r.produced);
+        }
+        let fleet = MixedFleet { members };
+        let logits = forward_fleet_distinct(&fleet, &self.cfg, &stacked, 1, t, true);
+
+        let mut out = Vec::with_capacity(g);
+        for (gi, r) in batch.iter_mut().enumerate() {
+            match r.kind {
+                ReqKind::Generate { max_new } => {
+                    let next = argmax(logits.row(gi * t + t - 1));
+                    r.produced.push(next);
+                    out.push(if r.produced.len() >= max_new {
+                        Some(StepOut::Tokens(r.produced.clone()))
+                    } else {
+                        None
+                    });
+                }
+                ReqKind::Score => {
+                    let mut nll = 0.0;
+                    for pos in 0..t - 1 {
+                        nll += row_nll(logits.row(gi * t + pos), r.tokens[pos + 1] as usize, 1.0);
+                    }
+                    out.push(Some(StepOut::Score { nll, count: (t - 1) as f64 }));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The serial oracle: run one request to completion alone, through
+    /// the *same* grouped code path with a group of one. The
+    /// equivalence harness compares every batched output against this.
+    pub fn run_to_completion(
+        &self,
+        variant: usize,
+        tokens: &[i32],
+        kind: ReqKind,
+    ) -> Result<StepOut, ServeError> {
+        let mut batch = vec![SlotRequest {
+            conn: 0,
+            id: 0,
+            variant,
+            tokens: tokens.to_vec(),
+            produced: Vec::new(),
+            kind,
+            seq: 0,
+            admitted: 0,
+        }];
+        loop {
+            let mut done = self.step(&mut batch)?;
+            if let Some(out) = done.pop().expect("singleton result") {
+                return Ok(out);
+            }
+        }
+    }
+}
+
+/// Greedy decode: index of the strictly greatest logit; ties resolve to
+/// the lowest index, so decoding is deterministic.
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Test-only fixtures shared by the daemon's unit, property, and
+/// integration-style tests: a tiny model config plus shared-base rank
+/// variants in the serving deployment shape.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::coordinator::QuantizerSpec;
+    use crate::model::synth::synth_lm_params;
+    use crate::model::Params;
+    use crate::quant::{QuantCtx, Quantizer};
+    use crate::serve::QuantBase;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    /// A 1-layer model small enough to forward in microseconds.
+    pub(crate) fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "tiny-test".into(),
+            vocab: 48,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 64,
+            seq_len: 16,
+        }
+    }
+
+    /// Rank variants sharing one packed base per linear — the serving
+    /// deployment shape, shrunk to test size.
+    pub(crate) fn shared_base_variants(
+        cfg: &ModelCfg,
+        ranks: &[usize],
+        seed: u64,
+    ) -> Vec<(String, FactoredModel)> {
+        let mut rng = Rng::new(seed);
+        let params = synth_lm_params(cfg, seed, cfg.vocab);
+        let spec = QuantizerSpec::Mxint { bits: 4, block: 32 };
+        let names = Params::linear_names(cfg);
+        let bases: Vec<(String, QuantBase)> = names
+            .iter()
+            .map(|n| {
+                let w = params.get_mat(n).expect("linear");
+                let ctx = QuantCtx { hessian: None, seed };
+                let (_, packed) = spec.build().quantize_coded(&w, &ctx);
+                (n.clone(), QuantBase::Packed(Arc::new(packed.expect("packable"))))
+            })
+            .collect();
+        ranks
+            .iter()
+            .map(|&rank| {
+                let mut skeleton = params.clone();
+                let ops: Vec<(String, LinearOp)> = bases
+                    .iter()
+                    .map(|(n, base)| {
+                        skeleton.unset(n);
+                        let (m, k) = (base.rows(), base.cols());
+                        let op = LinearOp::FactoredQlr {
+                            base: base.clone(),
+                            l: Mat::randn(m, rank, 0.05, &mut rng),
+                            r: Mat::randn(rank, k, 0.05, &mut rng),
+                        };
+                        (n.clone(), op)
+                    })
+                    .collect();
+                (format!("r{rank}"), FactoredModel { skeleton, ops })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{shared_base_variants, tiny_cfg};
+    use super::*;
+    use crate::util::Rng;
+
+    fn slot(variant: usize, tokens: Vec<i32>, kind: ReqKind) -> SlotRequest {
+        SlotRequest {
+            conn: 0,
+            id: 0,
+            variant,
+            tokens,
+            produced: Vec::new(),
+            kind,
+            seq: 0,
+            admitted: 0,
+        }
+    }
+
+    /// Mixed-variant batches produce bit-identical outputs to the
+    /// serial oracle, for both generate and score.
+    #[test]
+    fn batched_equals_serial_bitwise() {
+        let cfg = tiny_cfg();
+        let engine = FleetEngine::new(cfg.clone(), shared_base_variants(&cfg, &[2, 4], 11))
+            .expect("aligned variants");
+        let mut rng = Rng::new(7);
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..5).map(|_| rng.below(cfg.vocab) as i32).collect())
+            .collect();
+        let kinds = [
+            ReqKind::Generate { max_new: 3 },
+            ReqKind::Score,
+            ReqKind::Generate { max_new: 3 },
+            ReqKind::Score,
+        ];
+        // batched run: drive all four to completion in lock-step
+        let mut batch: Vec<SlotRequest> = prompts
+            .iter()
+            .zip(&kinds)
+            .enumerate()
+            .map(|(i, (p, &k))| slot(i % 2, p.clone(), k))
+            .collect();
+        let mut batched: Vec<Option<StepOut>> = vec![None; batch.len()];
+        while batch.iter().zip(&batched).any(|(_, d)| d.is_none()) {
+            let live_idx: Vec<usize> =
+                (0..batch.len()).filter(|&i| batched[i].is_none()).collect();
+            let mut live: Vec<SlotRequest> =
+                live_idx.iter().map(|&i| batch[i].clone()).collect();
+            let done = engine.step(&mut live).expect("step");
+            for ((&i, r), d) in live_idx.iter().zip(live).zip(done) {
+                batch[i] = r;
+                if d.is_some() {
+                    batched[i] = d;
+                }
+            }
+        }
+        // serial oracle, one request at a time
+        for (i, (p, &k)) in prompts.iter().zip(&kinds).enumerate() {
+            let serial = engine.run_to_completion(i % 2, p, k).expect("serial");
+            let got = batched[i].clone().expect("finished");
+            match (&serial, &got) {
+                (StepOut::Tokens(a), StepOut::Tokens(b)) => assert_eq!(a, b),
+                (
+                    StepOut::Score { nll: a, count: ca },
+                    StepOut::Score { nll: b, count: cb },
+                ) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "score must be bit-identical");
+                    assert_eq!(ca, cb);
+                }
+                _ => panic!("kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn engine_refuses_malformed_batches() {
+        let cfg = tiny_cfg();
+        let engine = FleetEngine::new(cfg.clone(), shared_base_variants(&cfg, &[2], 11))
+            .expect("aligned variants");
+        // empty batch
+        assert!(matches!(engine.step(&mut []), Err(ServeError::EmptyBatch)));
+        // ragged lengths
+        let mut ragged = vec![
+            slot(0, vec![1, 2, 3], ReqKind::Score),
+            slot(0, vec![1, 2], ReqKind::Score),
+        ];
+        assert!(matches!(engine.step(&mut ragged), Err(ServeError::RaggedStack { .. })));
+        // sub-minimum length (would fall into fused batch-1 kernels)
+        let mut short = vec![slot(0, vec![1], ReqKind::Score)];
+        assert!(matches!(engine.step(&mut short), Err(ServeError::ShapeMismatch { .. })));
+        // unknown variant index
+        let mut bad = vec![slot(9, vec![1, 2, 3], ReqKind::Score)];
+        assert!(matches!(engine.step(&mut bad), Err(ServeError::UnknownTensor(_))));
+        // empty variant table
+        assert!(matches!(
+            FleetEngine::new(cfg, Vec::new()),
+            Err(ServeError::EmptyGroup)
+        ));
+    }
+}

@@ -1,0 +1,214 @@
+//! Open-loop synthetic load generator for the serving daemon.
+//!
+//! Each client thread dials the daemon over TCP, scripts its prompts
+//! from a seeded [`Rng`], and sends on a fixed cadence **without
+//! waiting for replies** (open loop — the arrival rate never adapts to
+//! the daemon, so queueing shows up in the latency tail instead of
+//! being hidden by client backoff). A paired reader thread timestamps
+//! replies. The wall clock here *measures*; it never decides — request
+//! content is a pure function of the spec's seed, which is what lets
+//! the bench re-run every completed request against the serial oracle
+//! and assert bit-identity.
+
+use std::collections::HashMap;
+use std::io::BufWriter;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::Rng;
+
+use super::client::{dial_raw, ServeClient};
+use super::protocol::{ReqKind, ServeReply};
+
+/// What load to offer.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// concurrent client connections
+    pub clients: usize,
+    /// requests each client sends
+    pub per_client: usize,
+    /// send cadence per client (open loop)
+    pub gap: Duration,
+    /// prompt length (≥ 2)
+    pub prompt_len: usize,
+    /// tokens each generate request asks for
+    pub max_new: usize,
+    /// vocab to draw prompt tokens from
+    pub vocab: usize,
+    /// served variant names; client `i` uses `variants[i % len]`
+    pub variants: Vec<String>,
+    /// every k-th request is a score instead of a generate (0 = never)
+    pub score_every: usize,
+    /// base seed; client `i` scripts from `seed ^ i`
+    pub seed: u64,
+}
+
+/// One finished request: what was sent, what came back, how long it
+/// took. Carries everything the oracle check needs to re-run the
+/// request serially.
+#[derive(Clone, Debug)]
+pub struct LoadOutcome {
+    /// served variant name
+    pub variant: String,
+    /// the scripted prompt
+    pub tokens: Vec<i32>,
+    /// generate or score
+    pub kind: ReqKind,
+    /// the daemon's reply
+    pub reply: ServeReply,
+    /// send-to-reply latency
+    pub latency: Duration,
+}
+
+/// Aggregated load-generation results.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// requests sent across all clients
+    pub sent: usize,
+    /// requests answered with tokens or a score
+    pub completed: usize,
+    /// requests shed with a busy reply
+    pub busy: usize,
+    /// requests answered with an error reply (or lost to disconnects)
+    pub errors: usize,
+    /// completed requests per wall-clock second
+    pub sustained_rps: f64,
+    /// median completed-request latency, milliseconds
+    pub p50_ms: f64,
+    /// 99th-percentile completed-request latency, milliseconds
+    pub p99_ms: f64,
+    /// every per-request outcome, for oracle replay
+    pub outcomes: Vec<LoadOutcome>,
+}
+
+/// The prompts and kinds client `i` will send — exposed so the oracle
+/// check can regenerate exactly what the load run sent.
+pub fn scripted_requests(spec: &LoadSpec, client: usize) -> Vec<(Vec<i32>, ReqKind)> {
+    let mut rng = Rng::new(spec.seed ^ client as u64);
+    (0..spec.per_client)
+        .map(|j| {
+            let tokens: Vec<i32> = (0..spec.prompt_len)
+                .map(|_| rng.below(spec.vocab) as i32)
+                .collect();
+            let kind = if spec.score_every > 0 && (j + 1) % spec.score_every == 0 {
+                ReqKind::Score
+            } else {
+                ReqKind::Generate { max_new: spec.max_new }
+            };
+            (tokens, kind)
+        })
+        .collect()
+}
+
+/// Drive `spec` against a TCP daemon at `addr`; blocks until every
+/// client finishes (reply, error, or read timeout per connection).
+pub fn run_open_loop(addr: &str, spec: &LoadSpec) -> Result<LoadReport> {
+    assert!(spec.clients >= 1 && !spec.variants.is_empty());
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..spec.clients {
+        let addr = addr.to_string();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || client_main(&addr, &spec, i)));
+    }
+    let mut outcomes = Vec::new();
+    let mut sent = 0usize;
+    for h in handles {
+        let (n, mut outs) = h.join().expect("load client panicked")?;
+        sent += n;
+        outcomes.append(&mut outs);
+    }
+    let span = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut completed = 0usize;
+    let mut busy = 0usize;
+    let mut errors = sent - outcomes.len(); // sent but never answered
+    let mut lat_ms: Vec<f64> = Vec::new();
+    for o in &outcomes {
+        match &o.reply {
+            ServeReply::Tokens { .. } | ServeReply::Score { .. } => {
+                completed += 1;
+                lat_ms.push(o.latency.as_secs_f64() * 1e3);
+            }
+            ServeReply::Busy { .. } => busy += 1,
+            ServeReply::Error { .. } => errors += 1,
+        }
+    }
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| -> f64 {
+        if lat_ms.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((lat_ms.len() as f64 - 1.0) * p).round() as usize;
+        lat_ms[idx]
+    };
+    Ok(LoadReport {
+        sent,
+        completed,
+        busy,
+        errors,
+        sustained_rps: completed as f64 / span,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        outcomes,
+    })
+}
+
+/// One client: a paced sender plus a reply-draining reader thread.
+#[allow(clippy::type_complexity)]
+fn client_main(
+    addr: &str,
+    spec: &LoadSpec,
+    client: usize,
+) -> Result<(usize, Vec<LoadOutcome>)> {
+    let variant = &spec.variants[client % spec.variants.len()];
+    let stream = dial_raw(addr).with_context(|| format!("load client {client} dialing"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .context("setting read timeout")?;
+    let read_half = stream.try_clone().context("cloning load stream")?;
+    let (mut tx, mut rx) =
+        ServeClient::over(Box::new(BufWriter::new(stream)), Box::new(read_half), variant)
+            .split();
+
+    let script = scripted_requests(spec, client);
+    let expect = script.len();
+    let reader = std::thread::spawn(move || {
+        let mut replies: Vec<(ServeReply, Instant)> = Vec::new();
+        while replies.len() < expect {
+            match rx.recv() {
+                Ok(r) => replies.push((r, Instant::now())),
+                Err(_) => break, // timeout / disconnect: report what we have
+            }
+        }
+        replies
+    });
+
+    let mut sent_at: HashMap<u64, (usize, Instant)> = HashMap::new();
+    for (j, (tokens, kind)) in script.iter().enumerate() {
+        let id = match kind {
+            ReqKind::Generate { max_new } => tx.send_generate(tokens, *max_new)?,
+            ReqKind::Score => tx.send_score(tokens)?,
+        };
+        sent_at.insert(id, (j, Instant::now()));
+        std::thread::sleep(spec.gap);
+    }
+
+    let replies = reader.join().expect("load reader panicked");
+    let mut outcomes = Vec::with_capacity(replies.len());
+    for (reply, at) in replies {
+        let Some(&(j, t_send)) = sent_at.get(&reply.id()) else {
+            continue; // daemon-initiated error frames carry id 0
+        };
+        let (tokens, kind) = &script[j];
+        outcomes.push(LoadOutcome {
+            variant: variant.clone(),
+            tokens: tokens.clone(),
+            kind: *kind,
+            reply,
+            latency: at.duration_since(t_send),
+        });
+    }
+    Ok((expect, outcomes))
+}

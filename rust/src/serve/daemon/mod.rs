@@ -1,0 +1,47 @@
+//! `srr serve` — a continuous-batching inference daemon over the
+//! factored serving layer, proven correct by deterministic replay.
+//!
+//! The daemon coalesces concurrent generate/score requests from many
+//! clients into lock-step batches over [`FleetEngine`]'s variant
+//! table: several rank/bit variants of one sweep served behind one
+//! endpoint, sharing a single packed base per linear (the
+//! `Arc<PackedMat>` sharing that [`LinearOp::matmul_grouped`] turns
+//! into one base decode per batch). Admission control and
+//! backpressure run through the shard plane's `BoundedQueue`; the
+//! client protocol reuses its versioned, checksummed wire frames and
+//! the HELLO handshake, so TCP clients and in-process test clients
+//! (including fault-injected ones) share one code path.
+//!
+//! Module map, in dependency order:
+//!
+//! * [`clock`] — the virtual tick clock; no wall time in decisions.
+//! * [`protocol`] — request/reply/cancel frames over
+//!   [`crate::coordinator::wire`].
+//! * [`scheduler`] — deterministic continuous-batching slot pool.
+//! * [`engine`] — the lock-step mixed-variant forward + serial oracle.
+//! * [`server`] — the IO shell: accept loop, reader threads, event
+//!   loop, replies.
+//! * [`client`] — dial / attach, send, receive.
+//! * [`loadgen`] — seeded open-loop load with latency percentiles.
+//!
+//! The correctness story is the tentpole: every batched request is
+//! bit-identical to running it alone ([`FleetEngine`]'s grouped-path
+//! contract), checked end to end by the property harness and the
+//! `serve_live` bench's oracle replay — not assumed.
+//!
+//! [`LinearOp::matmul_grouped`]: crate::serve::LinearOp::matmul_grouped
+
+pub mod clock;
+pub mod client;
+pub mod engine;
+pub mod loadgen;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use client::ServeClient;
+pub use engine::{FleetEngine, StepOut};
+pub use loadgen::{run_open_loop, LoadReport, LoadSpec};
+pub use protocol::{ReqKind, ServeReply, ServeRequest};
+pub use scheduler::{Admit, SchedConfig, Scheduler, SlotRequest};
+pub use server::{Daemon, DaemonConfig, DaemonHandle, DaemonStats};

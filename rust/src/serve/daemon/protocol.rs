@@ -1,0 +1,269 @@
+//! The client↔daemon serving protocol, built on the shard plane's wire
+//! codec ([`crate::coordinator::wire`]).
+//!
+//! Every message is a versioned, length-prefixed, checksummed
+//! [`Frame`], so the daemon inherits the shard plane's refusal
+//! semantics for free: a truncated stream is
+//! [`WireError::Truncated`], a flipped bit is
+//! [`WireError::BadChecksum`], a stale client binary is
+//! [`WireError::BadVersion`] — all surfaced as values the daemon maps
+//! to a dropped connection, never a panic. Requests are additionally
+//! capped at [`SERVE_MAX_REQUEST_LEN`] via
+//! [`read_frame_limited`](crate::coordinator::wire::read_frame_limited),
+//! so a client advertising a multi-GiB payload length cannot make the
+//! daemon allocate it.
+
+use crate::coordinator::wire::{kind, Frame, WireError, WireReader, WireWriter};
+
+/// Upper bound on one serving request's payload (1 MiB). Prompts are
+/// token ids, so this is far beyond any admissible request; anything
+/// larger is refused at the framing layer before allocation.
+pub const SERVE_MAX_REQUEST_LEN: u64 = 1 << 20;
+
+/// What a client wants done with its prompt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    /// Greedy-decode up to `max_new` tokens after the prompt.
+    Generate {
+        /// number of tokens to generate (≥ 1)
+        max_new: usize,
+    },
+    /// Score the prompt: next-token NLL summed over positions 1..t.
+    Score,
+}
+
+/// One client request: a prompt, the model variant to serve it under
+/// (the per-request quality/latency tier), and what to do.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeRequest {
+    /// client-chosen request id, echoed in the reply
+    pub id: u64,
+    /// which served variant evaluates this request
+    pub variant: String,
+    /// prompt token ids
+    pub tokens: Vec<i32>,
+    /// generate or score
+    pub kind: ReqKind,
+}
+
+/// The daemon's reply to one request (matched by `id`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeReply {
+    /// a generate request's decoded continuation
+    Tokens {
+        /// the request this answers
+        id: u64,
+        /// greedily decoded token ids (length = requested `max_new`)
+        tokens: Vec<i32>,
+    },
+    /// a score request's summed NLL and scored-token count
+    Score {
+        /// the request this answers
+        id: u64,
+        /// Σ next-token negative log-likelihood over the prompt
+        nll: f64,
+        /// number of scored positions (t − 1)
+        count: f64,
+    },
+    /// admission control shed this request — all scheduler slots busy
+    Busy {
+        /// the request this answers
+        id: u64,
+    },
+    /// the request was refused (unknown variant, bad prompt, …)
+    Error {
+        /// the request this answers (0 when no request id was decodable)
+        id: u64,
+        /// what was wrong
+        message: String,
+    },
+}
+
+impl ServeReply {
+    /// The request id this reply answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeReply::Tokens { id, .. }
+            | ServeReply::Score { id, .. }
+            | ServeReply::Busy { id }
+            | ServeReply::Error { id, .. } => *id,
+        }
+    }
+}
+
+/// Encode a request into a [`kind::SERVE_REQUEST`] frame.
+pub fn encode_request(r: &ServeRequest) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(r.id);
+    w.put_str(&r.variant);
+    w.put_i32s(&r.tokens);
+    match r.kind {
+        ReqKind::Generate { max_new } => {
+            w.put_u8(0);
+            w.put_usize(max_new);
+        }
+        ReqKind::Score => w.put_u8(1),
+    }
+    Frame { kind: kind::SERVE_REQUEST, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::SERVE_REQUEST`] payload. Structural problems — a
+/// bad kind tag, trailing bytes, a short buffer — are
+/// [`WireError::Malformed`].
+pub fn decode_request(payload: &[u8]) -> Result<ServeRequest, WireError> {
+    let mut r = WireReader::new(payload);
+    let id = r.get_u64()?;
+    let variant = r.get_str()?;
+    let tokens = r.get_i32s()?;
+    let kind = match r.get_u8()? {
+        0 => ReqKind::Generate { max_new: r.get_usize()? },
+        1 => ReqKind::Score,
+        _ => return Err(WireError::Malformed("bad serve request kind")),
+    };
+    if !r.is_done() {
+        return Err(WireError::Malformed("trailing serve request bytes"));
+    }
+    Ok(ServeRequest { id, variant, tokens, kind })
+}
+
+/// Encode a reply into a [`kind::SERVE_REPLY`] frame.
+pub fn encode_reply(reply: &ServeReply) -> Frame {
+    let mut w = WireWriter::new();
+    match reply {
+        ServeReply::Tokens { id, tokens } => {
+            w.put_u8(0);
+            w.put_u64(*id);
+            w.put_i32s(tokens);
+        }
+        ServeReply::Score { id, nll, count } => {
+            w.put_u8(1);
+            w.put_u64(*id);
+            w.put_f64(*nll);
+            w.put_f64(*count);
+        }
+        ServeReply::Busy { id } => {
+            w.put_u8(2);
+            w.put_u64(*id);
+        }
+        ServeReply::Error { id, message } => {
+            w.put_u8(3);
+            w.put_u64(*id);
+            w.put_str(message);
+        }
+    }
+    Frame { kind: kind::SERVE_REPLY, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::SERVE_REPLY`] payload.
+pub fn decode_reply(payload: &[u8]) -> Result<ServeReply, WireError> {
+    let mut r = WireReader::new(payload);
+    let tag = r.get_u8()?;
+    let reply = match tag {
+        0 => {
+            let id = r.get_u64()?;
+            ServeReply::Tokens { id, tokens: r.get_i32s()? }
+        }
+        1 => {
+            let id = r.get_u64()?;
+            ServeReply::Score { id, nll: r.get_f64()?, count: r.get_f64()? }
+        }
+        2 => ServeReply::Busy { id: r.get_u64()? },
+        3 => {
+            let id = r.get_u64()?;
+            ServeReply::Error { id, message: r.get_str()? }
+        }
+        _ => return Err(WireError::Malformed("bad serve reply tag")),
+    };
+    if !r.is_done() {
+        return Err(WireError::Malformed("trailing serve reply bytes"));
+    }
+    Ok(reply)
+}
+
+/// Encode a cancel into a [`kind::SERVE_CANCEL`] frame.
+pub fn encode_cancel(id: u64) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(id);
+    Frame { kind: kind::SERVE_CANCEL, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::SERVE_CANCEL`] payload.
+pub fn decode_cancel(payload: &[u8]) -> Result<u64, WireError> {
+    let mut r = WireReader::new(payload);
+    let id = r.get_u64()?;
+    if !r.is_done() {
+        return Err(WireError::Malformed("trailing serve cancel bytes"));
+    }
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        for kind in [ReqKind::Generate { max_new: 7 }, ReqKind::Score] {
+            let req = ServeRequest {
+                id: 42,
+                variant: "qer-r8".into(),
+                tokens: vec![1, 2, 3, 250],
+                kind,
+            };
+            let f = encode_request(&req);
+            assert_eq!(decode_request(&f.payload).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let replies = [
+            ServeReply::Tokens { id: 1, tokens: vec![9, 8, 7] },
+            ServeReply::Score { id: 2, nll: 13.25, count: 7.0 },
+            ServeReply::Busy { id: 3 },
+            ServeReply::Error { id: 4, message: "unknown variant".into() },
+        ];
+        for r in &replies {
+            let f = encode_reply(r);
+            assert_eq!(&decode_reply(&f.payload).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn cancel_roundtrip() {
+        let f = encode_cancel(77);
+        assert_eq!(decode_cancel(&f.payload).unwrap(), 77);
+    }
+
+    /// Negative decode paths: every malformed payload is a
+    /// `Malformed`-class error, never a panic.
+    #[test]
+    fn malformed_payloads_are_refused() {
+        // short buffers at several cut points
+        let good = encode_request(&ServeRequest {
+            id: 1,
+            variant: "v".into(),
+            tokens: vec![1, 2],
+            kind: ReqKind::Score,
+        })
+        .payload;
+        for cut in 0..good.len() {
+            assert!(
+                matches!(decode_request(&good[..cut]), Err(WireError::Malformed(_))),
+                "cut at {cut} must be refused"
+            );
+        }
+        // bad request kind tag
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() = 9;
+        assert!(matches!(decode_request(&bad), Err(WireError::Malformed(_))));
+        // trailing bytes
+        let mut long = good.clone();
+        long.push(0);
+        assert!(matches!(decode_request(&long), Err(WireError::Malformed(_))));
+        // bad reply tag
+        assert!(matches!(decode_reply(&[9u8; 9]), Err(WireError::Malformed(_))));
+        // short cancel
+        assert!(matches!(decode_cancel(&[1, 2, 3]), Err(WireError::Malformed(_))));
+    }
+}

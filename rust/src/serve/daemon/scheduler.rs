@@ -1,0 +1,231 @@
+//! The continuous-batching scheduler.
+//!
+//! Pure decision logic: given the set of admitted in-flight requests,
+//! pick the next lock-step batch. No IO, no wall clock, no threads —
+//! every method is a deterministic function of the scheduler's state
+//! and its arguments, which is what lets the property harness replay
+//! any schedule bit-exactly from a seed.
+//!
+//! Batching rule: all members of a batch must share the same current
+//! sequence length (the fleet forward is a lock-step `g × b × t`
+//! stack), so `take_batch` picks the **oldest** waiting request (lowest
+//! admission sequence number) and fills the batch with other waiting
+//! requests of the same current length, oldest-first, up to
+//! `max_batch`. Unfinished members are `restore`d after the step and
+//! compete again next round — a freshly admitted short request can
+//! therefore join a half-decoded batch as soon as its lengths align,
+//! which is exactly continuous batching.
+
+use super::clock::Tick;
+use super::protocol::ReqKind;
+
+/// Scheduler limits (admission control).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// max in-flight requests; admission sheds beyond this (backpressure)
+    pub max_slots: usize,
+    /// max requests evaluated in one lock-step forward
+    pub max_batch: usize,
+}
+
+/// One admitted request occupying a scheduler slot.
+#[derive(Clone, Debug)]
+pub struct SlotRequest {
+    /// owning connection (slots are freed when it disconnects)
+    pub conn: u64,
+    /// client-chosen request id (reply routing key)
+    pub id: u64,
+    /// index into the engine's served-variant table
+    pub variant: usize,
+    /// prompt token ids
+    pub tokens: Vec<i32>,
+    /// tokens decoded so far (generate requests only)
+    pub produced: Vec<i32>,
+    /// what to do with the prompt
+    pub kind: ReqKind,
+    /// admission order — the scheduler's total tie-break order
+    pub seq: u64,
+    /// tick at which the request was admitted
+    pub admitted: Tick,
+}
+
+impl SlotRequest {
+    /// Current sequence length: prompt plus everything decoded so far.
+    pub fn cur_len(&self) -> usize {
+        self.tokens.len() + self.produced.len()
+    }
+}
+
+/// Admission verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// the request holds a slot and will be scheduled
+    Accepted,
+    /// all slots busy — request shed with an explicit busy reply
+    Busy,
+}
+
+/// Deterministic continuous-batching scheduler over a bounded slot
+/// pool.
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: SchedConfig,
+    slots: Vec<SlotRequest>,
+    next_seq: u64,
+}
+
+impl Scheduler {
+    /// An empty scheduler with the given limits.
+    pub fn new(cfg: SchedConfig) -> Self {
+        Scheduler { cfg, slots: Vec::new(), next_seq: 0 }
+    }
+
+    /// Number of in-flight requests holding slots.
+    pub fn active(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Admit a request, or shed it when every slot is taken. The
+    /// `seq`/`admitted` fields of `req` are overwritten here — callers
+    /// pass zeros.
+    pub fn admit(&mut self, mut req: SlotRequest, now: Tick) -> Admit {
+        if self.slots.len() >= self.cfg.max_slots {
+            return Admit::Busy;
+        }
+        req.seq = self.next_seq;
+        self.next_seq += 1;
+        req.admitted = now;
+        self.slots.push(req);
+        Admit::Accepted
+    }
+
+    /// Cancel one waiting request by `(conn, id)`; returns whether a
+    /// slot was freed.
+    pub fn cancel(&mut self, conn: u64, id: u64) -> bool {
+        let before = self.slots.len();
+        self.slots.retain(|s| !(s.conn == conn && s.id == id));
+        self.slots.len() < before
+    }
+
+    /// Free every slot owned by a disconnected connection; returns how
+    /// many were freed.
+    pub fn drop_conn(&mut self, conn: u64) -> usize {
+        let before = self.slots.len();
+        self.slots.retain(|s| s.conn != conn);
+        before - self.slots.len()
+    }
+
+    /// Remove and return the next lock-step batch: the oldest waiting
+    /// request plus every other waiting request of the same current
+    /// length, oldest-first, capped at `max_batch`. Empty when idle.
+    pub fn take_batch(&mut self) -> Vec<SlotRequest> {
+        let Some(oldest) = self.slots.iter().min_by_key(|s| s.seq) else {
+            return Vec::new();
+        };
+        let t0 = oldest.cur_len();
+        let mut picked: Vec<u64> = self
+            .slots
+            .iter()
+            .filter(|s| s.cur_len() == t0)
+            .map(|s| s.seq)
+            .collect();
+        picked.sort_unstable();
+        picked.truncate(self.cfg.max_batch);
+        let mut batch = Vec::with_capacity(picked.len());
+        let mut kept = Vec::with_capacity(self.slots.len());
+        for s in self.slots.drain(..) {
+            if picked.contains(&s.seq) {
+                batch.push(s);
+            } else {
+                kept.push(s);
+            }
+        }
+        self.slots = kept;
+        batch.sort_by_key(|s| s.seq);
+        batch
+    }
+
+    /// Return an unfinished request to its slot after a step. Its
+    /// `seq` is preserved, so scheduling priority is stable across
+    /// steps.
+    pub fn restore(&mut self, req: SlotRequest) {
+        self.slots.push(req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(conn: u64, id: u64, len: usize) -> SlotRequest {
+        SlotRequest {
+            conn,
+            id,
+            variant: 0,
+            tokens: vec![1; len],
+            produced: Vec::new(),
+            kind: ReqKind::Score,
+            seq: 0,
+            admitted: 0,
+        }
+    }
+
+    #[test]
+    fn batches_group_by_length_oldest_first() {
+        let mut s = Scheduler::new(SchedConfig { max_slots: 8, max_batch: 2 });
+        assert_eq!(s.admit(req(1, 1, 4), 0), Admit::Accepted); // seq 0, len 4
+        assert_eq!(s.admit(req(1, 2, 5), 0), Admit::Accepted); // seq 1, len 5
+        assert_eq!(s.admit(req(2, 3, 4), 0), Admit::Accepted); // seq 2, len 4
+        assert_eq!(s.admit(req(2, 4, 4), 0), Admit::Accepted); // seq 3, len 4
+        // oldest is seq 0 (len 4); same-length peers seq 2, 3; cap 2.
+        let b = s.take_batch();
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(s.active(), 2);
+        // next round: oldest remaining is seq 1 (len 5), alone.
+        let b = s.take_batch();
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        // last: seq 3.
+        let b = s.take_batch();
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert!(s.take_batch().is_empty());
+    }
+
+    #[test]
+    fn admission_sheds_at_capacity_and_frees_on_cancel() {
+        let mut s = Scheduler::new(SchedConfig { max_slots: 2, max_batch: 8 });
+        assert_eq!(s.admit(req(1, 1, 3), 0), Admit::Accepted);
+        assert_eq!(s.admit(req(1, 2, 3), 0), Admit::Accepted);
+        assert_eq!(s.admit(req(1, 3, 3), 0), Admit::Busy);
+        assert!(s.cancel(1, 2));
+        assert!(!s.cancel(1, 2)); // already gone
+        assert_eq!(s.admit(req(1, 3, 3), 1), Admit::Accepted);
+        assert_eq!(s.active(), 2);
+    }
+
+    #[test]
+    fn drop_conn_frees_every_owned_slot() {
+        let mut s = Scheduler::new(SchedConfig { max_slots: 8, max_batch: 8 });
+        s.admit(req(7, 1, 3), 0);
+        s.admit(req(7, 2, 3), 0);
+        s.admit(req(9, 3, 3), 0);
+        assert_eq!(s.drop_conn(7), 2);
+        assert_eq!(s.active(), 1);
+        assert_eq!(s.take_batch()[0].id, 3);
+    }
+
+    #[test]
+    fn restore_preserves_priority() {
+        let mut s = Scheduler::new(SchedConfig { max_slots: 8, max_batch: 1 });
+        s.admit(req(1, 1, 3), 0);
+        s.admit(req(1, 2, 3), 0);
+        let mut b = s.take_batch();
+        assert_eq!(b[0].id, 1);
+        // simulate one decoded token, then restore: id 1 now has len 4
+        let mut r = b.pop().unwrap();
+        r.produced.push(42);
+        s.restore(r);
+        // oldest is still id 1 (seq 0) even though id 2 arrived earlier
+        // at its current length.
+        assert_eq!(s.take_batch()[0].id, 1);
+    }
+}

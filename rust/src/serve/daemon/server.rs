@@ -1,0 +1,673 @@
+//! The daemon's IO shell: connection admission, per-connection reader
+//! threads, the reply path, and the scheduling event loop.
+//!
+//! The layering is strict. Everything nondeterministic — sockets,
+//! threads, arrival timing — lives here and is reduced to an ordered
+//! stream of [`Event`]s; everything decision-shaped (which requests
+//! batch together, what each produces) lives in the deterministic
+//! [`Scheduler`] + [`FleetEngine`] pair driven off a [`VirtualClock`].
+//! The property harness replays scripted event streams through that
+//! pair directly, so the logic this loop executes is the logic the
+//! seeds exercise.
+//!
+//! Connections arrive two ways sharing one serving path:
+//!
+//! * **TCP** — [`Daemon::bind`] + the shard plane's
+//!   [`ShardHost::accept_loop`]: every dial-in must pass the versioned
+//!   HELLO handshake (daemon = host role), so a stale or hostile peer
+//!   is refused before it can touch the request protocol.
+//! * **In-process** — [`DaemonHandle::admit`] attaches any open
+//!   [`Transport`] (e.g. a [`FaultTransport`] in the churn tests)
+//!   directly, skipping only the TCP handshake.
+//!
+//! Misbehavior never stops service: a malformed frame ends *that*
+//! connection (with a best-effort error reply), a disconnect or cancel
+//! frees the scheduler slots it owned, and admission beyond
+//! `max_slots` is shed with an explicit [`ServeReply::Busy`].
+//!
+//! [`FaultTransport`]: crate::coordinator::FaultTransport
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::jobs::{BoundedQueue, PopResult};
+use crate::coordinator::wire::{kind, read_frame_limited};
+use crate::coordinator::{ShardHost, Transport};
+
+use super::clock::VirtualClock;
+use super::engine::{FleetEngine, StepOut};
+use super::protocol::{
+    decode_cancel, decode_request, encode_reply, ReqKind, ServeReply, ServeRequest,
+    SERVE_MAX_REQUEST_LEN,
+};
+use super::scheduler::{Admit, SchedConfig, Scheduler, SlotRequest};
+
+/// Daemon limits and pacing.
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonConfig {
+    /// max in-flight requests before admission sheds (backpressure)
+    pub max_slots: usize,
+    /// max requests per lock-step forward
+    pub max_batch: usize,
+    /// minimum prompt length (must stay ≥ 2: shorter members would
+    /// reach the fused batch-1 kernels and break bit-identity)
+    pub min_prompt: usize,
+    /// max total sequence length (prompt + generated); 0 = the served
+    /// model's `seq_len`
+    pub max_seq: usize,
+    /// max `max_new` a generate request may ask for
+    pub max_new_cap: usize,
+    /// how long the idle event loop blocks waiting for an event
+    pub idle_wait: Duration,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            max_slots: 16,
+            max_batch: 8,
+            min_prompt: 2,
+            max_seq: 0,
+            max_new_cap: 64,
+            idle_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Live daemon counters, shared with the handle for observability and
+/// the churn tests' leak assertions.
+#[derive(Debug, Default)]
+pub struct DaemonStats {
+    /// requests currently holding scheduler slots
+    pub active_slots: AtomicUsize,
+    /// replies delivered (tokens / score)
+    pub served: AtomicU64,
+    /// requests shed with a busy reply
+    pub shed: AtomicU64,
+    /// requests refused with an error reply (validation failures)
+    pub refused: AtomicU64,
+    /// connections dropped for protocol violations
+    pub malformed: AtomicU64,
+    /// connections that ended (EOF, error, or kill)
+    pub disconnects: AtomicU64,
+}
+
+/// One nondeterministic input, ordered by arrival into the event
+/// queue. The reader threads produce these; only the event loop
+/// consumes them.
+enum Event {
+    /// a decoded request frame from connection `conn`
+    Request { conn: u64, req: ServeRequest },
+    /// a cancel frame for request `id` on connection `conn`
+    Cancel { conn: u64, id: u64 },
+    /// connection `conn` is finished; `Some` carries a protocol-
+    /// violation description (clean EOF is `None`)
+    Gone { conn: u64, violation: Option<String> },
+}
+
+/// The continuous-batching serving daemon: admission control, the
+/// scheduler event loop, and reply delivery over any [`Transport`].
+pub struct Daemon {
+    engine: FleetEngine,
+    cfg: DaemonConfig,
+    host: Option<ShardHost>,
+    conns_q: Arc<BoundedQueue<Box<dyn Transport>>>,
+    stats: Arc<DaemonStats>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Control handle to a spawned [`Daemon`]: admit in-process
+/// connections, read stats, stop, join.
+pub struct DaemonHandle {
+    stop: Arc<AtomicBool>,
+    stats: Arc<DaemonStats>,
+    conns_q: Arc<BoundedQueue<Box<dyn Transport>>>,
+    thread: JoinHandle<()>,
+}
+
+impl DaemonHandle {
+    /// Attach an already-open connection (in-process test client or
+    /// fault-injected loopback). Returns `false` once the daemon is
+    /// stopping.
+    pub fn admit(&self, t: Box<dyn Transport>) -> bool {
+        self.conns_q.push(t)
+    }
+
+    /// Live counters.
+    pub fn stats(&self) -> &DaemonStats {
+        &self.stats
+    }
+
+    /// Ask the daemon to stop after the current scheduling round.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.conns_q.close();
+    }
+
+    /// Stop and wait for the event loop to exit.
+    pub fn join(self) {
+        self.stop();
+        let _ = self.thread.join();
+    }
+}
+
+impl Daemon {
+    /// A daemon serving `engine`'s variants under `cfg`'s limits. Not
+    /// yet listening: call [`Daemon::bind`] for TCP, then
+    /// [`Daemon::spawn`].
+    pub fn new(engine: FleetEngine, cfg: DaemonConfig) -> Daemon {
+        assert!(cfg.min_prompt >= 2, "min_prompt < 2 breaks bit-identity");
+        assert!(cfg.max_slots >= 1 && cfg.max_batch >= 1);
+        Daemon {
+            engine,
+            cfg,
+            host: None,
+            conns_q: Arc::new(BoundedQueue::new(64)),
+            stats: Arc::new(DaemonStats::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Listen on `addr` (e.g. `127.0.0.1:0`); returns the bound
+    /// address clients dial. TCP clients must pass the HELLO
+    /// handshake ([`crate::coordinator::transport::worker_connect`]).
+    pub fn bind(&mut self, addr: &str) -> Result<SocketAddr> {
+        let host = ShardHost::bind(addr)?;
+        let bound = host.local_addr()?;
+        self.host = Some(host);
+        Ok(bound)
+    }
+
+    /// Start the event loop (and the TCP accept loop when bound) on
+    /// background threads.
+    pub fn spawn(self) -> DaemonHandle {
+        let stop = self.stop.clone();
+        let stats = self.stats.clone();
+        let conns_q = self.conns_q.clone();
+        let thread = std::thread::spawn(move || self.run_loop());
+        DaemonHandle { stop, stats, conns_q, thread }
+    }
+
+    /// The event loop. Single-threaded over scheduler + engine +
+    /// reply writing; reader threads and the accept loop only feed
+    /// the queues.
+    fn run_loop(mut self) {
+        let events: Arc<BoundedQueue<Event>> =
+            Arc::new(BoundedQueue::new((self.cfg.max_slots * 4).max(64)));
+        // TCP accept loop on its own thread (owns the listener)
+        let mut accept_thread = None;
+        if let Some(host) = self.host.take() {
+            let stop = self.stop.clone();
+            let conns_q = self.conns_q.clone();
+            accept_thread = Some(std::thread::spawn(move || {
+                host.accept_loop(&stop, |t| {
+                    let _ = conns_q.push(Box::new(t));
+                });
+            }));
+        }
+
+        let max_seq = if self.cfg.max_seq == 0 {
+            self.engine.cfg().seq_len
+        } else {
+            self.cfg.max_seq
+        };
+        let mut clock = VirtualClock::new();
+        let mut sched = Scheduler::new(SchedConfig {
+            max_slots: self.cfg.max_slots,
+            max_batch: self.cfg.max_batch,
+        });
+        let mut conns: HashMap<u64, Box<dyn Transport>> = HashMap::new();
+        let mut next_conn: u64 = 0;
+
+        while !self.stop.load(Ordering::Acquire) {
+            // attach newly admitted connections
+            while let PopResult::Item(mut t) = self.conns_q.try_pop() {
+                let conn = next_conn;
+                next_conn += 1;
+                if let Some(reader) = t.take_reader() {
+                    let ev = events.clone();
+                    std::thread::spawn(move || reader_main(conn, reader, &ev));
+                    conns.insert(conn, t);
+                } else {
+                    self.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+
+            // drain pending events without blocking
+            let mut handled = 0usize;
+            while let PopResult::Item(ev) = events.try_pop() {
+                self.handle_event(ev, clock.now(), max_seq, &mut sched, &mut conns);
+                handled += 1;
+                if handled >= 256 {
+                    break; // bounded per round so scheduling stays live
+                }
+            }
+
+            self.stats.active_slots.store(sched.active(), Ordering::Relaxed);
+            if sched.active() == 0 {
+                // idle: block briefly for the next event
+                match events.pop_timeout(self.cfg.idle_wait) {
+                    PopResult::Item(ev) => {
+                        self.handle_event(ev, clock.now(), max_seq, &mut sched, &mut conns)
+                    }
+                    PopResult::Empty | PopResult::Closed => {}
+                }
+                continue;
+            }
+
+            // one scheduling round
+            clock.advance();
+            let mut batch = sched.take_batch();
+            match self.engine.step(&mut batch) {
+                Ok(done) => {
+                    for (req, out) in batch.into_iter().zip(done) {
+                        match out {
+                            Some(StepOut::Tokens(tokens)) => {
+                                self.reply(
+                                    &mut conns,
+                                    &mut sched,
+                                    req.conn,
+                                    &ServeReply::Tokens { id: req.id, tokens },
+                                );
+                                self.stats.served.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Some(StepOut::Score { nll, count }) => {
+                                self.reply(
+                                    &mut conns,
+                                    &mut sched,
+                                    req.conn,
+                                    &ServeReply::Score { id: req.id, nll, count },
+                                );
+                                self.stats.served.fetch_add(1, Ordering::Relaxed);
+                            }
+                            None => sched.restore(req),
+                        }
+                    }
+                }
+                Err(e) => {
+                    // admission validated everything the engine checks,
+                    // so this is unreachable in practice; refuse the
+                    // batch rather than crash the daemon if it ever
+                    // happens
+                    for req in batch {
+                        self.reply(
+                            &mut conns,
+                            &mut sched,
+                            req.conn,
+                            &ServeReply::Error { id: req.id, message: e.to_string() },
+                        );
+                        self.stats.refused.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            self.stats.active_slots.store(sched.active(), Ordering::Relaxed);
+        }
+
+        // teardown: sever every connection so reader threads unblock
+        for (_, mut t) in conns.drain() {
+            t.kill();
+        }
+        self.conns_q.close();
+        while let PopResult::Item(mut t) = self.conns_q.try_pop() {
+            t.kill();
+        }
+        events.close();
+        if let Some(h) = accept_thread {
+            let _ = h.join();
+        }
+    }
+
+    /// Apply one event to the scheduler state.
+    fn handle_event(
+        &self,
+        ev: Event,
+        now: super::clock::Tick,
+        max_seq: usize,
+        sched: &mut Scheduler,
+        conns: &mut HashMap<u64, Box<dyn Transport>>,
+    ) {
+        match ev {
+            Event::Request { conn, req } => {
+                let id = req.id;
+                match self.validate(&req, max_seq) {
+                    Ok(slot0) => {
+                        let slot = SlotRequest { conn, ..slot0 };
+                        match sched.admit(slot, now) {
+                            Admit::Accepted => {}
+                            Admit::Busy => {
+                                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                                self.reply(conns, sched, conn, &ServeReply::Busy { id });
+                            }
+                        }
+                    }
+                    Err(message) => {
+                        self.stats.refused.fetch_add(1, Ordering::Relaxed);
+                        self.reply(conns, sched, conn, &ServeReply::Error { id, message });
+                    }
+                }
+            }
+            Event::Cancel { conn, id } => {
+                sched.cancel(conn, id);
+            }
+            Event::Gone { conn, violation } => {
+                if let Some(message) = violation {
+                    self.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                    // best-effort: tell the peer why before severing
+                    self.reply(conns, sched, conn, &ServeReply::Error { id: 0, message });
+                }
+                if let Some(mut t) = conns.remove(&conn) {
+                    t.kill();
+                    self.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                sched.drop_conn(conn);
+            }
+        }
+    }
+
+    /// Admission validation: everything that must hold for the engine
+    /// to evaluate the request without panicking, checked while the
+    /// request is still refusable.
+    fn validate(&self, req: &ServeRequest, max_seq: usize) -> Result<SlotRequest, String> {
+        let variant = self
+            .engine
+            .variant_index(&req.variant)
+            .ok_or_else(|| format!("unknown variant {:?}", req.variant))?;
+        if req.tokens.len() < self.cfg.min_prompt {
+            return Err(format!(
+                "prompt too short: {} < {}",
+                req.tokens.len(),
+                self.cfg.min_prompt
+            ));
+        }
+        let vocab = self.engine.cfg().vocab;
+        if let Some(&bad) = req.tokens.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+            return Err(format!("token id {bad} outside vocab {vocab}"));
+        }
+        let new = match req.kind {
+            ReqKind::Generate { max_new } => {
+                if max_new < 1 || max_new > self.cfg.max_new_cap {
+                    return Err(format!(
+                        "max_new {max_new} outside [1, {}]",
+                        self.cfg.max_new_cap
+                    ));
+                }
+                max_new
+            }
+            ReqKind::Score => 0,
+        };
+        if req.tokens.len() + new > max_seq {
+            return Err(format!(
+                "request length {} + {new} exceeds max seq {max_seq}",
+                req.tokens.len()
+            ));
+        }
+        Ok(SlotRequest {
+            conn: 0,
+            id: req.id,
+            variant,
+            tokens: req.tokens.clone(),
+            produced: Vec::new(),
+            kind: req.kind,
+            seq: 0,
+            admitted: 0,
+        })
+    }
+
+    /// Write one reply frame to a connection; a failed write means the
+    /// peer is gone, so its slots are freed and the transport killed.
+    fn reply(
+        &self,
+        conns: &mut HashMap<u64, Box<dyn Transport>>,
+        sched: &mut Scheduler,
+        conn: u64,
+        reply: &ServeReply,
+    ) {
+        let ok = match conns.get_mut(&conn).and_then(|t| t.writer()) {
+            Some(w) => encode_reply(reply).write_to(w).and_then(|_| w.flush()).is_ok(),
+            None => false,
+        };
+        if !ok {
+            if let Some(mut t) = conns.remove(&conn) {
+                t.kill();
+                self.stats.disconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            sched.drop_conn(conn);
+        }
+    }
+}
+
+/// Per-connection reader: turn the byte stream into events until EOF,
+/// error, or protocol violation. Never panics on peer bytes — every
+/// decode failure is a value that ends only this connection.
+fn reader_main(
+    conn: u64,
+    mut reader: Box<dyn std::io::Read + Send>,
+    events: &BoundedQueue<Event>,
+) {
+    loop {
+        match read_frame_limited(&mut reader, SERVE_MAX_REQUEST_LEN) {
+            Ok(Some(frame)) => {
+                let ev = match frame.kind {
+                    kind::SERVE_REQUEST => match decode_request(&frame.payload) {
+                        Ok(req) => Event::Request { conn, req },
+                        Err(e) => Event::Gone { conn, violation: Some(e.to_string()) },
+                    },
+                    kind::SERVE_CANCEL => match decode_cancel(&frame.payload) {
+                        Ok(id) => Event::Cancel { conn, id },
+                        Err(e) => Event::Gone { conn, violation: Some(e.to_string()) },
+                    },
+                    k => Event::Gone {
+                        conn,
+                        violation: Some(format!("unexpected frame kind {k}")),
+                    },
+                };
+                let fatal = matches!(ev, Event::Gone { .. });
+                if !events.push(ev) || fatal {
+                    return;
+                }
+            }
+            Ok(None) => {
+                let _ = events.push(Event::Gone { conn, violation: None });
+                return;
+            }
+            Err(e) => {
+                let _ = events.push(Event::Gone { conn, violation: Some(e.to_string()) });
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::testutil::{shared_base_variants, tiny_cfg};
+    use super::*;
+    use crate::util::prop;
+
+    /// One scripted event in a replayable schedule. The whole script is
+    /// generated up front from the case seed, so a reported seed replays
+    /// the exact interleaving of arrivals, cancels, disconnects, and
+    /// scheduling rounds.
+    enum Action {
+        /// a validated request arrives on `conn`
+        Arrive { conn: u64, id: u64, variant: usize, tokens: Vec<i32>, kind: ReqKind },
+        /// the client cancels a previously issued request
+        Cancel { conn: u64, id: u64 },
+        /// `conn` disconnects, freeing every slot it owns
+        Disconnect { conn: u64 },
+        /// the event loop runs one scheduling round
+        Round,
+    }
+
+    fn scripted_schedule(g: &mut prop::Gen, vocab: usize, n_variants: usize) -> Vec<Action> {
+        let mut script = Vec::new();
+        let mut issued: Vec<(u64, u64)> = Vec::new();
+        let mut next_id = 1u64;
+        let n = 8 + g.rng.below(8);
+        for _ in 0..n {
+            match g.rng.below(10) {
+                0..=5 => {
+                    let conn = g.rng.below(3) as u64;
+                    let len = 2 + g.rng.below(4);
+                    let tokens = (0..len).map(|_| g.rng.below(vocab) as i32).collect();
+                    let kind = if g.rng.below(3) == 0 {
+                        ReqKind::Score
+                    } else {
+                        ReqKind::Generate { max_new: 1 + g.rng.below(3) }
+                    };
+                    let id = next_id;
+                    next_id += 1;
+                    issued.push((conn, id));
+                    script.push(Action::Arrive {
+                        conn,
+                        id,
+                        variant: g.rng.below(n_variants),
+                        tokens,
+                        kind,
+                    });
+                }
+                6 if !issued.is_empty() => {
+                    let (conn, id) = issued[g.rng.below(issued.len())];
+                    script.push(Action::Cancel { conn, id });
+                }
+                7 => script.push(Action::Disconnect { conn: g.rng.below(3) as u64 }),
+                _ => script.push(Action::Round),
+            }
+        }
+        script
+    }
+
+    /// One scheduling round, exactly as the event loop runs it:
+    /// advance the virtual clock, take a lock-step batch, step the
+    /// engine, restore the unfinished. Completions are checked off
+    /// against the reference in-flight set.
+    fn run_round(
+        engine: &FleetEngine,
+        max_batch: usize,
+        sched: &mut Scheduler,
+        clock: &mut VirtualClock,
+        inflight: &mut HashMap<(u64, u64), (usize, Vec<i32>, ReqKind)>,
+        completed: &mut Vec<(usize, Vec<i32>, ReqKind, StepOut)>,
+    ) {
+        clock.advance();
+        let mut batch = sched.take_batch();
+        assert!(batch.len() <= max_batch, "batch exceeds max_batch");
+        if batch.is_empty() {
+            return;
+        }
+        let t0 = batch[0].cur_len();
+        assert!(batch.iter().all(|r| r.cur_len() == t0), "ragged batch");
+        let outs = engine.step(&mut batch).expect("scheduler emits engine-valid batches");
+        for (req, out) in batch.into_iter().zip(outs) {
+            match out {
+                Some(o) => {
+                    let (variant, tokens, kind) = inflight
+                        .remove(&(req.conn, req.id))
+                        .expect("completed request was in flight");
+                    completed.push((variant, tokens, kind, o));
+                }
+                None => sched.restore(req),
+            }
+        }
+    }
+
+    /// Satellite property: any seeded schedule of arrivals, cancels,
+    /// and disconnects — mixed variants sharing one packed base, batch
+    /// sizes {1, 2, 8} — produces, for every request that survives to
+    /// completion, output **bit-identical** to serial one-at-a-time
+    /// execution; and admission / cancel / disconnect bookkeeping
+    /// matches a reference in-flight set (no slot leaks, no completions
+    /// for freed requests). A failure prints its replay seed (see
+    /// [`crate::util::prop`]).
+    #[test]
+    fn scheduled_outputs_match_serial_oracle() {
+        let cfg = tiny_cfg();
+        let engine = FleetEngine::new(cfg.clone(), shared_base_variants(&cfg, &[2, 4], 23))
+            .expect("aligned variants");
+        prop::check(0x5E12_BA7C, 12, |g| {
+            let max_batch = g.choice(&[1usize, 2, 8]);
+            let max_slots = g.choice(&[2usize, 4, 8]);
+            let script = scripted_schedule(g, cfg.vocab, 2);
+            let mut sched = Scheduler::new(SchedConfig { max_slots, max_batch });
+            let mut clock = VirtualClock::new();
+            let mut inflight: HashMap<(u64, u64), (usize, Vec<i32>, ReqKind)> = HashMap::new();
+            let mut completed: Vec<(usize, Vec<i32>, ReqKind, StepOut)> = Vec::new();
+            for a in &script {
+                match a {
+                    Action::Arrive { conn, id, variant, tokens, kind } => {
+                        let slot = SlotRequest {
+                            conn: *conn,
+                            id: *id,
+                            variant: *variant,
+                            tokens: tokens.clone(),
+                            produced: Vec::new(),
+                            kind: *kind,
+                            seq: 0,
+                            admitted: 0,
+                        };
+                        let expect_busy = inflight.len() >= max_slots;
+                        match sched.admit(slot, clock.now()) {
+                            Admit::Accepted => {
+                                assert!(!expect_busy, "admitted past capacity");
+                                inflight.insert((*conn, *id), (*variant, tokens.clone(), *kind));
+                            }
+                            Admit::Busy => assert!(expect_busy, "shed below capacity"),
+                        }
+                    }
+                    Action::Cancel { conn, id } => {
+                        let freed = sched.cancel(*conn, *id);
+                        assert_eq!(freed, inflight.remove(&(*conn, *id)).is_some());
+                    }
+                    Action::Disconnect { conn } => {
+                        let owned = inflight.keys().filter(|(c, _)| c == conn).count();
+                        assert_eq!(sched.drop_conn(*conn), owned);
+                        inflight.retain(|(c, _), _| c != conn);
+                    }
+                    Action::Round => run_round(
+                        &engine,
+                        max_batch,
+                        &mut sched,
+                        &mut clock,
+                        &mut inflight,
+                        &mut completed,
+                    ),
+                }
+                assert_eq!(sched.active(), inflight.len(), "slot leak");
+            }
+            // drain: everything still admitted must run to completion
+            while sched.active() > 0 {
+                run_round(
+                    &engine,
+                    max_batch,
+                    &mut sched,
+                    &mut clock,
+                    &mut inflight,
+                    &mut completed,
+                );
+            }
+            assert!(inflight.is_empty(), "in-flight requests never completed");
+            // every survivor matches serial execution bit for bit
+            for (variant, tokens, kind, got) in &completed {
+                let serial =
+                    engine.run_to_completion(*variant, tokens, *kind).expect("serial oracle");
+                match (&serial, got) {
+                    (StepOut::Tokens(a), StepOut::Tokens(b)) => assert_eq!(a, b),
+                    (
+                        StepOut::Score { nll: a, count: ca },
+                        StepOut::Score { nll: b, count: cb },
+                    ) => {
+                        assert_eq!(a.to_bits(), b.to_bits(), "score must be bit-identical");
+                        assert_eq!(ca.to_bits(), cb.to_bits());
+                    }
+                    _ => panic!("kind mismatch vs oracle"),
+                }
+            }
+        });
+    }
+}

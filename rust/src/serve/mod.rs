@@ -54,6 +54,50 @@ use crate::quant::packed::PackedMat;
 use crate::tensor::{matmul, Mat};
 use crate::util::pool;
 
+pub mod daemon;
+
+/// A serving-path input that cannot be evaluated: malformed op groups
+/// and unknown tensor names surface as values instead of panics, so the
+/// always-on daemon ([`daemon`]) can refuse one bad request and keep
+/// serving every other client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// [`LinearOp::matmul_grouped`] was called with an empty op group.
+    EmptyGroup,
+    /// The stacked activation matrix has zero rows.
+    EmptyBatch,
+    /// Stacked rows are not divisible by the group size.
+    RaggedStack {
+        /// rows of the stacked activation matrix
+        rows: usize,
+        /// number of ops in the group
+        group: usize,
+    },
+    /// Ops in one group (or the op and its input) disagree on shape.
+    ShapeMismatch {
+        /// human-readable description of the disagreement
+        what: &'static str,
+    },
+    /// A request named a tensor the model does not carry.
+    UnknownTensor(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::EmptyGroup => write!(f, "empty op group"),
+            ServeError::EmptyBatch => write!(f, "zero-row activation batch"),
+            ServeError::RaggedStack { rows, group } => {
+                write!(f, "stacked rows {rows} not divisible by group {group}")
+            }
+            ServeError::ShapeMismatch { what } => write!(f, "shape mismatch: {what}"),
+            ServeError::UnknownTensor(name) => write!(f, "unknown tensor {name:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// The quantized base of a factored linear. Cheap to clone: both
 /// variants share their buffer through an [`Arc`].
 #[derive(Clone, Debug)]
@@ -293,10 +337,29 @@ impl LinearOp {
     /// on its block whenever the stacked and per-op calls both take the
     /// batched (`rows > 1`) base path — the per-element summation order
     /// is unchanged by stacking.
-    pub fn matmul_grouped(ops: &[&LinearOp], x: &Mat) -> Mat {
+    ///
+    /// Malformed groups — empty, a zero-row stack, rows not divisible by
+    /// the group size, ops disagreeing on dimensions — are
+    /// [`ServeError`]s, not panics: the serving daemon reaches this from
+    /// untrusted request batches and must refuse one bad group without
+    /// taking the process down.
+    pub fn matmul_grouped(ops: &[&LinearOp], x: &Mat) -> Result<Mat, ServeError> {
         let g = ops.len();
-        assert!(g > 0, "empty op group");
-        assert_eq!(x.rows % g, 0, "stacked rows {} not divisible by group {g}", x.rows);
+        if g == 0 {
+            return Err(ServeError::EmptyGroup);
+        }
+        if x.rows == 0 {
+            return Err(ServeError::EmptyBatch);
+        }
+        if x.rows % g != 0 {
+            return Err(ServeError::RaggedStack { rows: x.rows, group: g });
+        }
+        if ops.iter().any(|op| op.in_dim() != x.cols) {
+            return Err(ServeError::ShapeMismatch { what: "op in_dim vs activation cols" });
+        }
+        if ops.iter().any(|op| op.out_dim() != ops[0].out_dim()) {
+            return Err(ServeError::ShapeMismatch { what: "group ops disagree on out_dim" });
+        }
         let rows_per = x.rows / g;
 
         let shared: Option<&QuantBase> = match ops[0] {
@@ -332,7 +395,7 @@ impl LinearOp {
                         }
                     }
                 }
-                y
+                Ok(y)
             }
             None => {
                 let mut y = Mat::zeros(x.rows, ops[0].out_dim());
@@ -342,7 +405,7 @@ impl LinearOp {
                         y.row_mut(gi * rows_per + i).copy_from_slice(yg.row(i));
                     }
                 }
-                y
+                Ok(y)
             }
         }
     }
@@ -596,6 +659,24 @@ impl FactoredModel {
         self.ops.iter().find(|(n, _)| n == name).map(|(_, op)| op)
     }
 
+    /// y = x · W for the named linear, refusing unknown tensor names as
+    /// [`ServeError::UnknownTensor`] instead of panicking — the daemon's
+    /// request path, where the name ultimately comes off the wire. Also
+    /// validates the activation width against the op's input dimension.
+    pub fn linear_checked(&self, name: &str, x: &Mat) -> Result<Mat, ServeError> {
+        if let Some(op) = self.op(name) {
+            if op.in_dim() != x.cols {
+                return Err(ServeError::ShapeMismatch { what: "op in_dim vs activation cols" });
+            }
+            return Ok(op.matmul(x));
+        }
+        match self.skeleton.get_mat(name) {
+            Ok(w) if w.rows == x.cols => Ok(matmul(x, &w)),
+            Ok(_) => Err(ServeError::ShapeMismatch { what: "param rows vs activation cols" }),
+            Err(_) => Err(ServeError::UnknownTensor(name.to_string())),
+        }
+    }
+
     /// Densify every linear back into a full [`Params`] (compatibility
     /// with the PJRT artifact path and the legacy dense pipeline).
     pub fn densified_params(&self) -> Params {
@@ -832,7 +913,7 @@ mod tests {
             }));
 
             let x = Mat::randn(refs.len() * rows_per, m, 1.0, &mut g.rng);
-            let y = LinearOp::matmul_grouped(&refs, &x);
+            let y = LinearOp::matmul_grouped(&refs, &x).expect("well-formed group");
             assert_eq!((y.rows, y.cols), (x.rows, n));
             for (gi, op) in refs.iter().enumerate() {
                 let xg = x.rows_slice(gi * rows_per, (gi + 1) * rows_per);
@@ -869,12 +950,82 @@ mod tests {
         ];
         let refs: Vec<&LinearOp> = ops.iter().collect();
         let x = Mat::randn(6, 64, 1.0, &mut rng);
-        let y = LinearOp::matmul_grouped(&refs, &x);
+        let y = LinearOp::matmul_grouped(&refs, &x).expect("well-formed group");
         for (gi, op) in refs.iter().enumerate() {
             let solo = op.matmul(&x.rows_slice(gi * 3, (gi + 1) * 3));
             for i in 0..3 {
                 assert_eq!(y.row(gi * 3 + i), solo.row(i));
             }
         }
+    }
+
+    /// Bugfix regressions: the grouped matmul edge cases the daemon can
+    /// reach from untrusted request batches are errors, never panics.
+    #[test]
+    fn grouped_matmul_refuses_malformed_groups() {
+        let mut rng = Rng::new(41);
+        let op = LinearOp::Dense(Mat::randn(8, 8, 1.0, &mut rng));
+        let x = Mat::randn(6, 8, 1.0, &mut rng);
+
+        // empty group
+        assert_eq!(LinearOp::matmul_grouped(&[], &x), Err(ServeError::EmptyGroup));
+        // zero-row batch
+        let empty = Mat::zeros(0, 8);
+        assert_eq!(
+            LinearOp::matmul_grouped(&[&op], &empty),
+            Err(ServeError::EmptyBatch)
+        );
+        // rows not divisible by the group
+        let ragged = Mat::randn(5, 8, 1.0, &mut rng);
+        assert_eq!(
+            LinearOp::matmul_grouped(&[&op, &op], &ragged),
+            Err(ServeError::RaggedStack { rows: 5, group: 2 })
+        );
+        // activation width vs op input dimension
+        let narrow = Mat::randn(6, 4, 1.0, &mut rng);
+        assert!(matches!(
+            LinearOp::matmul_grouped(&[&op], &narrow),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        // ops disagreeing on output dimension
+        let wide = LinearOp::Dense(Mat::randn(8, 16, 1.0, &mut rng));
+        assert!(matches!(
+            LinearOp::matmul_grouped(&[&op, &wide], &x),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        // a well-formed group still evaluates
+        assert!(LinearOp::matmul_grouped(&[&op, &op], &x).is_ok());
+    }
+
+    /// Bugfix regression: an unknown tensor name off the wire is a
+    /// [`ServeError::UnknownTensor`], not an `expect` panic.
+    #[test]
+    fn linear_checked_refuses_unknown_tensor() {
+        use crate::model::synth::synth_lm_params;
+        use crate::runtime::manifest::ModelCfg;
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 32,
+            seq_len: 8,
+        };
+        let params = synth_lm_params(&cfg, 1, cfg.vocab);
+        let model = FactoredModel { skeleton: params, ops: vec![] };
+        let x = Mat::zeros(2, 16);
+        assert_eq!(
+            model.linear_checked("l9.wq", &x),
+            Err(ServeError::UnknownTensor("l9.wq".into()))
+        );
+        // a known linear still evaluates through the checked path
+        assert!(model.linear_checked("l0.wq", &x).is_ok());
+        // a known linear fed a wrong-width activation is a shape error
+        let bad = Mat::zeros(2, 8);
+        assert!(matches!(
+            model.linear_checked("l0.wq", &bad),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
     }
 }

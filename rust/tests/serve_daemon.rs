@@ -1,0 +1,292 @@
+//! Live-daemon integration regressions for `serve::daemon`, offline
+//! (no PJRT, no artifacts):
+//!
+//! * **Protocol negatives** — truncated, bit-corrupted, cross-version,
+//!   wrong-kind, and oversized frames from a handshaken TCP peer (plus
+//!   a peer that never handshakes at all) are refused without a panic
+//!   and without wedging the accept loop: a well-behaved client dialing
+//!   in afterwards is still served.
+//! * **Churn soak** — clients that disconnect mid-stream or wedge
+//!   mid-frame ([`FaultPlan`]) free their scheduler slots, admission
+//!   beyond `max_slots` is shed with an explicit busy reply, and after
+//!   the churn the full slot pool is provably usable again (no leak).
+//!
+//! Both suites serve two rank variants sharing one packed base — the
+//! deployment shape the daemon exists for.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use srr::coordinator::jobs::byte_pipe;
+use srr::coordinator::transport::worker_connect;
+use srr::coordinator::wire::{kind, Frame};
+use srr::coordinator::{FaultPlan, FaultTransport, QuantizerSpec};
+use srr::model::{synth_lm_params, Params};
+use srr::quant::{QuantCtx, Quantizer};
+use srr::runtime::manifest::ModelCfg;
+use srr::serve::daemon::protocol::{encode_request, SERVE_MAX_REQUEST_LEN};
+use srr::serve::daemon::{
+    Daemon, DaemonConfig, DaemonHandle, FleetEngine, ReqKind, ServeClient, ServeReply,
+    ServeRequest,
+};
+use srr::serve::{FactoredModel, LinearOp, QuantBase};
+use srr::tensor::Mat;
+use srr::util::Rng;
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "tiny-serve".into(),
+        vocab: 48,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 1,
+        d_ff: 64,
+        seq_len: 16,
+    }
+}
+
+/// Rank variants sharing one `Arc<PackedMat>` base per linear — the
+/// multi-variant serving shape, shrunk to test size.
+fn shared_base_variants(cfg: &ModelCfg, ranks: &[usize], seed: u64) -> Vec<(String, FactoredModel)> {
+    let mut rng = Rng::new(seed);
+    let params = synth_lm_params(cfg, seed, cfg.vocab);
+    let spec = QuantizerSpec::Mxint { bits: 4, block: 32 };
+    let names = Params::linear_names(cfg);
+    let bases: Vec<(String, QuantBase)> = names
+        .iter()
+        .map(|n| {
+            let w = params.get_mat(n).expect("linear");
+            let ctx = QuantCtx { hessian: None, seed };
+            let (_, packed) = spec.build().quantize_coded(&w, &ctx);
+            (n.clone(), QuantBase::Packed(Arc::new(packed.expect("packable"))))
+        })
+        .collect();
+    ranks
+        .iter()
+        .map(|&rank| {
+            let mut skeleton = params.clone();
+            let ops: Vec<(String, LinearOp)> = bases
+                .iter()
+                .map(|(n, base)| {
+                    skeleton.unset(n);
+                    let (m, k) = (base.rows(), base.cols());
+                    let op = LinearOp::FactoredQlr {
+                        base: base.clone(),
+                        l: Mat::randn(m, rank, 0.05, &mut rng),
+                        r: Mat::randn(rank, k, 0.05, &mut rng),
+                    };
+                    (n.clone(), op)
+                })
+                .collect();
+            (format!("r{rank}"), FactoredModel { skeleton, ops })
+        })
+        .collect()
+}
+
+fn spawn_daemon(cfg: DaemonConfig, tcp: bool) -> (DaemonHandle, Option<SocketAddr>) {
+    let mcfg = tiny_cfg();
+    let engine = FleetEngine::new(mcfg.clone(), shared_base_variants(&mcfg, &[2, 4], 17))
+        .expect("aligned variants");
+    let mut daemon = Daemon::new(engine, cfg);
+    let addr = if tcp { Some(daemon.bind("127.0.0.1:0").expect("bind loopback")) } else { None };
+    (daemon.spawn(), addr)
+}
+
+/// Poll `cond` until it holds or the deadline expires (daemon stats are
+/// updated by the event loop, not synchronously with client IO).
+fn wait_for(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Serialize one frame to bytes (so tests can corrupt them).
+fn frame_bytes(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    frame.write_to(&mut buf).expect("vec write");
+    buf
+}
+
+fn request_frame(id: u64) -> Frame {
+    encode_request(&ServeRequest {
+        id,
+        variant: "r2".into(),
+        tokens: vec![1, 2, 3],
+        kind: ReqKind::Generate { max_new: 2 },
+    })
+}
+
+/// A handshaken TCP connection that sends `bytes` and half-closes; the
+/// daemon must end only this connection.
+fn send_raw(addr: &SocketAddr, bytes: &[u8]) {
+    let mut stream = worker_connect(&addr.to_string(), 0).expect("handshake");
+    stream.write_all(bytes).expect("send raw bytes");
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+#[test]
+fn protocol_negatives_never_wedge_the_daemon() {
+    let (handle, addr) = spawn_daemon(DaemonConfig::default(), true);
+    let addr = addr.expect("tcp bound");
+
+    // a peer that is not even the protocol: refused at the HELLO
+    // handshake, never reaches the request plane
+    {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(b"GET / HTTP/1.1\r\n\r\n").expect("garbage");
+        let _ = stream.shutdown(Shutdown::Write);
+    }
+
+    // truncated: a frame cut mid-header
+    send_raw(&addr, &frame_bytes(&request_frame(1))[..10]);
+    // corrupted: one payload bit flipped — the checksum must catch it
+    let mut corrupt = frame_bytes(&request_frame(2));
+    corrupt[16] ^= 0x40;
+    send_raw(&addr, &corrupt);
+    // cross-version: a frame stamped with a future wire version
+    let mut future = frame_bytes(&request_frame(3));
+    future[4..6].copy_from_slice(&2u16.to_le_bytes());
+    send_raw(&addr, &future);
+    // wrong role: a shard-plane frame kind on the serving port
+    send_raw(&addr, &frame_bytes(&Frame { kind: kind::SWEEP_JOB, payload: vec![7] }));
+    // oversized: a header advertising a payload over the request cap;
+    // the daemon must refuse from the header alone, not allocate it
+    let mut oversized = frame_bytes(&request_frame(4))[..16].to_vec();
+    oversized[8..16].copy_from_slice(&(SERVE_MAX_REQUEST_LEN + 1).to_le_bytes());
+    send_raw(&addr, &oversized);
+
+    // all five post-handshake violations are counted and end only
+    // their own connection
+    wait_for("malformed connections to be dropped", || {
+        handle.stats().malformed.load(std::sync::atomic::Ordering::Relaxed) >= 5
+    });
+
+    // a well-behaved client dialing in after the abuse is served
+    let mut client = ServeClient::dial(&addr.to_string(), "r2").expect("dial");
+    match client.generate(&[1, 2, 3], 2).expect("generate") {
+        ServeReply::Tokens { id, tokens } => {
+            assert_eq!(id, 1);
+            assert_eq!(tokens.len(), 2);
+        }
+        other => panic!("expected tokens, got {other:?}"),
+    }
+
+    // an invalid but well-formed request is refused with a structured
+    // error — and the connection survives to serve the next request
+    match client.generate(&[1, 2, 999], 2).expect("refused generate") {
+        ServeReply::Error { message, .. } => {
+            assert!(message.contains("vocab"), "unexpected refusal: {message}");
+        }
+        other => panic!("expected error reply, got {other:?}"),
+    }
+    match client.score(&[4, 5, 6]).expect("score after refusal") {
+        ServeReply::Score { count, .. } => assert_eq!(count, 2.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+
+    wait_for("slots to drain", || {
+        handle.stats().active_slots.load(std::sync::atomic::Ordering::Relaxed) == 0
+    });
+    handle.join();
+}
+
+/// Attach an in-process client through a fault-injecting loopback
+/// transport (the daemon side sees `plan`'s faults).
+fn attach(handle: &DaemonHandle, plan: FaultPlan, variant: &str) -> ServeClient {
+    let (client_w, daemon_r) = byte_pipe(1 << 16);
+    let (daemon_w, client_r) = byte_pipe(1 << 16);
+    let t = FaultTransport::new(daemon_w, daemon_r, plan);
+    assert!(handle.admit(Box::new(t)), "daemon accepting connections");
+    ServeClient::over(Box::new(client_w), Box::new(client_r), variant)
+}
+
+#[test]
+fn churn_soak_frees_slots_and_sheds_with_busy() {
+    let cfg = DaemonConfig { max_slots: 2, max_batch: 2, ..DaemonConfig::default() };
+    let (handle, _) = spawn_daemon(cfg, false);
+    let stats = || handle.stats();
+    let load = |a: &std::sync::atomic::AtomicUsize| a.load(std::sync::atomic::Ordering::Relaxed);
+    let load64 = |a: &std::sync::atomic::AtomicU64| a.load(std::sync::atomic::Ordering::Relaxed);
+
+    // --- admission sheds beyond max_slots with an explicit busy reply.
+    // Four long generate requests back-to-back on one connection: the
+    // event loop admits two, and the rest arrive while both slots are
+    // held mid-decode.
+    let mut a = attach(&handle, FaultPlan::default(), "r2");
+    for _ in 0..4 {
+        a.send_generate(&[1, 2], 14).expect("send");
+    }
+    let mut busy = 0;
+    let mut tokens = 0;
+    for _ in 0..4 {
+        match a.recv().expect("reply") {
+            ServeReply::Busy { .. } => busy += 1,
+            ServeReply::Tokens { tokens: t, .. } => {
+                assert_eq!(t.len(), 14);
+                tokens += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(busy >= 1, "no request was shed at capacity");
+    assert_eq!(busy + tokens, 4);
+    assert!(load64(&stats().shed) >= 1);
+    drop(a);
+
+    // --- mid-stream disconnect frees the slots it held
+    let mut b = attach(&handle, FaultPlan::default(), "r4");
+    b.send_generate(&[3, 4], 14).expect("send");
+    drop(b); // both pipe ends close: EOF mid-decode
+    wait_for("disconnect to free slots", || {
+        load(&stats().active_slots) == 0 && load64(&stats().disconnects) >= 2
+    });
+
+    // --- a connection wedged mid-frame (stall: no bytes, no EOF) must
+    // not block service to anyone else
+    let mut c = attach(
+        &handle,
+        FaultPlan { stall_rx_after: Some(8), stall_rx_resume: None, ..FaultPlan::default() },
+        "r2",
+    );
+    c.send_generate(&[5, 6], 2).expect("send into stall");
+    // ...and a byte-chopping link still serves correctly
+    let mut d = attach(&handle, FaultPlan { chop: 3, ..FaultPlan::default() }, "r4");
+    match d.generate(&[7, 8, 9], 3).expect("generate over chopped link") {
+        ServeReply::Tokens { tokens, .. } => assert_eq!(tokens.len(), 3),
+        other => panic!("expected tokens, got {other:?}"),
+    }
+
+    // --- no slot leak: after the churn the full pool is usable again
+    wait_for("churned slots to drain", || load(&stats().active_slots) == 0);
+    let mut e = attach(&handle, FaultPlan::default(), "r2");
+    let id1 = e.send_generate(&[1, 2, 3], 4).expect("send");
+    let id2 = e.send_score(&[4, 5, 6, 7]).expect("send");
+    let mut seen = 0;
+    for _ in 0..2 {
+        match e.recv().expect("reply") {
+            ServeReply::Tokens { id, tokens } => {
+                assert_eq!(id, id1);
+                assert_eq!(tokens.len(), 4);
+                seen += 1;
+            }
+            ServeReply::Score { id, count, .. } => {
+                assert_eq!(id, id2);
+                assert_eq!(count, 3.0);
+                seen += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(seen, 2, "full slot pool served after churn");
+
+    assert!(load64(&stats().served) >= 4);
+    handle.join();
+    // the wedged client's transport was severed at shutdown; its
+    // parked reader saw EOF rather than wedging the daemon's teardown
+    drop(c);
+}
