@@ -6,6 +6,39 @@ boolean field whose name marks an equivalence assertion (contains
 "identical" or "equiv", or ends with "_ok") is false. The benches assert
 these themselves, but the gate also catches a record flushed before an
 abort and future benches that record without asserting.
+
+Record schema the gate relies on
+--------------------------------
+Every record is a single JSON object written by
+``rust/src/util/bench.rs``'s ``write_json``. The gate reads three kinds
+of field, all at the top level of the object unless noted:
+
+* **generic equivalence booleans** — any boolean anywhere in the record
+  (nested objects and arrays included) whose key contains ``identical``
+  or ``equiv`` or ends with ``_ok`` must be ``true``. Name a flag this
+  way to opt it into the gate with no python changes.
+* **required flags** (``REQUIRED_FLAGS``) — per-record booleans that
+  must be present at the top level and literally ``true``; a rename or
+  a dropped write fails the gate even if the run aborted early:
+
+  - ``BENCH_shard.json``: ``tcp_bit_identical`` (TCP transport ≡
+    in-process), ``wedge_recovered`` (heartbeat wedge recovery fired).
+  - ``BENCH_serve.json``: ``kernel_bit_identical`` (block decode ≡
+    scalar reference).
+  - ``BENCH_serve_live.json``: ``batched_bit_identical`` (every batched
+    reply ≡ the serial oracle).
+  - ``BENCH_budget.json``: ``allocation_bit_identical`` (sharded budget
+    plan ≡ in-process plan), ``allocated_beats_uniform`` (allocated
+    plan's PPL is no worse than the best uniform (bits, rank) baseline
+    at every equal-byte budget point).
+
+* **required numbers** (``REQUIRED_NUMBERS``) — per-record numeric
+  fields that must be present and finite (NaN/inf/bool stand-ins fail):
+
+  - ``BENCH_serve.json``: ``decode_bytes``, ``flops``, ``achieved_gbps``
+    (roofline accounting).
+  - ``BENCH_serve_live.json``: ``sustained_rps``, ``p99_latency_ms``
+    (the daemon actually served load).
 """
 
 import glob
@@ -31,6 +64,10 @@ REQUIRED_FLAGS = {
     # the live-daemon record has to prove every batched request matched
     # the serial one-at-a-time oracle bit for bit
     "BENCH_serve_live.json": ["batched_bit_identical"],
+    # the budget record has to prove the allocator beat (or tied) the
+    # best uniform baseline at equal bytes AND that the sharded plan is
+    # byte-for-byte the in-process plan
+    "BENCH_budget.json": ["allocation_bit_identical", "allocated_beats_uniform"],
 }
 
 # Numeric fields that MUST be present (finite numbers): the serve
@@ -54,7 +91,7 @@ def is_equiv_key(key: str) -> bool:
 
 
 failures = [
-    f"{name}: required bench record missing (were --exp shard/serve run?)"
+    f"{name}: required bench record missing (were --exp shard/serve/serve_live/budget run?)"
     for name in missing_records
 ]
 checked = 0

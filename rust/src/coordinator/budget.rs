@@ -1,0 +1,873 @@
+//! Model-wide rank/bit budget allocation: "best PPL at N gigabytes".
+//!
+//! The paper selects the preserved rank k per layer at a *fixed*
+//! (bits, rank) setting (Eq. 5). This module turns the same phase-A
+//! sensitivity signals — the prepared (S·W, S·E) spectra
+//! ([`PreparedSpectra`](crate::qer::PreparedSpectra)) and the
+//! quantization-exposed energy η_Q
+//! ([`eta_q_from`](crate::qer::eta_q_from)) — into a *cross-layer*
+//! allocator: given a total byte budget, assign each linear its own
+//! `(bits, rank, k)` so the predicted reconstruction error is minimized
+//! subject to the model fitting the budget.
+//!
+//! **Predicted-error model.** For layer ℓ with scaled weight energy
+//! ‖S·W_ℓ‖²_F, quantizing at `b` bits with rank budget `r` and the
+//! Eq.-5 split k = k*(r):
+//!
+//! ```text
+//!   err²(ℓ, b, r) ≈ η_b(ℓ)² · ‖S·W_ℓ‖²_F · min_k ρ_k(SW_ℓ)·ρ_{r−k}(SE_ℓ)
+//! ```
+//!
+//! i.e. the surrogate objective the paper minimizes over k, rescaled to
+//! absolute units by the layer's exposed energy at `b` bits. η_b is
+//! measured on the cached k=0 quantization (Assumption 4.1: η is
+//! approximately invariant to the preserve split, so measuring it on W
+//! stands in for measuring it on every candidate residual). Bytes are
+//! modeled as packed base + f32 adapters:
+//!
+//! ```text
+//!   bytes(ℓ, b, r) = ⌈m·n·effective_bits(b)/8⌉ + 4·r·(m+n)
+//! ```
+//!
+//! **Allocation.** Three passes over the per-layer candidate tables,
+//! all deterministic (pure f64 arithmetic, fixed iteration counts, no
+//! RNG):
+//!
+//! 1. *greedy marginal-utility descent* — start every layer at its
+//!    cheapest candidate and repeatedly apply the single-layer upgrade
+//!    with the best Δerr²/Δbytes that still fits;
+//! 2. *Lagrangian water-filling refinement* — bisect the price λ and
+//!    assign each layer argmin err² + λ·bytes, keeping the smallest
+//!    feasible λ;
+//! 3. *uniform-floor upgrades* — start from the best uniform cell
+//!    fitting the budget ([`uniform_plan`]'s choice) and apply only
+//!    dominating upgrades (never fewer bits, never less rank, strictly
+//!    lower predicted err²), so this candidate is layer-wise no worse
+//!    than the uniform baseline.
+//!
+//! The best feasible plan (by predicted err², pass 3 → 1 → 2 on ties)
+//! wins — in particular the allocator's predicted error never exceeds
+//! the best uniform baseline's. Degenerate budgets — smaller than the
+//! cheapest feasible model, or at least fp32 dense size — are errors,
+//! not panics.
+//!
+//! **Bit-identity.** A [`BudgetPlan`] is a pure deterministic function
+//! of the phase-A [`LayerCache`], and the sharded prep
+//! ([`ShardedSweepRunner`]) rebuilds that cache bit-identically to the
+//! in-process [`SweepRunner::prepare`] — so in-process and sharded
+//! planning produce byte-equal plans (property-tested under seeded
+//! fault schedules; `exp::perf::budget_bench` gates it in CI via
+//! `BENCH_budget.json`'s `allocation_bit_identical`). The plan travels
+//! as a wire-codec frame
+//! ([`encode_budget_plan`](super::wire::encode_budget_plan)).
+//!
+//! **Execution.** [`BudgetPlan::sweep_config`] lowers the plan onto the
+//! sweep engine as one heterogeneous cell
+//! ([`SweepConfig::with_per_layer`]); the plan's `prep_rank` pins the
+//! grid's shared-spectra rank to the planner's, which is what makes the
+//! planned per-layer `k` equal the realized `k*` (same factorization,
+//! same argmin).
+
+use anyhow::{ensure, Result};
+
+use crate::qer::{eta_q_from, Method};
+use crate::scaling::ScalingKind;
+
+use super::cache::LayerCache;
+use super::pipeline::QuantizerSpec;
+use super::shard::{ShardSession, ShardedSweepRunner};
+use super::sweep::{LayerAssign, SweepConfig, SweepRunner};
+
+/// Fixed bisection depth of the water-filling pass (deterministic; 64
+/// halvings take the λ bracket below any f64-meaningful width).
+const WATERFILL_ITERS: usize = 64;
+
+/// What to allocate: the budget and the per-layer candidate space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetSpec {
+    /// total model-byte budget for all quantized linears (packed bases
+    /// + f32 adapters, per the module's byte model)
+    pub budget_bytes: u64,
+    /// MXINT bit-width choices, e.g. `[2, 3, 4]`
+    pub bits_choices: Vec<u32>,
+    /// MXINT block size shared by every candidate
+    pub block: usize,
+    /// rank choices, e.g. `[0, 4, 8, 16, 32]`; the maximum is the
+    /// planning prep rank every shared spectrum is factorized at
+    pub rank_choices: Vec<usize>,
+    /// activation scaling kind (one, shared by every candidate)
+    pub scaling: ScalingKind,
+    /// sweep-level seed (layer-salted per linear, as everywhere)
+    pub seed: u64,
+}
+
+impl BudgetSpec {
+    /// A spec with the default candidate space: bits {2, 3, 4} ×
+    /// ranks {0, 4, 8, 16, 32}, MXINT block 32, diag-rms scaling.
+    pub fn new(budget_bytes: u64) -> Self {
+        BudgetSpec {
+            budget_bytes,
+            bits_choices: vec![2, 3, 4],
+            block: 32,
+            rank_choices: vec![0, 4, 8, 16, 32],
+            scaling: ScalingKind::DiagRms,
+            seed: 0,
+        }
+    }
+
+    /// [`BudgetSpec::new`] from a gigabyte figure (decimal GB).
+    pub fn gigabytes(g: f64) -> Self {
+        Self::new((g * 1e9) as u64)
+    }
+
+    /// The planning prep rank: the largest rank any candidate uses.
+    pub fn prep_rank(&self) -> usize {
+        self.rank_choices.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The candidate quantizer at `bits`.
+    pub fn quantizer(&self, bits: u32) -> QuantizerSpec {
+        QuantizerSpec::Mxint { bits, block: self.block }
+    }
+
+    /// The probe grid whose phase-A prep computes every sensitivity the
+    /// planner reads: one w-only cell per bit-width (caches the k=0
+    /// quantization η_b is measured on) plus one SRR cell at the max
+    /// candidate rank (caches the (S·W, S·E) spectra at the planning
+    /// prep rank).
+    pub fn probe_configs(&self) -> Vec<SweepConfig> {
+        let mut probes: Vec<SweepConfig> = self
+            .bits_choices
+            .iter()
+            .map(|&b| {
+                SweepConfig::new(self.quantizer(b), Method::WOnly, 0, self.scaling)
+                    .seeded(self.seed)
+            })
+            .collect();
+        let bits = self.bits_choices.last().copied().unwrap_or(4);
+        probes.push(
+            SweepConfig::new(self.quantizer(bits), Method::QerSrr, self.prep_rank(), self.scaling)
+                .seeded(self.seed),
+        );
+        probes
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(!self.bits_choices.is_empty(), "budget spec has no bit-width choices");
+        ensure!(!self.rank_choices.is_empty(), "budget spec has no rank choices");
+        ensure!(self.block > 0, "budget spec block size must be positive");
+        Ok(())
+    }
+}
+
+/// One layer's sensitivity profile: everything the predicted-error
+/// model needs, extracted from the phase-A cache. Pure data — the
+/// allocator below never touches matrices, so allocation over profiles
+/// is trivially deterministic and unit-testable without a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerProfile {
+    /// the linear's parameter name
+    pub name: String,
+    /// weight rows m
+    pub rows: usize,
+    /// weight cols n
+    pub cols: usize,
+    /// ‖S·W‖²_F — the energy scale of the error model
+    pub sw_frob2: f64,
+    /// per rank choice (aligned with `BudgetSpec::rank_choices`): the
+    /// Eq.-5 split k*(r) and its surrogate value
+    /// min_k ρ_k(SW)·ρ_{r−k}(SE), read off the prepared spectra
+    pub selections: Vec<(usize, f64)>,
+    /// per bit-width choice (aligned with `BudgetSpec::bits_choices`):
+    /// η_b measured on the cached k=0 quantization
+    pub eta: Vec<f64>,
+}
+
+impl LayerProfile {
+    /// Predicted squared scaled error at candidate `(bits index, rank
+    /// index)` — the module-level error model.
+    pub fn err2(&self, bi: usize, ri: usize) -> f64 {
+        self.eta[bi] * self.eta[bi] * self.sw_frob2 * self.selections[ri].1
+    }
+
+    /// Modeled serving bytes at candidate `(bits index, rank index)`
+    /// under `spec`: packed base + f32 adapters.
+    pub fn bytes(&self, spec: &BudgetSpec, bi: usize, ri: usize) -> u64 {
+        let eff = spec.quantizer(spec.bits_choices[bi]).effective_bits();
+        let base = ((self.rows * self.cols) as f64 * eff / 8.0).ceil() as u64;
+        let adapters = 4 * spec.rank_choices[ri] as u64 * (self.rows + self.cols) as u64;
+        base + adapters
+    }
+}
+
+/// One layer's allocated cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAlloc {
+    /// the linear's parameter name
+    pub name: String,
+    /// allocated MXINT bit-width
+    pub bits: u32,
+    /// allocated rank budget r
+    pub rank: usize,
+    /// the Eq.-5 split the planner predicts (and, because the planned
+    /// run shares the planner's spectra, the run realizes)
+    pub k: usize,
+    /// modeled bytes of this layer at the allocated cell
+    pub bytes: u64,
+    /// predicted squared scaled error at the allocated cell
+    pub predicted_err2: f64,
+}
+
+/// A model-wide allocation: the artifact `srr budget` emits, the wire
+/// codec frames, and [`BudgetPlan::sweep_config`] executes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetPlan {
+    /// per-layer assignments, in `Params::linear_names` order
+    pub layers: Vec<LayerAlloc>,
+    /// the budget that was asked for
+    pub budget_bytes: u64,
+    /// modeled bytes of the plan (≤ `budget_bytes` always)
+    pub plan_bytes: u64,
+    /// Σ per-layer predicted err² (the allocator's objective)
+    pub predicted_err2: f64,
+    /// rank the planning spectra were factorized at; pins the executed
+    /// grid's prep rank so planned k == realized k*
+    pub prep_rank: usize,
+    /// MXINT block size of every allocated quantizer
+    pub block: usize,
+    /// activation scaling kind of every layer
+    pub scaling: ScalingKind,
+    /// sweep-level seed of the planned run
+    pub seed: u64,
+}
+
+impl BudgetPlan {
+    /// Lower the plan onto the sweep engine: one heterogeneous SRR cell
+    /// whose top-level rank pins the grid prep rank at the planner's
+    /// ([`SweepConfig::max_rank`] treats it as a floor), so the executed
+    /// per-layer k* is exactly the planned `k`.
+    pub fn sweep_config(&self) -> SweepConfig {
+        let assigns: Vec<LayerAssign> = self
+            .layers
+            .iter()
+            .map(|l| LayerAssign {
+                quantizer: QuantizerSpec::Mxint { bits: l.bits, block: self.block },
+                rank: l.rank,
+            })
+            .collect();
+        let bits = self.layers.first().map(|l| l.bits).unwrap_or(4);
+        SweepConfig::new(
+            QuantizerSpec::Mxint { bits, block: self.block },
+            Method::QerSrr,
+            self.prep_rank,
+            self.scaling,
+        )
+        .seeded(self.seed)
+        .labeled(&format!("budget/{}B", self.budget_bytes))
+        .with_per_layer(assigns)
+    }
+}
+
+/// Extract every layer's sensitivity profile from a phase-A cache
+/// prepared over [`BudgetSpec::probe_configs`]. Shared by the
+/// in-process and sharded planners — the cache is bit-identical between
+/// them, and this is a pure read, so the plans are too.
+pub(crate) fn profiles_from_cache(cache: &LayerCache, spec: &BudgetSpec) -> Vec<LayerProfile> {
+    cache
+        .layers
+        .iter()
+        .map(|layer| {
+            let scaling = layer.scaling(spec.scaling);
+            let sp = layer
+                .spectra(spec.scaling, spec.seed)
+                .expect("spectra prepared by the probe grid");
+            let selections = spec
+                .rank_choices
+                .iter()
+                .map(|&r| {
+                    let sel = sp.select(r);
+                    (sel.k_star, sel.objective[sel.k_star])
+                })
+                .collect();
+            let eta = spec
+                .bits_choices
+                .iter()
+                .map(|&b| {
+                    let label = spec.quantizer(b).label();
+                    let qdeq = layer
+                        .qdeq0(&label, spec.seed)
+                        .expect("qdeq0 prepared by the probe grid");
+                    eta_q_from(&layer.w, qdeq, scaling)
+                })
+                .collect();
+            LayerProfile {
+                name: layer.name.clone(),
+                rows: layer.w.rows,
+                cols: layer.w.cols,
+                sw_frob2: sp.sw_frob2,
+                selections,
+                eta,
+            }
+        })
+        .collect()
+}
+
+/// Internal candidate tables: `bytes[li][ci]` / `err2[li][ci]` with
+/// `ci = bits index · |ranks| + rank index`.
+struct Tables {
+    n_cand: usize,
+    bytes: Vec<Vec<u64>>,
+    err2: Vec<Vec<f64>>,
+}
+
+impl Tables {
+    fn build(profiles: &[LayerProfile], spec: &BudgetSpec) -> Tables {
+        let n_ranks = spec.rank_choices.len();
+        let n_cand = spec.bits_choices.len() * n_ranks;
+        let mut bytes = Vec::with_capacity(profiles.len());
+        let mut err2 = Vec::with_capacity(profiles.len());
+        for p in profiles {
+            let mut b = Vec::with_capacity(n_cand);
+            let mut e = Vec::with_capacity(n_cand);
+            for ci in 0..n_cand {
+                b.push(p.bytes(spec, ci / n_ranks, ci % n_ranks));
+                e.push(p.err2(ci / n_ranks, ci % n_ranks));
+            }
+            bytes.push(b);
+            err2.push(e);
+        }
+        Tables { n_cand, bytes, err2 }
+    }
+
+    fn total_bytes(&self, chosen: &[usize]) -> u64 {
+        chosen.iter().enumerate().map(|(li, &ci)| self.bytes[li][ci]).sum()
+    }
+
+    fn total_err2(&self, chosen: &[usize]) -> f64 {
+        chosen.iter().enumerate().map(|(li, &ci)| self.err2[li][ci]).sum()
+    }
+
+    /// Per-layer argmin of err² + λ·bytes (first candidate wins ties —
+    /// the water-filling assignment at price λ).
+    fn assign_at(&self, lambda: f64) -> Vec<usize> {
+        self.err2
+            .iter()
+            .zip(&self.bytes)
+            .map(|(e, b)| {
+                let mut best = (f64::INFINITY, 0usize);
+                for ci in 0..self.n_cand {
+                    let cost = e[ci] + lambda * b[ci] as f64;
+                    if cost < best.0 {
+                        best = (cost, ci);
+                    }
+                }
+                best.1
+            })
+            .collect()
+    }
+}
+
+/// The lowest-total-err² candidate column every layer can share within
+/// the budget, if any (ties: first candidate).
+fn best_uniform_ci(t: &Tables, n_layers: usize, budget_bytes: u64) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for ci in 0..t.n_cand {
+        let bytes: u64 = (0..n_layers).map(|li| t.bytes[li][ci]).sum();
+        if bytes > budget_bytes {
+            continue;
+        }
+        let err: f64 = (0..n_layers).map(|li| t.err2[li][ci]).sum();
+        let better = match best {
+            None => true,
+            Some((e, _)) => err < e,
+        };
+        if better {
+            best = Some((err, ci));
+        }
+    }
+    best.map(|(_, ci)| ci)
+}
+
+/// Materialise a candidate assignment (one column index per layer) as a
+/// [`BudgetPlan`].
+fn build_plan(
+    profiles: &[LayerProfile],
+    spec: &BudgetSpec,
+    t: &Tables,
+    chosen: &[usize],
+) -> BudgetPlan {
+    let n_ranks = spec.rank_choices.len();
+    let layers: Vec<LayerAlloc> = chosen
+        .iter()
+        .zip(profiles)
+        .map(|(&ci, p)| LayerAlloc {
+            name: p.name.clone(),
+            bits: spec.bits_choices[ci / n_ranks],
+            rank: spec.rank_choices[ci % n_ranks],
+            k: p.selections[ci % n_ranks].0,
+            bytes: p.bytes(spec, ci / n_ranks, ci % n_ranks),
+            predicted_err2: p.err2(ci / n_ranks, ci % n_ranks),
+        })
+        .collect();
+    BudgetPlan {
+        plan_bytes: t.total_bytes(chosen),
+        predicted_err2: t.total_err2(chosen),
+        layers,
+        budget_bytes: spec.budget_bytes,
+        prep_rank: spec.prep_rank(),
+        block: spec.block,
+        scaling: spec.scaling,
+        seed: spec.seed,
+    }
+}
+
+/// Allocate `spec.budget_bytes` across `profiles` (see module docs for
+/// the error model and the three allocation passes). Errors on
+/// degenerate budgets: too small for any assignment, or no smaller than
+/// fp32 dense.
+pub fn allocate(profiles: &[LayerProfile], spec: &BudgetSpec) -> Result<BudgetPlan> {
+    spec.validate()?;
+    ensure!(!profiles.is_empty(), "no quantizable layers to allocate");
+    let t = Tables::build(profiles, spec);
+    let n_ranks = spec.rank_choices.len();
+
+    let dense_bytes: u64 = profiles.iter().map(|p| 4 * (p.rows * p.cols) as u64).sum();
+    ensure!(
+        spec.budget_bytes < dense_bytes,
+        "budget of {} bytes is no smaller than the fp32 dense model ({} bytes) — \
+         nothing to allocate",
+        spec.budget_bytes,
+        dense_bytes
+    );
+
+    // start at each layer's cheapest candidate (ties: lower err², then
+    // candidate order)
+    let cheapest: Vec<usize> = (0..profiles.len())
+        .map(|li| {
+            let mut best = 0usize;
+            for ci in 1..t.n_cand {
+                let better = t.bytes[li][ci] < t.bytes[li][best]
+                    || (t.bytes[li][ci] == t.bytes[li][best]
+                        && t.err2[li][ci] < t.err2[li][best]);
+                if better {
+                    best = ci;
+                }
+            }
+            best
+        })
+        .collect();
+    let min_bytes = t.total_bytes(&cheapest);
+    ensure!(
+        min_bytes <= spec.budget_bytes,
+        "budget of {} bytes is too small: the cheapest feasible plan needs {} bytes",
+        spec.budget_bytes,
+        min_bytes
+    );
+
+    // ---- pass 1: greedy marginal-utility descent ----------------------
+    let mut greedy = cheapest.clone();
+    let mut spent = min_bytes;
+    loop {
+        let mut best: Option<(f64, usize, usize)> = None; // (Δerr²/Δbytes, li, ci)
+        for li in 0..profiles.len() {
+            let (cur_b, cur_e) = (t.bytes[li][greedy[li]], t.err2[li][greedy[li]]);
+            for ci in 0..t.n_cand {
+                if t.bytes[li][ci] <= cur_b || t.err2[li][ci] >= cur_e {
+                    continue;
+                }
+                let extra = t.bytes[li][ci] - cur_b;
+                if spent + extra > spec.budget_bytes {
+                    continue;
+                }
+                let utility = (cur_e - t.err2[li][ci]) / extra as f64;
+                let better = match best {
+                    None => true,
+                    Some((u, _, _)) => utility > u,
+                };
+                if better {
+                    best = Some((utility, li, ci));
+                }
+            }
+        }
+        let Some((_, li, ci)) = best else { break };
+        spent += t.bytes[li][ci] - t.bytes[li][greedy[li]];
+        greedy[li] = ci;
+    }
+
+    // ---- pass 2: Lagrangian water-filling refinement ------------------
+    // smallest price λ whose assignment fits: λ=0 is the unconstrained
+    // minimum-error plan; if even that fits, we're done. Otherwise
+    // double λ until feasible, then bisect.
+    let refined = {
+        let zero = t.assign_at(0.0);
+        if t.total_bytes(&zero) <= spec.budget_bytes {
+            zero
+        } else {
+            let mut hi = 1.0f64;
+            let mut doublings = 0;
+            while t.total_bytes(&t.assign_at(hi)) > spec.budget_bytes && doublings < 200 {
+                hi *= 2.0;
+                doublings += 1;
+            }
+            let mut lo = 0.0f64;
+            if t.total_bytes(&t.assign_at(hi)) > spec.budget_bytes {
+                // pathological scales: fall back to the known-feasible floor
+                greedy.clone()
+            } else {
+                for _ in 0..WATERFILL_ITERS {
+                    let mid = 0.5 * (lo + hi);
+                    if t.total_bytes(&t.assign_at(mid)) <= spec.budget_bytes {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                    }
+                }
+                t.assign_at(hi)
+            }
+        }
+    };
+
+    // ---- pass 3: uniform-floor upgrades -------------------------------
+    // grow from the best uniform cell fitting the budget with
+    // *dominating* moves only — never fewer bits, never less rank,
+    // strictly lower predicted err² — so this candidate is layer-wise
+    // no worse than the uniform baseline it started from.
+    let floor = best_uniform_ci(&t, profiles.len(), spec.budget_bytes).map(|ci| {
+        let mut plan = vec![ci; profiles.len()];
+        let mut spent = t.total_bytes(&plan);
+        loop {
+            let mut best: Option<(f64, usize, usize)> = None;
+            for li in 0..profiles.len() {
+                let cur = plan[li];
+                let (cur_bits, cur_rank) =
+                    (spec.bits_choices[cur / n_ranks], spec.rank_choices[cur % n_ranks]);
+                for cj in 0..t.n_cand {
+                    let dominates = spec.bits_choices[cj / n_ranks] >= cur_bits
+                        && spec.rank_choices[cj % n_ranks] >= cur_rank
+                        && t.err2[li][cj] < t.err2[li][cur]
+                        && t.bytes[li][cj] > t.bytes[li][cur];
+                    if !dominates {
+                        continue;
+                    }
+                    let extra = t.bytes[li][cj] - t.bytes[li][cur];
+                    if spent + extra > spec.budget_bytes {
+                        continue;
+                    }
+                    let utility = (t.err2[li][cur] - t.err2[li][cj]) / extra as f64;
+                    let better = match best {
+                        None => true,
+                        Some((u, _, _)) => utility > u,
+                    };
+                    if better {
+                        best = Some((utility, li, cj));
+                    }
+                }
+            }
+            let Some((_, li, cj)) = best else { break };
+            spent += t.bytes[li][cj] - t.bytes[li][plan[li]];
+            plan[li] = cj;
+        }
+        plan
+    });
+
+    // best feasible candidate by predicted err² (ties: floor → greedy →
+    // refined, so the layer-wise-dominating plan wins when equal)
+    let mut chosen = match floor {
+        Some(f) => f,
+        None => greedy.clone(),
+    };
+    for cand in [&greedy, &refined] {
+        if t.total_err2(cand) < t.total_err2(&chosen) {
+            chosen = cand.clone();
+        }
+    }
+
+    Ok(build_plan(profiles, spec, &t, &chosen))
+}
+
+/// The best *uniform* `(bits, rank)` baseline fitting the budget: the
+/// lowest-predicted-error cell every layer can share — what the
+/// headline bench compares the allocator against at equal bytes.
+pub fn uniform_plan(profiles: &[LayerProfile], spec: &BudgetSpec) -> Result<BudgetPlan> {
+    spec.validate()?;
+    ensure!(!profiles.is_empty(), "no quantizable layers to allocate");
+    let t = Tables::build(profiles, spec);
+    let Some(ci) = best_uniform_ci(&t, profiles.len(), spec.budget_bytes) else {
+        anyhow::bail!(
+            "budget of {} bytes fits no uniform (bits, rank) cell",
+            spec.budget_bytes
+        )
+    };
+    let chosen = vec![ci; profiles.len()];
+    Ok(build_plan(profiles, spec, &t, &chosen))
+}
+
+impl<'a> SweepRunner<'a> {
+    /// Phase-A probe prep + profile extraction: every sensitivity the
+    /// allocator reads, in one shared-work pass.
+    pub fn budget_profiles(&self, spec: &BudgetSpec) -> Result<Vec<LayerProfile>> {
+        spec.validate()?;
+        let prep = self.prepare(&spec.probe_configs());
+        Ok(profiles_from_cache(&prep.cache, spec))
+    }
+
+    /// Plan a model-wide budget in-process: probe prep → profiles →
+    /// [`allocate`].
+    pub fn plan_budget(&self, spec: &BudgetSpec) -> Result<BudgetPlan> {
+        allocate(&self.budget_profiles(spec)?, spec)
+    }
+}
+
+impl<'a> ShardedSweepRunner<'a> {
+    /// [`SweepRunner::budget_profiles`] with the probe prep sharded
+    /// across `session`'s workers. The rebuilt cache is bit-identical
+    /// to the in-process one, so the profiles are too.
+    pub fn budget_profiles(
+        &self,
+        session: &mut ShardSession,
+        spec: &BudgetSpec,
+    ) -> Result<Vec<LayerProfile>> {
+        spec.validate()?;
+        let prep = self.prepare(session, &spec.probe_configs())?;
+        Ok(profiles_from_cache(&prep.cache, spec))
+    }
+
+    /// [`SweepRunner::plan_budget`] with the probe prep sharded across
+    /// `session`'s workers — bit-identical plans (module docs).
+    pub fn plan_budget(
+        &self,
+        session: &mut ShardSession,
+        spec: &BudgetSpec,
+    ) -> Result<BudgetPlan> {
+        allocate(&self.budget_profiles(session, spec)?, spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::wire;
+    use crate::data::Corpus;
+    use crate::model::synth::synth_lm_params;
+    use crate::model::{collect_calibration, CalibrationSet, Params};
+    use crate::runtime::manifest::ModelCfg;
+
+    /// Synthetic profiles with a strictly convex err-vs-bytes frontier
+    /// per layer: err² halves with every extra bit and drops
+    /// power-law with rank — smooth enough that both allocator passes
+    /// agree with the convexified optimum.
+    fn synth_profiles(n: usize, distinct: bool) -> (Vec<LayerProfile>, BudgetSpec) {
+        let spec = BudgetSpec {
+            budget_bytes: 0, // callers set per test
+            bits_choices: vec![2, 3, 4],
+            block: 32,
+            rank_choices: vec![0, 4, 8, 16],
+            scaling: ScalingKind::Identity,
+            seed: 0,
+        };
+        let profiles = (0..n)
+            .map(|i| {
+                // layer sensitivity varies only when `distinct`
+                let boost = if distinct { 1.0 + i as f64 } else { 1.0 };
+                let selections = spec
+                    .rank_choices
+                    .iter()
+                    .map(|&r| (r / 2, 1.0 / (1.0 + r as f64).powf(1.5)))
+                    .collect();
+                let eta = spec
+                    .bits_choices
+                    .iter()
+                    .map(|&b| boost * 0.8 / f64::powi(2.0, b as i32))
+                    .collect();
+                LayerProfile {
+                    name: format!("l{i}.w"),
+                    rows: 64,
+                    cols: 64,
+                    sw_frob2: 100.0,
+                    selections,
+                    eta,
+                }
+            })
+            .collect();
+        (profiles, spec)
+    }
+
+    #[test]
+    fn identical_sensitivities_get_uniform_allocation() {
+        let (profiles, mut spec) = synth_profiles(4, false);
+        // A budget exactly accommodating the best uniform cell at that
+        // level, with zero slack left over. (At a budget with slack the
+        // allocator rightly spends the remainder on partial upgrades —
+        // identical sensitivities make the uniform plan optimal only
+        // when no single upgrade fits.)
+        let per_layer = profiles[0].bytes(&spec, 2, 1); // 4 bits, rank 4
+        spec.budget_bytes = 4 * per_layer;
+        let plan = allocate(&profiles, &spec).unwrap();
+        for l in &plan.layers {
+            assert_eq!((l.bits, l.rank), (plan.layers[0].bits, plan.layers[0].rank));
+        }
+        assert!(plan.plan_bytes <= spec.budget_bytes);
+        // and it uses the budget fully: the uniform cell at that level
+        assert_eq!(plan.plan_bytes, spec.budget_bytes);
+    }
+
+    #[test]
+    fn distinct_sensitivities_get_nonuniform_allocation() {
+        let (profiles, mut spec) = synth_profiles(4, true);
+        let per_layer = profiles[0].bytes(&spec, 1, 1);
+        spec.budget_bytes = 4 * per_layer;
+        let plan = allocate(&profiles, &spec).unwrap();
+        let first = (plan.layers[0].bits, plan.layers[0].rank);
+        assert!(
+            plan.layers.iter().any(|l| (l.bits, l.rank) != first),
+            "layers with 4× different η should not share a cell: {:?}",
+            plan.layers
+        );
+        // the most sensitive layer (largest η boost) gets at least as
+        // many bits as the least sensitive one
+        assert!(plan.layers[3].bits >= plan.layers[0].bits);
+    }
+
+    #[test]
+    fn larger_budget_never_predicts_worse_and_always_fits() {
+        let (profiles, mut spec) = synth_profiles(5, true);
+        let lo = {
+            spec.budget_bytes = u64::MAX;
+            let cheapest: u64 = profiles.iter().map(|p| p.bytes(&spec, 0, 0)).sum();
+            cheapest
+        };
+        let hi: u64 = profiles.iter().map(|p| p.bytes(&spec, 2, 3)).sum();
+        let mut last_err = f64::INFINITY;
+        let steps = 12u64;
+        for s in 0..=steps {
+            spec.budget_bytes = lo + (hi - lo) * s / steps;
+            let plan = allocate(&profiles, &spec).unwrap();
+            assert!(
+                plan.plan_bytes <= spec.budget_bytes,
+                "plan {} bytes over budget {}",
+                plan.plan_bytes,
+                spec.budget_bytes
+            );
+            assert!(
+                plan.predicted_err2 <= last_err * (1.0 + 1e-12),
+                "err² rose from {last_err} to {} at budget {}",
+                plan.predicted_err2,
+                spec.budget_bytes
+            );
+            last_err = plan.predicted_err2;
+        }
+    }
+
+    #[test]
+    fn degenerate_budgets_error_instead_of_panicking() {
+        let (profiles, mut spec) = synth_profiles(3, true);
+        // too small for even the cheapest assignment
+        spec.budget_bytes = 1;
+        let err = allocate(&profiles, &spec).unwrap_err().to_string();
+        assert!(err.contains("too small"), "{err}");
+        // no smaller than fp32 dense
+        spec.budget_bytes = profiles.iter().map(|p| 4 * (p.rows * p.cols) as u64).sum();
+        let err = allocate(&profiles, &spec).unwrap_err().to_string();
+        assert!(err.contains("fp32"), "{err}");
+        // empty candidate space
+        spec.budget_bytes = 40_000;
+        let mut empty = spec.clone();
+        empty.bits_choices.clear();
+        assert!(allocate(&profiles, &empty).is_err());
+        assert!(allocate(&[], &spec).is_err());
+    }
+
+    #[test]
+    fn allocation_beats_uniform_between_levels() {
+        let (profiles, mut spec) = synth_profiles(4, true);
+        // budget strictly between two uniform levels: uniform must
+        // round down, the allocator spends the slack
+        let level = |bi: usize, ri: usize| -> u64 {
+            profiles.iter().map(|p| p.bytes(&spec, bi, ri)).sum()
+        };
+        let midpoint = (level(1, 1) + level(1, 2)) / 2;
+        spec.budget_bytes = midpoint;
+        let allocated = allocate(&profiles, &spec).unwrap();
+        let uniform = uniform_plan(&profiles, &spec).unwrap();
+        assert!(uniform.plan_bytes <= spec.budget_bytes);
+        assert!(
+            allocated.predicted_err2 < uniform.predicted_err2,
+            "allocated {} !< uniform {}",
+            allocated.predicted_err2,
+            uniform.predicted_err2
+        );
+    }
+
+    // ---- integration against a real (synthetic) model ------------------
+
+    fn setup() -> (Params, ModelCfg, CalibrationSet) {
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: 16,
+        };
+        let params = synth_lm_params(&cfg, 5, cfg.vocab);
+        let corpus = Corpus::generate(cfg.vocab, 4000, 6);
+        let batches: Vec<Vec<i32>> = (0..10).map(|i| corpus.train_batch(2, 16, i)).collect();
+        let calib = collect_calibration(&params, &cfg, &batches, 2, 16, 192);
+        (params, cfg, calib)
+    }
+
+    fn small_spec(budget_bytes: u64) -> BudgetSpec {
+        BudgetSpec {
+            budget_bytes,
+            bits_choices: vec![2, 3, 4],
+            block: 32,
+            rank_choices: vec![0, 4, 8],
+            scaling: ScalingKind::DiagRms,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn planned_run_realizes_the_planned_k_and_fits() {
+        let (params, cfg, calib) = setup();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let profiles = runner.budget_profiles(&small_spec(0)).unwrap();
+        let mid: u64 = profiles.iter().map(|p| p.bytes(&small_spec(0), 1, 1)).sum();
+        let spec = small_spec(mid + mid / 10);
+        let plan = runner.plan_budget(&spec).unwrap();
+        assert!(plan.plan_bytes <= spec.budget_bytes);
+        assert_eq!(plan.layers.len(), Params::linear_names(&cfg).len());
+
+        let outcomes = runner.run_factored(&[plan.sweep_config()]);
+        assert_eq!(outcomes.len(), 1);
+        for (alloc, meta) in plan.layers.iter().zip(&outcomes[0].meta) {
+            assert_eq!(alloc.name, meta.name);
+            assert_eq!(
+                alloc.k, meta.k_star,
+                "{}: planned k {} != realized k* {}",
+                alloc.name, alloc.k, meta.k_star
+            );
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_roundtrips_the_wire() {
+        let (params, cfg, calib) = setup();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let profiles = runner.budget_profiles(&small_spec(0)).unwrap();
+        let mid: u64 = profiles.iter().map(|p| p.bytes(&small_spec(0), 1, 1)).sum();
+        let spec = small_spec(mid);
+        let a = runner.plan_budget(&spec).unwrap();
+        let b = runner.plan_budget(&spec).unwrap();
+        assert_eq!(a, b, "planning must be deterministic");
+
+        let frame = wire::encode_budget_plan(&a);
+        assert_eq!(frame.kind, wire::kind::BUDGET_PLAN);
+        let back = wire::decode_budget_plan(&frame.payload).unwrap();
+        assert_eq!(a, back, "wire roundtrip must be lossless");
+    }
+}

@@ -40,9 +40,16 @@
 //!   is elastic and stall-proof: workers heartbeat per in-flight job, a
 //!   silent (wedged) worker is requeued like a death, and new workers
 //!   may dial in and be admitted mid-run.
+//! * [`budget`] — the model-wide rank/bit budget allocator ("best PPL
+//!   at N gigabytes"): greedy marginal-utility descent plus Lagrangian
+//!   water-filling over phase-A sensitivity profiles, emitting a
+//!   [`budget::BudgetPlan`] that [`sweep`] executes as one
+//!   heterogeneous per-layer cell; plans are bit-identical whether the
+//!   probe prep ran in-process or sharded.
 //! * [`metrics`] — counters/timers registry.
 //! * [`config`] — run configuration (CLI/JSON).
 
+pub mod budget;
 pub mod cache;
 pub mod config;
 pub mod jobs;
@@ -53,6 +60,7 @@ pub mod sweep;
 pub mod transport;
 pub mod wire;
 
+pub use budget::{allocate, uniform_plan, BudgetPlan, BudgetSpec, LayerAlloc, LayerProfile};
 pub use cache::{LayerCache, PreparedLayer};
 pub use config::RunConfig;
 pub use metrics::Metrics;
@@ -63,7 +71,7 @@ pub use pipeline::{
 pub use shard::{
     fleet_perplexity_sharded, worker_main, ShardOptions, ShardSession, ShardedSweepRunner,
 };
-pub use sweep::{run_sweep, run_sweep_factored, SweepConfig, SweepRunner};
+pub use sweep::{run_sweep, run_sweep_factored, LayerAssign, SweepConfig, SweepRunner};
 pub use transport::{
     ChildPipeTransport, FaultPlan, FaultTransport, ShardHost, TcpTransport, Transport,
 };

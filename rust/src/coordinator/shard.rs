@@ -999,9 +999,12 @@ impl JobSource for SweepJobSource<'_> {
 
     fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame> {
         let li = job % self.n_layers;
-        let c = &self.configs[job / self.n_layers];
+        // ship the layer's resolved view, so heterogeneous cells never
+        // reach the wire format (workers only ever see homogeneous
+        // configs, exactly what the in-process fan-out executes)
+        let c = self.configs[job / self.n_layers].resolved(li);
         let layer = &self.cache.layers[li];
-        let arts = b2_artifacts(self.cache, li, c);
+        let arts = b2_artifacts(self.cache, li, &c);
         let memo = &self.memo;
         let mut frames = Vec::new();
         let w_ref = memo.mat(arts.w, tx, &mut frames);
@@ -1162,6 +1165,23 @@ impl<'a> ShardedSweepRunner<'a> {
         Ok(assemble_outcomes(self.params, &names, configs.len(), parts, self.metrics))
     }
 
+    /// Phase-A/B1 prep sharded across `session`, returning the rebuilt
+    /// cache without running phase B2 — the budget planner's entry
+    /// point ([`crate::coordinator::budget`]). A [`BudgetPlan`] is a
+    /// pure function of this cache, and the cache is bit-identical to
+    /// the in-process [`SweepRunner::prepare`]'s, so in-process and
+    /// sharded plans match bit-for-bit.
+    ///
+    /// [`BudgetPlan`]: crate::coordinator::budget::BudgetPlan
+    pub(crate) fn prepare(
+        &self,
+        session: &mut ShardSession,
+        configs: &[SweepConfig],
+    ) -> Result<SweepPrep> {
+        let names = Params::linear_names(self.model_cfg);
+        self.sharded_prepare(session, configs, &names)
+    }
+
     /// Phases A + B1 as one shardable job per layer: the host computes
     /// what needs the calibration set (activation scalings, GPTQ
     /// Hessians) and ships it with `W`; workers run the *same*
@@ -1169,13 +1189,13 @@ impl<'a> ShardedSweepRunner<'a> {
     /// calls [`SweepRunner::prepare`] makes in-process, over the same
     /// deduped key lists ([`sweep_keys`]) — so the rebuilt
     /// [`LayerCache`] is bit-identical to the in-process one.
-    fn sharded_prepare(
+    pub(crate) fn sharded_prepare(
         &self,
         session: &mut ShardSession,
         configs: &[SweepConfig],
         names: &[String],
     ) -> Result<SweepPrep> {
-        let keys = sweep_keys(configs);
+        let keys = sweep_keys(configs, names.len());
         let prep_rank = SweepRunner::prep_rank(configs);
 
         // host half of phase A: everything that needs the calibration set
@@ -1221,16 +1241,17 @@ impl<'a> ShardedSweepRunner<'a> {
                     let ResultMsg::Prep(m) = msg else {
                         anyhow::bail!("unexpected non-prep result in a prep batch")
                     };
+                    let lk = &keys.layers[li];
                     anyhow::ensure!(
-                        m.qdeq0.len() == keys.qdeq0_keys.len()
-                            && m.spectra.len() == keys.spectra_keys.len()
-                            && m.resid.len() == keys.resid_keys.len(),
-                        "prep result for layer {li} does not match the grid's key lists"
+                        m.qdeq0.len() == lk.qdeq0_keys.len()
+                            && m.spectra.len() == lk.spectra_keys.len()
+                            && m.resid.len() == lk.resid_keys.len(),
+                        "prep result for layer {li} does not match that layer's key lists"
                     );
                     let mut qdeq0 = HashMap::new();
                     let mut qdeq0_packed = HashMap::new();
                     for ((label, seed, _), (dense, packed)) in
-                        keys.qdeq0_keys.iter().zip(&m.qdeq0)
+                        lk.qdeq0_keys.iter().zip(&m.qdeq0)
                     {
                         qdeq0.insert((label.clone(), *seed), rx.mat(*dense)?);
                         if let Some(p) = packed {
@@ -1238,7 +1259,7 @@ impl<'a> ShardedSweepRunner<'a> {
                         }
                     }
                     let mut spectra = HashMap::new();
-                    for ((kind, seed), sp) in keys.spectra_keys.iter().zip(&m.spectra) {
+                    for ((kind, seed), sp) in lk.spectra_keys.iter().zip(&m.spectra) {
                         spectra.insert(
                             (*kind, *seed),
                             Arc::new(PreparedSpectra {
@@ -1285,7 +1306,7 @@ impl<'a> ShardedSweepRunner<'a> {
         };
         let mut cache = LayerCache::new(layers);
         for (li, ri, svd) in resids {
-            let (label, kind, seed, _) = &keys.resid_keys[ri];
+            let (label, kind, seed, _) = &keys.layers[li].resid_keys[ri];
             cache.insert_resid(li, label.clone(), *kind, *seed, svd);
         }
         self.metrics.add("sweep.prep_secs", t0.elapsed().as_secs_f64());
@@ -1340,6 +1361,7 @@ impl JobSource for PrepJobSource<'_> {
                 (kind, ws)
             })
             .collect();
+        let lk = &self.keys.layers[job];
         let msg = wire::PrepJobMsg {
             job_id: job as u64,
             layer_name: self.names[job].clone(),
@@ -1347,9 +1369,9 @@ impl JobSource for PrepJobSource<'_> {
             w,
             scalings,
             hessian: hp.hessian.as_ref().map(|h| memo.mat(h, tx, &mut frames)),
-            qdeq0: self.keys.qdeq0_keys.clone(),
-            spectra: self.keys.spectra_keys.clone(),
-            resid: self.keys.resid_keys.clone(),
+            qdeq0: lk.qdeq0_keys.clone(),
+            spectra: lk.spectra_keys.clone(),
+            resid: lk.resid_keys.clone(),
         };
         frames.push(wire::encode_prep_job(&msg));
         frames
@@ -2411,6 +2433,50 @@ mod tests {
                      a completed job was re-assigned"
                 );
             }
+            session.shutdown();
+        });
+    }
+
+    /// Budget planning is a pure read of the phase-A cache, and the
+    /// sharded prep rebuilds that cache bit-identically — so for seeded
+    /// fault schedules (chopped writes, mid-frame cuts, corruption,
+    /// silent stalls) the sharded planner's [`BudgetPlan`] must equal
+    /// the in-process one field-for-field, f64 error predictions
+    /// included.
+    ///
+    /// [`BudgetPlan`]: crate::coordinator::budget::BudgetPlan
+    #[test]
+    fn prop_budget_plans_bit_identical_in_process_vs_sharded_under_faults() {
+        use crate::coordinator::budget::BudgetSpec;
+
+        let (params, cfg, calib) = setup();
+        let metrics = Metrics::new();
+        let runner = SweepRunner::new(&params, &cfg, &calib, &metrics);
+        let mut spec = BudgetSpec::new(0);
+        spec.rank_choices = vec![0, 4, 8];
+        spec.seed = 3;
+        // a budget 10% above the mid-grid uniform level, so the
+        // allocator has real slack to distribute
+        let profiles = runner.budget_profiles(&spec).unwrap();
+        let mid: u64 = profiles.iter().map(|p| p.bytes(&spec, 1, 1)).sum();
+        spec.budget_bytes = mid + mid / 10;
+        let expect = runner.plan_budget(&spec).unwrap();
+
+        let sharded = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+        prop::check(0xB0D6E7, 4, |g| {
+            let transports: Vec<Box<dyn Transport>> = (0..2)
+                .map(|wi| {
+                    // worker 0 is always clean: the run must finish
+                    let plan = if wi == 0 { FaultPlan::default() } else { random_plan(g) };
+                    fault_worker(plan)
+                })
+                .collect();
+            let mut session = ShardSession::from_transports(transports).unwrap();
+            session.set_heartbeat_timeout(Duration::from_millis(1500));
+            let got = sharded
+                .plan_budget(&mut session, &spec)
+                .expect("a clean worker survives every schedule");
+            assert_eq!(expect, got, "sharded plan diverged from in-process plan");
             session.shutdown();
         });
     }

@@ -64,6 +64,17 @@ use super::pipeline::{
 /// Randomized-SVD power iterations, matching `QerConfig::new` (§A.4: 4).
 const N_ITER: usize = 4;
 
+/// One layer's `(quantizer, rank)` assignment inside a heterogeneous
+/// [`SweepConfig`] — the unit the budget allocator
+/// ([`crate::coordinator::budget`]) hands out per linear.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAssign {
+    /// quantizer spec for this layer's base
+    pub quantizer: QuantizerSpec,
+    /// rank budget r for this layer
+    pub rank: usize,
+}
+
 /// One cell of a sweep grid.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SweepConfig {
@@ -73,12 +84,19 @@ pub struct SweepConfig {
     pub quantizer: QuantizerSpec,
     /// reconstruction method
     pub method: Method,
-    /// rank budget r
+    /// rank budget r; for heterogeneous configs this also acts as the
+    /// prep-rank floor (see [`SweepConfig::max_rank`])
     pub rank: usize,
     /// activation scaling kind
     pub scaling: ScalingKind,
     /// sweep-level seed (layer-salted per linear)
     pub seed: u64,
+    /// per-layer `(quantizer, rank)` overrides, aligned with
+    /// `Params::linear_names` order. `None` = homogeneous (every layer
+    /// gets the cell's `quantizer`/`rank`). The engine flattens each
+    /// layer's view via [`SweepConfig::resolved`] before doing any work,
+    /// so heterogeneous cells reuse the homogeneous machinery verbatim.
+    pub per_layer: Option<Arc<Vec<LayerAssign>>>,
 }
 
 impl SweepConfig {
@@ -96,7 +114,7 @@ impl SweepConfig {
             rank,
             scaling.label()
         );
-        SweepConfig { label, quantizer, method, rank, scaling, seed: 0 }
+        SweepConfig { label, quantizer, method, rank, scaling, seed: 0, per_layer: None }
     }
 
     /// Builder: replace the sweep-level seed.
@@ -109,6 +127,42 @@ impl SweepConfig {
     pub fn labeled(mut self, label: &str) -> Self {
         self.label = label.to_string();
         self
+    }
+
+    /// Builder: make the cell heterogeneous — one `(quantizer, rank)`
+    /// assignment per linear, aligned with `Params::linear_names` order.
+    pub fn with_per_layer(mut self, assigns: Vec<LayerAssign>) -> Self {
+        self.per_layer = Some(Arc::new(assigns));
+        self
+    }
+
+    /// Layer `li`'s homogeneous view of this cell: the config the engine
+    /// actually executes for that linear. For homogeneous cells this is
+    /// a plain clone; for heterogeneous cells the layer's assignment
+    /// replaces `quantizer`/`rank` and `per_layer` is dropped — which is
+    /// also what goes over the shard wire, so the wire format never sees
+    /// a heterogeneous cell.
+    pub fn resolved(&self, li: usize) -> SweepConfig {
+        let mut c = self.clone();
+        if let Some(assigns) = &self.per_layer {
+            let a = &assigns[li];
+            c.quantizer = a.quantizer;
+            c.rank = a.rank;
+            c.per_layer = None;
+        }
+        c
+    }
+
+    /// The largest rank any layer of this cell uses. The top-level
+    /// `rank` field participates as a floor, so a caller (the budget
+    /// planner) can pin the grid's prep rank above every per-layer rank
+    /// — shared spectra must be factorized at the *planning* prep rank
+    /// for the planned `k` to be the realized `k*`.
+    pub fn max_rank(&self) -> usize {
+        match &self.per_layer {
+            None => self.rank,
+            Some(a) => a.iter().map(|x| x.rank).fold(self.rank, usize::max),
+        }
     }
 
     /// The `QerConfig` the equivalent per-config `run_ptq` call would
@@ -145,9 +199,10 @@ impl<'a> SweepRunner<'a> {
     }
 
     /// The grid's preparation rank: every shared factorization is
-    /// computed at the maximum rank and prefix-truncated per config.
+    /// computed at the maximum rank (over every layer of every cell,
+    /// [`SweepConfig::max_rank`]) and prefix-truncated per config.
     pub fn prep_rank(configs: &[SweepConfig]) -> usize {
-        configs.iter().map(|c| c.rank).max().unwrap_or(0)
+        configs.iter().map(|c| c.max_rank()).max().unwrap_or(0)
     }
 
     /// Run the grid densified; one [`PtqOutcome`] per config, aligned.
@@ -172,11 +227,11 @@ impl<'a> SweepRunner<'a> {
         let n_jobs = n_layers * configs.len();
         let parts: Vec<(LinearOp, LayerMeta, LayerReport)> = pool::par_map(n_jobs, |idx| {
             let li = idx % n_layers;
-            let c = &configs[idx / n_layers];
+            let c = configs[idx / n_layers].resolved(li);
             let layer = &prep.cache.layers[li];
             let t0 = Instant::now();
-            let arts = b2_artifacts(&prep.cache, li, c);
-            let (res, mut report) = b2_job(c, prep.prep_rank, &arts);
+            let arts = b2_artifacts(&prep.cache, li, &c);
+            let (res, mut report) = b2_job(&c, prep.prep_rank, &arts);
             self.metrics.add("sweep.reconstruct_cpu_secs", t0.elapsed().as_secs_f64());
             // prep is shared: charge each config its amortized share
             report.scale_secs = layer.prep_secs / configs.len() as f64;
@@ -208,20 +263,22 @@ impl<'a> SweepRunner<'a> {
     pub(crate) fn prepare(&self, configs: &[SweepConfig]) -> SweepPrep {
         let names = Params::linear_names(self.model_cfg);
         let n_layers = names.len();
-        let SweepKeys { kinds, spectra_keys, qdeq0_keys, resid_keys, prep_rank, any_hessian } =
-            sweep_keys(configs);
+        let keys = sweep_keys(configs, n_layers);
+        let prep_rank = keys.prep_rank;
+        let any_hessian = keys.any_hessian;
 
         // ---- phase A: per-layer shared preparation ----------------------
         let t_prep = Instant::now();
         let layers: Vec<PreparedLayer> = pool::par_map(n_layers, |i| {
             let name = &names[i];
+            let lk = &keys.layers[i];
             let t0 = Instant::now();
             let w = self.params.get_mat(name).expect("linear present");
             let salt = layer_salt(name);
 
             let ts = Instant::now();
             let mut scalings = HashMap::new();
-            for &kind in &kinds {
+            for &kind in &keys.kinds {
                 scalings.insert(kind, Arc::new(self.calib.scaling_for(name, kind)));
             }
             self.metrics.add("sweep.scaling_cpu_secs", ts.elapsed().as_secs_f64());
@@ -237,7 +294,7 @@ impl<'a> SweepRunner<'a> {
             let tq = Instant::now();
             let mut qdeq0 = HashMap::new();
             let mut qdeq0_packed = HashMap::new();
-            for (label, seed, spec) in &qdeq0_keys {
+            for (label, seed, spec) in &lk.qdeq0_keys {
                 let (qdeq, packed) = compute_qdeq0(&w, hessian.as_deref(), spec, *seed, salt);
                 qdeq0.insert((label.clone(), *seed), Arc::new(qdeq));
                 if let Some(p) = packed {
@@ -248,7 +305,7 @@ impl<'a> SweepRunner<'a> {
 
             let tsp = Instant::now();
             let mut spectra = HashMap::new();
-            for (kind, seed) in &spectra_keys {
+            for (kind, seed) in &lk.spectra_keys {
                 let scaling = scalings.get(kind).expect("scaling prepared above");
                 let sp = compute_spectra(&w, scaling, prep_rank, *seed, salt);
                 spectra.insert((*kind, *seed), Arc::new(sp));
@@ -271,11 +328,10 @@ impl<'a> SweepRunner<'a> {
 
         // ---- phase B1: shared plain-QER residual SVDs -------------------
         let t_resid = Instant::now();
-        let n_resid = n_layers * resid_keys.len();
-        let resids: Vec<(usize, usize, Svd)> = pool::par_map(n_resid, |idx| {
-            let li = idx % n_layers;
-            let ri = idx / n_layers;
-            let (label, kind, seed, _spec) = &resid_keys[ri];
+        let resid_jobs = keys.resid_jobs();
+        let resids: Vec<(usize, usize, Svd)> = pool::par_map(resid_jobs.len(), |idx| {
+            let (li, ri) = resid_jobs[idx];
+            let (label, kind, seed, _spec) = &keys.layers[li].resid_keys[ri];
             let layer = &cache.layers[li];
             let salt = layer_salt(&layer.name);
             let qdeq = layer.qdeq0(label, *seed).expect("qdeq prepared");
@@ -286,7 +342,7 @@ impl<'a> SweepRunner<'a> {
             (li, ri, svd)
         });
         for (li, ri, svd) in resids {
-            let (label, kind, seed, _) = &resid_keys[ri];
+            let (label, kind, seed, _) = &keys.layers[li].resid_keys[ri];
             cache.insert_resid(li, label.clone(), *kind, *seed, svd);
         }
         self.metrics.add("sweep.shared_resid_secs", t_resid.elapsed().as_secs_f64());
@@ -304,58 +360,85 @@ pub(crate) struct SweepPrep {
     pub prep_rank: usize,
 }
 
-/// The distinct shared-work keys a grid touches, insertion-ordered and
-/// deduped, plus the grid's prep rank and whether any quantizer wants a
-/// Hessian. One derivation shared by the in-process
-/// [`SweepRunner::prepare`] and the sharded phase-A prep
-/// ([`ShardedSweepRunner`](super::shard::ShardedSweepRunner)), so both
-/// paths enumerate exactly the same work — the bit-identity contract
-/// between them starts here.
-pub(crate) struct SweepKeys {
-    /// every scaling kind any config uses
-    pub kinds: Vec<ScalingKind>,
+/// One layer's distinct shared-work keys, insertion-ordered and deduped.
+/// For homogeneous grids every layer carries identical lists (the
+/// pre-heterogeneity behaviour); a heterogeneous cell contributes only
+/// the keys its [`SweepConfig::resolved`] view of that layer touches.
+#[derive(Default)]
+pub(crate) struct LayerKeys {
     /// (scaling, seed) pairs needing prepared (S·W, S·E) spectra
     pub spectra_keys: Vec<(ScalingKind, u64)>,
     /// (quantizer label, seed, spec) cells needing a k=0 quantization
     pub qdeq0_keys: Vec<(String, u64, QuantizerSpec)>,
     /// (label, scaling, seed, spec) cells needing a plain-QER residual SVD
     pub resid_keys: Vec<(String, ScalingKind, u64, QuantizerSpec)>,
+}
+
+/// The shared-work keys a grid touches, per layer, plus the grid's prep
+/// rank and whether any quantizer wants a Hessian. One derivation shared
+/// by the in-process [`SweepRunner::prepare`] and the sharded phase-A
+/// prep ([`ShardedSweepRunner`](super::shard::ShardedSweepRunner)), so
+/// both paths enumerate exactly the same work — the bit-identity
+/// contract between them starts here.
+pub(crate) struct SweepKeys {
+    /// every scaling kind any config uses (scalings are cheap; computed
+    /// for all layers rather than tracked per layer)
+    pub kinds: Vec<ScalingKind>,
+    /// per-layer key lists, aligned with `Params::linear_names`
+    pub layers: Vec<LayerKeys>,
     /// rank every shared factorization is computed at
     pub prep_rank: usize,
-    /// whether any config's quantizer consumes a GPTQ Hessian
+    /// whether any resolved cell's quantizer consumes a GPTQ Hessian
     pub any_hessian: bool,
 }
 
-/// Derive the deduped shared-work key lists for `configs`.
-pub(crate) fn sweep_keys(configs: &[SweepConfig]) -> SweepKeys {
+impl SweepKeys {
+    /// Flattened `(layer, key-index)` job list for the phase-B1 residual
+    /// SVDs — layer-major, key order within a layer, so the in-process
+    /// and sharded paths walk residuals identically.
+    pub fn resid_jobs(&self) -> Vec<(usize, usize)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .flat_map(|(li, lk)| (0..lk.resid_keys.len()).map(move |ri| (li, ri)))
+            .collect()
+    }
+}
+
+/// Derive the deduped per-layer shared-work key lists for `configs`
+/// over `n_layers` linears.
+pub(crate) fn sweep_keys(configs: &[SweepConfig], n_layers: usize) -> SweepKeys {
     let prep_rank = SweepRunner::prep_rank(configs);
-    let any_hessian = configs.iter().any(|c| c.quantizer.needs_hessian());
+    let mut any_hessian = false;
     let mut kinds: Vec<ScalingKind> = Vec::new();
-    let mut spectra_keys: Vec<(ScalingKind, u64)> = Vec::new();
-    let mut qdeq0_keys: Vec<(String, u64, QuantizerSpec)> = Vec::new();
-    let mut resid_keys: Vec<(String, ScalingKind, u64, QuantizerSpec)> = Vec::new();
-    for c in configs {
-        if !kinds.contains(&c.scaling) {
-            kinds.push(c.scaling);
-        }
-        if c.method.needs_spectra() && !spectra_keys.contains(&(c.scaling, c.seed)) {
-            spectra_keys.push((c.scaling, c.seed));
-        }
-        if matches!(c.method, Method::WOnly | Method::Qer) {
-            let label = c.quantizer.label();
-            if !qdeq0_keys.iter().any(|(l, s, _)| *l == label && *s == c.seed) {
-                qdeq0_keys.push((label.clone(), c.seed, c.quantizer));
+    let mut layers: Vec<LayerKeys> = (0..n_layers).map(|_| LayerKeys::default()).collect();
+    for (li, lk) in layers.iter_mut().enumerate() {
+        for cell in configs {
+            let c = cell.resolved(li);
+            any_hessian |= c.quantizer.needs_hessian();
+            if !kinds.contains(&c.scaling) {
+                kinds.push(c.scaling);
             }
-            if c.method == Method::Qer
-                && !resid_keys
-                    .iter()
-                    .any(|(l, k, s, _)| *l == label && *k == c.scaling && *s == c.seed)
-            {
-                resid_keys.push((label, c.scaling, c.seed, c.quantizer));
+            if c.method.needs_spectra() && !lk.spectra_keys.contains(&(c.scaling, c.seed)) {
+                lk.spectra_keys.push((c.scaling, c.seed));
+            }
+            if matches!(c.method, Method::WOnly | Method::Qer) {
+                let label = c.quantizer.label();
+                if !lk.qdeq0_keys.iter().any(|(l, s, _)| *l == label && *s == c.seed) {
+                    lk.qdeq0_keys.push((label.clone(), c.seed, c.quantizer));
+                }
+                if c.method == Method::Qer
+                    && !lk
+                        .resid_keys
+                        .iter()
+                        .any(|(l, k, s, _)| *l == label && *k == c.scaling && *s == c.seed)
+                {
+                    lk.resid_keys.push((label, c.scaling, c.seed, c.quantizer));
+                }
             }
         }
     }
-    SweepKeys { kinds, spectra_keys, qdeq0_keys, resid_keys, prep_rank, any_hessian }
+    SweepKeys { kinds, layers, prep_rank, any_hessian }
 }
 
 /// One phase-A k=0 quantization: the salted-seed stream every path —
@@ -667,6 +750,47 @@ mod tests {
                     c.label
                 );
             }
+        }
+    }
+
+    /// A heterogeneous cell (per-layer quantizer/rank, the budget
+    /// allocator's execution form) must be bit-identical, layer by
+    /// layer, to the homogeneous grid member carrying that layer's
+    /// assignment — same grid, so all cells share one prep rank.
+    #[test]
+    fn heterogeneous_cell_matches_homogeneous_members_per_layer() {
+        let (params, cfg, calib) = setup();
+        let n_layers = Params::linear_names(&cfg).len();
+        let mx3 = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let mx4 = QuantizerSpec::Mxint { bits: 4, block: 32 };
+        let assigns: Vec<LayerAssign> = (0..n_layers)
+            .map(|li| {
+                if li % 2 == 0 {
+                    LayerAssign { quantizer: mx3, rank: 4 }
+                } else {
+                    LayerAssign { quantizer: mx4, rank: 8 }
+                }
+            })
+            .collect();
+        // the het cell's top-level rank is the prep floor (max_rank)
+        let configs = vec![
+            SweepConfig::new(mx3, Method::QerSrr, 8, ScalingKind::DiagRms)
+                .with_per_layer(assigns),
+            SweepConfig::new(mx3, Method::QerSrr, 4, ScalingKind::DiagRms),
+            SweepConfig::new(mx4, Method::QerSrr, 8, ScalingKind::DiagRms),
+        ];
+        assert_eq!(SweepRunner::prep_rank(&configs), 8);
+        let metrics = Metrics::new();
+        let outs = run_sweep(&params, &cfg, &calib, &configs, &metrics);
+        for li in 0..n_layers {
+            let want = if li % 2 == 0 { &outs[1] } else { &outs[2] };
+            let (n1, got) = &outs[0].results[li];
+            let (n2, exp) = &want.results[li];
+            assert_eq!(n1, n2);
+            assert_eq!(got.qdeq, exp.qdeq, "{n1}: qdeq differs");
+            assert_eq!(got.l, exp.l, "{n1}: L differs");
+            assert_eq!(got.r, exp.r, "{n1}: R differs");
+            assert_eq!(got.k_star, exp.k_star, "{n1}: k* differs");
         }
     }
 

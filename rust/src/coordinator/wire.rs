@@ -51,6 +51,7 @@ use crate::runtime::TensorValue;
 use crate::scaling::ScalingKind;
 use crate::tensor::Mat;
 
+use super::budget::{BudgetPlan, LayerAlloc};
 use super::pipeline::QuantizerSpec;
 use super::sweep::SweepConfig;
 use crate::qer::Method;
@@ -103,6 +104,11 @@ pub mod kind {
     /// client→daemon: cancel an in-flight serving request by id; the
     /// daemon frees the request's scheduler slot and sends no reply
     pub const SERVE_CANCEL: u8 = 15;
+    /// artifact: a model-wide budget allocation
+    /// ([`crate::coordinator::budget::BudgetPlan`]) — what `srr budget
+    /// --plan-out` writes and sharded planners could ship; not part of
+    /// the host/worker job protocol
+    pub const BUDGET_PLAN: u8 = 16;
 }
 
 /// Content-address of a blob: 128-bit FNV over its encoded bytes.
@@ -717,6 +723,9 @@ fn get_quantizer(r: &mut WireReader) -> Result<QuantizerSpec, WireError> {
 }
 
 fn put_sweep_config(w: &mut WireWriter, c: &SweepConfig) {
+    // heterogeneous cells are resolved to a layer's homogeneous view
+    // before encoding (SweepJobSource), so per_layer never rides the wire
+    debug_assert!(c.per_layer.is_none(), "encode a resolved SweepConfig");
     w.put_str(&c.label);
     put_quantizer(w, &c.quantizer);
     put_method(w, &c.method);
@@ -733,6 +742,7 @@ fn get_sweep_config(r: &mut WireReader) -> Result<SweepConfig, WireError> {
         rank: r.get_usize()?,
         scaling: get_scaling_kind(r)?,
         seed: r.get_u64()?,
+        per_layer: None,
     })
 }
 
@@ -1612,6 +1622,68 @@ pub fn decode_hello(payload: &[u8]) -> Result<(bool, u64), WireError> {
     Ok((worker, token))
 }
 
+/// Encode a [`kind::BUDGET_PLAN`] frame: the allocator's full output,
+/// so a plan written by `srr budget --plan-out` (or shipped between
+/// processes) reconstructs bit-exactly — f64 error predictions
+/// included.
+pub fn encode_budget_plan(p: &BudgetPlan) -> Frame {
+    let mut w = WireWriter::new();
+    w.put_u64(p.budget_bytes);
+    w.put_u64(p.plan_bytes);
+    w.put_f64(p.predicted_err2);
+    w.put_usize(p.prep_rank);
+    w.put_usize(p.block);
+    put_scaling_kind(&mut w, p.scaling);
+    w.put_u64(p.seed);
+    w.put_usize(p.layers.len());
+    for l in &p.layers {
+        w.put_str(&l.name);
+        w.put_u32(l.bits);
+        w.put_usize(l.rank);
+        w.put_usize(l.k);
+        w.put_u64(l.bytes);
+        w.put_f64(l.predicted_err2);
+    }
+    Frame { kind: kind::BUDGET_PLAN, payload: w.into_bytes() }
+}
+
+/// Decode a [`kind::BUDGET_PLAN`] payload.
+pub fn decode_budget_plan(payload: &[u8]) -> Result<BudgetPlan, WireError> {
+    let mut r = WireReader::new(payload);
+    let budget_bytes = r.get_u64()?;
+    let plan_bytes = r.get_u64()?;
+    let predicted_err2 = r.get_f64()?;
+    let prep_rank = r.get_usize()?;
+    let block = r.get_usize()?;
+    let scaling = get_scaling_kind(&mut r)?;
+    let seed = r.get_u64()?;
+    let n = r.get_usize()?;
+    let mut layers = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        layers.push(LayerAlloc {
+            name: r.get_str()?,
+            bits: r.get_u32()?,
+            rank: r.get_usize()?,
+            k: r.get_usize()?,
+            bytes: r.get_u64()?,
+            predicted_err2: r.get_f64()?,
+        });
+    }
+    if !r.is_done() {
+        return Err(WireError::Malformed("budget plan trailing bytes"));
+    }
+    Ok(BudgetPlan {
+        layers,
+        budget_bytes,
+        plan_bytes,
+        predicted_err2,
+        prep_rank,
+        block,
+        scaling,
+        seed,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1919,6 +1991,52 @@ mod tests {
         }
         // clean EOF at a frame boundary is Ok(None)
         assert!(read_frame(&mut Cursor::new(&[] as &[u8])).unwrap().is_none());
+    }
+
+    #[test]
+    fn budget_plan_roundtrips_and_rejects_truncation() {
+        let plan = BudgetPlan {
+            layers: vec![
+                LayerAlloc {
+                    name: "h.0.attn.wq".into(),
+                    bits: 3,
+                    rank: 16,
+                    k: 5,
+                    bytes: 12_345,
+                    predicted_err2: 0.125,
+                },
+                LayerAlloc {
+                    name: "h.1.mlp.w1".into(),
+                    bits: 2,
+                    rank: 0,
+                    k: 0,
+                    bytes: 6_789,
+                    predicted_err2: 7.5e-3,
+                },
+            ],
+            budget_bytes: 20_000,
+            plan_bytes: 19_134,
+            predicted_err2: 0.1325,
+            prep_rank: 16,
+            block: 32,
+            scaling: ScalingKind::DiagRms,
+            seed: 9,
+        };
+        let frame = roundtrip(&encode_budget_plan(&plan));
+        assert_eq!(frame.kind, kind::BUDGET_PLAN);
+        assert_eq!(decode_budget_plan(&frame.payload).unwrap(), plan);
+
+        // any strict payload prefix is refused, as are trailing bytes
+        let payload = encode_budget_plan(&plan).payload;
+        for cut in [0usize, 4, 11, payload.len() / 2, payload.len() - 1] {
+            assert!(decode_budget_plan(&payload[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut extended = payload.clone();
+        extended.push(0);
+        assert!(matches!(
+            decode_budget_plan(&extended),
+            Err(WireError::Malformed(_))
+        ));
     }
 
     #[test]

@@ -440,6 +440,65 @@ mod tests {
         });
     }
 
+    /// Mixed-bit fleets, as the budget allocator emits them: a w-only
+    /// cell and a QER cell carrying the *same* per-layer alternating
+    /// 2/4-bit assignment share every cached packed base `Arc`, so they
+    /// group, and each member's lock-step fleet PPL equals its solo
+    /// [`perplexity_native`].
+    #[test]
+    fn mixed_bit_heterogeneous_cells_group_and_match_solo_ppl() {
+        use crate::coordinator::{run_sweep_factored, LayerAssign, Metrics, SweepConfig};
+        use crate::data::Corpus;
+        use crate::model::collect_calibration;
+        use crate::qer::Method;
+        use crate::scaling::ScalingKind;
+
+        let cfg = tiny_cfg();
+        let params = synth_lm_params(&cfg, 11, cfg.vocab);
+        let corpus = Corpus::generate(cfg.vocab, 2000, 6);
+        let batches: Vec<Vec<i32>> =
+            (0..6).map(|i| corpus.train_batch(2, cfg.seq_len, i)).collect();
+        let calib = collect_calibration(&params, &cfg, &batches, 2, cfg.seq_len, 128);
+
+        let names = Params::linear_names(&cfg);
+        let quant_of = |li: usize| QuantizerSpec::Mxint {
+            bits: if li % 2 == 0 { 2 } else { 4 },
+            block: 32,
+        };
+        let wonly: Vec<LayerAssign> = (0..names.len())
+            .map(|li| LayerAssign { quantizer: quant_of(li), rank: 0 })
+            .collect();
+        let qer: Vec<LayerAssign> = (0..names.len())
+            .map(|li| LayerAssign { quantizer: quant_of(li), rank: 4 })
+            .collect();
+        let mx = QuantizerSpec::Mxint { bits: 4, block: 32 };
+        let configs = vec![
+            SweepConfig::new(mx, Method::WOnly, 0, ScalingKind::DiagRms)
+                .with_per_layer(wonly),
+            SweepConfig::new(mx, Method::Qer, 4, ScalingKind::DiagRms).with_per_layer(qer),
+        ];
+        let metrics = Metrics::new();
+        let outs = run_sweep_factored(&params, &cfg, &calib, &configs, &metrics);
+
+        let refs: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
+        let groups = group_by_shared_bases(&refs);
+        assert_eq!(
+            groups.len(),
+            1,
+            "same per-layer bits must share packed bases into one group"
+        );
+
+        let fleet = fleet_perplexity(&refs, &cfg, &batches, 2, cfg.seq_len);
+        for (i, m) in refs.iter().enumerate() {
+            let solo = perplexity_native(*m, &cfg, &batches, 2, cfg.seq_len);
+            assert!(
+                (fleet[i] - solo).abs() <= 1e-6,
+                "model {i}: fleet {} vs per-outcome {solo}",
+                fleet[i]
+            );
+        }
+    }
+
     #[test]
     fn singleton_group_of_dense_ops_never_groups() {
         let cfg = tiny_cfg();

@@ -83,6 +83,11 @@ pub fn registry() -> Vec<ExpEntry> {
             perf::shard_bench,
         ),
         offline(
+            "budget",
+            "§Budget model-wide rank/bit allocator vs uniform baseline at equal bytes (writes BENCH_budget.json)",
+            perf::budget_bench,
+        ),
+        offline(
             "serve_live",
             "§Perf continuous-batching daemon under live TCP load, serial-oracle bit-identity (writes BENCH_serve_live.json)",
             perf::serve_live_bench,
@@ -121,7 +126,7 @@ mod tests {
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
             "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep", "serve",
-            "evalbatch", "shard", "serve_live",
+            "evalbatch", "shard", "serve_live", "budget",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
@@ -134,6 +139,7 @@ mod tests {
         assert!(offline_ok("evalbatch"));
         assert!(offline_ok("shard"));
         assert!(offline_ok("serve_live"));
+        assert!(offline_ok("budget"));
         assert!(!offline_ok("table1"));
         assert!(!offline_ok("nonexistent"));
     }

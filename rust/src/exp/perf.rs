@@ -11,9 +11,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::{
-    fleet_perplexity_sharded, run_ptq, run_ptq_factored, run_sweep, run_sweep_factored,
-    FactoredOutcome, Metrics, QuantizerSpec, ShardOptions, ShardSession, ShardedSweepRunner,
-    SweepConfig, SweepRunner,
+    allocate, fleet_perplexity_sharded, run_ptq, run_ptq_factored, run_sweep,
+    run_sweep_factored, uniform_plan, BudgetSpec, FactoredOutcome, Metrics, QuantizerSpec,
+    ShardOptions, ShardSession, ShardedSweepRunner, SweepConfig, SweepRunner,
 };
 use crate::eval::{fleet_footprint, fleet_perplexity, perplexity_native, perplexity_native_masked};
 use crate::linalg::{eigh, jacobi_svd, randomized_svd};
@@ -1297,4 +1297,151 @@ pub fn perf_suite(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     }
 
     Ok(tables)
+}
+
+/// `--exp budget`: the model-wide rank/bit budget allocator against the
+/// best *uniform* `(bits, rank)` baseline at equal bytes, recorded into
+/// `BENCH_budget.json` and CI-gated.
+///
+/// Three budget points are pinned one byte *below* successive uniform
+/// byte levels, so every uniform baseline is forced down a level and
+/// strands slack the allocator can spend on the most error-sensitive
+/// layers. All six plans (allocated + uniform at each point) execute
+/// through one heterogeneous sweep grid — shared phase-A prep — and are
+/// scored with the native serving-path perplexity, which is fully
+/// deterministic here, so `allocated_beats_uniform` is a hard gate, not
+/// a statistical one. `allocation_bit_identical` gates the other seam:
+/// planning over an N=2 sharded probe prep must yield byte-for-byte the
+/// same [`crate::coordinator::BudgetPlan`] as in-process planning.
+pub fn budget_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let metrics = Metrics::new();
+    let runner = SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+
+    let mut spec = BudgetSpec::new(0);
+    spec.bits_choices = vec![2, 3, 4];
+    spec.rank_choices = if ctx.quick { vec![0, 4, 8] } else { vec![0, 4, 8, 16] };
+    spec.seed = 1;
+
+    let t0 = Instant::now();
+    let profiles = runner.budget_profiles(&spec)?;
+    let profile_secs = t0.elapsed().as_secs_f64();
+
+    // uniform byte level for candidate cell (bits index, rank index)
+    let level =
+        |bi: usize, ri: usize| -> u64 { profiles.iter().map(|p| p.bytes(&spec, bi, ri)).sum() };
+    // one byte under each level: (3b, r4), (3b, r8), (4b, r8) — all
+    // present in both quick and full rank grids
+    let points: Vec<u64> = vec![level(1, 1) - 1, level(1, 2) - 1, level(2, 2) - 1];
+
+    let mut specs = Vec::new();
+    let mut plans = Vec::new(); // (allocated, uniform) per point
+    let mut configs = Vec::new();
+    for (i, &budget) in points.iter().enumerate() {
+        let mut sp = spec.clone();
+        sp.budget_bytes = budget;
+        let alloc = allocate(&profiles, &sp)?;
+        let uni = uniform_plan(&profiles, &sp)?;
+        configs.push(alloc.sweep_config().labeled(&format!("budget/alloc{i}")));
+        configs.push(uni.sweep_config().labeled(&format!("budget/uniform{i}")));
+        specs.push(sp);
+        plans.push((alloc, uni));
+    }
+
+    // one grid run executes all six plans against shared phase-A work
+    let t0 = Instant::now();
+    let outs = runner.run_factored(&configs);
+    let run_secs = t0.elapsed().as_secs_f64();
+
+    let b = ctx.engine.manifest().lm_batch;
+    let t_len = fx.cfg.seq_len;
+    let batches = ctx.ppl_batches(model)?;
+    let bf16_ppl = perplexity_native(&fx.params, &fx.cfg, &batches, b, t_len);
+
+    // the sharded seam: same probe prep over N=2 workers, same
+    // profiles, same deterministic descent — the plan must not drift
+    let mid = &specs[1];
+    let inproc = runner.plan_budget(mid)?;
+    let sharded = {
+        let mut session = ShardSession::spawn(&ShardOptions::with_workers(2))?;
+        let sharded_runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+        let plan = sharded_runner.plan_budget(&mut session, mid)?;
+        session.shutdown();
+        plan
+    };
+    let allocation_bit_identical = inproc == sharded && inproc == plans[1].0;
+
+    let mut allocated_beats_uniform = true;
+    let mut plans_fit_budget = true;
+    let mut planned_k_realized = true;
+    let mut point_records = Vec::new();
+    let mut table = Table::new(
+        "§Budget allocated vs uniform PPL at equal bytes (BENCH_budget.json)",
+        &["budget bytes", "uniform cell", "uniform ppl", "allocated ppl", "Δppl"],
+    );
+    for (i, (alloc, uni)) in plans.iter().enumerate() {
+        let (ao, uo) = (&outs[2 * i], &outs[2 * i + 1]);
+        for (plan, out) in [(alloc, ao), (uni, uo)] {
+            planned_k_realized &= plan
+                .layers
+                .iter()
+                .zip(&out.meta)
+                .all(|(l, m)| l.name == m.name && l.k == m.k_star);
+        }
+        let ppl_alloc = perplexity_native(&ao.model, &fx.cfg, &batches, b, t_len);
+        let ppl_uni = perplexity_native(&uo.model, &fx.cfg, &batches, b, t_len);
+        plans_fit_budget &= alloc.plan_bytes <= points[i] && uni.plan_bytes <= points[i];
+        // ties count for the allocator: equal PPL at equal bytes is "no
+        // worse", and the eval is deterministic (the epsilon only
+        // absorbs non-associative reduction orderings, not noise)
+        allocated_beats_uniform &= ppl_alloc <= ppl_uni + 1e-9;
+        let cell = format!("mxint{}/r{}", uni.layers[0].bits, uni.layers[0].rank);
+        table.row(vec![
+            format!("{}", points[i]),
+            cell.clone(),
+            f(ppl_uni, 4),
+            f(ppl_alloc, 4),
+            f(ppl_alloc - ppl_uni, 4),
+        ]);
+        point_records.push(Json::obj(vec![
+            ("budget_bytes", Json::num(points[i] as f64)),
+            ("allocated_bytes", Json::num(alloc.plan_bytes as f64)),
+            ("allocated_predicted_err2", Json::num(alloc.predicted_err2)),
+            ("allocated_ppl", Json::num(ppl_alloc)),
+            ("uniform_cell", Json::str(cell)),
+            ("uniform_bytes", Json::num(uni.plan_bytes as f64)),
+            ("uniform_predicted_err2", Json::num(uni.predicted_err2)),
+            ("uniform_ppl", Json::num(ppl_uni)),
+        ]));
+    }
+
+    let record = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("quick", Json::Bool(ctx.quick)),
+        ("n_layers", Json::num(profiles.len() as f64)),
+        ("bf16_ppl", Json::num(bf16_ppl)),
+        ("profile_secs", Json::num(profile_secs)),
+        ("run_secs", Json::num(run_secs)),
+        ("points", Json::arr(point_records)),
+        ("plans_fit_budget", Json::Bool(plans_fit_budget)),
+        ("planned_k_realized", Json::Bool(planned_k_realized)),
+        ("allocated_beats_uniform", Json::Bool(allocated_beats_uniform)),
+        ("allocation_bit_identical", Json::Bool(allocation_bit_identical)),
+    ]);
+    // written before the gates below so a divergence still lands in the
+    // record for check_bench.py to flag
+    bench::write_json("BENCH_budget.json", &record)?;
+
+    anyhow::ensure!(plans_fit_budget, "a plan exceeded its byte budget");
+    anyhow::ensure!(planned_k_realized, "planned preserve-k diverged from the realized k*");
+    anyhow::ensure!(
+        allocated_beats_uniform,
+        "allocated plan lost to the uniform baseline at equal bytes"
+    );
+    anyhow::ensure!(
+        allocation_bit_identical,
+        "sharded budget plan diverged from the in-process plan"
+    );
+    Ok(vec![table])
 }

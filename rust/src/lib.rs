@@ -10,7 +10,11 @@
 //! the PJRT C API (`xla` crate, behind the opt-in `pjrt` feature; the
 //! default build is pure rust). Python never runs at request time.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Module map (see DESIGN.md for the full inventory, and
+//! `docs/ARCHITECTURE.md` in the repo root for the end-to-end dataflow
+//! walkthrough — phase-A prep → sweep → packed serving → shard plane →
+//! fleet eval → serve daemon → budget allocator — with the bit-identity
+//! invariant and gating `BENCH_*.json` record at every seam):
 //!
 //! * [`util`] — substrates built in-repo (PRNG, JSON, CLI, stats, thread
 //!   pool, property-test helper): no crates.io access beyond `xla`/`anyhow`.
@@ -47,7 +51,12 @@
 //!   dedup) and `coordinator::shard` (`ShardedSweepRunner` /
 //!   `fleet_perplexity_sharded` over `srr shard-worker` processes,
 //!   bit-identical to the in-process engines, with worker-death
-//!   requeue).
+//!   requeue). `coordinator::budget` sits on top of the same phase-A
+//!   cache: a model-wide byte budget ("best PPL at N gigabytes")
+//!   becomes a per-layer `(bits, rank, k)` `BudgetPlan` by greedy
+//!   marginal-utility descent with Lagrangian water-filling refinement
+//!   over the measured sensitivity profiles — plannable in-process or
+//!   sharded, bit-identically (`BENCH_budget.json` gates it).
 //! * [`eval`] — perplexity / zero-shot / GLUE-sim metrics engines;
 //!   `perplexity_native` evaluates any `ModelWeights` (including the
 //!   factored model) without PJRT, and `eval::fleet` scores whole sweep

@@ -13,6 +13,14 @@
 //!                                to dial in; --heartbeat-timeout tunes how
 //!                                long a silent worker may go before being
 //!                                declared wedged and its jobs requeued)
+//!   budget [--model --gigabytes G | --budget-bytes N]
+//!          [--bits 2,3,4] [--ranks 0,4,8,16,32] [--block 32] [--seed S]
+//!          [--plan-out FILE] [shard flags as in ptq]
+//!                              — allocate a model-wide byte budget into
+//!                                per-layer (bits, rank, k), print/emit the
+//!                                plan (a wire-codec BUDGET_PLAN frame),
+//!                                then run the allocated PTQ and report
+//!                                PPL vs BF16 (runs offline)
 //!   qpeft  [--task --init --bits --steps --gamma]
 //!                              — fine-tune adapters on a GLUE-sim task
 //!   bench  [ids… | --list] [--quick]
@@ -42,8 +50,8 @@
 use anyhow::Result;
 
 use srr::coordinator::{
-    fleet_perplexity_sharded, run_ptq_factored, Metrics, RunConfig, ShardOptions, ShardSession,
-    ShardedSweepRunner, SweepConfig, SweepRunner,
+    fleet_perplexity_sharded, run_ptq_factored, BudgetSpec, Metrics, RunConfig, ShardOptions,
+    ShardSession, ShardedSweepRunner, SweepConfig, SweepRunner,
 };
 use srr::serve::daemon::{Daemon, DaemonConfig, FleetEngine, ServeClient};
 use srr::data::glue_sim::GlueTask;
@@ -67,14 +75,16 @@ fn main() {
         Some("shard-worker") => srr::coordinator::worker_main(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("budget") => cmd_budget(&args),
         _ => {
             eprintln!(
-                "usage: srr <info|ptq|qpeft|bench|shard-worker|serve|client> [options]\n\
+                "usage: srr <info|ptq|budget|qpeft|bench|shard-worker|serve|client> [options]\n\
                  \n  srr info\
                  \n  srr ptq --model small --method srr --scaling qera-exact --quantizer mxint3 --rank 8\
                  \n  srr ptq --model tiny --rank 8 --workers 2   # multi-process reconstruction + eval\
                  \n  srr ptq --model tiny --rank 8 --listen 127.0.0.1:7777 --workers 2   # remote workers dial in\
                  \n  srr shard-worker --connect host:7777        # remote worker side\
+                 \n  srr budget --model tiny --gigabytes 0.002 --bits 2,3,4 --ranks 0,4,8 --plan-out plan.srrw\
                  \n  srr qpeft --task SST-sim --init srr --bits 2 --steps 60\
                  \n  srr bench table1 fig5 [--quick]   |   srr bench --list\
                  \n  srr serve --model tiny --listen 127.0.0.1:7878 --ranks 4,8   # batching daemon\
@@ -136,93 +146,7 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     );
     let fx = ctx.lm(&cfg.model)?;
     let metrics = Metrics::new();
-    // Sharding (all modes bit-identical to the in-process path):
-    //   --workers N                 spawn N local `srr shard-worker`
-    //                               processes over pipes;
-    //   --workers tcp:host:port,…   dial workers already listening
-    //                               (`srr shard-worker --listen …`);
-    //   --listen host:port          wait for --workers N (default 1)
-    //                               remote workers to dial in
-    //                               (`srr shard-worker --connect …`).
-    // worker_threads: 0 lets each local worker size its own pool
-    // (SRR_THREADS / available cores); the single-threaded pinning is
-    // only for the scaling bench, not for real CLI runs.
-    // --heartbeat-timeout S: a worker whose in-flight jobs go silent for
-    // S seconds is declared wedged — its jobs requeue onto live workers.
-    // Over WANs with long GC/paging pauses, raise it; the default (10 s)
-    // suits LAN and local-pipe fleets.
-    let heartbeat_timeout = match args.get("heartbeat-timeout") {
-        Some(spec) => {
-            let secs: f64 = spec.parse().map_err(|_| {
-                anyhow::anyhow!("--heartbeat-timeout expects seconds, got {spec:?}")
-            })?;
-            anyhow::ensure!(secs > 0.0, "--heartbeat-timeout must be > 0");
-            Some(std::time::Duration::from_secs_f64(secs))
-        }
-        None => None,
-    };
-    let mut session = if let Some(addr) = args.get("listen") {
-        // an unparseable or zero count must not silently turn into the
-        // default (pipe mode gives --workers 0 a different meaning)
-        let n = match args.get("workers") {
-            Some(spec) => {
-                let n: usize = spec.parse().map_err(|_| {
-                    anyhow::anyhow!("--listen expects --workers N (a count), got {spec:?}")
-                })?;
-                anyhow::ensure!(n >= 1, "--listen needs --workers ≥ 1");
-                n
-            }
-            None => 1,
-        };
-        let deadline = std::time::Duration::from_secs(args.get_u64("accept-timeout", 120));
-        println!("listening on {addr} for {n} remote worker(s)…");
-        let mut session = ShardSession::listen(addr, n, deadline)?;
-        if let Some(t) = heartbeat_timeout {
-            session.set_heartbeat_timeout(t);
-        }
-        Some(session)
-    } else if let Some(spec) = args.get("workers") {
-        if spec.contains("tcp:") {
-            // every entry must parse — a silently dropped worker address
-            // would shrink the fleet without anyone noticing
-            let addrs: Vec<String> = spec
-                .split(',')
-                .map(|s| {
-                    s.trim()
-                        .strip_prefix("tcp:")
-                        .filter(|a| !a.is_empty())
-                        .map(str::to_string)
-                        .ok_or_else(|| {
-                            anyhow::anyhow!("--workers entry {s:?} is not tcp:host:port")
-                        })
-                })
-                .collect::<Result<_>>()?;
-            println!("dialing {} remote worker(s)…", addrs.len());
-            let mut session = ShardSession::dial(&addrs)?;
-            if let Some(t) = heartbeat_timeout {
-                session.set_heartbeat_timeout(t);
-            }
-            Some(session)
-        } else {
-            let workers: usize = spec
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--workers expects a count or tcp:host:port list"))?;
-            if workers > 0 {
-                let mut opts =
-                    ShardOptions { workers, worker_threads: 0, ..Default::default() };
-                if let Some(t) = heartbeat_timeout {
-                    // set before spawn so the workers' --heartbeat-secs
-                    // cadence is derived from the same timeout
-                    opts.heartbeat_timeout = t;
-                }
-                Some(ShardSession::spawn(&opts)?)
-            } else {
-                None
-            }
-        }
-    } else {
-        None
-    };
+    let mut session = session_from_args(args)?;
     let out = if let Some(session) = session.as_mut() {
         let sweep_cfg = SweepConfig::new(cfg.quantizer, cfg.method, cfg.rank, cfg.scaling)
             .seeded(cfg.seed);
@@ -268,6 +192,213 @@ fn cmd_ptq(args: &Args) -> Result<()> {
         out.model.dense_linear_bytes()
     );
     println!("\n{}", metrics.report());
+    Ok(())
+}
+
+/// The shared sharding flags (`srr ptq` / `srr budget`), all modes
+/// bit-identical to the in-process path:
+///   --workers N                 spawn N local `srr shard-worker`
+///                               processes over pipes;
+///   --workers tcp:host:port,…   dial workers already listening
+///                               (`srr shard-worker --listen …`);
+///   --listen host:port          wait for --workers N (default 1)
+///                               remote workers to dial in
+///                               (`srr shard-worker --connect …`).
+///
+/// `--heartbeat-timeout S`: a worker whose in-flight jobs go silent for
+/// S seconds is declared wedged — its jobs requeue onto live workers.
+/// Over WANs with long GC/paging pauses, raise it; the default (10 s)
+/// suits LAN and local-pipe fleets. `worker_threads: 0` lets each local
+/// worker size its own pool (SRR_THREADS / available cores); the
+/// single-threaded pinning is only for the scaling bench.
+///
+/// Returns None when no sharding was requested.
+fn session_from_args(args: &Args) -> Result<Option<ShardSession>> {
+    let heartbeat_timeout = match args.get("heartbeat-timeout") {
+        Some(spec) => {
+            let secs: f64 = spec.parse().map_err(|_| {
+                anyhow::anyhow!("--heartbeat-timeout expects seconds, got {spec:?}")
+            })?;
+            anyhow::ensure!(secs > 0.0, "--heartbeat-timeout must be > 0");
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+        None => None,
+    };
+    if let Some(addr) = args.get("listen") {
+        // an unparseable or zero count must not silently turn into the
+        // default (pipe mode gives --workers 0 a different meaning)
+        let n = match args.get("workers") {
+            Some(spec) => {
+                let n: usize = spec.parse().map_err(|_| {
+                    anyhow::anyhow!("--listen expects --workers N (a count), got {spec:?}")
+                })?;
+                anyhow::ensure!(n >= 1, "--listen needs --workers ≥ 1");
+                n
+            }
+            None => 1,
+        };
+        let deadline = std::time::Duration::from_secs(args.get_u64("accept-timeout", 120));
+        println!("listening on {addr} for {n} remote worker(s)…");
+        let mut session = ShardSession::listen(addr, n, deadline)?;
+        if let Some(t) = heartbeat_timeout {
+            session.set_heartbeat_timeout(t);
+        }
+        Ok(Some(session))
+    } else if let Some(spec) = args.get("workers") {
+        if spec.contains("tcp:") {
+            // every entry must parse — a silently dropped worker address
+            // would shrink the fleet without anyone noticing
+            let addrs: Vec<String> = spec
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .strip_prefix("tcp:")
+                        .filter(|a| !a.is_empty())
+                        .map(str::to_string)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("--workers entry {s:?} is not tcp:host:port")
+                        })
+                })
+                .collect::<Result<_>>()?;
+            println!("dialing {} remote worker(s)…", addrs.len());
+            let mut session = ShardSession::dial(&addrs)?;
+            if let Some(t) = heartbeat_timeout {
+                session.set_heartbeat_timeout(t);
+            }
+            Ok(Some(session))
+        } else {
+            let workers: usize = spec
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--workers expects a count or tcp:host:port list"))?;
+            if workers > 0 {
+                let mut opts =
+                    ShardOptions { workers, worker_threads: 0, ..Default::default() };
+                if let Some(t) = heartbeat_timeout {
+                    // set before spawn so the workers' --heartbeat-secs
+                    // cadence is derived from the same timeout
+                    opts.heartbeat_timeout = t;
+                }
+                Ok(Some(ShardSession::spawn(&opts)?))
+            } else {
+                Ok(None)
+            }
+        }
+    } else {
+        Ok(None)
+    }
+}
+
+fn cmd_budget(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny").to_string();
+    let mut ctx = match ExpCtx::new(args.has_flag("quick")) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("[no artifacts ({e:#}); offline mode — untrained synthetic fixture]");
+            ExpCtx::offline(args.has_flag("quick"))?
+        }
+    };
+
+    let mut spec = if let Some(g) = args.get("gigabytes") {
+        let g: f64 = g
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--gigabytes expects a number, got {g:?}"))?;
+        anyhow::ensure!(g > 0.0, "--gigabytes must be > 0");
+        BudgetSpec::gigabytes(g)
+    } else if let Some(b) = args.get("budget-bytes") {
+        let b: u64 = b
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--budget-bytes expects an integer, got {b:?}"))?;
+        BudgetSpec::new(b)
+    } else {
+        anyhow::bail!("srr budget needs --gigabytes G or --budget-bytes N");
+    };
+    if let Some(list) = args.get("bits") {
+        spec.bits_choices = list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--bits expects a comma list, got {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(list) = args.get("ranks") {
+        spec.rank_choices = list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--ranks expects a comma list, got {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    spec.block = args.get_usize("block", spec.block);
+    spec.seed = args.get_u64("seed", 0);
+    ctx.seed = spec.seed;
+
+    let fx = ctx.lm(&model)?;
+    let metrics = Metrics::new();
+    println!(
+        "budget: model={model} budget={} bytes bits={:?} ranks={:?} block={}",
+        spec.budget_bytes, spec.bits_choices, spec.rank_choices, spec.block
+    );
+
+    let mut session = session_from_args(args)?;
+    let runner = SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+    let sharded = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
+    let plan = if let Some(session) = session.as_mut() {
+        sharded.plan_budget(session, &spec)?
+    } else {
+        runner.plan_budget(&spec)?
+    };
+
+    println!(
+        "\nplan: {} of {} bytes, predicted err² = {:.4e}",
+        plan.plan_bytes, plan.budget_bytes, plan.predicted_err2
+    );
+    println!("per-layer:");
+    for l in &plan.layers {
+        println!(
+            "  {:10} {}b rank={:3} k={:3} {:>10} B  err²={:.3e}",
+            l.name, l.bits, l.rank, l.k, l.bytes, l.predicted_err2
+        );
+    }
+    if let Some(path) = args.get("plan-out") {
+        let frame = srr::coordinator::wire::encode_budget_plan(&plan);
+        let mut file = std::fs::File::create(path)?;
+        frame.write_to(&mut file)?;
+        println!("plan frame written to {path}");
+    }
+
+    // run the allocated PTQ and score it
+    let configs = [plan.sweep_config()];
+    let out = if let Some(session) = session.as_mut() {
+        sharded
+            .run_factored(session, &configs)?
+            .pop()
+            .expect("one outcome for one config")
+    } else {
+        runner.run_factored(&configs).pop().expect("one outcome for one config")
+    };
+    let b = ctx.engine.manifest().lm_batch;
+    let t = fx.cfg.seq_len;
+    let batches = ctx.ppl_batches(&model)?;
+    let bf16 = perplexity_native(&fx.params, &fx.cfg, &batches, b, t);
+    let ppl = if let Some(session) = session.as_mut() {
+        fleet_perplexity_sharded(session, &[&out.model], &fx.cfg, &batches, b, t, &metrics)?[0]
+    } else {
+        perplexity_native(&out.model, &fx.cfg, &batches, b, t)
+    };
+    if let Some(session) = session.take() {
+        session.shutdown();
+    }
+    println!(
+        "\nBF16 PPL = {bf16:.3}   allocated PPL = {ppl:.3}   mean k* = {:.1}   \
+         serving bytes = {} (dense {})",
+        out.mean_k_star(),
+        out.model.linear_bytes(),
+        out.model.dense_linear_bytes()
+    );
     Ok(())
 }
 

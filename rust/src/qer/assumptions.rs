@@ -18,8 +18,16 @@ use crate::util::Rng;
 
 /// η_Q for one matrix under one scaling.
 pub fn eta_q(w: &Mat, quantizer: &dyn Quantizer, scaling: &Scaling, ctx: &QuantCtx) -> f64 {
-    let q = quantizer.quantize(w, ctx);
-    let num = scaling.apply(&w.sub(&q)).frob();
+    eta_q_from(w, &quantizer.quantize(w, ctx), scaling)
+}
+
+/// η_Q given an already-dequantized `qdeq` (the k=0 quantization of
+/// `w`): ‖S·(W − Qdeq)‖_F / ‖S·W‖_F. Split out from [`eta_q`] so callers
+/// holding a cached quantization — the sweep engine's `LayerCache`, and
+/// the budget allocator's per-(layer, bits) exposed-energy estimates
+/// ([`crate::coordinator::budget`]) — don't quantize a second time.
+pub fn eta_q_from(w: &Mat, qdeq: &Mat, scaling: &Scaling) -> f64 {
+    let num = scaling.apply(&w.sub(qdeq)).frob();
     let den = scaling.apply(w).frob();
     if den == 0.0 {
         0.0

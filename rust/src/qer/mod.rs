@@ -24,6 +24,7 @@ pub mod srr;
 pub mod methods;
 pub mod assumptions;
 
+pub use assumptions::{eta_q, eta_q_from};
 pub use methods::{
     correction_from_svd, reconstruct, reconstruct_prepared, Method, QerConfig, QerResult,
 };

@@ -132,6 +132,60 @@ impl PreparedSpectra {
 /// at `r`. `n_iter` is the randomized-SVD power-iteration count (paper:
 /// 4). The probe E is drawn from `rng` — callers seed it per (layer,
 /// seed) so Table 12's stability analysis can vary it.
+///
+/// **The criterion, in the paper's notation (§4.2, Eq. 5).** With the
+/// unrecoverable-energy ratio
+///
+///   ρ_p(A) = 1 − Σ_{j≤p} σ_j²(A) / ‖A‖²_F
+///
+/// — the fraction of A's energy *outside* its best rank-p subspace —
+/// the split of the budget r into k preserved directions of the scaled
+/// weight S·W and r−k reconstruction directions of the scaled error
+/// S·E is scored by the product surrogate
+///
+///   k* = argmin_{0 ≤ k ≤ r}  ρ_k(SW) · ρ_{r−k}(SE).
+///
+/// ρ_k(SW) is the weight energy still *exposed* to quantization after
+/// preserving the top-k directions; ρ_{r−k}(SE) is the error energy a
+/// rank-(r−k) correction cannot recover. Preserving more (larger k)
+/// shrinks the first factor but starves the correction, growing the
+/// second — the argmin balances exposed energy against unrecoverable
+/// error. The [`RankSelection`] carries both ρ-profiles (each indexed
+/// by k) and their product so analyses can replot the whole curve.
+///
+/// # Examples
+///
+/// A weight whose energy concentrates in a few directions should
+/// preserve some of them (k* > 0), and the reported profiles reproduce
+/// the objective exactly:
+///
+/// ```
+/// use srr::qer::select_k;
+/// use srr::scaling::Scaling;
+/// use srr::tensor::{matmul, Mat};
+/// use srr::util::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// // strongly structured weight: planted rank-4 component + small noise
+/// let planted = matmul(&Mat::randn(64, 4, 1.0, &mut rng), &Mat::randn(4, 64, 1.0, &mut rng));
+/// let mut w = Mat::randn(64, 64, 0.05, &mut rng);
+/// for i in 0..64 {
+///     for j in 0..64 {
+///         *w.at_mut(i, j) += planted.at(i, j);
+///     }
+/// }
+///
+/// let sel = select_k(&w, &Scaling::Identity, 8, 4, &mut rng);
+/// assert!(sel.k_star >= 1 && sel.k_star <= 8);
+///
+/// // objective[k] is exactly ρ_k(SW) · ρ_{r−k}(SE) ...
+/// for k in 0..=8 {
+///     assert!((sel.objective[k] - sel.rho_sw[k] * sel.rho_se[k]).abs() < 1e-12);
+/// }
+/// // ... and k* attains its minimum
+/// let min = sel.objective.iter().cloned().fold(f64::INFINITY, f64::min);
+/// assert_eq!(sel.objective[sel.k_star], min);
+/// ```
 pub fn select_k(
     w: &Mat,
     scaling: &Scaling,
