@@ -31,6 +31,10 @@ of field, all at the top level of the object unless noted:
     plan ≡ in-process plan), ``allocated_beats_uniform`` (allocated
     plan's PPL is no worse than the best uniform (bits, rank) baseline
     at every equal-byte budget point).
+  - ``BENCH_spill.json``: ``spill_bit_identical`` (out-of-core sweep
+    under a small blob cap ≡ the in-memory engine — outcomes, lock-step
+    groups, fleet PPL), ``resume_bit_identical`` (a run killed at a
+    chunk boundary and resumed from the spill dir ≡ in-memory).
 
 * **required numbers** (``REQUIRED_NUMBERS``) — per-record numeric
   fields that must be present and finite (NaN/inf/bool stand-ins fail):
@@ -68,6 +72,10 @@ REQUIRED_FLAGS = {
     # best uniform baseline at equal bytes AND that the sharded plan is
     # byte-for-byte the in-process plan
     "BENCH_budget.json": ["allocation_bit_identical", "allocated_beats_uniform"],
+    # the spill record has to prove the out-of-core sweep and its
+    # killed-and-resumed variant both reproduced the in-memory engine
+    # bit for bit
+    "BENCH_spill.json": ["spill_bit_identical", "resume_bit_identical"],
 }
 
 # Numeric fields that MUST be present (finite numbers): the serve
@@ -91,7 +99,7 @@ def is_equiv_key(key: str) -> bool:
 
 
 failures = [
-    f"{name}: required bench record missing (were --exp shard/serve/serve_live/budget run?)"
+    f"{name}: required bench record missing (were --exp shard/serve/serve_live/budget/spill run?)"
     for name in missing_records
 ]
 checked = 0

@@ -40,6 +40,13 @@
 //!   is elastic and stall-proof: workers heartbeat per in-flight job, a
 //!   silent (wedged) worker is requeued like a death, and new workers
 //!   may dial in and be admitted mid-run.
+//! * [`spill`] — the disk-backed artifact store for out-of-core sweeps
+//!   (`srr ptq --spill DIR`): phase-A artifacts, shared residual SVDs
+//!   and completed grid cells stream through a bounded in-memory
+//!   working set, the manifest doubles as a crash-resumable chunk
+//!   completion log (fsynced, torn-tail tolerant), and reassembly
+//!   reproduces the in-memory `Arc` topology so grid dedup and
+//!   lock-step fleet groups survive the disk round-trip bit-identically.
 //! * [`budget`] — the model-wide rank/bit budget allocator ("best PPL
 //!   at N gigabytes"): greedy marginal-utility descent plus Lagrangian
 //!   water-filling over phase-A sensitivity profiles, emitting a
@@ -56,6 +63,7 @@ pub mod jobs;
 pub mod metrics;
 pub mod pipeline;
 pub mod shard;
+pub mod spill;
 pub mod sweep;
 pub mod transport;
 pub mod wire;
@@ -70,6 +78,10 @@ pub use pipeline::{
 };
 pub use shard::{
     fleet_perplexity_sharded, worker_main, ShardOptions, ShardSession, ShardedSweepRunner,
+};
+pub use spill::{
+    outcome_content_hash, run_sweep_spilled, sweep_fingerprint, SpillOptions, SpillStats,
+    SpillStore,
 };
 pub use sweep::{run_sweep, run_sweep_factored, LayerAssign, SweepConfig, SweepRunner};
 pub use transport::{

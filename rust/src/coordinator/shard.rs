@@ -94,6 +94,7 @@ use super::cache::{LayerCache, PreparedLayer};
 use super::jobs::{BoundedQueue, PopResult};
 use super::metrics::Metrics;
 use super::pipeline::{layer_salt, FactoredOutcome, LayerMeta, LayerReport};
+use super::spill::{self, SpillBase, SpillStore};
 use super::sweep::{
     assemble_outcomes, b2_artifacts, b2_job, compute_qdeq0, compute_resid_svd,
     compute_spectra, empty_outcomes, sweep_keys, B2Artifacts, SweepConfig, SweepKeys,
@@ -990,19 +991,34 @@ struct SweepJobSource<'a> {
     prep_rank: usize,
     n_layers: usize,
     memo: EncodeMemo,
+    /// `Some`: dispatch only these `(config, layer)` cells, with job id
+    /// = subset index (the spill-resume path, which skips completed
+    /// cells). `None`: the full dense grid, job id = `ci * n_layers +
+    /// li`. The worker computes a pure function of the cell spec, so
+    /// which subset a cell rides in never changes its result.
+    cells: Option<&'a [(usize, usize)]>,
+}
+
+impl SweepJobSource<'_> {
+    fn cell(&self, job: usize) -> (usize, usize) {
+        match self.cells {
+            Some(cells) => cells[job],
+            None => (job / self.n_layers, job % self.n_layers),
+        }
+    }
 }
 
 impl JobSource for SweepJobSource<'_> {
     fn n_jobs(&self) -> usize {
-        self.n_layers * self.configs.len()
+        self.cells.map_or(self.n_layers * self.configs.len(), <[_]>::len)
     }
 
     fn encode(&self, job: usize, tx: &mut BlobTx) -> Vec<Frame> {
-        let li = job % self.n_layers;
+        let (ci, li) = self.cell(job);
         // ship the layer's resolved view, so heterogeneous cells never
         // reach the wire format (workers only ever see homogeneous
         // configs, exactly what the in-process fan-out executes)
-        let c = self.configs[job / self.n_layers].resolved(li);
+        let c = self.configs[ci].resolved(li);
         let layer = &self.cache.layers[li];
         let arts = b2_artifacts(self.cache, li, &c);
         let memo = &self.memo;
@@ -1153,6 +1169,7 @@ impl<'a> ShardedSweepRunner<'a> {
             prep_rank: prep.prep_rank,
             n_layers,
             memo: EncodeMemo::default(),
+            cells: None,
         };
         let t0 = Instant::now();
         let msgs = session.run_jobs(&src, self.metrics)?;
@@ -1162,6 +1179,150 @@ impl<'a> ShardedSweepRunner<'a> {
             let rx = session.rx().lock().unwrap();
             sweep_parts(msgs, &rx, configs, &names, n_layers, &prep)?
         };
+        Ok(assemble_outcomes(self.params, &names, configs.len(), parts, self.metrics))
+    }
+
+    /// [`ShardedSweepRunner::run_factored`] through a [`SpillStore`]:
+    /// phase-A/B1 prep is reloaded from the store when complete (and
+    /// sharded + spilled when not), only cells without a completion
+    /// record are dispatched to workers, every result is spilled as it
+    /// lands, and the outcomes are assembled entirely from the store —
+    /// the same assembly the in-process spilled engine uses, so
+    /// in-process, sharded, and killed-and-resumed runs all produce
+    /// bit-identical outcomes.
+    pub fn run_factored_spilled(
+        &self,
+        session: &mut ShardSession,
+        configs: &[SweepConfig],
+        store: &SpillStore,
+    ) -> Result<Vec<FactoredOutcome>> {
+        let names = Params::linear_names(self.model_cfg);
+        let n_layers = names.len();
+        if configs.is_empty() || n_layers == 0 {
+            return Ok(empty_outcomes(self.params, configs.len()));
+        }
+        let keys = sweep_keys(configs, n_layers);
+        let prep_rank = SweepRunner::prep_rank(configs);
+        let fp = spill::sweep_fingerprint(self.model_cfg, &names, configs, prep_rank);
+        store.begin(fp, n_layers, configs.len(), prep_rank)?;
+
+        let cells: Vec<(usize, usize)> = (0..configs.len() * n_layers)
+            .map(|idx| (idx / n_layers, idx % n_layers))
+            .filter(|&(ci, li)| !store.cell_done(ci, li))
+            .collect();
+        if cells.is_empty() {
+            // every cell already has a completion record (a resume after
+            // phase B2 finished): assembly needs only the store
+            let parts = store.assemble_parts(configs, &names)?;
+            return Ok(assemble_outcomes(
+                self.params,
+                &names,
+                configs.len(),
+                parts,
+                self.metrics,
+            ));
+        }
+
+        let resid_jobs = keys.resid_jobs();
+        let prep_complete = (0..n_layers).all(|li| store.prep_done(li))
+            && resid_jobs.iter().all(|&(li, ri)| store.resid_done(li, ri));
+        let prep = if prep_complete {
+            // phases A + B1 are already on disk: rebuild the cache from
+            // the store instead of re-running prep on the fleet
+            let layers = (0..n_layers)
+                .map(|li| store.load_layer(li, &keys.layers[li]))
+                .collect::<Result<Vec<_>>>()?;
+            let mut cache = LayerCache::new(layers);
+            for &(li, ri) in &resid_jobs {
+                let (label, kind, seed, _) = &keys.layers[li].resid_keys[ri];
+                cache.insert_resid(li, label.clone(), *kind, *seed, store.load_resid(li, ri)?);
+            }
+            SweepPrep { cache, prep_rank }
+        } else {
+            let prep = self.sharded_prepare(session, configs, &names)?;
+            for li in 0..n_layers {
+                if !store.prep_done(li) {
+                    store.spill_prep(li, &prep.cache.layers[li], &keys.layers[li], &keys.kinds)?;
+                }
+            }
+            for &(li, ri) in &resid_jobs {
+                if !store.resid_done(li, ri) {
+                    let (label, kind, seed, _) = &keys.layers[li].resid_keys[ri];
+                    let svd = prep
+                        .cache
+                        .resid(li, label, *kind, *seed)
+                        .expect("resid prepared by sharded_prepare");
+                    store.spill_resid(li, ri, svd)?;
+                }
+            }
+            prep
+        };
+
+        // seed the host blob cache exactly as the unspilled path, so
+        // shared-cell results resolve to the cache's own Arcs
+        {
+            let mut rx = session.rx().lock().unwrap();
+            for layer in &prep.cache.layers {
+                for arc in layer.qdeq0.values() {
+                    rx.seed_mat(arc);
+                }
+                for arc in layer.qdeq0_packed.values() {
+                    rx.seed_packed(arc);
+                }
+            }
+        }
+        let src = SweepJobSource {
+            configs,
+            cache: &prep.cache,
+            prep_rank: prep.prep_rank,
+            n_layers,
+            memo: EncodeMemo::default(),
+            cells: Some(&cells),
+        };
+        let t0 = Instant::now();
+        let msgs = session.run_jobs(&src, self.metrics)?;
+        self.metrics.add("shard.sweep_secs", t0.elapsed().as_secs_f64());
+        {
+            let rx = session.rx().lock().unwrap();
+            for (j, msg) in msgs.into_iter().enumerate() {
+                let ResultMsg::Sweep(m) = msg else {
+                    anyhow::bail!("unexpected non-sweep result in a sweep batch")
+                };
+                debug_assert_eq!(m.job_id as usize, j);
+                let (ci, li) = cells[j];
+                // resolve the base out of the blob cache and spill it;
+                // re-encoding reproduces the content hash the worker
+                // shipped, so resumed runs address the same blob
+                match m.base {
+                    WireBase::Packed(h) => store.spill_cell(
+                        ci,
+                        li,
+                        SpillBase::Packed(rx.packed(h)?.as_ref()),
+                        &m.l,
+                        &m.r,
+                        m.k_star,
+                        m.selection.as_ref(),
+                        m.weight_err,
+                        m.scaled_err,
+                        m.qer_secs,
+                    )?,
+                    WireBase::Dense(h) => store.spill_cell(
+                        ci,
+                        li,
+                        SpillBase::Dense(rx.mat(h)?.as_ref()),
+                        &m.l,
+                        &m.r,
+                        m.k_star,
+                        m.selection.as_ref(),
+                        m.weight_err,
+                        m.scaled_err,
+                        m.qer_secs,
+                    )?,
+                }
+            }
+        }
+
+        let parts = store.assemble_parts(configs, &names)?;
         Ok(assemble_outcomes(self.params, &names, configs.len(), parts, self.metrics))
     }
 
@@ -1769,7 +1930,11 @@ fn run_fleet_job(msg: &FleetJobMsg, rx: &Mutex<BlobRx>) -> Result<FleetResultMsg
     let out = if msg.lockstep {
         let refs: Vec<&FactoredModel> = models.iter().collect();
         let fleet = FleetGroup::new(refs);
-        FleetOut::Partials(lm_nll_fleet(&fleet, &msg.cfg, &msg.batches[0], &mask, msg.b, msg.t))
+        // a malformed fleet fails this job's frame, not the worker
+        // process (the host surfaces it like any other wire error)
+        let parts = lm_nll_fleet(&fleet, &msg.cfg, &msg.batches[0], &mask, msg.b, msg.t)
+            .map_err(|_| wire::WireError::Malformed("malformed fleet group"))?;
+        FleetOut::Partials(parts)
     } else {
         FleetOut::Ppl(perplexity_native_masked(
             &models[0],
@@ -2168,7 +2333,7 @@ mod tests {
         let batches: Vec<Vec<i32>> =
             (0..3).map(|i| corpus.train_batch(2, cfg.seq_len, 50 + i)).collect();
         let (b, t) = (2usize, cfg.seq_len);
-        let solo = fleet_perplexity(&got_models, &cfg, &batches, b, t);
+        let solo = fleet_perplexity(&got_models, &cfg, &batches, b, t).expect("fleet");
 
         let groups = group_by_shared_bases(&got_models);
         let jobs = fleet_job_list(&groups, batches.len());

@@ -1,0 +1,1495 @@
+//! Disk-backed artifact store for out-of-core sweeps (`srr ptq --spill`).
+//!
+//! A sweep grid's shared artifacts — phase-A scalings / Hessians / k=0
+//! quantizations / spectra, phase-B1 residual SVDs, and the per-(layer,
+//! config) phase-B2 cell results — can dwarf host memory on wide grids.
+//! [`SpillStore`] keeps them on disk instead, and
+//! [`run_sweep_spilled`] streams the sweep through a bounded in-memory
+//! working set:
+//!
+//! * **phase A** — each layer is prepared (same [`prepare_layer`] the
+//!   in-memory engine runs), spilled, and dropped; at most one layer per
+//!   worker thread is ever resident;
+//! * **phase B1** — residual SVDs reload only the `W`/`Qdeq` blobs they
+//!   consume, through the bounded blob cache;
+//! * **phase B2** — layer-major: one layer's artifacts are reloaded into
+//!   a single-layer [`LayerCache`], its missing cells fan out over the
+//!   pool ([`b2_artifacts`] / [`b2_job`], the same bit-identity seam the
+//!   shard plane uses), each [`QerResult`] is spilled as its cell
+//!   completes, and the layer is dropped before the next loads.
+//!
+//! # Disk layout
+//!
+//! ```text
+//! DIR/
+//!   blobs/<hash:032x>.blob   one wire frame each (BLOB_MAT/BLOB_PACKED),
+//!                            content-addressed, written tmp+rename+fsync
+//!   manifest.srrm            append-only log of wire frames:
+//!                            HEADER(32) PREP(33) RESID(34) CELL(35)
+//! ```
+//!
+//! Both files reuse `coordinator::wire`'s framing, so every read gets
+//! magic/version/checksum validation for free — a torn or bit-flipped
+//! blob or record surfaces as a [`wire::WireError`], never as silent
+//! corruption. Blobs are fsynced *before* the manifest record that
+//! references them is appended and fsynced, so a record present in the
+//! manifest implies its blobs are durable.
+//!
+//! # Crash resume
+//!
+//! The manifest is a chunk-completion log: one record per finished unit
+//! of work. Reopening a spill dir replays it; [`run_sweep_spilled`]
+//! recomputes only units without a record, so a sweep killed mid-run
+//! resumes from the last completed chunk. A torn final append (the only
+//! kind the write protocol can produce) fails the frame checksum or
+//! truncates mid-frame; the loader treats any unreadable tail as "chunk
+//! incomplete", truncates it away, and resumes — it never fails the
+//! whole store over a torn last record. A [`sweep_fingerprint`] in the
+//! HEADER record pins the store to one (model, grid) pair; resuming with
+//! a different sweep is an error, not a silent mix.
+//!
+//! # Bit-identity invariants
+//!
+//! Spilled sweeps must be indistinguishable from in-memory ones:
+//!
+//! * every artifact round-trips bit-exactly (f32/f64 little-endian wire
+//!   encoding is lossless, packed words are integers);
+//! * all RNG streams are salted off (seed, layer) exactly as in-memory
+//!   ([`compute_resid_svd`], [`b2_job`]) — *where* an artifact lives
+//!   never shifts a draw;
+//! * assembly reproduces the in-memory `Arc` topology: shared cells
+//!   (w-only / plain QER) hand every rank/scaling variant *one*
+//!   `Arc<PackedMat>` per content hash (grid dedup — what
+//!   `eval::fleet` groups into lock-step batches), while every other
+//!   base gets a fresh `Arc` per cell so pointer-based fleet grouping
+//!   cannot coarsen — the same rule the shard plane's result assembly
+//!   applies.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::linalg::Svd;
+use crate::model::{CalibrationSet, Params};
+use crate::qer::{Method, PreparedSpectra, QerResult, RankSelection};
+use crate::quant::PackedMat;
+use crate::runtime::manifest::ModelCfg;
+use crate::scaling::{Scaling, ScalingKind};
+use crate::serve::{LinearOp, QuantBase};
+use crate::tensor::Mat;
+use crate::util::pool;
+
+use super::cache::{LayerCache, PreparedLayer};
+use super::metrics::Metrics;
+use super::pipeline::{layer_salt, FactoredOutcome, LayerMeta, LayerReport};
+use super::sweep::{
+    assemble_outcomes, b2_artifacts, b2_job, compute_resid_svd, empty_outcomes, prepare_layer,
+    sweep_keys, LayerKeys, SweepConfig, SweepKeys,
+};
+use super::wire::{
+    self, content_hash128, get_mat, get_opt, get_packed, get_scaling_kind, get_selection,
+    get_wire_base, get_wire_scaling, get_wire_spectra, get_wire_svd, kind, put_mat,
+    put_model_cfg, put_opt, put_packed, put_scaling_kind, put_selection, put_sweep_config,
+    put_wire_base, put_wire_scaling, put_wire_spectra, put_wire_svd, read_frame, Frame,
+    WireBase, WireReader, WireScaling, WireSpectra, WireSvd, WireWriter,
+};
+
+/// Manifest record kinds (disjoint from the shard plane's 1–16 so a
+/// manifest accidentally fed to a shard decoder is rejected, not
+/// misparsed).
+const REC_HEADER: u8 = 32;
+const REC_PREP: u8 = 33;
+const REC_RESID: u8 = 34;
+const REC_CELL: u8 = 35;
+
+/// Exit code of the env-triggered kill hooks, distinct from the CLI's
+/// generic failure exit(1) so the kill-and-resume integration test can
+/// tell "killed as planned" from "crashed".
+pub const KILL_EXIT_CODE: i32 = 17;
+
+/// Tuning + fault-injection knobs for a [`SpillStore`].
+#[derive(Clone, Debug)]
+pub struct SpillOptions {
+    /// strong blob-cache budget in bytes (the bounded working set);
+    /// blobs beyond it are dropped LRU-first and reloaded on demand
+    pub cap_bytes: usize,
+    /// test hook: after this many successful record appends (each
+    /// fsynced), the next append returns an error — an in-process
+    /// simulation of a kill at a chunk boundary
+    pub abort_after_records: Option<usize>,
+    /// test hook: the N-th record append writes only half its frame
+    /// bytes, syncs, and errors — an in-process simulation of a torn
+    /// final write
+    pub torn_after_records: Option<usize>,
+}
+
+impl Default for SpillOptions {
+    fn default() -> Self {
+        SpillOptions {
+            cap_bytes: 256 << 20,
+            abort_after_records: None,
+            torn_after_records: None,
+        }
+    }
+}
+
+/// Counters for the bench legs (`BENCH_spill.json`) and the CLI report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpillStats {
+    /// bytes durably written (blobs + manifest records)
+    pub bytes_spilled: u64,
+    /// bytes read back from disk (blob reloads)
+    pub bytes_reloaded: u64,
+    /// high-water mark of strong blob-cache residency — the store's
+    /// peak-RSS proxy for the bounded working set
+    pub peak_resident_bytes: u64,
+    /// manifest records currently known (header included)
+    pub records: usize,
+}
+
+/// The spill manifest header: pins the store to one (model, grid) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Header {
+    fingerprint: u128,
+    n_layers: usize,
+    n_configs: usize,
+    prep_rank: usize,
+}
+
+/// One layer's phase-A completion record: blob refs for every artifact,
+/// aligned with the layer's [`LayerKeys`] lists.
+#[derive(Clone, Debug)]
+pub(crate) struct PrepRecord {
+    pub name: String,
+    pub w: wire::BlobRef,
+    pub scalings: Vec<(ScalingKind, WireScaling)>,
+    pub hessian: Option<wire::BlobRef>,
+    /// (dense ref, packed ref) per entry of `LayerKeys::qdeq0_keys`
+    pub qdeq0: Vec<(wire::BlobRef, Option<wire::BlobRef>)>,
+    /// per entry of `LayerKeys::spectra_keys`
+    pub spectra: Vec<WireSpectra>,
+    pub prep_secs: f64,
+}
+
+/// One completed phase-B2 cell.
+#[derive(Clone, Debug)]
+pub(crate) struct CellRecord {
+    pub base: WireBase,
+    pub l: Mat,
+    pub r: Mat,
+    pub k_star: usize,
+    pub selection: Option<RankSelection>,
+    pub weight_err: f64,
+    pub scaled_err: f64,
+    pub qer_secs: f64,
+}
+
+/// The base a completed cell spills: borrowed from a [`QerResult`]
+/// in-process or resolved out of a shard session's blob cache.
+pub(crate) enum SpillBase<'a> {
+    Packed(&'a PackedMat),
+    Dense(&'a Mat),
+}
+
+struct Manifest {
+    file: File,
+    header: Option<Header>,
+    preps: HashMap<usize, Arc<PrepRecord>>,
+    resids: HashMap<(usize, usize), WireSvd>,
+    cells: HashMap<(usize, usize), Arc<CellRecord>>,
+    /// records appended by this process (drives the kill hooks)
+    appended: usize,
+}
+
+/// Strong-LRU + weak-identity blob cache: the strong side is the bounded
+/// working set; the weak side guarantees that as long as *any* consumer
+/// holds a blob's `Arc`, reloading the same hash returns that very `Arc`
+/// — eviction can never split one logical buffer into two, so the
+/// outcome `Arc` topology (grid dedup, lock-step groups) survives any
+/// cap setting.
+struct BlobCache {
+    cap: usize,
+    clock: u64,
+    resident: usize,
+    peak: usize,
+    mats: HashMap<u128, (u64, Arc<Mat>)>,
+    packed: HashMap<u128, (u64, Arc<PackedMat>)>,
+    weak_mats: HashMap<u128, Weak<Mat>>,
+    weak_packed: HashMap<u128, Weak<PackedMat>>,
+}
+
+fn mat_bytes(m: &Mat) -> usize {
+    m.data.len() * 4
+}
+
+impl BlobCache {
+    fn new(cap: usize) -> Self {
+        BlobCache {
+            cap,
+            clock: 0,
+            resident: 0,
+            peak: 0,
+            mats: HashMap::new(),
+            packed: HashMap::new(),
+            weak_mats: HashMap::new(),
+            weak_packed: HashMap::new(),
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn get_mat(&mut self, h: u128) -> Option<Arc<Mat>> {
+        let t = self.tick();
+        if let Some((stamp, a)) = self.mats.get_mut(&h) {
+            *stamp = t;
+            return Some(a.clone());
+        }
+        if let Some(a) = self.weak_mats.get(&h).and_then(Weak::upgrade) {
+            self.resident += mat_bytes(&a);
+            self.mats.insert(h, (t, a.clone()));
+            self.evict();
+            return Some(a);
+        }
+        None
+    }
+
+    fn get_packed(&mut self, h: u128) -> Option<Arc<PackedMat>> {
+        let t = self.tick();
+        if let Some((stamp, a)) = self.packed.get_mut(&h) {
+            *stamp = t;
+            return Some(a.clone());
+        }
+        if let Some(a) = self.weak_packed.get(&h).and_then(Weak::upgrade) {
+            self.resident += a.bytes();
+            self.packed.insert(h, (t, a.clone()));
+            self.evict();
+            return Some(a);
+        }
+        None
+    }
+
+    fn insert_mat(&mut self, h: u128, m: Mat) -> Arc<Mat> {
+        let t = self.tick();
+        let a = Arc::new(m);
+        self.weak_mats.insert(h, Arc::downgrade(&a));
+        self.resident += mat_bytes(&a);
+        self.mats.insert(h, (t, a.clone()));
+        self.evict();
+        a
+    }
+
+    fn insert_packed(&mut self, h: u128, p: PackedMat) -> Arc<PackedMat> {
+        let t = self.tick();
+        let a = Arc::new(p);
+        self.weak_packed.insert(h, Arc::downgrade(&a));
+        self.resident += a.bytes();
+        self.packed.insert(h, (t, a.clone()));
+        self.evict();
+        a
+    }
+
+    /// Drop LRU entries until resident ≤ cap. Only strong refs are
+    /// dropped; live `Arc`s elsewhere stay reachable via the weak maps.
+    fn evict(&mut self) {
+        self.peak = self.peak.max(self.resident);
+        while self.resident > self.cap {
+            let oldest_mat = self.mats.iter().map(|(h, (s, _))| (*s, *h)).min();
+            let oldest_packed = self.packed.iter().map(|(h, (s, _))| (*s, *h)).min();
+            match (oldest_mat, oldest_packed) {
+                (Some((sm, hm)), Some((sp, hp))) => {
+                    if sm <= sp {
+                        self.drop_mat(hm);
+                    } else {
+                        self.drop_packed(hp);
+                    }
+                }
+                (Some((_, hm)), None) => self.drop_mat(hm),
+                (None, Some((_, hp))) => self.drop_packed(hp),
+                (None, None) => break,
+            }
+        }
+    }
+
+    fn drop_mat(&mut self, h: u128) {
+        if let Some((_, a)) = self.mats.remove(&h) {
+            self.resident -= mat_bytes(&a);
+        }
+    }
+
+    fn drop_packed(&mut self, h: u128) {
+        if let Some((_, a)) = self.packed.remove(&h) {
+            self.resident -= a.bytes();
+        }
+    }
+}
+
+/// A disk-backed sweep-artifact store rooted at one directory. Safe to
+/// share across the worker pool (`&self` methods, internal locking).
+pub struct SpillStore {
+    blobs: PathBuf,
+    opts: SpillOptions,
+    /// env-triggered kill hooks (`SRR_SPILL_KILL_AFTER=N`,
+    /// `SRR_SPILL_KILL_TORN=N`): process::exit after / torn-write at the
+    /// N-th append — the process-level kill-and-resume test harness
+    kill_after: Option<usize>,
+    kill_torn: Option<usize>,
+    manifest: Mutex<Manifest>,
+    cache: Mutex<BlobCache>,
+    tmp_counter: AtomicU64,
+    bytes_spilled: AtomicU64,
+    bytes_reloaded: AtomicU64,
+}
+
+impl SpillStore {
+    /// Open (creating or resuming) the spill store at `dir`. A torn
+    /// trailing manifest record is truncated away; every complete record
+    /// is replayed into the completion maps.
+    pub fn open(dir: impl AsRef<Path>, opts: SpillOptions) -> Result<SpillStore> {
+        let dir = dir.as_ref();
+        let blobs = dir.join("blobs");
+        fs::create_dir_all(&blobs)
+            .with_context(|| format!("creating spill dir {}", blobs.display()))?;
+        let manifest_path = dir.join("manifest.srrm");
+
+        let (frames, truncated, good_len) = scan_manifest(&manifest_path)?;
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&manifest_path)
+            .with_context(|| format!("opening spill manifest {}", manifest_path.display()))?;
+        if truncated {
+            // torn final write: drop the unreadable tail so this run's
+            // appends extend from the last complete record
+            file.set_len(good_len)?;
+            file.sync_all()?;
+        }
+
+        let mut header = None;
+        let mut preps = HashMap::new();
+        let mut resids = HashMap::new();
+        let mut cells = HashMap::new();
+        for f in frames {
+            match f.kind {
+                REC_HEADER => {
+                    ensure!(header.is_none(), "duplicate spill manifest header");
+                    header = Some(decode_header(&f.payload)?);
+                }
+                REC_PREP => {
+                    ensure!(header.is_some(), "spill PREP record before header");
+                    let (li, rec) = decode_prep(&f.payload)?;
+                    preps.insert(li, Arc::new(rec));
+                }
+                REC_RESID => {
+                    ensure!(header.is_some(), "spill RESID record before header");
+                    let (li, ri, svd) = decode_resid(&f.payload)?;
+                    resids.insert((li, ri), svd);
+                }
+                REC_CELL => {
+                    ensure!(header.is_some(), "spill CELL record before header");
+                    let (ci, li, rec) = decode_cell(&f.payload)?;
+                    cells.insert((ci, li), Arc::new(rec));
+                }
+                k => bail!("unknown spill manifest record kind {k}"),
+            }
+        }
+
+        let kill_after = std::env::var("SRR_SPILL_KILL_AFTER")
+            .ok()
+            .and_then(|v| v.parse().ok());
+        let kill_torn = std::env::var("SRR_SPILL_KILL_TORN")
+            .ok()
+            .and_then(|v| v.parse().ok());
+        let cap = opts.cap_bytes;
+        Ok(SpillStore {
+            blobs,
+            opts,
+            kill_after,
+            kill_torn,
+            manifest: Mutex::new(Manifest {
+                file,
+                header,
+                preps,
+                resids,
+                cells,
+                appended: 0,
+            }),
+            cache: Mutex::new(BlobCache::new(cap)),
+            tmp_counter: AtomicU64::new(0),
+            bytes_spilled: AtomicU64::new(0),
+            bytes_reloaded: AtomicU64::new(0),
+        })
+    }
+
+    /// Snapshot the store's counters.
+    pub fn stats(&self) -> SpillStats {
+        let man = self.manifest.lock().unwrap();
+        let cache = self.cache.lock().unwrap();
+        SpillStats {
+            bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
+            bytes_reloaded: self.bytes_reloaded.load(Ordering::Relaxed),
+            peak_resident_bytes: cache.peak.max(cache.resident) as u64,
+            records: man.header.is_some() as usize
+                + man.preps.len()
+                + man.resids.len()
+                + man.cells.len(),
+        }
+    }
+
+    /// Bind the store to one sweep. Fresh store: writes the HEADER
+    /// record. Resumed store: verifies the fingerprint and dimensions
+    /// match — a spill dir holding a *different* sweep is an error, not
+    /// a silent mix. Returns whether completed work was found.
+    pub(crate) fn begin(
+        &self,
+        fingerprint: u128,
+        n_layers: usize,
+        n_configs: usize,
+        prep_rank: usize,
+    ) -> Result<bool> {
+        let want = Header { fingerprint, n_layers, n_configs, prep_rank };
+        let mut man = self.manifest.lock().unwrap();
+        match man.header {
+            Some(have) => {
+                ensure!(
+                    have == want,
+                    "spill dir holds a different sweep (manifest fingerprint \
+                     {:032x}, this sweep {:032x}) — use a fresh --spill dir",
+                    have.fingerprint,
+                    fingerprint
+                );
+                for li in man.preps.keys() {
+                    ensure!(*li < n_layers, "spill PREP record for layer {li} out of range");
+                }
+                for (ci, li) in man.cells.keys() {
+                    ensure!(
+                        *ci < n_configs && *li < n_layers,
+                        "spill CELL record ({ci}, {li}) out of range"
+                    );
+                }
+                Ok(!man.preps.is_empty() || !man.cells.is_empty() || !man.resids.is_empty())
+            }
+            None => {
+                let mut w = WireWriter::new();
+                w.put_u128(want.fingerprint);
+                w.put_usize(want.n_layers);
+                w.put_usize(want.n_configs);
+                w.put_usize(want.prep_rank);
+                self.append(&mut man, REC_HEADER, w.into_bytes())?;
+                man.header = Some(want);
+                Ok(false)
+            }
+        }
+    }
+
+    pub(crate) fn prep_done(&self, li: usize) -> bool {
+        self.manifest.lock().unwrap().preps.contains_key(&li)
+    }
+
+    pub(crate) fn resid_done(&self, li: usize, ri: usize) -> bool {
+        self.manifest.lock().unwrap().resids.contains_key(&(li, ri))
+    }
+
+    pub(crate) fn cell_done(&self, ci: usize, li: usize) -> bool {
+        self.manifest.lock().unwrap().cells.contains_key(&(ci, li))
+    }
+
+    pub(crate) fn prep_record(&self, li: usize) -> Result<Arc<PrepRecord>> {
+        self.manifest
+            .lock()
+            .unwrap()
+            .preps
+            .get(&li)
+            .cloned()
+            .ok_or_else(|| anyhow!("spill manifest has no PREP record for layer {li}"))
+    }
+
+    // ---- durable writes ---------------------------------------------------
+
+    /// Append one record frame: full bytes, then fsync. The torn/abort
+    /// fault hooks live here — they are the *only* way this store
+    /// produces a partial record, mirroring the only way a real crash
+    /// can (the kernel persisting a prefix of an in-flight append).
+    fn append(&self, man: &mut Manifest, k: u8, payload: Vec<u8>) -> Result<()> {
+        man.appended += 1;
+        let n = man.appended;
+        let mut buf = Vec::new();
+        Frame { kind: k, payload }.write_to(&mut buf).expect("vec write cannot fail");
+        if self.opts.torn_after_records == Some(n) || self.kill_torn == Some(n) {
+            let half = buf.len() / 2;
+            man.file.write_all(&buf[..half])?;
+            man.file.sync_all()?;
+            if self.kill_torn == Some(n) {
+                std::process::exit(KILL_EXIT_CODE);
+            }
+            bail!("spill: simulated torn write at record {n}");
+        }
+        man.file.write_all(&buf)?;
+        man.file.sync_all()?;
+        self.bytes_spilled.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        if self.kill_after == Some(n) {
+            std::process::exit(KILL_EXIT_CODE);
+        }
+        if self.opts.abort_after_records == Some(n) {
+            bail!("spill: simulated crash after record {n}");
+        }
+        Ok(())
+    }
+
+    fn blob_path(&self, h: u128) -> PathBuf {
+        self.blobs.join(format!("{h:032x}.blob"))
+    }
+
+    /// Write one content-addressed blob durably (tmp + fsync + rename).
+    /// Idempotent: an existing blob of the same hash is kept as-is, so
+    /// concurrent writers and resumed runs converge on one file.
+    fn write_blob(&self, k: u8, h: u128, body: Vec<u8>) -> Result<()> {
+        let path = self.blob_path(h);
+        if path.exists() {
+            return Ok(());
+        }
+        let tmp = self.blobs.join(format!(
+            "{h:032x}.tmp.{}.{}",
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        let bytes = body.len() as u64 + 24;
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating spill blob {}", tmp.display()))?;
+        Frame { kind: k, payload: body }.write_to(&mut f)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, &path)?;
+        // durability of the rename itself; best-effort where directory
+        // fsync is unsupported
+        let _ = File::open(&self.blobs).and_then(|d| d.sync_all());
+        self.bytes_spilled.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn put_mat_blob(&self, m: &Mat) -> Result<wire::BlobRef> {
+        let (h, body) = wire::encode_mat_blob(m);
+        self.write_blob(kind::BLOB_MAT, h, body)?;
+        Ok(h)
+    }
+
+    fn put_packed_blob(&self, p: &PackedMat) -> Result<wire::BlobRef> {
+        let (h, body) = wire::encode_packed_blob(p);
+        self.write_blob(kind::BLOB_PACKED, h, body)?;
+        Ok(h)
+    }
+
+    fn put_svd(&self, svd: &Svd) -> Result<WireSvd> {
+        Ok(WireSvd {
+            u: self.put_mat_blob(&svd.u)?,
+            s: svd.s.clone(),
+            v: self.put_mat_blob(&svd.v)?,
+        })
+    }
+
+    fn put_scaling(&self, s: &Scaling) -> Result<WireScaling> {
+        Ok(match s {
+            Scaling::Identity => WireScaling::Identity,
+            Scaling::Diagonal { d, d_inv } => {
+                WireScaling::Diagonal { d: d.clone(), d_inv: d_inv.clone() }
+            }
+            Scaling::Full { s, s_inv } => WireScaling::Full {
+                s: self.put_mat_blob(s)?,
+                s_inv: self.put_mat_blob(s_inv)?,
+            },
+        })
+    }
+
+    /// Spill one prepared layer: every blob first, then the PREP record
+    /// that makes the layer's completion durable.
+    pub(crate) fn spill_prep(
+        &self,
+        li: usize,
+        layer: &PreparedLayer,
+        lk: &LayerKeys,
+        kinds: &[ScalingKind],
+    ) -> Result<()> {
+        let w_ref = self.put_mat_blob(&layer.w)?;
+        let mut scalings = Vec::with_capacity(kinds.len());
+        for &k in kinds {
+            let s = layer
+                .scalings
+                .get(&k)
+                .ok_or_else(|| anyhow!("layer {li} missing prepared scaling"))?;
+            scalings.push((k, self.put_scaling(s)?));
+        }
+        let hessian = match &layer.hessian {
+            Some(h) => Some(self.put_mat_blob(h)?),
+            None => None,
+        };
+        let mut qdeq0 = Vec::with_capacity(lk.qdeq0_keys.len());
+        for (label, seed, _) in &lk.qdeq0_keys {
+            let d = layer
+                .qdeq0
+                .get(&(label.clone(), *seed))
+                .ok_or_else(|| anyhow!("layer {li} missing prepared qdeq0 {label}/{seed}"))?;
+            let dh = self.put_mat_blob(d)?;
+            let ph = match layer.qdeq0_packed.get(&(label.clone(), *seed)) {
+                Some(p) => Some(self.put_packed_blob(p)?),
+                None => None,
+            };
+            qdeq0.push((dh, ph));
+        }
+        let mut spectra = Vec::with_capacity(lk.spectra_keys.len());
+        for (k, seed) in &lk.spectra_keys {
+            let sp = layer
+                .spectra
+                .get(&(*k, *seed))
+                .ok_or_else(|| anyhow!("layer {li} missing prepared spectra"))?;
+            spectra.push(WireSpectra {
+                sw: self.put_svd(&sp.sw_svd)?,
+                sw_frob2: sp.sw_frob2,
+                se: self.put_svd(&sp.se_svd)?,
+                se_frob2: sp.se_frob2,
+                rank: sp.rank,
+                seed: sp.seed,
+            });
+        }
+        let rec = PrepRecord {
+            name: layer.name.clone(),
+            w: w_ref,
+            scalings,
+            hessian,
+            qdeq0,
+            spectra,
+            prep_secs: layer.prep_secs,
+        };
+        let payload = encode_prep(li, &rec);
+        let mut man = self.manifest.lock().unwrap();
+        self.append(&mut man, REC_PREP, payload)?;
+        man.preps.insert(li, Arc::new(rec));
+        Ok(())
+    }
+
+    /// Spill one phase-B1 residual SVD.
+    pub(crate) fn spill_resid(&self, li: usize, ri: usize, svd: &Svd) -> Result<()> {
+        let ws = self.put_svd(svd)?;
+        let mut w = WireWriter::new();
+        w.put_usize(li);
+        w.put_usize(ri);
+        put_wire_svd(&mut w, &ws);
+        let mut man = self.manifest.lock().unwrap();
+        self.append(&mut man, REC_RESID, w.into_bytes())?;
+        man.resids.insert((li, ri), ws);
+        Ok(())
+    }
+
+    /// Spill one completed phase-B2 cell.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn spill_cell(
+        &self,
+        ci: usize,
+        li: usize,
+        base: SpillBase<'_>,
+        l: &Mat,
+        r: &Mat,
+        k_star: usize,
+        selection: Option<&RankSelection>,
+        weight_err: f64,
+        scaled_err: f64,
+        qer_secs: f64,
+    ) -> Result<()> {
+        let wb = match base {
+            SpillBase::Packed(p) => WireBase::Packed(self.put_packed_blob(p)?),
+            SpillBase::Dense(m) => WireBase::Dense(self.put_mat_blob(m)?),
+        };
+        let rec = CellRecord {
+            base: wb,
+            l: l.clone(),
+            r: r.clone(),
+            k_star,
+            selection: selection.cloned(),
+            weight_err,
+            scaled_err,
+            qer_secs,
+        };
+        let payload = encode_cell(ci, li, &rec);
+        let mut man = self.manifest.lock().unwrap();
+        self.append(&mut man, REC_CELL, payload)?;
+        man.cells.insert((ci, li), Arc::new(rec));
+        Ok(())
+    }
+
+    // ---- reloads ----------------------------------------------------------
+
+    fn read_blob(&self, expect_kind: u8, h: u128) -> Result<Vec<u8>> {
+        let path = self.blob_path(h);
+        let mut f = File::open(&path)
+            .with_context(|| format!("spill blob {h:032x} missing from {}", path.display()))?;
+        let frame = read_frame(&mut f)
+            .with_context(|| format!("spill blob {h:032x} unreadable"))?
+            .ok_or_else(|| anyhow!("spill blob {h:032x} is empty"))?;
+        ensure!(frame.kind == expect_kind, "spill blob {h:032x} has the wrong kind");
+        ensure!(
+            content_hash128(&frame.payload) == h,
+            "spill blob {h:032x} content does not match its address"
+        );
+        self.bytes_reloaded
+            .fetch_add(frame.payload.len() as u64 + 24, Ordering::Relaxed);
+        Ok(frame.payload)
+    }
+
+    /// Load a matrix blob through the bounded cache. Identity contract:
+    /// while any `Arc` for `h` is alive, every load returns that `Arc`.
+    pub(crate) fn load_mat(&self, h: wire::BlobRef) -> Result<Arc<Mat>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(a) = cache.get_mat(h) {
+            return Ok(a);
+        }
+        let payload = self.read_blob(kind::BLOB_MAT, h)?;
+        let mut r = WireReader::new(&payload);
+        let m = get_mat(&mut r)?;
+        ensure!(r.is_done(), "spill mat blob {h:032x} has trailing bytes");
+        Ok(cache.insert_mat(h, m))
+    }
+
+    /// [`SpillStore::load_mat`] for packed bases.
+    pub(crate) fn load_packed(&self, h: wire::BlobRef) -> Result<Arc<PackedMat>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(a) = cache.get_packed(h) {
+            return Ok(a);
+        }
+        let payload = self.read_blob(kind::BLOB_PACKED, h)?;
+        let mut r = WireReader::new(&payload);
+        let p = get_packed(&mut r)?;
+        ensure!(r.is_done(), "spill packed blob {h:032x} has trailing bytes");
+        Ok(cache.insert_packed(h, p))
+    }
+
+    fn load_scaling(&self, ws: &WireScaling) -> Result<Scaling> {
+        Ok(match ws {
+            WireScaling::Identity => Scaling::Identity,
+            WireScaling::Diagonal { d, d_inv } => {
+                Scaling::Diagonal { d: d.clone(), d_inv: d_inv.clone() }
+            }
+            WireScaling::Full { s, s_inv } => Scaling::Full {
+                s: (*self.load_mat(*s)?).clone(),
+                s_inv: (*self.load_mat(*s_inv)?).clone(),
+            },
+        })
+    }
+
+    fn load_svd(&self, ws: &WireSvd) -> Result<Svd> {
+        Ok(Svd {
+            u: (*self.load_mat(ws.u)?).clone(),
+            s: ws.s.clone(),
+            v: (*self.load_mat(ws.v)?).clone(),
+        })
+    }
+
+    /// Rebuild one layer's [`PreparedLayer`] from its PREP record — the
+    /// same reconstruction the shard host applies to prep results, so
+    /// the rebuilt artifacts are bit-identical to the in-memory ones.
+    pub(crate) fn load_layer(&self, li: usize, lk: &LayerKeys) -> Result<PreparedLayer> {
+        let rec = self.prep_record(li)?;
+        ensure!(
+            rec.qdeq0.len() == lk.qdeq0_keys.len()
+                && rec.spectra.len() == lk.spectra_keys.len(),
+            "spill PREP record for layer {li} does not match this grid's key lists"
+        );
+        let w = (*self.load_mat(rec.w)?).clone();
+        let mut scalings = HashMap::new();
+        for (k, ws) in &rec.scalings {
+            scalings.insert(*k, Arc::new(self.load_scaling(ws)?));
+        }
+        let hessian = match rec.hessian {
+            Some(h) => Some(self.load_mat(h)?),
+            None => None,
+        };
+        let mut qdeq0 = HashMap::new();
+        let mut qdeq0_packed = HashMap::new();
+        for ((label, seed, _), (dh, ph)) in lk.qdeq0_keys.iter().zip(&rec.qdeq0) {
+            qdeq0.insert((label.clone(), *seed), self.load_mat(*dh)?);
+            if let Some(p) = ph {
+                qdeq0_packed.insert((label.clone(), *seed), self.load_packed(*p)?);
+            }
+        }
+        let mut spectra = HashMap::new();
+        for ((k, seed), sp) in lk.spectra_keys.iter().zip(&rec.spectra) {
+            spectra.insert(
+                (*k, *seed),
+                Arc::new(PreparedSpectra {
+                    sw_svd: self.load_svd(&sp.sw)?,
+                    sw_frob2: sp.sw_frob2,
+                    se_svd: self.load_svd(&sp.se)?,
+                    se_frob2: sp.se_frob2,
+                    rank: sp.rank,
+                    seed: sp.seed,
+                }),
+            );
+        }
+        Ok(PreparedLayer {
+            name: rec.name.clone(),
+            w,
+            scalings,
+            hessian,
+            qdeq0,
+            qdeq0_packed,
+            spectra,
+            prep_secs: rec.prep_secs,
+        })
+    }
+
+    /// Reload one spilled phase-B1 residual SVD.
+    pub(crate) fn load_resid(&self, li: usize, ri: usize) -> Result<Svd> {
+        let ws = self
+            .manifest
+            .lock()
+            .unwrap()
+            .resids
+            .get(&(li, ri))
+            .cloned()
+            .ok_or_else(|| anyhow!("spill manifest missing RESID record ({li}, {ri})"))?;
+        self.load_svd(&ws)
+    }
+
+    /// Rebuild a single-layer [`LayerCache`] (layer `li` at index 0)
+    /// with its phase-B1 residuals — the bounded working set one
+    /// phase-B2 layer pass runs against.
+    pub(crate) fn load_layer_cache(&self, li: usize, lk: &LayerKeys) -> Result<LayerCache> {
+        let layer = self.load_layer(li, lk)?;
+        let mut cache = LayerCache::new(vec![layer]);
+        for (ri, (label, kind, seed, _)) in lk.resid_keys.iter().enumerate() {
+            cache.insert_resid(0, label.clone(), *kind, *seed, self.load_resid(li, ri)?);
+        }
+        Ok(cache)
+    }
+
+    /// Assemble the phase-B2 parts for every `(config, layer)` cell in
+    /// job-id order from the spilled CELL records, reproducing the
+    /// in-memory engine's `Arc` layout exactly (module docs; the same
+    /// rule as the shard plane's `sweep_parts`).
+    pub(crate) fn assemble_parts(
+        &self,
+        configs: &[SweepConfig],
+        names: &[String],
+    ) -> Result<Vec<(LinearOp, LayerMeta, LayerReport)>> {
+        let n_layers = names.len();
+        let n_configs = configs.len();
+        let (cells, prep_secs) = {
+            let man = self.manifest.lock().unwrap();
+            let cells = (0..n_configs * n_layers)
+                .map(|idx| {
+                    man.cells.get(&(idx / n_layers, idx % n_layers)).cloned().ok_or_else(
+                        || {
+                            anyhow!(
+                                "spill manifest missing CELL record ({}, {})",
+                                idx / n_layers,
+                                idx % n_layers
+                            )
+                        },
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let prep_secs = (0..n_layers)
+                .map(|li| {
+                    man.preps
+                        .get(&li)
+                        .map(|p| p.prep_secs)
+                        .ok_or_else(|| anyhow!("spill manifest missing PREP record {li}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            (cells, prep_secs)
+        };
+        let mut parts = Vec::with_capacity(cells.len());
+        for (idx, rec) in cells.iter().enumerate() {
+            let li = idx % n_layers;
+            let shares_cell_base =
+                matches!(configs[idx / n_layers].method, Method::WOnly | Method::Qer);
+            let base = match rec.base {
+                // shared cells alias one Arc per content hash (grid
+                // dedup + lock-step groups); everything else gets a
+                // fresh Arc per cell so pointer-based fleet grouping
+                // cannot coarsen across the disk round-trip
+                WireBase::Packed(h) if shares_cell_base => {
+                    QuantBase::Packed(self.load_packed(h)?)
+                }
+                WireBase::Packed(h) => {
+                    QuantBase::Packed(Arc::new((*self.load_packed(h)?).clone()))
+                }
+                WireBase::Dense(h) => QuantBase::Dense(Arc::new((*self.load_mat(h)?).clone())),
+            };
+            let op = LinearOp::FactoredQlr { base, l: rec.l.clone(), r: rec.r.clone() };
+            let meta = LayerMeta {
+                name: names[li].clone(),
+                k_star: rec.k_star,
+                selection: rec.selection.clone(),
+            };
+            let report = LayerReport {
+                name: names[li].clone(),
+                k_star: rec.k_star,
+                weight_err: rec.weight_err,
+                scaled_err: rec.scaled_err,
+                scale_secs: prep_secs[li] / n_configs as f64,
+                qer_secs: rec.qer_secs,
+            };
+            parts.push((op, meta, report));
+        }
+        Ok(parts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// record payloads
+// ---------------------------------------------------------------------------
+
+fn decode_header(payload: &[u8]) -> Result<Header> {
+    let mut r = WireReader::new(payload);
+    let h = Header {
+        fingerprint: r.get_u128()?,
+        n_layers: r.get_usize()?,
+        n_configs: r.get_usize()?,
+        prep_rank: r.get_usize()?,
+    };
+    ensure!(r.is_done(), "spill header has trailing bytes");
+    Ok(h)
+}
+
+fn encode_prep(li: usize, rec: &PrepRecord) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_usize(li);
+    w.put_str(&rec.name);
+    w.put_u128(rec.w);
+    w.put_usize(rec.scalings.len());
+    for (k, ws) in &rec.scalings {
+        put_scaling_kind(&mut w, *k);
+        put_wire_scaling(&mut w, ws);
+    }
+    put_opt(&mut w, &rec.hessian, |w, h| w.put_u128(*h));
+    w.put_usize(rec.qdeq0.len());
+    for (d, p) in &rec.qdeq0 {
+        w.put_u128(*d);
+        put_opt(&mut w, p, |w, h| w.put_u128(*h));
+    }
+    w.put_usize(rec.spectra.len());
+    for sp in &rec.spectra {
+        put_wire_spectra(&mut w, sp);
+    }
+    w.put_f64(rec.prep_secs);
+    w.into_bytes()
+}
+
+fn decode_prep(payload: &[u8]) -> Result<(usize, PrepRecord)> {
+    let mut r = WireReader::new(payload);
+    let li = r.get_usize()?;
+    let name = r.get_str()?;
+    let w_ref = r.get_u128()?;
+    let n = r.get_usize()?;
+    let mut scalings = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = get_scaling_kind(&mut r)?;
+        scalings.push((k, get_wire_scaling(&mut r)?));
+    }
+    let hessian = get_opt(&mut r, |r| r.get_u128())?;
+    let n = r.get_usize()?;
+    let mut qdeq0 = Vec::with_capacity(n);
+    for _ in 0..n {
+        let d = r.get_u128()?;
+        let p = get_opt(&mut r, |r| r.get_u128())?;
+        qdeq0.push((d, p));
+    }
+    let n = r.get_usize()?;
+    let mut spectra = Vec::with_capacity(n);
+    for _ in 0..n {
+        spectra.push(get_wire_spectra(&mut r)?);
+    }
+    let prep_secs = r.get_f64()?;
+    ensure!(r.is_done(), "spill PREP record has trailing bytes");
+    Ok((li, PrepRecord { name, w: w_ref, scalings, hessian, qdeq0, spectra, prep_secs }))
+}
+
+fn decode_resid(payload: &[u8]) -> Result<(usize, usize, WireSvd)> {
+    let mut r = WireReader::new(payload);
+    let li = r.get_usize()?;
+    let ri = r.get_usize()?;
+    let svd = get_wire_svd(&mut r)?;
+    ensure!(r.is_done(), "spill RESID record has trailing bytes");
+    Ok((li, ri, svd))
+}
+
+fn encode_cell(ci: usize, li: usize, rec: &CellRecord) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_usize(ci);
+    w.put_usize(li);
+    put_wire_base(&mut w, &rec.base);
+    put_mat(&mut w, &rec.l);
+    put_mat(&mut w, &rec.r);
+    w.put_usize(rec.k_star);
+    put_opt(&mut w, &rec.selection, put_selection);
+    w.put_f64(rec.weight_err);
+    w.put_f64(rec.scaled_err);
+    w.put_f64(rec.qer_secs);
+    w.into_bytes()
+}
+
+fn decode_cell(payload: &[u8]) -> Result<(usize, usize, CellRecord)> {
+    let mut r = WireReader::new(payload);
+    let ci = r.get_usize()?;
+    let li = r.get_usize()?;
+    let rec = CellRecord {
+        base: get_wire_base(&mut r)?,
+        l: get_mat(&mut r)?,
+        r: get_mat(&mut r)?,
+        k_star: r.get_usize()?,
+        selection: get_opt(&mut r, get_selection)?,
+        weight_err: r.get_f64()?,
+        scaled_err: r.get_f64()?,
+        qer_secs: r.get_f64()?,
+    };
+    ensure!(r.is_done(), "spill CELL record has trailing bytes");
+    Ok((ci, li, rec))
+}
+
+/// Scan the manifest file: every complete frame, whether the tail was
+/// unreadable (torn final write — [`wire::WireError::Truncated`] or a failed
+/// frame checksum), and the byte offset of the last complete record.
+/// A missing or zero-length file is an empty, untruncated manifest.
+fn scan_manifest(path: &Path) -> Result<(Vec<Frame>, bool, u64)> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading spill manifest {}", path.display()))
+        }
+    };
+    let mut cur = std::io::Cursor::new(&bytes[..]);
+    let mut frames = Vec::new();
+    let mut good = 0u64;
+    let truncated = loop {
+        match read_frame(&mut cur) {
+            Ok(None) => break false,
+            Ok(Some(f)) => {
+                frames.push(f);
+                good = cur.position();
+            }
+            // a torn or corrupted tail means "the last chunk did not
+            // complete", not "the store is lost": resume from the last
+            // record that round-tripped its checksum
+            Err(_) => break true,
+        }
+    };
+    Ok((frames, truncated, good))
+}
+
+// ---------------------------------------------------------------------------
+// the spilled sweep engine
+// ---------------------------------------------------------------------------
+
+/// Content fingerprint of one (model, grid) pair: model shape, linear
+/// names, every config's per-layer resolved view, and the grid prep
+/// rank. Two sweeps share a spill dir iff these all match.
+pub fn sweep_fingerprint(
+    model_cfg: &ModelCfg,
+    names: &[String],
+    configs: &[SweepConfig],
+    prep_rank: usize,
+) -> u128 {
+    let mut w = WireWriter::new();
+    put_model_cfg(&mut w, model_cfg);
+    w.put_usize(names.len());
+    for n in names {
+        w.put_str(n);
+    }
+    w.put_usize(configs.len());
+    for c in configs {
+        // encode the resolved per-layer views so heterogeneous cells
+        // fingerprint by what actually executes (and the wire codec
+        // never sees `per_layer`)
+        for li in 0..names.len() {
+            put_sweep_config(&mut w, &c.resolved(li));
+        }
+    }
+    w.put_usize(prep_rank);
+    content_hash128(&w.into_bytes())
+}
+
+/// Content hash of an outcome's factored model + rank selections —
+/// printed by `srr ptq --spill` so the process-level kill-and-resume
+/// harness can compare runs bit-exactly across process boundaries.
+pub fn outcome_content_hash(out: &FactoredOutcome) -> u128 {
+    let mut w = WireWriter::new();
+    for (name, op) in &out.model.ops {
+        w.put_str(name);
+        match op {
+            LinearOp::Dense(m) => {
+                w.put_u8(0);
+                put_mat(&mut w, m);
+            }
+            LinearOp::FactoredQlr { base, l, r } => {
+                match base {
+                    QuantBase::Packed(p) => {
+                        w.put_u8(1);
+                        put_packed(&mut w, p);
+                    }
+                    QuantBase::Dense(m) => {
+                        w.put_u8(2);
+                        put_mat(&mut w, m);
+                    }
+                }
+                put_mat(&mut w, l);
+                put_mat(&mut w, r);
+            }
+        }
+    }
+    for m in &out.meta {
+        w.put_usize(m.k_star);
+        put_opt(&mut w, &m.selection, put_selection);
+    }
+    content_hash128(&w.into_bytes())
+}
+
+/// Run a sweep grid through `store` with a bounded in-memory working
+/// set, resuming any chunks the store already holds. Bit-identical to
+/// [`SweepRunner::run_factored`](super::sweep::SweepRunner) — outcomes,
+/// `Arc` sharing topology, and fleet PPL all match the in-memory engine
+/// (property-tested below and gated by `BENCH_spill.json`).
+pub fn run_sweep_spilled(
+    params: &Params,
+    model_cfg: &ModelCfg,
+    calib: &CalibrationSet,
+    configs: &[SweepConfig],
+    metrics: &Metrics,
+    store: &SpillStore,
+) -> Result<Vec<FactoredOutcome>> {
+    let names = Params::linear_names(model_cfg);
+    let n_layers = names.len();
+    if configs.is_empty() || n_layers == 0 {
+        return Ok(empty_outcomes(params, configs.len()));
+    }
+    let keys = sweep_keys(configs, n_layers);
+    let prep_rank = keys.prep_rank;
+    let fp = sweep_fingerprint(model_cfg, &names, configs, prep_rank);
+    let resumed = store.begin(fp, n_layers, configs.len(), prep_rank)?;
+    if resumed {
+        metrics.incr("spill.resumed");
+    }
+
+    // ---- phase A: prepare, spill, drop — one layer per worker ------------
+    let missing: Vec<usize> = (0..n_layers).filter(|li| !store.prep_done(*li)).collect();
+    let t_prep = Instant::now();
+    let spilled: Vec<Result<()>> = pool::par_map(missing.len(), |i| {
+        let li = missing[i];
+        let layer = prepare_layer(
+            params,
+            calib,
+            &names[li],
+            &keys.layers[li],
+            &keys.kinds,
+            keys.any_hessian,
+            prep_rank,
+            metrics,
+        );
+        store.spill_prep(li, &layer, &keys.layers[li], &keys.kinds)
+    });
+    for r in spilled {
+        r?;
+    }
+    metrics.add("sweep.prep_secs", t_prep.elapsed().as_secs_f64());
+
+    // ---- phase B1: shared plain-QER residual SVDs, from spilled blobs ----
+    let t_resid = Instant::now();
+    let resid_missing: Vec<(usize, usize)> = keys
+        .resid_jobs()
+        .into_iter()
+        .filter(|(li, ri)| !store.resid_done(*li, *ri))
+        .collect();
+    let done: Vec<Result<()>> = pool::par_map(resid_missing.len(), |i| {
+        let (li, ri) = resid_missing[i];
+        let svd = resid_job_inputs(store, &keys, li, ri)?;
+        store.spill_resid(li, ri, &svd)
+    });
+    for r in done {
+        r?;
+    }
+    metrics.add("sweep.shared_resid_secs", t_resid.elapsed().as_secs_f64());
+
+    // ---- phase B2: layer-major fan-out over a one-layer working set ------
+    let t_rec = Instant::now();
+    for li in 0..n_layers {
+        let todo: Vec<usize> =
+            (0..configs.len()).filter(|ci| !store.cell_done(*ci, li)).collect();
+        if todo.is_empty() {
+            continue;
+        }
+        let cache1 = store.load_layer_cache(li, &keys.layers[li])?;
+        let done: Vec<Result<()>> = pool::par_map(todo.len(), |j| {
+            let ci = todo[j];
+            let c = configs[ci].resolved(li);
+            let t0 = Instant::now();
+            let arts = b2_artifacts(&cache1, 0, &c);
+            let (res, report) = b2_job(&c, prep_rank, &arts);
+            metrics.add("sweep.reconstruct_cpu_secs", t0.elapsed().as_secs_f64());
+            spill_qer_result(store, ci, li, &res, &report)
+        });
+        for r in done {
+            r?;
+        }
+        // cache1 drops here: the next layer starts from a clean slate
+    }
+    metrics.add("sweep.reconstruct_secs", t_rec.elapsed().as_secs_f64());
+
+    // ---- assembly, entirely from the manifest ----------------------------
+    let parts = store.assemble_parts(configs, &names)?;
+    let outcomes = assemble_outcomes(params, &names, configs.len(), parts, metrics);
+    metrics.add("sweep.configs", configs.len() as f64);
+    metrics.add("sweep.layers", n_layers as f64);
+    let stats = store.stats();
+    metrics.put("spill.bytes_spilled", stats.bytes_spilled as f64);
+    metrics.put("spill.bytes_reloaded", stats.bytes_reloaded as f64);
+    metrics.put("spill.peak_resident_bytes", stats.peak_resident_bytes as f64);
+    Ok(outcomes)
+}
+
+/// Spill one in-process [`QerResult`] as its cell's completion record.
+pub(crate) fn spill_qer_result(
+    store: &SpillStore,
+    ci: usize,
+    li: usize,
+    res: &QerResult,
+    report: &LayerReport,
+) -> Result<()> {
+    let base = match &res.packed {
+        Some(p) => SpillBase::Packed(p.as_ref()),
+        None => SpillBase::Dense(&res.qdeq),
+    };
+    store.spill_cell(
+        ci,
+        li,
+        base,
+        &res.l,
+        &res.r,
+        res.k_star,
+        res.selection.as_ref(),
+        report.weight_err,
+        report.scaled_err,
+        report.qer_secs,
+    )
+}
+
+/// Compute one phase-B1 residual SVD from spilled phase-A blobs — the
+/// same [`compute_resid_svd`] call, same salted stream, as the
+/// in-memory engine; only the artifact source differs.
+fn resid_job_inputs(
+    store: &SpillStore,
+    keys: &SweepKeys,
+    li: usize,
+    ri: usize,
+) -> Result<Svd> {
+    let lk = &keys.layers[li];
+    let (label, kind, seed, _) = &lk.resid_keys[ri];
+    let rec = store.prep_record(li)?;
+    let qi = lk
+        .qdeq0_keys
+        .iter()
+        .position(|(l, s, _)| l == label && s == seed)
+        .ok_or_else(|| anyhow!("resid key without a matching qdeq0 key"))?;
+    ensure!(qi < rec.qdeq0.len(), "spill PREP record qdeq0 list too short");
+    let w = store.load_mat(rec.w)?;
+    let qdeq = store.load_mat(rec.qdeq0[qi].0)?;
+    let ws = rec
+        .scalings
+        .iter()
+        .find(|(k, _)| k == kind)
+        .map(|(_, ws)| ws)
+        .ok_or_else(|| anyhow!("spill PREP record missing scaling for resid key"))?;
+    let scaling = store.load_scaling(ws)?;
+    let salt = layer_salt(&rec.name);
+    Ok(compute_resid_svd(&w, &qdeq, &scaling, keys.prep_rank, *seed, salt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    /// Self-cleaning unique temp dir for spill tests.
+    pub(crate) struct TempDir(pub PathBuf);
+
+    impl TempDir {
+        pub(crate) fn new(tag: &str) -> TempDir {
+            static NEXT: AtomicU64 = AtomicU64::new(0);
+            let dir = std::env::temp_dir().join(format!(
+                "srr-spill-{tag}-{}-{}",
+                std::process::id(),
+                NEXT.fetch_add(1, Ordering::Relaxed)
+            ));
+            fs::create_dir_all(&dir).expect("create temp dir");
+            TempDir(dir)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn tiny_svd(rng: &mut Rng) -> Svd {
+        Svd {
+            u: Mat::randn(6, 3, 1.0, rng),
+            s: vec![3.0, 2.0, 1.0],
+            v: Mat::randn(5, 3, 1.0, rng),
+        }
+    }
+
+    fn store_records(dir: &Path) -> usize {
+        SpillStore::open(dir, SpillOptions::default()).expect("reopen").stats().records
+    }
+
+    #[test]
+    fn fresh_store_round_trips_records() {
+        let tmp = TempDir::new("roundtrip");
+        let mut rng = Rng::new(7);
+        let svd = tiny_svd(&mut rng);
+        {
+            let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("open");
+            assert!(!store.begin(42, 2, 3, 8).expect("begin"));
+            store.spill_resid(1, 0, &svd).expect("spill resid");
+            assert!(store.resid_done(1, 0));
+            assert!(!store.resid_done(0, 0));
+        }
+        let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("reopen");
+        assert!(store.begin(42, 2, 3, 8).expect("begin resumed"));
+        assert!(store.resid_done(1, 0));
+        let ws = store.manifest.lock().unwrap().resids.get(&(1, 0)).cloned().unwrap();
+        let back = store.load_svd(&ws).expect("reload svd");
+        assert_eq!(back.u, svd.u);
+        assert_eq!(back.s, svd.s);
+        assert_eq!(back.v, svd.v);
+    }
+
+    #[test]
+    fn mismatched_fingerprint_is_an_error() {
+        let tmp = TempDir::new("fpmismatch");
+        {
+            let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("open");
+            store.begin(1, 2, 3, 8).expect("begin");
+        }
+        let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("reopen");
+        let err = store.begin(2, 2, 3, 8).expect_err("different sweep must be rejected");
+        assert!(err.to_string().contains("different sweep"), "unexpected error: {err:#}");
+    }
+
+    /// Satellite: the manifest loader treats a torn trailing record —
+    /// truncated at *every possible byte* — as "chunk incomplete", never
+    /// as a store-fatal error, and resumes with every earlier record.
+    #[test]
+    fn manifest_truncated_at_every_byte_of_last_record_resumes() {
+        let tmp = TempDir::new("torn");
+        let mut rng = Rng::new(11);
+        let manifest = tmp.0.join("manifest.srrm");
+        let full = {
+            let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("open");
+            store.begin(7, 4, 2, 8).expect("begin");
+            for ri in 0..3 {
+                store.spill_resid(0, ri, &tiny_svd(&mut rng)).expect("spill");
+            }
+            fs::read(&manifest).expect("read manifest")
+        };
+        // offset where the last record starts = end of the second-to-last
+        let (frames, truncated, _) = scan_manifest(&manifest).expect("scan");
+        assert_eq!(frames.len(), 4, "header + 3 records");
+        assert!(!truncated);
+        let last_start = {
+            let mut cur = std::io::Cursor::new(&full[..]);
+            let mut boundary = 0u64;
+            for _ in 0..3 {
+                read_frame(&mut cur).expect("frame").expect("present");
+                boundary = cur.position();
+            }
+            boundary as usize
+        };
+        assert!(last_start < full.len());
+        for cut in last_start..full.len() {
+            fs::write(&manifest, &full[..cut]).expect("write truncated");
+            let store = SpillStore::open(&tmp.0, SpillOptions::default())
+                .unwrap_or_else(|e| panic!("open failed at cut {cut}: {e:#}"));
+            assert!(store.begin(7, 4, 2, 8).expect("begin"), "resume at cut {cut}");
+            assert!(store.resid_done(0, 0) && store.resid_done(0, 1), "cut {cut}");
+            assert!(!store.resid_done(0, 2), "torn record must read as incomplete, cut {cut}");
+            // the torn tail is gone: appends extend a clean manifest
+            assert_eq!(
+                fs::metadata(&manifest).expect("meta").len(),
+                last_start as u64,
+                "cut {cut}"
+            );
+        }
+        // a wholly zero-length manifest is a fresh store, not an error
+        fs::write(&manifest, b"").expect("truncate to zero");
+        let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("open empty");
+        assert!(!store.begin(7, 4, 2, 8).expect("fresh begin"));
+        assert_eq!(store_records(&tmp.0), 1, "fresh header only");
+    }
+
+    #[test]
+    fn blob_cache_eviction_preserves_arc_identity() {
+        let tmp = TempDir::new("evict");
+        // cap far below one blob: every load evicts the previous one
+        let opts = SpillOptions { cap_bytes: 64, ..Default::default() };
+        let store = SpillStore::open(&tmp.0, opts).expect("open");
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(16, 16, 1.0, &mut rng);
+        let b = Mat::randn(16, 16, 1.0, &mut rng);
+        let ha = store.put_mat_blob(&a).expect("spill a");
+        let hb = store.put_mat_blob(&b).expect("spill b");
+        let first = store.load_mat(ha).expect("load a");
+        let _other = store.load_mat(hb).expect("load b evicts a");
+        // `first` is still alive, so reloading must alias it — eviction
+        // may drop the strong ref but can never split the identity
+        let again = store.load_mat(ha).expect("reload a");
+        assert!(Arc::ptr_eq(&first, &again), "eviction split a live Arc");
+        assert_eq!(*again, a, "content must round-trip bit-exactly");
+        let stats = store.stats();
+        assert!(stats.peak_resident_bytes >= (16 * 16 * 4) as u64);
+        assert!(stats.bytes_reloaded > 0);
+    }
+
+    #[test]
+    fn abort_hook_fails_append_after_durable_write() {
+        let tmp = TempDir::new("abort");
+        let mut rng = Rng::new(5);
+        let svd = tiny_svd(&mut rng);
+        {
+            let opts = SpillOptions { abort_after_records: Some(2), ..Default::default() };
+            let store = SpillStore::open(&tmp.0, opts).expect("open");
+            store.begin(9, 1, 1, 4).expect("begin (record 1)");
+            let err = store.spill_resid(0, 0, &svd).expect_err("record 2 aborts");
+            assert!(err.to_string().contains("simulated crash"), "{err:#}");
+        }
+        // the aborted append was durable: resume sees the record
+        let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("reopen");
+        assert!(store.begin(9, 1, 1, 4).expect("resume"));
+        assert!(store.resid_done(0, 0), "abort happens after the fsynced append");
+    }
+
+    #[test]
+    fn torn_hook_leaves_a_resumable_half_record() {
+        let tmp = TempDir::new("tornhook");
+        let mut rng = Rng::new(6);
+        let svd = tiny_svd(&mut rng);
+        {
+            let opts = SpillOptions { torn_after_records: Some(2), ..Default::default() };
+            let store = SpillStore::open(&tmp.0, opts).expect("open");
+            store.begin(9, 1, 1, 4).expect("begin");
+            let err = store.spill_resid(0, 0, &svd).expect_err("torn write");
+            assert!(err.to_string().contains("torn"), "{err:#}");
+        }
+        let store = SpillStore::open(&tmp.0, SpillOptions::default()).expect("reopen");
+        assert!(store.begin(9, 1, 1, 4).expect("resume"));
+        assert!(!store.resid_done(0, 0), "half-written record reads as incomplete");
+    }
+}

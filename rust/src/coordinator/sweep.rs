@@ -270,58 +270,16 @@ impl<'a> SweepRunner<'a> {
         // ---- phase A: per-layer shared preparation ----------------------
         let t_prep = Instant::now();
         let layers: Vec<PreparedLayer> = pool::par_map(n_layers, |i| {
-            let name = &names[i];
-            let lk = &keys.layers[i];
-            let t0 = Instant::now();
-            let w = self.params.get_mat(name).expect("linear present");
-            let salt = layer_salt(name);
-
-            let ts = Instant::now();
-            let mut scalings = HashMap::new();
-            for &kind in &keys.kinds {
-                scalings.insert(kind, Arc::new(self.calib.scaling_for(name, kind)));
-            }
-            self.metrics.add("sweep.scaling_cpu_secs", ts.elapsed().as_secs_f64());
-
-            let th = Instant::now();
-            let hessian = if any_hessian {
-                self.calib.quant_ctx(name, true, 0).hessian.map(Arc::new)
-            } else {
-                None
-            };
-            self.metrics.add("sweep.hessian_cpu_secs", th.elapsed().as_secs_f64());
-
-            let tq = Instant::now();
-            let mut qdeq0 = HashMap::new();
-            let mut qdeq0_packed = HashMap::new();
-            for (label, seed, spec) in &lk.qdeq0_keys {
-                let (qdeq, packed) = compute_qdeq0(&w, hessian.as_deref(), spec, *seed, salt);
-                qdeq0.insert((label.clone(), *seed), Arc::new(qdeq));
-                if let Some(p) = packed {
-                    qdeq0_packed.insert((label.clone(), *seed), Arc::new(p));
-                }
-            }
-            self.metrics.add("sweep.qdeq_cpu_secs", tq.elapsed().as_secs_f64());
-
-            let tsp = Instant::now();
-            let mut spectra = HashMap::new();
-            for (kind, seed) in &lk.spectra_keys {
-                let scaling = scalings.get(kind).expect("scaling prepared above");
-                let sp = compute_spectra(&w, scaling, prep_rank, *seed, salt);
-                spectra.insert((*kind, *seed), Arc::new(sp));
-            }
-            self.metrics.add("sweep.spectra_cpu_secs", tsp.elapsed().as_secs_f64());
-
-            PreparedLayer {
-                name: name.clone(),
-                w,
-                scalings,
-                hessian,
-                qdeq0,
-                qdeq0_packed,
-                spectra,
-                prep_secs: t0.elapsed().as_secs_f64(),
-            }
+            prepare_layer(
+                self.params,
+                self.calib,
+                &names[i],
+                &keys.layers[i],
+                &keys.kinds,
+                any_hessian,
+                prep_rank,
+                self.metrics,
+            )
         });
         let mut cache = LayerCache::new(layers);
         self.metrics.add("sweep.prep_secs", t_prep.elapsed().as_secs_f64());
@@ -439,6 +397,76 @@ pub(crate) fn sweep_keys(configs: &[SweepConfig], n_layers: usize) -> SweepKeys 
         }
     }
     SweepKeys { kinds, layers, prep_rank, any_hessian }
+}
+
+/// One layer's full phase-A preparation — every activation scaling,
+/// the optional GPTQ Hessian, the k=0 quantizations (dense + packed)
+/// and the prepared (S·W, S·E) spectra the grid touches for this
+/// linear. Shared verbatim by [`SweepRunner::prepare`] and the
+/// spill-backed runner ([`super::spill`]), so both populate
+/// byte-identical [`PreparedLayer`]s regardless of where the artifacts
+/// end up living.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn prepare_layer(
+    params: &Params,
+    calib: &CalibrationSet,
+    name: &str,
+    lk: &LayerKeys,
+    kinds: &[ScalingKind],
+    any_hessian: bool,
+    prep_rank: usize,
+    metrics: &Metrics,
+) -> PreparedLayer {
+    let t0 = Instant::now();
+    let w = params.get_mat(name).expect("linear present");
+    let salt = layer_salt(name);
+
+    let ts = Instant::now();
+    let mut scalings = HashMap::new();
+    for &kind in kinds {
+        scalings.insert(kind, Arc::new(calib.scaling_for(name, kind)));
+    }
+    metrics.add("sweep.scaling_cpu_secs", ts.elapsed().as_secs_f64());
+
+    let th = Instant::now();
+    let hessian = if any_hessian {
+        calib.quant_ctx(name, true, 0).hessian.map(Arc::new)
+    } else {
+        None
+    };
+    metrics.add("sweep.hessian_cpu_secs", th.elapsed().as_secs_f64());
+
+    let tq = Instant::now();
+    let mut qdeq0 = HashMap::new();
+    let mut qdeq0_packed = HashMap::new();
+    for (label, seed, spec) in &lk.qdeq0_keys {
+        let (qdeq, packed) = compute_qdeq0(&w, hessian.as_deref(), spec, *seed, salt);
+        qdeq0.insert((label.clone(), *seed), Arc::new(qdeq));
+        if let Some(p) = packed {
+            qdeq0_packed.insert((label.clone(), *seed), Arc::new(p));
+        }
+    }
+    metrics.add("sweep.qdeq_cpu_secs", tq.elapsed().as_secs_f64());
+
+    let tsp = Instant::now();
+    let mut spectra = HashMap::new();
+    for (kind, seed) in &lk.spectra_keys {
+        let scaling = scalings.get(kind).expect("scaling prepared above");
+        let sp = compute_spectra(&w, scaling, prep_rank, *seed, salt);
+        spectra.insert((*kind, *seed), Arc::new(sp));
+    }
+    metrics.add("sweep.spectra_cpu_secs", tsp.elapsed().as_secs_f64());
+
+    PreparedLayer {
+        name: name.to_string(),
+        w,
+        scalings,
+        hessian,
+        qdeq0,
+        qdeq0_packed,
+        spectra,
+        prep_secs: t0.elapsed().as_secs_f64(),
+    }
 }
 
 /// One phase-A k=0 quantization: the salted-seed stream every path —

@@ -475,13 +475,13 @@ impl<'a> WireReader<'a> {
 // domain-type codecs
 // ---------------------------------------------------------------------------
 
-fn put_mat(w: &mut WireWriter, m: &Mat) {
+pub(crate) fn put_mat(w: &mut WireWriter, m: &Mat) {
     w.put_usize(m.rows);
     w.put_usize(m.cols);
     w.put_f32s(&m.data);
 }
 
-fn get_mat(r: &mut WireReader) -> Result<Mat, WireError> {
+pub(crate) fn get_mat(r: &mut WireReader) -> Result<Mat, WireError> {
     let rows = r.get_usize()?;
     let cols = r.get_usize()?;
     let data = r.get_f32s()?;
@@ -491,7 +491,7 @@ fn get_mat(r: &mut WireReader) -> Result<Mat, WireError> {
     Ok(Mat { rows, cols, data })
 }
 
-fn put_packed(w: &mut WireWriter, p: &PackedMat) {
+pub(crate) fn put_packed(w: &mut WireWriter, p: &PackedMat) {
     w.put_usize(p.rows);
     w.put_usize(p.cols);
     match p.scheme {
@@ -519,7 +519,7 @@ fn put_packed(w: &mut WireWriter, p: &PackedMat) {
     w.put_f32s(&p.los);
 }
 
-fn get_packed(r: &mut WireReader) -> Result<PackedMat, WireError> {
+pub(crate) fn get_packed(r: &mut WireReader) -> Result<PackedMat, WireError> {
     let rows = r.get_usize()?;
     let cols = r.get_usize()?;
     let scheme = match r.get_u8()? {
@@ -545,6 +545,15 @@ fn get_packed(r: &mut WireReader) -> Result<PackedMat, WireError> {
         len.checked_mul(bits as usize).ok_or(WireError::Malformed("bit count overflow"))?;
     if !(2..=32).contains(&bits) || len != n_elems || words.len() != total_bits.div_ceil(64) {
         return Err(WireError::Malformed("packed code layout"));
+    }
+    // trailing padding bits above the last code must be zero — the pack
+    // path never writes them, so a nonzero tail is corruption (and would
+    // silently poison word-level content hashes of spilled blobs)
+    if total_bits % 64 != 0 {
+        let last = *words.last().ok_or(WireError::Malformed("packed code layout"))?;
+        if last >> (total_bits % 64) != 0 {
+            return Err(WireError::Malformed("nonzero packed padding bits"));
+        }
     }
     let codes = PackedCodes::from_raw(bits, len, words);
     let scales = r.get_f32s()?;
@@ -664,7 +673,7 @@ fn get_method(r: &mut WireReader) -> Result<Method, WireError> {
     })
 }
 
-fn put_scaling_kind(w: &mut WireWriter, k: ScalingKind) {
+pub(crate) fn put_scaling_kind(w: &mut WireWriter, k: ScalingKind) {
     w.put_u8(match k {
         ScalingKind::Identity => 0,
         ScalingKind::DiagRms => 1,
@@ -673,7 +682,7 @@ fn put_scaling_kind(w: &mut WireWriter, k: ScalingKind) {
     });
 }
 
-fn get_scaling_kind(r: &mut WireReader) -> Result<ScalingKind, WireError> {
+pub(crate) fn get_scaling_kind(r: &mut WireReader) -> Result<ScalingKind, WireError> {
     Ok(match r.get_u8()? {
         0 => ScalingKind::Identity,
         1 => ScalingKind::DiagRms,
@@ -683,7 +692,7 @@ fn get_scaling_kind(r: &mut WireReader) -> Result<ScalingKind, WireError> {
     })
 }
 
-fn put_quantizer(w: &mut WireWriter, q: &QuantizerSpec) {
+pub(crate) fn put_quantizer(w: &mut WireWriter, q: &QuantizerSpec) {
     match *q {
         QuantizerSpec::Mxint { bits, block } => {
             w.put_u8(0);
@@ -708,7 +717,7 @@ fn put_quantizer(w: &mut WireWriter, q: &QuantizerSpec) {
     }
 }
 
-fn get_quantizer(r: &mut WireReader) -> Result<QuantizerSpec, WireError> {
+pub(crate) fn get_quantizer(r: &mut WireReader) -> Result<QuantizerSpec, WireError> {
     Ok(match r.get_u8()? {
         0 => QuantizerSpec::Mxint { bits: r.get_u32()?, block: r.get_usize()? },
         1 => QuantizerSpec::Uniform {
@@ -722,7 +731,7 @@ fn get_quantizer(r: &mut WireReader) -> Result<QuantizerSpec, WireError> {
     })
 }
 
-fn put_sweep_config(w: &mut WireWriter, c: &SweepConfig) {
+pub(crate) fn put_sweep_config(w: &mut WireWriter, c: &SweepConfig) {
     // heterogeneous cells are resolved to a layer's homogeneous view
     // before encoding (SweepJobSource), so per_layer never rides the wire
     debug_assert!(c.per_layer.is_none(), "encode a resolved SweepConfig");
@@ -734,7 +743,7 @@ fn put_sweep_config(w: &mut WireWriter, c: &SweepConfig) {
     w.put_u64(c.seed);
 }
 
-fn get_sweep_config(r: &mut WireReader) -> Result<SweepConfig, WireError> {
+pub(crate) fn get_sweep_config(r: &mut WireReader) -> Result<SweepConfig, WireError> {
     Ok(SweepConfig {
         label: r.get_str()?,
         quantizer: get_quantizer(r)?,
@@ -746,7 +755,7 @@ fn get_sweep_config(r: &mut WireReader) -> Result<SweepConfig, WireError> {
     })
 }
 
-fn put_selection(w: &mut WireWriter, s: &RankSelection) {
+pub(crate) fn put_selection(w: &mut WireWriter, s: &RankSelection) {
     w.put_usize(s.k_star);
     w.put_f64s(&s.objective);
     w.put_f64s(&s.rho_sw);
@@ -754,7 +763,7 @@ fn put_selection(w: &mut WireWriter, s: &RankSelection) {
     w.put_f32s(&s.sw_spectrum);
 }
 
-fn get_selection(r: &mut WireReader) -> Result<RankSelection, WireError> {
+pub(crate) fn get_selection(r: &mut WireReader) -> Result<RankSelection, WireError> {
     Ok(RankSelection {
         k_star: r.get_usize()?,
         objective: r.get_f64s()?,
@@ -764,7 +773,7 @@ fn get_selection(r: &mut WireReader) -> Result<RankSelection, WireError> {
     })
 }
 
-fn put_model_cfg(w: &mut WireWriter, c: &ModelCfg) {
+pub(crate) fn put_model_cfg(w: &mut WireWriter, c: &ModelCfg) {
     w.put_str(&c.name);
     w.put_usize(c.vocab);
     w.put_usize(c.d_model);
@@ -1186,17 +1195,17 @@ pub struct PrepResultMsg {
     pub prep_secs: f64,
 }
 
-fn put_wire_svd(w: &mut WireWriter, s: &WireSvd) {
+pub(crate) fn put_wire_svd(w: &mut WireWriter, s: &WireSvd) {
     w.put_u128(s.u);
     w.put_f32s(&s.s);
     w.put_u128(s.v);
 }
 
-fn get_wire_svd(r: &mut WireReader) -> Result<WireSvd, WireError> {
+pub(crate) fn get_wire_svd(r: &mut WireReader) -> Result<WireSvd, WireError> {
     Ok(WireSvd { u: r.get_u128()?, s: r.get_f32s()?, v: r.get_u128()? })
 }
 
-fn put_opt<T>(w: &mut WireWriter, v: &Option<T>, f: impl FnOnce(&mut WireWriter, &T)) {
+pub(crate) fn put_opt<T>(w: &mut WireWriter, v: &Option<T>, f: impl FnOnce(&mut WireWriter, &T)) {
     match v {
         Some(x) => {
             w.put_u8(1);
@@ -1206,7 +1215,7 @@ fn put_opt<T>(w: &mut WireWriter, v: &Option<T>, f: impl FnOnce(&mut WireWriter,
     }
 }
 
-fn get_opt<T>(
+pub(crate) fn get_opt<T>(
     r: &mut WireReader,
     f: impl FnOnce(&mut WireReader) -> Result<T, WireError>,
 ) -> Result<Option<T>, WireError> {
@@ -1217,7 +1226,7 @@ fn get_opt<T>(
     }
 }
 
-fn put_wire_base(w: &mut WireWriter, b: &WireBase) {
+pub(crate) fn put_wire_base(w: &mut WireWriter, b: &WireBase) {
     match b {
         WireBase::Packed(h) => {
             w.put_u8(0);
@@ -1230,7 +1239,7 @@ fn put_wire_base(w: &mut WireWriter, b: &WireBase) {
     }
 }
 
-fn get_wire_base(r: &mut WireReader) -> Result<WireBase, WireError> {
+pub(crate) fn get_wire_base(r: &mut WireReader) -> Result<WireBase, WireError> {
     Ok(match r.get_u8()? {
         0 => WireBase::Packed(r.get_u128()?),
         1 => WireBase::Dense(r.get_u128()?),
@@ -1238,7 +1247,7 @@ fn get_wire_base(r: &mut WireReader) -> Result<WireBase, WireError> {
     })
 }
 
-fn put_wire_scaling(w: &mut WireWriter, s: &WireScaling) {
+pub(crate) fn put_wire_scaling(w: &mut WireWriter, s: &WireScaling) {
     match s {
         WireScaling::Identity => w.put_u8(0),
         WireScaling::Diagonal { d, d_inv } => {
@@ -1254,7 +1263,7 @@ fn put_wire_scaling(w: &mut WireWriter, s: &WireScaling) {
     }
 }
 
-fn get_wire_scaling(r: &mut WireReader) -> Result<WireScaling, WireError> {
+pub(crate) fn get_wire_scaling(r: &mut WireReader) -> Result<WireScaling, WireError> {
     Ok(match r.get_u8()? {
         0 => WireScaling::Identity,
         1 => WireScaling::Diagonal { d: r.get_f32s()?, d_inv: r.get_f32s()? },
@@ -1263,7 +1272,7 @@ fn get_wire_scaling(r: &mut WireReader) -> Result<WireScaling, WireError> {
     })
 }
 
-fn put_wire_spectra(w: &mut WireWriter, sp: &WireSpectra) {
+pub(crate) fn put_wire_spectra(w: &mut WireWriter, sp: &WireSpectra) {
     put_wire_svd(w, &sp.sw);
     w.put_f64(sp.sw_frob2);
     put_wire_svd(w, &sp.se);
@@ -1272,7 +1281,7 @@ fn put_wire_spectra(w: &mut WireWriter, sp: &WireSpectra) {
     w.put_u64(sp.seed);
 }
 
-fn get_wire_spectra(r: &mut WireReader) -> Result<WireSpectra, WireError> {
+pub(crate) fn get_wire_spectra(r: &mut WireReader) -> Result<WireSpectra, WireError> {
     Ok(WireSpectra {
         sw: get_wire_svd(r)?,
         sw_frob2: r.get_f64()?,
@@ -2259,6 +2268,43 @@ mod tests {
             clone.scales.push(1.0);
             put_packed(wtr, &clone);
         });
+    }
+
+    /// Satellite: a packed blob whose trailing padding bits are nonzero
+    /// passes the frame checksum (the corruption is *in* the payload)
+    /// but must still be refused — the pack path never writes those
+    /// bits, and accepting them would silently poison word-level
+    /// equality and content hashes of spilled blobs.
+    #[test]
+    fn packed_blob_nonzero_padding_bits_are_malformed() {
+        let mut rng = Rng::new(12);
+        // 4×10 at 3 bits: 120 code bits in 2 words, 8 padding bits
+        let w = Mat::randn(4, 10, 1.0, &mut rng);
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let (_, packed) = spec.build().quantize_coded(&w, &QuantCtx::default());
+        let p = packed.expect("packable family");
+        let total_bits = p.codes.len * p.codes.bits as usize;
+        assert_ne!(total_bits % 64, 0, "test shape must leave padding bits");
+
+        // the honest encoding decodes fine
+        let mut ok = WireWriter::new();
+        put_packed(&mut ok, &p);
+        let mut rx = BlobRx::new();
+        rx.insert(kind::BLOB_PACKED, &ok.into_bytes()).expect("honest packed blob decodes");
+
+        // same blob with one bit set above the last code: Malformed
+        let mut wtr = WireWriter::new();
+        put_packed_with(&mut wtr, &p, |words| {
+            *words.last_mut().expect("padded buffer has words") |= 1u64 << 63;
+        });
+        let mut rx = BlobRx::new();
+        assert!(
+            matches!(
+                rx.insert(kind::BLOB_PACKED, &wtr.into_bytes()),
+                Err(WireError::Malformed("nonzero packed padding bits"))
+            ),
+            "nonzero padding bits must be Malformed"
+        );
     }
 
     /// Re-encode `p` with `words` mutated after the fact (the layout

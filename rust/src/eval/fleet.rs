@@ -40,7 +40,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::model::forward::{lm_nll_fleet, FleetWeights};
 use crate::runtime::manifest::ModelCfg;
-use crate::serve::{FactoredModel, LinearOp};
+use crate::serve::{FactoredModel, LinearOp, ServeError};
 use crate::tensor::{matmul, Mat};
 use crate::util::pool;
 
@@ -78,20 +78,24 @@ impl FleetWeights for FleetGroup<'_> {
         self.members.len()
     }
 
-    fn linear_stacked(&self, name: &str, x: &Mat) -> Mat {
+    fn linear_stacked(&self, name: &str, x: &Mat) -> Result<Mat, ServeError> {
         if self.members[0].op(name).is_some() {
+            // a hand-built (or partially spilled) group can be
+            // misaligned — a member missing the op fails the job as a
+            // ServeError, never the process
             let ops: Vec<&LinearOp> = self
                 .members
                 .iter()
-                .map(|m| m.op(name).expect("fleet group ops aligned"))
-                .collect();
-            // group construction guarantees aligned ops over a stack
-            // whose rows are a multiple of the member count, so a
-            // refusal here is a caller bug, not a recoverable state
-            LinearOp::matmul_grouped(&ops, x).expect("fleet group stack is well-formed")
+                .map(|m| m.op(name).ok_or_else(|| ServeError::UnknownTensor(name.to_string())))
+                .collect::<Result<_, _>>()?;
+            LinearOp::matmul_grouped(&ops, x)
         } else {
             // un-quantized linear: shared skeleton weight, plain GEMM
-            matmul(x, &self.members[0].skeleton.get_mat(name).expect("linear param"))
+            let w = self.members[0]
+                .skeleton
+                .get_mat(name)
+                .ok_or_else(|| ServeError::UnknownTensor(name.to_string()))?;
+            Ok(matmul(x, &w))
         }
     }
 
@@ -279,13 +283,16 @@ pub(crate) fn reduce_fleet_results(
 /// **Zero-token contract:** a model scored over zero tokens (no
 /// batches, all-zero masks) gets `NaN`, matching
 /// [`perplexity_native_masked`] — never a fabricated finite PPL.
+///
+/// A malformed fleet (a member missing an op, a ragged stack) surfaces
+/// as the first failing job's [`ServeError`].
 pub fn fleet_perplexity(
     models: &[&FactoredModel],
     cfg: &ModelCfg,
     batches: &[Vec<i32>],
     b: usize,
     t: usize,
-) -> Vec<f64> {
+) -> Result<Vec<f64>, ServeError> {
     let groups = group_by_shared_bases(models);
     // one mask allocation for the whole fleet (satellite: hoisted out of
     // every perplexity_native call)
@@ -293,21 +300,23 @@ pub fn fleet_perplexity(
     let jobs = fleet_job_list(&groups, batches.len());
 
     let outs: Vec<FleetJobResult> = pool::par_map(jobs.len(), |j| match jobs[j] {
-        FleetJob::Single(mi) => FleetJobResult::Ppl(perplexity_native_masked(
+        FleetJob::Single(mi) => Ok(FleetJobResult::Ppl(perplexity_native_masked(
             models[mi],
             cfg,
             batches,
             &mask,
             b,
             t,
-        )),
+        ))),
         FleetJob::GroupBatch(gi, bj) => {
             let fleet = FleetGroup::new(groups[gi].iter().map(|&mi| models[mi]).collect());
-            FleetJobResult::Partials(lm_nll_fleet(&fleet, cfg, &batches[bj], &mask, b, t))
+            lm_nll_fleet(&fleet, cfg, &batches[bj], &mask, b, t).map(FleetJobResult::Partials)
         }
-    });
+    })
+    .into_iter()
+    .collect::<Result<_, _>>()?;
 
-    reduce_fleet_results(models.len(), &groups, &jobs, outs)
+    Ok(reduce_fleet_results(models.len(), &groups, &jobs, outs))
 }
 
 #[cfg(test)]
@@ -423,7 +432,7 @@ mod tests {
                 .map(|_| (0..b * t).map(|_| g.rng.below(cfg.vocab) as i32).collect())
                 .collect();
 
-            let fleet = fleet_perplexity(&refs, &cfg, &batches, b, t);
+            let fleet = fleet_perplexity(&refs, &cfg, &batches, b, t).expect("well-formed fleet");
             for (i, m) in refs.iter().enumerate() {
                 let solo = perplexity_native(*m, &cfg, &batches, b, t);
                 assert!(
@@ -488,7 +497,8 @@ mod tests {
             "same per-layer bits must share packed bases into one group"
         );
 
-        let fleet = fleet_perplexity(&refs, &cfg, &batches, 2, cfg.seq_len);
+        let fleet =
+            fleet_perplexity(&refs, &cfg, &batches, 2, cfg.seq_len).expect("well-formed fleet");
         for (i, m) in refs.iter().enumerate() {
             let solo = perplexity_native(*m, &cfg, &batches, 2, cfg.seq_len);
             assert!(
@@ -543,8 +553,47 @@ mod tests {
             &mut rng,
         ));
         let refs: Vec<&FactoredModel> = models.iter().collect();
-        let ppl = fleet_perplexity(&refs, &cfg, &[], 2, cfg.seq_len);
+        let ppl = fleet_perplexity(&refs, &cfg, &[], 2, cfg.seq_len).expect("well-formed fleet");
         assert_eq!(ppl.len(), 3);
         assert!(ppl.iter().all(|p| p.is_nan()), "{ppl:?}");
+    }
+
+    /// Regression (satellite bugfix): a group whose member is missing an
+    /// op — the shape a partially spilled or hand-built fleet can take —
+    /// must fail the job with a [`ServeError`], not panic the process
+    /// via the old `expect("fleet group ops aligned")`.
+    #[test]
+    fn misaligned_group_member_is_a_serve_error_not_a_panic() {
+        let cfg = tiny_cfg();
+        let params = synth_lm_params(&cfg, 13, cfg.vocab);
+        let mut rng = Rng::new(5);
+        let spec = QuantizerSpec::Mxint { bits: 3, block: 32 };
+        let mut mk = |name: &str| {
+            let w = params.get_mat(name).expect("linear");
+            let ctx = QuantCtx { hessian: None, seed: 1 };
+            let (_, packed) = spec.build().quantize_coded(&w, &ctx);
+            let mut skeleton = params.clone();
+            skeleton.unset(name);
+            let base = QuantBase::Packed(Arc::new(packed.expect("packable")));
+            let (m, k) = (base.rows(), base.cols());
+            let op = LinearOp::FactoredQlr {
+                base,
+                l: Mat::randn(m, 4, 0.05, &mut rng),
+                r: Mat::randn(4, k, 0.05, &mut rng),
+            };
+            FactoredModel { skeleton, ops: vec![(name.to_string(), op)] }
+        };
+        // same op *count*, different op *names*: member 1 has no
+        // "l0.wq" op, so the first stacked linear must refuse
+        let a = mk("l0.wq");
+        let b = mk("l0.wk");
+        let fleet = FleetGroup::new(vec![&a, &b]);
+        let tokens: Vec<i32> = (0..2 * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+        let mask = vec![1.0f32; 2 * cfg.seq_len];
+        let got = lm_nll_fleet(&fleet, &cfg, &tokens, &mask, 2, cfg.seq_len);
+        assert!(
+            matches!(got, Err(ServeError::UnknownTensor(ref n)) if n == "l0.wq"),
+            "misaligned group must surface UnknownTensor, got {got:?}"
+        );
     }
 }

@@ -83,6 +83,11 @@ pub fn registry() -> Vec<ExpEntry> {
             perf::shard_bench,
         ),
         offline(
+            "spill",
+            "§Perf out-of-core sweep store: bounded working set + kill-and-resume bit-identity (writes BENCH_spill.json)",
+            perf::spill_bench,
+        ),
+        offline(
             "budget",
             "§Budget model-wide rank/bit allocator vs uniform baseline at equal bytes (writes BENCH_budget.json)",
             perf::budget_bench,
@@ -126,7 +131,7 @@ mod tests {
             "table1", "table2", "table3", "table4", "table5", "table6",
             "table11", "table12", "table15", "table16", "table18", "table19",
             "fig2", "fig3", "fig4", "fig5", "fig7", "perf", "sweep", "serve",
-            "evalbatch", "shard", "serve_live", "budget",
+            "evalbatch", "shard", "serve_live", "budget", "spill",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
@@ -140,6 +145,7 @@ mod tests {
         assert!(offline_ok("shard"));
         assert!(offline_ok("serve_live"));
         assert!(offline_ok("budget"));
+        assert!(offline_ok("spill"));
         assert!(!offline_ok("table1"));
         assert!(!offline_ok("nonexistent"));
     }

@@ -12,8 +12,9 @@ use anyhow::Result;
 
 use crate::coordinator::{
     allocate, fleet_perplexity_sharded, run_ptq, run_ptq_factored, run_sweep,
-    run_sweep_factored, uniform_plan, BudgetSpec, FactoredOutcome, Metrics, QuantizerSpec,
-    ShardOptions, ShardSession, ShardedSweepRunner, SweepConfig, SweepRunner,
+    run_sweep_factored, run_sweep_spilled, uniform_plan, BudgetSpec, FactoredOutcome, Metrics,
+    QuantizerSpec, ShardOptions, ShardSession, ShardedSweepRunner, SpillOptions, SpillStore,
+    SweepConfig, SweepRunner,
 };
 use crate::eval::{fleet_footprint, fleet_perplexity, perplexity_native, perplexity_native_masked};
 use crate::linalg::{eigh, jacobi_svd, randomized_svd};
@@ -620,7 +621,7 @@ pub fn evalbatch_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         .iter()
         .map(|m| perplexity_native_masked(*m, &fx.cfg, &batches, &mask, b_ev, t_ev))
         .collect();
-    let fleet = fleet_perplexity(&models, &fx.cfg, &batches, b_ev, t_ev);
+    let fleet = fleet_perplexity(&models, &fx.cfg, &batches, b_ev, t_ev)?;
     for (i, (a, bppl)) in solo.iter().zip(&fleet).enumerate() {
         anyhow::ensure!(
             (a - bppl).abs() <= 1e-6,
@@ -637,7 +638,7 @@ pub fn evalbatch_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
             .collect::<Vec<f64>>()
     });
     let t_fleet = time_fn("fleet ppl", 1, iters, || {
-        fleet_perplexity(&models, &fx.cfg, &batches, b_ev, t_ev)
+        fleet_perplexity(&models, &fx.cfg, &batches, b_ev, t_ev).expect("gated above")
     });
 
     let scored_toks = (models.len() * batches.len() * b_ev * (t_ev - 1)) as f64;
@@ -794,7 +795,7 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
     let expect = SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics)
         .run_factored(&configs);
     let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
-    let exp_ppl = fleet_perplexity(&exp_models, &fx.cfg, &batches, b_ev, t_ev);
+    let exp_ppl = fleet_perplexity(&exp_models, &fx.cfg, &batches, b_ev, t_ev)?;
     let inproc_secs = t0.elapsed().as_secs_f64();
 
     // sharded runs: N single-threaded workers each
@@ -986,6 +987,194 @@ pub fn shard_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
         "sharded, N=2, one wedged (heartbeat requeue)".into(),
         f(wedge_secs, 3),
         format!("x{:.2}", shard_secs[0] / wedge_secs.max(1e-9)),
+        "yes".into(),
+    ]);
+    Ok(vec![t])
+}
+
+/// Self-cleaning spill directory for the bench legs (the guard removes
+/// the dir even when a gate below fails and unwinds early).
+struct SpillDirGuard(std::path::PathBuf);
+
+impl SpillDirGuard {
+    fn new(tag: &str) -> Result<SpillDirGuard> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "srr-spill-bench-{tag}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        Ok(SpillDirGuard(dir))
+    }
+}
+
+impl Drop for SpillDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// `--exp spill`: the out-of-core sweep store (`coordinator::spill`),
+/// recorded into `BENCH_spill.json`.
+///
+/// Two gates and the working-set measurements:
+/// 1. **`spill_bit_identical`** (recorded, then asserted) — the same
+///    grid through `run_sweep_spilled` under a deliberately small blob
+///    cap is bit-identical to the in-memory `SweepRunner::run_factored`:
+///    outcomes, lock-step `Arc` grouping, and fleet PPL;
+/// 2. **`resume_bit_identical`** — a second spilled run is killed at a
+///    mid-sweep chunk boundary (`SpillOptions::abort_after_records`,
+///    fired after the record is durable — the in-process analogue of
+///    `kill -9` between fsyncs), reopened, and resumed: completed
+///    chunks replay from the manifest, the rest re-runs, and the merged
+///    outcome is bit-identical;
+/// 3. **working set** — `peak_resident_bytes` (the store's peak-RSS
+///    proxy: high-water strong-cache residency) against the grid's
+///    fully-resident packed footprint, plus durable spill / reload
+///    throughput.
+pub fn spill_bench(ctx: &mut ExpCtx) -> Result<Vec<Table>> {
+    let model = "tiny";
+    let fx = ctx.lm(model)?;
+    let quant = QuantizerSpec::Mxint { bits: 2, block: 32 };
+
+    // a lock-step pair (w-only + QER over one quantization) plus an SRR
+    // block: the spilled reassembly has to reproduce both the shared
+    // and the per-cell Arc topologies
+    let mut configs = vec![SweepConfig::new(quant, Method::WOnly, 0, ScalingKind::Identity)];
+    for rank in [4usize, 8] {
+        configs.push(SweepConfig::new(quant, Method::Qer, rank, ScalingKind::DiagRms));
+    }
+    let srr_ranks: &[usize] = if ctx.quick { &[4, 8] } else { &[2, 4, 8, 16] };
+    for &rank in srr_ranks {
+        configs.push(SweepConfig::new(quant, Method::QerSrr, rank, ScalingKind::DiagRms));
+    }
+
+    let (b_ev, t_ev) = (1usize, 12usize.min(fx.cfg.seq_len));
+    let n_batches = if ctx.quick { 4 } else { 8 };
+    let batches: Vec<Vec<i32>> =
+        (0..n_batches).map(|i| fx.corpus.train_batch(b_ev, t_ev, 90_000 + i)).collect();
+
+    // in-memory reference (the whole grid resident at once)
+    let metrics = Metrics::new();
+    let t0 = Instant::now();
+    let expect = SweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics)
+        .run_factored(&configs);
+    let inmem_secs = t0.elapsed().as_secs_f64();
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let exp_ppl = fleet_perplexity(&exp_models, &fx.cfg, &batches, b_ev, t_ev)?;
+    let fp = fleet_footprint(&exp_models);
+
+    // spilled leg: 1 MiB blob cap — far below one layer's artifacts, so
+    // every phase streams through eviction and reload
+    let cap_bytes = 1usize << 20;
+    let dir = SpillDirGuard::new("main")?;
+    let store =
+        SpillStore::open(&dir.0, SpillOptions { cap_bytes, ..Default::default() })?;
+    let t0 = Instant::now();
+    let spilled =
+        run_sweep_spilled(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics, &store)?;
+    let spilled_secs = t0.elapsed().as_secs_f64();
+    let stats = store.stats();
+    let sp_models: Vec<&FactoredModel> = spilled.iter().map(|o| &o.model).collect();
+    let sp_ppl = fleet_perplexity(&sp_models, &fx.cfg, &batches, b_ev, t_ev)?;
+    let spill_identical = outcomes_identical(&expect, &spilled)
+        && crate::eval::group_by_shared_bases(&exp_models)
+            == crate::eval::group_by_shared_bases(&sp_models)
+        && exp_ppl.iter().zip(&sp_ppl).all(|(a, b)| a.to_bits() == b.to_bits());
+    drop(store);
+
+    // resume leg: kill a fresh spilled run at a mid-sweep chunk
+    // boundary, reopen the dir, run to completion, compare
+    let total_records = stats.records;
+    let kill_at = total_records / 2 + 1;
+    let dir2 = SpillDirGuard::new("resume")?;
+    let store = SpillStore::open(
+        &dir2.0,
+        SpillOptions { cap_bytes, abort_after_records: Some(kill_at), ..Default::default() },
+    )?;
+    let killed =
+        run_sweep_spilled(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics, &store);
+    anyhow::ensure!(killed.is_err(), "the injected kill at record {kill_at} must abort");
+    drop(store);
+    let store = SpillStore::open(&dir2.0, SpillOptions { cap_bytes, ..Default::default() })?;
+    let records_survived = store.stats().records;
+    let t0 = Instant::now();
+    let resumed =
+        run_sweep_spilled(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics, &store)?;
+    let resume_secs = t0.elapsed().as_secs_f64();
+    let rs_models: Vec<&FactoredModel> = resumed.iter().map(|o| &o.model).collect();
+    let rs_ppl = fleet_perplexity(&rs_models, &fx.cfg, &batches, b_ev, t_ev)?;
+    let resume_identical = outcomes_identical(&expect, &resumed)
+        && crate::eval::group_by_shared_bases(&exp_models)
+            == crate::eval::group_by_shared_bases(&rs_models)
+        && exp_ppl.iter().zip(&rs_ppl).all(|(a, b)| a.to_bits() == b.to_bits());
+    drop(store);
+
+    let record = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("quick", Json::Bool(ctx.quick)),
+        ("grid", Json::arr(configs.iter().map(|c| Json::str(c.label.clone())).collect())),
+        ("cap_bytes", Json::num(cap_bytes as f64)),
+        ("inmem_secs", Json::num(inmem_secs)),
+        ("spilled_secs", Json::num(spilled_secs)),
+        ("spill_overhead_x", Json::num(spilled_secs / inmem_secs.max(1e-9))),
+        ("bytes_spilled", Json::num(stats.bytes_spilled as f64)),
+        ("bytes_reloaded", Json::num(stats.bytes_reloaded as f64)),
+        (
+            "spill_mb_per_s",
+            Json::num(stats.bytes_spilled as f64 / 1e6 / spilled_secs.max(1e-9)),
+        ),
+        (
+            "reload_mb_per_s",
+            Json::num(stats.bytes_reloaded as f64 / 1e6 / spilled_secs.max(1e-9)),
+        ),
+        ("peak_resident_bytes", Json::num(stats.peak_resident_bytes as f64)),
+        ("resident_base_bytes_if_in_memory", Json::num(fp.unique_base_bytes as f64)),
+        ("manifest_records", Json::num(total_records as f64)),
+        ("kill_at_record", Json::num(kill_at as f64)),
+        ("records_survived_kill", Json::num(records_survived as f64)),
+        ("resume_secs", Json::num(resume_secs)),
+        ("spill_bit_identical", Json::Bool(spill_identical)),
+        ("resume_bit_identical", Json::Bool(resume_identical)),
+    ]);
+    bench::write_json("BENCH_spill.json", &record)?;
+    anyhow::ensure!(
+        spill_identical,
+        "spilled sweep diverges from in-memory (recorded in BENCH_spill.json)"
+    );
+    anyhow::ensure!(
+        resume_identical,
+        "killed-and-resumed sweep diverges from in-memory \
+         (killed at record {kill_at}, recorded in BENCH_spill.json)"
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "§Perf spill — out-of-core sweep store, {} configs, cap {} KiB, \
+             model={model} (recorded in BENCH_spill.json)",
+            configs.len(),
+            cap_bytes >> 10
+        ),
+        &["path", "secs", "working set", "bit-identical"],
+    );
+    t.row(vec![
+        "in-memory (reference)".into(),
+        f(inmem_secs, 3),
+        format!("{} KiB", fp.unique_base_bytes >> 10),
+        "—".into(),
+    ]);
+    t.row(vec![
+        "spilled (1 MiB cap)".into(),
+        f(spilled_secs, 3),
+        format!("{} KiB peak", stats.peak_resident_bytes >> 10),
+        "yes".into(),
+    ]);
+    t.row(vec![
+        format!("killed at record {kill_at}/{total_records}, resumed"),
+        f(resume_secs, 3),
+        String::new(),
         "yes".into(),
     ]);
     Ok(vec![t])

@@ -76,7 +76,7 @@ fn sweep_ppls(
     let metrics = Metrics::new();
     let outs = run_sweep_factored(&fx.params, &fx.cfg, &fx.calib, configs, &metrics);
     let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
-    Ok(fleet_perplexity(&models, &fx.cfg, &batches, b, fx.cfg.seq_len))
+    Ok(fleet_perplexity(&models, &fx.cfg, &batches, b, fx.cfg.seq_len)?)
 }
 
 fn mean_std(xs: &[f64]) -> (f64, f64) {

@@ -4,7 +4,7 @@
 //!   info                       — artifact/model inventory
 //!   ptq    [--model --method --scaling --quantizer --rank --seed]
 //!          [--workers N | --workers tcp:host:port,... | --listen host:port]
-//!          [--heartbeat-timeout S]
+//!          [--heartbeat-timeout S] [--spill DIR [--spill-cap-mb N]]
 //!                              — quantize a model, report per-layer stats + PPL
 //!                                (runs offline: rust-native factored eval;
 //!                                --workers N spawns local worker processes,
@@ -12,10 +12,14 @@
 //!                                workers, --listen waits for remote workers
 //!                                to dial in; --heartbeat-timeout tunes how
 //!                                long a silent worker may go before being
-//!                                declared wedged and its jobs requeued)
+//!                                declared wedged and its jobs requeued;
+//!                                --spill DIR streams sweep artifacts
+//!                                through a disk store bounded to
+//!                                --spill-cap-mb of memory, and resumes
+//!                                a killed run from DIR's manifest)
 //!   budget [--model --gigabytes G | --budget-bytes N]
 //!          [--bits 2,3,4] [--ranks 0,4,8,16,32] [--block 32] [--seed S]
-//!          [--plan-out FILE] [shard flags as in ptq]
+//!          [--plan-out FILE] [shard + spill flags as in ptq]
 //!                              — allocate a model-wide byte budget into
 //!                                per-layer (bits, rank, k), print/emit the
 //!                                plan (a wire-codec BUDGET_PLAN frame),
@@ -50,8 +54,9 @@
 use anyhow::Result;
 
 use srr::coordinator::{
-    fleet_perplexity_sharded, run_ptq_factored, BudgetSpec, Metrics, RunConfig, ShardOptions,
-    ShardSession, ShardedSweepRunner, SweepConfig, SweepRunner,
+    fleet_perplexity_sharded, outcome_content_hash, run_ptq_factored, run_sweep_spilled,
+    BudgetSpec, Metrics, RunConfig, ShardOptions, ShardSession, ShardedSweepRunner,
+    SpillOptions, SpillStore, SweepConfig, SweepRunner,
 };
 use srr::serve::daemon::{Daemon, DaemonConfig, FleetEngine, ServeClient};
 use srr::data::glue_sim::GlueTask;
@@ -82,6 +87,7 @@ fn main() {
                  \n  srr info\
                  \n  srr ptq --model small --method srr --scaling qera-exact --quantizer mxint3 --rank 8\
                  \n  srr ptq --model tiny --rank 8 --workers 2   # multi-process reconstruction + eval\
+                 \n  srr ptq --model tiny --rank 8 --spill /tmp/sweep   # out-of-core, kill-resumable\
                  \n  srr ptq --model tiny --rank 8 --listen 127.0.0.1:7777 --workers 2   # remote workers dial in\
                  \n  srr shard-worker --connect host:7777        # remote worker side\
                  \n  srr budget --model tiny --gigabytes 0.002 --bits 2,3,4 --ranks 0,4,8 --plan-out plan.srrw\
@@ -147,17 +153,33 @@ fn cmd_ptq(args: &Args) -> Result<()> {
     let fx = ctx.lm(&cfg.model)?;
     let metrics = Metrics::new();
     let mut session = session_from_args(args)?;
+    let spill = spill_store_from_args(args)?;
     let out = if let Some(session) = session.as_mut() {
         let sweep_cfg = SweepConfig::new(cfg.quantizer, cfg.method, cfg.rank, cfg.scaling)
             .seeded(cfg.seed);
         let runner = ShardedSweepRunner::new(&fx.params, &fx.cfg, &fx.calib, &metrics);
-        let mut outs = runner.run_factored(session, &[sweep_cfg])?;
+        let mut outs = if let Some(store) = spill.as_ref() {
+            runner.run_factored_spilled(session, &[sweep_cfg], store)?
+        } else {
+            runner.run_factored(session, &[sweep_cfg])?
+        };
         outs.pop().expect("one outcome for one config")
+    } else if let Some(store) = spill.as_ref() {
+        let sweep_cfg = SweepConfig::new(cfg.quantizer, cfg.method, cfg.rank, cfg.scaling)
+            .seeded(cfg.seed);
+        run_sweep_spilled(&fx.params, &fx.cfg, &fx.calib, &[sweep_cfg], &metrics, store)?
+            .pop()
+            .expect("one outcome for one config")
     } else {
         let mut qcfg = srr::qer::QerConfig::new(cfg.method, cfg.rank, cfg.scaling);
         qcfg.seed = cfg.seed;
         run_ptq_factored(&fx.params, &fx.cfg, &fx.calib, cfg.quantizer, &qcfg, &metrics)
     };
+    if spill.is_some() {
+        // stable across in-process / sharded / killed-and-resumed runs;
+        // the kill-and-resume harness compares these lines bit-exactly
+        println!("spill outcome hash = {:032x}", outcome_content_hash(&out));
+    }
     println!("\nper-layer:");
     for r in &out.reports {
         println!(
@@ -212,6 +234,22 @@ fn cmd_ptq(args: &Args) -> Result<()> {
 /// worker size its own pool (SRR_THREADS / available cores); the
 /// single-threaded pinning is only for the scaling bench.
 ///
+/// `--spill DIR` (with `--spill-cap-mb N`, default 256): stream sweep
+/// artifacts through a disk-backed store rooted at DIR instead of
+/// holding the whole grid in memory, keeping at most N MiB of reloaded
+/// blobs resident. DIR doubles as a crash-resume manifest: re-running
+/// the same sweep with the same `--spill DIR` skips every chunk that
+/// already completed. Returns None when no spilling was requested.
+fn spill_store_from_args(args: &Args) -> Result<Option<SpillStore>> {
+    let Some(dir) = args.get("spill") else {
+        return Ok(None);
+    };
+    let cap_mb = args.get_usize("spill-cap-mb", 256);
+    anyhow::ensure!(cap_mb > 0, "--spill-cap-mb must be > 0");
+    let opts = SpillOptions { cap_bytes: cap_mb << 20, ..Default::default() };
+    Ok(Some(SpillStore::open(dir, opts)?))
+}
+
 /// Returns None when no sharding was requested.
 fn session_from_args(args: &Args) -> Result<Option<ShardSession>> {
     let heartbeat_timeout = match args.get("heartbeat-timeout") {
@@ -370,16 +408,33 @@ fn cmd_budget(args: &Args) -> Result<()> {
         println!("plan frame written to {path}");
     }
 
-    // run the allocated PTQ and score it
+    // run the allocated PTQ and score it; planning stays in-memory (it
+    // only holds phase-A profiles), the allocated sweep itself streams
+    // through --spill when given
     let configs = [plan.sweep_config()];
+    let spill = spill_store_from_args(args)?;
     let out = if let Some(session) = session.as_mut() {
-        sharded
-            .run_factored(session, &configs)?
+        if let Some(store) = spill.as_ref() {
+            sharded
+                .run_factored_spilled(session, &configs, store)?
+                .pop()
+                .expect("one outcome for one config")
+        } else {
+            sharded
+                .run_factored(session, &configs)?
+                .pop()
+                .expect("one outcome for one config")
+        }
+    } else if let Some(store) = spill.as_ref() {
+        run_sweep_spilled(&fx.params, &fx.cfg, &fx.calib, &configs, &metrics, store)?
             .pop()
             .expect("one outcome for one config")
     } else {
         runner.run_factored(&configs).pop().expect("one outcome for one config")
     };
+    if spill.is_some() {
+        println!("spill outcome hash = {:032x}", outcome_content_hash(&out));
+    }
     let b = ctx.engine.manifest().lm_batch;
     let t = fx.cfg.seq_len;
     let batches = ctx.ppl_batches(&model)?;

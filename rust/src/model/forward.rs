@@ -18,6 +18,7 @@
 use std::collections::BTreeMap;
 
 use crate::runtime::manifest::ModelCfg;
+use crate::serve::ServeError;
 use crate::tensor::{matmul, Mat};
 
 use super::params::Params;
@@ -255,8 +256,10 @@ pub fn lm_nll(
 pub trait FleetWeights {
     /// Number of models evaluated in lock-step.
     fn group_size(&self) -> usize;
-    /// y = x·W_g per member block of the stacked `x`.
-    fn linear_stacked(&self, name: &str, x: &Mat) -> Mat;
+    /// y = x·W_g per member block of the stacked `x`. A malformed group
+    /// (member missing the op, ragged stack) is a recoverable
+    /// [`ServeError`] — it fails the job, never the process.
+    fn linear_stacked(&self, name: &str, x: &Mat) -> Result<Mat, ServeError>;
     /// A 1-D parameter (rmsnorm weights), shared across members.
     fn vec(&self, name: &str) -> &[f32];
     /// A dense 2-D parameter (embedding table / head), shared across
@@ -272,7 +275,8 @@ pub trait FleetWeights {
 /// whenever both runs take the batched base-matmul path (`b·t > 1`):
 /// every stage — rmsnorm, attention, swiglu, the head — is row- or
 /// sequence-local, and the grouped linear preserves per-row summation
-/// order. Returns stacked logits (`group·b·t`, head_dim).
+/// order. Returns stacked logits (`group·b·t`, head_dim), or the first
+/// member's [`ServeError`] if the fleet is malformed.
 pub fn forward_fleet(
     weights: &dyn FleetWeights,
     cfg: &ModelCfg,
@@ -280,7 +284,7 @@ pub fn forward_fleet(
     b: usize,
     t: usize,
     causal: bool,
-) -> Mat {
+) -> Result<Mat, ServeError> {
     assert_eq!(tokens.len(), b * t);
     let g = weights.group_size();
     let embed = weights.mat("embed");
@@ -306,7 +310,8 @@ pub fn forward_fleet(
 /// looked up from its member's own token instead of replicated); the
 /// post-embedding trunk is literally shared code, so the per-member
 /// bit-identity argument of [`forward_fleet`] carries over unchanged.
-/// Returns stacked logits (`group·b·t`, head_dim).
+/// Returns stacked logits (`group·b·t`, head_dim), or the first
+/// member's [`ServeError`] if the fleet is malformed.
 pub fn forward_fleet_distinct(
     weights: &dyn FleetWeights,
     cfg: &ModelCfg,
@@ -314,7 +319,7 @@ pub fn forward_fleet_distinct(
     b: usize,
     t: usize,
     causal: bool,
-) -> Mat {
+) -> Result<Mat, ServeError> {
     let g = weights.group_size();
     assert_eq!(tokens.len(), g * b * t, "stacked token count");
     let embed = weights.mat("embed");
@@ -337,30 +342,30 @@ fn fleet_trunk(
     gb: usize,
     t: usize,
     causal: bool,
-) -> Mat {
+) -> Result<Mat, ServeError> {
     for layer in 0..cfg.n_layers {
         let name = |k: &str| format!("l{layer}.{k}");
         let h = rmsnorm(&x, weights.vec(&name("ln1")));
-        let q = weights.linear_stacked(&name("wq"), &h);
-        let k = weights.linear_stacked(&name("wk"), &h);
-        let v = weights.linear_stacked(&name("wv"), &h);
+        let q = weights.linear_stacked(&name("wq"), &h)?;
+        let k = weights.linear_stacked(&name("wk"), &h)?;
+        let v = weights.linear_stacked(&name("wv"), &h)?;
         let a = attention(&q, &k, &v, cfg, gb, t, causal);
-        let o = weights.linear_stacked(&name("wo"), &a);
+        let o = weights.linear_stacked(&name("wo"), &a)?;
         x = x.add(&o);
 
         let h2 = rmsnorm(&x, weights.vec(&name("ln2")));
-        let gate = weights.linear_stacked(&name("gate"), &h2);
-        let u = weights.linear_stacked(&name("up"), &h2);
+        let gate = weights.linear_stacked(&name("gate"), &h2)?;
+        let u = weights.linear_stacked(&name("up"), &h2)?;
         let mut m = Mat::zeros(gate.rows, gate.cols);
         for i in 0..gate.data.len() {
             m.data[i] = silu(gate.data[i]) * u.data[i];
         }
-        let dn = weights.linear_stacked(&name("down"), &m);
+        let dn = weights.linear_stacked(&name("down"), &m)?;
         x = x.add(&dn);
     }
 
     let xf = rmsnorm(&x, weights.vec("norm_f"));
-    matmul(&xf, &weights.mat("head"))
+    Ok(matmul(&xf, &weights.mat("head")))
 }
 
 /// Masked NLL of one predicted position: `-log softmax(row)[target]`
@@ -391,13 +396,13 @@ pub fn lm_nll_fleet(
     mask: &[f32],
     b: usize,
     t: usize,
-) -> Vec<(f64, f64)> {
+) -> Result<Vec<(f64, f64)>, ServeError> {
     let g = weights.group_size();
     // logits over the first t-1 positions predict tokens 1..t
     let inputs: Vec<i32> = (0..b)
         .flat_map(|bi| tokens[bi * t..bi * t + t - 1].to_vec())
         .collect();
-    let logits = forward_fleet(weights, cfg, &inputs, b, t - 1, true);
+    let logits = forward_fleet(weights, cfg, &inputs, b, t - 1, true)?;
     let mut out = vec![(0.0f64, 0.0f64); g];
     for (gi, slot) in out.iter_mut().enumerate() {
         for bi in 0..b {
@@ -417,7 +422,7 @@ pub fn lm_nll_fleet(
             slot.1 += cnt;
         }
     }
-    out
+    Ok(out)
 }
 
 /// NLL over any [`ModelWeights`] — the rust-native factored PPL path.
@@ -543,10 +548,10 @@ mod tests {
         fn group_size(&self) -> usize {
             self.g
         }
-        fn linear_stacked(&self, name: &str, x: &Mat) -> Mat {
+        fn linear_stacked(&self, name: &str, x: &Mat) -> Result<Mat, ServeError> {
             // same weight for every member; matmul is row-local, so one
             // call over the stack serves all blocks
-            ModelWeights::linear(self.params, name, x)
+            Ok(ModelWeights::linear(self.params, name, x))
         }
         fn vec(&self, name: &str) -> &[f32] {
             ModelWeights::vec(self.params, name)
@@ -564,7 +569,7 @@ mod tests {
         let tk = toks(&c, 2, &mut rng);
         let single = forward(&p, &c, &tk, 2, c.seq_len, true, None);
         let fleet = DenseFleet { params: &p, g: 3 };
-        let stacked = forward_fleet(&fleet, &c, &tk, 2, c.seq_len, true);
+        let stacked = forward_fleet(&fleet, &c, &tk, 2, c.seq_len, true).expect("dense fleet");
         assert_eq!(stacked.rows, 3 * single.rows);
         for gi in 0..3 {
             for i in 0..single.rows {
@@ -578,7 +583,7 @@ mod tests {
 
         let mask = vec![1.0f32; 2 * c.seq_len];
         let (nll, cnt) = lm_nll(&p, &c, &tk, &mask, 2, c.seq_len);
-        let per_member = lm_nll_fleet(&fleet, &c, &tk, &mask, 2, c.seq_len);
+        let per_member = lm_nll_fleet(&fleet, &c, &tk, &mask, 2, c.seq_len).expect("dense fleet");
         let want = (nll.iter().sum::<f64>(), cnt.iter().sum::<f64>());
         for (gi, got) in per_member.iter().enumerate() {
             assert_eq!(got.0, want.0, "member {gi} nll");

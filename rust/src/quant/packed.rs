@@ -223,14 +223,27 @@ impl PackedCodes {
     /// Rebuild a buffer from its raw parts (the wire deserialization
     /// counterpart of [`PackedCodes::words`]). The caller must have
     /// validated the word count against `len`/`bits` — this asserts the
-    /// same invariant [`PackedCodes::zeroed`] establishes.
+    /// same invariants [`PackedCodes::zeroed`] establishes, including
+    /// zero trailing padding bits (set/get never touch them, so a
+    /// nonzero tail means the buffer was corrupted or hand-forged and
+    /// would silently break word-level equality and content hashing).
     pub fn from_raw(bits: u32, len: usize, words: Vec<u64>) -> Self {
         assert!((2..=32).contains(&bits), "code width {bits} out of range");
+        let total_bits = len * bits as usize;
         assert_eq!(
             words.len(),
-            (len * bits as usize).div_ceil(64),
+            total_bits.div_ceil(64),
             "word count mismatch for {len} codes of {bits} bits"
         );
+        let tail = total_bits % 64;
+        if tail != 0 {
+            let last = *words.last().expect("tail bits imply a last word");
+            assert_eq!(
+                last >> tail,
+                0,
+                "nonzero padding bits above bit {tail} of the last word"
+            );
+        }
         PackedCodes { bits, len, words }
     }
 }
@@ -745,6 +758,26 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn raw_parts_reject_code_width_out_of_range() {
         let _ = PackedCodes::from_raw(1, 64, vec![0; 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "nonzero padding bits")]
+    fn raw_parts_reject_nonzero_padding_bits() {
+        // 100 3-bit codes = 300 bits: bits 44..64 of word 4 are padding
+        // the pack path never writes, so a set bit there is corruption
+        let mut words = vec![0u64; 5];
+        words[4] = 1u64 << 63;
+        let _ = PackedCodes::from_raw(3, 100, words);
+    }
+
+    #[test]
+    fn raw_parts_accept_full_last_word_without_padding() {
+        // 32 2-bit codes fill exactly one word — all 64 bits are code
+        // payload, so a saturated word is legal (no padding to check)
+        let rebuilt = PackedCodes::from_raw(2, 32, vec![u64::MAX]);
+        for i in 0..32 {
+            assert_eq!(rebuilt.get(i), 3, "code {i}");
+        }
     }
 
     #[test]

@@ -63,20 +63,22 @@ impl FleetWeights for MixedFleet<'_> {
         self.members.len()
     }
 
-    fn linear_stacked(&self, name: &str, x: &Mat) -> Mat {
+    fn linear_stacked(&self, name: &str, x: &Mat) -> Result<Mat, ServeError> {
         if self.members[0].op(name).is_some() {
+            // engine construction validated op alignment, but a
+            // misaligned member still fails the step, not the daemon
             let ops: Vec<&LinearOp> = self
                 .members
                 .iter()
-                .map(|m| m.op(name).expect("engine-validated ops aligned"))
-                .collect();
-            // engine construction validated op alignment and the
-            // engine's own step built the stack, so a refusal here is
-            // an engine bug, not a recoverable request error
-            LinearOp::matmul_grouped(&ops, x).expect("engine stack is well-formed")
+                .map(|m| m.op(name).ok_or_else(|| ServeError::UnknownTensor(name.to_string())))
+                .collect::<Result<_, _>>()?;
+            LinearOp::matmul_grouped(&ops, x)
         } else {
-            let w = self.members[0].skeleton.get_mat(name).expect("mat param");
-            matmul(x, &w)
+            let w = self.members[0]
+                .skeleton
+                .get_mat(name)
+                .ok_or_else(|| ServeError::UnknownTensor(name.to_string()))?;
+            Ok(matmul(x, &w))
         }
     }
 
@@ -162,7 +164,7 @@ impl FleetEngine {
             stacked.extend_from_slice(&r.produced);
         }
         let fleet = MixedFleet { members };
-        let logits = forward_fleet_distinct(&fleet, &self.cfg, &stacked, 1, t, true);
+        let logits = forward_fleet_distinct(&fleet, &self.cfg, &stacked, 1, t, true)?;
 
         let mut out = Vec::with_capacity(g);
         for (gi, r) in batch.iter_mut().enumerate() {

@@ -121,7 +121,8 @@ fn sharded_sweep_and_fleet_bit_identical_n_1_2_4() {
     let metrics = Metrics::new();
     let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
     let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
-    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let exp_ppl =
+        fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len).expect("fleet");
 
     for n in [1usize, 2, 4] {
         let mut session = ShardSession::spawn(&shard_opts(n)).expect("spawn workers");
@@ -178,7 +179,8 @@ fn worker_death_requeues_bit_identically() {
     // the surviving worker also carries the fleet batch afterwards
     let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
     let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
-    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let exp_ppl =
+        fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len).expect("fleet");
     let ppl = fleet_perplexity_sharded(
         &mut session,
         &models,
@@ -243,7 +245,8 @@ fn tcp_loopback_sharded_bit_identical_n_1_2_4() {
     let metrics = Metrics::new();
     let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
     let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
-    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let exp_ppl =
+        fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len).expect("fleet");
 
     for n in [1usize, 2, 4] {
         let mut session = ShardSession::spawn_tcp(&shard_opts(n)).expect("spawn TCP workers");
@@ -306,7 +309,8 @@ fn tcp_worker_killed_mid_job_requeues_bit_identically() {
     // the surviving TCP worker also carries the fleet batch afterwards
     let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
     let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
-    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let exp_ppl =
+        fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len).expect("fleet");
     let ppl = fleet_perplexity_sharded(
         &mut session,
         &models,
@@ -481,7 +485,8 @@ fn mid_run_connect_join_admits_worker_and_stays_bit_identical() {
     // the grown fleet (incumbent + joiner) carries the fleet batch
     let models: Vec<&FactoredModel> = outs.iter().map(|o| &o.model).collect();
     let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
-    let exp_ppl = fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len);
+    let exp_ppl =
+        fleet_perplexity(&exp_models, &cfg, &eval_batches, 2, cfg.seq_len).expect("fleet");
     let ppl = fleet_perplexity_sharded(
         &mut session,
         &models,

@@ -1,0 +1,339 @@
+//! Out-of-core sweep regression: `run_sweep_spilled` through a
+//! `SpillStore` must be bit-identical to the in-memory
+//! `SweepRunner::run_factored` — outcomes, `Arc` lock-step grouping,
+//! and fleet PPL — including after the run is killed mid-sweep (at a
+//! chunk boundary or mid-append with a torn manifest record) and
+//! resumed from the spill dir, in-process and across real process
+//! boundaries (`srr ptq --spill`).
+//!
+//! Runs offline (no PJRT, no artifacts). The CLI binary is
+//! `CARGO_BIN_EXE_srr`; the kill points are injected with
+//! `SRR_SPILL_KILL_AFTER` / `SRR_SPILL_KILL_TORN` (exit 17).
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use srr::coordinator::spill::KILL_EXIT_CODE;
+use srr::coordinator::{
+    outcome_content_hash, run_sweep_spilled, FactoredOutcome, LayerAssign, Metrics,
+    QuantizerSpec, ShardOptions, ShardSession, ShardedSweepRunner, SpillOptions, SpillStore,
+    SweepConfig, SweepRunner,
+};
+use srr::data::Corpus;
+use srr::eval::{fleet_perplexity, group_by_shared_bases};
+use srr::model::{collect_calibration, synth_lm_params, CalibrationSet, Params};
+use srr::qer::Method;
+use srr::runtime::manifest::ModelCfg;
+use srr::scaling::ScalingKind;
+use srr::serve::FactoredModel;
+use srr::util::prop;
+
+/// Self-cleaning unique temp dir (spill dirs must not leak between or
+/// after test runs).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "srr-spill-it-{tag}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).expect("create temp dir");
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn setup() -> (Params, ModelCfg, CalibrationSet, Vec<Vec<i32>>) {
+    let cfg = ModelCfg {
+        name: "t".into(),
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 128,
+        seq_len: 16,
+    };
+    let params = synth_lm_params(&cfg, 5, cfg.vocab);
+    let corpus = Corpus::generate(cfg.vocab, 4000, 6);
+    let batches: Vec<Vec<i32>> = (0..10).map(|i| corpus.train_batch(2, 16, i)).collect();
+    let calib = collect_calibration(&params, &cfg, &batches, 2, 16, 192);
+    let eval_batches: Vec<Vec<i32>> =
+        (0..3).map(|i| corpus.train_batch(2, cfg.seq_len, 40 + i)).collect();
+    (params, cfg, calib, eval_batches)
+}
+
+/// A generated grid: a shared-base lock-step pair (w-only + QER on one
+/// quantization), a generated (family, rank ∈ {0, 16, 64}, scaling)
+/// SRR cell, and a heterogeneous per-layer cell — the mixed-group shape
+/// the fleet evaluator has to keep grouping correctly after the disk
+/// round-trip.
+fn gen_grid(g: &mut prop::Gen, cfg: &ModelCfg) -> Vec<SweepConfig> {
+    let mx = QuantizerSpec::Mxint { bits: 3, block: 32 };
+    let families = [
+        QuantizerSpec::Mxint { bits: 4, block: 32 },
+        QuantizerSpec::Uniform { bits: 4, group: 32, symmetric: true },
+        QuantizerSpec::Gptq { bits: 3, group: 64 },
+    ];
+    let fam = g.choice(&families);
+    let rank = g.choice(&[0usize, 16, 64]);
+    let scaling =
+        g.choice(&[ScalingKind::Identity, ScalingKind::DiagRms, ScalingKind::DiagAbsMean]);
+    let seed = g.dim(3) as u64;
+    // heterogeneous cell: alternate quantizer and rank per linear
+    let hetero: Vec<LayerAssign> = (0..Params::linear_names(cfg).len())
+        .map(|li| LayerAssign {
+            quantizer: if li % 2 == 0 { fam } else { mx },
+            rank: if li % 2 == 0 { 4 } else { 8 },
+        })
+        .collect();
+    vec![
+        SweepConfig::new(mx, Method::WOnly, 0, ScalingKind::Identity).seeded(seed),
+        SweepConfig::new(mx, Method::Qer, 8, ScalingKind::DiagRms).seeded(seed),
+        SweepConfig::new(fam, Method::QerSrr, rank, scaling).seeded(seed),
+        SweepConfig::new(mx, Method::QerSrr, 8, ScalingKind::DiagRms).with_per_layer(hetero),
+    ]
+}
+
+fn assert_bit_identical(
+    tag: &str,
+    cfg: &ModelCfg,
+    eval_batches: &[Vec<i32>],
+    expect: &[FactoredOutcome],
+    got: &[FactoredOutcome],
+) {
+    assert_eq!(expect.len(), got.len(), "{tag}: outcome count");
+    for (ci, (a, b)) in expect.iter().zip(got).enumerate() {
+        assert_eq!(
+            outcome_content_hash(a),
+            outcome_content_hash(b),
+            "{tag} cfg {ci}: outcome content differs"
+        );
+    }
+    let exp_models: Vec<&FactoredModel> = expect.iter().map(|o| &o.model).collect();
+    let got_models: Vec<&FactoredModel> = got.iter().map(|o| &o.model).collect();
+    assert_eq!(
+        group_by_shared_bases(&exp_models),
+        group_by_shared_bases(&got_models),
+        "{tag}: lock-step grouping changed across the disk round-trip"
+    );
+    let exp_ppl = fleet_perplexity(&exp_models, cfg, eval_batches, 2, cfg.seq_len).expect("fleet");
+    let got_ppl = fleet_perplexity(&got_models, cfg, eval_batches, 2, cfg.seq_len).expect("fleet");
+    for (i, (a, b)) in exp_ppl.iter().zip(&got_ppl).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag} model {i}: ppl {a} vs {b}");
+    }
+}
+
+/// Property (replayable via `srr::util::prop::replay`): for generated
+/// grids across quantizer families, ranks {0, 16, 64}, and mixed
+/// lock-step groups, a spilled sweep under a tiny working-set cap —
+/// every blob evicted and reloaded — is bit-identical to the in-memory
+/// engine.
+#[test]
+fn spilled_sweep_bit_identical_to_in_memory() {
+    let (params, cfg, calib, eval_batches) = setup();
+    prop::check(0xD15C_0CAF, 3, |g| {
+        let configs = gen_grid(g, &cfg);
+        let metrics = Metrics::new();
+        let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+        let tmp = TempDir::new("prop");
+        // 64 KiB cap: far below one layer's artifacts, so phase B2 and
+        // assembly continuously evict and reload through the cache
+        let opts = SpillOptions { cap_bytes: 64 << 10, ..Default::default() };
+        let store = SpillStore::open(&tmp.0, opts).expect("open store");
+        let got = run_sweep_spilled(&params, &cfg, &calib, &configs, &metrics, &store)
+            .expect("spilled sweep");
+        let stats = store.stats();
+        assert!(stats.bytes_spilled > 0, "nothing was spilled");
+        assert!(stats.bytes_reloaded > 0, "nothing streamed back through the cache");
+        assert_bit_identical(
+            &format!("case {:#x}", g.case_seed),
+            &cfg,
+            &eval_batches,
+            &expect,
+            &got,
+        );
+    });
+}
+
+/// Property: killing the run after a seeded number of durable manifest
+/// appends — and, every other case, tearing the append itself mid-write
+/// — then resuming from the same dir yields bit-identical outcomes. The
+/// resumed run must also do strictly less work than a fresh one (the
+/// completed chunks replay from the manifest).
+#[test]
+fn spilled_sweep_resumes_bit_identically_after_kill() {
+    let (params, cfg, calib, eval_batches) = setup();
+    prop::check(0x5EED_DEAD, 3, |g| {
+        let configs = gen_grid(g, &cfg);
+        let metrics = Metrics::new();
+        let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+
+        // a full run writes 1 header + one prep per linear + the shared
+        // residual SVDs + one cell per (config, linear); kill anywhere
+        // from the header append onwards
+        let kill_at = g.dim(10); // dim is 1-based: 1 = the header append
+        let torn = g.dim(2) == 1;
+        let tmp = TempDir::new("resume");
+        let opts = SpillOptions {
+            cap_bytes: 64 << 10,
+            abort_after_records: if torn { None } else { Some(kill_at) },
+            torn_after_records: if torn { Some(kill_at) } else { None },
+        };
+        let store = SpillStore::open(&tmp.0, opts).expect("open store");
+        let first = run_sweep_spilled(&params, &cfg, &calib, &configs, &metrics, &store);
+        assert!(
+            first.is_err(),
+            "case {:#x}: the injected kill at record {kill_at} (torn: {torn}) must abort",
+            g.case_seed
+        );
+        drop(store);
+
+        let opts = SpillOptions { cap_bytes: 64 << 10, ..Default::default() };
+        let store = SpillStore::open(&tmp.0, opts).expect("reopen store");
+        let before = store.stats().records;
+        if !torn {
+            assert!(before >= kill_at, "durable records lost across the kill");
+        }
+        let got = run_sweep_spilled(&params, &cfg, &calib, &configs, &metrics, &store)
+            .expect("resumed sweep");
+        assert_bit_identical(
+            &format!("case {:#x} kill_at {kill_at} torn {torn}", g.case_seed),
+            &cfg,
+            &eval_batches,
+            &expect,
+            &got,
+        );
+    });
+}
+
+/// The shard host drives the same spill store: phase B2 runs on real
+/// spawned workers, cells spill as their results arrive over the wire,
+/// and a second (single-worker) pass over the completed store replays
+/// everything from the manifest — both bit-identical to the in-memory
+/// engine.
+#[test]
+fn sharded_spilled_sweep_bit_identical_and_replayable() {
+    let (params, cfg, calib, eval_batches) = setup();
+    let mut g = prop::Gen { rng: srr::util::Rng::new(7), case_seed: 7 };
+    let configs = gen_grid(&mut g, &cfg);
+    let metrics = Metrics::new();
+    let expect = SweepRunner::new(&params, &cfg, &calib, &metrics).run_factored(&configs);
+
+    let tmp = TempDir::new("sharded");
+    let opts = SpillOptions { cap_bytes: 64 << 10, ..Default::default() };
+    let store = SpillStore::open(&tmp.0, opts).expect("open store");
+    let shard_opts = ShardOptions {
+        workers: 2,
+        binary: Some(PathBuf::from(env!("CARGO_BIN_EXE_srr"))),
+        ..Default::default()
+    };
+    let mut session = ShardSession::spawn(&shard_opts).expect("spawn workers");
+    let runner = ShardedSweepRunner::new(&params, &cfg, &calib, &metrics);
+    let got = runner.run_factored_spilled(&mut session, &configs, &store).expect("sharded spilled");
+    session.shutdown();
+    assert_bit_identical("sharded", &cfg, &eval_batches, &expect, &got);
+
+    let shard_opts = ShardOptions {
+        workers: 1,
+        binary: Some(PathBuf::from(env!("CARGO_BIN_EXE_srr"))),
+        ..Default::default()
+    };
+    let mut session = ShardSession::spawn(&shard_opts).expect("spawn worker");
+    let replay =
+        runner.run_factored_spilled(&mut session, &configs, &store).expect("manifest replay");
+    session.shutdown();
+    assert_bit_identical("sharded replay", &cfg, &eval_batches, &expect, &replay);
+}
+
+fn srr_ptq(spill_dir: &std::path::Path, kill: Option<(&str, usize)>) -> std::process::Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_srr"));
+    cmd.args([
+        "ptq", "--model", "tiny", "--method", "qer", "--quantizer", "mxint3", "--rank", "4",
+        "--seed", "3", "--quick", "--spill",
+    ]);
+    cmd.arg(spill_dir);
+    cmd.env_remove("SRR_SPILL_KILL_AFTER").env_remove("SRR_SPILL_KILL_TORN");
+    if let Some((var, n)) = kill {
+        cmd.env(var, n.to_string());
+    }
+    cmd.output().expect("run srr ptq")
+}
+
+fn hash_line(out: &std::process::Output) -> String {
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    stdout
+        .lines()
+        .find(|l| l.starts_with("spill outcome hash = "))
+        .unwrap_or_else(|| panic!("no spill outcome hash in stdout:\n{stdout}"))
+        .to_string()
+}
+
+/// Tentpole acceptance, across real process boundaries: `srr ptq
+/// --spill DIR` killed mid-sweep — once at a chunk boundary, once
+/// mid-append (torn manifest record) — resumes from DIR and prints the
+/// same outcome hash as an uninterrupted run in a fresh dir.
+#[test]
+fn cli_kill_and_resume_bit_identical() {
+    let clean_dir = TempDir::new("cli-clean");
+    let clean = srr_ptq(&clean_dir.0, None);
+    assert!(clean.status.success(), "clean run failed: {clean:?}");
+    let want = hash_line(&clean);
+
+    let dir = TempDir::new("cli-killed");
+    // kill 1: process exits right after the 3rd fsynced append (a chunk
+    // boundary — the record is durable, the process is gone)
+    let killed = srr_ptq(&dir.0, Some(("SRR_SPILL_KILL_AFTER", 3)));
+    assert_eq!(
+        killed.status.code(),
+        Some(KILL_EXIT_CODE),
+        "expected the injected kill, got: {killed:?}"
+    );
+    // kill 2: the resumed process dies *mid-append*, leaving a torn
+    // trailing record for the next resume to truncate away
+    let torn = srr_ptq(&dir.0, Some(("SRR_SPILL_KILL_TORN", 2)));
+    assert_eq!(
+        torn.status.code(),
+        Some(KILL_EXIT_CODE),
+        "expected the injected torn-write kill, got: {torn:?}"
+    );
+    // final resume completes the sweep from what survived both kills
+    let resumed = srr_ptq(&dir.0, None);
+    assert!(resumed.status.success(), "resumed run failed: {resumed:?}");
+    assert_eq!(hash_line(&resumed), want, "resumed outcome diverged from the clean run");
+
+    // re-running a *completed* spill dir replays everything from the
+    // manifest and still reports the same outcome
+    let replayed = srr_ptq(&dir.0, None);
+    assert!(replayed.status.success(), "replay run failed: {replayed:?}");
+    assert_eq!(hash_line(&replayed), want, "replayed outcome diverged");
+}
+
+/// A spill dir pinned to one sweep rejects a different one instead of
+/// mixing artifacts: resuming with a different seed errors out.
+#[test]
+fn cli_rejects_mismatched_spill_dir() {
+    let dir = TempDir::new("cli-mismatch");
+    let first = srr_ptq(&dir.0, None);
+    assert!(first.status.success(), "first run failed: {first:?}");
+
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_srr"));
+    cmd.args([
+        "ptq", "--model", "tiny", "--method", "qer", "--quantizer", "mxint3", "--rank", "4",
+        "--seed", "99", "--quick", "--spill",
+    ]);
+    cmd.arg(&dir.0);
+    cmd.env_remove("SRR_SPILL_KILL_AFTER").env_remove("SRR_SPILL_KILL_TORN");
+    let out = cmd.output().expect("run srr ptq");
+    assert!(!out.status.success(), "a different sweep must not reuse the dir");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("different sweep"), "unexpected stderr:\n{stderr}");
+}
